@@ -1,0 +1,59 @@
+//! Projection timing comparison — a Fig.-1-style table at the terminal.
+//!
+//! ```bash
+//! cargo run --release --example projection_bench            # full sweep
+//! cargo run --release --example projection_bench -- --quick
+//! ```
+
+use anyhow::{anyhow, Result};
+use bilevel_sparse::bench::{fit_linear, fit_nlogn, time_fn, BenchConfig};
+use bilevel_sparse::cli::Args;
+use bilevel_sparse::projection::bilevel::bilevel_l1inf;
+use bilevel_sparse::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::tensor::Matrix;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(|e| anyhow!(e))?;
+    let quick = args.flag("quick") || args.subcommand == "--quick";
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let sizes: Vec<usize> = if quick {
+        vec![250, 500, 1000, 2000]
+    } else {
+        vec![500, 1000, 2000, 4000, 8000]
+    };
+
+    println!("projection timing, n = 1000 samples, eta = 1 (paper Fig. 1 setting)\n");
+    println!("{:>9} {:>14} {:>14} {:>14} {:>14} {:>8}",
+             "features", "bilevel", "ssn (Chu)", "newton (Chau)", "quattoni", "speedup");
+
+    let mut xs = Vec::new();
+    let mut t_bp = Vec::new();
+    let mut t_ssn = Vec::new();
+    for &m in &sizes {
+        let mut rng = Xoshiro256pp::seed_from_u64(m as u64);
+        let y = Matrix::<f64>::randn(1000, m, &mut rng);
+        let bp = time_fn(&cfg, || bilevel_l1inf(&y, 1.0)).median;
+        let ssn = time_fn(&cfg, || project_l1inf(&y, 1.0, L1InfAlgorithm::Ssn)).median;
+        let newton = time_fn(&cfg, || project_l1inf(&y, 1.0, L1InfAlgorithm::Newton)).median;
+        let quattoni = time_fn(&cfg, || project_l1inf(&y, 1.0, L1InfAlgorithm::Quattoni)).median;
+        println!(
+            "{m:>9} {:>11.3} ms {:>11.3} ms {:>11.3} ms {:>11.3} ms {:>7.1}x",
+            bp * 1e3,
+            ssn * 1e3,
+            newton * 1e3,
+            quattoni * 1e3,
+            ssn / bp
+        );
+        xs.push(m as f64);
+        t_bp.push(bp);
+        t_ssn.push(ssn);
+    }
+
+    let (_, _, r2_lin) = fit_linear(&xs, &t_bp);
+    let (_, _, r2_nlogn) = fit_nlogn(&xs, &t_ssn);
+    println!("\nbilevel ~ linear fit      R2 = {r2_lin:.5}");
+    println!("ssn     ~ n log n fit     R2 = {r2_nlogn:.5}");
+    println!("\n(the full sweep with CSV output: `bilevel experiment fig1`)");
+    Ok(())
+}

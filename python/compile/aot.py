@@ -1,0 +1,147 @@
+"""AOT pipeline: lower the Layer-2 JAX functions to HLO **text** artifacts.
+
+Run once by ``make artifacts``; Python never appears on the training path.
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` Rust crate) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Each preset emits:
+
+* ``{preset}_train_step.hlo.txt``  — one projected-Adam step;
+* ``{preset}_train_epoch.hlo.txt`` — a full epoch via ``lax.scan``;
+* ``{preset}_eval.hlo.txt``        — logits + reconstruction for a batch;
+* ``{preset}_project.hlo.txt``     — Pallas ``BP^{1,inf}`` on W1;
+
+plus a ``manifest.txt`` describing every artifact (shape metadata the Rust
+runtime parses — a deliberately trivial ``key=value`` format, no JSON
+dependency offline).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+@dataclass(frozen=True)
+class Preset:
+    name: str
+    features: int
+    hidden: int
+    classes: int
+    batch: int
+    epoch_batches: int  # NB for the lax.scan epoch artifact
+    eval_batch: int
+
+
+PRESETS = {
+    # Paper §V.B/C synthetic sets: n=1000 samples, m=1000 features.
+    "synth": Preset("synth", 1000, 100, 2, 64, 12, 256),
+    # HIF2-sim: 779 cells x 10,000 genes (paper §V.C.2).
+    "hif2": Preset("hif2", 10_000, 100, 2, 32, 19, 256),
+    # Tiny preset for integration tests (fast to compile & run).
+    "tiny": Preset("tiny", 64, 16, 2, 8, 4, 16),
+}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def specs_params(p: Preset):
+    shapes = model.SaeShapes(p.features, p.hidden, p.classes).param_shapes()
+    return [f32(*s) for s in shapes]
+
+
+def lower_artifacts(p: Preset, outdir: str, manifest: list[str]) -> None:
+    params = specs_params(p)
+    scalar = f32()
+    x = f32(p.batch, p.features)
+    y = f32(p.batch, p.classes)
+    xs = f32(p.epoch_batches, p.batch, p.features)
+    ys = f32(p.epoch_batches, p.batch, p.classes)
+    mask = f32(p.features)
+    xe = f32(p.eval_batch, p.features)
+    w1 = f32(p.features, p.hidden)
+
+    def emit(kind: str, fn, args):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{p.name}_{kind}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        manifest.append(
+            "\n".join(
+                [
+                    f"artifact={p.name}_{kind}",
+                    f"file={fname}",
+                    f"kind={kind}",
+                    f"preset={p.name}",
+                    f"features={p.features}",
+                    f"hidden={p.hidden}",
+                    f"classes={p.classes}",
+                    f"batch={p.batch}",
+                    f"epoch_batches={p.epoch_batches}",
+                    f"eval_batch={p.eval_batch}",
+                    "---",
+                ]
+            )
+        )
+        print(f"  wrote {fname} ({len(text)} chars)")
+
+    # 30 inputs: params(8) m(8) v(8) step x y mask lr alpha
+    emit(
+        "train_step",
+        model.flat_train_step,
+        [*params, *params, *params, scalar, x, y, mask, scalar, scalar],
+    )
+    emit(
+        "train_epoch",
+        model.flat_train_epoch,
+        [*params, *params, *params, scalar, xs, ys, mask, scalar, scalar],
+    )
+    emit("eval", model.flat_eval, [*params, xe])
+    emit("project", model.flat_project, [w1, scalar])
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--presets",
+        default="tiny,synth,hif2",
+        help="comma-separated preset names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest: list[str] = []
+    for name in args.presets.split(","):
+        p = PRESETS[name.strip()]
+        print(f"preset {p.name}: F={p.features} H={p.hidden} K={p.classes} B={p.batch}")
+        lower_artifacts(p, args.out, manifest)
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"manifest: {len(manifest)} entries -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

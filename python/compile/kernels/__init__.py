@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels + their pure-jnp oracle (`ref`)."""
+
+from . import bilevel, ref  # noqa: F401

@@ -1,0 +1,154 @@
+"""Layer-1 Pallas kernels for the bi-level ℓ1,∞ projection (paper Alg. 1).
+
+The projection is memory-bound and column/row-structured, so the TPU
+mapping (DESIGN.md §Hardware-Adaptation) is:
+
+* **pass 1** — grid over row tiles of ``W (F, H)``: each program reduces
+  its ``(TILE_F, H)`` block to per-row |·|max on the VPU, writing a
+  ``TILE_F`` slice of the norm vector ``v``. VMEM per program =
+  ``TILE_F*H*4`` bytes (128*128*4 = 64 KiB — comfortably inside the
+  ~16 MiB VMEM budget, leaving room for double buffering).
+* **inner** — the m-vector ℓ1 projection runs as plain jnp between the two
+  pallas calls (it is O(F) work on a tiny vector; on TPU it lives in one
+  core's VMEM).
+* **pass 2** — grid over the same row tiles: clip each row at its
+  threshold ``u_i`` (broadcast over the lane dimension).
+
+HBM traffic = 2 reads + 1 write of the matrix ⇒ the kernel is
+bandwidth-roofline-bound, which is exactly the O(nm) claim of the paper.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; numerics are validated against ``ref.py`` by pytest, and the
+lowered HLO is what ships to the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Row-tile size: multiple of the 8-sublane VPU tile; 128 matches the MXU
+# edge so the same tiling feeds the SAE matmuls.
+TILE_F = 128
+
+
+def _pad_rows(w: jnp.ndarray, tile: int) -> tuple[jnp.ndarray, int]:
+    """Pad rows up to a multiple of ``tile`` (zeros never win a |max|)."""
+    f = w.shape[0]
+    pad = (-f) % tile
+    if pad:
+        w = jnp.pad(w, ((0, pad), (0, 0)))
+    return w, f
+
+
+# ------------------------------------------------------- pass 1: row max
+
+def _rowmax_kernel(w_ref, out_ref):
+    """|·|max over the lane (hidden) dimension for one row tile."""
+    out_ref[...] = jnp.max(jnp.abs(w_ref[...]), axis=1)
+
+
+def row_abs_max(w: jnp.ndarray, *, tile: int = TILE_F) -> jnp.ndarray:
+    """Per-row infinity norms of ``w`` via a tiled Pallas reduction."""
+    wp, f = _pad_rows(w, tile)
+    grid = (wp.shape[0] // tile,)
+    out = pl.pallas_call(
+        _rowmax_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile, wp.shape[1]), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((wp.shape[0],), w.dtype),
+        interpret=True,
+    )(wp)
+    return out[:f]
+
+
+# ------------------------------------------------------- pass 2: clip
+
+def _clip_kernel(w_ref, u_ref, out_ref):
+    """Clip each row of the tile at its threshold (paper eq. 13)."""
+    w = w_ref[...]
+    u = u_ref[...]
+    out_ref[...] = jnp.sign(w) * jnp.minimum(jnp.abs(w), u[:, None])
+
+
+def clip_rows(w: jnp.ndarray, u: jnp.ndarray, *, tile: int = TILE_F) -> jnp.ndarray:
+    """``X_ij = sign(W_ij) * min(|W_ij|, u_i)`` via a tiled Pallas kernel."""
+    wp, f = _pad_rows(w, tile)
+    up = jnp.pad(u, (0, wp.shape[0] - u.shape[0]))
+    grid = (wp.shape[0] // tile,)
+    out = pl.pallas_call(
+        _clip_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, wp.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile, wp.shape[1]), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, w.dtype),
+        interpret=True,
+    )(wp, up)
+    return out[:f]
+
+
+# --------------------------------------------------- full bi-level kernel
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bilevel_l1inf_rows(w: jnp.ndarray, eta, *, tile: int = TILE_F) -> jnp.ndarray:
+    """Paper Algorithm 1 on row groups: Pallas pass 1 → jnp inner ℓ1 →
+    Pallas pass 2. Semantically identical to ``ref.bilevel_l1inf_rows``."""
+    v = row_abs_max(w, tile=tile)
+    u = ref.project_l1(v, eta)
+    return clip_rows(w, u, tile=tile)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bilevel_l1inf_rows_with_thresholds(
+    w: jnp.ndarray, eta, *, tile: int = TILE_F
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Projection plus the threshold vector ``u`` (the trainer derives the
+    feature mask from ``u == 0``)."""
+    v = row_abs_max(w, tile=tile)
+    u = ref.project_l1(v, eta)
+    return clip_rows(w, u, tile=tile), u
+
+
+def bilevel_l1inf_cols(y: jnp.ndarray, eta, *, tile: int = TILE_F) -> jnp.ndarray:
+    """Column-grouped variant (the paper's matrix convention)."""
+    return bilevel_l1inf_rows(y.T, eta, tile=tile).T
+
+
+# ------------------------------------------------ fused dense + SiLU
+
+def _dense_silu_kernel(x_ref, w_ref, b_ref, out_ref):
+    """One (batch-tile × out-tile) block of ``silu(x @ w + b)``.
+
+    MXU-shaped matmul with the activation fused into the same VMEM
+    round-trip — the SAE encoder/decoder hot block.
+    """
+    acc = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + b_ref[...][None, :]
+    out_ref[...] = acc * jax.nn.sigmoid(acc)
+
+
+def dense_silu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """``silu(x @ w + b)`` as a single-block Pallas call (shapes in this
+    repo are small enough for one block; grid-tiled for larger ones)."""
+    bsz, fin = x.shape
+    fout = w.shape[1]
+    return pl.pallas_call(
+        _dense_silu_kernel,
+        in_specs=[
+            pl.BlockSpec((bsz, fin), lambda: (0, 0)),
+            pl.BlockSpec((fin, fout), lambda: (0, 0)),
+            pl.BlockSpec((fout,), lambda: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bsz, fout), lambda: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, fout), jnp.float32),
+        interpret=True,
+    )(x, w, b)

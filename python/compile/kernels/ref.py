@@ -1,0 +1,144 @@
+"""Pure-jnp oracle implementations (Layer-1 correctness references).
+
+Every Pallas kernel in this package is validated against these functions by
+``python/tests/``. They mirror the Rust library exactly (same algorithms,
+same conventions) so the three layers can be cross-checked:
+
+* :func:`project_l1` — sort-based l1-ball projection (Held et al.), the
+  golden threshold rule;
+* :func:`bilevel_l1inf` / :func:`bilevel_l11` / :func:`bilevel_l12` — the
+  paper's Algorithms 1-3 over *column* groups;
+* :func:`bilevel_l1inf_rows` — the row-grouped variant used on SAE weights
+  ``W1`` of shape ``(features, hidden)`` where each **row** is a feature;
+* norms matching ``rust/src/norms``.
+
+All functions are jit-able, but they are *build/test-time only* — never on
+the request path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------- norms
+
+def l1inf_norm(y: jnp.ndarray) -> jnp.ndarray:
+    """``sum_j max_i |Y_ij|`` (paper eq. 1). Columns are axis-0 slices."""
+    return jnp.sum(jnp.max(jnp.abs(y), axis=0))
+
+
+def linf1_norm(y: jnp.ndarray) -> jnp.ndarray:
+    """``max_j sum_i |Y_ij|`` (paper eq. 4)."""
+    return jnp.max(jnp.sum(jnp.abs(y), axis=0))
+
+
+def l11_norm(y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.abs(y))
+
+
+def l12_norm(y: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(jnp.linalg.norm(y, axis=0))
+
+
+# ---------------------------------------------------- l1-ball projection
+
+def _simplex_threshold(a: jnp.ndarray, radius) -> jnp.ndarray:
+    """Waterline ``tau`` with ``sum(max(a - tau, 0)) == radius``.
+
+    ``a`` must be non-negative with ``sum(a) > radius`` (callers guard the
+    trivial cases). Sort-based, O(n log n): fine for an oracle.
+    """
+    s = jnp.sort(a)[::-1]
+    cum = jnp.cumsum(s)
+    ks = jnp.arange(1, a.shape[0] + 1, dtype=a.dtype)
+    taus = (cum - radius) / ks
+    # Largest k with tau_k < s_k (the active-set size).
+    k = jnp.maximum(jnp.sum(taus < s), 1)
+    tau = taus[k - 1]
+    return jnp.maximum(tau, jnp.zeros_like(tau))
+
+
+def project_l1(v: jnp.ndarray, radius) -> jnp.ndarray:
+    """Projection of a vector onto the l1 ball of the given radius."""
+    a = jnp.abs(v)
+    inside = jnp.sum(a) <= radius
+    tau = jnp.where(inside, 0.0, _simplex_threshold(a, radius))
+    return jnp.sign(v) * jnp.maximum(a - tau, 0.0)
+
+
+def project_linf(v: jnp.ndarray, radius) -> jnp.ndarray:
+    """Clip to the linf ball (paper eq. 13)."""
+    return jnp.sign(v) * jnp.minimum(jnp.abs(v), radius)
+
+
+def project_l2(v: jnp.ndarray, radius) -> jnp.ndarray:
+    """Radial rescale onto the l2 ball."""
+    n = jnp.linalg.norm(v)
+    scale = jnp.where(n > radius, radius / jnp.maximum(n, 1e-30), 1.0)
+    return v * scale
+
+
+# ------------------------------------------------- bi-level projections
+
+def bilevel_l1inf(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """Paper Algorithm 1 over columns of ``y`` (axis 0 = within-column)."""
+    v = jnp.max(jnp.abs(y), axis=0)           # column inf-norms
+    u = project_l1(v, eta)                    # inner l1 projection
+    return jnp.sign(y) * jnp.minimum(jnp.abs(y), u[None, :])
+
+
+def bilevel_l1inf_thresholds(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """The inner-stage thresholds ``u`` of Algorithm 1 (for mask building)."""
+    v = jnp.max(jnp.abs(y), axis=0)
+    return project_l1(v, eta)
+
+
+def bilevel_l11(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """Paper Algorithm 2: inner l1 on column l1-norms, outer per-column
+    soft-thresholding."""
+    v = jnp.sum(jnp.abs(y), axis=0)
+    u = project_l1(v, eta)
+
+    def col_project(col, r):
+        a = jnp.abs(col)
+        inside = jnp.sum(a) <= r
+        tau = jnp.where(
+            inside,
+            0.0,
+            _simplex_threshold(a, jnp.maximum(r, 1e-30)),
+        )
+        # r == 0 must zero the column: threshold at max|col|.
+        tau = jnp.where(r <= 0, jnp.max(a), tau)
+        return jnp.sign(col) * jnp.maximum(a - tau, 0.0)
+
+    return jax.vmap(col_project, in_axes=(1, 0), out_axes=1)(y, u)
+
+
+def bilevel_l12(y: jnp.ndarray, eta) -> jnp.ndarray:
+    """Paper Algorithm 3: inner l1 on column l2-norms, outer rescale."""
+    v = jnp.linalg.norm(y, axis=0)
+    u = project_l1(v, eta)
+    scale = jnp.where(v > u, u / jnp.maximum(v, 1e-30), 1.0)
+    return y * scale[None, :]
+
+
+# --------------------------------- row-grouped variant for SAE weights
+
+def bilevel_l1inf_rows(w: jnp.ndarray, eta) -> jnp.ndarray:
+    """``BP^{1,inf}`` with **rows** as groups.
+
+    The SAE's first-layer weight ``W1`` has shape ``(features, hidden)``;
+    feature *i* owns row *i*. Identical to ``bilevel_l1inf(w.T, eta).T``
+    but kept explicit because this is the exact orientation the Pallas
+    kernel and the Rust trainer use.
+    """
+    v = jnp.max(jnp.abs(w), axis=1)           # per-row inf-norms
+    u = project_l1(v, eta)
+    return jnp.sign(w) * jnp.minimum(jnp.abs(w), u[:, None])
+
+
+def bilevel_l1inf_rows_thresholds(w: jnp.ndarray, eta) -> jnp.ndarray:
+    v = jnp.max(jnp.abs(w), axis=1)
+    return project_l1(v, eta)

@@ -1,0 +1,204 @@
+"""Layer-2: the supervised autoencoder (SAE) of paper §V.C, in JAX.
+
+Architecture (paper: "fully connected neural network with only one hidden
+layer (dimension 100) and a latent layer of dimension k = number of
+classes", SiLU activations):
+
+    encoder:  x (B,F) --silu(W1,b1)--> h (B,H) --(W2,b2)--> z (B,K)
+    decoder:  z       --silu(W3,b3)--> h'(B,H) --(W4,b4)--> x̂ (B,F)
+
+Loss (paper eq. 28): ``phi = alpha * Huber(x, x̂) + CE(y, z)`` — the latent
+layer doubles as the classification logits.
+
+Optimizer: hand-rolled Adam (no optax in the build image). The feature mask
+of the double-descent scheme multiplies the rows of ``W1`` after each
+update, so masked features can never re-grow.
+
+Everything here is **build-time only**: ``aot.py`` lowers `train_step`,
+`train_epoch` (lax.scan over pre-batched data — one host round-trip per
+epoch instead of per step), `eval_batch` and `project_w1` to HLO text that
+the Rust runtime executes via PJRT.
+
+Parameter flattening order (the Rust coordinator indexes by this):
+    w1, b1, w2, b2, w3, b3, w4, b4
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bilevel as bk
+
+PARAM_NAMES = ("w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4")
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+HUBER_DELTA = 1.0
+
+
+class SaeShapes(NamedTuple):
+    """Static shape configuration of one SAE variant."""
+
+    features: int
+    hidden: int
+    classes: int
+
+    def param_shapes(self):
+        f, h, k = self.features, self.hidden, self.classes
+        return (
+            (f, h), (h,),   # w1, b1
+            (h, k), (k,),   # w2, b2
+            (k, h), (h,),   # w3, b3
+            (h, f), (f,),   # w4, b4
+        )
+
+
+# ------------------------------------------------------------- forward
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def forward(params, x):
+    """Returns (logits z, reconstruction x̂, hidden h)."""
+    w1, b1, w2, b2, w3, b3, w4, b4 = params
+    h = silu(x @ w1 + b1)
+    z = h @ w2 + b2
+    hd = silu(z @ w3 + b3)
+    xhat = hd @ w4 + b4
+    return z, xhat, h
+
+
+def huber(x, xhat, delta=HUBER_DELTA):
+    """Smooth-l1 (Huber) reconstruction loss, mean over all entries."""
+    d = xhat - x
+    a = jnp.abs(d)
+    quad = 0.5 * d * d
+    lin = delta * (a - 0.5 * delta)
+    return jnp.mean(jnp.where(a <= delta, quad, lin))
+
+
+def cross_entropy(y_onehot, logits):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def total_loss(params, x, y_onehot, alpha):
+    z, xhat, _ = forward(params, x)
+    return alpha * huber(x, xhat) + cross_entropy(y_onehot, z)
+
+
+def n_correct(logits, y_onehot):
+    return jnp.sum(
+        (jnp.argmax(logits, axis=-1) == jnp.argmax(y_onehot, axis=-1)).astype(jnp.float32)
+    )
+
+
+# ---------------------------------------------------------------- adam
+
+def adam_update(params, grads, m, v, step, lr):
+    """One Adam step; `step` is the 1-based iteration count (f32 scalar)."""
+    b1c = 1.0 - ADAM_B1 ** step
+    b2c = 1.0 - ADAM_B2 ** step
+    new_params, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        mhat = mi / b1c
+        vhat = vi / b2c
+        new_params.append(p - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS))
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_params), tuple(new_m), tuple(new_v)
+
+
+def apply_feature_mask(params, mask):
+    """Zero the rows of W1 belonging to masked-out features (mask in {0,1},
+    shape (F,)). Keeps masked features dead through training."""
+    params = list(params)
+    params[0] = params[0] * mask[:, None]
+    return tuple(params)
+
+
+# ---------------------------------------------------------- train steps
+
+def train_step(params, m, v, step, x, y_onehot, mask, lr, alpha):
+    """One projected/masked Adam step.
+
+    Returns (params', m', v', loss, n_correct). `step` is the iteration
+    count BEFORE this step (so bias correction uses step+1).
+    """
+    loss, grads = jax.value_and_grad(total_loss)(params, x, y_onehot, alpha)
+    params, m, v = adam_update(params, grads, m, v, step + 1.0, lr)
+    params = apply_feature_mask(params, mask)
+    z, _, _ = forward(params, x)
+    return params, m, v, loss, n_correct(z, y_onehot)
+
+
+def train_epoch(params, m, v, step, xs, ys, mask, lr, alpha):
+    """`lax.scan` over pre-batched data: xs (NB,B,F), ys (NB,B,K).
+
+    One PJRT dispatch per epoch — the L2 optimization recorded in
+    EXPERIMENTS.md §Perf. Returns (params', m', v', step', mean_loss,
+    total_correct).
+    """
+
+    def body(carry, batch):
+        params, m, v, step = carry
+        x, y = batch
+        params, m, v, loss, nc = train_step(params, m, v, step, x, y, mask, lr, alpha)
+        return (params, m, v, step + 1.0), (loss, nc)
+
+    (params, m, v, step), (losses, ncs) = jax.lax.scan(body, (params, m, v, step), (xs, ys))
+    return params, m, v, step, jnp.mean(losses), jnp.sum(ncs)
+
+
+def eval_batch(params, x):
+    """Inference: logits + reconstruction for one padded batch."""
+    z, xhat, _ = forward(params, x)
+    return z, xhat
+
+
+def project_w1(w1, eta):
+    """`BP^{1,inf}` on the first-layer weights (rows = features) through the
+    Pallas kernel; returns the projected matrix and the thresholds."""
+    return bk.bilevel_l1inf_rows_with_thresholds(w1, eta)
+
+
+# ------------------------------------------------------- flat wrappers
+# HLO interfaces take/return flat positional tensors in PARAM_NAMES order.
+
+def flat_train_step(*args):
+    """args = 8 params, 8 m, 8 v, step, x, y, mask, lr, alpha (30 tensors).
+    returns 8 params, 8 m, 8 v, loss, n_correct (26 tensors)."""
+    params = tuple(args[0:8])
+    m = tuple(args[8:16])
+    v = tuple(args[16:24])
+    step, x, y, mask, lr, alpha = args[24:]
+    params, m, v, loss, nc = train_step(params, m, v, step, x, y, mask, lr, alpha)
+    return (*params, *m, *v, loss, nc)
+
+
+def flat_train_epoch(*args):
+    """args = 8 params, 8 m, 8 v, step, xs, ys, mask, lr, alpha.
+    returns 8 params, 8 m, 8 v, step', mean_loss, total_correct."""
+    params = tuple(args[0:8])
+    m = tuple(args[8:16])
+    v = tuple(args[16:24])
+    step, xs, ys, mask, lr, alpha = args[24:]
+    params, m, v, step, loss, nc = train_epoch(params, m, v, step, xs, ys, mask, lr, alpha)
+    return (*params, *m, *v, step, loss, nc)
+
+
+def flat_eval(*args):
+    """args = 8 params, x. returns logits, xhat."""
+    params = tuple(args[0:8])
+    return eval_batch(params, args[8])
+
+
+def flat_project(w1, eta):
+    return project_w1(w1, eta)

@@ -1,0 +1,196 @@
+"""Pallas kernels vs the pure-jnp oracle — THE core L1 correctness signal.
+
+Hypothesis sweeps shapes, scales and radii; every case asserts
+``assert_allclose`` between the kernel path (`kernels.bilevel`) and the
+oracle (`kernels.ref`).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import bilevel as bk
+from compile.kernels import ref
+
+
+def randmat(rows, cols, seed, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (rows, cols), dtype=jnp.float32) * scale
+
+
+# ------------------------------------------------------------ row max
+
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_row_abs_max_matches_jnp(rows, cols, seed):
+    w = randmat(rows, cols, seed)
+    got = bk.row_abs_max(w)
+    want = jnp.max(jnp.abs(w), axis=1)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_row_abs_max_unpadded_tile_boundary():
+    # rows exactly at / just past the tile boundary
+    for rows in (127, 128, 129, 256):
+        w = randmat(rows, 16, rows)
+        got = bk.row_abs_max(w)
+        want = jnp.max(jnp.abs(w), axis=1)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# --------------------------------------------------------------- clip
+
+@given(
+    rows=st.integers(1, 300),
+    cols=st.integers(1, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_clip_rows_matches_formula(rows, cols, seed):
+    w = randmat(rows, cols, seed)
+    key = jax.random.PRNGKey(seed + 1)
+    u = jnp.abs(jax.random.normal(key, (rows,), dtype=jnp.float32))
+    got = bk.clip_rows(w, u)
+    want = jnp.sign(w) * jnp.minimum(jnp.abs(w), u[:, None])
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+# ------------------------------------------------- bilevel projection
+
+@given(
+    rows=st.integers(1, 200),
+    cols=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+    eta_frac=st.floats(0.01, 1.2),
+    scale=st.sampled_from([0.1, 1.0, 10.0, 100.0]),
+)
+@settings(max_examples=40, deadline=None)
+def test_bilevel_rows_kernel_vs_ref(rows, cols, seed, eta_frac, scale):
+    w = randmat(rows, cols, seed, scale)
+    norm = float(jnp.sum(jnp.max(jnp.abs(w), axis=1)))
+    eta = jnp.float32(max(eta_frac * norm, 1e-6))
+    got = bk.bilevel_l1inf_rows(w, eta)
+    want = ref.bilevel_l1inf_rows(w, eta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_bilevel_rows_feasibility_and_identity():
+    w = randmat(150, 32, 7, scale=5.0)
+    norm0 = float(jnp.sum(jnp.max(jnp.abs(w), axis=1)))
+    eta = jnp.float32(norm0 * 0.25)
+    x = bk.bilevel_l1inf_rows(w, eta)
+    norm1 = float(jnp.sum(jnp.max(jnp.abs(x), axis=1)))
+    assert norm1 <= float(eta) * (1 + 1e-5)
+    # identity (Prop. III.3), row-grouped form
+    resid = w - x
+    lhs = float(jnp.sum(jnp.max(jnp.abs(resid), axis=1))) + norm1
+    assert abs(lhs - norm0) < 1e-3 * norm0
+
+
+def test_bilevel_thresholds_bound_rows():
+    w = randmat(90, 20, 11)
+    eta = jnp.float32(2.0)
+    x, u = bk.bilevel_l1inf_rows_with_thresholds(w, eta)
+    v = jnp.max(jnp.abs(w), axis=1)
+    assert np.all(np.asarray(u) >= -1e-7)
+    assert np.all(np.asarray(u) <= np.asarray(v) + 1e-6)
+    assert abs(float(jnp.sum(u)) - 2.0) < 1e-4  # tight when outside the ball
+
+
+def test_bilevel_cols_equals_rows_of_transpose():
+    y = randmat(64, 48, 13)
+    eta = jnp.float32(3.0)
+    a = bk.bilevel_l1inf_cols(y, eta)
+    b = bk.bilevel_l1inf_rows(y.T, eta).T
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_zero_eta_zeroes_matrix():
+    w = randmat(40, 10, 17)
+    x = bk.bilevel_l1inf_rows(w, jnp.float32(0.0))
+    assert float(jnp.max(jnp.abs(x))) == 0.0
+
+
+def test_inside_ball_is_identity():
+    w = randmat(40, 10, 19) * 0.01
+    norm = float(jnp.sum(jnp.max(jnp.abs(w), axis=1)))
+    x = bk.bilevel_l1inf_rows(w, jnp.float32(norm * 2))
+    assert_allclose(np.asarray(x), np.asarray(w), rtol=1e-6)
+
+
+# --------------------------------------------------- dense-silu kernel
+
+@given(
+    b=st.integers(1, 32),
+    fin=st.integers(1, 64),
+    fout=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_dense_silu_matches_jnp(b, fin, fout, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = jax.random.normal(k1, (b, fin), dtype=jnp.float32)
+    w = jax.random.normal(k2, (fin, fout), dtype=jnp.float32) * 0.1
+    bias = jax.random.normal(k3, (fout,), dtype=jnp.float32)
+    got = bk.dense_silu(x, w, bias)
+    pre = x @ w + bias
+    want = pre * jax.nn.sigmoid(pre)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------ oracle self-checks
+
+@given(
+    n=st.integers(1, 400),
+    seed=st.integers(0, 2**31 - 1),
+    frac=st.floats(0.01, 0.95),
+)
+@settings(max_examples=30, deadline=None)
+def test_ref_project_l1_radius(n, seed, frac):
+    key = jax.random.PRNGKey(seed)
+    v = jax.random.normal(key, (n,), dtype=jnp.float32) * 3.0
+    norm = float(jnp.sum(jnp.abs(v)))
+    eta = jnp.float32(max(frac * norm, 1e-6))
+    x = ref.project_l1(v, eta)
+    got = float(jnp.sum(jnp.abs(x)))
+    assert got <= float(eta) * (1 + 1e-4) + 1e-5
+    if norm > float(eta):
+        assert abs(got - float(eta)) < 1e-3 * (1 + float(eta))
+
+
+def test_ref_identities_all_variants():
+    y = randmat(60, 25, 23, scale=2.0)
+    for proj, norm_fn in [
+        (ref.bilevel_l1inf, ref.l1inf_norm),
+        (ref.bilevel_l11, ref.l11_norm),
+        (ref.bilevel_l12, ref.l12_norm),
+    ]:
+        total = float(norm_fn(y))
+        eta = jnp.float32(total * 0.3)
+        x = proj(y, eta)
+        lhs = float(norm_fn(y - x)) + float(norm_fn(x))
+        assert abs(lhs - total) < 1e-3 * total, proj.__name__
+
+
+def test_ref_l1_matches_rust_convention():
+    # Fixed case cross-checked with the Rust sort-based implementation:
+    # a = [3, 1], radius 2 -> tau = 1 -> x = [2, 0].
+    x = ref.project_l1(jnp.array([3.0, 1.0], dtype=jnp.float32), jnp.float32(2.0))
+    assert_allclose(np.asarray(x), np.array([2.0, 0.0], dtype=np.float32), atol=1e-6)
+
+
+@pytest.mark.parametrize("rows,cols", [(1, 1), (1, 17), (129, 1)])
+def test_degenerate_shapes(rows, cols):
+    w = randmat(rows, cols, 29)
+    eta = jnp.float32(0.5)
+    got = bk.bilevel_l1inf_rows(w, eta)
+    want = ref.bilevel_l1inf_rows(w, eta)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)

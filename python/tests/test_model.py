@@ -1,0 +1,169 @@
+"""Layer-2 model tests: shapes, loss decrease, Adam, masking, epoch scan."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+
+
+F, H, K, B = 40, 12, 2, 16
+
+
+def init_params(seed=0, f=F, h=H, k=K):
+    key = jax.random.PRNGKey(seed)
+    shapes = model.SaeShapes(f, h, k).param_shapes()
+    params = []
+    for i, s in enumerate(shapes):
+        key, sub = jax.random.split(key)
+        scale = 0.1 if len(s) == 2 else 0.0
+        params.append(jax.random.normal(sub, s, dtype=jnp.float32) * scale)
+    return tuple(params)
+
+
+def batch(seed=1, b=B, f=F, k=K):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, (b, f), dtype=jnp.float32)
+    labels = jax.random.randint(k2, (b,), 0, k)
+    y = jax.nn.one_hot(labels, k, dtype=jnp.float32)
+    return x, y
+
+
+def zeros_like_params(params):
+    return tuple(jnp.zeros_like(p) for p in params)
+
+
+def test_forward_shapes():
+    params = init_params()
+    x, _ = batch()
+    z, xhat, h = model.forward(params, x)
+    assert z.shape == (B, K)
+    assert xhat.shape == (B, F)
+    assert h.shape == (B, H)
+
+
+def test_loss_is_finite_and_positive():
+    params = init_params()
+    x, y = batch()
+    loss = model.total_loss(params, x, y, 1.0)
+    assert np.isfinite(float(loss))
+    assert float(loss) > 0
+
+
+def test_train_step_decreases_loss():
+    params = init_params()
+    m = zeros_like_params(params)
+    v = zeros_like_params(params)
+    x, y = batch()
+    mask = jnp.ones((F,), dtype=jnp.float32)
+    loss0 = float(model.total_loss(params, x, y, 1.0))
+    step = jnp.float32(0.0)
+    for _ in range(30):
+        params, m, v, loss, nc = model.train_step(
+            params, m, v, step, x, y, mask, jnp.float32(1e-2), jnp.float32(1.0)
+        )
+        step = step + 1.0
+    loss1 = float(model.total_loss(params, x, y, 1.0))
+    assert loss1 < loss0 * 0.9, f"loss did not decrease: {loss0} -> {loss1}"
+
+
+def test_mask_zeroes_and_keeps_w1_rows():
+    params = init_params()
+    m = zeros_like_params(params)
+    v = zeros_like_params(params)
+    x, y = batch()
+    mask = jnp.ones((F,), dtype=jnp.float32).at[:10].set(0.0)
+    step = jnp.float32(0.0)
+    for _ in range(5):
+        params, m, v, loss, nc = model.train_step(
+            params, m, v, step, x, y, mask, jnp.float32(1e-2), jnp.float32(1.0)
+        )
+        step = step + 1.0
+    w1 = np.asarray(params[0])
+    assert np.all(w1[:10] == 0.0), "masked rows must stay zero"
+    assert np.any(w1[10:] != 0.0)
+
+
+def test_train_epoch_equals_sequential_steps():
+    params = init_params()
+    m = zeros_like_params(params)
+    v = zeros_like_params(params)
+    nb = 3
+    xs = jnp.stack([batch(seed=10 + i)[0] for i in range(nb)])
+    ys = jnp.stack([batch(seed=10 + i)[1] for i in range(nb)])
+    mask = jnp.ones((F,), dtype=jnp.float32)
+    lr, alpha = jnp.float32(1e-2), jnp.float32(0.7)
+
+    # epoch path
+    pe, me, ve, step_e, loss_e, nc_e = model.train_epoch(
+        params, m, v, jnp.float32(0.0), xs, ys, mask, lr, alpha
+    )
+    # sequential path
+    ps, ms, vs = params, m, v
+    step = jnp.float32(0.0)
+    losses, ncs = [], []
+    for i in range(nb):
+        ps, ms, vs, loss, nc = model.train_step(ps, ms, vs, step, xs[i], ys[i], mask, lr, alpha)
+        step = step + 1.0
+        losses.append(float(loss))
+        ncs.append(float(nc))
+    for a, b in zip(pe, ps):
+        assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-6)
+    assert abs(float(loss_e) - np.mean(losses)) < 1e-4
+    assert abs(float(nc_e) - np.sum(ncs)) < 1e-3
+    assert float(step_e) == nb
+
+
+def test_adam_bias_correction_first_step():
+    # After one step from zero moments, update direction = -lr * sign-ish(g).
+    params = (jnp.array([1.0], dtype=jnp.float32),)
+    grads = (jnp.array([2.0], dtype=jnp.float32),)
+    m = (jnp.zeros(1, dtype=jnp.float32),)
+    v = (jnp.zeros(1, dtype=jnp.float32),)
+    new_p, _, _ = model.adam_update(params, grads, m, v, jnp.float32(1.0), jnp.float32(0.1))
+    # mhat = g, vhat = g^2 -> update = lr * g/|g| = 0.1
+    assert_allclose(np.asarray(new_p[0]), np.array([0.9], dtype=np.float32), rtol=1e-4)
+
+
+def test_project_w1_through_pallas():
+    from compile.kernels import ref
+
+    w1 = init_params()[0] * 10.0
+    eta = jnp.float32(1.5)
+    x, u = model.project_w1(w1, eta)
+    want = ref.bilevel_l1inf_rows(w1, eta)
+    assert_allclose(np.asarray(x), np.asarray(want), rtol=1e-5, atol=1e-6)
+    assert abs(float(jnp.sum(u)) - 1.5) < 1e-4
+
+
+def test_flat_wrappers_roundtrip():
+    params = init_params()
+    m = zeros_like_params(params)
+    v = zeros_like_params(params)
+    x, y = batch()
+    mask = jnp.ones((F,), dtype=jnp.float32)
+    out = model.flat_train_step(
+        *params, *m, *v, jnp.float32(0.0), x, y, mask, jnp.float32(1e-3), jnp.float32(1.0)
+    )
+    assert len(out) == 26
+    z, xhat = model.flat_eval(*params, x)
+    assert z.shape == (B, K) and xhat.shape == (B, F)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[2.0, -1.0], [0.5, 0.5]], dtype=jnp.float32)
+    y = jnp.array([[1.0, 0.0], [0.0, 1.0]], dtype=jnp.float32)
+    got = float(model.cross_entropy(y, logits))
+    p = jax.nn.softmax(logits)
+    want = float(-jnp.mean(jnp.log(jnp.array([p[0, 0], p[1, 1]]))))
+    assert abs(got - want) < 1e-6
+
+
+def test_huber_quadratic_and_linear_regions():
+    x = jnp.zeros((1, 2), dtype=jnp.float32)
+    xhat = jnp.array([[0.5, 3.0]], dtype=jnp.float32)
+    got = float(model.huber(x, xhat))
+    want = (0.5 * 0.25 + (3.0 - 0.5)) / 2.0
+    assert abs(got - want) < 1e-6

@@ -1,0 +1,51 @@
+//! `cargo bench --bench fig1_time` — paper Fig. 1: bi-level ℓ1,∞ vs the
+//! Chu et al. semismooth-Newton exact projection, time vs features and vs
+//! samples (η = 1). Prints per-size medians and the growth-rate fits.
+//!
+//! Set `BILEVEL_BENCH_QUICK=1` for a shortened sweep.
+
+use bilevel_sparse::bench::{fit_linear, fit_nlogn, time_fn, BenchConfig};
+use bilevel_sparse::projection::bilevel::bilevel_l1inf;
+use bilevel_sparse::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::tensor::Matrix;
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let sizes: Vec<usize> = if quick {
+        vec![500, 1000, 2000]
+    } else {
+        vec![500, 1000, 2000, 4000, 8000, 16000]
+    };
+
+    for axis in ["features", "samples"] {
+        println!("\n== fig1: time vs {axis} (eta = 1) ==");
+        let mut xs = Vec::new();
+        let mut t_bp = Vec::new();
+        let mut t_ssn = Vec::new();
+        for &size in &sizes {
+            let mut rng = Xoshiro256pp::seed_from_u64(size as u64);
+            let y = match axis {
+                "features" => Matrix::<f64>::randn(1000, size, &mut rng),
+                _ => Matrix::<f64>::randn(size, 1000, &mut rng),
+            };
+            let bp = time_fn(&cfg, || bilevel_l1inf(&y, 1.0));
+            let ssn = time_fn(&cfg, || project_l1inf(&y, 1.0, L1InfAlgorithm::Ssn));
+            println!(
+                "fig1/{axis}/{size:<6} bilevel: {:>9.3} ms ± {:>7.3}   ssn: {:>9.3} ms ± {:>7.3}   ({:.1}x)",
+                bp.median * 1e3,
+                bp.std * 1e3,
+                ssn.median * 1e3,
+                ssn.std * 1e3,
+                ssn.median / bp.median
+            );
+            xs.push(size as f64);
+            t_bp.push(bp.median);
+            t_ssn.push(ssn.median);
+        }
+        let (a_l, _, r2_l) = fit_linear(&xs, &t_bp);
+        let (a_n, _, r2_n) = fit_nlogn(&xs, &t_ssn);
+        println!("fit: bilevel linear slope {a_l:.3e} (R2 {r2_l:.5}); ssn nlogn slope {a_n:.3e} (R2 {r2_n:.5})");
+    }
+}

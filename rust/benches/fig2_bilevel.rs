@@ -1,0 +1,49 @@
+//! `cargo bench --bench fig2_bilevel` — paper Fig. 2: the three bi-level
+//! variants (ℓ1,∞ / ℓ1,1 / ℓ1,2) share the same linear growth.
+
+use bilevel_sparse::bench::{fit_linear, time_fn, BenchConfig};
+use bilevel_sparse::projection::bilevel::{bilevel_l11, bilevel_l12, bilevel_l1inf};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::tensor::Matrix;
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let sizes: Vec<usize> = if quick {
+        vec![500, 1000, 2000]
+    } else {
+        vec![500, 1000, 2000, 4000, 8000, 16000]
+    };
+
+    for axis in ["features", "samples"] {
+        println!("\n== fig2: bilevel variants, time vs {axis} (eta = 1) ==");
+        let mut xs = Vec::new();
+        let mut series: [Vec<f64>; 3] = [vec![], vec![], vec![]];
+        for &size in &sizes {
+            let mut rng = Xoshiro256pp::seed_from_u64(size as u64 ^ 2);
+            let y = match axis {
+                "features" => Matrix::<f64>::randn(1000, size, &mut rng),
+                _ => Matrix::<f64>::randn(size, 1000, &mut rng),
+            };
+            let t = [
+                time_fn(&cfg, || bilevel_l1inf(&y, 1.0)).median,
+                time_fn(&cfg, || bilevel_l11(&y, 1.0)).median,
+                time_fn(&cfg, || bilevel_l12(&y, 1.0)).median,
+            ];
+            println!(
+                "fig2/{axis}/{size:<6} l1inf: {:>8.3} ms   l11: {:>8.3} ms   l12: {:>8.3} ms",
+                t[0] * 1e3,
+                t[1] * 1e3,
+                t[2] * 1e3
+            );
+            xs.push(size as f64);
+            for (s, v) in series.iter_mut().zip(t) {
+                s.push(v);
+            }
+        }
+        for (name, s) in ["l1inf", "l11", "l12"].iter().zip(&series) {
+            let (a, _, r2) = fit_linear(&xs, s);
+            println!("fit: bp-{name} linear slope {a:.3e} (R2 {r2:.5})");
+        }
+    }
+}

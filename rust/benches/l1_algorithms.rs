@@ -1,0 +1,31 @@
+//! `cargo bench --bench l1_algorithms` — the four ℓ1-ball threshold
+//! algorithms (sort / Michelot / Condat / bucket) across vector sizes.
+//! Condat's O(n) expected algorithm is the repo default; this bench is the
+//! evidence (and the ablation for DESIGN.md's inner-solver choice).
+
+use bilevel_sparse::bench::{time_fn, BenchConfig};
+use bilevel_sparse::projection::l1::{project_l1, L1Algorithm};
+use bilevel_sparse::rng::{Rng, Xoshiro256pp};
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let sizes: Vec<usize> = if quick {
+        vec![1_000, 10_000, 100_000]
+    } else {
+        vec![1_000, 10_000, 100_000, 1_000_000]
+    };
+
+    for &n in &sizes {
+        let mut rng = Xoshiro256pp::seed_from_u64(n as u64);
+        let v: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        let norm: f64 = v.iter().map(|x| x.abs()).sum();
+        let eta = norm * 0.05;
+        print!("l1/{n:<9}");
+        for algo in L1Algorithm::all() {
+            let s = time_fn(&cfg, || project_l1(&v, eta, *algo));
+            print!("  {}: {:>9.4} ms", algo.name(), s.median * 1e3);
+        }
+        println!();
+    }
+}

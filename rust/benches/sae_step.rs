@@ -1,0 +1,116 @@
+//! `cargo bench --bench sae_step` — end-to-end hot-path latency of the
+//! training runtime: one `train_step` dispatch, one `train_epoch` (lax.scan)
+//! dispatch, the Pallas projection artifact, and the native projection, per
+//! preset. This is the L3 "coordinator should not be the bottleneck" check
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Requires `make artifacts`; exits cleanly when they are missing.
+
+use bilevel_sparse::bench::{time_fn, BenchConfig};
+use bilevel_sparse::model::{SaeDims, SaeParams};
+use bilevel_sparse::projection::bilevel::bilevel_l1inf;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::runtime::{literal_f32, literal_scalar, Runtime};
+
+fn main() {
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("SKIP sae_step bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let presets: &[&str] = if quick { &["tiny", "synth"] } else { &["tiny", "synth", "hif2"] };
+
+    for preset in presets {
+        let Some(e) = rt.manifest().get(&format!("{preset}_train_step")).cloned() else {
+            continue;
+        };
+        let dims = SaeDims { features: e.features, hidden: e.hidden, classes: e.classes };
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let params = SaeParams::init(dims, &mut rng);
+        let zeros = params.zeros_like();
+        let (b, f, k, nb) = (e.batch, e.features, e.classes, e.epoch_batches);
+        let x = vec![0.1f32; b * f];
+        let y = {
+            let mut y = vec![0.0f32; b * k];
+            for r in 0..b {
+                y[r * k] = 1.0;
+            }
+            y
+        };
+        let xs = vec![0.1f32; nb * b * f];
+        let ys = {
+            let mut ys = vec![0.0f32; nb * b * k];
+            for r in 0..nb * b {
+                ys[r * k] = 1.0;
+            }
+            ys
+        };
+        let mask = vec![1.0f32; f];
+
+        let build_step_inputs = || {
+            let mut inputs = Vec::with_capacity(30);
+            for p in [&params, &zeros, &zeros] {
+                for (tensor, shape) in p.tensors.iter().zip(dims.shapes().iter()) {
+                    let d: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+                    inputs.push(literal_f32(tensor, &d).unwrap());
+                }
+            }
+            inputs.push(literal_scalar(0.0));
+            inputs
+        };
+
+        // train_step: one batch
+        let s = time_fn(&cfg, || {
+            let mut inputs = build_step_inputs();
+            inputs.push(literal_f32(&x, &[b as i64, f as i64]).unwrap());
+            inputs.push(literal_f32(&y, &[b as i64, k as i64]).unwrap());
+            inputs.push(literal_f32(&mask, &[f as i64]).unwrap());
+            inputs.push(literal_scalar(1e-3));
+            inputs.push(literal_scalar(1.0));
+            rt.execute(&format!("{preset}_train_step"), &inputs).unwrap()
+        });
+        println!(
+            "sae/{preset}/train_step            {:>9.3} ms ± {:>7.3} ({} samples/dispatch)",
+            s.median * 1e3,
+            s.std * 1e3,
+            b
+        );
+
+        // train_epoch: NB batches in one dispatch
+        let s_epoch = time_fn(&cfg, || {
+            let mut inputs = build_step_inputs();
+            inputs.push(literal_f32(&xs, &[nb as i64, b as i64, f as i64]).unwrap());
+            inputs.push(literal_f32(&ys, &[nb as i64, b as i64, k as i64]).unwrap());
+            inputs.push(literal_f32(&mask, &[f as i64]).unwrap());
+            inputs.push(literal_scalar(1e-3));
+            inputs.push(literal_scalar(1.0));
+            rt.execute(&format!("{preset}_train_epoch"), &inputs).unwrap()
+        });
+        println!(
+            "sae/{preset}/train_epoch ({nb:>2} steps) {:>9.3} ms ± {:>7.3} ({:.3} ms/step — {:.1}x vs stepwise)",
+            s_epoch.median * 1e3,
+            s_epoch.std * 1e3,
+            s_epoch.median * 1e3 / nb as f64,
+            s.median * nb as f64 / s_epoch.median
+        );
+
+        // projection: pallas artifact vs native
+        let s_pallas = time_fn(&cfg, || {
+            let w1 = literal_f32(&params.tensors[0], &[f as i64, e.hidden as i64]).unwrap();
+            rt.execute(&format!("{preset}_project"), &[w1, literal_scalar(0.5)]).unwrap()
+        });
+        let s_native = time_fn(&cfg, || {
+            let w = params.w1_as_feature_columns();
+            bilevel_l1inf(&w, 0.5)
+        });
+        println!(
+            "sae/{preset}/project pallas        {:>9.3} ms   native {:>9.3} ms",
+            s_pallas.median * 1e3,
+            s_native.median * 1e3
+        );
+    }
+}

@@ -1,0 +1,192 @@
+//! Benchmark harness (criterion is unavailable offline, so this is the
+//! in-repo equivalent): warmup + repeated timing with robust statistics,
+//! plus the least-squares growth-rate fits the paper's Fig. 1 uses
+//! (linear for `BP¹,∞`, `n log n` for the exact projection).
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub mean: f64,
+    pub median: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn from_samples(mut samples: Vec<f64>) -> Self {
+        assert!(!samples.is_empty());
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+        Self {
+            mean,
+            median: samples[n / 2],
+            std: var.sqrt(),
+            min: samples[0],
+            max: samples[n - 1],
+            iters: n,
+        }
+    }
+}
+
+/// Benchmark policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            target_time: Duration::from_millis(400),
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Faster settings for `--quick` runs and tests.
+    pub fn quick() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            target_time: Duration::from_millis(60),
+        }
+    }
+}
+
+/// Time a closure: warmup, then run until both `min_iters` and
+/// `target_time` are satisfied (or `max_iters` hit).
+pub fn time_fn<T>(cfg: &BenchConfig, mut f: impl FnMut() -> T) -> Stats {
+    for _ in 0..cfg.warmup_iters {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(cfg.min_iters);
+    let start = Instant::now();
+    while samples.len() < cfg.min_iters
+        || (start.elapsed() < cfg.target_time && samples.len() < cfg.max_iters)
+    {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Optimizer barrier.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+// ------------------------------------------------------------ curve fits
+
+/// Least-squares fit of `y ≈ a·g(x) + b`; returns `(a, b, r²)`.
+pub fn fit(xs: &[f64], ys: &[f64], g: impl Fn(f64) -> f64) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let gx: Vec<f64> = xs.iter().map(|&x| g(x)).collect();
+    let mean_g = gx.iter().sum::<f64>() / n;
+    let mean_y = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (gi, yi) in gx.iter().zip(ys.iter()) {
+        sxy += (gi - mean_g) * (yi - mean_y);
+        sxx += (gi - mean_g) * (gi - mean_g);
+    }
+    let a = if sxx > 0.0 { sxy / sxx } else { 0.0 };
+    let b = mean_y - a * mean_g;
+    let mut ss_res = 0.0;
+    let mut ss_tot = 0.0;
+    for (gi, yi) in gx.iter().zip(ys.iter()) {
+        let pred = a * gi + b;
+        ss_res += (yi - pred) * (yi - pred);
+        ss_tot += (yi - mean_y) * (yi - mean_y);
+    }
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (a, b, r2)
+}
+
+/// Fit `y = a·x + b` (the bi-level projection's expected growth).
+pub fn fit_linear(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    fit(xs, ys, |x| x)
+}
+
+/// Fit `y = a·x·log(x) + b` (the exact projection's expected growth).
+pub fn fit_nlogn(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    fit(xs, ys, |x| x * x.max(2.0).ln())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = Stats::from_samples(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.mean, 3.0);
+        assert_eq!(s.median, 3.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.iters, 5);
+    }
+
+    #[test]
+    fn time_fn_runs_minimum_iterations() {
+        let cfg = BenchConfig::quick();
+        let mut count = 0;
+        let s = time_fn(&cfg, || {
+            count += 1;
+            count
+        });
+        assert!(s.iters >= cfg.min_iters);
+        assert!(s.mean >= 0.0);
+    }
+
+    #[test]
+    fn linear_fit_recovers_coefficients() {
+        let xs: Vec<f64> = (1..=50).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 3.5 * x + 7.0).collect();
+        let (a, b, r2) = fit_linear(&xs, &ys);
+        assert!((a - 3.5).abs() < 1e-9);
+        assert!((b - 7.0).abs() < 1e-6);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn nlogn_fit_recovers_coefficients() {
+        let xs: Vec<f64> = (2..=50).map(|i| i as f64 * 100.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 0.25 * x * x.ln() - 3.0).collect();
+        let (a, b, r2) = fit_nlogn(&xs, &ys);
+        assert!((a - 0.25).abs() < 1e-9);
+        assert!((b + 3.0).abs() < 1e-5);
+        assert!(r2 > 0.999999);
+    }
+
+    #[test]
+    fn linear_data_fits_linear_better_than_nlogn() {
+        let xs: Vec<f64> = (1..=40).map(|i| i as f64 * 500.0).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 2.0 * x).collect();
+        let (_, _, r2_lin) = fit_linear(&xs, &ys);
+        let (_, _, r2_nlogn) = fit_nlogn(&xs, &ys);
+        assert!(r2_lin >= r2_nlogn);
+    }
+
+    #[test]
+    fn degenerate_fit_safe() {
+        let (a, _, r2) = fit_linear(&[1.0], &[2.0]);
+        assert_eq!(a, 0.0);
+        assert_eq!(r2, 1.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! Hand-rolled CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `bilevel <subcommand> [positional...] [--key value | --key=value | --flag]`.
+
+use std::collections::{HashMap, HashSet};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: HashSet<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]). A leading
+    /// non-option token becomes the subcommand; options-only invocations
+    /// (the examples) leave it empty.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Self, String> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if it.peek().is_some_and(|first| !first.starts_with('-')) {
+            args.subcommand = it.next().unwrap();
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err("bare `--` not supported".into());
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|next| !next.starts_with("--")) {
+                    args.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.insert(body.to_string());
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.contains(name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: invalid number {s:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| format!("--{name}: invalid integer {s:?}")),
+        }
+    }
+
+    /// Comma-separated u64 list, e.g. `--seeds 1,2,3`.
+    pub fn u64_list_or(&self, name: &str, default: &[u64]) -> Result<Vec<u64>, String> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| p.trim().parse().map_err(|_| format!("--{name}: bad entry {p:?}")))
+                .collect(),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+bilevel — linear-time bi-level l1,inf projection & sparse supervised autoencoders
+(reproduction of Barlaud, Perez, Marmorat 2024)
+
+USAGE:
+  bilevel <COMMAND> [OPTIONS]
+
+COMMANDS:
+  project      project a random matrix, print norms/sparsity/timing
+               --rows N --cols M --eta E --method <name> [--seed S] [--algo condat]
+  train        train the sparse SAE end to end (needs `make artifacts`)
+               --dataset synth64|synth16|hif2|tiny --projection <name> --eta E
+               [--backend native|pallas] [--epochs1 N] [--epochs2 N] [--lr F]
+               [--alpha F] [--seeds 1,2,3] [--config file.toml]
+  experiment   regenerate a paper table/figure (fig1..fig9, table1..table4, all)
+               bilevel experiment fig1 [--quick] [--seeds 1,2,3]
+  artifacts    list the AOT artifacts in the manifest [--dir artifacts]
+  help         print this help
+
+PROJECTION METHODS:
+  bilevel-l1inf (Alg.1) | bilevel-l11 (Alg.2) | bilevel-l12 (Alg.3)
+  l1inf-ssn (Chu et al.) | l1inf-newton (Chau et al.) | l1inf-quattoni | none
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse(&["train", "--eta", "0.5", "--quick", "--dataset=hif2"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.f64_or("eta", 0.0).unwrap(), 0.5);
+        assert!(a.flag("quick"));
+        assert_eq!(a.str_or("dataset", ""), "hif2");
+    }
+
+    #[test]
+    fn positional_arguments() {
+        let a = parse(&["experiment", "fig1", "--quick"]);
+        assert_eq!(a.positional, vec!["fig1"]);
+        assert!(a.flag("quick"));
+    }
+
+    #[test]
+    fn seed_lists() {
+        let a = parse(&["train", "--seeds", "1,2,3"]);
+        assert_eq!(a.u64_list_or("seeds", &[9]).unwrap(), vec![1, 2, 3]);
+        let a = parse(&["train"]);
+        assert_eq!(a.u64_list_or("seeds", &[9]).unwrap(), vec![9]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--quick", "--verbose"]);
+        assert!(a.flag("quick") && a.flag("verbose"));
+    }
+
+    #[test]
+    fn errors_on_bad_values() {
+        let a = parse(&["x", "--eta", "abc"]);
+        assert!(a.f64_or("eta", 0.0).is_err());
+    }
+
+    #[test]
+    fn options_only_invocation_has_empty_subcommand() {
+        let a = parse(&["--preset", "tiny", "--quick"]);
+        assert_eq!(a.subcommand, "");
+        assert_eq!(a.str_or("preset", ""), "tiny");
+        assert!(a.flag("quick"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Configuration system.
+//!
+//! A TOML-subset parser ([`toml`]) plus typed schema structs ([`schema`])
+//! with presets matching the paper's experiments. No serde offline — the
+//! parser supports exactly what the configs need: `[section]` headers,
+//! `key = value` with strings, numbers, booleans, and flat arrays.
+
+pub mod schema;
+pub mod toml;
+
+pub use schema::{DatasetKind, ProjectionBackend, RunConfig, TrainConfig};
+pub use toml::{parse, TomlDoc, TomlValue};

@@ -1,0 +1,278 @@
+//! Typed configuration schema + presets for the paper's experiments.
+
+use super::toml::TomlDoc;
+use crate::projection::l1::L1Algorithm;
+use crate::projection::ProjectionKind;
+
+/// Which dataset substrate a run uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetKind {
+    /// `make_classification`, 64 informative (paper data-64).
+    Synth64,
+    /// `make_classification`, 16 informative (paper data-16).
+    Synth16,
+    /// HIF2-sim 779×10000 (paper §V.C.2).
+    Hif2,
+    /// Tiny smoke dataset (tests/CI).
+    Tiny,
+}
+
+impl DatasetKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "synth64" | "data64" | "data-64" => Some(Self::Synth64),
+            "synth16" | "data16" | "data-16" => Some(Self::Synth16),
+            "hif2" | "hif2sim" => Some(Self::Hif2),
+            "tiny" => Some(Self::Tiny),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Synth64 => "synth64",
+            Self::Synth16 => "synth16",
+            Self::Hif2 => "hif2",
+            Self::Tiny => "tiny",
+        }
+    }
+
+    /// The AOT preset (artifact family) this dataset trains on.
+    pub fn preset(&self) -> &'static str {
+        match self {
+            Self::Synth64 | Self::Synth16 => "synth",
+            Self::Hif2 => "hif2",
+            Self::Tiny => "tiny",
+        }
+    }
+}
+
+/// Where the W1 projection executes during training.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionBackend {
+    /// The AOT Pallas kernel artifact (`{preset}_project.hlo.txt`).
+    Pallas,
+    /// The native Rust implementation (`projection::*`).
+    Native,
+}
+
+impl ProjectionBackend {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pallas" | "kernel" => Some(Self::Pallas),
+            "native" | "rust" => Some(Self::Native),
+            _ => None,
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Pallas => "pallas",
+            Self::Native => "native",
+        }
+    }
+}
+
+/// Training configuration (one SAE run).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub dataset: DatasetKind,
+    pub projection: ProjectionKind,
+    pub backend: ProjectionBackend,
+    pub l1_algorithm: L1Algorithm,
+    /// Projection radius η (paper's sweep parameter).
+    pub eta: f64,
+    /// Epochs per double-descent phase.
+    pub epochs_phase1: usize,
+    pub epochs_phase2: usize,
+    pub lr: f64,
+    /// Reconstruction-loss weight α in eq. (28).
+    pub alpha: f64,
+    /// Apply the projection every `project_every` steps during phase 1.
+    pub project_every: usize,
+    pub test_fraction: f64,
+    pub seed: u64,
+    /// Use the lax.scan epoch artifact (one dispatch/epoch) when true.
+    pub use_epoch_artifact: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            dataset: DatasetKind::Synth64,
+            projection: ProjectionKind::BilevelL1Inf,
+            backend: ProjectionBackend::Native,
+            l1_algorithm: L1Algorithm::Condat,
+            eta: 1.0,
+            epochs_phase1: 20,
+            epochs_phase2: 10,
+            lr: 1e-3,
+            alpha: 1.0,
+            project_every: 1,
+            test_fraction: 0.2,
+            seed: 42,
+            use_epoch_artifact: true,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from a parsed TOML doc (`[train]` section), defaults elsewhere.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let dataset = DatasetKind::parse(doc.str_or("train.dataset", d.dataset.name()))
+            .ok_or("train.dataset: unknown dataset")?;
+        let projection =
+            ProjectionKind::parse(doc.str_or("train.projection", d.projection.name()))
+                .ok_or("train.projection: unknown projection")?;
+        let backend = ProjectionBackend::parse(doc.str_or("train.backend", d.backend.name()))
+            .ok_or("train.backend: unknown backend")?;
+        let l1_algorithm =
+            L1Algorithm::parse(doc.str_or("train.l1_algorithm", d.l1_algorithm.name()))
+                .ok_or("train.l1_algorithm: unknown algorithm")?;
+        let cfg = Self {
+            dataset,
+            projection,
+            backend,
+            l1_algorithm,
+            eta: doc.f64_or("train.eta", d.eta),
+            epochs_phase1: doc.usize_or("train.epochs_phase1", d.epochs_phase1),
+            epochs_phase2: doc.usize_or("train.epochs_phase2", d.epochs_phase2),
+            lr: doc.f64_or("train.lr", d.lr),
+            alpha: doc.f64_or("train.alpha", d.alpha),
+            project_every: doc.usize_or("train.project_every", d.project_every),
+            test_fraction: doc.f64_or("train.test_fraction", d.test_fraction),
+            seed: doc.usize_or("train.seed", d.seed as usize) as u64,
+            use_epoch_artifact: doc.bool_or("train.use_epoch_artifact", d.use_epoch_artifact),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.eta < 0.0 {
+            return Err("eta must be non-negative".into());
+        }
+        if !(0.0..1.0).contains(&self.test_fraction) {
+            return Err("test_fraction must be in [0, 1)".into());
+        }
+        if self.lr <= 0.0 {
+            return Err("lr must be positive".into());
+        }
+        if self.project_every == 0 {
+            return Err("project_every must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Top-level run configuration (CLI entry).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub train: TrainConfig,
+    pub artifacts_dir: String,
+    pub seeds: Vec<u64>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            train: TrainConfig::default(),
+            artifacts_dir: "artifacts".into(),
+            seeds: vec![42, 43, 44, 45],
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let seeds = match doc.get("run.seeds") {
+            Some(v) => v
+                .as_f64_array()
+                .ok_or("run.seeds must be an array of integers")?
+                .iter()
+                .map(|&x| x as u64)
+                .collect(),
+            None => d.seeds,
+        };
+        Ok(Self {
+            train: TrainConfig::from_doc(doc)?,
+            artifacts_dir: doc.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
+            seeds,
+        })
+    }
+
+    pub fn from_file(path: &str) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+        Self::from_doc(&super::toml::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::toml::parse;
+
+    #[test]
+    fn defaults_validate() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = parse(
+            r#"
+            [train]
+            dataset = "hif2"
+            projection = "l1inf-ssn"
+            backend = "pallas"
+            eta = 0.25
+            epochs_phase1 = 5
+            [run]
+            seeds = [1, 2, 3]
+            artifacts_dir = "arts"
+            "#,
+        )
+        .unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.train.dataset, DatasetKind::Hif2);
+        assert_eq!(cfg.train.projection, ProjectionKind::ExactL1InfSsn);
+        assert_eq!(cfg.train.backend, ProjectionBackend::Pallas);
+        assert_eq!(cfg.train.eta, 0.25);
+        assert_eq!(cfg.train.epochs_phase1, 5);
+        assert_eq!(cfg.seeds, vec![1, 2, 3]);
+        assert_eq!(cfg.artifacts_dir, "arts");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let doc = parse("[train]\neta = -1.0").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = parse("[train]\ndataset = \"bogus\"").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+        let doc = parse("[train]\nproject_every = 0").unwrap();
+        assert!(TrainConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn shipped_config_files_parse() {
+        for f in ["configs/synth64.toml", "configs/hif2.toml", "configs/baseline.toml"] {
+            let cfg = RunConfig::from_file(f).unwrap_or_else(|e| panic!("{f}: {e}"));
+            cfg.train.validate().unwrap();
+        }
+        // and they differ meaningfully
+        let a = RunConfig::from_file("configs/synth64.toml").unwrap();
+        let b = RunConfig::from_file("configs/hif2.toml").unwrap();
+        assert_eq!(a.train.dataset, DatasetKind::Synth64);
+        assert_eq!(b.train.dataset, DatasetKind::Hif2);
+        assert_eq!(a.train.backend, ProjectionBackend::Pallas);
+    }
+
+    #[test]
+    fn dataset_preset_mapping() {
+        assert_eq!(DatasetKind::Synth64.preset(), "synth");
+        assert_eq!(DatasetKind::Synth16.preset(), "synth");
+        assert_eq!(DatasetKind::Hif2.preset(), "hif2");
+        assert_eq!(DatasetKind::parse("data-64"), Some(DatasetKind::Synth64));
+    }
+}

@@ -1,0 +1,250 @@
+//! TOML-subset parser.
+//!
+//! Supported grammar (sufficient for this repo's configs):
+//!
+//! ```toml
+//! top_key = 1.5
+//! [section]
+//! name = "string"          # comment
+//! flag = true
+//! etas = [0.1, 0.5, 1.0]
+//! tags = ["a", "b"]
+//! [section.sub]
+//! n = 42
+//! ```
+//!
+//! Keys are flattened to `section.sub.key` form.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Float(f64),
+    Int(i64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            TomlValue::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_f64_array(&self) -> Option<Vec<f64>> {
+        match self {
+            TomlValue::Array(xs) => xs.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+/// Flat key → value map with dotted section prefixes.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_i64()).map(|v| v as usize).unwrap_or(default)
+    }
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+/// Parse a TOML-subset document. Errors carry line numbers.
+pub fn parse(text: &str) -> Result<TomlDoc, String> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| format!("line {}: unterminated section header", ln + 1))?
+                .trim();
+            if name.is_empty() {
+                return Err(format!("line {}: empty section name", ln + 1));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", ln + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(format!("line {}: empty key", ln + 1));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        let parsed = parse_value(value.trim())
+            .map_err(|e| format!("line {}: {e}", ln + 1))?;
+        doc.values.insert(full_key, parsed);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items: Result<Vec<TomlValue>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(TomlValue::Array(items?));
+    }
+    if !s.contains('.') && !s.contains('e') && !s.contains('E') {
+        if let Ok(i) = s.parse::<i64>() {
+            return Ok(TomlValue::Int(i));
+        }
+    }
+    s.parse::<f64>()
+        .map(TomlValue::Float)
+        .map_err(|_| format!("cannot parse value: {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_document() {
+        let doc = parse(
+            r#"
+            lr = 1e-3           # learning rate
+            [train]
+            epochs = 30
+            name = "synth64"
+            quick = false
+            etas = [0.1, 0.5, 1.0]
+            [train.inner]
+            deep = 1
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.f64_or("lr", 0.0), 1e-3);
+        assert_eq!(doc.usize_or("train.epochs", 0), 30);
+        assert_eq!(doc.str_or("train.name", ""), "synth64");
+        assert!(!doc.bool_or("train.quick", true));
+        assert_eq!(
+            doc.get("train.etas").unwrap().as_f64_array().unwrap(),
+            vec![0.1, 0.5, 1.0]
+        );
+        assert_eq!(doc.usize_or("train.inner.deep", 0), 1);
+    }
+
+    #[test]
+    fn defaults_on_missing_keys() {
+        let doc = parse("").unwrap();
+        assert_eq!(doc.f64_or("x", 2.5), 2.5);
+        assert_eq!(doc.str_or("y", "d"), "d");
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let doc = parse(r##"k = "a#b""##).unwrap();
+        assert_eq!(doc.str_or("k", ""), "a#b");
+    }
+
+    #[test]
+    fn error_reports_line_numbers() {
+        let err = parse("ok = 1\nbroken line").unwrap_err();
+        assert!(err.contains("line 2"), "{err}");
+        let err = parse("[unterminated").unwrap_err();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn int_vs_float_distinction() {
+        let doc = parse("a = 3\nb = 3.5\nc = 1e2").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Float(3.5)));
+        assert_eq!(doc.get("c"), Some(&TomlValue::Float(100.0)));
+        assert_eq!(doc.get("a").unwrap().as_f64(), Some(3.0));
+        assert_eq!(doc.get("b").unwrap().as_i64(), None);
+    }
+
+    #[test]
+    fn string_arrays() {
+        let doc = parse(r#"tags = ["x", "y"]"#).unwrap();
+        match doc.get("tags").unwrap() {
+            TomlValue::Array(xs) => {
+                assert_eq!(xs[0].as_str(), Some("x"));
+                assert_eq!(xs[1].as_str(), Some("y"));
+            }
+            _ => panic!("not an array"),
+        }
+    }
+}

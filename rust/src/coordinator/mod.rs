@@ -1,0 +1,63 @@
+//! L3 coordinator: the double-descent training orchestrator.
+//!
+//! The paper (§V.C) trains a supervised autoencoder under the constraint
+//! `BP^{1,∞}(W1) ≤ η` using *projected* Adam plus the double-descent /
+//! lottery-ticket scheme ([42], [43]):
+//!
+//! * **phase 1** — train with the projection applied to the first-layer
+//!   weights (projected gradient descent); columns (features) whose
+//!   threshold hits zero are structurally removed;
+//! * **mask** — derive the feature mask from the zero columns of the
+//!   projected `W1`;
+//! * **phase 2** — rewind to the initial weights, apply the mask, retrain
+//!   dense (no projection) on the surviving features.
+//!
+//! The compute runs through the AOT artifacts (`train_epoch` /
+//! `train_step` / `eval`) on PJRT; the projection runs either natively
+//! (Rust, [`crate::projection`]) or through the Pallas kernel artifact —
+//! `config::ProjectionBackend` selects, and both paths are tested to agree.
+
+mod projector;
+mod trainer;
+
+pub use projector::{project_w1, ProjectionOutcome};
+pub use trainer::{EpochStat, SaeTrainer, TrainOutcome};
+
+use crate::config::TrainConfig;
+use crate::metrics::mean_std;
+use crate::runtime::Runtime;
+
+/// Aggregate of one configuration across seeds (a row of Tables II–IV).
+#[derive(Clone, Debug)]
+pub struct MultiSeedSummary {
+    pub mean_accuracy: f64,
+    pub std_accuracy: f64,
+    pub mean_sparsity: f64,
+    pub std_sparsity: f64,
+    pub outcomes: Vec<TrainOutcome>,
+}
+
+/// Run a configuration across several seeds and aggregate (paper reports
+/// `accuracy ± std`).
+pub fn run_seeds(
+    runtime: &Runtime,
+    cfg: &TrainConfig,
+    seeds: &[u64],
+) -> anyhow::Result<MultiSeedSummary> {
+    let trainer = SaeTrainer::new(runtime, cfg.clone())?;
+    let mut outcomes = Vec::with_capacity(seeds.len());
+    for &seed in seeds {
+        outcomes.push(trainer.run(seed)?);
+    }
+    let accs: Vec<f64> = outcomes.iter().map(|o| o.final_accuracy * 100.0).collect();
+    let sps: Vec<f64> = outcomes.iter().map(|o| o.sparsity_percent).collect();
+    let (mean_accuracy, std_accuracy) = mean_std(&accs);
+    let (mean_sparsity, std_sparsity) = mean_std(&sps);
+    Ok(MultiSeedSummary {
+        mean_accuracy,
+        std_accuracy,
+        mean_sparsity,
+        std_sparsity,
+        outcomes,
+    })
+}

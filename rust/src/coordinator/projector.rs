@@ -1,0 +1,164 @@
+//! Projection dispatch for the trainer: native Rust vs the Pallas artifact.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{ProjectionBackend, TrainConfig};
+use crate::model::SaeParams;
+use crate::projection::bilevel::{bilevel, BilevelVariant};
+use crate::projection::l1inf::{project_l1inf_with, L1InfAlgorithm};
+use crate::projection::ProjectionKind;
+use crate::runtime::{to_vec_f32, HostArg, Runtime};
+
+/// What a projection pass did to W1.
+#[derive(Clone, Debug)]
+pub struct ProjectionOutcome {
+    /// Per-feature thresholds/levels (zero ⇒ feature removed).
+    pub thresholds: Vec<f32>,
+    /// Features still alive after this projection.
+    pub alive: usize,
+}
+
+/// Project `params.w1` in place according to the config. Returns the
+/// per-feature thresholds (the structured-sparsity signal).
+pub fn project_w1(
+    runtime: &Runtime,
+    preset: &str,
+    cfg: &TrainConfig,
+    params: &mut SaeParams,
+) -> Result<ProjectionOutcome> {
+    let eta = cfg.eta as f32;
+    match (cfg.backend, cfg.projection) {
+        (_, ProjectionKind::None) => {
+            let thresholds = params.feature_scores().iter().map(|&s| s as f32).collect();
+            Ok(ProjectionOutcome { alive: params.alive_features(), thresholds })
+        }
+        (ProjectionBackend::Pallas, ProjectionKind::BilevelL1Inf) => {
+            let d = params.dims;
+            let w1_dims = [d.features, d.hidden];
+            let outputs = runtime.execute_args(
+                &format!("{preset}_project"),
+                &[HostArg::tensor(&params.tensors[0], &w1_dims), HostArg::Scalar(eta)],
+            )?;
+            if outputs.len() != 2 {
+                return Err(anyhow!("project artifact returned {} outputs", outputs.len()));
+            }
+            params.tensors[0] = to_vec_f32(&outputs[0])?;
+            let thresholds = to_vec_f32(&outputs[1])?;
+            let alive = thresholds.iter().filter(|&&u| u > 0.0).count();
+            Ok(ProjectionOutcome { thresholds, alive })
+        }
+        (ProjectionBackend::Pallas, other) => Err(anyhow!(
+            "projection {:?} has no Pallas artifact (only bilevel-l1inf); use backend=native",
+            other.name()
+        )),
+        (ProjectionBackend::Native, kind) => {
+            // W1 (F,H) row-major reinterprets as (H,F) column-major:
+            // columns are features — the library's native orientation.
+            let w = params.w1_as_feature_columns();
+            let (x, thresholds): (_, Vec<f32>) = match kind {
+                ProjectionKind::BilevelL1Inf | ProjectionKind::BilevelL11
+                | ProjectionKind::BilevelL12 => {
+                    let variant = match kind {
+                        ProjectionKind::BilevelL1Inf => BilevelVariant::L1Inf,
+                        ProjectionKind::BilevelL11 => BilevelVariant::L11,
+                        _ => BilevelVariant::L12,
+                    };
+                    let r = bilevel(&w, eta, variant, cfg.l1_algorithm);
+                    (r.x, r.thresholds)
+                }
+                ProjectionKind::ExactL1InfQuattoni
+                | ProjectionKind::ExactL1InfNewton
+                | ProjectionKind::ExactL1InfSsn => {
+                    let algo = match kind {
+                        ProjectionKind::ExactL1InfQuattoni => L1InfAlgorithm::Quattoni,
+                        ProjectionKind::ExactL1InfNewton => L1InfAlgorithm::Newton,
+                        _ => L1InfAlgorithm::Ssn,
+                    };
+                    let r = project_l1inf_with(&w, eta, algo);
+                    (r.x, r.mu)
+                }
+                ProjectionKind::None => unreachable!(),
+            };
+            let alive = thresholds.iter().filter(|&&u| u > 0.0).count();
+            params.set_w1_from_feature_columns(x);
+            Ok(ProjectionOutcome { thresholds, alive })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DatasetKind;
+    use crate::model::SaeDims;
+    use crate::rng::Xoshiro256pp;
+
+    fn params() -> SaeParams {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        SaeParams::init(SaeDims { features: 30, hidden: 8, classes: 2 }, &mut rng)
+    }
+
+    fn cfg(kind: ProjectionKind) -> TrainConfig {
+        TrainConfig {
+            dataset: DatasetKind::Tiny,
+            projection: kind,
+            backend: ProjectionBackend::Native,
+            eta: 0.5,
+            ..TrainConfig::default()
+        }
+    }
+
+    // Native paths need no runtime; build a Runtime only in the
+    // runtime_integration tests. Here we call through a stub runtime-less
+    // entry by exercising the native arm directly.
+    fn project_native(kind: ProjectionKind, p: &mut SaeParams) -> ProjectionOutcome {
+        // Minimal fake runtime is impossible (PJRT); the native arm never
+        // touches it, so route through a lazily-opened runtime only for
+        // pallas tests (none here).
+        let rt = std::ptr::null::<Runtime>();
+        let _ = rt;
+        // Re-implement dispatch inline via the public fn with a panic guard:
+        // we cannot construct Runtime without artifacts, so assert the arm.
+        let c = cfg(kind);
+        assert_ne!(c.backend, ProjectionBackend::Pallas);
+        // SAFETY-free path: call the same logic through a local copy.
+        let w = p.w1_as_feature_columns();
+        let r = match kind {
+            ProjectionKind::BilevelL1Inf => {
+                let r = bilevel(&w, 0.5, BilevelVariant::L1Inf, c.l1_algorithm);
+                (r.x, r.thresholds)
+            }
+            ProjectionKind::ExactL1InfSsn => {
+                let r = project_l1inf_with(&w, 0.5, L1InfAlgorithm::Ssn);
+                (r.x, r.mu)
+            }
+            _ => {
+                let r = bilevel(&w, 0.5, BilevelVariant::L11, c.l1_algorithm);
+                (r.x, r.thresholds)
+            }
+        };
+        let alive = r.1.iter().filter(|&&u| u > 0.0).count();
+        p.set_w1_from_feature_columns(r.0);
+        ProjectionOutcome { thresholds: r.1, alive }
+    }
+
+    #[test]
+    fn native_bilevel_reduces_norm_and_reports_alive() {
+        let mut p = params();
+        let before = crate::norms::l1inf_norm(&p.w1_as_feature_columns());
+        let out = project_native(ProjectionKind::BilevelL1Inf, &mut p);
+        let after = crate::norms::l1inf_norm(&p.w1_as_feature_columns());
+        assert!(after <= 0.5 + 1e-5, "{after} vs eta");
+        assert!(after <= before);
+        assert_eq!(out.thresholds.len(), 30);
+        assert_eq!(out.alive, p.alive_features());
+    }
+
+    #[test]
+    fn native_exact_matches_constraint() {
+        let mut p = params();
+        let _ = project_native(ProjectionKind::ExactL1InfSsn, &mut p);
+        let after = crate::norms::l1inf_norm(&p.w1_as_feature_columns());
+        assert!(after <= 0.5 + 1e-4);
+    }
+}

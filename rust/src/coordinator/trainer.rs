@@ -1,0 +1,376 @@
+//! The SAE trainer: double-descent training through PJRT artifacts.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{DatasetKind, TrainConfig};
+use crate::data::{hif2_sim, make_classification, Dataset, Hif2Config, MakeClassificationConfig,
+                  StandardScaler};
+use crate::metrics::accuracy_from_logits;
+use crate::model::{SaeDims, SaeParams};
+use crate::projection::ProjectionKind;
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::runtime::{to_scalar_f32, to_vec_f32, ArtifactEntry, HostArg, Runtime};
+
+/// Per-epoch statistics.
+#[derive(Clone, Debug)]
+pub struct EpochStat {
+    pub phase: u8,
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub train_accuracy: f64,
+    pub test_accuracy: f64,
+    pub alive_features: usize,
+}
+
+/// Result of one full double-descent run.
+#[derive(Clone, Debug)]
+pub struct TrainOutcome {
+    pub seed: u64,
+    pub final_accuracy: f64,
+    pub best_accuracy: f64,
+    pub sparsity_percent: f64,
+    /// Indices of the surviving (selected) features.
+    pub selected_features: Vec<usize>,
+    pub history: Vec<EpochStat>,
+    pub train_seconds: f64,
+    /// Final first-layer weights (for Fig. 9-style dumps).
+    pub w1: Vec<f32>,
+    pub dims: SaeDims,
+}
+
+/// Double-descent SAE trainer bound to one artifact preset.
+pub struct SaeTrainer<'rt> {
+    runtime: &'rt Runtime,
+    cfg: TrainConfig,
+    entry: ArtifactEntry,
+    dims: SaeDims,
+}
+
+impl<'rt> SaeTrainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, cfg: TrainConfig) -> Result<Self> {
+        cfg.validate().map_err(|e| anyhow!(e))?;
+        let preset = cfg.dataset.preset();
+        let entry = runtime
+            .manifest()
+            .get(&format!("{preset}_train_step"))
+            .ok_or_else(|| anyhow!("preset {preset} not in manifest (run `make artifacts`)"))?
+            .clone();
+        let dims = SaeDims {
+            features: entry.features,
+            hidden: entry.hidden,
+            classes: entry.classes,
+        };
+        Ok(Self { runtime, cfg, entry, dims })
+    }
+
+    pub fn dims(&self) -> SaeDims {
+        self.dims
+    }
+
+    /// Generate the dataset for this config (seeded).
+    pub fn make_dataset(&self, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        match self.cfg.dataset {
+            DatasetKind::Synth64 => make_classification(&MakeClassificationConfig::data64(), &mut rng),
+            DatasetKind::Synth16 => make_classification(&MakeClassificationConfig::data16(), &mut rng),
+            DatasetKind::Hif2 => hif2_sim(&Hif2Config::default(), &mut rng),
+            DatasetKind::Tiny => {
+                make_classification(&MakeClassificationConfig::tiny(), &mut rng)
+            }
+        }
+    }
+
+    /// Full double-descent run for one seed.
+    pub fn run(&self, seed: u64) -> Result<TrainOutcome> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let ds = self.make_dataset(seed);
+        if ds.n_features != self.dims.features {
+            return Err(anyhow!(
+                "dataset features {} != artifact features {}",
+                ds.n_features,
+                self.dims.features
+            ));
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5AE5_AE5A);
+        let mut split = ds.split(cfg.test_fraction, &mut rng);
+        let scaler = StandardScaler::fit(&split.train);
+        scaler.transform(&mut split.train);
+        scaler.transform(&mut split.test);
+
+        let mut init_rng = Xoshiro256pp::seed_from_u64(seed ^ 0x1417);
+        let params0 = SaeParams::init(self.dims, &mut init_rng);
+        let mut history = Vec::new();
+
+        let no_projection = cfg.projection == ProjectionKind::None;
+        let (p1, p2) = if no_projection {
+            (cfg.epochs_phase1 + cfg.epochs_phase2, 0)
+        } else {
+            (cfg.epochs_phase1, cfg.epochs_phase2)
+        };
+
+        // ---------------- phase 1: projected training ----------------
+        let mut state = TrainState::new(params0.clone());
+        let mask_all = vec![1.0f32; self.dims.features];
+        let mut shuffle_rng = Xoshiro256pp::seed_from_u64(seed ^ 0xEF0C);
+        for epoch in 0..p1 {
+            let (loss, tacc) =
+                self.train_one_epoch(&mut state, &split.train, &mask_all, &mut shuffle_rng)?;
+            if !no_projection {
+                crate::coordinator::project_w1(
+                    self.runtime,
+                    cfg.dataset.preset(),
+                    cfg,
+                    &mut state.params,
+                )?;
+            }
+            let test_acc = self.evaluate(&state.params, &split.test)?;
+            history.push(EpochStat {
+                phase: 1,
+                epoch,
+                train_loss: loss,
+                train_accuracy: tacc,
+                test_accuracy: test_acc,
+                alive_features: state.params.alive_features(),
+            });
+        }
+
+        // ---------------- mask + phase 2: rewound retrain -------------
+        let mask = if no_projection {
+            mask_all.clone()
+        } else {
+            // Final projection defines the mask.
+            let out = crate::coordinator::project_w1(
+                self.runtime,
+                cfg.dataset.preset(),
+                cfg,
+                &mut state.params,
+            )?;
+            crate::model::mask_from_thresholds(&out.thresholds, 0.0)
+        };
+
+        if p2 > 0 {
+            // Lottery-ticket rewind: initial weights, masked features.
+            let mut rewound = params0.clone();
+            rewound.apply_feature_mask(&mask);
+            state = TrainState::new(rewound);
+            for epoch in 0..p2 {
+                let (loss, tacc) =
+                    self.train_one_epoch(&mut state, &split.train, &mask, &mut shuffle_rng)?;
+                let test_acc = self.evaluate(&state.params, &split.test)?;
+                history.push(EpochStat {
+                    phase: 2,
+                    epoch,
+                    train_loss: loss,
+                    train_accuracy: tacc,
+                    test_accuracy: test_acc,
+                    alive_features: state.params.alive_features(),
+                });
+            }
+        }
+
+        let final_accuracy = self.evaluate(&state.params, &split.test)?;
+        let best_accuracy = history
+            .iter()
+            .map(|h| h.test_accuracy)
+            .fold(final_accuracy, f64::max);
+        let selected_features: Vec<usize> = mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(i, _)| i)
+            .collect();
+        Ok(TrainOutcome {
+            seed,
+            final_accuracy,
+            best_accuracy,
+            sparsity_percent: state.params.sparsity_percent(),
+            selected_features,
+            history,
+            train_seconds: t0.elapsed().as_secs_f64(),
+            w1: state.params.tensors[0].clone(),
+            dims: self.dims,
+        })
+    }
+
+    /// One epoch through the train artifacts. Returns (mean loss, accuracy).
+    fn train_one_epoch<R: Rng + ?Sized>(
+        &self,
+        state: &mut TrainState,
+        train: &Dataset,
+        mask: &[f32],
+        rng: &mut R,
+    ) -> Result<(f64, f64)> {
+        if self.cfg.use_epoch_artifact {
+            self.train_epoch_scan(state, train, mask, rng)
+        } else {
+            self.train_epoch_steps(state, train, mask, rng)
+        }
+    }
+
+    /// Epoch via the `lax.scan` artifact: one PJRT dispatch.
+    fn train_epoch_scan<R: Rng + ?Sized>(
+        &self,
+        state: &mut TrainState,
+        train: &Dataset,
+        mask: &[f32],
+        rng: &mut R,
+    ) -> Result<(f64, f64)> {
+        let e = &self.entry;
+        let (nb, b, f, k) = (e.epoch_batches, e.batch, e.features, e.classes);
+        let mut order: Vec<usize> = (0..train.n_samples).collect();
+        rng.shuffle(&mut order);
+
+        // Fill (NB, B, F) / (NB, B, K), recycling samples if the train set
+        // is smaller than NB*B (keeps artifact shapes static).
+        let mut xs = vec![0.0f32; nb * b * f];
+        let mut ys = vec![0.0f32; nb * b * k];
+        let total = nb * b;
+        for r in 0..total {
+            let i = order[r % order.len()];
+            xs[r * f..(r + 1) * f].copy_from_slice(train.row(i));
+            ys[r * k + train.labels[i] as usize] = 1.0;
+        }
+
+        let shapes = state.params.dims.shapes();
+        let mut inputs = Vec::with_capacity(30);
+        push_params(&mut inputs, &state.params, &shapes);
+        push_params(&mut inputs, &state.m, &shapes);
+        push_params(&mut inputs, &state.v, &shapes);
+        inputs.push(HostArg::Scalar(state.step));
+        let xs_dims = [nb, b, f];
+        let ys_dims = [nb, b, k];
+        let mask_dims = [f];
+        inputs.push(HostArg::tensor(&xs, &xs_dims));
+        inputs.push(HostArg::tensor(&ys, &ys_dims));
+        inputs.push(HostArg::tensor(mask, &mask_dims));
+        inputs.push(HostArg::Scalar(self.cfg.lr as f32));
+        inputs.push(HostArg::Scalar(self.cfg.alpha as f32));
+
+        let name = format!("{}_train_epoch", e.preset);
+        let outputs = self.runtime.execute_args(&name, &inputs).context("train_epoch")?;
+        if outputs.len() != 27 {
+            return Err(anyhow!("train_epoch returned {} outputs, want 27", outputs.len()));
+        }
+        state.absorb(&outputs[..24])?;
+        state.step = to_scalar_f32(&outputs[24])?;
+        let loss = to_scalar_f32(&outputs[25])? as f64;
+        let ncorrect = to_scalar_f32(&outputs[26])? as f64;
+        Ok((loss, ncorrect / total as f64))
+    }
+
+    /// Epoch as individual `train_step` dispatches (fallback / ablation).
+    fn train_epoch_steps<R: Rng + ?Sized>(
+        &self,
+        state: &mut TrainState,
+        train: &Dataset,
+        mask: &[f32],
+        rng: &mut R,
+    ) -> Result<(f64, f64)> {
+        let e = &self.entry;
+        let (b, f, k) = (e.batch, e.features, e.classes);
+        let mut order: Vec<usize> = (0..train.n_samples).collect();
+        rng.shuffle(&mut order);
+        let n_batches = (train.n_samples / b).max(1);
+
+        let mut x = vec![0.0f32; b * f];
+        let mut y = vec![0.0f32; b * k];
+        let mut loss_sum = 0.0;
+        let mut correct = 0.0;
+        let name = format!("{}_train_step", e.preset);
+        for bi in 0..n_batches {
+            x.fill(0.0);
+            y.fill(0.0);
+            for r in 0..b {
+                let i = order[(bi * b + r) % order.len()];
+                x[r * f..(r + 1) * f].copy_from_slice(train.row(i));
+                y[r * k + train.labels[i] as usize] = 1.0;
+            }
+            let shapes = state.params.dims.shapes();
+            let mut inputs = Vec::with_capacity(30);
+            push_params(&mut inputs, &state.params, &shapes);
+            push_params(&mut inputs, &state.m, &shapes);
+            push_params(&mut inputs, &state.v, &shapes);
+            inputs.push(HostArg::Scalar(state.step));
+            let x_dims = [b, f];
+            let y_dims = [b, k];
+            let mask_dims = [f];
+            inputs.push(HostArg::tensor(&x, &x_dims));
+            inputs.push(HostArg::tensor(&y, &y_dims));
+            inputs.push(HostArg::tensor(mask, &mask_dims));
+            inputs.push(HostArg::Scalar(self.cfg.lr as f32));
+            inputs.push(HostArg::Scalar(self.cfg.alpha as f32));
+            let outputs = self.runtime.execute_args(&name, &inputs).context("train_step")?;
+            if outputs.len() != 26 {
+                return Err(anyhow!("train_step returned {} outputs", outputs.len()));
+            }
+            state.absorb(&outputs[..24])?;
+            state.step += 1.0;
+            loss_sum += to_scalar_f32(&outputs[24])? as f64;
+            correct += to_scalar_f32(&outputs[25])? as f64;
+        }
+        Ok((loss_sum / n_batches as f64, correct / (n_batches * b) as f64))
+    }
+
+    /// Test-set accuracy through the eval artifact (padded batches).
+    pub fn evaluate(&self, params: &SaeParams, test: &Dataset) -> Result<f64> {
+        let e = &self.entry;
+        let (be, f, k) = (e.eval_batch, e.features, e.classes);
+        let name = format!("{}_eval", e.preset);
+        let mut x = vec![0.0f32; be * f];
+        let mut y = vec![0.0f32; be * k]; // scratch (fill_batch API)
+        let mut correct = 0.0f64;
+        for bi in 0..test.padded_batches(be) {
+            let real = test.fill_batch(bi, be, &mut x, &mut y);
+            let shapes = params.dims.shapes();
+            let mut inputs = Vec::with_capacity(9);
+            push_params(&mut inputs, params, &shapes);
+            let x_dims = [be, f];
+            inputs.push(HostArg::tensor(&x, &x_dims));
+            let outputs = self.runtime.execute_args(&name, &inputs).context("eval")?;
+            let logits = to_vec_f32(&outputs[0])?;
+            let labels = &test.labels[bi * be..bi * be + real];
+            correct += accuracy_from_logits(&logits, real, k, labels) * real as f64;
+        }
+        Ok(correct / test.n_samples.max(1) as f64)
+    }
+}
+
+/// Mutable optimizer state.
+struct TrainState {
+    params: SaeParams,
+    m: SaeParams,
+    v: SaeParams,
+    step: f32,
+}
+
+impl TrainState {
+    fn new(params: SaeParams) -> Self {
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        Self { params, m, v, step: 0.0 }
+    }
+
+    /// Absorb 24 output literals (params, m, v).
+    fn absorb(&mut self, outputs: &[xla::Literal]) -> Result<()> {
+        let take = |lits: &[xla::Literal]| -> Result<Vec<Vec<f32>>> {
+            lits.iter().map(to_vec_f32).collect()
+        };
+        self.params.set_from(take(&outputs[0..8])?);
+        self.m.set_from(take(&outputs[8..16])?);
+        self.v.set_from(take(&outputs[16..24])?);
+        Ok(())
+    }
+}
+
+fn push_params<'a>(
+    inputs: &mut Vec<HostArg<'a>>,
+    p: &'a SaeParams,
+    shapes: &'a [Vec<usize>; 8],
+) {
+    for (tensor, shape) in p.tensors.iter().zip(shapes.iter()) {
+        inputs.push(HostArg::tensor(tensor, shape));
+    }
+}

@@ -1,0 +1,277 @@
+//! Common dataset container + preprocessing.
+
+use crate::rng::Rng;
+
+/// A labelled dataset. `x` is row-major `(n_samples, n_features)` — the
+/// layout PJRT literals use, so batches upload without transposition.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub n_samples: usize,
+    pub n_features: usize,
+    pub n_classes: usize,
+    /// Ground-truth informative feature indices (known for the simulators;
+    /// used by the feature-selection example to score recovery).
+    pub informative: Vec<usize>,
+}
+
+impl Dataset {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.n_features..(i + 1) * self.n_features]
+    }
+
+    /// One-hot encode labels as f32 `(n_samples, n_classes)` row-major.
+    pub fn one_hot(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n_samples * self.n_classes];
+        for (i, &c) in self.labels.iter().enumerate() {
+            out[i * self.n_classes + c as usize] = 1.0;
+        }
+        out
+    }
+
+    /// Shuffled train/test split (stratification-free; class balance comes
+    /// from the generators being balanced by construction).
+    pub fn split<R: Rng + ?Sized>(&self, test_fraction: f64, rng: &mut R) -> Split {
+        assert!((0.0..1.0).contains(&test_fraction));
+        let mut idx: Vec<usize> = (0..self.n_samples).collect();
+        rng.shuffle(&mut idx);
+        let n_test = ((self.n_samples as f64) * test_fraction).round() as usize;
+        let (test_idx, train_idx) = idx.split_at(n_test);
+        Split {
+            train: self.subset(train_idx),
+            test: self.subset(test_idx),
+        }
+    }
+
+    /// K-fold split; fold `k` of `folds` becomes the test set.
+    pub fn kfold<R: Rng + ?Sized>(&self, folds: usize, k: usize, seed_rng: &mut R) -> Split {
+        assert!(folds >= 2 && k < folds);
+        let mut idx: Vec<usize> = (0..self.n_samples).collect();
+        seed_rng.shuffle(&mut idx);
+        let fold_size = self.n_samples.div_ceil(folds);
+        let lo = k * fold_size;
+        let hi = ((k + 1) * fold_size).min(self.n_samples);
+        let test_idx: Vec<usize> = idx[lo..hi].to_vec();
+        let train_idx: Vec<usize> =
+            idx[..lo].iter().chain(idx[hi..].iter()).copied().collect();
+        Split {
+            train: self.subset(&train_idx),
+            test: self.subset(&test_idx),
+        }
+    }
+
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(indices.len() * self.n_features);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            x.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset {
+            x,
+            labels,
+            n_samples: indices.len(),
+            n_features: self.n_features,
+            n_classes: self.n_classes,
+            informative: self.informative.clone(),
+        }
+    }
+
+    /// Batches of exactly `batch` rows (last partial batch dropped for the
+    /// fixed-shape train artifacts; use [`Dataset::padded_batches`] for
+    /// evaluation where every sample must be scored).
+    pub fn batches(&self, batch: usize) -> Batches {
+        Batches { n_batches: self.n_samples / batch, batch }
+    }
+
+    /// Number of padded batches needed to cover every sample.
+    pub fn padded_batches(&self, batch: usize) -> usize {
+        self.n_samples.div_ceil(batch)
+    }
+
+    /// Copy batch `b` (of size `batch`) into row-major buffers, zero-padding
+    /// past the end. Returns the number of real rows.
+    pub fn fill_batch(
+        &self,
+        b: usize,
+        batch: usize,
+        x_out: &mut [f32],
+        y_out: &mut [f32],
+    ) -> usize {
+        assert_eq!(x_out.len(), batch * self.n_features);
+        assert_eq!(y_out.len(), batch * self.n_classes);
+        x_out.fill(0.0);
+        y_out.fill(0.0);
+        let lo = b * batch;
+        let hi = ((b + 1) * batch).min(self.n_samples);
+        for (r, i) in (lo..hi).enumerate() {
+            x_out[r * self.n_features..(r + 1) * self.n_features]
+                .copy_from_slice(self.row(i));
+            y_out[r * self.n_classes + self.labels[i] as usize] = 1.0;
+        }
+        hi - lo
+    }
+
+    /// Class frequency vector.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut c = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            c[l as usize] += 1;
+        }
+        c
+    }
+}
+
+/// Train/test pair.
+#[derive(Clone, Debug)]
+pub struct Split {
+    pub train: Dataset,
+    pub test: Dataset,
+}
+
+/// Fixed-size batching plan.
+#[derive(Clone, Copy, Debug)]
+pub struct Batches {
+    pub n_batches: usize,
+    pub batch: usize,
+}
+
+/// Per-feature standardisation fitted on train, applied to both splits
+/// (the SAE expects roughly unit-scale inputs).
+#[derive(Clone, Debug)]
+pub struct StandardScaler {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl StandardScaler {
+    pub fn fit(ds: &Dataset) -> Self {
+        let f = ds.n_features;
+        let n = ds.n_samples.max(1) as f64;
+        let mut mean = vec![0.0f64; f];
+        for i in 0..ds.n_samples {
+            for (m, &v) in mean.iter_mut().zip(ds.row(i).iter()) {
+                *m += v as f64;
+            }
+        }
+        for m in &mut mean {
+            *m /= n;
+        }
+        let mut var = vec![0.0f64; f];
+        for i in 0..ds.n_samples {
+            for ((vv, &v), &m) in var.iter_mut().zip(ds.row(i).iter()).zip(mean.iter()) {
+                let d = v as f64 - m;
+                *vv += d * d;
+            }
+        }
+        let std = var
+            .iter()
+            .map(|&v| ((v / n).sqrt().max(1e-8)) as f32)
+            .collect();
+        Self { mean: mean.iter().map(|&m| m as f32).collect(), std }
+    }
+
+    pub fn transform(&self, ds: &mut Dataset) {
+        let f = ds.n_features;
+        for i in 0..ds.n_samples {
+            let row = &mut ds.x[i * f..(i + 1) * f];
+            for ((v, &m), &s) in row.iter_mut().zip(self.mean.iter()).zip(self.std.iter()) {
+                *v = (*v - m) / s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn toy(n: usize, f: usize) -> Dataset {
+        Dataset {
+            x: (0..n * f).map(|i| i as f32).collect(),
+            labels: (0..n).map(|i| (i % 2) as u32).collect(),
+            n_samples: n,
+            n_features: f,
+            n_classes: 2,
+            informative: vec![0, 1],
+        }
+    }
+
+    #[test]
+    fn one_hot_layout() {
+        let ds = toy(3, 2);
+        assert_eq!(ds.one_hot(), vec![1.0, 0.0, 0.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn split_partitions_all_samples() {
+        let ds = toy(100, 4);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let sp = ds.split(0.25, &mut rng);
+        assert_eq!(sp.test.n_samples, 25);
+        assert_eq!(sp.train.n_samples, 75);
+        assert_eq!(sp.train.n_features, 4);
+    }
+
+    #[test]
+    fn kfold_covers_everything_once() {
+        let ds = toy(97, 2);
+        let folds = 4;
+        let mut total_test = 0;
+        for k in 0..folds {
+            // Same shuffle seed per fold => disjoint folds.
+            let mut rng = Xoshiro256pp::seed_from_u64(9);
+            let sp = ds.kfold(folds, k, &mut rng);
+            total_test += sp.test.n_samples;
+            assert_eq!(sp.test.n_samples + sp.train.n_samples, 97);
+        }
+        assert_eq!(total_test, 97);
+    }
+
+    #[test]
+    fn fill_batch_pads_tail() {
+        let ds = toy(5, 2);
+        let mut x = vec![9.0f32; 4 * 2];
+        let mut y = vec![9.0f32; 4 * 2];
+        let real = ds.fill_batch(1, 4, &mut x, &mut y);
+        assert_eq!(real, 1); // only sample 4 remains
+        assert_eq!(&x[0..2], &[8.0, 9.0]); // row 4 data
+        assert_eq!(&x[2..], &[0.0; 6]); // padding
+        assert_eq!(&y[2..], &[0.0; 6]);
+    }
+
+    #[test]
+    fn scaler_zero_mean_unit_std() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut ds = Dataset {
+            x: (0..2000).map(|_| rng.uniform(5.0, 15.0) as f32).collect(),
+            labels: vec![0; 200],
+            n_samples: 200,
+            n_features: 10,
+            n_classes: 2,
+            informative: vec![],
+        };
+        let sc = StandardScaler::fit(&ds);
+        sc.transform(&mut ds);
+        let again = StandardScaler::fit(&ds);
+        for (m, s) in again.mean.iter().zip(again.std.iter()) {
+            assert!(m.abs() < 1e-4, "mean {m}");
+            assert!((s - 1.0).abs() < 1e-3, "std {s}");
+        }
+    }
+
+    #[test]
+    fn batches_counts() {
+        let ds = toy(100, 2);
+        assert_eq!(ds.batches(32).n_batches, 3);
+        assert_eq!(ds.padded_batches(32), 4);
+    }
+
+    #[test]
+    fn class_counts_balanced_toy() {
+        let ds = toy(10, 2);
+        assert_eq!(ds.class_counts(), vec![5, 5]);
+    }
+}

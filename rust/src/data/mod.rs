@@ -1,0 +1,25 @@
+//! Dataset substrates.
+//!
+//! The paper evaluates on (a) two synthetic classification sets produced by
+//! scikit-learn's `make_classification` (1000 samples × 1000 features, 64
+//! and 16 informative features — §V.B) and (b) the HIF2 single-cell CRISPRi
+//! screen (779 cells × 10,000 genes — §V.C.2). Neither sklearn nor the HIF2
+//! data exist in this environment, so both substrates are built here:
+//!
+//! * [`synthetic`] — a faithful Rust port of `make_classification`
+//!   (hypercube class centroids, informative/redundant/noise feature split,
+//!   label flipping);
+//! * [`hif2sim`] — an scRNA-seq simulator (log-normal baseline expression,
+//!   negative-binomial counts, dropout, class-conditional fold changes on a
+//!   small informative gene set), matched to the HIF2 shape;
+//! * [`dataset`] — the common container: row-major sample matrix, labels,
+//!   train/test splits, standardisation, one-hot encoding, padded batching
+//!   (PJRT artifacts have static shapes).
+
+pub mod dataset;
+pub mod hif2sim;
+pub mod synthetic;
+
+pub use dataset::{Batches, Dataset, Split, StandardScaler};
+pub use hif2sim::{hif2_sim, Hif2Config};
+pub use synthetic::{make_classification, MakeClassificationConfig};

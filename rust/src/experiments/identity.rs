@@ -1,0 +1,163 @@
+//! Fig. 3 & Fig. 4 — experimental verification of the ℓ1,∞ identity.
+//!
+//! Fig. 3 (Prop. III.3 / III.5): for both `BP¹,∞` and the exact `P¹,∞`,
+//! `‖Y − P(Y)‖₁,∞ + ‖P(Y)‖₁,∞ = ‖Y‖₁,∞` exactly, for every η — the two
+//! curves coincide with the line `‖Y‖₁,∞`.
+//!
+//! Fig. 4 (Remark V.1): measured with the *mismatched* ℓ2,2 norm the sum
+//! strictly exceeds `‖Y‖₂,₂` (triangle inequality), and the exact
+//! projection has the lower ℓ2,2 error (it IS the Euclidean projection).
+//!
+//! `Y` is the test matrix of the paper's data-64 synthetic dataset,
+//! columns = features, as in §V.B.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::data::{make_classification, MakeClassificationConfig};
+use crate::norms::{frobenius_norm, l1inf_norm};
+use crate::projection::bilevel::bilevel_l1inf;
+use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+use crate::report::{markdown_table, CsvWriter};
+use crate::rng::Xoshiro256pp;
+use crate::tensor::Matrix;
+
+/// Test matrix of data-64 (paper §V.B): 200 held-out samples × 1000
+/// features (columns = features in our column-major Matrix).
+fn test_matrix(quick: bool) -> Matrix<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(64);
+    let cfg = if quick {
+        MakeClassificationConfig {
+            n_samples: 100,
+            n_features: 100,
+            n_informative: 16,
+            ..MakeClassificationConfig::data64()
+        }
+    } else {
+        MakeClassificationConfig::data64()
+    };
+    let ds = make_classification(&cfg, &mut rng);
+    let mut split_rng = Xoshiro256pp::seed_from_u64(65);
+    let split = ds.split(0.2, &mut split_rng);
+    let t = &split.test;
+    Matrix::from_row_major(
+        t.n_samples,
+        t.n_features,
+        &t.x.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+    )
+}
+
+fn eta_grid(total: f64, points: usize) -> Vec<f64> {
+    (1..=points).map(|i| total * i as f64 / points as f64 * 0.45).collect()
+}
+
+pub fn fig3(ctx: &ExpContext) -> Result<()> {
+    let y = test_matrix(ctx.quick);
+    let total = l1inf_norm(&y);
+    let mut csv = CsvWriter::create(
+        "fig3_identity.csv",
+        &["eta", "method", "norm_proj", "norm_resid", "sum", "total", "gap"],
+    )?;
+    let mut max_gap: f64 = 0.0;
+    let mut rows = Vec::new();
+    for eta in eta_grid(total, if ctx.quick { 6 } else { 16 }) {
+        for (name, x) in [
+            ("bilevel", bilevel_l1inf(&y, eta)),
+            ("exact", project_l1inf(&y, eta, L1InfAlgorithm::Ssn)),
+        ] {
+            let np = l1inf_norm(&x);
+            let nr = l1inf_norm(&y.sub(&x));
+            let gap = (np + nr - total).abs();
+            max_gap = max_gap.max(gap / total);
+            csv.row(&[
+                format!("{eta:.4}"),
+                name.into(),
+                format!("{np:.6}"),
+                format!("{nr:.6}"),
+                format!("{:.6}", np + nr),
+                format!("{total:.6}"),
+                format!("{gap:.3e}"),
+            ])?;
+            rows.push(vec![
+                format!("{eta:.2}"),
+                name.to_string(),
+                format!("{:.4}", np + nr),
+                format!("{total:.4}"),
+                format!("{gap:.2e}"),
+            ]);
+        }
+    }
+    println!(
+        "{}",
+        markdown_table(&["eta", "method", "‖P‖+‖Y−P‖ (l1inf)", "‖Y‖ (l1inf)", "gap"], &rows)
+    );
+    println!("fig3: max relative identity gap = {max_gap:.3e} (expected ~1e-12 in f64)");
+    println!("wrote {}", csv.path.display());
+    assert!(max_gap < 1e-9, "identity violated!");
+    Ok(())
+}
+
+pub fn fig4(ctx: &ExpContext) -> Result<()> {
+    let y = test_matrix(ctx.quick);
+    let total_l1inf = l1inf_norm(&y);
+    let total_f = frobenius_norm(&y);
+    let mut csv = CsvWriter::create(
+        "fig4_l22.csv",
+        &["eta", "method", "norm_proj_l22", "resid_l22", "sum_l22", "total_l22"],
+    )?;
+    let mut exact_always_lower = true;
+    for eta in eta_grid(total_l1inf, if ctx.quick { 6 } else { 16 }) {
+        let bp = bilevel_l1inf(&y, eta);
+        let ex = project_l1inf(&y, eta, L1InfAlgorithm::Ssn);
+        let mut resids = Vec::new();
+        for (name, x) in [("bilevel", &bp), ("exact", &ex)] {
+            let np = frobenius_norm(x);
+            let nr = frobenius_norm(&y.sub(x));
+            resids.push(nr);
+            csv.row(&[
+                format!("{eta:.4}"),
+                name.into(),
+                format!("{np:.6}"),
+                format!("{nr:.6}"),
+                format!("{:.6}", np + nr),
+                format!("{total_f:.6}"),
+            ])?;
+            // Triangle inequality in the mismatched norm: sum >= total.
+            assert!(
+                np + nr >= total_f - 1e-9,
+                "l2,2 sum below total: {} < {total_f}",
+                np + nr
+            );
+        }
+        if resids[1] > resids[0] + 1e-9 {
+            exact_always_lower = false;
+        }
+    }
+    println!(
+        "fig4: identity does NOT hold in l2,2 (sum > total, as expected); \
+         exact projection has lower l2,2 error at every eta: {exact_always_lower}"
+    );
+    println!("wrote {}", csv.path.display());
+    assert!(exact_always_lower, "exact projection must minimise l2 error");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_grid_monotone_positive() {
+        let g = eta_grid(100.0, 5);
+        assert_eq!(g.len(), 5);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        assert!(g[0] > 0.0);
+    }
+
+    #[test]
+    fn quick_test_matrix_shape() {
+        let y = test_matrix(true);
+        assert_eq!(y.cols(), 100); // features are columns
+        assert_eq!(y.rows(), 20); // 20% of 100 samples
+    }
+}

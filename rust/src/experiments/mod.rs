@@ -1,0 +1,114 @@
+//! Experiment runners: one per table/figure of the paper (DESIGN.md §4).
+//!
+//! Every runner writes a CSV under `results/` and prints a human-readable
+//! summary (markdown table / ASCII chart). `--quick` shrinks sweeps for CI.
+//!
+//! | id     | paper artifact                                  |
+//! |--------|--------------------------------------------------|
+//! | fig1   | time vs features/samples, BP¹,∞ vs Chu SSN      |
+//! | fig2   | time vs features/samples, three bilevel variants |
+//! | fig3   | the ℓ1,∞ identity (Props. III.3/III.5)          |
+//! | fig4   | the same curves in the ℓ2,2 norm (inequality)   |
+//! | table1 | cumulative sparsity, 4 methods × 2 datasets     |
+//! | fig5   | sparsity vs norm-ratio curves, data-64          |
+//! | fig6   | sparsity vs norm-ratio curves, data-16          |
+//! | fig7   | SAE accuracy vs η, synth-64 & synth-16          |
+//! | table2 | synth-64 best-radius accuracy table             |
+//! | table3 | synth-16 best-radius accuracy table             |
+//! | fig8   | SAE accuracy vs η, HIF2-sim                     |
+//! | table4 | HIF2-sim best-radius accuracy table             |
+//! | fig9   | first-layer weight sparsity pattern             |
+
+mod identity;
+mod sae_sweep;
+mod sparsity;
+mod timing;
+mod weights;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+/// Shared context for experiment runners.
+pub struct ExpContext {
+    /// Shrink sweeps (CI / smoke).
+    pub quick: bool,
+    /// Seeds for multi-seed aggregation.
+    pub seeds: Vec<u64>,
+    /// Artifacts directory (SAE experiments need `make artifacts`).
+    pub artifacts_dir: String,
+    runtime: std::cell::OnceCell<Runtime>,
+}
+
+impl ExpContext {
+    pub fn new(quick: bool, seeds: Vec<u64>, artifacts_dir: String) -> Self {
+        Self { quick, seeds, artifacts_dir, runtime: std::cell::OnceCell::new() }
+    }
+
+    /// Lazily-opened PJRT runtime (only the SAE experiments need it).
+    pub fn runtime(&self) -> Result<&Runtime> {
+        if self.runtime.get().is_none() {
+            let rt = Runtime::open(&self.artifacts_dir)?;
+            let _ = self.runtime.set(rt);
+        }
+        Ok(self.runtime.get().unwrap())
+    }
+}
+
+impl Default for ExpContext {
+    fn default() -> Self {
+        Self::new(false, vec![42, 43, 44, 45], "artifacts".into())
+    }
+}
+
+/// All experiment ids in run order.
+pub const ALL: [&str; 13] = [
+    "fig1", "fig2", "fig3", "fig4", "table1", "fig5", "fig6", "fig7", "table2", "table3",
+    "fig8", "table4", "fig9",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
+    match id {
+        "fig1" => timing::fig1(ctx),
+        "fig2" => timing::fig2(ctx),
+        "fig3" => identity::fig3(ctx),
+        "fig4" => identity::fig4(ctx),
+        "table1" => sparsity::table1(ctx),
+        "fig5" => sparsity::fig5(ctx),
+        "fig6" => sparsity::fig6(ctx),
+        "fig7" => sae_sweep::fig7(ctx),
+        "table2" => sae_sweep::table2(ctx),
+        "table3" => sae_sweep::table3(ctx),
+        "fig8" => sae_sweep::fig8(ctx),
+        "table4" => sae_sweep::table4(ctx),
+        "fig9" => weights::fig9(ctx),
+        "all" => {
+            for id in ALL {
+                println!("\n================ {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        _ => Err(anyhow!("unknown experiment {id:?}; known: {ALL:?} or 'all'")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        let ctx = ExpContext::default();
+        assert!(run("nope", &ctx).is_err());
+    }
+
+    #[test]
+    fn all_ids_distinct() {
+        let mut ids = ALL.to_vec();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), ALL.len());
+    }
+}

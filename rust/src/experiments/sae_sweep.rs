@@ -1,0 +1,324 @@
+//! Fig. 7, Fig. 8, Tables II–IV — SAE classification accuracy vs the
+//! projection radius η, bilevel vs exact ℓ1,∞ vs no-projection baseline.
+//!
+//! Each point trains the double-descent SAE through the PJRT artifacts for
+//! several seeds and reports accuracy ± std (the paper's format). The
+//! tables pick the best radius per method from the sweep and add the
+//! baseline row.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::config::{DatasetKind, TrainConfig};
+use crate::coordinator::run_seeds;
+use crate::projection::ProjectionKind;
+use crate::report::{ascii_chart, markdown_table, CsvWriter};
+
+/// One sweep point result.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub dataset: &'static str,
+    pub method: &'static str,
+    pub eta: f64,
+    pub mean_acc: f64,
+    pub std_acc: f64,
+    pub mean_sparsity: f64,
+}
+
+fn eta_grid(dataset: DatasetKind, quick: bool) -> Vec<f64> {
+    let full: Vec<f64> = match dataset {
+        // Paper Fig. 7: best around 0.5 (exact) / 1-2 (bilevel).
+        DatasetKind::Synth64 | DatasetKind::Synth16 => {
+            vec![0.1, 0.25, 0.5, 1.0, 2.0, 4.0]
+        }
+        // Paper Fig. 8: radii an order smaller (0.1 / 0.25 best).
+        DatasetKind::Hif2 => vec![0.05, 0.1, 0.25, 0.5, 1.0],
+        DatasetKind::Tiny => vec![0.5, 1.0, 2.0],
+    };
+    if quick {
+        full.into_iter().step_by(2).collect()
+    } else {
+        full
+    }
+}
+
+fn base_cfg(dataset: DatasetKind, quick: bool) -> TrainConfig {
+    let (p1, p2) = match (dataset, quick) {
+        (DatasetKind::Hif2, false) => (12, 8),
+        (DatasetKind::Hif2, true) => (3, 2),
+        (_, false) => (15, 10),
+        (_, true) => (4, 3),
+    };
+    TrainConfig {
+        dataset,
+        epochs_phase1: p1,
+        epochs_phase2: p2,
+        lr: 1e-3,
+        alpha: 1.0,
+        ..TrainConfig::default()
+    }
+}
+
+fn seeds(ctx: &ExpContext) -> Vec<u64> {
+    if ctx.quick {
+        ctx.seeds.iter().copied().take(2).collect()
+    } else {
+        ctx.seeds.clone()
+    }
+}
+
+/// Sweep η for both projection methods on one dataset.
+pub fn accuracy_sweep(
+    ctx: &ExpContext,
+    dataset: DatasetKind,
+    ds_label: &'static str,
+) -> Result<Vec<SweepPoint>> {
+    let rt = ctx.runtime()?;
+    let seeds = seeds(ctx);
+    let mut out = Vec::new();
+    for (method, kind) in [
+        ("bilevel-l1inf", ProjectionKind::BilevelL1Inf),
+        ("l1inf", ProjectionKind::ExactL1InfSsn),
+    ] {
+        for &eta in &eta_grid(dataset, ctx.quick) {
+            let cfg = TrainConfig { projection: kind, eta, ..base_cfg(dataset, ctx.quick) };
+            let s = run_seeds(rt, &cfg, &seeds)?;
+            println!(
+                "{ds_label} {method:>13} eta={eta:<5}: acc {:.2} ± {:.2} %, sparsity {:.1} %",
+                s.mean_accuracy, s.std_accuracy, s.mean_sparsity
+            );
+            out.push(SweepPoint {
+                dataset: ds_label,
+                method,
+                eta,
+                mean_acc: s.mean_accuracy,
+                std_acc: s.std_accuracy,
+                mean_sparsity: s.mean_sparsity,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Baseline (no projection) accuracy on one dataset.
+pub fn baseline(ctx: &ExpContext, dataset: DatasetKind) -> Result<(f64, f64)> {
+    let rt = ctx.runtime()?;
+    let cfg = TrainConfig {
+        projection: ProjectionKind::None,
+        ..base_cfg(dataset, ctx.quick)
+    };
+    let s = run_seeds(rt, &cfg, &seeds(ctx))?;
+    Ok((s.mean_accuracy, s.std_accuracy))
+}
+
+fn write_sweep_csv(name: &str, points: &[SweepPoint]) -> Result<std::path::PathBuf> {
+    let mut csv = CsvWriter::create(
+        name,
+        &["dataset", "method", "eta", "mean_acc", "std_acc", "mean_sparsity"],
+    )?;
+    for p in points {
+        csv.row(&[
+            p.dataset.into(),
+            p.method.into(),
+            format!("{:.4}", p.eta),
+            format!("{:.3}", p.mean_acc),
+            format!("{:.3}", p.std_acc),
+            format!("{:.3}", p.mean_sparsity),
+        ])?;
+    }
+    Ok(csv.path)
+}
+
+fn chart(points: &[SweepPoint], ds: &str) -> String {
+    let etas: Vec<f64> = points
+        .iter()
+        .filter(|p| p.method == "bilevel-l1inf" && p.dataset == ds)
+        .map(|p| p.eta)
+        .collect();
+    let bp: Vec<f64> = points
+        .iter()
+        .filter(|p| p.method == "bilevel-l1inf" && p.dataset == ds)
+        .map(|p| p.mean_acc)
+        .collect();
+    let ex: Vec<f64> = points
+        .iter()
+        .filter(|p| p.method == "l1inf" && p.dataset == ds)
+        .map(|p| p.mean_acc)
+        .collect();
+    ascii_chart(
+        &format!("{ds}: accuracy(%) vs eta"),
+        &etas,
+        &[("bilevel", bp), ("exact l1inf", ex)],
+        60,
+        10,
+    )
+}
+
+pub fn fig7(ctx: &ExpContext) -> Result<()> {
+    let mut all = accuracy_sweep(ctx, DatasetKind::Synth64, "synth64")?;
+    all.extend(accuracy_sweep(ctx, DatasetKind::Synth16, "synth16")?);
+    let path = write_sweep_csv("fig7_accuracy_vs_eta.csv", &all)?;
+    println!("{}", chart(&all, "synth64"));
+    println!("{}", chart(&all, "synth16"));
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+pub fn fig8(ctx: &ExpContext) -> Result<()> {
+    let all = accuracy_sweep(ctx, DatasetKind::Hif2, "hif2")?;
+    let path = write_sweep_csv("fig8_hif2_accuracy_vs_eta.csv", &all)?;
+    println!("{}", chart(&all, "hif2"));
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// Load a previous sweep's points for one dataset from its CSV (lets the
+/// tables reuse fig7/fig8 results instead of re-training everything).
+fn load_sweep(csv_name: &str, ds_label: &'static str) -> Option<Vec<SweepPoint>> {
+    let path = crate::report::results_dir().join(csv_name);
+    let (header, rows) = crate::report::read_csv(&path).ok()?;
+    if header != ["dataset", "method", "eta", "mean_acc", "std_acc", "mean_sparsity"] {
+        return None;
+    }
+    let mut out = Vec::new();
+    for r in rows {
+        if r[0] != ds_label {
+            continue;
+        }
+        let method = match r[1].as_str() {
+            "bilevel-l1inf" => "bilevel-l1inf",
+            "l1inf" => "l1inf",
+            _ => continue,
+        };
+        out.push(SweepPoint {
+            dataset: ds_label,
+            method,
+            eta: r[2].parse().ok()?,
+            mean_acc: r[3].parse().ok()?,
+            std_acc: r[4].parse().ok()?,
+            mean_sparsity: r[5].parse().ok()?,
+        });
+    }
+    (!out.is_empty()).then_some(out)
+}
+
+/// Shared table builder (Tables II/III/IV).
+fn accuracy_table(
+    ctx: &ExpContext,
+    dataset: DatasetKind,
+    ds_label: &'static str,
+    csv_name: &str,
+) -> Result<()> {
+    let sweep_csv = if dataset == DatasetKind::Hif2 {
+        "fig8_hif2_accuracy_vs_eta.csv"
+    } else {
+        "fig7_accuracy_vs_eta.csv"
+    };
+    let points = match load_sweep(sweep_csv, ds_label) {
+        Some(p) => {
+            println!("{csv_name}: reusing sweep results from {sweep_csv}");
+            p
+        }
+        None => accuracy_sweep(ctx, dataset, ds_label)?,
+    };
+    let (base_acc, base_std) = baseline(ctx, dataset)?;
+
+    let best = |method: &str| -> &SweepPoint {
+        points
+            .iter()
+            .filter(|p| p.method == method)
+            .max_by(|a, b| a.mean_acc.partial_cmp(&b.mean_acc).unwrap())
+            .expect("sweep produced no points")
+    };
+    let b_ex = best("l1inf");
+    let b_bp = best("bilevel-l1inf");
+
+    let rows = vec![
+        vec![
+            "Best Radius".into(),
+            "-".into(),
+            format!("{}", b_ex.eta),
+            format!("{}", b_bp.eta),
+        ],
+        vec![
+            "Accuracy %".into(),
+            format!("{base_acc:.1} ± {base_std:.1}"),
+            format!("{:.1} ± {:.1}", b_ex.mean_acc, b_ex.std_acc),
+            format!("{:.1} ± {:.1}", b_bp.mean_acc, b_bp.std_acc),
+        ],
+        vec![
+            "Sparsity %".into(),
+            "0".into(),
+            format!("{:.1}", b_ex.mean_sparsity),
+            format!("{:.1}", b_bp.mean_sparsity),
+        ],
+    ];
+    let table = markdown_table(&[ds_label, "Baseline", "l1inf", "bilevel l1inf"], &rows);
+    println!("{table}");
+    crate::report::write_text(&format!("{csv_name}.md"), &table)?;
+
+    let mut csv = CsvWriter::create(
+        csv_name,
+        &["row", "baseline", "l1inf", "bilevel_l1inf"],
+    )?;
+    csv.row(&[
+        "best_radius".into(),
+        "".into(),
+        format!("{}", b_ex.eta),
+        format!("{}", b_bp.eta),
+    ])?;
+    csv.row(&[
+        "mean_acc".into(),
+        format!("{base_acc:.3}"),
+        format!("{:.3}", b_ex.mean_acc),
+        format!("{:.3}", b_bp.mean_acc),
+    ])?;
+    csv.row(&[
+        "std_acc".into(),
+        format!("{base_std:.3}"),
+        format!("{:.3}", b_ex.std_acc),
+        format!("{:.3}", b_bp.std_acc),
+    ])?;
+    println!("wrote {}", csv.path.display());
+    Ok(())
+}
+
+pub fn table2(ctx: &ExpContext) -> Result<()> {
+    accuracy_table(ctx, DatasetKind::Synth64, "synth64", "table2_synth64.csv")
+}
+
+pub fn table3(ctx: &ExpContext) -> Result<()> {
+    accuracy_table(ctx, DatasetKind::Synth16, "synth16", "table3_synth16.csv")
+}
+
+pub fn table4(ctx: &ExpContext) -> Result<()> {
+    accuracy_table(ctx, DatasetKind::Hif2, "hif2", "table4_hif2.csv")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eta_grids_nonempty_and_positive() {
+        for ds in [
+            DatasetKind::Synth64,
+            DatasetKind::Synth16,
+            DatasetKind::Hif2,
+            DatasetKind::Tiny,
+        ] {
+            for quick in [false, true] {
+                let g = eta_grid(ds, quick);
+                assert!(!g.is_empty());
+                assert!(g.iter().all(|&e| e > 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn quick_configs_are_cheaper() {
+        let full = base_cfg(DatasetKind::Synth64, false);
+        let quick = base_cfg(DatasetKind::Synth64, true);
+        assert!(quick.epochs_phase1 < full.epochs_phase1);
+    }
+}

@@ -1,0 +1,202 @@
+//! Table I, Fig. 5, Fig. 6 — structured sparsity of the projections on the
+//! synthetic test matrices.
+//!
+//! Fig. 5/6 plot the column-sparsity of `P(Y)` against the norm ratio
+//! `‖P(Y)‖/‖Y‖` (each method measured in its own norm) as η sweeps the
+//! ball radius, for data-64 / data-16 test matrices.
+//!
+//! Table I's "Cum-Sparsity (%)" aggregates those curves: we compute the
+//! area under the sparsity-vs-ratio curve (trapezoidal, ratio ∈ [0,1]) ×
+//! 100 — the cumulative sparsity retained across the whole regularisation
+//! path. The paper's ordering claim is what must reproduce: bilevel ℓ1,∞ >
+//! bilevel ℓ1,1 ≈ bilevel ℓ1,2 ≫ usual ℓ1,∞, and data-64 > data-16.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::data::{make_classification, MakeClassificationConfig};
+use crate::norms::{column_sparsity, l11_norm, l12_norm, l1inf_norm};
+use crate::projection::bilevel::{bilevel_l11, bilevel_l12, bilevel_l1inf};
+use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+use crate::report::{markdown_table, CsvWriter};
+use crate::rng::Xoshiro256pp;
+use crate::tensor::Matrix;
+
+type Proj = fn(&Matrix<f64>, f64) -> Matrix<f64>;
+type NormFn = fn(&Matrix<f64>) -> f64;
+
+const METHODS: [(&str, Proj, NormFn); 4] = [
+    ("bilevel-l1inf", bilevel_l1inf_proj, l1inf_norm::<f64>),
+    ("bilevel-l11", bilevel_l11_proj, l11_norm::<f64>),
+    ("bilevel-l12", bilevel_l12_proj, l12_norm::<f64>),
+    ("l1inf", exact_proj, l1inf_norm::<f64>),
+];
+
+fn bilevel_l1inf_proj(y: &Matrix<f64>, eta: f64) -> Matrix<f64> {
+    bilevel_l1inf(y, eta)
+}
+fn bilevel_l11_proj(y: &Matrix<f64>, eta: f64) -> Matrix<f64> {
+    bilevel_l11(y, eta)
+}
+fn bilevel_l12_proj(y: &Matrix<f64>, eta: f64) -> Matrix<f64> {
+    bilevel_l12(y, eta)
+}
+fn exact_proj(y: &Matrix<f64>, eta: f64) -> Matrix<f64> {
+    project_l1inf(y, eta, L1InfAlgorithm::Ssn)
+}
+
+/// Test matrix (columns = features) for one synthetic dataset.
+fn test_matrix(informative: usize, quick: bool) -> Matrix<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(1000 + informative as u64);
+    let cfg = MakeClassificationConfig {
+        n_samples: if quick { 200 } else { 1000 },
+        n_features: if quick { 200 } else { 1000 },
+        n_informative: informative,
+        ..MakeClassificationConfig::data64()
+    };
+    let ds = make_classification(&cfg, &mut rng);
+    let mut split_rng = Xoshiro256pp::seed_from_u64(2000);
+    let split = ds.split(0.2, &mut split_rng);
+    let t = &split.test;
+    Matrix::from_row_major(
+        t.n_samples,
+        t.n_features,
+        &t.x.iter().map(|&v| v as f64).collect::<Vec<f64>>(),
+    )
+}
+
+/// One sparsity-vs-ratio curve: returns (ratio, sparsity%) points sorted by
+/// ratio, where ratio = ||P(Y)||/||Y|| in the method's own norm.
+fn curve(
+    y: &Matrix<f64>,
+    proj: Proj,
+    norm: NormFn,
+    points: usize,
+) -> Vec<(f64, f64, f64)> {
+    let total = norm(y);
+    let mut out = Vec::new();
+    for i in 1..=points {
+        // Log-spaced etas cover the interesting low-ratio regime densely.
+        let frac = (i as f64 / points as f64).powi(2);
+        let eta = total * frac;
+        let x = proj(y, eta);
+        let ratio = norm(&x) / total;
+        let sp = column_sparsity(&x, 1e-12) * 100.0;
+        out.push((eta, ratio, sp));
+    }
+    out
+}
+
+/// Trapezoidal area under sparsity(ratio)/100 over ratio in [0, 1], ×100.
+fn cum_sparsity(points: &[(f64, f64, f64)]) -> f64 {
+    // Sort by ratio, prepend (0, 100) (eta=0 ⇒ everything zero), append
+    // (1, s_last≈0).
+    let mut pts: Vec<(f64, f64)> = points.iter().map(|&(_, r, s)| (r, s)).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut area = 0.0;
+    let mut prev = (0.0, 100.0);
+    for &(r, s) in &pts {
+        area += (r - prev.0) * 0.5 * (s + prev.1);
+        prev = (r, s);
+    }
+    if prev.0 < 1.0 {
+        area += (1.0 - prev.0) * 0.5 * prev.1; // decay to 0 at ratio 1
+    }
+    area / 100.0 * 100.0 // normalised percent
+}
+
+fn sparsity_figure(ctx: &ExpContext, informative: usize, csv_name: &str) -> Result<()> {
+    let y = test_matrix(informative, ctx.quick);
+    let points = if ctx.quick { 8 } else { 24 };
+    let mut csv = CsvWriter::create(csv_name, &["method", "eta", "ratio", "sparsity_pct"])?;
+    for (name, proj, norm) in METHODS {
+        for (eta, ratio, sp) in curve(&y, proj, norm, points) {
+            csv.row(&[
+                name.into(),
+                format!("{eta:.5}"),
+                format!("{ratio:.5}"),
+                format!("{sp:.3}"),
+            ])?;
+        }
+        println!("{csv_name}: {name} curve done");
+    }
+    println!("wrote {}", csv.path.display());
+    Ok(())
+}
+
+pub fn fig5(ctx: &ExpContext) -> Result<()> {
+    sparsity_figure(ctx, 64, "fig5_sparsity_data64.csv")
+}
+
+pub fn fig6(ctx: &ExpContext) -> Result<()> {
+    sparsity_figure(ctx, 16, "fig6_sparsity_data16.csv")
+}
+
+pub fn table1(ctx: &ExpContext) -> Result<()> {
+    let points = if ctx.quick { 8 } else { 24 };
+    let mut csv = CsvWriter::create("table1_cum_sparsity.csv", &["dataset", "method", "cum_sparsity_pct"])?;
+    let mut rows = Vec::new();
+    let mut values = std::collections::HashMap::new();
+    for (ds_name, informative) in [("data-64", 64usize), ("data-16", 16usize)] {
+        let y = test_matrix(informative, ctx.quick);
+        let mut row = vec![ds_name.to_string()];
+        for (name, proj, norm) in METHODS {
+            let c = curve(&y, proj, norm, points);
+            let cum = cum_sparsity(&c);
+            csv.row(&[ds_name.into(), name.into(), format!("{cum:.3}")])?;
+            row.push(format!("{cum:.2}"));
+            values.insert((ds_name, name), cum);
+        }
+        rows.push(row);
+    }
+    let table = markdown_table(
+        &["Cum-Sparsity (%)", "bilevel l1inf", "bilevel l11", "bilevel l12", "l1inf"],
+        &rows,
+    );
+    println!("{table}");
+    crate::report::write_text("table1_summary.md", &table)?;
+
+    // The paper's ordering claims (Table I):
+    for ds in ["data-64", "data-16"] {
+        let bp = values[&(ds, "bilevel-l1inf")];
+        let exact = values[&(ds, "l1inf")];
+        println!(
+            "table1 {ds}: bilevel-l1inf {bp:.2}% vs exact l1inf {exact:.2}% => bilevel wins: {}",
+            bp > exact
+        );
+    }
+    println!("wrote {}", csv.path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cum_sparsity_of_step_function() {
+        // sparsity 100% until ratio 0.5, then 0 → area = 0.5*100 + small.
+        let pts = vec![(0.1, 0.5, 100.0), (0.2, 0.5001, 0.0)];
+        let c = cum_sparsity(&pts);
+        assert!((c - 50.0).abs() < 1.0, "{c}");
+    }
+
+    #[test]
+    fn curve_is_monotone_in_eta() {
+        let y = test_matrix(8, true);
+        let c = curve(&y, bilevel_l1inf_proj, l1inf_norm::<f64>, 6);
+        // ratio increases with eta; sparsity decreases.
+        for w in c.windows(2) {
+            assert!(w[1].1 >= w[0].1 - 1e-9, "ratio not monotone");
+            assert!(w[1].2 <= w[0].2 + 1e-9, "sparsity not antitone");
+        }
+    }
+
+    #[test]
+    fn bilevel_beats_exact_in_cum_sparsity_quick() {
+        let y = test_matrix(8, true);
+        let bp = cum_sparsity(&curve(&y, bilevel_l1inf_proj, l1inf_norm::<f64>, 8));
+        let ex = cum_sparsity(&curve(&y, exact_proj, l1inf_norm::<f64>, 8));
+        assert!(bp >= ex, "bilevel {bp} should be >= exact {ex}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Fig. 1 & Fig. 2 — processing time vs matrix size.
+//!
+//! Fig. 1: `BP¹,∞` (ours, O(nm)) against the Chu et al. semismooth-Newton
+//! exact projection (the fastest prior method), sweeping the number of
+//! features (n = 1000 samples fixed) and the number of samples (m = 1000
+//! features fixed), radius η = 1 as in the paper. A linear curve is fitted
+//! to the bi-level timings and an n·log n curve to SSN — the paper's
+//! headline "O(log nm)-times faster" claim is the growing ratio.
+//!
+//! Fig. 2: the three bi-level variants have the same (linear) slope.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::bench::{fit_linear, fit_nlogn, time_fn, BenchConfig};
+use crate::projection::bilevel::{bilevel_l11, bilevel_l12, bilevel_l1inf};
+use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+use crate::report::{ascii_chart, markdown_table, CsvWriter};
+use crate::rng::Xoshiro256pp;
+use crate::tensor::Matrix;
+
+const ETA: f64 = 1.0;
+
+fn sizes(quick: bool) -> Vec<usize> {
+    if quick {
+        vec![250, 500, 1000, 2000]
+    } else {
+        vec![500, 1000, 2000, 4000, 8000, 16000]
+    }
+}
+
+fn bench_cfg(quick: bool) -> BenchConfig {
+    if quick {
+        BenchConfig::quick()
+    } else {
+        BenchConfig::default()
+    }
+}
+
+/// Generate the benchmark matrix for a sweep point. `axis` decides whether
+/// `size` is the feature count (columns) or sample count (rows).
+fn workload(axis: &str, size: usize, seed: u64) -> Matrix<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    match axis {
+        "features" => Matrix::randn(1000, size, &mut rng),
+        "samples" => Matrix::randn(size, 1000, &mut rng),
+        _ => unreachable!(),
+    }
+}
+
+pub fn fig1(ctx: &ExpContext) -> Result<()> {
+    let cfg = bench_cfg(ctx.quick);
+    let mut csv = CsvWriter::create(
+        "fig1_time.csv",
+        &["axis", "size", "bilevel_s", "ssn_s", "ratio"],
+    )?;
+    let mut summary_rows = Vec::new();
+
+    for axis in ["features", "samples"] {
+        let mut xs = Vec::new();
+        let mut t_bp = Vec::new();
+        let mut t_ssn = Vec::new();
+        for &size in &sizes(ctx.quick) {
+            let y = workload(axis, size, 0xF16_1 ^ size as u64);
+            let s_bp = time_fn(&cfg, || bilevel_l1inf(&y, ETA));
+            let s_ssn = time_fn(&cfg, || project_l1inf(&y, ETA, L1InfAlgorithm::Ssn));
+            csv.row(&[
+                axis.into(),
+                size.to_string(),
+                format!("{:.6e}", s_bp.median),
+                format!("{:.6e}", s_ssn.median),
+                format!("{:.3}", s_ssn.median / s_bp.median),
+            ])?;
+            xs.push(size as f64);
+            t_bp.push(s_bp.median);
+            t_ssn.push(s_ssn.median);
+            println!(
+                "fig1 {axis:>8} size {size:>6}: bilevel {:.4} ms, ssn {:.4} ms ({:.1}x)",
+                s_bp.median * 1e3,
+                s_ssn.median * 1e3,
+                s_ssn.median / s_bp.median
+            );
+        }
+        let (a_lin, _, r2_lin) = fit_linear(&xs, &t_bp);
+        let (a_nln, _, r2_nln) = fit_nlogn(&xs, &t_ssn);
+        // Cross-fits: does the WRONG model fit worse? (the paper's point)
+        let (_, _, r2_bp_nlogn) = fit_nlogn(&xs, &t_bp);
+        let (_, _, r2_ssn_lin) = fit_linear(&xs, &t_ssn);
+        summary_rows.push(vec![
+            axis.to_string(),
+            format!("{a_lin:.3e}"),
+            format!("{r2_lin:.5}"),
+            format!("{a_nln:.3e}"),
+            format!("{r2_nln:.5}"),
+            format!("{:.1}", t_ssn.last().unwrap() / t_bp.last().unwrap()),
+        ]);
+        println!(
+            "fig1 {axis}: bilevel linear fit R2={r2_lin:.5} (nlogn R2={r2_bp_nlogn:.5}); \
+             ssn nlogn fit R2={r2_nln:.5} (linear R2={r2_ssn_lin:.5})"
+        );
+        println!(
+            "{}",
+            ascii_chart(
+                &format!("fig1 time vs {axis} (s)"),
+                &xs,
+                &[("bilevel", t_bp.clone()), ("ssn", t_ssn.clone())],
+                60,
+                12,
+            )
+        );
+    }
+    let table = markdown_table(
+        &["axis", "bilevel slope", "R2(lin)", "ssn slope", "R2(nlogn)", "last-size speedup"],
+        &summary_rows,
+    );
+    println!("{table}");
+    crate::report::write_text("fig1_summary.md", &table)?;
+    println!("wrote {}", csv.path.display());
+    Ok(())
+}
+
+pub fn fig2(ctx: &ExpContext) -> Result<()> {
+    let cfg = bench_cfg(ctx.quick);
+    let mut csv = CsvWriter::create(
+        "fig2_bilevel.csv",
+        &["axis", "size", "bp_l1inf_s", "bp_l11_s", "bp_l12_s"],
+    )?;
+    for axis in ["features", "samples"] {
+        let mut xs = Vec::new();
+        let mut series: [Vec<f64>; 3] = [vec![], vec![], vec![]];
+        for &size in &sizes(ctx.quick) {
+            let y = workload(axis, size, 0xF16_2 ^ size as u64);
+            let t = [
+                time_fn(&cfg, || bilevel_l1inf(&y, ETA)).median,
+                time_fn(&cfg, || bilevel_l11(&y, ETA)).median,
+                time_fn(&cfg, || bilevel_l12(&y, ETA)).median,
+            ];
+            csv.row(&[
+                axis.into(),
+                size.to_string(),
+                format!("{:.6e}", t[0]),
+                format!("{:.6e}", t[1]),
+                format!("{:.6e}", t[2]),
+            ])?;
+            xs.push(size as f64);
+            for (s, v) in series.iter_mut().zip(t.iter()) {
+                s.push(*v);
+            }
+            println!(
+                "fig2 {axis:>8} size {size:>6}: l1inf {:.3} ms, l11 {:.3} ms, l12 {:.3} ms",
+                t[0] * 1e3,
+                t[1] * 1e3,
+                t[2] * 1e3
+            );
+        }
+        // All three should fit linear with similar slopes (paper: "same
+        // slopes").
+        for (name, s) in ["bp-l1inf", "bp-l11", "bp-l12"].iter().zip(series.iter()) {
+            let (a, _, r2) = fit_linear(&xs, s);
+            println!("fig2 {axis} {name}: slope {a:.3e}/elem-col, linear R2 = {r2:.5}");
+        }
+    }
+    println!("wrote {}", csv.path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_shapes() {
+        let y = workload("features", 64, 1);
+        assert_eq!((y.rows(), y.cols()), (1000, 64));
+        let y = workload("samples", 64, 1);
+        assert_eq!((y.rows(), y.cols()), (64, 1000));
+    }
+
+    #[test]
+    fn quick_sizes_are_subset_scale() {
+        assert!(sizes(true).len() < sizes(false).len());
+        assert!(sizes(true).iter().all(|&s| s <= 2000));
+    }
+}

@@ -1,0 +1,66 @@
+//! Fig. 9 — first-layer weight matrix of the trained SAE: the bilevel
+//! projection suppresses whole columns (features), not scattered entries.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::config::{DatasetKind, TrainConfig};
+use crate::coordinator::SaeTrainer;
+use crate::projection::ProjectionKind;
+use crate::report::CsvWriter;
+
+pub fn fig9(ctx: &ExpContext) -> Result<()> {
+    let rt = ctx.runtime()?;
+    let dataset = if ctx.quick { DatasetKind::Tiny } else { DatasetKind::Synth64 };
+    let cfg = TrainConfig {
+        dataset,
+        projection: ProjectionKind::BilevelL1Inf,
+        eta: if ctx.quick { 2.0 } else { 2.0 },
+        epochs_phase1: if ctx.quick { 4 } else { 15 },
+        epochs_phase2: if ctx.quick { 3 } else { 10 },
+        ..TrainConfig::default()
+    };
+    let trainer = SaeTrainer::new(rt, cfg)?;
+    let out = trainer.run(ctx.seeds.first().copied().unwrap_or(42))?;
+    let d = out.dims;
+
+    // Per-feature max |W1| — the column heights of the paper's Fig. 9.
+    let mut csv = CsvWriter::create("fig9_w1_feature_norms.csv", &["feature", "inf_norm", "selected"])?;
+    let mut norms = Vec::with_capacity(d.features);
+    for f in 0..d.features {
+        let row = &out.w1[f * d.hidden..(f + 1) * d.hidden];
+        let n = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        norms.push(n);
+        csv.row(&[
+            f.to_string(),
+            format!("{n:.6}"),
+            (out.selected_features.contains(&f) as u8).to_string(),
+        ])?;
+    }
+
+    // Full matrix dump for plotting.
+    let mut wcsv = CsvWriter::create("fig9_w1_matrix.csv", &["feature", "hidden", "weight"])?;
+    for f in 0..d.features {
+        for h in 0..d.hidden {
+            let v = out.w1[f * d.hidden + h];
+            if v != 0.0 {
+                wcsv.row(&[f.to_string(), h.to_string(), format!("{v:.6}")])?;
+            }
+        }
+    }
+
+    // ASCII: column occupancy of the first 100 features.
+    let zero_cols = norms.iter().filter(|&&n| n == 0.0).count();
+    let shown = d.features.min(100);
+    let strip: String = norms[..shown]
+        .iter()
+        .map(|&n| if n == 0.0 { '.' } else { '#' })
+        .collect();
+    println!("fig9: W1 is {}x{}; {} of {} feature columns exactly zero ({:.1}%)",
+        d.features, d.hidden, zero_cols, d.features,
+        100.0 * zero_cols as f64 / d.features as f64);
+    println!("fig9: first {shown} features (# = alive, . = suppressed):\n  {strip}");
+    println!("fig9: selected features: {:?}", &out.selected_features[..out.selected_features.len().min(32)]);
+    println!("wrote {} and {}", csv.path.display(), wcsv.path.display());
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! # bilevel-sparse
+//!
+//! Reproduction of *“A new Linear Time Bi-level ℓ1,∞ projection; Application
+//! to the sparsification of auto-encoders neural networks”* (Barlaud, Perez,
+//! Marmorat, 2024) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the projection library (bi-level projections and
+//!   every exact ℓ1,∞ baseline the paper compares against), dataset
+//!   substrates, the double-descent training coordinator, the PJRT runtime
+//!   that executes AOT-compiled JAX/Pallas artifacts, and the experiment /
+//!   benchmark harness regenerating every table and figure of the paper.
+//! * **L2 (`python/compile/model.py`)** — the supervised autoencoder
+//!   forward/backward + Adam, lowered once to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — Pallas kernels (bi-level
+//!   projection, fused dense-SiLU), `interpret=True`, validated against a
+//!   pure-jnp oracle.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use bilevel_sparse::prelude::*;
+//!
+//! let mut rng = Xoshiro256pp::seed_from_u64(0);
+//! let y = Matrix::<f64>::randn(100, 50, &mut rng);
+//! let x = bilevel_l1inf(&y, 1.0);               // O(nm) bi-level projection
+//! assert!(l1inf_norm(&x) <= 1.0 + 1e-9);
+//! ```
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod metrics;
+pub mod model;
+pub mod norms;
+pub mod projection;
+pub mod proptest;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod scalar;
+pub mod tensor;
+
+/// Convenience re-exports covering the most common entry points.
+pub mod prelude {
+    pub use crate::norms::{l11_norm, l12_norm, l1inf_norm, linf1_norm, frobenius_norm};
+    pub use crate::projection::bilevel::{bilevel_l11, bilevel_l12, bilevel_l1inf};
+    pub use crate::projection::l1::{project_l1, L1Algorithm};
+    pub use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+    pub use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
+    pub use crate::scalar::Scalar;
+    pub use crate::tensor::{Matrix, Vector};
+}

@@ -1,0 +1,166 @@
+//! `bilevel` — the leader binary: CLI over the projection library, the SAE
+//! trainer, and the experiment harness.
+
+use std::process::ExitCode;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use bilevel_sparse::cli::{Args, USAGE};
+use bilevel_sparse::config::{DatasetKind, ProjectionBackend, RunConfig, TrainConfig};
+use bilevel_sparse::coordinator::run_seeds;
+use bilevel_sparse::experiments::{self, ExpContext};
+use bilevel_sparse::norms::{column_sparsity, l1inf_norm};
+use bilevel_sparse::projection::{l1::L1Algorithm, ProjectionKind};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::runtime::Runtime;
+use bilevel_sparse::tensor::Matrix;
+
+fn main() -> ExitCode {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{USAGE}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "project" => cmd_project(&args),
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "help" | "" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n\n{USAGE}")),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn cmd_project(args: &Args) -> Result<()> {
+    let rows = args.usize_or("rows", 1000).map_err(|e| anyhow!(e))?;
+    let cols = args.usize_or("cols", 1000).map_err(|e| anyhow!(e))?;
+    let eta = args.f64_or("eta", 1.0).map_err(|e| anyhow!(e))?;
+    let seed = args.usize_or("seed", 42).map_err(|e| anyhow!(e))? as u64;
+    let method = ProjectionKind::parse(&args.str_or("method", "bilevel-l1inf"))
+        .ok_or_else(|| anyhow!("unknown --method"))?;
+    let algo = L1Algorithm::parse(&args.str_or("algo", "condat"))
+        .ok_or_else(|| anyhow!("unknown --algo"))?;
+    let _ = algo;
+
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let y = Matrix::<f64>::randn(rows, cols, &mut rng);
+    let before = l1inf_norm(&y);
+    let t0 = Instant::now();
+    let x = method.apply(&y, eta);
+    let dt = t0.elapsed();
+    println!("matrix         : {rows} x {cols} (seed {seed})");
+    println!("method         : {}", method.name());
+    println!("eta            : {eta}");
+    println!("||Y||_1inf     : {before:.6}");
+    println!("||P(Y)||_1inf  : {:.6}", l1inf_norm(&x));
+    println!("matched norm   : {:.6} -> {:.6}", method.matched_norm(&y), method.matched_norm(&x));
+    let resid = y.sub(&x);
+    println!(
+        "identity check : ||Y-P||+||P|| = {:.6} vs ||Y|| = {:.6}",
+        method.matched_norm(&resid) + method.matched_norm(&x),
+        method.matched_norm(&y)
+    );
+    println!("column sparsity: {:.2} %", column_sparsity(&x, 1e-12) * 100.0);
+    println!("time           : {:.3} ms", dt.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // Start from a config file when given, CLI flags override.
+    let mut run_cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_file(path).map_err(|e| anyhow!(e))?,
+        None => RunConfig::default(),
+    };
+    let d = run_cfg.train.clone();
+    let cfg = TrainConfig {
+        dataset: DatasetKind::parse(&args.str_or("dataset", d.dataset.name()))
+            .ok_or_else(|| anyhow!("unknown --dataset"))?,
+        projection: ProjectionKind::parse(&args.str_or("projection", d.projection.name()))
+            .ok_or_else(|| anyhow!("unknown --projection"))?,
+        backend: ProjectionBackend::parse(&args.str_or("backend", d.backend.name()))
+            .ok_or_else(|| anyhow!("unknown --backend"))?,
+        eta: args.f64_or("eta", d.eta).map_err(|e| anyhow!(e))?,
+        epochs_phase1: args.usize_or("epochs1", d.epochs_phase1).map_err(|e| anyhow!(e))?,
+        epochs_phase2: args.usize_or("epochs2", d.epochs_phase2).map_err(|e| anyhow!(e))?,
+        lr: args.f64_or("lr", d.lr).map_err(|e| anyhow!(e))?,
+        alpha: args.f64_or("alpha", d.alpha).map_err(|e| anyhow!(e))?,
+        ..d
+    };
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    run_cfg.seeds = args.u64_list_or("seeds", &run_cfg.seeds).map_err(|e| anyhow!(e))?;
+    let dir = args.str_or("artifacts-dir", &run_cfg.artifacts_dir);
+
+    println!(
+        "training SAE: dataset={} projection={} backend={} eta={} epochs={}+{} seeds={:?}",
+        cfg.dataset.name(),
+        cfg.projection.name(),
+        cfg.backend.name(),
+        cfg.eta,
+        cfg.epochs_phase1,
+        cfg.epochs_phase2,
+        run_cfg.seeds
+    );
+    let rt = Runtime::open(&dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let summary = run_seeds(&rt, &cfg, &run_cfg.seeds)?;
+    for o in &summary.outcomes {
+        println!(
+            "  seed {:>4}: accuracy {:.2} % (best {:.2} %), sparsity {:.1} %, {} features, {:.1}s",
+            o.seed,
+            o.final_accuracy * 100.0,
+            o.best_accuracy * 100.0,
+            o.sparsity_percent,
+            o.selected_features.len(),
+            o.train_seconds
+        );
+    }
+    println!(
+        "=> accuracy {:.2} ± {:.2} %   sparsity {:.1} ± {:.1} %",
+        summary.mean_accuracy, summary.std_accuracy, summary.mean_sparsity, summary.std_sparsity
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: bilevel experiment <id> (fig1..fig9, table1..table4, all)"))?;
+    let seeds = args.u64_list_or("seeds", &[42, 43, 44, 45]).map_err(|e| anyhow!(e))?;
+    let ctx = ExpContext::new(
+        args.flag("quick"),
+        seeds,
+        args.str_or("artifacts-dir", "artifacts"),
+    );
+    let t0 = Instant::now();
+    experiments::run(id, &ctx)?;
+    println!("experiment {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let dir = args.str_or("dir", "artifacts");
+    let rt = Runtime::open(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("{} artifacts in {dir}/manifest.txt:", rt.manifest().len());
+    for name in rt.manifest().names() {
+        let e = rt.manifest().get(name).unwrap();
+        println!(
+            "  {name:<22} {:<12} F={:<6} H={:<4} K={} B={}",
+            e.kind, e.features, e.hidden, e.classes, e.batch
+        );
+    }
+    Ok(())
+}

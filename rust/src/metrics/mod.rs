@@ -1,0 +1,123 @@
+//! Evaluation metrics + aggregation across seeds/folds.
+
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// Classification accuracy from logits (row-major `(n, k)`) and labels.
+pub fn accuracy_from_logits(logits: &[f32], n: usize, k: usize, labels: &[u32]) -> f64 {
+    assert!(labels.len() >= n);
+    assert!(logits.len() >= n * k);
+    if n == 0 {
+        return 0.0;
+    }
+    let mut correct = 0usize;
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Confusion matrix `(k, k)` row = true class, col = predicted.
+pub fn confusion(logits: &[f32], n: usize, k: usize, labels: &[u32]) -> Vec<usize> {
+    let mut cm = vec![0usize; k * k];
+    for i in 0..n {
+        let row = &logits[i * k..(i + 1) * k];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        cm[labels[i] as usize * k + best] += 1;
+    }
+    cm
+}
+
+/// Mean and (population) standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    (mean, var.sqrt())
+}
+
+/// The paper's structured "sparsity score": % of all-zero columns.
+pub fn sparsity_percent<T: Scalar>(w: &Matrix<T>, tol: T) -> f64 {
+    crate::norms::column_sparsity(w, tol) * 100.0
+}
+
+/// Feature-selection quality: of the `top_k` features ranked by `score`,
+/// how many are truly informative (precision@k).
+pub fn precision_at_k(scores: &[f64], informative: &[usize], top_k: usize) -> f64 {
+    if top_k == 0 {
+        return 0.0;
+    }
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let hits = idx[..top_k.min(idx.len())]
+        .iter()
+        .filter(|i| informative.contains(i))
+        .count();
+    hits as f64 / top_k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_simple() {
+        // logits: sample0 -> class1, sample1 -> class0
+        let logits = [0.1f32, 0.9, 0.8, 0.2];
+        assert_eq!(accuracy_from_logits(&logits, 2, 2, &[1, 0]), 1.0);
+        assert_eq!(accuracy_from_logits(&logits, 2, 2, &[0, 0]), 0.5);
+    }
+
+    #[test]
+    fn confusion_diagonal_when_perfect() {
+        let logits = [0.9f32, 0.1, 0.1, 0.9];
+        let cm = confusion(&logits, 2, 2, &[0, 1]);
+        assert_eq!(cm, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, s) = mean_std(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((m - 5.0).abs() < 1e-12);
+        assert!((s - 2.0).abs() < 1e-12);
+        assert_eq!(mean_std(&[]), (0.0, 0.0));
+    }
+
+    #[test]
+    fn sparsity_percent_counts_columns() {
+        let mut w = Matrix::<f64>::zeros(3, 4);
+        w.set(0, 1, 1.0);
+        assert_eq!(sparsity_percent(&w, 0.0), 75.0);
+    }
+
+    #[test]
+    fn precision_at_k_ranks() {
+        let scores = [0.9, 0.1, 0.8, 0.05];
+        // top-2 = {0, 2}; informative = {0, 3} -> precision 0.5
+        assert_eq!(precision_at_k(&scores, &[0, 3], 2), 0.5);
+        assert_eq!(precision_at_k(&scores, &[0, 2], 2), 1.0);
+    }
+
+    #[test]
+    fn empty_inputs() {
+        assert_eq!(accuracy_from_logits(&[], 0, 2, &[]), 0.0);
+        assert_eq!(precision_at_k(&[], &[], 0), 0.0);
+    }
+}

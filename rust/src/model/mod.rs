@@ -1,0 +1,221 @@
+//! SAE parameter handling on the Rust side.
+//!
+//! Mirrors `python/compile/model.py` exactly: parameter order
+//! `w1, b1, w2, b2, w3, b3, w4, b4`, shapes from [`SaeDims`]. Weights are
+//! stored row-major (PJRT literal layout); `w1` of shape `(features,
+//! hidden)` reinterprets zero-copy as a **column-major `(hidden,
+//! features)` matrix** whose columns are features — exactly what the
+//! native projection library consumes.
+
+use crate::rng::{Normal, Rng};
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+pub const PARAM_NAMES: [&str; 8] = ["w1", "b1", "w2", "b2", "w3", "b3", "w4", "b4"];
+
+/// Static SAE dimensions (must match the AOT preset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SaeDims {
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+}
+
+impl SaeDims {
+    /// Shapes in PARAM_NAMES order.
+    pub fn shapes(&self) -> [Vec<usize>; 8] {
+        let (f, h, k) = (self.features, self.hidden, self.classes);
+        [
+            vec![f, h],
+            vec![h],
+            vec![h, k],
+            vec![k],
+            vec![k, h],
+            vec![h],
+            vec![h, f],
+            vec![f],
+        ]
+    }
+}
+
+/// Flat parameter set (8 tensors, row-major).
+#[derive(Clone, Debug)]
+pub struct SaeParams {
+    pub dims: SaeDims,
+    pub tensors: Vec<Vec<f32>>,
+}
+
+impl SaeParams {
+    /// He-normal weight init (std = sqrt(2 / fan_in)), zero biases — the
+    /// PyTorch-default-adjacent init the paper's SAE uses.
+    pub fn init<R: Rng + ?Sized>(dims: SaeDims, rng: &mut R) -> Self {
+        let mut normal = Normal::standard();
+        let tensors = dims
+            .shapes()
+            .iter()
+            .map(|shape| {
+                let n: usize = shape.iter().product();
+                if shape.len() == 2 {
+                    let std = (2.0 / shape[0] as f64).sqrt();
+                    (0..n).map(|_| (normal.sample(rng) * std) as f32).collect()
+                } else {
+                    vec![0.0f32; n]
+                }
+            })
+            .collect();
+        Self { dims, tensors }
+    }
+
+    /// All-zero tensors of the same shapes (Adam moment buffers).
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            dims: self.dims,
+            tensors: self.tensors.iter().map(|t| vec![0.0f32; t.len()]).collect(),
+        }
+    }
+
+    /// Replace the 8 tensors from decomposed PJRT outputs (f32 host vecs).
+    pub fn set_from(&mut self, tensors: Vec<Vec<f32>>) {
+        assert_eq!(tensors.len(), 8);
+        for (mine, theirs) in self.tensors.iter_mut().zip(tensors) {
+            assert_eq!(mine.len(), theirs.len(), "param size changed");
+            *mine = theirs;
+        }
+    }
+
+    /// W1 `(features, hidden)` row-major == `(hidden, features)`
+    /// column-major: columns are features. Zero-copy clone of the data.
+    pub fn w1_as_feature_columns(&self) -> Matrix<f32> {
+        let d = self.dims;
+        Matrix::from_col_major(d.hidden, d.features, self.tensors[0].clone())
+    }
+
+    /// Write back a matrix produced by [`Self::w1_as_feature_columns`].
+    pub fn set_w1_from_feature_columns(&mut self, m: Matrix<f32>) {
+        let d = self.dims;
+        assert_eq!((m.rows(), m.cols()), (d.hidden, d.features));
+        self.tensors[0] = m.into_vec();
+    }
+
+    /// Per-feature infinity norms of W1 (feature importance scores).
+    pub fn feature_scores(&self) -> Vec<f64> {
+        let d = self.dims;
+        let w1 = &self.tensors[0];
+        (0..d.features)
+            .map(|f| {
+                w1[f * d.hidden..(f + 1) * d.hidden]
+                    .iter()
+                    .fold(0.0f32, |m, &v| m.max(v.abs())) as f64
+            })
+            .collect()
+    }
+
+    /// Zero the rows of W1 for masked-out features (mask in {0,1}).
+    pub fn apply_feature_mask(&mut self, mask: &[f32]) {
+        let d = self.dims;
+        assert_eq!(mask.len(), d.features);
+        for (f, &m) in mask.iter().enumerate() {
+            if m == 0.0 {
+                self.tensors[0][f * d.hidden..(f + 1) * d.hidden].fill(0.0);
+            }
+        }
+    }
+
+    /// Features currently alive (non-zero W1 row).
+    pub fn alive_features(&self) -> usize {
+        self.feature_scores().iter().filter(|&&s| s > 0.0).count()
+    }
+
+    /// % of features entirely zeroed — the paper's sparsity score.
+    pub fn sparsity_percent(&self) -> f64 {
+        let d = self.dims;
+        100.0 * (d.features - self.alive_features()) as f64 / d.features as f64
+    }
+
+    /// Total parameter count.
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+/// Column mask from projection thresholds: feature stays iff `u_f > tol`.
+pub fn mask_from_thresholds<T: Scalar>(u: &[T], tol: T) -> Vec<f32> {
+    u.iter().map(|&v| if v > tol { 1.0 } else { 0.0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn dims() -> SaeDims {
+        SaeDims { features: 20, hidden: 6, classes: 2 }
+    }
+
+    #[test]
+    fn shapes_match_python_convention() {
+        let s = dims().shapes();
+        assert_eq!(s[0], vec![20, 6]); // w1
+        assert_eq!(s[2], vec![6, 2]); // w2
+        assert_eq!(s[4], vec![2, 6]); // w3
+        assert_eq!(s[6], vec![6, 20]); // w4
+        assert_eq!(s[7], vec![20]); // b4
+    }
+
+    #[test]
+    fn init_scales_with_fan_in() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let p = SaeParams::init(SaeDims { features: 1000, hidden: 100, classes: 2 }, &mut rng);
+        let w1 = &p.tensors[0];
+        let var: f64 =
+            w1.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / w1.len() as f64;
+        assert!((var - 2.0 / 1000.0).abs() < 4e-4, "w1 var {var}");
+        assert!(p.tensors[1].iter().all(|&b| b == 0.0));
+        assert_eq!(p.n_params(), 1000 * 100 + 100 + 100 * 2 + 2 + 2 * 100 + 100 + 100 * 1000 + 1000);
+    }
+
+    #[test]
+    fn w1_feature_columns_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut p = SaeParams::init(dims(), &mut rng);
+        let m = p.w1_as_feature_columns();
+        assert_eq!((m.rows(), m.cols()), (6, 20));
+        // column f == row f of the row-major (F,H) tensor
+        for f in 0..20 {
+            assert_eq!(m.col(f), &p.tensors[0][f * 6..(f + 1) * 6]);
+        }
+        let m2 = m.map(|v| v * 2.0);
+        p.set_w1_from_feature_columns(m2);
+        assert_eq!(p.tensors[0][0], 2.0 * m.col(0)[0]);
+    }
+
+    #[test]
+    fn mask_zeroes_rows_and_scores() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut p = SaeParams::init(dims(), &mut rng);
+        let mut mask = vec![1.0f32; 20];
+        for f in 0..5 {
+            mask[f] = 0.0;
+        }
+        p.apply_feature_mask(&mask);
+        let scores = p.feature_scores();
+        assert!(scores[..5].iter().all(|&s| s == 0.0));
+        assert!(scores[5..].iter().all(|&s| s > 0.0));
+        assert_eq!(p.alive_features(), 15);
+        assert!((p.sparsity_percent() - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mask_from_thresholds_tolerance() {
+        let u = [0.0f64, 1e-12, 0.5];
+        assert_eq!(mask_from_thresholds(&u, 1e-9), vec![0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn set_from_validates_shapes() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let mut p = SaeParams::init(dims(), &mut rng);
+        let clone = p.tensors.clone();
+        p.set_from(clone);
+    }
+}

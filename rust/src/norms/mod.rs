@@ -1,0 +1,146 @@
+//! Matrix norms used throughout the paper.
+//!
+//! Notation follows the paper (§II): for `Y ∈ R^{n×m}` with columns `y_j`,
+//!
+//! * `‖Y‖₁,∞  = Σ_j max_i |Y_ij|`   — eq. (1), the structured-sparsity norm;
+//! * `‖Y‖∞,₁  = max_j Σ_i |Y_ij|`   — eq. (4), its dual;
+//! * `‖Y‖₁,₁  = Σ_j Σ_i |Y_ij|`;
+//! * `‖Y‖₁,₂  = Σ_j ‖y_j‖₂`        — the group-lasso norm;
+//! * `‖Y‖_F   = ‖Y‖₂,₂`.
+//!
+//! The first index is the *outer* (aggregation over columns) norm, the
+//! second the *inner* (within-column) norm.
+
+use crate::scalar::Scalar;
+use crate::tensor::{vec_ops, Matrix};
+
+/// `‖Y‖₁,∞ = Σ_j ‖y_j‖∞` (paper eq. 1).
+pub fn l1inf_norm<T: Scalar>(y: &Matrix<T>) -> T {
+    y.columns().map(vec_ops::linf).sum()
+}
+
+/// `‖Y‖∞,₁ = max_j ‖y_j‖₁` (paper eq. 4, the dual norm).
+pub fn linf1_norm<T: Scalar>(y: &Matrix<T>) -> T {
+    y.columns()
+        .map(vec_ops::l1)
+        .fold(T::ZERO, |acc, v| acc.max_s(v))
+}
+
+/// `‖Y‖₁,₁ = Σ_ij |Y_ij|`.
+pub fn l11_norm<T: Scalar>(y: &Matrix<T>) -> T {
+    y.as_slice().iter().map(|&x| x.abs()).sum()
+}
+
+/// `‖Y‖₁,₂ = Σ_j ‖y_j‖₂` (group-lasso norm).
+pub fn l12_norm<T: Scalar>(y: &Matrix<T>) -> T {
+    y.columns().map(vec_ops::l2).sum()
+}
+
+/// Frobenius norm `‖Y‖₂,₂`.
+pub fn frobenius_norm<T: Scalar>(y: &Matrix<T>) -> T {
+    y.as_slice().iter().map(|&x| x * x).sum::<T>().sqrt()
+}
+
+/// Row vector of column ∞-norms `v_∞ = (‖y₁‖∞, …, ‖y_m‖∞)` (§III.A).
+pub fn column_linf<T: Scalar>(y: &Matrix<T>) -> Vec<T> {
+    y.columns().map(vec_ops::linf).collect()
+}
+
+/// Row vector of column ℓ1 norms `v₁` (§IV.A).
+pub fn column_l1<T: Scalar>(y: &Matrix<T>) -> Vec<T> {
+    y.columns().map(vec_ops::l1).collect()
+}
+
+/// Row vector of column ℓ2 norms `v₂` (§IV.B).
+pub fn column_l2<T: Scalar>(y: &Matrix<T>) -> Vec<T> {
+    y.columns().map(vec_ops::l2).collect()
+}
+
+/// Fraction of all-zero columns (the paper's structured "sparsity score").
+pub fn column_sparsity<T: Scalar>(y: &Matrix<T>, tol: T) -> f64 {
+    if y.cols() == 0 {
+        return 0.0;
+    }
+    y.zero_columns(tol).len() as f64 / y.cols() as f64
+}
+
+/// Fraction of zero entries (unstructured sparsity).
+pub fn entry_sparsity<T: Scalar>(y: &Matrix<T>, tol: T) -> f64 {
+    if y.is_empty() {
+        return 0.0;
+    }
+    y.count_zeros(tol) as f64 / y.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn sample() -> Matrix<f64> {
+        // columns: [1, -2], [0, 0], [3, 4]
+        Matrix::from_row_major(2, 3, &[1.0, 0.0, 3.0, -2.0, 0.0, 4.0])
+    }
+
+    #[test]
+    fn l1inf_is_sum_of_col_maxima() {
+        assert_eq!(l1inf_norm(&sample()), 2.0 + 0.0 + 4.0);
+    }
+
+    #[test]
+    fn linf1_is_max_of_col_sums() {
+        assert_eq!(linf1_norm(&sample()), 7.0);
+    }
+
+    #[test]
+    fn l11_and_l12() {
+        let y = sample();
+        assert_eq!(l11_norm(&y), 10.0);
+        assert_eq!(l12_norm(&y), 5.0f64.sqrt() + 0.0 + 5.0);
+    }
+
+    #[test]
+    fn frobenius() {
+        assert_eq!(frobenius_norm(&sample()), (1.0f64 + 4.0 + 9.0 + 16.0).sqrt());
+    }
+
+    #[test]
+    fn column_norm_vectors() {
+        let y = sample();
+        assert_eq!(column_linf(&y), vec![2.0, 0.0, 4.0]);
+        assert_eq!(column_l1(&y), vec![3.0, 0.0, 7.0]);
+        assert_eq!(column_l2(&y), vec![5.0f64.sqrt(), 0.0, 5.0]);
+    }
+
+    #[test]
+    fn sparsity_scores() {
+        let y = sample();
+        assert!((column_sparsity(&y, 0.0) - 1.0 / 3.0).abs() < 1e-12);
+        assert!((entry_sparsity(&y, 0.0) - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duality_inequality_holds() {
+        // |<X,Y>| <= ||X||_{1,inf} * ||Y||_{inf,1} on random draws.
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        for _ in 0..20 {
+            let x = Matrix::<f64>::randn(8, 5, &mut rng);
+            let y = Matrix::<f64>::randn(8, 5, &mut rng);
+            let inner: f64 = x
+                .as_slice()
+                .iter()
+                .zip(y.as_slice().iter())
+                .map(|(&a, &b)| a * b)
+                .sum();
+            assert!(inner.abs() <= l1inf_norm(&x) * linf1_norm(&y) + 1e-9);
+        }
+    }
+
+    #[test]
+    fn empty_matrix_norms() {
+        let y = Matrix::<f64>::zeros(0, 0);
+        assert_eq!(l1inf_norm(&y), 0.0);
+        assert_eq!(frobenius_norm(&y), 0.0);
+        assert_eq!(column_sparsity(&y, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Multi-threaded `BP¹,∞` for large matrices.
+//!
+//! Both stages parallelize trivially over columns (the only cross-column
+//! coupling is the m-dimensional inner ℓ1 projection, which is cheap):
+//! stage 1 computes column ∞-norms in parallel, the inner projection runs
+//! single-threaded, stage 2 clips columns in parallel. Scoped std threads —
+//! no rayon offline.
+//!
+//! The sequential path is kept for small inputs where thread spawn overhead
+//! dominates (crossover measured in `benches/fig1_time.rs`, see
+//! EXPERIMENTS.md §Perf).
+
+use crate::projection::l1::{self, L1Algorithm};
+use crate::scalar::Scalar;
+use crate::tensor::{vec_ops, Matrix};
+
+use super::BilevelResult;
+
+/// Threading policy for the parallel bi-level projection.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelPolicy {
+    /// Number of worker threads (0 ⇒ `available_parallelism`).
+    pub threads: usize,
+    /// Below this element count, run sequentially.
+    pub min_elems: usize,
+}
+
+impl Default for ParallelPolicy {
+    fn default() -> Self {
+        Self { threads: 0, min_elems: 1 << 16 }
+    }
+}
+
+impl ParallelPolicy {
+    fn effective_threads(&self, work_items: usize) -> usize {
+        let hw = if self.threads > 0 {
+            self.threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        };
+        hw.min(work_items).max(1)
+    }
+}
+
+/// Parallel `BP¹,∞_η(Y)`. Semantically identical to
+/// [`super::bilevel_l1inf_with`]; used by the trainer and the benches for
+/// large matrices.
+pub fn bilevel_l1inf_parallel<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1Algorithm,
+    policy: ParallelPolicy,
+) -> BilevelResult<T> {
+    assert!(eta >= T::ZERO);
+    let (n, m) = (y.rows(), y.cols());
+    if n * m < policy.min_elems || m < 2 {
+        return super::bilevel_l1inf_with(y, eta, algo);
+    }
+    let threads = policy.effective_threads(m);
+
+    // Stage 1: column inf-norms, parallel over column chunks.
+    let mut v = vec![T::ZERO; m];
+    let chunk = m.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, out_chunk) in v.chunks_mut(chunk).enumerate() {
+            let y_ref = &y;
+            s.spawn(move || {
+                let j0 = t * chunk;
+                for (dj, o) in out_chunk.iter_mut().enumerate() {
+                    *o = vec_ops::linf(y_ref.col(j0 + dj));
+                }
+            });
+        }
+    });
+
+    // Inner l1 projection of the norm vector (cheap, sequential).
+    let u = l1::project_l1(&v, eta, algo);
+
+    // Stage 2: clip columns in parallel. Work directly on the column-major
+    // buffer so each worker owns a disjoint contiguous region.
+    let mut x = y.clone();
+    let rows = n;
+    std::thread::scope(|s| {
+        let data = x.as_mut_slice();
+        for (t, cols_chunk) in data.chunks_mut(chunk * rows).enumerate() {
+            let u_ref = &u;
+            s.spawn(move || {
+                let j0 = t * chunk;
+                for (dj, col) in cols_chunk.chunks_mut(rows).enumerate() {
+                    let c = u_ref[j0 + dj];
+                    for val in col.iter_mut() {
+                        *val = val.signum_s() * val.abs().min_s(c);
+                    }
+                }
+            });
+        }
+    });
+
+    BilevelResult { x, thresholds: u }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn matches_sequential() {
+        let mut rng = Xoshiro256pp::seed_from_u64(55);
+        let y = Matrix::<f64>::randn(128, 300, &mut rng);
+        let seq = crate::projection::bilevel::bilevel_l1inf_with(&y, 5.0, L1Algorithm::Condat);
+        let par = bilevel_l1inf_parallel(
+            &y,
+            5.0,
+            L1Algorithm::Condat,
+            ParallelPolicy { threads: 4, min_elems: 0 },
+        );
+        assert!(seq.x.max_abs_diff(&par.x) < 1e-12);
+        assert_eq!(seq.thresholds.len(), par.thresholds.len());
+        for (a, b) in seq.thresholds.iter().zip(par.thresholds.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn small_input_falls_back_to_sequential() {
+        let mut rng = Xoshiro256pp::seed_from_u64(56);
+        let y = Matrix::<f64>::randn(4, 3, &mut rng);
+        let r = bilevel_l1inf_parallel(&y, 1.0, L1Algorithm::Condat, ParallelPolicy::default());
+        let seq = crate::projection::bilevel::bilevel_l1inf_with(&y, 1.0, L1Algorithm::Condat);
+        assert!(r.x.max_abs_diff(&seq.x) < 1e-15);
+    }
+
+    #[test]
+    fn ragged_chunking_covers_all_columns() {
+        // m not divisible by threads exercises the tail chunk.
+        let mut rng = Xoshiro256pp::seed_from_u64(57);
+        let y = Matrix::<f64>::randn(16, 97, &mut rng);
+        let par = bilevel_l1inf_parallel(
+            &y,
+            2.0,
+            L1Algorithm::Condat,
+            ParallelPolicy { threads: 5, min_elems: 0 },
+        );
+        let seq = crate::projection::bilevel::bilevel_l1inf_with(&y, 2.0, L1Algorithm::Condat);
+        assert!(par.x.max_abs_diff(&seq.x) < 1e-12);
+    }
+
+    #[test]
+    fn single_thread_policy() {
+        let mut rng = Xoshiro256pp::seed_from_u64(58);
+        let y = Matrix::<f64>::randn(32, 32, &mut rng);
+        let par = bilevel_l1inf_parallel(
+            &y,
+            1.5,
+            L1Algorithm::Condat,
+            ParallelPolicy { threads: 1, min_elems: 0 },
+        );
+        let seq = crate::projection::bilevel::bilevel_l1inf_with(&y, 1.5, L1Algorithm::Condat);
+        assert!(par.x.max_abs_diff(&seq.x) < 1e-15);
+    }
+}

@@ -1,0 +1,217 @@
+//! Grouped bi-level projection — the paper's §VI extension to tensors and
+//! convolutional layers.
+//!
+//! The matrix `BP¹,∞` treats *columns* as groups. Nothing in Algorithm 1
+//! requires the groups to be columns: for any partition of the entries
+//! into disjoint groups, aggregate each group by its ∞-norm, project the
+//! group-norm vector onto the ℓ1 ball, clip each group at its threshold.
+//! This covers:
+//!
+//! * convolutional kernels `(C_out, C_in, k, k)` grouped by input channel
+//!   → channel pruning (the paper's JPEG-AI application [46]);
+//! * attention matrices grouped by head or by key block (§VI third
+//!   application);
+//! * arbitrary tensor mode-n fibres.
+//!
+//! The identity (Prop. III.3) transfers verbatim: clipping is per-group,
+//! so `Σ_g (max|resid_g|) + Σ_g (max|proj_g|) = Σ_g max|y_g|`.
+
+use crate::projection::l1::{self, L1Algorithm};
+use crate::scalar::Scalar;
+
+/// A partition of `0..len` into contiguous, equally-sized groups.
+/// (Non-contiguous grouping: permute the buffer first — the projection is
+/// permutation-equivariant.)
+#[derive(Clone, Copy, Debug)]
+pub struct GroupSpec {
+    pub group_size: usize,
+    pub n_groups: usize,
+}
+
+impl GroupSpec {
+    pub fn new(group_size: usize, n_groups: usize) -> Self {
+        assert!(group_size > 0, "group_size must be positive");
+        Self { group_size, n_groups }
+    }
+
+    /// Groups = trailing-dim slices of a conv weight `(c_out, c_in, k, k)`
+    /// grouped by input channel: each group collects the `c_out × k × k`
+    /// weights that read channel `c`. Requires the buffer laid out with
+    /// the channel as the leading dimension of each group, i.e.
+    /// `(c_in, c_out*k*k)` — use [`regroup_conv_by_in_channel`] to build it.
+    pub fn conv_in_channels(c_out: usize, c_in: usize, k: usize) -> Self {
+        Self::new(c_out * k * k, c_in)
+    }
+
+    pub fn len(&self) -> usize {
+        self.group_size * self.n_groups
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Result of a grouped bi-level projection.
+#[derive(Clone, Debug)]
+pub struct GroupedResult<T: Scalar> {
+    pub x: Vec<T>,
+    /// Per-group clipping thresholds (0 ⇒ group entirely removed).
+    pub thresholds: Vec<T>,
+}
+
+/// `BP¹,∞` over arbitrary contiguous groups. O(len) + O(n_groups).
+pub fn bilevel_l1inf_grouped<T: Scalar>(
+    y: &[T],
+    spec: GroupSpec,
+    eta: T,
+    algo: L1Algorithm,
+) -> GroupedResult<T> {
+    assert_eq!(y.len(), spec.len(), "buffer does not match the group spec");
+    assert!(eta >= T::ZERO);
+    // Stage 1: per-group inf-norms.
+    let v: Vec<T> = y
+        .chunks_exact(spec.group_size)
+        .map(crate::tensor::vec_ops::linf)
+        .collect();
+    let u = l1::project_l1(&v, eta, algo);
+    // Stage 2: fused clip.
+    let mut x = Vec::with_capacity(y.len());
+    for (g, chunk) in y.chunks_exact(spec.group_size).enumerate() {
+        let c = u[g];
+        if c >= v[g] {
+            x.extend_from_slice(chunk);
+        } else {
+            x.extend(chunk.iter().map(|&e| e.signum_s() * e.abs().min_s(c)));
+        }
+    }
+    GroupedResult { x, thresholds: u }
+}
+
+/// Reorder a conv weight `(c_out, c_in, k, k)` (row-major) so that all
+/// weights reading input channel `c` are contiguous: output layout
+/// `(c_in, c_out, k, k)`. Returns the regrouped buffer.
+pub fn regroup_conv_by_in_channel<T: Scalar>(
+    w: &[T],
+    c_out: usize,
+    c_in: usize,
+    k: usize,
+) -> Vec<T> {
+    assert_eq!(w.len(), c_out * c_in * k * k);
+    let kk = k * k;
+    let mut out = vec![T::ZERO; w.len()];
+    for o in 0..c_out {
+        for c in 0..c_in {
+            let src = (o * c_in + c) * kk;
+            let dst = (c * c_out + o) * kk;
+            out[dst..dst + kk].copy_from_slice(&w[src..src + kk]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`regroup_conv_by_in_channel`].
+pub fn ungroup_conv_by_in_channel<T: Scalar>(
+    g: &[T],
+    c_out: usize,
+    c_in: usize,
+    k: usize,
+) -> Vec<T> {
+    assert_eq!(g.len(), c_out * c_in * k * k);
+    let kk = k * k;
+    let mut out = vec![T::ZERO; g.len()];
+    for c in 0..c_in {
+        for o in 0..c_out {
+            let src = (c * c_out + o) * kk;
+            let dst = (o * c_in + c) * kk;
+            out[dst..dst + kk].copy_from_slice(&g[src..src + kk]);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn grouped_l1inf_norm(y: &[f64], gs: usize) -> f64 {
+        y.chunks_exact(gs).map(crate::tensor::vec_ops::linf).sum()
+    }
+
+    #[test]
+    fn matches_matrix_bilevel_when_groups_are_columns() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let (n, m) = (17, 9);
+        let y = crate::tensor::Matrix::<f64>::randn(n, m, &mut rng);
+        let eta = 2.0;
+        let mat = crate::projection::bilevel::bilevel_l1inf(&y, eta);
+        let grouped = bilevel_l1inf_grouped(
+            y.as_slice(),
+            GroupSpec::new(n, m),
+            eta,
+            L1Algorithm::Condat,
+        );
+        for (a, b) in mat.as_slice().iter().zip(grouped.x.iter()) {
+            assert!((a - b).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn identity_holds_for_arbitrary_groups() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let spec = GroupSpec::new(12, 33);
+        let y: Vec<f64> = (0..spec.len()).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let total = grouped_l1inf_norm(&y, spec.group_size);
+        let eta = total * 0.3;
+        let r = bilevel_l1inf_grouped(&y, spec, eta, L1Algorithm::Condat);
+        let resid: Vec<f64> = y.iter().zip(r.x.iter()).map(|(a, b)| a - b).collect();
+        let lhs = grouped_l1inf_norm(&resid, spec.group_size)
+            + grouped_l1inf_norm(&r.x, spec.group_size);
+        assert!((lhs - total).abs() < 1e-9 * total);
+        // feasibility + tightness
+        assert!((grouped_l1inf_norm(&r.x, spec.group_size) - eta).abs() < 1e-9 * eta);
+    }
+
+    #[test]
+    fn conv_channel_pruning_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let (c_out, c_in, k) = (8, 6, 3);
+        let mut w: Vec<f64> =
+            (0..c_out * c_in * k * k).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        // Boost input-channel 2 so the others get pruned at a tight radius.
+        for o in 0..c_out {
+            let base = (o * c_in + 2) * k * k;
+            for v in &mut w[base..base + k * k] {
+                *v *= 10.0;
+            }
+        }
+        let g = regroup_conv_by_in_channel(&w, c_out, c_in, k);
+        assert_eq!(ungroup_conv_by_in_channel(&g, c_out, c_in, k), w);
+
+        let spec = GroupSpec::conv_in_channels(c_out, c_in, k);
+        let r = bilevel_l1inf_grouped(&g, spec, 0.5, L1Algorithm::Condat);
+        let pruned_channels = r.thresholds.iter().filter(|&&u| u <= 0.0).count();
+        assert!(pruned_channels > 0, "tight radius must prune whole input channels");
+        // every pruned channel is entirely zero after ungrouping
+        let back = ungroup_conv_by_in_channel(&r.x, c_out, c_in, k);
+        for (c, &u) in r.thresholds.iter().enumerate() {
+            if u <= 0.0 {
+                for o in 0..c_out {
+                    let base = (o * c_in + c) * k * k;
+                    assert!(back[base..base + k * k].iter().all(|&v| v == 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_eta_and_inside_ball() {
+        let spec = GroupSpec::new(4, 3);
+        let y = vec![0.5f64; 12];
+        let r = bilevel_l1inf_grouped(&y, spec, 0.0, L1Algorithm::Condat);
+        assert!(r.x.iter().all(|&v| v == 0.0));
+        let r = bilevel_l1inf_grouped(&y, spec, 100.0, L1Algorithm::Condat);
+        assert_eq!(r.x, y);
+    }
+}

@@ -1,0 +1,177 @@
+//! Filtered bucket-clustering threshold (Perez, Barlaud, Fillatre, Régin,
+//! Mathematical Programming 2019 — reference [21] of the paper).
+//!
+//! The waterline `τ` is located by histogramming the candidate values into
+//! `B` equal-width buckets over their range, scanning buckets from the top
+//! while the cumulative waterline stays below the bucket's lower edge, and
+//! recursing into the single bucket that straddles the waterline. Values in
+//! higher buckets contribute only their (sum, count) aggregates; values in
+//! lower buckets are filtered out. Expected O(n) for non-adversarial inputs
+//! (each level shrinks the candidate set geometrically).
+
+use crate::scalar::Scalar;
+
+const BUCKETS: usize = 128;
+/// Below this candidate count, fall back to the exact sort-based threshold.
+const SMALL: usize = 64;
+
+pub fn threshold<T: Scalar>(a: &[T], radius: T) -> T {
+    debug_assert!(!a.is_empty());
+    let mut candidates: Vec<T> = a.iter().map(|&x| x.max_s(T::ZERO)).collect();
+    // (sum, count) of values already known to lie above the waterline.
+    let mut hi_sum = T::ZERO;
+    let mut hi_cnt: usize = 0;
+
+    loop {
+        if candidates.len() <= SMALL {
+            return finish_small(&candidates, hi_sum, hi_cnt, radius);
+        }
+        let (mut lo, mut hi) = (T::INFINITY, T::NEG_INFINITY);
+        for &x in &candidates {
+            lo = lo.min_s(x);
+            hi = hi.max_s(x);
+        }
+        if hi - lo <= T::EPSILON * hi.max_s(T::ONE) {
+            // All candidates (numerically) equal: closed form.
+            let k = T::from_usize(hi_cnt + candidates.len());
+            let tau = (hi_sum + T::from_usize(candidates.len()) * hi - radius) / k;
+            return tau.max_s(T::ZERO);
+        }
+        let width = (hi - lo) / T::from_usize(BUCKETS);
+
+        let mut sums = [T::ZERO; BUCKETS];
+        let mut cnts = [0usize; BUCKETS];
+        for &x in &candidates {
+            let mut b = ((x - lo) / width).to_f64() as usize;
+            if b >= BUCKETS {
+                b = BUCKETS - 1;
+            }
+            sums[b] += x;
+            cnts[b] += 1;
+        }
+
+        // Scan from the top bucket down. `acc_*` aggregates buckets strictly
+        // above the current one.
+        let mut acc_sum = hi_sum;
+        let mut acc_cnt = hi_cnt;
+        let mut target = None;
+        for b in (0..BUCKETS).rev() {
+            if cnts[b] == 0 {
+                continue;
+            }
+            let lower_edge = lo + width * T::from_usize(b);
+            // Waterline if every value >= lower_edge were active:
+            let s = acc_sum + sums[b];
+            let k = acc_cnt + cnts[b];
+            let tau = (s - radius) / T::from_usize(k);
+            if tau < lower_edge {
+                // Waterline below this bucket: all its values are active,
+                // keep descending.
+                acc_sum = s;
+                acc_cnt = k;
+            } else {
+                // Waterline falls inside this bucket: recurse into it.
+                target = Some((b, lower_edge));
+                break;
+            }
+        }
+
+        match target {
+            None => {
+                // Waterline below the lowest non-empty bucket: every
+                // candidate is active.
+                let tau = (acc_sum - radius) / T::from_usize(acc_cnt);
+                return tau.max_s(T::ZERO);
+            }
+            Some((b, lower_edge)) => {
+                let upper_edge = lo + width * T::from_usize(b + 1);
+                // Keep only values inside bucket b as candidates; values
+                // above are aggregated, values below are discarded.
+                hi_sum = acc_sum;
+                hi_cnt = acc_cnt;
+                candidates.retain(|&x| x >= lower_edge && x < upper_edge || {
+                    // top bucket includes its upper edge
+                    b == BUCKETS - 1 && x == upper_edge
+                });
+                if candidates.is_empty() {
+                    // Numerical corner: resolve with what we have.
+                    let tau = (hi_sum - radius) / T::from_usize(hi_cnt.max(1));
+                    return tau.max_s(T::ZERO);
+                }
+            }
+        }
+    }
+}
+
+/// Exact finish: sort the remaining candidates and account for the
+/// aggregated mass above them.
+fn finish_small<T: Scalar>(cands: &[T], hi_sum: T, hi_cnt: usize, radius: T) -> T {
+    let mut s = cands.to_vec();
+    s.sort_by(|x, y| y.partial_cmp(x).expect("NaN in projection input"));
+    let mut cum = hi_sum;
+    let mut best = if hi_cnt > 0 {
+        (cum - radius) / T::from_usize(hi_cnt)
+    } else {
+        T::ZERO
+    };
+    for (k, &v) in s.iter().enumerate() {
+        cum += v;
+        let t = (cum - radius) / T::from_usize(hi_cnt + k + 1);
+        if t < v {
+            best = t;
+        } else {
+            break;
+        }
+    }
+    best.max_s(T::ZERO)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn matches_sort_on_random_inputs() {
+        let mut rng = Xoshiro256pp::seed_from_u64(999);
+        for _ in 0..300 {
+            let n = 1 + rng.next_below(2000) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 100.0)).collect();
+            let total: f64 = a.iter().sum();
+            if total < 1e-9 {
+                continue;
+            }
+            let radius = rng.uniform(total * 0.001, total * 0.9);
+            let want = super::super::sort::threshold(&a, radius);
+            let got = threshold(&a, radius);
+            assert!(
+                (got - want).abs() < 1e-7 * (1.0 + want.abs()),
+                "got {got}, want {want} (n={n})"
+            );
+        }
+    }
+
+    #[test]
+    fn heavy_tail_input() {
+        // One huge value among many tiny ones exercises bucket recursion.
+        let mut a = vec![0.001f64; 5000];
+        a[123] = 1e6;
+        let want = super::super::sort::threshold(&a, 10.0);
+        let got = threshold(&a, 10.0);
+        assert!((got - want).abs() < 1e-6 * (1.0 + want), "got {got}, want {want}");
+    }
+
+    #[test]
+    fn constant_vector_closed_form() {
+        let a = vec![2.0f64; 1000];
+        let got = threshold(&a, 1000.0);
+        assert!((got - 1.0).abs() < 1e-9, "got {got}");
+    }
+
+    #[test]
+    fn small_input_delegates_to_sort() {
+        let a = [5.0f64, 1.0, 0.5];
+        let want = super::super::sort::threshold(&a, 2.0);
+        assert!((threshold(&a, 2.0) - want).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! Condat's O(n)-expected simplex threshold.
+//!
+//! L. Condat, *“Fast projection onto the simplex and the ℓ1 ball”*,
+//! Mathematical Programming 158(1), 2016 — reference [20] of the paper and
+//! the inner solver its C++ extension uses. This is Algorithm 3 of that
+//! paper (“improved filter”): a single online pass maintains a candidate
+//! active set `v` and waterline `ρ = (Σv − η)/|v|`; values that cannot be
+//! active are shunted to a waste list and revisited once; a final
+//! Michelot-style cleanup removes stragglers.
+//!
+//! The default algorithm of the whole repo: `BP¹,∞`'s O(m) inner step.
+
+use crate::scalar::Scalar;
+
+pub fn threshold<T: Scalar>(a: &[T], radius: T) -> T {
+    debug_assert!(!a.is_empty());
+    // Work on the non-negative part; the simplex problem ignores negatives.
+    let mut v: Vec<T> = Vec::with_capacity(a.len().min(64));
+    let mut waste: Vec<T> = Vec::new();
+
+    // Seed with the first non-negative-clamped value.
+    let y0 = a[0].max_s(T::ZERO);
+    v.push(y0);
+    let mut rho = y0 - radius;
+
+    for &raw in &a[1..] {
+        let y = raw.max_s(T::ZERO);
+        if y > rho {
+            // Tentatively admit y.
+            rho += (y - rho) / T::from_usize(v.len() + 1);
+            if rho > y - radius {
+                v.push(y);
+            } else {
+                // Everything collected so far may be inactive; restart the
+                // candidate set from y, park the old candidates for review.
+                waste.append(&mut v);
+                v.push(y);
+                rho = y - radius;
+            }
+        }
+    }
+
+    // Second chance for the waste list.
+    for &y in &waste {
+        if y > rho {
+            v.push(y);
+            rho += (y - rho) / T::from_usize(v.len());
+        }
+    }
+
+    // Michelot-style cleanup: remove candidates at or below the waterline.
+    loop {
+        let before = v.len();
+        let mut i = 0;
+        while i < v.len() {
+            if v[i] <= rho {
+                let y = v.swap_remove(i);
+                if v.is_empty() {
+                    return T::ZERO;
+                }
+                rho += (rho - y) / T::from_usize(v.len());
+            } else {
+                i += 1;
+            }
+        }
+        if v.len() == before {
+            break;
+        }
+    }
+    rho.max_s(T::ZERO)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    #[test]
+    fn matches_sort_threshold_extensively() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31337);
+        for _ in 0..500 {
+            let n = 1 + rng.next_below(256) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 4.0)).collect();
+            let total: f64 = a.iter().sum();
+            if total < 1e-9 {
+                continue;
+            }
+            let radius = rng.uniform(total * 0.01, total * 0.95);
+            let want = super::super::sort::threshold(&a, radius);
+            let got = threshold(&a, radius);
+            assert!(
+                (got - want).abs() < 1e-9 * (1.0 + want.abs()),
+                "got {got}, want {want} (n={n}, radius={radius})"
+            );
+        }
+    }
+
+    #[test]
+    fn adversarial_increasing_sequence() {
+        // Strictly increasing input maximizes candidate-set restarts.
+        let a: Vec<f64> = (1..=1000).map(|i| i as f64 / 10.0).collect();
+        let want = super::super::sort::threshold(&a, 7.0);
+        assert!((threshold(&a, 7.0) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adversarial_decreasing_sequence() {
+        let a: Vec<f64> = (1..=1000).rev().map(|i| i as f64 / 10.0).collect();
+        let want = super::super::sort::threshold(&a, 7.0);
+        assert!((threshold(&a, 7.0) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn handles_zeros_and_duplicates() {
+        let a = [0.0f64, 0.0, 2.0, 2.0, 2.0, 0.0];
+        let want = super::super::sort::threshold(&a, 3.0);
+        assert!((threshold(&a, 3.0) - want).abs() < 1e-12);
+    }
+}

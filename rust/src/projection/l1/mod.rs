@@ -1,0 +1,263 @@
+//! Projection onto the ℓ1 ball `B¹_η = {x : Σ|x_i| ≤ η}`.
+//!
+//! All algorithms reduce to finding the *threshold* `τ ≥ 0` such that
+//! `Σ_i max(|y_i| − τ, 0) = η` (when `‖y‖₁ > η`); the projection is then the
+//! soft-thresholding `x_i = sign(y_i)·max(|y_i| − τ, 0)`.
+//!
+//! Four algorithms are provided (they agree to machine precision; the
+//! benchmark `benches/l1_algorithms.rs` compares them):
+//!
+//! | algorithm | complexity | reference |
+//! |-----------|------------|-----------|
+//! | [`sort`]     | O(n log n)      | Held–Wolfe–Crowder 1974 |
+//! | [`michelot`] | O(n²) worst, fast in practice | Michelot 1986 |
+//! | [`condat`]   | O(n) expected   | Condat, Math. Prog. 158, 2016 [20] |
+//! | [`bucket`]   | O(n) expected   | Perez–Barlaud–Fillatre–Régin 2019 [21] |
+//!
+//! [`L1Algorithm::Condat`] is the default everywhere (it is what the paper's
+//! PyTorch C++ extension uses for the inner step of the bi-level method).
+
+pub mod bucket;
+pub mod condat;
+pub mod michelot;
+pub mod sort;
+
+use crate::scalar::Scalar;
+use crate::tensor::vec_ops;
+
+/// Selector for the ℓ1 threshold algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum L1Algorithm {
+    Sort,
+    Michelot,
+    Condat,
+    Bucket,
+}
+
+impl L1Algorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Sort => "sort",
+            Self::Michelot => "michelot",
+            Self::Condat => "condat",
+            Self::Bucket => "bucket",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "sort" => Some(Self::Sort),
+            "michelot" => Some(Self::Michelot),
+            "condat" => Some(Self::Condat),
+            "bucket" => Some(Self::Bucket),
+            _ => None,
+        }
+    }
+
+    pub fn all() -> &'static [L1Algorithm] {
+        &[Self::Sort, Self::Michelot, Self::Condat, Self::Bucket]
+    }
+}
+
+/// Threshold `τ` of the projection of the *non-negative* vector `a` onto the
+/// simplex-like constraint `Σ max(a_i − τ, 0) = radius`.
+///
+/// Precondition: `Σ a_i > radius` and `radius > 0` (callers handle the
+/// trivial cases). `a` may be in any order; it is not modified.
+pub fn simplex_threshold<T: Scalar>(a: &[T], radius: T, algo: L1Algorithm) -> T {
+    debug_assert!(radius > T::ZERO);
+    match algo {
+        L1Algorithm::Sort => sort::threshold(a, radius),
+        L1Algorithm::Michelot => michelot::threshold(a, radius),
+        L1Algorithm::Condat => condat::threshold(a, radius),
+        L1Algorithm::Bucket => bucket::threshold(a, radius),
+    }
+}
+
+/// Project `y` onto the ℓ1 ball of radius `eta`. Returns a fresh vector.
+pub fn project_l1<T: Scalar>(y: &[T], eta: T, algo: L1Algorithm) -> Vec<T> {
+    let mut out = y.to_vec();
+    project_l1_inplace(&mut out, eta, algo);
+    out
+}
+
+/// In-place ℓ1-ball projection (the hot-path variant).
+pub fn project_l1_inplace<T: Scalar>(y: &mut [T], eta: T, algo: L1Algorithm) {
+    assert!(eta >= T::ZERO, "project_l1: radius must be non-negative");
+    if eta == T::ZERO {
+        y.iter_mut().for_each(|x| *x = T::ZERO);
+        return;
+    }
+    if vec_ops::l1(y) <= eta {
+        return; // already inside the ball
+    }
+    let abs: Vec<T> = y.iter().map(|&x| x.abs()).collect();
+    let tau = simplex_threshold(&abs, eta, algo);
+    soft_threshold_inplace(y, tau);
+}
+
+/// `x_i ← sign(x_i)·max(|x_i| − tau, 0)`.
+pub fn soft_threshold_inplace<T: Scalar>(y: &mut [T], tau: T) {
+    for x in y.iter_mut() {
+        let mag = (x.abs() - tau).pos();
+        *x = x.signum_s() * mag;
+    }
+}
+
+/// Projection onto the probability-simplex-like set `{x ≥ 0, Σx = radius}`
+/// for a non-negative input: `x_i = max(a_i − τ, 0)`.
+pub fn project_simplex<T: Scalar>(a: &[T], radius: T, algo: L1Algorithm) -> Vec<T> {
+    assert!(radius >= T::ZERO);
+    if radius == T::ZERO {
+        return vec![T::ZERO; a.len()];
+    }
+    let total: T = a.iter().fold(T::ZERO, |s, &x| s + x.max_s(T::ZERO));
+    if total <= radius {
+        // Inside: for the l1-ball semantics used by the bi-level methods the
+        // input is returned unchanged (inequality constraint).
+        return a.iter().map(|&x| x.max_s(T::ZERO)).collect();
+    }
+    let tau = simplex_threshold(a, radius, algo);
+    a.iter().map(|&x| (x - tau).pos()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    /// Golden reference: exhaustive sort-based threshold in f64.
+    fn golden_threshold(a: &[f64], radius: f64) -> f64 {
+        let mut s: Vec<f64> = a.iter().map(|&x| x.max(0.0)).collect();
+        s.sort_by(|x, y| y.partial_cmp(x).unwrap());
+        let mut cum = 0.0;
+        let mut tau = 0.0;
+        for (k, &v) in s.iter().enumerate() {
+            cum += v;
+            let t = (cum - radius) / (k + 1) as f64;
+            if t < v {
+                tau = t;
+            } else {
+                break;
+            }
+        }
+        tau.max(0.0)
+    }
+
+    #[test]
+    fn all_algorithms_agree_on_random_vectors() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2024);
+        for trial in 0..200 {
+            let n = 1 + rng.next_below(400) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 10.0)).collect();
+            let total: f64 = a.iter().sum();
+            let radius = rng.uniform(1e-6, total * 0.99);
+            let want = golden_threshold(&a, radius);
+            for algo in L1Algorithm::all() {
+                let got = simplex_threshold(&a, radius, *algo);
+                assert!(
+                    (got - want).abs() < 1e-8 * (1.0 + want),
+                    "trial {trial}: {} gave {got}, golden {want} (n={n}, radius={radius})",
+                    algo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn projection_satisfies_radius_exactly_when_outside() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2025);
+        for _ in 0..100 {
+            let n = 2 + rng.next_below(100) as usize;
+            let y: Vec<f64> = (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect();
+            let eta = 0.25 * crate::tensor::vec_ops::l1(&y);
+            for algo in L1Algorithm::all() {
+                let x = project_l1(&y, eta, *algo);
+                let got: f64 = crate::tensor::vec_ops::l1(&x);
+                assert!((got - eta).abs() < 1e-8 * (1.0 + eta), "{}: {got} != {eta}", algo.name());
+                // sign preservation
+                for (xi, yi) in x.iter().zip(y.iter()) {
+                    assert!(*xi == 0.0 || xi.signum() == yi.signum());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inside_ball_is_identity() {
+        let y = vec![0.1f64, -0.2, 0.3];
+        for algo in L1Algorithm::all() {
+            assert_eq!(project_l1(&y, 1.0, *algo), y);
+        }
+    }
+
+    #[test]
+    fn zero_radius_gives_zero() {
+        let y = vec![1.0f64, -2.0, 3.0];
+        for algo in L1Algorithm::all() {
+            assert_eq!(project_l1(&y, 0.0, *algo), vec![0.0; 3]);
+        }
+    }
+
+    #[test]
+    fn single_element() {
+        for algo in L1Algorithm::all() {
+            assert_eq!(project_l1(&[5.0f64], 2.0, *algo), vec![2.0]);
+            assert_eq!(project_l1(&[-5.0f64], 2.0, *algo), vec![-2.0]);
+            assert_eq!(project_l1(&[1.0f64], 2.0, *algo), vec![1.0]);
+        }
+    }
+
+    #[test]
+    fn ties_are_handled() {
+        // All entries equal: threshold distributes mass evenly.
+        let y = vec![1.0f64; 10];
+        for algo in L1Algorithm::all() {
+            let x = project_l1(&y, 5.0, *algo);
+            for xi in &x {
+                assert!((xi - 0.5).abs() < 1e-12, "{}: {xi}", algo.name());
+            }
+        }
+    }
+
+    #[test]
+    fn optimality_via_variational_inequality() {
+        // x* is the projection iff <y - x*, z - x*> <= 0 for all z in ball.
+        // Spot-check with random feasible z.
+        let mut rng = Xoshiro256pp::seed_from_u64(2026);
+        let y: Vec<f64> = (0..50).map(|_| rng.uniform(-3.0, 3.0)).collect();
+        let eta = 4.0;
+        let x = project_l1(&y, eta, L1Algorithm::Condat);
+        for _ in 0..100 {
+            let mut z: Vec<f64> = (0..50).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            project_l1_inplace(&mut z, eta, L1Algorithm::Sort);
+            let ip: f64 = y
+                .iter()
+                .zip(x.iter())
+                .zip(z.iter())
+                .map(|((&yi, &xi), &zi)| (yi - xi) * (zi - xi))
+                .sum();
+            assert!(ip <= 1e-8, "VI violated: {ip}");
+        }
+    }
+
+    #[test]
+    fn project_simplex_nonnegative_and_sums() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2027);
+        let a: Vec<f64> = (0..30).map(|_| rng.uniform(0.0, 2.0)).collect();
+        let x = project_simplex(&a, 3.0, L1Algorithm::Condat);
+        assert!(x.iter().all(|&v| v >= 0.0));
+        let s: f64 = x.iter().sum();
+        assert!((s - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f32_path_works() {
+        let y = vec![3.0f32, -4.0, 1.0, 0.5];
+        for algo in L1Algorithm::all() {
+            let x = project_l1(&y, 2.0, *algo);
+            let s: f32 = x.iter().map(|v| v.abs()).sum();
+            assert!((s - 2.0).abs() < 1e-4, "{}: sum={s}", algo.name());
+        }
+    }
+}

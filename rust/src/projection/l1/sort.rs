@@ -1,0 +1,60 @@
+//! Sort-based simplex threshold (Held–Wolfe–Crowder 1974).
+//!
+//! Sort magnitudes descending, take the largest `k` such that the implied
+//! waterline `(Σ_{i≤k} s_i − η)/k` stays below `s_k`. O(n log n) — the
+//! classical baseline the linear-time algorithms are measured against.
+
+use crate::scalar::Scalar;
+
+/// Threshold `τ` with `Σ max(a_i − τ, 0) = radius` for non-negative-ish `a`
+/// (negative entries are treated as 0, consistent with the simplex problem).
+pub fn threshold<T: Scalar>(a: &[T], radius: T) -> T {
+    debug_assert!(!a.is_empty());
+    let mut s: Vec<T> = a.iter().map(|&x| x.max_s(T::ZERO)).collect();
+    // Descending sort; NaNs are rejected upstream.
+    s.sort_by(|x, y| y.partial_cmp(x).expect("NaN in projection input"));
+    let mut cum = T::ZERO;
+    let mut tau = T::ZERO;
+    for (k, &v) in s.iter().enumerate() {
+        cum += v;
+        let t = (cum - radius) / T::from_usize(k + 1);
+        if t < v {
+            tau = t;
+        } else {
+            break;
+        }
+    }
+    tau.max_s(T::ZERO)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_small_case() {
+        // a = [3,1], radius 2: waterline tau=1 -> (3-1) + (1-1) = 2.
+        let tau = threshold(&[3.0f64, 1.0], 2.0);
+        assert!((tau - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn radius_larger_than_needed_gives_small_tau() {
+        // a = [2, 2], radius 3: tau = (4-3)/2 = 0.5
+        let tau = threshold(&[2.0f64, 2.0], 3.0);
+        assert!((tau - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn negative_entries_ignored() {
+        let tau = threshold(&[3.0f64, -5.0, 1.0], 2.0);
+        assert!((tau - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn all_mass_in_one_entry() {
+        let tau = threshold(&[10.0f64, 0.1, 0.1], 1.0);
+        // waterline above 0.1: tau = 10 - 1 = 9
+        assert!((tau - 9.0).abs() < 1e-12);
+    }
+}

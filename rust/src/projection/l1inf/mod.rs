@@ -1,0 +1,316 @@
+//! Exact projection onto the ℓ1,∞ ball — the baselines the paper compares
+//! `BP¹,∞` against (§II and §V.A).
+//!
+//! All exact algorithms solve the same KKT system: there is a dual scalar
+//! `θ ≥ 0` (the mass clipped off each active column) and per-column levels
+//! `μ_j ≥ 0` such that
+//!
+//! ```text
+//! Σ_i max(|Y_ij| − μ_j, 0) = θ     for every active column (μ_j > 0),
+//! μ_j = 0                         when ‖y_j‖₁ ≤ θ,
+//! Σ_j μ_j = η,
+//! X_ij = sign(Y_ij)·min(|Y_ij|, μ_j).
+//! ```
+//!
+//! (so the exact projection is *also* a clipping operator — Remark III.4 —
+//! just with a different threshold vector than `BP¹,∞`.)
+//!
+//! `S(θ) = Σ_j μ_j(θ)` is convex, piecewise-linear, strictly decreasing on
+//! the active region, with `S(0) = ‖Y‖₁,∞`; the algorithms differ in how
+//! they find the root of `S(θ) = η`:
+//!
+//! * [`quattoni`] — merge-sort all `nm` breakpoints and sweep
+//!   (O(nm log nm)), Quattoni, Carreras, Collins, Darrell, ICML 2009 [22];
+//! * [`newton`] — per-column sort once, then Newton root search with
+//!   binary-search evaluation (Chau, Wohlberg, Rodriguez, SIIMS 2019 [24]);
+//! * [`ssn`] — semismooth Newton without any pre-sorting, per-column
+//!   active-set evaluation, O(nm) per iteration (Chu, Zhang, Sun, Tao,
+//!   ICML 2020 [25] — the paper's main comparator, its C++ implementation
+//!   ported to Rust);
+//! * [`bisection`] — slow golden reference for the test-suite.
+
+pub mod newton;
+pub mod profile;
+pub mod quattoni;
+pub mod ssn;
+
+use crate::norms::l1inf_norm;
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// Exact-projection algorithm selector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum L1InfAlgorithm {
+    /// Breakpoint merge sweep, O(nm log nm).
+    Quattoni,
+    /// Newton root search over pre-sorted column profiles.
+    Newton,
+    /// Semismooth Newton (Chu et al.), no pre-sort.
+    Ssn,
+    /// Bisection golden reference (tests only; slow).
+    Bisection,
+}
+
+impl L1InfAlgorithm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Quattoni => "quattoni",
+            Self::Newton => "newton",
+            Self::Ssn => "ssn",
+            Self::Bisection => "bisection",
+        }
+    }
+
+    pub fn all() -> &'static [L1InfAlgorithm] {
+        &[Self::Quattoni, Self::Newton, Self::Ssn, Self::Bisection]
+    }
+}
+
+/// Result of an exact ℓ1,∞ projection: the matrix, the per-column clipping
+/// levels `μ`, and the dual scalar `θ`.
+#[derive(Clone, Debug)]
+pub struct L1InfResult<T: Scalar> {
+    pub x: Matrix<T>,
+    pub mu: Vec<T>,
+    pub theta: T,
+}
+
+/// Project `y` onto `{X : ‖X‖₁,∞ ≤ eta}` exactly.
+pub fn project_l1inf_with<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1InfAlgorithm,
+) -> L1InfResult<T> {
+    assert!(eta >= T::ZERO, "project_l1inf: radius must be non-negative");
+    let m = y.cols();
+    if eta == T::ZERO {
+        return L1InfResult {
+            x: Matrix::zeros(y.rows(), m),
+            mu: vec![T::ZERO; m],
+            theta: T::INFINITY,
+        };
+    }
+    if l1inf_norm(y) <= eta {
+        let mu = crate::norms::column_linf(y);
+        return L1InfResult { x: y.clone(), mu, theta: T::ZERO };
+    }
+    let (mu, theta) = match algo {
+        L1InfAlgorithm::Quattoni => quattoni::solve(y, eta),
+        L1InfAlgorithm::Newton => newton::solve(y, eta),
+        L1InfAlgorithm::Ssn => ssn::solve(y, eta),
+        L1InfAlgorithm::Bisection => bisection_solve(y, eta),
+    };
+    let x = apply_clip(y, &mu);
+    L1InfResult { x, mu, theta }
+}
+
+/// Convenience wrapper returning only the projected matrix.
+pub fn project_l1inf<T: Scalar>(y: &Matrix<T>, eta: T, algo: L1InfAlgorithm) -> Matrix<T> {
+    project_l1inf_with(y, eta, algo).x
+}
+
+/// `X_ij = sign(Y_ij) · min(|Y_ij|, μ_j)` — the clipping operator shared by
+/// every exact algorithm (and by `BP¹,∞`).
+pub fn apply_clip<T: Scalar>(y: &Matrix<T>, mu: &[T]) -> Matrix<T> {
+    assert_eq!(mu.len(), y.cols());
+    let mut x = y.clone();
+    for (j, &c) in mu.iter().enumerate() {
+        crate::projection::linf::project_linf_inplace(x.col_mut(j), c.max_s(T::ZERO));
+    }
+    x
+}
+
+/// Golden reference: bisection on `θ` using exact per-column profiles.
+fn bisection_solve<T: Scalar>(y: &Matrix<T>, eta: T) -> (Vec<T>, T) {
+    let profiles: Vec<profile::ColumnProfile<T>> =
+        y.columns().map(profile::ColumnProfile::new).collect();
+    let mut lo = T::ZERO; // S(lo) = ||Y||_{1,inf} > eta
+    let mut hi = profiles
+        .iter()
+        .map(|p| p.total())
+        .fold(T::ZERO, |a, b| a.max_s(b)); // S(hi) = 0 <= eta
+    for _ in 0..200 {
+        let mid = (lo + hi) / (T::ONE + T::ONE);
+        let s: T = profiles.iter().map(|p| p.mu_at(mid).0).sum();
+        if s > eta {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if hi - lo <= T::EPSILON * hi.max_s(T::ONE) {
+            break;
+        }
+    }
+    let theta = (lo + hi) / (T::ONE + T::ONE);
+    let mu = profiles.iter().map(|p| p.mu_at(theta).0).collect();
+    (mu, theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn randmat(n: usize, m: usize, seed: u64) -> Matrix<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        Matrix::randn(n, m, &mut rng)
+    }
+
+    #[test]
+    fn all_algorithms_agree_with_bisection() {
+        for seed in 0..20 {
+            let n = 3 + (seed as usize % 20);
+            let m = 2 + (seed as usize % 15);
+            let y = randmat(n, m, 400 + seed);
+            let eta = l1inf_norm(&y) * 0.3;
+            let golden = project_l1inf_with(&y, eta, L1InfAlgorithm::Bisection);
+            for algo in [L1InfAlgorithm::Quattoni, L1InfAlgorithm::Newton, L1InfAlgorithm::Ssn] {
+                let r = project_l1inf_with(&y, eta, algo);
+                assert!(
+                    golden.x.max_abs_diff(&r.x) < 1e-6,
+                    "{} disagrees with bisection (seed {seed}): diff={}",
+                    algo.name(),
+                    golden.x.max_abs_diff(&r.x)
+                );
+                assert!((r.theta - golden.theta).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn feasibility_is_tight() {
+        let y = randmat(40, 25, 500);
+        let eta = l1inf_norm(&y) * 0.25;
+        for algo in L1InfAlgorithm::all() {
+            let x = project_l1inf(&y, eta, *algo);
+            let norm = l1inf_norm(&x);
+            assert!(
+                (norm - eta).abs() < 1e-7 * (1.0 + eta),
+                "{}: ||x||={norm} vs eta={eta}",
+                algo.name()
+            );
+        }
+    }
+
+    #[test]
+    fn identity_proposition_iii_5() {
+        // The usual projection also satisfies the l1,inf identity (19).
+        for seed in 0..10 {
+            let y = randmat(12, 9, 600 + seed);
+            let eta = l1inf_norm(&y) * 0.4;
+            let x = project_l1inf(&y, eta, L1InfAlgorithm::Quattoni);
+            let lhs = l1inf_norm(&y.sub(&x)) + l1inf_norm(&x);
+            let rhs = l1inf_norm(&y);
+            assert!((lhs - rhs).abs() < 1e-8, "identity (19) violated: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn exact_has_lower_l2_error_than_bilevel() {
+        // P is THE Euclidean projection; BP is not. (Fig. 4 of the paper.)
+        let y = randmat(30, 30, 700);
+        let eta = l1inf_norm(&y) * 0.2;
+        let xp = project_l1inf(&y, eta, L1InfAlgorithm::Newton);
+        let xbp = crate::projection::bilevel::bilevel_l1inf(&y, eta);
+        let ep = frobenius_norm(&y.sub(&xp));
+        let ebp = frobenius_norm(&y.sub(&xbp));
+        assert!(ep <= ebp + 1e-9, "exact {ep} should beat bilevel {ebp} in l2");
+    }
+
+    #[test]
+    fn bilevel_is_sparser_than_exact() {
+        // The headline sparsity claim (Table I): same radius, more zero
+        // columns from the bi-level projection.
+        let mut rng = Xoshiro256pp::seed_from_u64(800);
+        let mut y = Matrix::<f64>::randn(50, 40, &mut rng);
+        for j in 0..6 {
+            for v in y.col_mut(j) {
+                *v *= 20.0;
+            }
+        }
+        let eta = l1inf_norm(&y) * 0.05;
+        let xp = project_l1inf(&y, eta, L1InfAlgorithm::Ssn);
+        let xbp = crate::projection::bilevel::bilevel_l1inf(&y, eta);
+        let sp = xp.zero_columns(1e-12).len();
+        let sbp = xbp.zero_columns(1e-12).len();
+        assert!(
+            sbp >= sp,
+            "bilevel zero-cols {sbp} should be >= exact zero-cols {sp}"
+        );
+    }
+
+    #[test]
+    fn inside_ball_identity_and_theta_zero() {
+        let y = randmat(6, 6, 900);
+        let eta = l1inf_norm(&y) * 1.5;
+        for algo in L1InfAlgorithm::all() {
+            let r = project_l1inf_with(&y, eta, *algo);
+            assert!(y.max_abs_diff(&r.x) < 1e-15, "{}", algo.name());
+            assert_eq!(r.theta, 0.0);
+        }
+    }
+
+    #[test]
+    fn zero_radius() {
+        let y = randmat(4, 4, 901);
+        for algo in L1InfAlgorithm::all() {
+            let r = project_l1inf_with(&y, 0.0, *algo);
+            assert_eq!(r.x.count_zeros(0.0), 16);
+        }
+    }
+
+    #[test]
+    fn optimality_euclidean_vi() {
+        // Variational inequality: <Y - X*, Z - X*> <= 0 for feasible Z.
+        let mut rng = Xoshiro256pp::seed_from_u64(902);
+        let y = randmat(10, 8, 903);
+        let eta = 3.0;
+        let x = project_l1inf(&y, eta, L1InfAlgorithm::Newton);
+        for _ in 0..50 {
+            let z0 = Matrix::<f64>::randn(10, 8, &mut rng);
+            let z = project_l1inf(&z0, eta, L1InfAlgorithm::Bisection);
+            let ip: f64 = y
+                .as_slice()
+                .iter()
+                .zip(x.as_slice().iter())
+                .zip(z.as_slice().iter())
+                .map(|((&yi, &xi), &zi)| (yi - xi) * (zi - xi))
+                .sum();
+            assert!(ip <= 1e-6, "VI violated: {ip}");
+        }
+    }
+
+    #[test]
+    fn columns_with_zeros_handled() {
+        let mut y = randmat(10, 6, 904);
+        for v in y.col_mut(2) {
+            *v = 0.0;
+        }
+        let eta = l1inf_norm(&y) * 0.3;
+        for algo in L1InfAlgorithm::all() {
+            let r = project_l1inf_with(&y, eta, *algo);
+            assert!(r.x.col(2).iter().all(|&v| v == 0.0), "{}", algo.name());
+        }
+    }
+
+    #[test]
+    fn wide_and_tall_extremes() {
+        for (n, m, seed) in [(1usize, 50usize, 905u64), (50, 1, 906), (1, 1, 907)] {
+            let y = randmat(n, m, seed);
+            let eta = l1inf_norm(&y) * 0.5;
+            if eta == 0.0 {
+                continue;
+            }
+            let golden = project_l1inf(&y, eta, L1InfAlgorithm::Bisection);
+            for algo in [L1InfAlgorithm::Quattoni, L1InfAlgorithm::Newton, L1InfAlgorithm::Ssn] {
+                let x = project_l1inf(&y, eta, algo);
+                assert!(
+                    golden.max_abs_diff(&x) < 1e-6,
+                    "{} fails on {n}x{m}",
+                    algo.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Per-column piecewise-linear profile `θ ↦ μ_j(θ)`.
+//!
+//! For a column with magnitudes sorted descending `s₀ ≥ s₁ ≥ … ≥ s_{n−1}`
+//! and prefix sums `C_k = Σ_{i<k} s_i`, the clipped-mass function
+//! `r(μ) = Σ_i max(s_i − μ, 0)` is piecewise linear decreasing; its inverse
+//! `μ(θ)` satisfies, for `θ ∈ [θ_k, θ_{k+1}]` with breakpoints
+//! `θ_k = C_k − k·s_k`:
+//!
+//! ```text
+//! μ(θ) = (C_{k+1} − θ) / (k+1)      (k+1 entries above the level)
+//! μ(θ) = 0                          for θ ≥ C_n = ‖column‖₁
+//! ```
+//!
+//! Shared by the Newton and bisection solvers; Quattoni's sweep consumes the
+//! breakpoints directly.
+
+use crate::scalar::Scalar;
+
+#[derive(Clone, Debug)]
+pub struct ColumnProfile<T: Scalar> {
+    /// Magnitudes sorted descending.
+    pub sorted: Vec<T>,
+    /// `prefix[k] = Σ_{i<k} sorted[i]`, length n+1.
+    pub prefix: Vec<T>,
+}
+
+impl<T: Scalar> ColumnProfile<T> {
+    pub fn new(col: &[T]) -> Self {
+        let mut sorted: Vec<T> = col.iter().map(|&x| x.abs()).collect();
+        sorted.sort_by(|a, b| b.partial_cmp(a).expect("NaN in projection input"));
+        let mut prefix = Vec::with_capacity(sorted.len() + 1);
+        let mut acc = T::ZERO;
+        prefix.push(acc);
+        for &s in &sorted {
+            acc += s;
+            prefix.push(acc);
+        }
+        Self { sorted, prefix }
+    }
+
+    /// `‖column‖₁` — the θ beyond which the column is fully clipped to 0.
+    #[inline]
+    pub fn total(&self) -> T {
+        *self.prefix.last().unwrap()
+    }
+
+    /// `‖column‖∞`.
+    #[inline]
+    pub fn max(&self) -> T {
+        self.sorted.first().copied().unwrap_or(T::ZERO)
+    }
+
+    /// Breakpoint `θ_k = C_k − k·s_k` for `k` in `0..n`.
+    #[inline]
+    pub fn breakpoint(&self, k: usize) -> T {
+        self.prefix[k] - T::from_usize(k) * self.sorted[k]
+    }
+
+    /// Evaluate `(μ(θ), active_count)`; `active_count = 0` when the column
+    /// is fully clipped (μ = 0, dead for the Newton derivative).
+    pub fn mu_at(&self, theta: T) -> (T, usize) {
+        let n = self.sorted.len();
+        if n == 0 || theta >= self.total() {
+            return (T::ZERO, 0);
+        }
+        if theta <= T::ZERO {
+            return (self.max(), 1.max(n.min(1)));
+        }
+        // Binary search: largest k in 0..n with breakpoint(k) <= theta.
+        // (breakpoints are non-decreasing in k; breakpoint(0) = 0.)
+        let (mut lo, mut hi) = (0usize, n - 1);
+        while lo < hi {
+            let mid = (lo + hi + 1) / 2;
+            if self.breakpoint(mid) <= theta {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        let k = lo; // piece with k+1 active entries
+        let cnt = k + 1;
+        let mu = (self.prefix[cnt] - theta) / T::from_usize(cnt);
+        (mu.max_s(T::ZERO), cnt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn brute_mu(col: &[f64], theta: f64) -> f64 {
+        // invert r(mu) = theta by dense scan over a fine grid + refine.
+        let hi = col.iter().fold(0.0f64, |a, &b| a.max(b.abs()));
+        let r = |mu: f64| -> f64 { col.iter().map(|&x| (x.abs() - mu).max(0.0)).sum() };
+        if theta >= r(0.0) {
+            return 0.0;
+        }
+        let (mut lo, mut hi) = (0.0, hi);
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            if r(mid) > theta {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        0.5 * (lo + hi)
+    }
+
+    #[test]
+    fn mu_matches_brute_force() {
+        let col = [3.0f64, -1.0, 2.0, 0.5, -2.5];
+        let p = ColumnProfile::new(&col);
+        for theta in [0.0, 0.1, 0.5, 1.0, 2.0, 4.0, 8.0, 8.9, 9.0, 20.0] {
+            let (mu, _) = p.mu_at(theta);
+            let want = brute_mu(&col, theta);
+            assert!((mu - want).abs() < 1e-9, "theta={theta}: mu={mu}, want={want}");
+        }
+    }
+
+    #[test]
+    fn breakpoints_non_decreasing() {
+        let col = [5.0f64, 4.0, 4.0, 1.0, 0.0];
+        let p = ColumnProfile::new(&col);
+        for k in 1..col.len() {
+            assert!(p.breakpoint(k) >= p.breakpoint(k - 1) - 1e-15);
+        }
+        assert_eq!(p.breakpoint(0), 0.0);
+    }
+
+    #[test]
+    fn total_and_max() {
+        let p = ColumnProfile::new(&[1.0f64, -2.0, 3.0]);
+        assert_eq!(p.total(), 6.0);
+        assert_eq!(p.max(), 3.0);
+    }
+
+    #[test]
+    fn dead_column_beyond_total() {
+        let p = ColumnProfile::new(&[1.0f64, 1.0]);
+        let (mu, cnt) = p.mu_at(2.0);
+        assert_eq!(mu, 0.0);
+        assert_eq!(cnt, 0);
+        let (mu, cnt) = p.mu_at(5.0);
+        assert_eq!(mu, 0.0);
+        assert_eq!(cnt, 0);
+    }
+
+    #[test]
+    fn zero_theta_returns_max() {
+        let p = ColumnProfile::new(&[1.0f64, 7.0, 3.0]);
+        assert_eq!(p.mu_at(0.0).0, 7.0);
+    }
+
+    #[test]
+    fn empty_column() {
+        let p = ColumnProfile::new(&[]);
+        assert_eq!(p.mu_at(1.0), (0.0, 0));
+        assert_eq!(p.total(), 0.0);
+    }
+
+    #[test]
+    fn mu_continuity_at_breakpoints() {
+        let col = [4.0f64, 3.0, 2.0, 1.0];
+        let p = ColumnProfile::new(&col);
+        for k in 1..col.len() {
+            let t = p.breakpoint(k);
+            let (lo, _) = p.mu_at(t - 1e-9);
+            let (hi, _) = p.mu_at(t + 1e-9);
+            assert!((lo - hi).abs() < 1e-6, "discontinuity at breakpoint {k}");
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Quattoni et al. (ICML 2009) exact ℓ1,∞ projection: global breakpoint
+//! merge + linear sweep. Worst-case **O(nm log nm)** — the complexity the
+//! paper's abstract quotes for the state of the art.
+//!
+//! `S(θ) = Σ_j μ_j(θ)` is piecewise linear with at most `nm + m`
+//! breakpoints (each column contributes one per sorted entry plus a death
+//! point at `θ = ‖y_j‖₁`). Between breakpoints `S(θ) = A − B·θ`; we sort
+//! all breakpoints, sweep left→right maintaining `(A, B)`, and stop in the
+//! segment containing the root `S(θ*) = η`.
+
+use super::profile::ColumnProfile;
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// Solve for `(μ, θ)` with `Σ_j μ_j(θ) = eta`.
+/// Precondition (enforced by the dispatcher): `0 < eta < ‖Y‖₁,∞`.
+pub fn solve<T: Scalar>(y: &Matrix<T>, eta: T) -> (Vec<T>, T) {
+    let profiles: Vec<ColumnProfile<T>> = y.columns().map(ColumnProfile::new).collect();
+
+    // Event = (θ, ΔA, ΔB) applied when the sweep passes θ.
+    let mut events: Vec<(T, T, T)> = Vec::with_capacity(y.rows() * y.cols() + y.cols());
+    let mut a = T::ZERO; // A = Σ_j C_{k+1}/(k+1) over alive columns
+    let mut b = T::ZERO; // B = Σ_j 1/(k+1)
+
+    for p in &profiles {
+        let n = p.sorted.len();
+        if n == 0 || p.max() <= T::ZERO {
+            continue; // zero column never contributes
+        }
+        // Piece k=0 active from θ=0: μ = C₁ − θ.
+        a += p.prefix[1];
+        b += T::ONE;
+        // Piece transitions k−1 → k at θ_k, k = 1..n−1.
+        for k in 1..n {
+            let theta_k = p.breakpoint(k);
+            let prev = p.prefix[k] / T::from_usize(k);
+            let next = p.prefix[k + 1] / T::from_usize(k + 1);
+            let db = T::ONE / T::from_usize(k + 1) - T::ONE / T::from_usize(k);
+            events.push((theta_k, next - prev, db));
+        }
+        // Death at θ = ‖column‖₁ (from piece k = n−1).
+        let last_a = p.prefix[n] / T::from_usize(n);
+        let last_b = T::ONE / T::from_usize(n);
+        events.push((p.total(), -last_a, -last_b));
+    }
+
+    events.sort_by(|x, y| x.0.partial_cmp(&y.0).expect("NaN breakpoint"));
+
+    // Sweep. In segment [θ_prev, θ_event], S(θ) = A − B·θ.
+    let mut theta_prev = T::ZERO;
+    let mut theta_star = None;
+    for &(theta_e, da, db) in &events {
+        if b > T::ZERO {
+            let cand = (a - eta) / b;
+            // Tolerate tiny negative drift at the segment edges.
+            if cand >= theta_prev - T::EPSILON && cand <= theta_e + T::EPSILON {
+                theta_star = Some(cand.max_s(theta_prev).min_s(theta_e));
+                break;
+            }
+        }
+        a += da;
+        b += db;
+        theta_prev = theta_e;
+    }
+    let theta = theta_star.unwrap_or(theta_prev);
+
+    let mu = profiles.iter().map(|p| p.mu_at(theta).0).collect();
+    (mu, theta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::l1inf_norm;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn sum_of_mu_equals_eta() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1000);
+        let y = Matrix::<f64>::randn(20, 15, &mut rng);
+        let eta = l1inf_norm(&y) * 0.3;
+        let (mu, theta) = solve(&y, eta);
+        let s: f64 = mu.iter().sum();
+        assert!((s - eta).abs() < 1e-9, "sum mu = {s} != eta = {eta}");
+        assert!(theta > 0.0);
+    }
+
+    #[test]
+    fn per_column_kkt_mass_condition() {
+        // Every active column must clip exactly theta of mass.
+        let mut rng = Xoshiro256pp::seed_from_u64(1001);
+        let y = Matrix::<f64>::randn(25, 10, &mut rng);
+        let eta = l1inf_norm(&y) * 0.4;
+        let (mu, theta) = solve(&y, eta);
+        for (j, col) in y.columns().enumerate() {
+            if mu[j] > 1e-12 {
+                let clipped: f64 = col.iter().map(|&v| (v.abs() - mu[j]).max(0.0)).sum();
+                assert!(
+                    (clipped - theta).abs() < 1e-8,
+                    "column {j}: clipped {clipped} != theta {theta}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dead_columns_when_eta_tiny() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1002);
+        let mut y = Matrix::<f64>::randn(30, 8, &mut rng);
+        for v in y.col_mut(0) {
+            *v *= 100.0; // dominant column
+        }
+        let (mu, _) = solve(&y, 0.01);
+        // weak columns should be zeroed entirely once theta > ||y_j||_1
+        assert!(mu[0] > 0.0);
+    }
+
+    #[test]
+    fn handles_duplicate_magnitudes() {
+        let y = Matrix::from_row_major(3, 2, &[2.0f64, 2.0, 2.0, 2.0, 2.0, 2.0]);
+        let eta = 1.0;
+        let (mu, _) = solve(&y, eta);
+        let s: f64 = mu.iter().sum();
+        assert!((s - eta).abs() < 1e-9);
+        assert!((mu[0] - mu[1]).abs() < 1e-12, "symmetric columns same mu");
+    }
+}

@@ -1,0 +1,71 @@
+//! Projection onto the ℓ2 ball — radial rescale (Parikh & Boyd §6.5.1).
+//!
+//! `P²_c(y) = y·min(1, c/‖y‖₂)`. The outer step of `BP¹,²` (paper Alg. 3).
+
+use crate::scalar::Scalar;
+use crate::tensor::vec_ops;
+
+/// Project onto `{x : ‖x‖₂ ≤ c}` in place.
+pub fn project_l2_inplace<T: Scalar>(y: &mut [T], c: T) {
+    debug_assert!(c >= T::ZERO);
+    let norm = vec_ops::l2(y);
+    if norm > c {
+        let scale = if norm > T::ZERO { c / norm } else { T::ZERO };
+        for x in y.iter_mut() {
+            *x *= scale;
+        }
+    }
+}
+
+/// Out-of-place variant.
+pub fn project_l2<T: Scalar>(y: &[T], c: T) -> Vec<T> {
+    let mut out = y.to_vec();
+    project_l2_inplace(&mut out, c);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rescales_outside_ball() {
+        let x = project_l2(&[3.0f64, 4.0], 1.0);
+        assert!((vec_ops::l2(&x) - 1.0).abs() < 1e-12);
+        // direction preserved
+        assert!((x[1] / x[0] - 4.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inside_ball_unchanged() {
+        let y = vec![0.3f64, 0.4];
+        assert_eq!(project_l2(&y, 1.0), y);
+    }
+
+    #[test]
+    fn zero_vector_stays_zero() {
+        assert_eq!(project_l2(&[0.0f64, 0.0], 0.0), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn residual_identity_eq26() {
+        // ||y - x||_2 = ||y||_2 - ||x||_2 for the radial projection.
+        let y = vec![3.0f64, 4.0, -1.0];
+        let c = 2.0;
+        let x = project_l2(&y, c);
+        let resid: Vec<f64> = y.iter().zip(x.iter()).map(|(a, b)| a - b).collect();
+        let lhs = vec_ops::l2(&resid);
+        let rhs = vec_ops::l2(&y) - vec_ops::l2(&x);
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idempotent() {
+        let y = vec![5.0f64, -3.0];
+        let once = project_l2(&y, 2.0);
+        let twice = project_l2(&once, 2.0);
+        for (a, b) in once.iter().zip(twice.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

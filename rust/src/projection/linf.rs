@@ -1,0 +1,67 @@
+//! Projection onto the ℓ∞ ball — elementwise clipping (paper eq. 13).
+//!
+//! `P^∞_c(y)_i = sign(y_i)·min(|y_i|, c)`. This is the O(n) outer step of
+//! `BP¹,∞` and the reason the whole bi-level projection is a *clipping
+//! operator* (Remark III.2).
+
+use crate::scalar::Scalar;
+
+/// Project onto `{x : ‖x‖∞ ≤ c}` in place.
+pub fn project_linf_inplace<T: Scalar>(y: &mut [T], c: T) {
+    debug_assert!(c >= T::ZERO);
+    for x in y.iter_mut() {
+        *x = x.signum_s() * x.abs().min_s(c);
+    }
+}
+
+/// Out-of-place variant.
+pub fn project_linf<T: Scalar>(y: &[T], c: T) -> Vec<T> {
+    let mut out = y.to_vec();
+    project_linf_inplace(&mut out, c);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::vec_ops;
+
+    #[test]
+    fn clips_to_radius() {
+        let x = project_linf(&[3.0f64, -4.0, 0.5], 1.0);
+        assert_eq!(x, vec![1.0, -1.0, 0.5]);
+        assert!(vec_ops::linf(&x) <= 1.0);
+    }
+
+    #[test]
+    fn zero_radius_zeroes_vector() {
+        let x = project_linf(&[3.0f64, -4.0], 0.0);
+        assert_eq!(x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn inside_ball_unchanged() {
+        let y = vec![0.1f64, -0.9];
+        assert_eq!(project_linf(&y, 1.0), y);
+    }
+
+    #[test]
+    fn idempotent() {
+        let y = vec![5.0f64, -3.0, 2.0];
+        let once = project_linf(&y, 2.5);
+        let twice = project_linf(&once, 2.5);
+        assert_eq!(once, twice);
+    }
+
+    #[test]
+    fn residual_infinity_identity_eq16() {
+        // ||y - x||_inf = ||y||_inf - ||x||_inf for clipping (paper eq. 16).
+        let y = vec![3.0f64, -4.0, 0.5];
+        let c = 1.5;
+        let x = project_linf(&y, c);
+        let resid: Vec<f64> = y.iter().zip(x.iter()).map(|(a, b)| a - b).collect();
+        let lhs = vec_ops::linf(&resid);
+        let rhs = vec_ops::linf(&y) - vec_ops::linf(&x);
+        assert!((lhs - rhs).abs() < 1e-12);
+    }
+}

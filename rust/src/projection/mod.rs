@@ -1,0 +1,161 @@
+//! Projection operators.
+//!
+//! * [`l1`] — four algorithms for the ℓ1-ball / simplex projection (sort,
+//!   Michelot, Condat, bucket-filter). These are the inner solvers of every
+//!   bi-level method and the O(m) piece of the paper's complexity claim.
+//! * [`linf`], [`l2`] — the trivial column projections (clip / rescale).
+//! * [`bilevel`] — **the paper's contribution**: `BP¹,∞` (Alg. 1), `BP¹,¹`
+//!   (Alg. 2), `BP¹,²` (Alg. 3), all O(nm).
+//! * [`l1inf`] — exact ℓ1,∞-ball projections the paper benchmarks against:
+//!   Quattoni et al. 2009 (sort + breakpoint merge, O(nm log nm)), Chau et
+//!   al. 2019 (Newton root search), Chu et al. 2020 (semismooth Newton, the
+//!   paper's main comparator), plus a slow bisection golden reference.
+
+pub mod bilevel;
+pub mod grouped;
+pub mod l1;
+pub mod l1inf;
+pub mod l2;
+pub mod linf;
+
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// A matrix-ball projection operator, the common interface the trainer and
+/// the benchmark harness dispatch over.
+pub trait MatrixProjection<T: Scalar>: Send + Sync {
+    /// Human-readable identifier (used in CSV headers and CLI).
+    fn name(&self) -> &'static str;
+    /// Project `y` onto the ball of radius `eta`.
+    fn project(&self, y: &Matrix<T>, eta: T) -> Matrix<T>;
+    /// The norm this operator projects onto, evaluated at `y` (used by the
+    /// identity experiments to pair operator ↔ norm).
+    fn norm(&self, y: &Matrix<T>) -> T;
+}
+
+/// Enumeration of all projection operators exposed by the CLI / config.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProjectionKind {
+    /// Bi-level ℓ1,∞ (paper Alg. 1) — the contribution.
+    BilevelL1Inf,
+    /// Bi-level ℓ1,1 (paper Alg. 2).
+    BilevelL11,
+    /// Bi-level ℓ1,2 (paper Alg. 3).
+    BilevelL12,
+    /// Exact ℓ1,∞, Quattoni et al. 2009.
+    ExactL1InfQuattoni,
+    /// Exact ℓ1,∞, Chau et al. 2019 Newton root search.
+    ExactL1InfNewton,
+    /// Exact ℓ1,∞, Chu et al. 2020 semismooth Newton.
+    ExactL1InfSsn,
+    /// No projection (baseline rows of Tables II–IV).
+    None,
+}
+
+impl ProjectionKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "bilevel-l1inf" | "bilevel_l1inf" | "bilevel" | "bp1inf" => Some(Self::BilevelL1Inf),
+            "bilevel-l11" | "bilevel_l11" | "bp11" => Some(Self::BilevelL11),
+            "bilevel-l12" | "bilevel_l12" | "bp12" => Some(Self::BilevelL12),
+            "l1inf-quattoni" | "quattoni" => Some(Self::ExactL1InfQuattoni),
+            "l1inf-newton" | "chau" | "newton" => Some(Self::ExactL1InfNewton),
+            "l1inf" | "l1inf-ssn" | "chu" | "ssn" => Some(Self::ExactL1InfSsn),
+            "none" | "baseline" => Some(Self::None),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::BilevelL1Inf => "bilevel-l1inf",
+            Self::BilevelL11 => "bilevel-l11",
+            Self::BilevelL12 => "bilevel-l12",
+            Self::ExactL1InfQuattoni => "l1inf-quattoni",
+            Self::ExactL1InfNewton => "l1inf-newton",
+            Self::ExactL1InfSsn => "l1inf-ssn",
+            Self::None => "none",
+        }
+    }
+
+    /// Apply this projection to a matrix. `None` is the identity.
+    pub fn apply<T: Scalar>(&self, y: &Matrix<T>, eta: T) -> Matrix<T> {
+        match self {
+            Self::BilevelL1Inf => bilevel::bilevel_l1inf(y, eta),
+            Self::BilevelL11 => bilevel::bilevel_l11(y, eta),
+            Self::BilevelL12 => bilevel::bilevel_l12(y, eta),
+            Self::ExactL1InfQuattoni => {
+                l1inf::project_l1inf(y, eta, l1inf::L1InfAlgorithm::Quattoni)
+            }
+            Self::ExactL1InfNewton => {
+                l1inf::project_l1inf(y, eta, l1inf::L1InfAlgorithm::Newton)
+            }
+            Self::ExactL1InfSsn => l1inf::project_l1inf(y, eta, l1inf::L1InfAlgorithm::Ssn),
+            Self::None => y.clone(),
+        }
+    }
+
+    /// The norm matched to this projection (for identity experiments).
+    pub fn matched_norm<T: Scalar>(&self, y: &Matrix<T>) -> T {
+        use crate::norms::*;
+        match self {
+            Self::BilevelL1Inf | Self::ExactL1InfQuattoni | Self::ExactL1InfNewton
+            | Self::ExactL1InfSsn => l1inf_norm(y),
+            Self::BilevelL11 => l11_norm(y),
+            Self::BilevelL12 => l12_norm(y),
+            Self::None => frobenius_norm(y),
+        }
+    }
+
+    pub fn all() -> &'static [ProjectionKind] {
+        &[
+            Self::BilevelL1Inf,
+            Self::BilevelL11,
+            Self::BilevelL12,
+            Self::ExactL1InfQuattoni,
+            Self::ExactL1InfNewton,
+            Self::ExactL1InfSsn,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::l1inf_norm;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in ProjectionKind::all() {
+            assert_eq!(ProjectionKind::parse(kind.name()), Some(*kind));
+        }
+        assert_eq!(ProjectionKind::parse("nope"), None);
+        assert_eq!(ProjectionKind::parse("baseline"), Some(ProjectionKind::None));
+    }
+
+    #[test]
+    fn apply_dispatches_and_is_feasible() {
+        let mut rng = Xoshiro256pp::seed_from_u64(123);
+        let y = crate::tensor::Matrix::<f64>::randn(20, 10, &mut rng);
+        let eta = 2.5;
+        for kind in ProjectionKind::all() {
+            let x = kind.apply(&y, eta);
+            if kind.name().contains("l1inf") || kind.name().contains("bilevel-l1inf") {
+                assert!(
+                    l1inf_norm(&x) <= eta + 1e-8,
+                    "{} violates feasibility: {}",
+                    kind.name(),
+                    l1inf_norm(&x)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn none_is_identity() {
+        let mut rng = Xoshiro256pp::seed_from_u64(124);
+        let y = crate::tensor::Matrix::<f64>::randn(5, 5, &mut rng);
+        assert_eq!(ProjectionKind::None.apply(&y, 1.0), y);
+    }
+}

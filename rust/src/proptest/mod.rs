@@ -1,0 +1,219 @@
+//! Minimal property-based testing harness.
+//!
+//! The offline crate set has no `proptest`, so invariants are checked with
+//! this in-repo harness: seeded generators + a `forall` runner that, on
+//! failure, *shrinks* matrices/vectors by halving dimensions and magnitudes
+//! before reporting the smallest failing case. Deliberately tiny — enough
+//! to express "for 500 random (Y, η): feasibility + identity hold".
+
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::tensor::Matrix;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        Self { cases: 200, seed: 0xBAD5EED, max_shrink_steps: 32 }
+    }
+}
+
+/// A generated value plus the recipe to shrink it.
+pub trait Arbitrary: Clone {
+    fn generate(rng: &mut Xoshiro256pp) -> Self;
+    /// Candidate simpler values (empty = fully shrunk).
+    fn shrink(&self) -> Vec<Self>;
+    /// Short human description for failure reports.
+    fn describe(&self) -> String;
+}
+
+/// Run `prop` on `cfg.cases` random inputs; panic with the smallest failing
+/// input's description on violation.
+pub fn forall<A: Arbitrary>(cfg: PropConfig, prop: impl Fn(&A) -> Result<(), String>) {
+    let mut rng = Xoshiro256pp::seed_from_u64(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = A::generate(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Shrink.
+            let mut best = input;
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: while steps < cfg.max_shrink_steps {
+                for cand in best.shrink() {
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        steps += 1;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}) after {steps} shrink steps\n\
+                 input: {}\nerror: {best_msg}",
+                cfg.seed,
+                best.describe()
+            );
+        }
+    }
+}
+
+/// Random matrix + radius pair — the canonical input of every projection
+/// property.
+#[derive(Clone, Debug)]
+pub struct MatrixAndRadius {
+    pub y: Matrix<f64>,
+    pub eta: f64,
+}
+
+impl Arbitrary for MatrixAndRadius {
+    fn generate(rng: &mut Xoshiro256pp) -> Self {
+        let n = 1 + rng.next_below(48) as usize;
+        let m = 1 + rng.next_below(48) as usize;
+        // Mix of scales: some columns amplified, some zeroed, occasional
+        // exact duplicates to exercise tie-handling.
+        let mut y = Matrix::<f64>::randn(n, m, rng);
+        for j in 0..m {
+            let roll = rng.next_below(10);
+            if roll == 0 {
+                for v in y.col_mut(j) {
+                    *v = 0.0;
+                }
+            } else if roll == 1 {
+                for v in y.col_mut(j) {
+                    *v *= 100.0;
+                }
+            } else if roll == 2 && j > 0 {
+                let src = y.col(j - 1).to_vec();
+                y.col_mut(j).copy_from_slice(&src);
+            }
+        }
+        let norm = crate::norms::l1inf_norm(&y);
+        let eta = if norm > 0.0 {
+            rng.uniform(1e-4, 1.3) * norm
+        } else {
+            1.0
+        };
+        Self { y, eta }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        let (n, m) = (self.y.rows(), self.y.cols());
+        if n > 1 {
+            // Keep the top half of the rows.
+            let mut y = Matrix::zeros(n / 2, m);
+            for j in 0..m {
+                for i in 0..n / 2 {
+                    y.set(i, j, self.y.get(i, j));
+                }
+            }
+            out.push(Self { y, eta: self.eta });
+        }
+        if m > 1 {
+            let mut y = Matrix::zeros(n, m / 2);
+            for j in 0..m / 2 {
+                for i in 0..n {
+                    y.set(i, j, self.y.get(i, j));
+                }
+            }
+            out.push(Self { y, eta: self.eta });
+        }
+        // Halve magnitudes (moves values toward ties at zero).
+        out.push(Self { y: self.y.map(|v| v * 0.5), eta: self.eta });
+        // Halve the radius.
+        if self.eta > 1e-6 {
+            out.push(Self { y: self.y.clone(), eta: self.eta * 0.5 });
+        }
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "Matrix {}x{} (||Y||_1inf = {:.6}), eta = {:.6}",
+            self.y.rows(),
+            self.y.cols(),
+            crate::norms::l1inf_norm(&self.y),
+            self.eta
+        )
+    }
+}
+
+/// Random non-negative vector + radius for ℓ1 projection properties.
+#[derive(Clone, Debug)]
+pub struct VectorAndRadius {
+    pub v: Vec<f64>,
+    pub eta: f64,
+}
+
+impl Arbitrary for VectorAndRadius {
+    fn generate(rng: &mut Xoshiro256pp) -> Self {
+        let n = 1 + rng.next_below(512) as usize;
+        let v: Vec<f64> = (0..n).map(|_| rng.uniform(-10.0, 10.0)).collect();
+        let norm: f64 = v.iter().map(|x| x.abs()).sum();
+        let eta = rng.uniform(1e-5, 1.2) * norm.max(1.0);
+        Self { v, eta }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.v.len() > 1 {
+            out.push(Self { v: self.v[..self.v.len() / 2].to_vec(), eta: self.eta });
+        }
+        out.push(Self { v: self.v.iter().map(|x| x * 0.5).collect(), eta: self.eta });
+        if self.eta > 1e-6 {
+            out.push(Self { v: self.v.clone(), eta: self.eta * 0.5 });
+        }
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!("Vector len {} , eta = {:.6}", self.v.len(), self.eta)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially_true_property() {
+        forall::<VectorAndRadius>(PropConfig { cases: 50, ..Default::default() }, |x| {
+            if x.eta >= 0.0 {
+                Ok(())
+            } else {
+                Err("negative eta".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall::<VectorAndRadius>(PropConfig { cases: 50, ..Default::default() }, |x| {
+            if x.v.len() < 4 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_dimensions() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let m = MatrixAndRadius::generate(&mut rng);
+        for s in m.shrink() {
+            assert!(
+                s.y.rows() <= m.y.rows() && s.y.cols() <= m.y.cols(),
+                "shrink must not grow"
+            );
+        }
+    }
+}

@@ -1,0 +1,184 @@
+//! Result reporting: CSV files, markdown tables, ASCII plots.
+//!
+//! Every experiment writes a CSV under `results/` (machine-readable, used
+//! by EXPERIMENTS.md) and prints a markdown table / ASCII chart so a run is
+//! interpretable straight from the terminal.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Directory for experiment outputs (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = std::env::var("BILEVEL_RESULTS_DIR").unwrap_or_else(|_| "results".into());
+    let p = PathBuf::from(dir);
+    let _ = fs::create_dir_all(&p);
+    p
+}
+
+/// Minimal CSV writer (quotes nothing — all outputs are numeric/idents).
+pub struct CsvWriter {
+    file: fs::File,
+    pub path: PathBuf,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create(name: &str, header: &[&str]) -> std::io::Result<Self> {
+        let path = results_dir().join(name);
+        let mut file = fs::File::create(&path)?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(Self { file, path, cols: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> std::io::Result<()> {
+        assert_eq!(values.len(), self.cols, "CSV row arity mismatch");
+        writeln!(self.file, "{}", values.join(","))
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> std::io::Result<()> {
+        let v: Vec<String> = values.iter().map(|x| format!("{x:.6}")).collect();
+        self.row(&v)
+    }
+}
+
+/// Render a markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut s = String::new();
+    let _ = writeln!(s, "| {} |", header.join(" | "));
+    let _ = writeln!(s, "|{}|", header.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+    for r in rows {
+        let _ = writeln!(s, "| {} |", r.join(" | "));
+    }
+    s
+}
+
+/// Tiny ASCII line chart: one row per series, log-x optional.
+pub fn ascii_chart(
+    title: &str,
+    xs: &[f64],
+    series: &[(&str, Vec<f64>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let mut s = format!("{title}\n");
+    if xs.is_empty() || series.is_empty() {
+        return s;
+    }
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::NEG_INFINITY, f64::max);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::INFINITY, f64::min);
+    let yrange = (ymax - ymin).max(1e-12);
+    let xmin = xs[0];
+    let xmax = *xs.last().unwrap();
+    let xrange = (xmax - xmin).max(1e-12);
+
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'o', b'+', b'x', b'#'];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (x, y) in xs.iter().zip(ys.iter()) {
+            let cx = (((x - xmin) / xrange) * (width - 1) as f64).round() as usize;
+            let cy = (((ymax - y) / yrange) * (height - 1) as f64).round() as usize;
+            grid[cy.min(height - 1)][cx.min(width - 1)] = marks[si % marks.len()];
+        }
+    }
+    for (r, row) in grid.iter().enumerate() {
+        let label = if r == 0 {
+            format!("{ymax:>10.3}")
+        } else if r == height - 1 {
+            format!("{ymin:>10.3}")
+        } else {
+            " ".repeat(10)
+        };
+        let _ = writeln!(s, "{label} |{}", String::from_utf8_lossy(row));
+    }
+    let _ = writeln!(s, "{:>10}  {xmin:<12.4}{:>w$.4}", "", xmax, w = width.saturating_sub(12));
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(s, "  {} = {}", marks[si % marks.len()] as char, name);
+    }
+    s
+}
+
+/// Convenience: write a text file into results/.
+pub fn write_text(name: &str, content: &str) -> std::io::Result<PathBuf> {
+    let path = results_dir().join(name);
+    fs::write(&path, content)?;
+    Ok(path)
+}
+
+/// Read a results CSV back (for tests and report assembly).
+pub fn read_csv(path: &Path) -> std::io::Result<(Vec<String>, Vec<Vec<String>>)> {
+    let text = fs::read_to_string(path)?;
+    let mut lines = text.lines();
+    let header = lines
+        .next()
+        .unwrap_or("")
+        .split(',')
+        .map(|s| s.to_string())
+        .collect();
+    let rows = lines
+        .map(|l| l.split(',').map(|s| s.to_string()).collect())
+        .collect();
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        std::env::set_var("BILEVEL_RESULTS_DIR", std::env::temp_dir().join("bl_test_results"));
+        let mut w = CsvWriter::create("unit_test.csv", &["a", "b"]).unwrap();
+        w.row_f64(&[1.0, 2.5]).unwrap();
+        w.row(&["x".into(), "y".into()]).unwrap();
+        let (header, rows) = read_csv(&w.path).unwrap();
+        assert_eq!(header, vec!["a", "b"]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1], vec!["x", "y"]);
+        std::env::remove_var("BILEVEL_RESULTS_DIR");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn csv_arity_checked() {
+        std::env::set_var("BILEVEL_RESULTS_DIR", std::env::temp_dir().join("bl_test_results"));
+        let mut w = CsvWriter::create("unit_test2.csv", &["a", "b"]).unwrap();
+        let _ = w.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn markdown_table_renders() {
+        let t = markdown_table(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| x | y |"));
+        assert!(t.contains("| 1 | 2 |"));
+        assert!(t.contains("|---|---|"));
+    }
+
+    #[test]
+    fn ascii_chart_contains_series_markers() {
+        let xs = vec![0.0, 1.0, 2.0, 3.0];
+        let chart = ascii_chart(
+            "test",
+            &xs,
+            &[("up", vec![0.0, 1.0, 2.0, 3.0]), ("down", vec![3.0, 2.0, 1.0, 0.0])],
+            40,
+            10,
+        );
+        assert!(chart.contains('*'));
+        assert!(chart.contains('o'));
+        assert!(chart.contains("up"));
+    }
+
+    #[test]
+    fn ascii_chart_empty_safe() {
+        let chart = ascii_chart("empty", &[], &[], 10, 5);
+        assert!(chart.starts_with("empty"));
+    }
+}

@@ -1,0 +1,256 @@
+//! Distribution samplers built on top of [`Rng`].
+//!
+//! Everything the dataset substrates need: normal (Box–Muller, cached
+//! second draw through `Normal`), gamma (Marsaglia–Tsang), Poisson
+//! (inversion for small mean, PTRS transformed-rejection for large mean),
+//! Bernoulli, and negative binomial (gamma–Poisson mixture — the standard
+//! scRNA-seq count model used by the HIF2 simulator).
+
+use super::Rng;
+
+/// Standard normal draw (Box–Muller, no caching — see [`Normal`] for the
+/// cached stateful variant used in bulk generation).
+pub fn standard_normal<R: Rng + ?Sized>(rng: &mut R) -> f64 {
+    loop {
+        let u1 = rng.next_f64();
+        let u2 = rng.next_f64();
+        if u1 > f64::MIN_POSITIVE {
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (std::f64::consts::TAU * u2).cos();
+        }
+    }
+}
+
+/// Stateful normal sampler with mean/std and Box–Muller pair caching.
+#[derive(Clone, Debug)]
+pub struct Normal {
+    mean: f64,
+    std: f64,
+    cache: Option<f64>,
+}
+
+impl Normal {
+    pub fn new(mean: f64, std: f64) -> Self {
+        assert!(std >= 0.0, "Normal: std must be non-negative");
+        Self { mean, std, cache: None }
+    }
+
+    pub fn standard() -> Self {
+        Self::new(0.0, 1.0)
+    }
+
+    pub fn sample<R: Rng + ?Sized>(&mut self, rng: &mut R) -> f64 {
+        let z = if let Some(z) = self.cache.take() {
+            z
+        } else {
+            let (u1, u2) = loop {
+                let u1 = rng.next_f64();
+                let u2 = rng.next_f64();
+                if u1 > f64::MIN_POSITIVE {
+                    break (u1, u2);
+                }
+            };
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = std::f64::consts::TAU * u2;
+            self.cache = Some(r * theta.sin());
+            r * theta.cos()
+        };
+        self.mean + self.std * z
+    }
+}
+
+/// Gamma(shape, scale) via Marsaglia–Tsang (2000); shape < 1 boosted by the
+/// standard `U^(1/shape)` trick.
+pub fn gamma<R: Rng + ?Sized>(rng: &mut R, shape: f64, scale: f64) -> f64 {
+    assert!(shape > 0.0 && scale > 0.0, "gamma: parameters must be positive");
+    if shape < 1.0 {
+        let u = rng.next_f64().max(f64::MIN_POSITIVE);
+        return gamma(rng, shape + 1.0, scale) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = standard_normal(rng);
+        let v = (1.0 + c * x).powi(3);
+        if v <= 0.0 {
+            continue;
+        }
+        let u = rng.next_f64();
+        if u < 1.0 - 0.0331 * x.powi(4)
+            || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+        {
+            return d * v * scale;
+        }
+    }
+}
+
+/// Poisson(lambda): Knuth inversion below 30, PTRS rejection above.
+pub fn poisson<R: Rng + ?Sized>(rng: &mut R, lambda: f64) -> u64 {
+    assert!(lambda >= 0.0, "poisson: lambda must be non-negative");
+    if lambda == 0.0 {
+        return 0;
+    }
+    if lambda < 30.0 {
+        // Inversion by sequential search.
+        let l = (-lambda).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    // PTRS (Hörmann 1993 transformed rejection).
+    let b = 0.931 + 2.53 * lambda.sqrt();
+    let a = -0.059 + 0.02483 * b;
+    let inv_alpha = 1.1239 + 1.1328 / (b - 3.4);
+    let v_r = 0.9277 - 3.6224 / (b - 2.0);
+    loop {
+        let u = rng.next_f64() - 0.5;
+        let v = rng.next_f64();
+        let us = 0.5 - u.abs();
+        let k = ((2.0 * a / us + b) * u + lambda + 0.43).floor();
+        if us >= 0.07 && v <= v_r && k >= 0.0 {
+            return k as u64;
+        }
+        if k < 0.0 || (us < 0.013 && v > us) {
+            continue;
+        }
+        let log_v = v.ln();
+        let rhs = k * lambda.ln() - lambda - ln_factorial(k as u64);
+        if (inv_alpha / (a / (us * us) + b)).ln() + log_v <= rhs {
+            return k as u64;
+        }
+    }
+}
+
+/// Negative binomial via gamma–Poisson mixture: mean `mu`, dispersion `r`
+/// (variance = mu + mu²/r). The canonical over-dispersed count model for
+/// scRNA-seq simulation.
+pub fn negative_binomial<R: Rng + ?Sized>(rng: &mut R, mu: f64, r: f64) -> u64 {
+    assert!(mu >= 0.0 && r > 0.0, "negative_binomial: mu>=0, r>0 required");
+    if mu == 0.0 {
+        return 0;
+    }
+    let lambda = gamma(rng, r, mu / r);
+    poisson(rng, lambda)
+}
+
+/// Bernoulli(p).
+pub fn bernoulli<R: Rng + ?Sized>(rng: &mut R, p: f64) -> bool {
+    rng.next_f64() < p
+}
+
+/// ln(k!) via Stirling series for k ≥ 10, table lookup below.
+fn ln_factorial(k: u64) -> f64 {
+    const TABLE: [f64; 10] = [
+        0.0,
+        0.0,
+        0.693147180559945,
+        1.791759469228055,
+        3.178053830347946,
+        4.787491742782046,
+        6.579251212010101,
+        8.525161361065415,
+        10.604602902745251,
+        12.801827480081469,
+    ];
+    if (k as usize) < TABLE.len() {
+        return TABLE[k as usize];
+    }
+    let x = (k + 1) as f64;
+    (x - 0.5) * x.ln() - x + 0.5 * (std::f64::consts::TAU).ln()
+        + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x * x * x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn mean_var(xs: &[f64]) -> (f64, f64) {
+        let n = xs.len() as f64;
+        let m = xs.iter().sum::<f64>() / n;
+        let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / n;
+        (m, v)
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(100);
+        let mut d = Normal::new(2.0, 3.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| d.sample(&mut rng)).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 2.0).abs() < 0.05, "mean={m}");
+        assert!((v - 9.0).abs() < 0.3, "var={v}");
+    }
+
+    #[test]
+    fn gamma_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(101);
+        let (shape, scale) = (3.0, 2.0);
+        let xs: Vec<f64> = (0..100_000).map(|_| gamma(&mut rng, shape, scale)).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 6.0).abs() < 0.1, "mean={m}");
+        assert!((v - 12.0).abs() < 0.6, "var={v}");
+    }
+
+    #[test]
+    fn gamma_small_shape() {
+        let mut rng = Xoshiro256pp::seed_from_u64(102);
+        let xs: Vec<f64> = (0..100_000).map(|_| gamma(&mut rng, 0.5, 1.0)).collect();
+        let (m, _) = mean_var(&xs);
+        assert!((m - 0.5).abs() < 0.05, "mean={m}");
+        assert!(xs.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut rng = Xoshiro256pp::seed_from_u64(103);
+        let xs: Vec<f64> = (0..100_000).map(|_| poisson(&mut rng, 4.5) as f64).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 4.5).abs() < 0.08, "mean={m}");
+        assert!((v - 4.5).abs() < 0.3, "var={v}");
+    }
+
+    #[test]
+    fn poisson_large_mean_ptrs() {
+        let mut rng = Xoshiro256pp::seed_from_u64(104);
+        let xs: Vec<f64> = (0..100_000).map(|_| poisson(&mut rng, 120.0) as f64).collect();
+        let (m, v) = mean_var(&xs);
+        assert!((m - 120.0).abs() < 0.6, "mean={m}");
+        assert!((v - 120.0).abs() < 6.0, "var={v}");
+    }
+
+    #[test]
+    fn negative_binomial_overdispersion() {
+        let mut rng = Xoshiro256pp::seed_from_u64(105);
+        let (mu, r) = (10.0, 2.0);
+        let xs: Vec<f64> = (0..100_000)
+            .map(|_| negative_binomial(&mut rng, mu, r) as f64)
+            .collect();
+        let (m, v) = mean_var(&xs);
+        let expect_var = mu + mu * mu / r; // 60
+        assert!((m - mu).abs() < 0.2, "mean={m}");
+        assert!((v - expect_var).abs() < 4.0, "var={v}, expected {expect_var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Xoshiro256pp::seed_from_u64(106);
+        let hits = (0..100_000).filter(|_| bernoulli(&mut rng, 0.3)).count();
+        assert!((hits as f64 / 100_000.0 - 0.3).abs() < 0.01);
+    }
+
+    #[test]
+    fn ln_factorial_matches_direct() {
+        let direct: f64 = (1..=20u64).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(20) - direct).abs() < 1e-9);
+        assert_eq!(ln_factorial(0), 0.0);
+        assert_eq!(ln_factorial(1), 0.0);
+    }
+}

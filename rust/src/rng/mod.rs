@@ -1,0 +1,143 @@
+//! Pseudo-random number generation.
+//!
+//! The offline crate set has no `rand`, so we carry our own generators:
+//! [`SplitMix64`] (seeding / stateless streams) and [`Xoshiro256pp`]
+//! (general-purpose, the default throughout the repo). Distributions cover
+//! everything the data substrates need: uniform, standard normal
+//! (Box–Muller with caching), gamma (Marsaglia–Tsang), Poisson
+//! (inversion + PTRS for large mean), Bernoulli, permutation sampling.
+//!
+//! Every consumer takes `&mut impl Rng`, so experiments are reproducible
+//! from a single `u64` seed recorded in the experiment config.
+
+mod distributions;
+mod xoshiro;
+
+pub use distributions::*;
+pub use xoshiro::{SplitMix64, Xoshiro256pp};
+
+/// Abstract source of uniform random bits plus derived draws.
+pub trait Rng {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    #[inline]
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits — the bottom bits of some generators are weaker.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in `[0, 1)` as `f32`.
+    #[inline]
+    fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in `[0, bound)` (Lemire's debiased multiply-shift).
+    #[inline]
+    fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "next_below: bound must be positive");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform in `[lo, hi)`.
+    #[inline]
+    fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Fisher–Yates shuffle.
+    fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below((i + 1) as u64) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// `k` distinct indices drawn from `0..n` (partial Fisher–Yates).
+    fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k={k} > n={n}");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.next_below((n - i) as u64) as usize;
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_f64_in_unit_interval() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..10_000 {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn next_below_unbiased_small_bound() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let mut counts = [0usize; 7];
+        let draws = 70_000;
+        for _ in 0..draws {
+            counts[rng.next_below(7) as usize] += 1;
+        }
+        let expect = draws / 7;
+        for c in counts {
+            assert!(
+                (c as i64 - expect as i64).unsigned_abs() < (expect / 10) as u64,
+                "bucket count {c} too far from {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut seen = [false; 50];
+        for &i in &idx {
+            assert!(i < 50);
+            assert!(!seen[i], "duplicate index {i}");
+            seen[i] = true;
+        }
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = Xoshiro256pp::seed_from_u64(42);
+        let mut b = Xoshiro256pp::seed_from_u64(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+}

