@@ -1,0 +1,74 @@
+//! The projection service engine in five minutes.
+//!
+//! ```bash
+//! cargo run --release --example serve_quickstart
+//! ```
+//!
+//! Starts a sharded engine, round-trips single requests (showing the
+//! threshold cache warming up), fans out a mixed async workload across
+//! every projection kind, checks the served results against direct library
+//! calls, and prints the per-shard telemetry.
+
+use bilevel_sparse::config::ServeConfig;
+use bilevel_sparse::norms::l1inf_norm;
+use bilevel_sparse::projection::ProjectionKind;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::serve::{Engine, Payload, ProjectionRequest};
+use bilevel_sparse::tensor::Matrix;
+
+fn main() {
+    // A small engine: 2 shards, opportunistic batching, 32-entry cache.
+    let cfg = ServeConfig { shards: 2, cache_capacity: 32, ..ServeConfig::default() };
+    let engine = Engine::start(&cfg).expect("engine start");
+    let mut rng = Xoshiro256pp::seed_from_u64(7);
+
+    // --- 1. one request / one response ---------------------------------
+    let y = Matrix::<f64>::randn(200, 100, &mut rng);
+    let eta = 5.0;
+    let req = ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, eta, y.clone());
+    let resp = engine.submit_wait(req.clone()).expect("submit");
+    let Payload::F64(x) = &resp.payload else { unreachable!("dtype preserved") };
+    println!("BP^(1,inf) via the engine:");
+    println!("  ||Y||_1inf   = {:.3} -> {:.3}  (eta = {eta})", l1inf_norm(&y), l1inf_norm(x));
+    println!(
+        "  shard {} | batch {} | cache hit {} | queued {} us | exec {} us",
+        resp.shard, resp.batch_size, resp.cache_hit, resp.queue_micros, resp.exec_micros
+    );
+
+    // --- 2. the same request again: threshold-cache hit ----------------
+    let warm = engine.submit_wait(req).expect("submit");
+    println!(
+        "\nrepeat request: cache hit = {} (exec {} us, cold was {} us)",
+        warm.cache_hit, warm.exec_micros, resp.exec_micros
+    );
+
+    // --- 3. async fan-out over every projection kind -------------------
+    let kinds = ProjectionKind::all();
+    let mut jobs = Vec::new();
+    for i in 0..32 {
+        let kind = kinds[i % kinds.len()];
+        let m = Matrix::<f64>::randn(64, 48, &mut rng);
+        let handle = engine
+            .submit(ProjectionRequest::f64(kind, 2.0, m.clone()))
+            .expect("submit");
+        jobs.push((kind, m, handle));
+    }
+    let mut mismatches = 0;
+    for (kind, m, handle) in jobs {
+        let resp = handle.wait().expect("response");
+        let direct = kind.apply(&m, 2.0);
+        let Payload::F64(x) = &resp.payload else { unreachable!("dtype preserved") };
+        if x.max_abs_diff(&direct) != 0.0 {
+            mismatches += 1;
+        }
+    }
+    println!(
+        "\nmixed workload: 32 requests over {} kinds, {} mismatches vs direct library calls",
+        kinds.len(),
+        mismatches
+    );
+
+    // --- 4. telemetry ---------------------------------------------------
+    println!();
+    print!("{}", engine.shutdown());
+}

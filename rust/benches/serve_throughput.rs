@@ -1,0 +1,146 @@
+//! `cargo bench --bench serve_throughput` — closed-loop throughput of the
+//! projection service engine on the acceptance workload (256×256 f64,
+//! η = 1), in four configurations:
+//!
+//! 1. **direct**   — single-threaded one-shot library calls (the baseline
+//!    the engine must beat: it has no queue, no threads, no batching);
+//! 2. **unbatched** — engine with `max_batch = 1` (sharding only);
+//! 3. **batched**  — engine with opportunistic micro-batching;
+//! 4. **cached**   — batched engine plus the LRU threshold cache on the
+//!    repeated-pool workload (reports the hit-rate).
+//!
+//! Also cross-checks that engine results stay bit-identical to the direct
+//! library calls. Set `BILEVEL_BENCH_QUICK=1` for a shortened run.
+
+use bilevel_sparse::bench::black_box;
+use bilevel_sparse::config::ServeConfig;
+use bilevel_sparse::projection::bilevel::bilevel_l1inf_with;
+use bilevel_sparse::projection::l1::L1Algorithm;
+use bilevel_sparse::projection::ProjectionKind;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::serve::{run_loadgen, Engine, LoadReport, LoadgenConfig};
+use bilevel_sparse::tensor::Matrix;
+
+const N: usize = 256;
+const ETA: f64 = 1.0;
+const POOL: usize = 8;
+
+fn engine_cfg(shards: usize, max_batch: usize, cache: usize) -> ServeConfig {
+    ServeConfig {
+        shards,
+        workers_per_shard: 1,
+        queue_capacity: 256,
+        max_batch,
+        min_fill: 1, // opportunistic: batch whatever is queued, never wait
+        max_wait_micros: 200,
+        cache_capacity: cache,
+    }
+}
+
+fn report_line(label: &str, rps: f64, baseline: f64, extra: &str) {
+    println!("  {label:<26} {rps:>10.0} req/s   ({:>5.2}x direct){extra}", rps / baseline);
+}
+
+fn run_engine(cfg: &ServeConfig, load: &LoadgenConfig) -> (LoadReport, f64, f64) {
+    let engine = Engine::start(cfg).expect("engine start");
+    let report = run_loadgen(&engine, load);
+    let stats = engine.shutdown();
+    assert_eq!(report.failed, 0, "engine dropped requests");
+    (report, stats.mean_batch(), stats.hit_rate())
+}
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let requests: usize = if quick { 256 } else { 2048 };
+    let clients: usize = 8;
+    let shards: usize = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(8)
+        .max(2);
+
+    println!(
+        "== serve_throughput: {requests} requests of {N}x{N} f64 bilevel-l1inf, eta = {ETA} =="
+    );
+    println!("   {clients} clients, {shards} shards, pool of {POOL} matrices\n");
+
+    // -------- 1. direct one-shot library calls, single thread ----------
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let pool: Vec<Matrix<f64>> =
+        (0..POOL).map(|_| Matrix::randn(N, N, &mut rng)).collect();
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
+        black_box(bilevel_l1inf_with(&pool[i % POOL], ETA, L1Algorithm::Condat));
+    }
+    let direct_rps = requests as f64 / t0.elapsed().as_secs_f64();
+    report_line("direct one-shot (1 thread)", direct_rps, direct_rps, "");
+
+    let load = LoadgenConfig {
+        clients,
+        requests_per_client: requests / clients,
+        rows: N,
+        cols: N,
+        eta: ETA,
+        mix: vec![ProjectionKind::BilevelL1Inf],
+        pool: POOL,
+        f32_every: 0,
+        seed: 1,
+    };
+
+    // -------- 2. engine, sharding only (max_batch = 1, no cache) -------
+    let (unbatched, _, _) = run_engine(&engine_cfg(shards, 1, 0), &load);
+    report_line("engine unbatched", unbatched.throughput_rps(), direct_rps, "");
+
+    // -------- 3. engine, micro-batching (no cache) ---------------------
+    let (batched, mean_batch, _) = run_engine(&engine_cfg(shards, 16, 0), &load);
+    report_line(
+        "engine batched",
+        batched.throughput_rps(),
+        direct_rps,
+        &format!("   mean batch {mean_batch:.2}"),
+    );
+
+    // -------- 4. engine, batching + threshold cache --------------------
+    let (cached, _, hit_rate) = run_engine(&engine_cfg(shards, 16, 64), &load);
+    report_line(
+        "engine batched + cache",
+        cached.throughput_rps(),
+        direct_rps,
+        &format!("   hit-rate {:.1}%", hit_rate * 100.0),
+    );
+
+    // -------- acceptance lines -----------------------------------------
+    let ok_tput = batched.throughput_rps() >= direct_rps;
+    println!(
+        "\n  batched engine >= direct one-shot: {}",
+        if ok_tput { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "  cache hit-rate > 0 on repeated workload: {}",
+        if hit_rate > 0.0 { "PASS" } else { "FAIL" }
+    );
+
+    // -------- bit-identical spot check ---------------------------------
+    let engine = Engine::start(&engine_cfg(shards, 16, 64)).expect("engine start");
+    let mut identical = true;
+    for (i, y) in pool.iter().enumerate() {
+        let resp = engine
+            .submit_wait(bilevel_sparse::serve::ProjectionRequest::f64(
+                ProjectionKind::BilevelL1Inf,
+                ETA,
+                y.clone(),
+            ))
+            .expect("submit");
+        let direct = bilevel_l1inf_with(y, ETA, L1Algorithm::Condat);
+        let x = resp.payload.as_f64().expect("f64 payload");
+        if x.max_abs_diff(&direct.x) != 0.0 {
+            identical = false;
+            eprintln!("  matrix {i}: serve result differs from library!");
+        }
+    }
+    engine.shutdown();
+    println!(
+        "  serve results bit-identical to library: {}",
+        if identical { "PASS" } else { "FAIL" }
+    );
+}

@@ -97,6 +97,18 @@ COMMANDS:
   experiment   regenerate a paper table/figure (fig1..fig9, table1..table4, all)
                bilevel experiment fig1 [--quick] [--seeds 1,2,3]
   artifacts    list the AOT artifacts in the manifest [--dir artifacts]
+  serve        start the projection service engine (sharded workers,
+               micro-batching, LRU threshold cache) and validate it with a
+               short in-process smoke workload; prints per-shard stats
+               [--config configs/serve.toml] [--shards N]
+               [--workers-per-shard W] [--queue N] [--batch N]
+               [--min-fill N] [--wait-us U] [--cache N] [--clients C]
+               [--requests N] [--rows N] [--cols M] [--eta E] [--pool P]
+               [--f32-every K] [--mix k1,k2,...] [--seed S]
+  loadgen      closed-loop load generator against an in-process engine:
+               sustains a mixed-kind workload, honours backpressure
+               retry-after, reports client latency/throughput + engine-side
+               shard counters (same options as serve, bigger defaults)
   help         print this help
 
 PROJECTION METHODS:

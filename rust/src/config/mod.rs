@@ -8,5 +8,5 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{DatasetKind, ProjectionBackend, RunConfig, TrainConfig};
+pub use schema::{DatasetKind, ProjectionBackend, RunConfig, ServeConfig, TrainConfig};
 pub use toml::{parse, TomlDoc, TomlValue};

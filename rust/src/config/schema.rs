@@ -1,4 +1,7 @@
-//! Typed configuration schema + presets for the paper's experiments.
+//! Typed configuration schema + presets for the paper's experiments and
+//! the projection service engine.
+
+use std::time::Duration;
 
 use super::toml::TomlDoc;
 use crate::projection::l1::L1Algorithm;
@@ -165,10 +168,99 @@ impl TrainConfig {
     }
 }
 
+/// Configuration of the projection service engine (`serve` subsystem): a
+/// sharded worker pool with bounded queues, a micro-batching scheduler, and
+/// an LRU threshold cache. Parsed from the `[serve]` TOML section.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// Worker shards (0 ⇒ one per hardware thread).
+    pub shards: usize,
+    /// Worker threads consuming each shard's queue.
+    pub workers_per_shard: usize,
+    /// Bounded queue depth per shard — the backpressure high-water mark:
+    /// submissions beyond it are rejected with a retry-after hint.
+    pub queue_capacity: usize,
+    /// Coalesce up to this many same-key (kind/shape/dtype/algo) requests
+    /// into one scheduled batch. 1 disables batching.
+    pub max_batch: usize,
+    /// A worker keeps waiting (up to `max_wait_micros`) until a batch holds
+    /// this many requests. 1 = opportunistic batching: coalesce whatever is
+    /// already queued, never idle-wait.
+    pub min_fill: usize,
+    /// Batch-fill wait budget (only reached when `min_fill > 1`).
+    pub max_wait_micros: u64,
+    /// LRU threshold-cache entries shared by all shards (0 disables).
+    pub cache_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            shards: 0,
+            workers_per_shard: 1,
+            queue_capacity: 64,
+            max_batch: 8,
+            min_fill: 1,
+            max_wait_micros: 200,
+            cache_capacity: 256,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Resolve `shards = 0` to the hardware parallelism.
+    pub fn effective_shards(&self) -> usize {
+        if self.shards > 0 {
+            self.shards
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+
+    /// `max_wait_micros` as a `Duration`.
+    pub fn max_wait(&self) -> Duration {
+        Duration::from_micros(self.max_wait_micros)
+    }
+
+    /// Build from a parsed TOML doc (`[serve]` section), defaults elsewhere.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let cfg = Self {
+            shards: doc.usize_or("serve.shards", d.shards),
+            workers_per_shard: doc.usize_or("serve.workers_per_shard", d.workers_per_shard),
+            queue_capacity: doc.usize_or("serve.queue_capacity", d.queue_capacity),
+            max_batch: doc.usize_or("serve.max_batch", d.max_batch),
+            min_fill: doc.usize_or("serve.min_fill", d.min_fill),
+            max_wait_micros: doc.usize_or("serve.max_wait_micros", d.max_wait_micros as usize)
+                as u64,
+            cache_capacity: doc.usize_or("serve.cache_capacity", d.cache_capacity),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.workers_per_shard == 0 {
+            return Err("serve.workers_per_shard must be >= 1".into());
+        }
+        if self.queue_capacity == 0 {
+            return Err("serve.queue_capacity must be >= 1".into());
+        }
+        if self.max_batch == 0 {
+            return Err("serve.max_batch must be >= 1".into());
+        }
+        if self.min_fill == 0 || self.min_fill > self.max_batch {
+            return Err("serve.min_fill must be in 1..=serve.max_batch".into());
+        }
+        Ok(())
+    }
+}
+
 /// Top-level run configuration (CLI entry).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
     pub train: TrainConfig,
+    pub serve: ServeConfig,
     pub artifacts_dir: String,
     pub seeds: Vec<u64>,
 }
@@ -177,6 +269,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         Self {
             train: TrainConfig::default(),
+            serve: ServeConfig::default(),
             artifacts_dir: "artifacts".into(),
             seeds: vec![42, 43, 44, 45],
         }
@@ -197,6 +290,7 @@ impl RunConfig {
         };
         Ok(Self {
             train: TrainConfig::from_doc(doc)?,
+            serve: ServeConfig::from_doc(doc)?,
             artifacts_dir: doc.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
             seeds,
         })
@@ -266,6 +360,55 @@ mod tests {
         assert_eq!(a.train.dataset, DatasetKind::Synth64);
         assert_eq!(b.train.dataset, DatasetKind::Hif2);
         assert_eq!(a.train.backend, ProjectionBackend::Pallas);
+    }
+
+    #[test]
+    fn serve_defaults_validate_and_parse() {
+        ServeConfig::default().validate().unwrap();
+        assert!(ServeConfig::default().effective_shards() >= 1);
+        let doc = parse(
+            r#"
+            [serve]
+            shards = 4
+            queue_capacity = 16
+            max_batch = 32
+            min_fill = 32
+            max_wait_micros = 1000
+            cache_capacity = 0
+            "#,
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.effective_shards(), 4);
+        assert_eq!(cfg.queue_capacity, 16);
+        assert_eq!(cfg.max_batch, 32);
+        assert_eq!(cfg.min_fill, 32);
+        assert_eq!(cfg.max_wait(), std::time::Duration::from_millis(1));
+        assert_eq!(cfg.cache_capacity, 0);
+        // defaults fill the gaps
+        assert_eq!(cfg.workers_per_shard, 1);
+    }
+
+    #[test]
+    fn serve_invalid_values_rejected() {
+        let doc = parse("[serve]\nqueue_capacity = 0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        let doc = parse("[serve]\nmax_batch = 0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        let doc = parse("[serve]\nmax_batch = 4\nmin_fill = 5").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        let doc = parse("[serve]\nworkers_per_shard = 0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn run_config_includes_serve_section() {
+        let doc = parse("[serve]\nshards = 2\nmax_batch = 4").unwrap();
+        let cfg = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.serve.shards, 2);
+        assert_eq!(cfg.serve.max_batch, 4);
+        assert_eq!(RunConfig::default().serve, ServeConfig::default());
     }
 
     #[test]

@@ -59,6 +59,14 @@ impl TomlValue {
             _ => None,
         }
     }
+    pub fn as_str_array(&self) -> Option<Vec<String>> {
+        match self {
+            TomlValue::Array(xs) => {
+                xs.iter().map(|x| x.as_str().map(|s| s.to_string())).collect()
+            }
+            _ => None,
+        }
+    }
 }
 
 /// Flat key → value map with dotted section prefixes.
@@ -246,5 +254,12 @@ mod tests {
             }
             _ => panic!("not an array"),
         }
+        assert_eq!(
+            doc.get("tags").unwrap().as_str_array(),
+            Some(vec!["x".to_string(), "y".to_string()])
+        );
+        // mixed / non-string arrays refuse the string view
+        let doc = parse("nums = [1, 2]").unwrap();
+        assert_eq!(doc.get("nums").unwrap().as_str_array(), None);
     }
 }

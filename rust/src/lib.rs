@@ -9,8 +9,13 @@
 //! * **L3 (this crate)** — the projection library (bi-level projections and
 //!   every exact ℓ1,∞ baseline the paper compares against), dataset
 //!   substrates, the double-descent training coordinator, the PJRT runtime
-//!   that executes AOT-compiled JAX/Pallas artifacts, and the experiment /
-//!   benchmark harness regenerating every table and figure of the paper.
+//!   that executes AOT-compiled JAX/Pallas artifacts, the experiment /
+//!   benchmark harness regenerating every table and figure of the paper,
+//!   and the [`serve`] subsystem — a sharded, micro-batching projection
+//!   service engine (bounded queues with backpressure, an LRU threshold
+//!   cache, per-shard telemetry) that turns the one-shot library calls
+//!   into a sustained request/response service (`bilevel serve` /
+//!   `bilevel loadgen`).
 //! * **L2 (`python/compile/model.py`)** — the supervised autoencoder
 //!   forward/backward + Adam, lowered once to HLO text.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (bi-level
@@ -43,6 +48,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod scalar;
+pub mod serve;
 pub mod tensor;
 
 /// Convenience re-exports covering the most common entry points.
@@ -53,5 +59,6 @@ pub mod prelude {
     pub use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
     pub use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
     pub use crate::scalar::Scalar;
+    pub use crate::serve::{Engine, ProjectionRequest, ProjectionResponse};
     pub use crate::tensor::{Matrix, Vector};
 }

@@ -6,13 +6,16 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 use bilevel_sparse::cli::{Args, USAGE};
-use bilevel_sparse::config::{DatasetKind, ProjectionBackend, RunConfig, TrainConfig};
+use bilevel_sparse::config::{
+    DatasetKind, ProjectionBackend, RunConfig, ServeConfig, TomlDoc, TrainConfig,
+};
 use bilevel_sparse::coordinator::run_seeds;
 use bilevel_sparse::experiments::{self, ExpContext};
 use bilevel_sparse::norms::{column_sparsity, l1inf_norm};
 use bilevel_sparse::projection::{l1::L1Algorithm, ProjectionKind};
 use bilevel_sparse::rng::Xoshiro256pp;
 use bilevel_sparse::runtime::Runtime;
+use bilevel_sparse::serve::{run_loadgen, Engine, LoadgenConfig};
 use bilevel_sparse::tensor::Matrix;
 
 fn main() -> ExitCode {
@@ -28,6 +31,8 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "experiment" => cmd_experiment(&args),
         "artifacts" => cmd_artifacts(&args),
+        "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "help" | "" => {
             println!("{USAGE}");
             Ok(())
@@ -52,16 +57,15 @@ fn cmd_project(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("unknown --method"))?;
     let algo = L1Algorithm::parse(&args.str_or("algo", "condat"))
         .ok_or_else(|| anyhow!("unknown --algo"))?;
-    let _ = algo;
 
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let y = Matrix::<f64>::randn(rows, cols, &mut rng);
     let before = l1inf_norm(&y);
     let t0 = Instant::now();
-    let x = method.apply(&y, eta);
+    let x = method.apply_with(&y, eta, algo);
     let dt = t0.elapsed();
     println!("matrix         : {rows} x {cols} (seed {seed})");
-    println!("method         : {}", method.name());
+    println!("method         : {} (inner l1: {})", method.name(), algo.name());
     println!("eta            : {eta}");
     println!("||Y||_1inf     : {before:.6}");
     println!("||P(Y)||_1inf  : {:.6}", l1inf_norm(&x));
@@ -148,6 +152,123 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     experiments::run(id, &ctx)?;
     println!("experiment {id} done in {:.1}s", t0.elapsed().as_secs_f64());
     Ok(())
+}
+
+/// Shared flag/config plumbing for `serve` and `loadgen`: `--config` seeds
+/// both sections, individual flags override.
+fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig)> {
+    let doc = match args.opt("config") {
+        Some(path) => {
+            let text =
+                std::fs::read_to_string(path).map_err(|e| anyhow!("{path}: {e}"))?;
+            bilevel_sparse::config::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?
+        }
+        None => TomlDoc::default(),
+    };
+    let mut serve = ServeConfig::from_doc(&doc).map_err(|e| anyhow!(e))?;
+    serve.shards = args.usize_or("shards", serve.shards).map_err(|e| anyhow!(e))?;
+    serve.workers_per_shard = args
+        .usize_or("workers-per-shard", serve.workers_per_shard)
+        .map_err(|e| anyhow!(e))?;
+    serve.queue_capacity =
+        args.usize_or("queue", serve.queue_capacity).map_err(|e| anyhow!(e))?;
+    serve.max_batch = args.usize_or("batch", serve.max_batch).map_err(|e| anyhow!(e))?;
+    serve.min_fill = args.usize_or("min-fill", serve.min_fill).map_err(|e| anyhow!(e))?;
+    serve.max_wait_micros = args
+        .usize_or("wait-us", serve.max_wait_micros as usize)
+        .map_err(|e| anyhow!(e))? as u64;
+    serve.cache_capacity =
+        args.usize_or("cache", serve.cache_capacity).map_err(|e| anyhow!(e))?;
+    serve.validate().map_err(|e| anyhow!(e))?;
+
+    let mut load = LoadgenConfig::from_doc(&doc).map_err(|e| anyhow!(e))?;
+    load.clients = args.usize_or("clients", load.clients).map_err(|e| anyhow!(e))?;
+    load.requests_per_client =
+        args.usize_or("requests", load.requests_per_client).map_err(|e| anyhow!(e))?;
+    load.rows = args.usize_or("rows", load.rows).map_err(|e| anyhow!(e))?;
+    load.cols = args.usize_or("cols", load.cols).map_err(|e| anyhow!(e))?;
+    load.eta = args.f64_or("eta", load.eta).map_err(|e| anyhow!(e))?;
+    load.pool = args.usize_or("pool", load.pool).map_err(|e| anyhow!(e))?;
+    load.f32_every = args.usize_or("f32-every", load.f32_every).map_err(|e| anyhow!(e))?;
+    load.seed = args.usize_or("seed", load.seed as usize).map_err(|e| anyhow!(e))? as u64;
+    if let Some(mix) = args.opt("mix") {
+        load.mix = mix
+            .split(',')
+            .map(|p| {
+                ProjectionKind::parse(p.trim())
+                    .ok_or_else(|| anyhow!("--mix: unknown projection {p:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    load.validate().map_err(|e| anyhow!(e))?;
+    Ok((serve, load))
+}
+
+fn run_engine_workload(
+    serve_cfg: &ServeConfig,
+    load_cfg: &LoadgenConfig,
+) -> Result<()> {
+    let mix_names: Vec<&str> = load_cfg.mix.iter().map(|k| k.name()).collect();
+    println!(
+        "engine  : {} shards x {} workers, queue {}, batch <= {} (min-fill {}, wait {} us), cache {}",
+        serve_cfg.effective_shards(),
+        serve_cfg.workers_per_shard,
+        serve_cfg.queue_capacity,
+        serve_cfg.max_batch,
+        serve_cfg.min_fill,
+        serve_cfg.max_wait_micros,
+        serve_cfg.cache_capacity,
+    );
+    println!(
+        "workload: {} clients x {} requests, {}x{} eta={} pool={} mix=[{}]",
+        load_cfg.clients,
+        load_cfg.requests_per_client,
+        load_cfg.rows,
+        load_cfg.cols,
+        load_cfg.eta,
+        load_cfg.pool,
+        mix_names.join(", "),
+    );
+    let engine = Engine::start(serve_cfg).map_err(|e| anyhow!(e))?;
+    let report = run_loadgen(&engine, load_cfg);
+    println!(
+        "client  : {} completed, {} failed, {} backpressure retries",
+        report.completed, report.failed, report.retries
+    );
+    println!(
+        "          {:.0} req/s, latency mean {:.0} us / max {} us, cache hits {} ({:.1} %)",
+        report.throughput_rps(),
+        report.mean_latency_micros(),
+        report.max_latency_micros,
+        report.cache_hits,
+        report.hit_fraction() * 100.0,
+    );
+    let stats = engine.shutdown();
+    print!("{stats}");
+    if report.failed > 0 {
+        return Err(anyhow!("{} requests failed", report.failed));
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (serve_cfg, mut load_cfg) = serve_configs(args)?;
+    // `serve` validates a configuration with a short smoke workload unless
+    // the caller asked for specific volumes.
+    if args.opt("requests").is_none() {
+        load_cfg.requests_per_client = 16;
+    }
+    if args.opt("clients").is_none() {
+        load_cfg.clients = 2;
+    }
+    println!("bilevel serve — projection service engine self-test");
+    run_engine_workload(&serve_cfg, &load_cfg)
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let (serve_cfg, load_cfg) = serve_configs(args)?;
+    println!("bilevel loadgen — closed-loop engine benchmark");
+    run_engine_workload(&serve_cfg, &load_cfg)
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

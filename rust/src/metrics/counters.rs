@@ -1,0 +1,132 @@
+//! Lock-free operational counters for long-running subsystems (the serve
+//! engine's per-shard telemetry). Relaxed atomics everywhere: counters are
+//! monotonic and read via point-in-time snapshots, so no ordering is needed
+//! beyond atomicity.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Streaming latency accumulator: count, total, and max in microseconds.
+/// Mean is derived at snapshot time; the max uses a CAS loop so concurrent
+/// recorders never lose a larger observation.
+#[derive(Debug, Default)]
+pub struct LatencyStat {
+    count: AtomicU64,
+    total_micros: AtomicU64,
+    max_micros: AtomicU64,
+}
+
+impl LatencyStat {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_micros(&self, micros: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.total_micros.fetch_add(micros, Ordering::Relaxed);
+        let mut seen = self.max_micros.load(Ordering::Relaxed);
+        while micros > seen {
+            match self.max_micros.compare_exchange_weak(
+                seen,
+                micros,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(actual) => seen = actual,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn total_micros(&self) -> u64 {
+        self.total_micros.load(Ordering::Relaxed)
+    }
+
+    pub fn max_micros(&self) -> u64 {
+        self.max_micros.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.total_micros() as f64 / n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn latency_tracks_mean_and_max() {
+        let l = LatencyStat::new();
+        assert_eq!(l.mean_micros(), 0.0);
+        l.record_micros(10);
+        l.record_micros(30);
+        l.record_micros(20);
+        assert_eq!(l.count(), 3);
+        assert_eq!(l.total_micros(), 60);
+        assert_eq!(l.max_micros(), 30);
+        assert!((l.mean_micros() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn concurrent_updates_are_not_lost() {
+        let c = Counter::new();
+        let l = LatencyStat::new();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = &c;
+                let l = &l;
+                s.spawn(move || {
+                    for i in 0..1000u64 {
+                        c.inc();
+                        l.record_micros(t * 1000 + i);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+        assert_eq!(l.count(), 4000);
+        assert_eq!(l.max_micros(), 3999);
+    }
+}

@@ -1,4 +1,10 @@
-//! Evaluation metrics + aggregation across seeds/folds.
+//! Evaluation metrics + aggregation across seeds/folds, plus the atomic
+//! operational counters ([`counters`]) that the serve engine publishes its
+//! per-shard latency / throughput / hit-rate telemetry through.
+
+pub mod counters;
+
+pub use counters::{Counter, LatencyStat};
 
 use crate::scalar::Scalar;
 use crate::tensor::Matrix;

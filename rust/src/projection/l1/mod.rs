@@ -26,7 +26,7 @@ use crate::scalar::Scalar;
 use crate::tensor::vec_ops;
 
 /// Selector for the ℓ1 threshold algorithm.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum L1Algorithm {
     Sort,
     Michelot,

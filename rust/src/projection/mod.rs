@@ -34,7 +34,7 @@ pub trait MatrixProjection<T: Scalar>: Send + Sync {
 }
 
 /// Enumeration of all projection operators exposed by the CLI / config.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum ProjectionKind {
     /// Bi-level ℓ1,∞ (paper Alg. 1) — the contribution.
     BilevelL1Inf,
@@ -78,12 +78,36 @@ impl ProjectionKind {
         }
     }
 
+    /// The bi-level variant behind this kind, if it is one of the paper's
+    /// bi-level projections (the kinds whose thresholds the serve cache can
+    /// replay).
+    pub fn bilevel_variant(&self) -> Option<bilevel::BilevelVariant> {
+        match self {
+            Self::BilevelL1Inf => Some(bilevel::BilevelVariant::L1Inf),
+            Self::BilevelL11 => Some(bilevel::BilevelVariant::L11),
+            Self::BilevelL12 => Some(bilevel::BilevelVariant::L12),
+            _ => None,
+        }
+    }
+
     /// Apply this projection to a matrix. `None` is the identity.
     pub fn apply<T: Scalar>(&self, y: &Matrix<T>, eta: T) -> Matrix<T> {
+        self.apply_with(y, eta, l1::L1Algorithm::Condat)
+    }
+
+    /// [`ProjectionKind::apply`] with an explicit inner ℓ1 solver for the
+    /// bi-level kinds (the exact ℓ1,∞ methods have no inner ℓ1 step and
+    /// ignore `algo`).
+    pub fn apply_with<T: Scalar>(
+        &self,
+        y: &Matrix<T>,
+        eta: T,
+        algo: l1::L1Algorithm,
+    ) -> Matrix<T> {
         match self {
-            Self::BilevelL1Inf => bilevel::bilevel_l1inf(y, eta),
-            Self::BilevelL11 => bilevel::bilevel_l11(y, eta),
-            Self::BilevelL12 => bilevel::bilevel_l12(y, eta),
+            Self::BilevelL1Inf => bilevel::bilevel_l1inf_with(y, eta, algo).x,
+            Self::BilevelL11 => bilevel::bilevel_l11_with(y, eta, algo).x,
+            Self::BilevelL12 => bilevel::bilevel_l12_with(y, eta, algo).x,
             Self::ExactL1InfQuattoni => {
                 l1inf::project_l1inf(y, eta, l1inf::L1InfAlgorithm::Quattoni)
             }
@@ -150,6 +174,42 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn apply_with_threads_inner_algorithm() {
+        let mut rng = Xoshiro256pp::seed_from_u64(125);
+        let y = crate::tensor::Matrix::<f64>::randn(20, 10, &mut rng);
+        for kind in ProjectionKind::all() {
+            let base = kind.apply(&y, 2.0);
+            for algo in l1::L1Algorithm::all() {
+                let x = kind.apply_with(&y, 2.0, *algo);
+                assert!(
+                    base.max_abs_diff(&x) < 1e-8,
+                    "{} with inner {} diverges from default",
+                    kind.name(),
+                    algo.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bilevel_variant_mapping() {
+        assert_eq!(
+            ProjectionKind::BilevelL1Inf.bilevel_variant(),
+            Some(bilevel::BilevelVariant::L1Inf)
+        );
+        assert_eq!(
+            ProjectionKind::BilevelL11.bilevel_variant(),
+            Some(bilevel::BilevelVariant::L11)
+        );
+        assert_eq!(
+            ProjectionKind::BilevelL12.bilevel_variant(),
+            Some(bilevel::BilevelVariant::L12)
+        );
+        assert_eq!(ProjectionKind::ExactL1InfSsn.bilevel_variant(), None);
+        assert_eq!(ProjectionKind::None.bilevel_variant(), None);
     }
 
     #[test]

@@ -1,0 +1,297 @@
+//! LRU threshold cache.
+//!
+//! The expensive half of a bi-level projection is the column aggregation +
+//! inner ℓ1 projection that produces the per-column thresholds `û`
+//! ([`crate::projection::bilevel::BilevelResult::thresholds`]). For a
+//! repeated (matrix, η) pair the thresholds are identical, so caching them
+//! lets the engine skip straight to the O(nm) outer column stage — and the
+//! replay (`scheduler::replay`) mirrors the library loop bit-for-bit, so a
+//! hit returns exactly the matrix a cold call would.
+//!
+//! Keys combine a 128-bit fingerprint of the matrix contents (see
+//! [`fingerprint`]) with the radius bits, kind, inner solver, dtype, and
+//! shape. Entries carry a monotonic last-used tick; eviction removes the
+//! stalest entry (classic LRU, implemented as an O(capacity) scan —
+//! capacities are small).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::projection::l1::L1Algorithm;
+use crate::projection::ProjectionKind;
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+use super::request::Dtype;
+
+/// 128-bit content fingerprint over the matrix shape and element bit
+/// patterns (`f32` widens to `f64` exactly, so the fingerprint is
+/// dtype-stable; the cache key carries the dtype separately).
+///
+/// Two independent 64-bit lanes: plain FNV-1a, and FNV-1a over
+/// splitmix64-finalized words from a different basis. A hit is **not**
+/// re-verified against the matrix contents (that would cost the same
+/// O(nm) pass the cache exists to save), so correctness rests on the
+/// ~2⁻⁶⁴ accidental collision probability of the combined 128 bits — fine
+/// for trusted traffic, not a defence against adversarially crafted
+/// payloads.
+pub fn fingerprint<T: Scalar>(y: &Matrix<T>) -> u128 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h1: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
+    let mut h2: u64 = 0x9e37_79b9_7f4a_7c15; // independent lane basis
+    let step = |h1: &mut u64, h2: &mut u64, v: u64| {
+        *h1 = (*h1 ^ v).wrapping_mul(PRIME);
+        *h2 = (*h2 ^ splitmix64(v)).wrapping_mul(PRIME);
+    };
+    step(&mut h1, &mut h2, y.rows() as u64);
+    step(&mut h1, &mut h2, y.cols() as u64);
+    for &x in y.as_slice() {
+        step(&mut h1, &mut h2, x.to_f64().to_bits());
+    }
+    ((h1 as u128) << 64) | h2 as u128
+}
+
+/// splitmix64 finalizer (the word scrambler of the second lane).
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Full identity of a cached threshold vector.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub fingerprint: u128,
+    /// `f64::to_bits` of the request η (bit-exact matching, no epsilon).
+    pub eta_bits: u64,
+    pub kind: ProjectionKind,
+    pub algo: L1Algorithm,
+    pub dtype: Dtype,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl CacheKey {
+    /// Build the key for a request payload.
+    pub fn for_matrix<T: Scalar>(
+        y: &Matrix<T>,
+        eta: f64,
+        kind: ProjectionKind,
+        algo: L1Algorithm,
+        dtype: Dtype,
+    ) -> Self {
+        Self {
+            fingerprint: fingerprint(y),
+            eta_bits: eta.to_bits(),
+            kind,
+            algo,
+            dtype,
+            rows: y.rows(),
+            cols: y.cols(),
+        }
+    }
+}
+
+/// Threshold vector stored in the dtype it was computed in, so replays are
+/// bit-identical (no f32 ↔ f64 round-trips).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CachedThresholds {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+}
+
+impl CachedThresholds {
+    pub fn len(&self) -> usize {
+        match self {
+            Self::F32(v) => v.len(),
+            Self::F64(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Scalar types whose threshold vectors the cache can store natively.
+pub trait ThresholdScalar: Scalar {
+    fn wrap(v: Vec<Self>) -> CachedThresholds;
+    fn unwrap(ct: &CachedThresholds) -> Option<Vec<Self>>;
+}
+
+impl ThresholdScalar for f32 {
+    fn wrap(v: Vec<Self>) -> CachedThresholds {
+        CachedThresholds::F32(v)
+    }
+    fn unwrap(ct: &CachedThresholds) -> Option<Vec<Self>> {
+        match ct {
+            CachedThresholds::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl ThresholdScalar for f64 {
+    fn wrap(v: Vec<Self>) -> CachedThresholds {
+        CachedThresholds::F64(v)
+    }
+    fn unwrap(ct: &CachedThresholds) -> Option<Vec<Self>> {
+        match ct {
+            CachedThresholds::F64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+struct Entry {
+    thresholds: CachedThresholds,
+    last_used: u64,
+}
+
+struct Inner {
+    map: HashMap<CacheKey, Entry>,
+    tick: u64,
+}
+
+/// Thread-safe LRU cache shared by every shard of an engine.
+pub struct ThresholdCache {
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ThresholdCache {
+    /// `capacity = 0` builds a disabled cache (every lookup misses, inserts
+    /// are dropped).
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            capacity,
+            inner: Mutex::new(Inner { map: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Look up and touch (refresh LRU recency of) an entry.
+    pub fn get(&self, key: &CacheKey) -> Option<CachedThresholds> {
+        if !self.enabled() {
+            return None;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(key).map(|e| {
+            e.last_used = tick;
+            e.thresholds.clone()
+        })
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used one
+    /// when at capacity.
+    pub fn insert(&self, key: CacheKey, thresholds: CachedThresholds) {
+        if !self.enabled() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if inner.map.len() >= self.capacity && !inner.map.contains_key(&key) {
+            if let Some(stalest) =
+                inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
+            {
+                inner.map.remove(&stalest);
+            }
+        }
+        inner.map.insert(key, Entry { thresholds, last_used: tick });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn key(fp: u128) -> CacheKey {
+        CacheKey {
+            fingerprint: fp,
+            eta_bits: 1.0f64.to_bits(),
+            kind: ProjectionKind::BilevelL1Inf,
+            algo: L1Algorithm::Condat,
+            dtype: Dtype::F64,
+            rows: 2,
+            cols: 2,
+        }
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_content_and_shape() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let a = Matrix::<f64>::randn(6, 5, &mut rng);
+        assert_eq!(fingerprint(&a), fingerprint(&a.clone()));
+        let mut b = a.clone();
+        b.set(3, 2, b.get(3, 2) + 1e-12);
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        // same data, transposed shape
+        assert_ne!(fingerprint(&a), fingerprint(&a.transpose()));
+    }
+
+    #[test]
+    fn hit_and_miss() {
+        let c = ThresholdCache::new(4);
+        assert!(c.get(&key(1)).is_none());
+        c.insert(key(1), CachedThresholds::F64(vec![0.5, 0.25]));
+        match c.get(&key(1)) {
+            Some(CachedThresholds::F64(v)) => assert_eq!(v, vec![0.5, 0.25]),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        // eta participates in the key
+        let mut k2 = key(1);
+        k2.eta_bits = 2.0f64.to_bits();
+        assert!(c.get(&k2).is_none());
+    }
+
+    #[test]
+    fn lru_evicts_stalest() {
+        let c = ThresholdCache::new(2);
+        c.insert(key(1), CachedThresholds::F64(vec![1.0]));
+        c.insert(key(2), CachedThresholds::F64(vec![2.0]));
+        // touch 1 so 2 becomes stalest
+        assert!(c.get(&key(1)).is_some());
+        c.insert(key(3), CachedThresholds::F64(vec![3.0]));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1)).is_some());
+        assert!(c.get(&key(2)).is_none());
+        assert!(c.get(&key(3)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let c = ThresholdCache::new(0);
+        assert!(!c.enabled());
+        c.insert(key(1), CachedThresholds::F64(vec![1.0]));
+        assert!(c.get(&key(1)).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn threshold_scalar_roundtrip() {
+        let ct = <f64 as ThresholdScalar>::wrap(vec![1.0, 2.0]);
+        assert_eq!(ct.len(), 2);
+        assert_eq!(<f64 as ThresholdScalar>::unwrap(&ct), Some(vec![1.0, 2.0]));
+        assert_eq!(<f32 as ThresholdScalar>::unwrap(&ct), None);
+    }
+}

@@ -1,0 +1,311 @@
+//! The engine: sharded worker pool + submission front-end.
+//!
+//! `Engine::start` spawns `shards × workers_per_shard` OS threads (scoped
+//! `std::thread`, consistent with the crate's no-rayon policy), each shard
+//! owning a bounded [`JobQueue`]. `submit` round-robins requests across
+//! shards — same-key traffic still coalesces inside each shard's queue —
+//! and converts a full queue into [`SubmitError::Overloaded`] with a
+//! retry-after hint instead of blocking the caller (load-shedding, not
+//! convoying). Responses travel over a per-request `mpsc` channel wrapped
+//! in a [`ResponseHandle`].
+//!
+//! Shutdown is graceful: queues are closed, already-accepted jobs execute,
+//! workers drain and exit, and `Drop` performs the same sequence so an
+//! engine can never leak threads.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::ServeConfig;
+
+use super::cache::ThresholdCache;
+use super::queue::{JobQueue, PushError};
+use super::request::{BatchKey, ProjectionRequest, ProjectionResponse, SubmitError};
+use super::scheduler::{self, BatchPolicy};
+use super::stats::{EngineStats, ShardCounters};
+
+/// A queued unit of work.
+struct Job {
+    req: ProjectionRequest,
+    key: BatchKey,
+    tx: mpsc::Sender<ProjectionResponse>,
+    enqueued: Instant,
+}
+
+struct Shard {
+    index: usize,
+    queue: JobQueue<Job>,
+    counters: ShardCounters,
+}
+
+/// Receiver side of a submitted request.
+pub struct ResponseHandle {
+    rx: mpsc::Receiver<ProjectionResponse>,
+}
+
+impl ResponseHandle {
+    /// Block until the response arrives. `None` only if the engine was
+    /// torn down before the job executed.
+    pub fn wait(self) -> Option<ProjectionResponse> {
+        self.rx.recv().ok()
+    }
+}
+
+/// Sharded, micro-batching projection service engine.
+pub struct Engine {
+    shards: Vec<Arc<Shard>>,
+    cache: Arc<ThresholdCache>,
+    workers: Vec<JoinHandle<()>>,
+    rr: AtomicUsize,
+    retry_after: Duration,
+    started: Instant,
+}
+
+impl Engine {
+    /// Validate `cfg`, spawn the worker pool, and return a running engine.
+    pub fn start(cfg: &ServeConfig) -> Result<Self, String> {
+        cfg.validate()?;
+        let nshards = cfg.effective_shards();
+        let policy = BatchPolicy {
+            max_batch: cfg.max_batch,
+            min_fill: cfg.min_fill,
+            max_wait: cfg.max_wait(),
+        };
+        let cache = Arc::new(ThresholdCache::new(cfg.cache_capacity));
+        let mut shards = Vec::with_capacity(nshards);
+        let mut workers = Vec::with_capacity(nshards * cfg.workers_per_shard);
+        for index in 0..nshards {
+            let shard = Arc::new(Shard {
+                index,
+                queue: JobQueue::new(cfg.queue_capacity),
+                counters: ShardCounters::new(),
+            });
+            for w in 0..cfg.workers_per_shard {
+                let worker_shard = Arc::clone(&shard);
+                let worker_cache = Arc::clone(&cache);
+                let spawned = std::thread::Builder::new()
+                    .name(format!("serve-{index}.{w}"))
+                    .spawn(move || worker_loop(&worker_shard, &worker_cache, policy));
+                match spawned {
+                    Ok(handle) => workers.push(handle),
+                    Err(e) => {
+                        // Unwind cleanly: close every queue (including this
+                        // shard's) so already-spawned workers exit instead
+                        // of parking in pop_wait forever, then join them.
+                        shard.queue.close();
+                        for s in &shards {
+                            s.queue.close();
+                        }
+                        for handle in workers.drain(..) {
+                            let _ = handle.join();
+                        }
+                        return Err(format!("spawning serve worker: {e}"));
+                    }
+                }
+            }
+            shards.push(shard);
+        }
+        // Retry hint: one full batch window plus a floor, so a backoff
+        // sleep outlives the congestion that caused the rejection.
+        let retry_after = (cfg.max_wait() * 2).max(Duration::from_micros(100));
+        Ok(Self {
+            shards,
+            cache,
+            workers,
+            rr: AtomicUsize::new(0),
+            retry_after,
+            started: Instant::now(),
+        })
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Entries currently held by the shared threshold cache.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Enqueue a request; returns a handle to wait on, or an admission /
+    /// backpressure error. Never blocks.
+    pub fn submit(&self, req: ProjectionRequest) -> Result<ResponseHandle, SubmitError> {
+        req.validate().map_err(SubmitError::Invalid)?;
+        let shard = &self.shards[self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len()];
+        let (tx, rx) = mpsc::channel();
+        let job = Job { key: req.batch_key(), req, tx, enqueued: Instant::now() };
+        match shard.queue.try_push(job) {
+            Ok(_depth) => {
+                shard.counters.submitted.inc();
+                Ok(ResponseHandle { rx })
+            }
+            Err(PushError::Full(_)) => {
+                shard.counters.rejected.inc();
+                Err(SubmitError::Overloaded {
+                    shard: shard.index,
+                    depth: shard.queue.capacity(),
+                    retry_after: self.retry_after,
+                })
+            }
+            Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
+        }
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, req: ProjectionRequest) -> Result<ProjectionResponse, SubmitError> {
+        self.submit(req)?.wait().ok_or(SubmitError::ShuttingDown)
+    }
+
+    /// Point-in-time snapshot of every shard's counters.
+    pub fn stats(&self) -> EngineStats {
+        EngineStats {
+            uptime: self.started.elapsed(),
+            shards: self
+                .shards
+                .iter()
+                .map(|s| s.counters.snapshot(s.index, s.queue.len()))
+                .collect(),
+        }
+    }
+
+    /// Stop accepting work, execute everything already queued, join the
+    /// workers, and return the final stats.
+    pub fn shutdown(mut self) -> EngineStats {
+        self.finish();
+        self.stats()
+    }
+
+    fn finish(&mut self) {
+        for shard in &self.shards {
+            shard.queue.close();
+        }
+        for handle in self.workers.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
+    while let Some(first) = shard.queue.pop_wait() {
+        let batch = scheduler::collect_batch(&shard.queue, first, policy, |j: &Job| j.key);
+        let batch_size = batch.len();
+        shard.counters.batches.inc();
+        shard.counters.batched_jobs.add(batch_size as u64);
+        for job in batch {
+            let queue_micros = job.enqueued.elapsed().as_micros() as u64;
+            let t0 = Instant::now();
+            let out = scheduler::execute(&job.req, cache);
+            let exec_micros = t0.elapsed().as_micros() as u64;
+            shard.counters.completed.inc();
+            if scheduler::cacheable(job.req.kind) {
+                if out.cache_hit {
+                    shard.counters.cache_hits.inc();
+                } else {
+                    shard.counters.cache_misses.inc();
+                }
+            }
+            shard.counters.queue_wait.record_micros(queue_micros);
+            shard.counters.exec.record_micros(exec_micros);
+            // A dropped handle just means the client stopped caring.
+            let _ = job.tx.send(ProjectionResponse {
+                kind: job.req.kind,
+                payload: out.payload,
+                thresholds: out.thresholds,
+                cache_hit: out.cache_hit,
+                batch_size,
+                shard: shard.index,
+                queue_micros,
+                exec_micros,
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projection::ProjectionKind;
+    use crate::rng::Xoshiro256pp;
+    use crate::serve::request::Payload;
+    use crate::tensor::Matrix;
+
+    fn small_cfg() -> ServeConfig {
+        ServeConfig {
+            shards: 2,
+            workers_per_shard: 1,
+            queue_capacity: 32,
+            max_batch: 4,
+            min_fill: 1,
+            max_wait_micros: 100,
+            cache_capacity: 8,
+        }
+    }
+
+    #[test]
+    fn round_trips_a_request() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let y = Matrix::<f64>::randn(12, 9, &mut rng);
+        let resp = engine
+            .submit_wait(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y.clone()))
+            .unwrap();
+        let direct = crate::projection::bilevel::bilevel_l1inf(&y, 1.0);
+        let Payload::F64(x) = &resp.payload else { panic!("dtype changed") };
+        assert_eq!(x.max_abs_diff(&direct), 0.0);
+        assert!(resp.batch_size >= 1);
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed(), 1);
+        assert_eq!(stats.submitted(), 1);
+    }
+
+    #[test]
+    fn invalid_request_is_rejected_up_front() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let err = engine
+            .submit(ProjectionRequest::f64(
+                ProjectionKind::BilevelL1Inf,
+                -1.0,
+                Matrix::<f64>::zeros(2, 2),
+            ))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)));
+        assert_eq!(engine.stats().submitted(), 0);
+    }
+
+    #[test]
+    fn invalid_config_refused() {
+        let cfg = ServeConfig { queue_capacity: 0, ..ServeConfig::default() };
+        assert!(Engine::start(&cfg).is_err());
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let y = Matrix::<f64>::randn(8, 8, &mut rng);
+            handles.push(
+                engine
+                    .submit(ProjectionRequest::f64(ProjectionKind::BilevelL11, 0.5, y))
+                    .unwrap(),
+            );
+        }
+        drop(engine); // graceful: queued jobs still execute
+        let mut got = 0;
+        for h in handles {
+            if h.wait().is_some() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 8);
+    }
+}

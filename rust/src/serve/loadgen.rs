@@ -1,0 +1,296 @@
+//! Closed-loop load generator for the engine.
+//!
+//! Drives an [`Engine`] with a mixed-[`ProjectionKind`] workload from `N`
+//! client threads, each cycling a shared pool of matrices (a small pool is
+//! how the benches and tests provoke threshold-cache hits) and obeying the
+//! engine's backpressure protocol: an `Overloaded` rejection sleeps for the
+//! suggested `retry_after` and resubmits. Used by the `loadgen` and `serve`
+//! CLI subcommands and `benches/serve_throughput.rs`.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::config::TomlDoc;
+use crate::projection::ProjectionKind;
+use crate::tensor::Matrix;
+
+use super::engine::Engine;
+use super::request::{ProjectionRequest, SubmitError};
+
+/// Shape of the generated workload.
+#[derive(Clone, Debug)]
+pub struct LoadgenConfig {
+    /// Concurrent closed-loop clients (threads).
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub rows: usize,
+    pub cols: usize,
+    pub eta: f64,
+    /// Kinds cycled per request.
+    pub mix: Vec<ProjectionKind>,
+    /// Distinct matrices shared by all clients; small pools repeat
+    /// requests and exercise the threshold cache.
+    pub pool: usize,
+    /// Every `f32_every`-th request (per client) carries an `f32` payload;
+    /// 0 keeps the workload pure `f64`.
+    pub f32_every: usize,
+    pub seed: u64,
+}
+
+impl Default for LoadgenConfig {
+    fn default() -> Self {
+        Self {
+            clients: 4,
+            requests_per_client: 64,
+            rows: 128,
+            cols: 128,
+            eta: 1.0,
+            mix: vec![
+                ProjectionKind::BilevelL1Inf,
+                ProjectionKind::BilevelL11,
+                ProjectionKind::BilevelL12,
+                ProjectionKind::ExactL1InfSsn,
+            ],
+            pool: 8,
+            f32_every: 4,
+            seed: 42,
+        }
+    }
+}
+
+impl LoadgenConfig {
+    /// Build from a parsed TOML doc (`[loadgen]` section), defaults
+    /// elsewhere.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let mix = match doc.get("loadgen.mix") {
+            Some(v) => v
+                .as_str_array()
+                .ok_or("loadgen.mix must be an array of strings")?
+                .iter()
+                .map(|s| {
+                    ProjectionKind::parse(s)
+                        .ok_or_else(|| format!("loadgen.mix: unknown projection {s:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+            None => d.mix,
+        };
+        let cfg = Self {
+            clients: doc.usize_or("loadgen.clients", d.clients),
+            requests_per_client: doc
+                .usize_or("loadgen.requests_per_client", d.requests_per_client),
+            rows: doc.usize_or("loadgen.rows", d.rows),
+            cols: doc.usize_or("loadgen.cols", d.cols),
+            eta: doc.f64_or("loadgen.eta", d.eta),
+            mix,
+            pool: doc.usize_or("loadgen.pool", d.pool),
+            f32_every: doc.usize_or("loadgen.f32_every", d.f32_every),
+            seed: doc.usize_or("loadgen.seed", d.seed as usize) as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.clients == 0 {
+            return Err("loadgen.clients must be >= 1".into());
+        }
+        if self.mix.is_empty() {
+            return Err("loadgen.mix must not be empty".into());
+        }
+        if self.rows == 0 || self.cols == 0 {
+            return Err("loadgen matrix shape must be non-empty".into());
+        }
+        if self.pool == 0 {
+            return Err("loadgen.pool must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
+/// Client-side view of a load run (the engine's own counters are reported
+/// separately via [`Engine::stats`]).
+#[derive(Clone, Debug, Default)]
+pub struct LoadReport {
+    pub completed: u64,
+    /// Backpressure rejections that were retried.
+    pub retries: u64,
+    /// Requests abandoned (engine shut down or retry budget exhausted).
+    pub failed: u64,
+    pub cache_hits: u64,
+    pub total_latency_micros: u64,
+    pub max_latency_micros: u64,
+    pub elapsed: Duration,
+}
+
+impl LoadReport {
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.completed as f64 / secs
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean_latency_micros(&self) -> f64 {
+        if self.completed > 0 {
+            self.total_latency_micros as f64 / self.completed as f64
+        } else {
+            0.0
+        }
+    }
+
+    pub fn hit_fraction(&self) -> f64 {
+        if self.completed > 0 {
+            self.cache_hits as f64 / self.completed as f64
+        } else {
+            0.0
+        }
+    }
+
+    fn absorb(&mut self, other: &LoadReport) {
+        self.completed += other.completed;
+        self.retries += other.retries;
+        self.failed += other.failed;
+        self.cache_hits += other.cache_hits;
+        self.total_latency_micros += other.total_latency_micros;
+        self.max_latency_micros = self.max_latency_micros.max(other.max_latency_micros);
+    }
+}
+
+/// Run the closed-loop workload to completion and aggregate the clients'
+/// local tallies.
+pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
+    cfg.validate().expect("invalid loadgen config");
+    let pool: Vec<Matrix<f64>> = {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(cfg.seed);
+        (0..cfg.pool).map(|_| Matrix::randn(cfg.rows, cfg.cols, &mut rng)).collect()
+    };
+    let pool32: Vec<Matrix<f32>> = if cfg.f32_every > 0 {
+        pool.iter().map(|m| m.cast()).collect()
+    } else {
+        Vec::new()
+    };
+    let aggregate = Mutex::new(LoadReport::default());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for client in 0..cfg.clients {
+            let pool = &pool;
+            let pool32 = &pool32;
+            let aggregate = &aggregate;
+            s.spawn(move || {
+                let mut local = LoadReport::default();
+                for i in 0..cfg.requests_per_client {
+                    let idx = (client + i) % pool.len();
+                    let kind = cfg.mix[(client + i) % cfg.mix.len()];
+                    let use_f32 = cfg.f32_every > 0 && (i + 1) % cfg.f32_every == 0;
+                    let request = if use_f32 {
+                        ProjectionRequest::f32(kind, cfg.eta, pool32[idx].clone())
+                    } else {
+                        ProjectionRequest::f64(kind, cfg.eta, pool[idx].clone())
+                    };
+                    let t = Instant::now();
+                    let mut attempts = 0u32;
+                    loop {
+                        match engine.submit_wait(request.clone()) {
+                            Ok(resp) => {
+                                let micros = t.elapsed().as_micros() as u64;
+                                local.completed += 1;
+                                if resp.cache_hit {
+                                    local.cache_hits += 1;
+                                }
+                                local.total_latency_micros += micros;
+                                local.max_latency_micros = local.max_latency_micros.max(micros);
+                                break;
+                            }
+                            Err(SubmitError::Overloaded { retry_after, .. }) => {
+                                attempts += 1;
+                                if attempts > 10_000 {
+                                    local.failed += 1;
+                                    break;
+                                }
+                                local.retries += 1;
+                                std::thread::sleep(retry_after);
+                            }
+                            Err(_) => {
+                                local.failed += 1;
+                                break;
+                            }
+                        }
+                    }
+                }
+                aggregate.lock().unwrap().absorb(&local);
+            });
+        }
+    });
+    let mut report = aggregate.into_inner().unwrap();
+    report.elapsed = t0.elapsed();
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{parse, ServeConfig};
+
+    #[test]
+    fn from_doc_parses_mix_and_sizes() {
+        let doc = parse(
+            r#"
+            [loadgen]
+            clients = 2
+            requests_per_client = 3
+            rows = 16
+            cols = 8
+            eta = 0.5
+            pool = 2
+            f32_every = 0
+            seed = 7
+            mix = ["bilevel-l1inf", "none"]
+            "#,
+        )
+        .unwrap();
+        let cfg = LoadgenConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.clients, 2);
+        assert_eq!(cfg.total_requests(), 6);
+        assert_eq!(cfg.mix, vec![ProjectionKind::BilevelL1Inf, ProjectionKind::None]);
+        assert_eq!(cfg.eta, 0.5);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn from_doc_rejects_unknown_kind() {
+        let doc = parse("[loadgen]\nmix = [\"bogus\"]").unwrap();
+        assert!(LoadgenConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn small_closed_loop_completes_every_request() {
+        let engine = Engine::start(&ServeConfig {
+            shards: 2,
+            cache_capacity: 32,
+            ..ServeConfig::default()
+        })
+        .unwrap();
+        let cfg = LoadgenConfig {
+            clients: 3,
+            requests_per_client: 10,
+            rows: 16,
+            cols: 12,
+            pool: 2,
+            ..LoadgenConfig::default()
+        };
+        let report = run_loadgen(&engine, &cfg);
+        assert_eq!(report.completed, 30);
+        assert_eq!(report.failed, 0);
+        assert!(report.elapsed > Duration::ZERO);
+        assert!(report.throughput_rps() > 0.0);
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed(), 30);
+    }
+}

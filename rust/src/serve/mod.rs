@@ -1,0 +1,69 @@
+//! # `serve` — the sharded, micro-batching projection service engine
+//!
+//! The ROADMAP's first "library → system" step: a multi-threaded service
+//! that accepts, schedules, and executes a sustained stream of
+//! heterogeneous projection requests. The paper's O(nm) bi-level ℓ1,∞
+//! projection is cheap enough to sit on a hot serving path; this subsystem
+//! supplies the machinery around it:
+//!
+//! * **Job model** ([`request`]) — [`ProjectionRequest`] /
+//!   [`ProjectionResponse`] covering every
+//!   [`ProjectionKind`](crate::projection::ProjectionKind), radius, and
+//!   dtype (`f32`/`f64`); requests agreeing on (kind, algo, dtype, shape)
+//!   share a [`BatchKey`].
+//! * **Sharded worker pool** ([`engine`]) — `std::thread` workers (the
+//!   crate's no-rayon policy) over bounded MPMC [`queue::JobQueue`]s;
+//!   round-robin submission; a full queue rejects with
+//!   [`SubmitError::Overloaded`] + retry-after instead of blocking.
+//! * **Micro-batching scheduler** ([`scheduler`]) — workers coalesce
+//!   same-key requests into batches under a configurable
+//!   max-batch / min-fill / max-wait [`BatchPolicy`].
+//! * **LRU threshold cache** ([`cache`]) — keyed by (matrix fingerprint,
+//!   η, kind, algo, dtype, shape); a hit replays the cached per-column
+//!   thresholds through the outer column stage only, bit-identical to a
+//!   cold call.
+//! * **Telemetry** ([`stats`]) — per-shard latency / throughput / batch /
+//!   hit-rate counters via [`crate::metrics::counters`].
+//! * **Load generation** ([`loadgen`]) — the closed-loop driver behind the
+//!   `serve` / `loadgen` CLI subcommands and
+//!   `benches/serve_throughput.rs`.
+//!
+//! Sizing lives in [`ServeConfig`] (`[serve]` section of the TOML config).
+//!
+//! ```no_run
+//! use bilevel_sparse::config::ServeConfig;
+//! use bilevel_sparse::projection::ProjectionKind;
+//! use bilevel_sparse::rng::Xoshiro256pp;
+//! use bilevel_sparse::serve::{Engine, ProjectionRequest};
+//! use bilevel_sparse::tensor::Matrix;
+//!
+//! let engine = Engine::start(&ServeConfig::default()).unwrap();
+//! let mut rng = Xoshiro256pp::seed_from_u64(0);
+//! let y = Matrix::<f64>::randn(256, 128, &mut rng);
+//! let resp = engine
+//!     .submit_wait(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y))
+//!     .unwrap();
+//! assert!(resp.thresholds.is_some());
+//! println!("{}", engine.shutdown());
+//! ```
+
+pub mod cache;
+pub mod engine;
+pub mod loadgen;
+pub mod queue;
+pub mod request;
+pub mod scheduler;
+pub mod stats;
+
+pub use cache::{fingerprint, CacheKey, CachedThresholds, ThresholdCache};
+pub use engine::{Engine, ResponseHandle};
+pub use loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use queue::{JobQueue, PushError};
+pub use request::{
+    BatchKey, Dtype, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
+};
+pub use scheduler::{cacheable, BatchPolicy};
+pub use stats::{EngineStats, ShardStats};
+
+// Convenience re-export (the config type lives with the other schemas).
+pub use crate::config::ServeConfig;

@@ -1,0 +1,235 @@
+//! Bounded MPMC job queue: `Mutex<VecDeque>` + `Condvar`, in the same
+//! no-external-deps spirit as `projection::bilevel::parallel` (no
+//! crossbeam offline).
+//!
+//! Producers [`JobQueue::try_push`] and never block: a full queue is the
+//! backpressure signal the engine turns into reject-with-retry-after.
+//! Consumers block in [`JobQueue::pop_wait`], and the micro-batching
+//! scheduler uses [`JobQueue::await_push`] / [`JobQueue::drain_matching`]
+//! to coalesce same-key jobs that arrive inside its wait window.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Push failure, handing the item back to the caller.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// Queue is at capacity (the backpressure high-water mark).
+    Full(T),
+    /// Queue was closed; no further work is accepted.
+    Closed(T),
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    /// Total successful pushes ever — lets waiters detect arrivals without
+    /// confusing them with concurrent consumption by sibling workers.
+    pushes: u64,
+    closed: bool,
+}
+
+/// Bounded multi-producer / multi-consumer FIFO.
+pub struct JobQueue<T> {
+    state: Mutex<State<T>>,
+    signal: Condvar,
+    capacity: usize,
+}
+
+impl<T> JobQueue<T> {
+    /// `capacity` is the high-water mark; must be at least 1.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "JobQueue capacity must be >= 1");
+        Self {
+            state: Mutex::new(State {
+                items: VecDeque::with_capacity(capacity.min(1024)),
+                pushes: 0,
+                closed: false,
+            }),
+            signal: Condvar::new(),
+            capacity,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Number of successful pushes so far (see [`JobQueue::await_push`]).
+    pub fn push_count(&self) -> u64 {
+        self.state.lock().unwrap().pushes
+    }
+
+    /// Non-blocking bounded push; returns the queue depth after the push.
+    pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(PushError::Closed(item));
+        }
+        if s.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        s.items.push_back(item);
+        s.pushes += 1;
+        let depth = s.items.len();
+        drop(s);
+        // notify_all: pop_wait and await_push waiters share the condvar, so
+        // a single notify could be swallowed by a batch-fill waiter while a
+        // popper sleeps on an available item.
+        self.signal.notify_all();
+        Ok(depth)
+    }
+
+    /// Stop accepting work and wake every waiter. Items already queued are
+    /// still handed out by `pop_wait` (graceful drain).
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.signal.notify_all();
+    }
+
+    /// Block until an item is available (`Some`) or the queue is closed and
+    /// fully drained (`None`).
+    pub fn pop_wait(&self) -> Option<T> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = s.items.pop_front() {
+                return Some(item);
+            }
+            if s.closed {
+                return None;
+            }
+            s = self.signal.wait(s).unwrap();
+        }
+    }
+
+    /// Block until a push lands after the `seen` counter value, the queue
+    /// closes, or `deadline` passes. Returns the current push count.
+    pub fn await_push(&self, seen: u64, deadline: Instant) -> u64 {
+        let mut s = self.state.lock().unwrap();
+        while s.pushes == seen && !s.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.signal.wait_timeout(s, deadline - now).unwrap();
+            s = guard;
+        }
+        s.pushes
+    }
+
+    /// Remove up to `max` items satisfying `pred`, scanning front to back;
+    /// the relative order of the remaining items is preserved.
+    pub fn drain_matching(&self, max: usize, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        if max == 0 {
+            return out;
+        }
+        let mut s = self.state.lock().unwrap();
+        let mut i = 0;
+        while i < s.items.len() && out.len() < max {
+            if pred(&s.items[i]) {
+                out.push(s.items.remove(i).expect("index in bounds"));
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_push_pop() {
+        let q = JobQueue::new(4);
+        assert_eq!(q.try_push(1).unwrap(), 1);
+        assert_eq!(q.try_push(2).unwrap(), 2);
+        assert_eq!(q.pop_wait(), Some(1));
+        assert_eq!(q.pop_wait(), Some(2));
+        assert_eq!(q.push_count(), 2);
+    }
+
+    #[test]
+    fn rejects_beyond_capacity() {
+        let q = JobQueue::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        match q.try_push(3) {
+            Err(PushError::Full(item)) => assert_eq!(item, 3),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = JobQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        match q.try_push(8) {
+            Err(PushError::Closed(item)) => assert_eq!(item, 8),
+            other => panic!("expected Closed, got {other:?}"),
+        }
+        assert_eq!(q.pop_wait(), Some(7));
+        assert_eq!(q.pop_wait(), None);
+        assert!(q.is_closed());
+    }
+
+    #[test]
+    fn pop_wait_blocks_until_push() {
+        let q = std::sync::Arc::new(JobQueue::new(4));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_wait());
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(42).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn await_push_times_out_and_detects_arrivals() {
+        let q = JobQueue::new(4);
+        let seen = q.push_count();
+        let t0 = Instant::now();
+        let after = q.await_push(seen, Instant::now() + Duration::from_millis(30));
+        assert_eq!(after, seen);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+        q.try_push(1).unwrap();
+        // already-arrived pushes return immediately
+        let after = q.await_push(seen, Instant::now() + Duration::from_secs(10));
+        assert_eq!(after, seen + 1);
+    }
+
+    #[test]
+    fn drain_matching_preserves_other_items() {
+        let q = JobQueue::new(8);
+        for i in 0..6 {
+            q.try_push(i).unwrap();
+        }
+        let evens = q.drain_matching(2, |x| x % 2 == 0);
+        assert_eq!(evens, vec![0, 2]);
+        let rest: Vec<i32> = std::iter::from_fn(|| {
+            if q.is_empty() {
+                None
+            } else {
+                q.pop_wait()
+            }
+        })
+        .collect();
+        assert_eq!(rest, vec![1, 3, 4, 5]);
+    }
+}

@@ -1,0 +1,262 @@
+//! The serve job model: requests, responses, batch keys, and submit errors.
+//!
+//! A [`ProjectionRequest`] pairs a [`ProjectionKind`] (any of the paper's
+//! bi-level projections, the exact ℓ1,∞ baselines, or the identity) with a
+//! radius η, an inner ℓ1 solver, and an owned matrix payload in either
+//! dtype the projection library supports. Requests that agree on
+//! (kind, algo, dtype, shape) share a [`BatchKey`] and are eligible for
+//! coalescing by the micro-batching scheduler.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::projection::l1::L1Algorithm;
+use crate::projection::ProjectionKind;
+use crate::tensor::Matrix;
+
+/// Element type of a request payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Dtype {
+    F32,
+    F64,
+}
+
+impl Dtype {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::F64 => "f64",
+        }
+    }
+}
+
+/// An owned matrix in one of the supported dtypes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    F32(Matrix<f32>),
+    F64(Matrix<f64>),
+}
+
+impl Payload {
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Self::F32(_) => Dtype::F32,
+            Self::F64(_) => Dtype::F64,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        match self {
+            Self::F32(m) => m.rows(),
+            Self::F64(m) => m.rows(),
+        }
+    }
+
+    pub fn cols(&self) -> usize {
+        match self {
+            Self::F32(m) => m.cols(),
+            Self::F64(m) => m.cols(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Self::F32(m) => m.len(),
+            Self::F64(m) => m.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Option<&Matrix<f32>> {
+        match self {
+            Self::F32(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<&Matrix<f64>> {
+        match self {
+            Self::F64(m) => Some(m),
+            _ => None,
+        }
+    }
+}
+
+/// Coalescing key: requests with equal keys may execute in one batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BatchKey {
+    pub kind: ProjectionKind,
+    pub algo: L1Algorithm,
+    pub dtype: Dtype,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// One projection job submitted to the engine.
+#[derive(Clone, Debug)]
+pub struct ProjectionRequest {
+    pub kind: ProjectionKind,
+    /// Inner ℓ1 solver for the bi-level kinds (ignored by the exact ones).
+    pub algo: L1Algorithm,
+    /// Projection radius η (converted to the payload dtype at execution).
+    pub eta: f64,
+    pub payload: Payload,
+}
+
+impl ProjectionRequest {
+    /// An `f64` request with the default (Condat) inner solver.
+    pub fn f64(kind: ProjectionKind, eta: f64, y: Matrix<f64>) -> Self {
+        Self { kind, algo: L1Algorithm::Condat, eta, payload: Payload::F64(y) }
+    }
+
+    /// An `f32` request with the default (Condat) inner solver.
+    pub fn f32(kind: ProjectionKind, eta: f64, y: Matrix<f32>) -> Self {
+        Self { kind, algo: L1Algorithm::Condat, eta, payload: Payload::F32(y) }
+    }
+
+    /// Override the inner ℓ1 solver.
+    pub fn with_algo(mut self, algo: L1Algorithm) -> Self {
+        self.algo = algo;
+        self
+    }
+
+    pub fn batch_key(&self) -> BatchKey {
+        BatchKey {
+            kind: self.kind,
+            algo: self.algo,
+            dtype: self.payload.dtype(),
+            rows: self.payload.rows(),
+            cols: self.payload.cols(),
+        }
+    }
+
+    /// Admission checks applied before a request is enqueued.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.eta.is_finite() {
+            return Err(format!("eta must be finite, got {}", self.eta));
+        }
+        if self.eta < 0.0 {
+            return Err(format!("eta must be non-negative, got {}", self.eta));
+        }
+        if self.payload.is_empty() {
+            return Err("empty matrix payload".into());
+        }
+        Ok(())
+    }
+}
+
+/// A completed projection.
+#[derive(Clone, Debug)]
+pub struct ProjectionResponse {
+    pub kind: ProjectionKind,
+    /// The projected matrix, same dtype and shape as the request payload.
+    pub payload: Payload,
+    /// Per-column thresholds `û` for the bi-level kinds (as `f64`).
+    pub thresholds: Option<Vec<f64>>,
+    /// Whether the result was replayed from the threshold cache.
+    pub cache_hit: bool,
+    /// Size of the execution batch this job was coalesced into.
+    pub batch_size: usize,
+    /// Shard that executed the job.
+    pub shard: usize,
+    /// Time spent queued before a worker picked the job up.
+    pub queue_micros: u64,
+    /// Execution time of this job inside its batch.
+    pub exec_micros: u64,
+}
+
+/// Why a submission was not accepted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The request failed admission checks (bad η, empty payload).
+    Invalid(String),
+    /// The target shard's queue is at its high-water mark; retry after the
+    /// suggested backoff.
+    Overloaded { shard: usize, depth: usize, retry_after: Duration },
+    /// The engine is shutting down and no longer accepts work.
+    ShuttingDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Invalid(msg) => write!(f, "invalid request: {msg}"),
+            Self::Overloaded { shard, depth, retry_after } => write!(
+                f,
+                "shard {shard} overloaded (queue depth {depth}); retry after {retry_after:?}"
+            ),
+            Self::ShuttingDown => write!(f, "engine is shutting down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn batch_key_groups_same_shape_kind_dtype() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Matrix::<f64>::randn(8, 4, &mut rng);
+        let b = Matrix::<f64>::randn(8, 4, &mut rng);
+        let r1 = ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, a.clone());
+        let r2 = ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 2.5, b);
+        // different eta, same key: eta does not block coalescing
+        assert_eq!(r1.batch_key(), r2.batch_key());
+
+        let r3 = ProjectionRequest::f64(ProjectionKind::BilevelL11, 1.0, a.clone());
+        assert_ne!(r1.batch_key(), r3.batch_key());
+        let r4 = ProjectionRequest::f32(ProjectionKind::BilevelL1Inf, 1.0, a.cast());
+        assert_ne!(r1.batch_key(), r4.batch_key());
+        let r5 = ProjectionRequest::f64(
+            ProjectionKind::BilevelL1Inf,
+            1.0,
+            Matrix::<f64>::zeros(4, 8),
+        );
+        assert_ne!(r1.batch_key(), r5.batch_key());
+        let r6 = r1.clone().with_algo(L1Algorithm::Sort);
+        assert_ne!(r1.batch_key(), r6.batch_key());
+    }
+
+    #[test]
+    fn validation_rejects_bad_requests() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let y = Matrix::<f64>::randn(3, 3, &mut rng);
+        assert!(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y.clone())
+            .validate()
+            .is_ok());
+        assert!(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, -1.0, y.clone())
+            .validate()
+            .is_err());
+        assert!(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, f64::NAN, y)
+            .validate()
+            .is_err());
+        assert!(ProjectionRequest::f64(
+            ProjectionKind::BilevelL1Inf,
+            1.0,
+            Matrix::<f64>::zeros(0, 0)
+        )
+        .validate()
+        .is_err());
+    }
+
+    #[test]
+    fn payload_accessors() {
+        let m = Matrix::<f64>::zeros(3, 5);
+        let p = Payload::F64(m);
+        assert_eq!(p.dtype(), Dtype::F64);
+        assert_eq!(p.dtype().name(), "f64");
+        assert_eq!((p.rows(), p.cols(), p.len()), (3, 5, 15));
+        assert!(p.as_f64().is_some());
+        assert!(p.as_f32().is_none());
+        let p32 = Payload::F32(Matrix::<f32>::zeros(2, 2));
+        assert_eq!(p32.dtype().name(), "f32");
+        assert!(p32.as_f32().is_some());
+    }
+}

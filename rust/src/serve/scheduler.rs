@@ -1,0 +1,320 @@
+//! Micro-batching policy and request execution.
+//!
+//! **Batching.** A worker that pops a job coalesces further same-key jobs
+//! into one execution batch under a [`BatchPolicy`]: up to `max_batch`
+//! jobs, waiting at most `max_wait` and only while the batch holds fewer
+//! than `min_fill` jobs. The default `min_fill = 1` is *opportunistic*
+//! batching — drain whatever compatible work is already queued, never
+//! idle-wait — so batching can amortize queue traffic without taxing
+//! latency when the queue is shallow.
+//!
+//! **Execution.** One request = one library projection call, dispatched by
+//! dtype and [`ProjectionKind`]. Bi-level kinds go through the threshold
+//! cache: a hit replays the cached per-column thresholds through the outer
+//! column stage only (the O(nm) clip / shrink / rescale), skipping the
+//! aggregation + inner ℓ1 solve; the replay mirrors the library loops
+//! bit-for-bit so cached results are indistinguishable from cold ones.
+
+use std::time::{Duration, Instant};
+
+use crate::projection::bilevel::{self, BilevelVariant};
+use crate::projection::l1::{self, L1Algorithm};
+use crate::projection::ProjectionKind;
+use crate::projection::l2;
+use crate::scalar::Scalar;
+use crate::tensor::{vec_ops, Matrix};
+
+use super::cache::{CacheKey, ThresholdCache, ThresholdScalar};
+use super::queue::JobQueue;
+use super::request::{BatchKey, Payload, ProjectionRequest};
+
+/// How aggressively a worker coalesces same-key jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Hard cap on jobs per execution batch.
+    pub max_batch: usize,
+    /// Keep waiting (up to `max_wait`) while the batch holds fewer jobs
+    /// than this. 1 = opportunistic (never wait).
+    pub min_fill: usize,
+    /// Wait budget for filling a batch to `min_fill`.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// Batching disabled: every job executes alone, no waiting.
+    pub fn unbatched() -> Self {
+        Self { max_batch: 1, min_fill: 1, max_wait: Duration::ZERO }
+    }
+}
+
+/// Coalesce `first` with queued same-key jobs under `policy`.
+///
+/// Drains compatible jobs immediately; if the batch is still below
+/// `min_fill`, blocks for further arrivals until the wait budget runs out,
+/// the queue closes, or the batch fills.
+pub(crate) fn collect_batch<T>(
+    queue: &JobQueue<T>,
+    first: T,
+    policy: BatchPolicy,
+    key_of: impl Fn(&T) -> BatchKey,
+) -> Vec<T> {
+    let mut batch = Vec::with_capacity(policy.max_batch.max(1));
+    let key = key_of(&first);
+    batch.push(first);
+    if policy.max_batch <= 1 {
+        return batch;
+    }
+    let min_fill = policy.min_fill.clamp(1, policy.max_batch);
+    let deadline = Instant::now() + policy.max_wait;
+    loop {
+        // Snapshot the push counter *before* draining so an arrival that
+        // races the drain wakes the next await instead of being missed.
+        let seen = queue.push_count();
+        let want = policy.max_batch - batch.len();
+        batch.extend(queue.drain_matching(want, |j| key_of(j) == key));
+        if batch.len() >= policy.max_batch || batch.len() >= min_fill {
+            break;
+        }
+        if queue.is_closed() || Instant::now() >= deadline {
+            break;
+        }
+        queue.await_push(seen, deadline);
+    }
+    batch
+}
+
+/// Result of executing one request.
+pub(crate) struct ExecOutcome {
+    pub payload: Payload,
+    pub thresholds: Option<Vec<f64>>,
+    pub cache_hit: bool,
+}
+
+/// Whether results of this kind can be replayed from cached thresholds.
+pub fn cacheable(kind: ProjectionKind) -> bool {
+    kind.bilevel_variant().is_some()
+}
+
+/// Execute one request against the projection library, consulting (and
+/// feeding) the threshold cache for the bi-level kinds.
+pub(crate) fn execute(req: &ProjectionRequest, cache: &ThresholdCache) -> ExecOutcome {
+    match &req.payload {
+        Payload::F64(y) => {
+            let (x, thresholds, cache_hit) = exec_typed(y, req, cache);
+            ExecOutcome {
+                payload: Payload::F64(x),
+                thresholds: thresholds.map(|u| u.iter().map(|t| t.to_f64()).collect()),
+                cache_hit,
+            }
+        }
+        Payload::F32(y) => {
+            let (x, thresholds, cache_hit) = exec_typed(y, req, cache);
+            ExecOutcome {
+                payload: Payload::F32(x),
+                thresholds: thresholds.map(|u| u.iter().map(|t| t.to_f64()).collect()),
+                cache_hit,
+            }
+        }
+    }
+}
+
+fn exec_typed<T: ThresholdScalar>(
+    y: &Matrix<T>,
+    req: &ProjectionRequest,
+    cache: &ThresholdCache,
+) -> (Matrix<T>, Option<Vec<T>>, bool) {
+    let eta = T::from_f64(req.eta);
+    let Some(variant) = req.kind.bilevel_variant() else {
+        // Exact ℓ1,∞ kinds and the identity: no thresholds, nothing to cache.
+        return (req.kind.apply_with(y, eta, req.algo), None, false);
+    };
+    if !cache.enabled() {
+        let r = bilevel::bilevel(y, eta, variant, req.algo);
+        return (r.x, Some(r.thresholds), false);
+    }
+    let key = CacheKey::for_matrix(y, req.eta, req.kind, req.algo, req.payload.dtype());
+    if let Some(cached) = cache.get(&key) {
+        if let Some(u) = T::unwrap(&cached) {
+            if u.len() == y.cols() {
+                let x = replay(y, variant, req.algo, &u);
+                return (x, Some(u), true);
+            }
+        }
+    }
+    let r = bilevel::bilevel(y, eta, variant, req.algo);
+    cache.insert(key, T::wrap(r.thresholds.clone()));
+    (r.x, Some(r.thresholds), false)
+}
+
+/// Re-run only the outer column stage with known thresholds `û`.
+///
+/// Each arm mirrors the corresponding library code path exactly —
+/// `bilevel_l1inf_with`'s fused copy-or-clip loop, `bilevel_generic`'s
+/// per-column ℓ1 shrink / ℓ2 rescale — so that, fed the thresholds a cold
+/// call produced, it returns the bit-identical matrix.
+fn replay<T: Scalar>(
+    y: &Matrix<T>,
+    variant: BilevelVariant,
+    algo: L1Algorithm,
+    u: &[T],
+) -> Matrix<T> {
+    match variant {
+        BilevelVariant::L1Inf => {
+            let (n, m) = (y.rows(), y.cols());
+            let mut data: Vec<T> = Vec::with_capacity(n * m);
+            for (j, col) in y.columns().enumerate() {
+                let c = u[j];
+                if c >= vec_ops::linf(col) {
+                    data.extend_from_slice(col);
+                } else {
+                    data.extend(col.iter().map(|&x| x.signum_s() * x.abs().min_s(c)));
+                }
+            }
+            Matrix::from_col_major(n, m, data)
+        }
+        BilevelVariant::L11 => {
+            let mut x = y.clone();
+            for j in 0..y.cols() {
+                l1::project_l1_inplace(x.col_mut(j), u[j], algo);
+            }
+            x
+        }
+        BilevelVariant::L12 => {
+            let mut x = y.clone();
+            for j in 0..y.cols() {
+                l2::project_l2_inplace(x.col_mut(j), u[j]);
+            }
+            x
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::serve::request::Dtype;
+
+    fn mk_req(kind: ProjectionKind, eta: f64, rows: usize, cols: usize, seed: u64) -> ProjectionRequest {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        ProjectionRequest::f64(kind, eta, Matrix::randn(rows, cols, &mut rng))
+    }
+
+    fn key_of_pair(p: &(BatchKey, u32)) -> BatchKey {
+        p.0
+    }
+
+    fn bk(kind: ProjectionKind, rows: usize) -> BatchKey {
+        BatchKey { kind, algo: L1Algorithm::Condat, dtype: Dtype::F64, rows, cols: 4 }
+    }
+
+    #[test]
+    fn collect_batch_coalesces_only_matching_keys() {
+        let q: JobQueue<(BatchKey, u32)> = JobQueue::new(16);
+        let a = bk(ProjectionKind::BilevelL1Inf, 8);
+        let b = bk(ProjectionKind::BilevelL11, 8);
+        q.try_push((a, 1)).unwrap();
+        q.try_push((b, 2)).unwrap();
+        q.try_push((a, 3)).unwrap();
+        let policy =
+            BatchPolicy { max_batch: 8, min_fill: 1, max_wait: Duration::from_millis(50) };
+        let batch = collect_batch(&q, (a, 0), policy, key_of_pair);
+        let ids: Vec<u32> = batch.iter().map(|j| j.1).collect();
+        assert_eq!(ids, vec![0, 1, 3]);
+        // the non-matching job is untouched
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop_wait(), Some((b, 2)));
+    }
+
+    #[test]
+    fn collect_batch_respects_max_batch() {
+        let q: JobQueue<(BatchKey, u32)> = JobQueue::new(16);
+        let a = bk(ProjectionKind::BilevelL1Inf, 8);
+        for i in 1..=6 {
+            q.try_push((a, i)).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, min_fill: 1, max_wait: Duration::ZERO };
+        let batch = collect_batch(&q, (a, 0), policy, key_of_pair);
+        assert_eq!(batch.len(), 4);
+        assert_eq!(q.len(), 3);
+    }
+
+    #[test]
+    fn unbatched_policy_takes_single_job() {
+        let q: JobQueue<(BatchKey, u32)> = JobQueue::new(16);
+        let a = bk(ProjectionKind::BilevelL1Inf, 8);
+        q.try_push((a, 1)).unwrap();
+        let batch = collect_batch(&q, (a, 0), BatchPolicy::unbatched(), key_of_pair);
+        assert_eq!(batch.len(), 1);
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn min_fill_waits_for_late_arrivals() {
+        let q: std::sync::Arc<JobQueue<(BatchKey, u32)>> =
+            std::sync::Arc::new(JobQueue::new(16));
+        let a = bk(ProjectionKind::BilevelL1Inf, 8);
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.try_push((a, 1)).unwrap();
+        });
+        let policy =
+            BatchPolicy { max_batch: 2, min_fill: 2, max_wait: Duration::from_millis(500) };
+        let batch = collect_batch(&q, (a, 0), policy, key_of_pair);
+        h.join().unwrap();
+        assert_eq!(batch.len(), 2);
+    }
+
+    #[test]
+    fn execute_matches_direct_library_call() {
+        let cache = ThresholdCache::new(0);
+        for kind in ProjectionKind::all() {
+            let req = mk_req(*kind, 2.0, 20, 12, 9);
+            let out = execute(&req, &cache);
+            let direct = kind.apply(req.payload.as_f64().unwrap(), 2.0);
+            let Payload::F64(x) = &out.payload else { panic!("dtype changed") };
+            assert_eq!(x.max_abs_diff(&direct), 0.0, "{} diverges", kind.name());
+            assert_eq!(out.thresholds.is_some(), cacheable(*kind));
+            assert!(!out.cache_hit);
+        }
+    }
+
+    #[test]
+    fn cache_replay_is_bit_identical() {
+        let cache = ThresholdCache::new(8);
+        for kind in [
+            ProjectionKind::BilevelL1Inf,
+            ProjectionKind::BilevelL11,
+            ProjectionKind::BilevelL12,
+        ] {
+            let req = mk_req(kind, 1.5, 24, 16, 10);
+            let cold = execute(&req, &cache);
+            assert!(!cold.cache_hit);
+            let warm = execute(&req, &cache);
+            assert!(warm.cache_hit, "{} second call should hit", kind.name());
+            let (Payload::F64(a), Payload::F64(b)) = (&cold.payload, &warm.payload) else {
+                panic!("dtype changed")
+            };
+            assert_eq!(a.max_abs_diff(b), 0.0, "{} replay differs", kind.name());
+            assert_eq!(cold.thresholds, warm.thresholds);
+        }
+    }
+
+    #[test]
+    fn f32_requests_execute_and_cache_in_f32() {
+        let cache = ThresholdCache::new(8);
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let y: Matrix<f32> = Matrix::<f64>::randn(16, 10, &mut rng).cast();
+        let req = ProjectionRequest::f32(ProjectionKind::BilevelL1Inf, 1.0, y.clone());
+        let cold = execute(&req, &cache);
+        let warm = execute(&req, &cache);
+        assert!(!cold.cache_hit && warm.cache_hit);
+        let (Payload::F32(a), Payload::F32(b)) = (&cold.payload, &warm.payload) else {
+            panic!("dtype changed")
+        };
+        assert_eq!(a.max_abs_diff(b), 0.0);
+        let direct = crate::projection::bilevel::bilevel_l1inf(&y, 1.0f32);
+        assert_eq!(a.max_abs_diff(&direct), 0.0);
+    }
+}

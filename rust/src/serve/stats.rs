@@ -1,0 +1,238 @@
+//! Per-shard telemetry, published through [`crate::metrics::counters`].
+//!
+//! Workers bump relaxed atomic counters on the hot path; [`ShardStats`] /
+//! [`EngineStats`] are point-in-time snapshots with the derived rates
+//! (hit-rate, mean batch size, throughput) the CLI and benches report.
+
+use std::fmt;
+use std::time::Duration;
+
+use crate::metrics::{Counter, LatencyStat};
+
+/// Live (atomic) counters owned by one shard.
+#[derive(Debug, Default)]
+pub(crate) struct ShardCounters {
+    pub submitted: Counter,
+    pub completed: Counter,
+    pub rejected: Counter,
+    pub batches: Counter,
+    pub batched_jobs: Counter,
+    pub cache_hits: Counter,
+    pub cache_misses: Counter,
+    pub queue_wait: LatencyStat,
+    pub exec: LatencyStat,
+}
+
+impl ShardCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn snapshot(&self, shard: usize, depth: usize) -> ShardStats {
+        let batches = self.batches.get();
+        let batched_jobs = self.batched_jobs.get();
+        let hits = self.cache_hits.get();
+        let misses = self.cache_misses.get();
+        ShardStats {
+            shard,
+            depth,
+            submitted: self.submitted.get(),
+            completed: self.completed.get(),
+            rejected: self.rejected.get(),
+            batches,
+            batched_jobs,
+            cache_hits: hits,
+            cache_misses: misses,
+            mean_batch: if batches > 0 { batched_jobs as f64 / batches as f64 } else { 0.0 },
+            hit_rate: if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 },
+            mean_queue_micros: self.queue_wait.mean_micros(),
+            mean_exec_micros: self.exec.mean_micros(),
+            max_exec_micros: self.exec.max_micros(),
+        }
+    }
+}
+
+/// Snapshot of one shard's counters.
+#[derive(Clone, Debug)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Queue depth at snapshot time.
+    pub depth: usize,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Submissions rejected at the backpressure high-water mark.
+    pub rejected: u64,
+    /// Execution batches run.
+    pub batches: u64,
+    /// Jobs executed across all batches (= completed, kept separate so the
+    /// mean batch size is self-describing).
+    pub batched_jobs: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub mean_batch: f64,
+    pub hit_rate: f64,
+    pub mean_queue_micros: f64,
+    pub mean_exec_micros: f64,
+    pub max_exec_micros: u64,
+}
+
+/// Snapshot of a whole engine.
+#[derive(Clone, Debug)]
+pub struct EngineStats {
+    pub uptime: Duration,
+    pub shards: Vec<ShardStats>,
+}
+
+impl EngineStats {
+    pub fn submitted(&self) -> u64 {
+        self.shards.iter().map(|s| s.submitted).sum()
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.shards.iter().map(|s| s.completed).sum()
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.shards.iter().map(|s| s.rejected).sum()
+    }
+
+    pub fn cache_hits(&self) -> u64 {
+        self.shards.iter().map(|s| s.cache_hits).sum()
+    }
+
+    pub fn cache_misses(&self) -> u64 {
+        self.shards.iter().map(|s| s.cache_misses).sum()
+    }
+
+    /// Cache hit-rate over the cacheable (bi-level) traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let hits = self.cache_hits();
+        let total = hits + self.cache_misses();
+        if total > 0 {
+            hits as f64 / total as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean executed batch size across shards.
+    pub fn mean_batch(&self) -> f64 {
+        let batches: u64 = self.shards.iter().map(|s| s.batches).sum();
+        let jobs: u64 = self.shards.iter().map(|s| s.batched_jobs).sum();
+        if batches > 0 {
+            jobs as f64 / batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Completed requests per second of engine uptime.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.uptime.as_secs_f64();
+        if secs > 0.0 {
+            self.completed() as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+impl fmt::Display for EngineStats {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(
+            f,
+            "serve: uptime {:.2}s | completed {} | rejected {} | {:.0} req/s | mean batch {:.2} | cache hit-rate {:.1}%",
+            self.uptime.as_secs_f64(),
+            self.completed(),
+            self.rejected(),
+            self.throughput_rps(),
+            self.mean_batch(),
+            self.hit_rate() * 100.0,
+        )?;
+        writeln!(
+            f,
+            "  {:>5} {:>6} {:>9} {:>9} {:>8} {:>7} {:>7} {:>7} {:>10} {:>10}",
+            "shard", "depth", "submitted", "completed", "rejected", "batches", "mbatch", "hits", "queue(us)", "exec(us)"
+        )?;
+        for s in &self.shards {
+            writeln!(
+                f,
+                "  {:>5} {:>6} {:>9} {:>9} {:>8} {:>7} {:>7.2} {:>7} {:>10.0} {:>10.0}",
+                s.shard,
+                s.depth,
+                s.submitted,
+                s.completed,
+                s.rejected,
+                s.batches,
+                s.mean_batch,
+                s.cache_hits,
+                s.mean_queue_micros,
+                s.mean_exec_micros,
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_derives_rates() {
+        let c = ShardCounters::new();
+        c.submitted.add(10);
+        c.completed.add(8);
+        c.rejected.add(2);
+        c.batches.add(4);
+        c.batched_jobs.add(8);
+        c.cache_hits.add(3);
+        c.cache_misses.add(1);
+        c.queue_wait.record_micros(100);
+        c.exec.record_micros(50);
+        c.exec.record_micros(150);
+        let s = c.snapshot(1, 5);
+        assert_eq!(s.shard, 1);
+        assert_eq!(s.depth, 5);
+        assert_eq!(s.mean_batch, 2.0);
+        assert_eq!(s.hit_rate, 0.75);
+        assert_eq!(s.mean_exec_micros, 100.0);
+        assert_eq!(s.max_exec_micros, 150);
+    }
+
+    #[test]
+    fn engine_stats_aggregate_and_render() {
+        let a = ShardCounters::new();
+        a.completed.add(6);
+        a.cache_hits.add(2);
+        a.cache_misses.add(2);
+        a.batches.add(3);
+        a.batched_jobs.add(6);
+        let b = ShardCounters::new();
+        b.completed.add(4);
+        b.cache_misses.add(4);
+        b.batches.add(4);
+        b.batched_jobs.add(4);
+        let stats = EngineStats {
+            uptime: Duration::from_secs(2),
+            shards: vec![a.snapshot(0, 0), b.snapshot(1, 1)],
+        };
+        assert_eq!(stats.completed(), 10);
+        assert_eq!(stats.cache_hits(), 2);
+        assert!((stats.hit_rate() - 0.25).abs() < 1e-12);
+        assert!((stats.throughput_rps() - 5.0).abs() < 1e-12);
+        assert!((stats.mean_batch() - 10.0 / 7.0).abs() < 1e-12);
+        let rendered = format!("{stats}");
+        assert!(rendered.contains("shard"), "{rendered}");
+        assert!(rendered.contains("hit-rate"), "{rendered}");
+    }
+
+    #[test]
+    fn empty_engine_stats_are_zero() {
+        let stats = EngineStats { uptime: Duration::ZERO, shards: vec![] };
+        assert_eq!(stats.completed(), 0);
+        assert_eq!(stats.hit_rate(), 0.0);
+        assert_eq!(stats.mean_batch(), 0.0);
+        assert_eq!(stats.throughput_rps(), 0.0);
+    }
+}

@@ -243,23 +243,96 @@ fn prop_idempotence() {
 
 #[test]
 fn prop_parallel_matches_sequential() {
+    // `bilevel_l1inf_parallel` ≡ `bilevel_l1inf_with` over random shapes,
+    // radii, thread counts, and both sides of the `min_elems` sequential
+    // fallback — matrices *and* threshold vectors.
     forall::<MatrixAndRadius>(
         PropConfig { cases: 100, seed: 12, max_shrink_steps: 16 },
         |input| {
             let seq = bilevel_l1inf_with(&input.y, input.eta, L1Algorithm::Condat);
-            let par = bilevel_l1inf_parallel(
-                &input.y,
-                input.eta,
-                L1Algorithm::Condat,
-                ParallelPolicy { threads: 3, min_elems: 0 },
-            );
-            let d = seq.x.max_abs_diff(&par.x);
-            if d > 1e-12 {
-                return Err(format!("parallel differs by {d}"));
+            let elems = input.y.rows() * input.y.cols();
+            for threads in [1usize, 2, 3, 8] {
+                // min_elems 0 forces the threaded path, a huge value forces
+                // the sequential fallback, and `elems` sits exactly on the
+                // boundary (`elems < min_elems` is false ⇒ threaded).
+                for min_elems in [0usize, elems, usize::MAX] {
+                    let par = bilevel_l1inf_parallel(
+                        &input.y,
+                        input.eta,
+                        L1Algorithm::Condat,
+                        ParallelPolicy { threads, min_elems },
+                    );
+                    let d = seq.x.max_abs_diff(&par.x);
+                    if d > 1e-12 {
+                        return Err(format!(
+                            "threads={threads} min_elems={min_elems}: matrix differs by {d}"
+                        ));
+                    }
+                    if par.thresholds.len() != seq.thresholds.len() {
+                        return Err(format!(
+                            "threads={threads} min_elems={min_elems}: {} thresholds vs {}",
+                            par.thresholds.len(),
+                            seq.thresholds.len()
+                        ));
+                    }
+                    for (j, (a, b)) in
+                        seq.thresholds.iter().zip(par.thresholds.iter()).enumerate()
+                    {
+                        if (a - b).abs() > 1e-12 {
+                            return Err(format!(
+                                "threads={threads} min_elems={min_elems}: threshold {j} \
+                                 differs ({a} vs {b})"
+                            ));
+                        }
+                    }
+                }
             }
             Ok(())
         },
     );
+}
+
+#[test]
+fn parallel_min_elems_boundary_is_exact() {
+    // n*m == min_elems takes the threaded path (`<` comparison); one more
+    // element of slack takes the sequential fallback. Both must agree with
+    // the sequential reference bit-for-bit on this f64 input.
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let y = Matrix::<f64>::randn(16, 16, &mut rng); // 256 elements
+    let seq = bilevel_l1inf_with(&y, 2.0, L1Algorithm::Condat);
+    let on_boundary = bilevel_l1inf_parallel(
+        &y,
+        2.0,
+        L1Algorithm::Condat,
+        ParallelPolicy { threads: 4, min_elems: 256 },
+    );
+    let below_boundary = bilevel_l1inf_parallel(
+        &y,
+        2.0,
+        L1Algorithm::Condat,
+        ParallelPolicy { threads: 4, min_elems: 257 },
+    );
+    assert_eq!(seq.x.max_abs_diff(&on_boundary.x), 0.0);
+    assert_eq!(seq.x.max_abs_diff(&below_boundary.x), 0.0);
+    assert_eq!(seq.thresholds, on_boundary.thresholds);
+    assert_eq!(seq.thresholds, below_boundary.thresholds);
+}
+
+#[test]
+fn parallel_more_threads_than_columns() {
+    // threads > m exercises the `hw.min(work_items)` clamp and ragged
+    // chunking together.
+    let mut rng = Xoshiro256pp::seed_from_u64(32);
+    let y = Matrix::<f64>::randn(64, 3, &mut rng);
+    let seq = bilevel_l1inf_with(&y, 1.0, L1Algorithm::Condat);
+    let par = bilevel_l1inf_parallel(
+        &y,
+        1.0,
+        L1Algorithm::Condat,
+        ParallelPolicy { threads: 16, min_elems: 0 },
+    );
+    assert!(seq.x.max_abs_diff(&par.x) < 1e-15);
+    assert_eq!(seq.thresholds.len(), par.thresholds.len());
 }
 
 // ------------------------------------------------------------- regressions

@@ -1,0 +1,321 @@
+//! End-to-end tests of the serve subsystem: request/response correctness
+//! against direct library calls (bit-identical), micro-batch coalescing,
+//! threshold-cache hits (including replay equivalence for every bi-level
+//! variant), and backpressure rejection at the queue high-water mark.
+
+use std::time::Duration;
+
+use bilevel_sparse::config::ServeConfig;
+use bilevel_sparse::norms::l1inf_norm;
+use bilevel_sparse::projection::bilevel::{bilevel, BilevelVariant};
+use bilevel_sparse::projection::l1::L1Algorithm;
+use bilevel_sparse::projection::ProjectionKind;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::serve::{
+    run_loadgen, Engine, LoadgenConfig, Payload, ProjectionRequest, SubmitError,
+};
+use bilevel_sparse::tensor::Matrix;
+
+fn base_cfg() -> ServeConfig {
+    ServeConfig {
+        shards: 2,
+        workers_per_shard: 1,
+        queue_capacity: 64,
+        max_batch: 8,
+        min_fill: 1,
+        max_wait_micros: 200,
+        cache_capacity: 64,
+    }
+}
+
+fn f64_payload(p: &Payload) -> &Matrix<f64> {
+    p.as_f64().expect("expected f64 payload")
+}
+
+#[test]
+fn serve_results_bit_identical_to_library_calls() {
+    let engine = Engine::start(&base_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(100);
+    let eta = 2.0;
+    for kind in ProjectionKind::all() {
+        let y = Matrix::<f64>::randn(40, 30, &mut rng);
+        let resp = engine
+            .submit_wait(ProjectionRequest::f64(*kind, eta, y.clone()))
+            .unwrap();
+        let direct = kind.apply(&y, eta);
+        assert_eq!(
+            f64_payload(&resp.payload).max_abs_diff(&direct),
+            0.0,
+            "{} serve result differs from library",
+            kind.name()
+        );
+        assert_eq!(resp.kind, *kind);
+        assert_eq!(resp.thresholds.is_some(), kind.bilevel_variant().is_some());
+    }
+    // identity kind round-trips too
+    let y = Matrix::<f64>::randn(5, 5, &mut rng);
+    let resp = engine
+        .submit_wait(ProjectionRequest::f64(ProjectionKind::None, eta, y.clone()))
+        .unwrap();
+    assert_eq!(f64_payload(&resp.payload).max_abs_diff(&y), 0.0);
+    engine.shutdown();
+}
+
+#[test]
+fn serve_f32_requests_match_f32_library_calls() {
+    let engine = Engine::start(&base_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(101);
+    let y: Matrix<f32> = Matrix::<f64>::randn(24, 18, &mut rng).cast();
+    let resp = engine
+        .submit_wait(ProjectionRequest::f32(ProjectionKind::BilevelL1Inf, 1.5, y.clone()))
+        .unwrap();
+    let direct = ProjectionKind::BilevelL1Inf.apply(&y, 1.5f32);
+    let x = resp.payload.as_f32().expect("expected f32 payload");
+    assert_eq!(x.max_abs_diff(&direct), 0.0);
+    engine.shutdown();
+}
+
+#[test]
+fn alternate_inner_solvers_are_threaded_through() {
+    let engine = Engine::start(&base_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(102);
+    let y = Matrix::<f64>::randn(30, 20, &mut rng);
+    for algo in L1Algorithm::all() {
+        let resp = engine
+            .submit_wait(
+                ProjectionRequest::f64(ProjectionKind::BilevelL11, 3.0, y.clone())
+                    .with_algo(*algo),
+            )
+            .unwrap();
+        let direct = bilevel(&y, 3.0, BilevelVariant::L11, *algo);
+        assert_eq!(
+            f64_payload(&resp.payload).max_abs_diff(&direct.x),
+            0.0,
+            "inner algo {} not honoured",
+            algo.name()
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn micro_batching_coalesces_concurrent_same_key_requests() {
+    // One shard, batch window long enough that 12 rapidly-submitted
+    // same-key requests coalesce: the worker holds its first job while the
+    // batch is below min_fill, then drains everything that arrived.
+    let cfg = ServeConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        queue_capacity: 64,
+        max_batch: 16,
+        min_fill: 16,
+        max_wait_micros: 200_000,
+        cache_capacity: 0,
+    };
+    let engine = Engine::start(&cfg).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(103);
+    let eta = 1.0;
+    let mut inputs = Vec::new();
+    let mut handles = Vec::new();
+    for _ in 0..12 {
+        let y = Matrix::<f64>::randn(16, 12, &mut rng);
+        inputs.push(y.clone());
+        handles.push(
+            engine
+                .submit(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, eta, y))
+                .unwrap(),
+        );
+    }
+    let mut max_batch_seen = 0;
+    for (h, y) in handles.into_iter().zip(inputs.iter()) {
+        let resp = h.wait().expect("response");
+        max_batch_seen = max_batch_seen.max(resp.batch_size);
+        let direct = ProjectionKind::BilevelL1Inf.apply(y, eta);
+        assert_eq!(f64_payload(&resp.payload).max_abs_diff(&direct), 0.0);
+    }
+    assert!(
+        max_batch_seen >= 2,
+        "expected some coalescing, saw max batch {max_batch_seen}"
+    );
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed(), 12);
+    assert!(
+        stats.mean_batch() > 1.0,
+        "mean batch {} should exceed 1",
+        stats.mean_batch()
+    );
+}
+
+#[test]
+fn threshold_cache_hits_and_replays_bit_identically() {
+    let cfg = ServeConfig { shards: 1, ..base_cfg() };
+    let engine = Engine::start(&cfg).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(104);
+    for (kind, variant) in [
+        (ProjectionKind::BilevelL1Inf, BilevelVariant::L1Inf),
+        (ProjectionKind::BilevelL11, BilevelVariant::L11),
+        (ProjectionKind::BilevelL12, BilevelVariant::L12),
+    ] {
+        let y = Matrix::<f64>::randn(32, 20, &mut rng);
+        let eta = 1.25;
+        let req = ProjectionRequest::f64(kind, eta, y.clone());
+        let cold = engine.submit_wait(req.clone()).unwrap();
+        assert!(!cold.cache_hit, "{}: first request must miss", kind.name());
+        let warm = engine.submit_wait(req).unwrap();
+        assert!(warm.cache_hit, "{}: repeat request must hit", kind.name());
+        let direct = bilevel(&y, eta, variant, L1Algorithm::Condat);
+        assert_eq!(f64_payload(&cold.payload).max_abs_diff(&direct.x), 0.0);
+        assert_eq!(
+            f64_payload(&warm.payload).max_abs_diff(&direct.x),
+            0.0,
+            "{}: cache replay must be bit-identical",
+            kind.name()
+        );
+        assert_eq!(cold.thresholds, warm.thresholds);
+        // a different radius is a different cache entry
+        let other = engine
+            .submit_wait(ProjectionRequest::f64(kind, eta * 0.5, y.clone()))
+            .unwrap();
+        assert!(!other.cache_hit);
+    }
+    assert!(engine.cache_len() > 0);
+    let stats = engine.shutdown();
+    assert_eq!(stats.cache_hits(), 3);
+    assert!(stats.hit_rate() > 0.0);
+}
+
+#[test]
+fn exact_kinds_bypass_the_cache() {
+    let cfg = ServeConfig { shards: 1, ..base_cfg() };
+    let engine = Engine::start(&cfg).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(105);
+    let y = Matrix::<f64>::randn(20, 10, &mut rng);
+    for _ in 0..2 {
+        let resp = engine
+            .submit_wait(ProjectionRequest::f64(ProjectionKind::ExactL1InfSsn, 2.0, y.clone()))
+            .unwrap();
+        assert!(!resp.cache_hit);
+        assert!(resp.thresholds.is_none());
+    }
+    assert_eq!(engine.cache_len(), 0);
+    let stats = engine.shutdown();
+    assert_eq!(stats.cache_hits() + stats.cache_misses(), 0);
+}
+
+#[test]
+fn backpressure_rejects_with_retry_after_at_high_water() {
+    // A single shard whose worker is parked in a long batch-fill window on
+    // key A; same-shaped key-B requests cannot join A's batch, so they pile
+    // up in the bounded queue and overflow it deterministically.
+    let cfg = ServeConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        queue_capacity: 2,
+        max_batch: 64,
+        min_fill: 64,
+        max_wait_micros: 150_000,
+        cache_capacity: 0,
+    };
+    let engine = Engine::start(&cfg).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(106);
+    let a = Matrix::<f64>::randn(8, 6, &mut rng);
+    let first = engine
+        .submit(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, a))
+        .unwrap();
+    // Different batch key (different shape): never drained into A's batch.
+    let mut accepted = vec![first];
+    let mut rejected = 0;
+    for _ in 0..4 {
+        let b = Matrix::<f64>::randn(6, 8, &mut rng);
+        match engine.submit(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, b)) {
+            Ok(h) => accepted.push(h),
+            Err(SubmitError::Overloaded { shard, depth, retry_after }) => {
+                rejected += 1;
+                assert_eq!(shard, 0);
+                assert_eq!(depth, 2);
+                assert!(retry_after > Duration::ZERO);
+            }
+            Err(other) => panic!("unexpected submit error: {other}"),
+        }
+    }
+    // Queue holds at most 2 + 1 in-flight: of 5 submissions at least 2
+    // must have been shed.
+    assert!(rejected >= 2, "expected >= 2 rejections, got {rejected}");
+    // Accepted work still completes after the batch window expires.
+    for h in accepted {
+        assert!(h.wait().is_some());
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.rejected(), rejected);
+    assert_eq!(stats.completed() + stats.rejected(), 5);
+}
+
+#[test]
+fn loadgen_sustains_mixed_workload_with_cache_hits() {
+    let engine = Engine::start(&ServeConfig { shards: 2, ..base_cfg() }).unwrap();
+    let cfg = LoadgenConfig {
+        clients: 4,
+        requests_per_client: 40,
+        rows: 24,
+        cols: 16,
+        eta: 1.5,
+        mix: vec![
+            ProjectionKind::BilevelL1Inf,
+            ProjectionKind::BilevelL11,
+            ProjectionKind::BilevelL12,
+            ProjectionKind::ExactL1InfSsn,
+            ProjectionKind::None,
+        ],
+        pool: 4,
+        f32_every: 4,
+        seed: 9,
+    };
+    let report = run_loadgen(&engine, &cfg);
+    assert_eq!(report.completed, 160);
+    assert_eq!(report.failed, 0);
+    assert!(report.cache_hits > 0, "repeated-pool workload must hit the cache");
+    assert!(report.throughput_rps() > 0.0);
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed(), 160);
+    assert!(stats.hit_rate() > 0.0);
+    assert_eq!(stats.submitted(), 160);
+}
+
+#[test]
+fn invalid_submissions_are_refused_without_side_effects() {
+    let engine = Engine::start(&base_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(107);
+    let y = Matrix::<f64>::randn(4, 4, &mut rng);
+    for bad_eta in [-0.5, f64::NAN, f64::INFINITY] {
+        let err = engine
+            .submit(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, bad_eta, y.clone()))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "eta {bad_eta} accepted");
+    }
+    let err = engine
+        .submit(ProjectionRequest::f64(
+            ProjectionKind::BilevelL1Inf,
+            1.0,
+            Matrix::<f64>::zeros(0, 3),
+        ))
+        .unwrap_err();
+    assert!(matches!(err, SubmitError::Invalid(_)));
+    let stats = engine.shutdown();
+    assert_eq!(stats.submitted(), 0);
+    assert_eq!(stats.completed(), 0);
+}
+
+#[test]
+fn served_projection_is_feasible() {
+    // Sanity on the maths through the full engine path.
+    let engine = Engine::start(&base_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(108);
+    let y = Matrix::<f64>::randn(64, 48, &mut rng);
+    let eta = l1inf_norm(&y) * 0.25;
+    let resp = engine
+        .submit_wait(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, eta, y))
+        .unwrap();
+    let norm = l1inf_norm(f64_payload(&resp.payload));
+    assert!((norm - eta).abs() < 1e-9, "projection not tight: {norm} vs {eta}");
+    engine.shutdown();
+}
