@@ -4,6 +4,7 @@
 //!
 //! Set `BILEVEL_BENCH_QUICK=1` for a shortened sweep.
 
+use bilevel_sparse::bench::kernels as kernel_bench;
 use bilevel_sparse::bench::{fit_linear, fit_nlogn, time_fn, BenchConfig};
 use bilevel_sparse::projection::bilevel::bilevel_l1inf;
 use bilevel_sparse::projection::l1inf::{project_l1inf, L1InfAlgorithm};
@@ -13,6 +14,23 @@ use bilevel_sparse::tensor::Matrix;
 fn main() {
     let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+
+    // Kernel-layer section: the same `bp1inf/seq` + `bp1inf/pool` rows
+    // `bilevel bench kernels` records in BENCH_kernels.json, measured by
+    // the shared bench::kernels helper so the two never drift.
+    let kernel_sizes: &[usize] = if quick { &[256, 512] } else { &[512, 1024, 2048] };
+    println!("== fig1 addendum: scalar baseline vs kernel layer (eta = 1) ==");
+    for e in kernel_bench::bp1inf_entries(&cfg, kernel_sizes) {
+        println!(
+            "fig1/{:<12} {:>4}x{:<4} baseline: {:>8.3} ms   kernel: {:>8.3} ms   ({:.2}x)",
+            e.name,
+            e.rows,
+            e.cols,
+            e.baseline_ms,
+            e.kernel_ms,
+            e.speedup(),
+        );
+    }
     let sizes: Vec<usize> = if quick {
         vec![500, 1000, 2000]
     } else {

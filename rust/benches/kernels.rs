@@ -1,0 +1,18 @@
+//! `cargo bench --bench kernels` — the kernel-layer microbench suite
+//! (same engine as `bilevel bench kernels`): end-to-end `BP¹,∞` scalar
+//! baseline vs SIMD kernel path, sequential vs parking-pool, per-kernel
+//! micro rows, and the `min_elems` crossover probe. Writes
+//! `BENCH_kernels.json` in the working directory (repo root under cargo).
+//!
+//! Set `BILEVEL_BENCH_QUICK=1` for a shortened sweep.
+
+use bilevel_sparse::bench::kernels;
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let report = kernels::run(quick);
+    println!("{}", report.markdown());
+    std::fs::write("BENCH_kernels.json", report.to_json())
+        .expect("writing BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
+}

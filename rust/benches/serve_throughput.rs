@@ -64,15 +64,27 @@ fn main() {
     );
     println!("   {clients} clients, {shards} shards, pool of {POOL} matrices\n");
 
-    // -------- 1. direct one-shot library calls, single thread ----------
+    // -------- 0. pre-kernel scalar baseline, single thread -------------
     let mut rng = Xoshiro256pp::seed_from_u64(1);
     let pool: Vec<Matrix<f64>> =
         (0..POOL).map(|_| Matrix::randn(N, N, &mut rng)).collect();
     let t0 = std::time::Instant::now();
     for i in 0..requests {
+        black_box(bilevel_sparse::bench::kernels::bilevel_l1inf_scalar_baseline(
+            &pool[i % POOL],
+            ETA,
+            L1Algorithm::Condat,
+        ));
+    }
+    let scalar_rps = requests as f64 / t0.elapsed().as_secs_f64();
+
+    // -------- 1. direct one-shot library calls, single thread ----------
+    let t0 = std::time::Instant::now();
+    for i in 0..requests {
         black_box(bilevel_l1inf_with(&pool[i % POOL], ETA, L1Algorithm::Condat));
     }
     let direct_rps = requests as f64 / t0.elapsed().as_secs_f64();
+    report_line("scalar baseline (pre-kernel)", scalar_rps, direct_rps, "");
     report_line("direct one-shot (1 thread)", direct_rps, direct_rps, "");
 
     let load = LoadgenConfig {

@@ -1,0 +1,335 @@
+//! Kernel-layer microbenchmarks — `bilevel bench kernels` and
+//! `cargo bench --bench kernels`.
+//!
+//! Measures the lane-chunked kernel layer against the seed's scalar path
+//! (kept here, verbatim, as [`bilevel_l1inf_scalar_baseline`]), the
+//! parking-pool parallel path against the sequential kernel path, and the
+//! individual kernels against their naive loops; then re-probes the
+//! sequential/parallel crossover that calibrates
+//! `ParallelPolicy::min_elems`. Results render as a markdown table and
+//! serialize to `BENCH_kernels.json` (repo root) so the perf trajectory is
+//! tracked across PRs — see EXPERIMENTS.md §Perf for how to regenerate.
+
+use crate::bench::{black_box, time_fn, BenchConfig};
+use crate::kernels;
+use crate::projection::bilevel::{
+    bilevel_l1inf_parallel, bilevel_l1inf_with, BilevelResult, ParallelPolicy,
+};
+use crate::projection::l1::{self, L1Algorithm};
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// The seed's scalar `BP¹,∞`: naive fold reduction, branchy `signum·min`
+/// clip, fresh buffers every call. This is the "before" every kernel
+/// speedup in `BENCH_kernels.json` is measured against.
+pub fn bilevel_l1inf_scalar_baseline<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1Algorithm,
+) -> BilevelResult<T> {
+    let (n, m) = (y.rows(), y.cols());
+    let v: Vec<T> = y
+        .columns()
+        .map(|col| col.iter().fold(T::ZERO, |acc, &x| acc.max_s(x.abs())))
+        .collect();
+    let u = l1::project_l1(&v, eta, algo);
+    let mut data: Vec<T> = Vec::with_capacity(n * m);
+    for (j, col) in y.columns().enumerate() {
+        let c = u[j];
+        if c >= v[j] {
+            data.extend_from_slice(col);
+        } else {
+            data.extend(col.iter().map(|&x| x.signum_s() * x.abs().min_s(c)));
+        }
+    }
+    BilevelResult { x: Matrix::from_col_major(n, m, data), thresholds: u }
+}
+
+/// The seed's clip loop, for the per-kernel micro rows.
+fn clip_signum_baseline<T: Scalar>(src: &[T], c: T, dst: &mut [T]) {
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = s.signum_s() * s.abs().min_s(c);
+    }
+}
+
+/// One measured comparison: `baseline_ms / kernel_ms = speedup`.
+#[derive(Clone, Debug)]
+pub struct KernelBenchEntry {
+    /// e.g. `bp1inf/seq`, `bp1inf/pool`, `kernel/colmax`.
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Median of the pre-kernel (scalar / sequential) implementation, ms.
+    pub baseline_ms: f64,
+    /// Median of the kernel-layer implementation, ms.
+    pub kernel_ms: f64,
+}
+
+impl KernelBenchEntry {
+    pub fn speedup(&self) -> f64 {
+        if self.kernel_ms > 0.0 {
+            self.baseline_ms / self.kernel_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Full report of one `bench kernels` run.
+#[derive(Clone, Debug)]
+pub struct KernelBenchReport {
+    pub quick: bool,
+    pub hardware_threads: usize,
+    pub entries: Vec<KernelBenchEntry>,
+    /// Smallest probed element count where the pool-parallel path beat the
+    /// sequential kernel path (the measured `min_elems` candidate); 0 if
+    /// it never won on the probed sizes.
+    pub crossover_elems: usize,
+    /// The `ParallelPolicy::min_elems` default compiled into the library.
+    pub default_min_elems: usize,
+}
+
+impl KernelBenchReport {
+    /// Hand-rolled JSON (no serde offline). Stable key order, numbers in
+    /// fixed notation — diff-friendly for the perf trajectory.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"hardware_threads\": {},\n", self.hardware_threads));
+        s.push_str(&format!("  \"crossover_elems\": {},\n", self.crossover_elems));
+        s.push_str(&format!("  \"default_min_elems\": {},\n", self.default_min_elems));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"rows\": {}, \"cols\": {}, \
+                 \"baseline_ms\": {:.6}, \"kernel_ms\": {:.6}, \"speedup\": {:.3}}}{}\n",
+                e.name,
+                e.rows,
+                e.cols,
+                e.baseline_ms,
+                e.kernel_ms,
+                e.speedup(),
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Terminal rendering: the §Perf markdown table.
+    pub fn markdown(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .entries
+            .iter()
+            .map(|e| {
+                vec![
+                    e.name.clone(),
+                    format!("{}x{}", e.rows, e.cols),
+                    format!("{:.3}", e.baseline_ms),
+                    format!("{:.3}", e.kernel_ms),
+                    format!("{:.2}x", e.speedup()),
+                ]
+            })
+            .collect();
+        let mut s = crate::report::markdown_table(
+            &["bench", "shape", "baseline ms", "kernel ms", "speedup"],
+            &rows,
+        );
+        s.push_str(&format!(
+            "\ncrossover: pool wins from {} elements (library default min_elems = {})\n",
+            self.crossover_elems, self.default_min_elems
+        ));
+        s
+    }
+}
+
+/// Measure the end-to-end `BP¹,∞` comparison rows for square sizes:
+/// `bp1inf/seq` (seed scalar baseline vs kernel layer, sequential) and
+/// `bp1inf/pool` (sequential kernel vs parking pool). Shared by [`run`]
+/// and `benches/fig1_time.rs` so both report the same comparison.
+pub fn bp1inf_entries(cfg: &BenchConfig, sizes: &[usize]) -> Vec<KernelBenchEntry> {
+    let mut entries = Vec::new();
+    for &n in sizes {
+        let mut rng = Xoshiro256pp::seed_from_u64(n as u64);
+        let y = Matrix::<f64>::randn(n, n, &mut rng);
+        let base = time_fn(cfg, || {
+            black_box(bilevel_l1inf_scalar_baseline(&y, 1.0, L1Algorithm::Condat))
+        });
+        let kern =
+            time_fn(cfg, || black_box(bilevel_l1inf_with(&y, 1.0, L1Algorithm::Condat)));
+        entries.push(KernelBenchEntry {
+            name: "bp1inf/seq".into(),
+            rows: n,
+            cols: n,
+            baseline_ms: base.median * 1e3,
+            kernel_ms: kern.median * 1e3,
+        });
+        let pool = time_fn(cfg, || {
+            black_box(bilevel_l1inf_parallel(
+                &y,
+                1.0,
+                L1Algorithm::Condat,
+                ParallelPolicy { threads: 0, min_elems: 0 },
+            ))
+        });
+        entries.push(KernelBenchEntry {
+            name: "bp1inf/pool".into(),
+            rows: n,
+            cols: n,
+            baseline_ms: kern.median * 1e3,
+            kernel_ms: pool.median * 1e3,
+        });
+    }
+    entries
+}
+
+/// Run the full kernel benchmark suite. `quick` shrinks sizes and timing
+/// budgets for CI-sized runs.
+pub fn run(quick: bool) -> KernelBenchReport {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let sizes: &[usize] = if quick { &[128, 256, 512] } else { &[256, 512, 1024, 2048] };
+
+    // ---- end-to-end BP¹,∞: seed scalar vs kernel, sequential vs pool ----
+    let mut entries = bp1inf_entries(&cfg, sizes);
+
+    // ---- per-kernel micro rows on a flat 64k-element buffer ------------
+    let len = 1 << 16;
+    let mut rng = Xoshiro256pp::seed_from_u64(0xBE7C);
+    let v: Vec<f64> = (0..len).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let mut dst = vec![0.0f64; len];
+
+    let base = time_fn(&cfg, || black_box(kernels::colmax_ref(&v)));
+    let kern = time_fn(&cfg, || black_box(kernels::colmax(&v)));
+    entries.push(KernelBenchEntry {
+        name: "kernel/colmax".into(),
+        rows: len,
+        cols: 1,
+        baseline_ms: base.median * 1e3,
+        kernel_ms: kern.median * 1e3,
+    });
+
+    let base = time_fn(&cfg, || {
+        clip_signum_baseline(&v, 0.5, &mut dst);
+        black_box(dst[0])
+    });
+    let kern = time_fn(&cfg, || {
+        kernels::clip_into(&v, 0.5, &mut dst);
+        black_box(dst[0])
+    });
+    entries.push(KernelBenchEntry {
+        name: "kernel/clip".into(),
+        rows: len,
+        cols: 1,
+        baseline_ms: base.median * 1e3,
+        kernel_ms: kern.median * 1e3,
+    });
+
+    // One buffer, thresholded repeatedly in place: `soft1` is branch-free,
+    // so its cost is data-independent and no per-iteration refill (which
+    // would dominate this memory-bound row) is needed.
+    let mut w = v.clone();
+    let base = time_fn(&cfg, || {
+        kernels::soft_threshold_inplace_ref(&mut w, 0.3);
+        black_box(w[0])
+    });
+    let kern = time_fn(&cfg, || {
+        kernels::soft_threshold_inplace(&mut w, 0.3);
+        black_box(w[0])
+    });
+    entries.push(KernelBenchEntry {
+        name: "kernel/soft_threshold".into(),
+        rows: len,
+        cols: 1,
+        baseline_ms: base.median * 1e3,
+        kernel_ms: kern.median * 1e3,
+    });
+
+    let base = time_fn(&cfg, || black_box(kernels::sumsq_ref(&v)));
+    let kern = time_fn(&cfg, || black_box(kernels::sumsq(&v)));
+    entries.push(KernelBenchEntry {
+        name: "kernel/sumsq".into(),
+        rows: len,
+        cols: 1,
+        baseline_ms: base.median * 1e3,
+        kernel_ms: kern.median * 1e3,
+    });
+
+    // ---- sequential/parallel crossover probe ---------------------------
+    let probe: &[usize] = if quick { &[32, 64, 96, 128] } else { &[32, 48, 64, 96, 128, 192, 256] };
+    let mut crossover_elems = 0usize;
+    for &n in probe {
+        let mut rng = Xoshiro256pp::seed_from_u64(7000 + n as u64);
+        let y = Matrix::<f64>::randn(n, n, &mut rng);
+        let seq =
+            time_fn(&cfg, || black_box(bilevel_l1inf_with(&y, 1.0, L1Algorithm::Condat)));
+        let par = time_fn(&cfg, || {
+            black_box(bilevel_l1inf_parallel(
+                &y,
+                1.0,
+                L1Algorithm::Condat,
+                ParallelPolicy { threads: 0, min_elems: 0 },
+            ))
+        });
+        entries.push(KernelBenchEntry {
+            name: "crossover/probe".into(),
+            rows: n,
+            cols: n,
+            baseline_ms: seq.median * 1e3,
+            kernel_ms: par.median * 1e3,
+        });
+        if crossover_elems == 0 && par.median < seq.median {
+            crossover_elems = n * n;
+        }
+    }
+
+    KernelBenchReport {
+        quick,
+        hardware_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        entries,
+        crossover_elems,
+        default_min_elems: ParallelPolicy::default().min_elems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_matches_kernel_path_numerically() {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let y = Matrix::<f64>::randn(40, 30, &mut rng);
+        let base = bilevel_l1inf_scalar_baseline(&y, 2.0, L1Algorithm::Condat);
+        let kern = bilevel_l1inf_with(&y, 2.0, L1Algorithm::Condat);
+        assert!(base.x.max_abs_diff(&kern.x) < 1e-12);
+        for (a, b) in base.thresholds.iter().zip(kern.thresholds.iter()) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn report_serializes_to_valid_shape() {
+        let report = KernelBenchReport {
+            quick: true,
+            hardware_threads: 4,
+            entries: vec![KernelBenchEntry {
+                name: "bp1inf/seq".into(),
+                rows: 8,
+                cols: 8,
+                baseline_ms: 2.0,
+                kernel_ms: 1.0,
+            }],
+            crossover_elems: 4096,
+            default_min_elems: 8192,
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"speedup\": 2.000"));
+        assert!(json.contains("\"crossover_elems\": 4096"));
+        assert!(json.trim_end().ends_with('}'));
+        let md = report.markdown();
+        assert!(md.contains("bp1inf/seq"));
+        assert!(md.contains("2.00x"));
+    }
+}

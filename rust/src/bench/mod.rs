@@ -3,6 +3,8 @@
 //! plus the least-squares growth-rate fits the paper's Fig. 1 uses
 //! (linear for `BP¹,∞`, `n log n` for the exact projection).
 
+pub mod kernels;
+
 use std::time::{Duration, Instant};
 
 /// Timing statistics over repeated runs (seconds).

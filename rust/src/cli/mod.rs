@@ -97,6 +97,11 @@ COMMANDS:
   experiment   regenerate a paper table/figure (fig1..fig9, table1..table4, all)
                bilevel experiment fig1 [--quick] [--seeds 1,2,3]
   artifacts    list the AOT artifacts in the manifest [--dir artifacts]
+  bench        run the in-process benchmark suites; `bench kernels`
+               measures the SIMD kernel layer vs the scalar baseline and
+               the pool vs sequential crossover, prints the §Perf table,
+               and records BENCH_kernels.json for the perf trajectory
+               bilevel bench kernels [--quick] [--out BENCH_kernels.json]
   serve        start the projection service engine (sharded workers,
                micro-batching, LRU threshold cache) and validate it with a
                short in-process smoke workload; prints per-shard stats

@@ -1,10 +1,13 @@
 //! Projection dispatch for the trainer: native Rust vs the Pallas artifact.
 
+use std::cell::RefCell;
+
 use anyhow::{anyhow, Result};
 
 use crate::config::{ProjectionBackend, TrainConfig};
+use crate::kernels::Workspace;
 use crate::model::SaeParams;
-use crate::projection::bilevel::{bilevel, BilevelVariant};
+use crate::projection::bilevel::{bilevel, bilevel_l1inf_inplace_cols, BilevelVariant};
 use crate::projection::l1inf::{project_l1inf_with, L1InfAlgorithm};
 use crate::projection::ProjectionKind;
 use crate::runtime::{to_vec_f32, HostArg, Runtime};
@@ -51,15 +54,37 @@ pub fn project_w1(
             "projection {:?} has no Pallas artifact (only bilevel-l1inf); use backend=native",
             other.name()
         )),
+        (ProjectionBackend::Native, ProjectionKind::BilevelL1Inf) => {
+            // The paper's projection — and every training step's — runs
+            // **in place** on the flat W1 tensor ((F,H) row-major == (H,F)
+            // column-major, columns are features) through a per-thread
+            // workspace: the steady-state step allocates only the returned
+            // threshold vector.
+            thread_local! {
+                static SCRATCH: RefCell<Workspace<f32>> = RefCell::new(Workspace::new());
+            }
+            let d = params.dims;
+            let thresholds = SCRATCH.with(|cell| {
+                let ws = &mut *cell.borrow_mut();
+                bilevel_l1inf_inplace_cols(
+                    &mut params.tensors[0],
+                    d.hidden,
+                    eta,
+                    cfg.l1_algorithm,
+                    ws,
+                );
+                ws.thresholds().to_vec()
+            });
+            let alive = thresholds.iter().filter(|&&u| u > 0.0).count();
+            Ok(ProjectionOutcome { thresholds, alive })
+        }
         (ProjectionBackend::Native, kind) => {
             // W1 (F,H) row-major reinterprets as (H,F) column-major:
             // columns are features — the library's native orientation.
             let w = params.w1_as_feature_columns();
             let (x, thresholds): (_, Vec<f32>) = match kind {
-                ProjectionKind::BilevelL1Inf | ProjectionKind::BilevelL11
-                | ProjectionKind::BilevelL12 => {
+                ProjectionKind::BilevelL11 | ProjectionKind::BilevelL12 => {
                     let variant = match kind {
-                        ProjectionKind::BilevelL1Inf => BilevelVariant::L1Inf,
                         ProjectionKind::BilevelL11 => BilevelVariant::L11,
                         _ => BilevelVariant::L12,
                     };
@@ -77,7 +102,7 @@ pub fn project_w1(
                     let r = project_l1inf_with(&w, eta, algo);
                     (r.x, r.mu)
                 }
-                ProjectionKind::None => unreachable!(),
+                ProjectionKind::None | ProjectionKind::BilevelL1Inf => unreachable!(),
             };
             let alive = thresholds.iter().filter(|&&u| u > 0.0).count();
             params.set_w1_from_feature_columns(x);

@@ -1,0 +1,460 @@
+//! Zero-allocation SIMD kernel layer — the four hot loops of the bi-level
+//! projections, written lane-chunked and branch-free so LLVM's
+//! autovectorizer turns them into packed min/max/add sequences.
+//!
+//! Every kernel comes in two flavours:
+//!
+//! * a **scalar reference** (`*_ref`) that defines the semantics with a
+//!   naive loop, and
+//! * the **chunked** production path (the unsuffixed name) that processes
+//!   `LANES` elements per inner-loop iteration over `chunks_exact`, with a
+//!   scalar tail.
+//!
+//! The two are **bit-identical** by construction for every input the
+//! projections feed them (finite floats):
+//!
+//! * `colmax` reduces with `max` over non-negative magnitudes —
+//!   order-independent, so any chunking returns the same bits;
+//! * `sum_abs` / `sumsq` define their semantics as a *lane-decomposed*
+//!   sum (element `i` goes to accumulator `i % LANES`, accumulators are
+//!   combined by the fixed [`combine8`] tree); the reference implements
+//!   exactly that order with scalar code, the chunked path implements it
+//!   with stride-`LANES` accumulation — same additions in the same order;
+//! * `clip1` / `soft1` are elementwise, both paths apply the identical
+//!   scalar formula per element.
+//!
+//! The clip kernel replaces the seed's branchy
+//! `signum_s() * abs().min_s(c)` with the two-instruction clamp
+//! `max(x, -c).min(c)` — mathematically identical for `c ≥ 0` (it is the
+//! ℓ∞-ball projection, eq. 13 of the paper) and a straight `vmaxp*` /
+//! `vminp*` pair after vectorization. The only observable difference is
+//! the sign of a zero output (e.g. input `-0.0`), which every norm,
+//! sparsity count, and comparison in this repo treats as equal to `+0.0`.
+//!
+//! [`workspace`] adds the reusable scratch that makes the steady-state
+//! projection allocation-free; [`pool`] adds the persistent worker pool
+//! that replaced the spawn-per-call threading (see
+//! `projection/bilevel/parallel.rs` and EXPERIMENTS.md §Perf).
+
+pub mod pool;
+pub mod workspace;
+
+pub use workspace::{CondatScratch, Workspace};
+
+use crate::scalar::Scalar;
+
+/// Elements per inner-loop iteration. Eight keeps two 256-bit vectors of
+/// `f64` (or one of `f32`) in flight, which is enough independent
+/// accumulators to hide FP latency on every target we run on.
+pub const LANES: usize = 8;
+
+/// `P^∞_c` applied to one element: `clamp(x, -c, c)` ≡ `sign(x)·min(|x|, c)`
+/// for `c ≥ 0`.
+#[inline(always)]
+pub fn clip1<T: Scalar>(x: T, c: T) -> T {
+    x.max_s(-c).min_s(c)
+}
+
+/// Soft-threshold one element: `(x-τ)₊ - (-x-τ)₊` ≡ `sign(x)·(|x|-τ)₊`,
+/// without the data-dependent sign branch. Precondition: `τ ≥ 0` (the two
+/// formulas diverge for negative τ; every ℓ1 threshold in this repo is
+/// clamped non-negative).
+#[inline(always)]
+pub fn soft1<T: Scalar>(x: T, tau: T) -> T {
+    debug_assert!(tau >= T::ZERO, "soft-threshold requires tau >= 0");
+    (x - tau).pos() - (-x - tau).pos()
+}
+
+/// The fixed combination tree for the `LANES` partial accumulators of the
+/// sum kernels. Both the reference and the chunked paths end with this
+/// exact reduction, so their results match bit-for-bit.
+#[inline(always)]
+fn combine8<T: Scalar>(acc: &[T; LANES]) -> T {
+    let s04 = acc[0] + acc[4];
+    let s15 = acc[1] + acc[5];
+    let s26 = acc[2] + acc[6];
+    let s37 = acc[3] + acc[7];
+    (s04 + s26) + (s15 + s37)
+}
+
+// ---------------------------------------------------------------- colmax
+
+/// Column ∞-norm reduction: `max_i |x_i|` (0 for empty). Chunked path.
+#[inline]
+pub fn colmax<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for ch in it.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(ch) {
+            *a = a.max_s(x.abs());
+        }
+    }
+    let mut m = T::ZERO;
+    for a in acc {
+        m = m.max_s(a);
+    }
+    for &x in it.remainder() {
+        m = m.max_s(x.abs());
+    }
+    m
+}
+
+/// Scalar reference for [`colmax`].
+#[inline]
+pub fn colmax_ref<T: Scalar>(xs: &[T]) -> T {
+    xs.iter().fold(T::ZERO, |acc, &x| acc.max_s(x.abs()))
+}
+
+// --------------------------------------------------------------- sum_abs
+
+/// Lane-decomposed `Σ|x_i|`. Chunked path.
+#[inline]
+pub fn sum_abs<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for ch in it.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(ch) {
+            *a += x.abs();
+        }
+    }
+    for (a, &x) in acc.iter_mut().zip(it.remainder()) {
+        *a += x.abs();
+    }
+    combine8(&acc)
+}
+
+/// Scalar reference for [`sum_abs`] (same lane-decomposed order).
+#[inline]
+pub fn sum_abs_ref<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    for (i, &x) in xs.iter().enumerate() {
+        acc[i % LANES] += x.abs();
+    }
+    combine8(&acc)
+}
+
+// ----------------------------------------------------------------- sumsq
+
+/// Lane-decomposed `Σ x_i²`. Chunked path.
+#[inline]
+pub fn sumsq<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    let mut it = xs.chunks_exact(LANES);
+    for ch in it.by_ref() {
+        for (a, &x) in acc.iter_mut().zip(ch) {
+            *a += x * x;
+        }
+    }
+    for (a, &x) in acc.iter_mut().zip(it.remainder()) {
+        *a += x * x;
+    }
+    combine8(&acc)
+}
+
+/// Scalar reference for [`sumsq`] (same lane-decomposed order).
+#[inline]
+pub fn sumsq_ref<T: Scalar>(xs: &[T]) -> T {
+    let mut acc = [T::ZERO; LANES];
+    for (i, &x) in xs.iter().enumerate() {
+        acc[i % LANES] += x * x;
+    }
+    combine8(&acc)
+}
+
+/// `√Σx²` — the ℓ2 column aggregate of `BP¹,²`.
+#[inline]
+pub fn l2_norm<T: Scalar>(xs: &[T]) -> T {
+    sumsq(xs).sqrt()
+}
+
+// ------------------------------------------------------------------ clip
+
+/// Fused column clip: `dst_i = clamp(src_i, -c, c)` — a single read of the
+/// source and a single write of the destination. Chunked path.
+#[inline]
+pub fn clip_into<T: Scalar>(src: &[T], c: T, dst: &mut [T]) {
+    assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    let mut s_it = src.chunks_exact(LANES);
+    let mut d_it = dst.chunks_exact_mut(LANES);
+    for (dc, sc) in d_it.by_ref().zip(s_it.by_ref()) {
+        for (d, &s) in dc.iter_mut().zip(sc) {
+            *d = clip1(s, c);
+        }
+    }
+    for (d, &s) in d_it.into_remainder().iter_mut().zip(s_it.remainder()) {
+        *d = clip1(s, c);
+    }
+}
+
+/// Scalar reference for [`clip_into`].
+#[inline]
+pub fn clip_into_ref<T: Scalar>(src: &[T], c: T, dst: &mut [T]) {
+    assert_eq!(src.len(), dst.len(), "clip_into_ref: length mismatch");
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = clip1(s, c);
+    }
+}
+
+/// The fused copy-or-clip over contiguous equal-length groups — **the**
+/// outer stage of `BP¹,∞`: group `j` is copied verbatim when its
+/// threshold clears its ∞-norm (`thresholds[j] >= norms[j]`, untouched
+/// column) and clipped through [`clip_into`] otherwise.
+///
+/// Every consumer of the matrix form (sequential `bilevel_l1inf_into`,
+/// each part of the pool-parallel stage 2) goes through this one
+/// definition, and the Vec-building form ([`extend_clipped`]) applies the
+/// same tie-break and element op — that single source of truth is what
+/// keeps the serve cache replay bit-identical to cold execution.
+#[inline]
+pub fn clip_groups_into<T: Scalar>(
+    src: &[T],
+    group: usize,
+    thresholds: &[T],
+    norms: &[T],
+    dst: &mut [T],
+) {
+    assert_eq!(src.len(), dst.len(), "clip_groups_into: length mismatch");
+    debug_assert!(
+        src.len() % group == 0,
+        "clip_groups_into: buffer is not a whole number of groups"
+    );
+    for (j, (d, s)) in dst
+        .chunks_exact_mut(group)
+        .zip(src.chunks_exact(group))
+        .enumerate()
+    {
+        if thresholds[j] >= norms[j] {
+            d.copy_from_slice(s);
+        } else {
+            clip_into(s, thresholds[j], d);
+        }
+    }
+}
+
+/// Vec-building sibling of [`clip_groups_into`]: append one group's fused
+/// copy-or-clip to `dst` (single write, no zero-fill pass). Same `>=`
+/// tie-break, same per-element [`clip1`].
+#[inline]
+pub fn extend_clipped<T: Scalar>(dst: &mut Vec<T>, src: &[T], threshold: T, norm: T) {
+    if threshold >= norm {
+        dst.extend_from_slice(src);
+    } else {
+        dst.extend(src.iter().map(|&x| clip1(x, threshold)));
+    }
+}
+
+/// In-place variant of [`clip_into`].
+#[inline]
+pub fn clip_inplace<T: Scalar>(xs: &mut [T], c: T) {
+    let mut it = xs.chunks_exact_mut(LANES);
+    for ch in it.by_ref() {
+        for x in ch {
+            *x = clip1(*x, c);
+        }
+    }
+    for x in it.into_remainder() {
+        *x = clip1(*x, c);
+    }
+}
+
+// -------------------------------------------------------- soft-threshold
+
+/// ℓ1 soft-threshold in place: `x_i ← sign(x_i)·(|x_i|-τ)₊`. Chunked path.
+#[inline]
+pub fn soft_threshold_inplace<T: Scalar>(xs: &mut [T], tau: T) {
+    let mut it = xs.chunks_exact_mut(LANES);
+    for ch in it.by_ref() {
+        for x in ch {
+            *x = soft1(*x, tau);
+        }
+    }
+    for x in it.into_remainder() {
+        *x = soft1(*x, tau);
+    }
+}
+
+/// Scalar reference for [`soft_threshold_inplace`].
+#[inline]
+pub fn soft_threshold_inplace_ref<T: Scalar>(xs: &mut [T], tau: T) {
+    for x in xs.iter_mut() {
+        *x = soft1(*x, tau);
+    }
+}
+
+// ----------------------------------------------------------------- scale
+
+/// ℓ2 rescale in place: `x_i ← x_i · s` (the outer stage of `BP¹,²`).
+/// Chunked path.
+#[inline]
+pub fn scale_inplace<T: Scalar>(xs: &mut [T], s: T) {
+    let mut it = xs.chunks_exact_mut(LANES);
+    for ch in it.by_ref() {
+        for x in ch {
+            *x *= s;
+        }
+    }
+    for x in it.into_remainder() {
+        *x *= s;
+    }
+}
+
+/// Scalar reference for [`scale_inplace`].
+#[inline]
+pub fn scale_inplace_ref<T: Scalar>(xs: &mut [T], s: T) {
+    for x in xs.iter_mut() {
+        *x *= s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn randvec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| rng.uniform(-5.0, 5.0)).collect()
+    }
+
+    /// Every length around the lane boundaries, plus empty and length 1.
+    fn edge_lens() -> Vec<usize> {
+        let mut lens = vec![0, 1, 2, 3];
+        for k in 1..=3 {
+            lens.extend([k * LANES - 1, k * LANES, k * LANES + 1]);
+        }
+        lens.push(257);
+        lens
+    }
+
+    #[test]
+    fn colmax_chunked_bit_identical_to_ref() {
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 100 + i as u64);
+            assert_eq!(colmax(&v).to_bits(), colmax_ref(&v).to_bits(), "n={n}");
+            let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            assert_eq!(colmax(&v32).to_bits(), colmax_ref(&v32).to_bits(), "f32 n={n}");
+        }
+    }
+
+    #[test]
+    fn sum_kernels_bit_identical_to_ref() {
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 200 + i as u64);
+            assert_eq!(sum_abs(&v).to_bits(), sum_abs_ref(&v).to_bits(), "sum_abs n={n}");
+            assert_eq!(sumsq(&v).to_bits(), sumsq_ref(&v).to_bits(), "sumsq n={n}");
+        }
+    }
+
+    #[test]
+    fn clip_chunked_bit_identical_to_ref() {
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 300 + i as u64);
+            for c in [0.0, 0.5, 2.0, colmax(&v)] {
+                let mut a = vec![0.0; n];
+                let mut b = vec![0.0; n];
+                clip_into(&v, c, &mut a);
+                clip_into_ref(&v, c, &mut b);
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} c={c}");
+                }
+                let mut inplace = v.clone();
+                clip_inplace(&mut inplace, c);
+                for (x, y) in inplace.iter().zip(a.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "inplace n={n} c={c}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn clip_groups_and_extend_clipped_agree() {
+        let group = 7;
+        let v = randvec(group * 5, 600);
+        let norms: Vec<f64> = v.chunks_exact(group).map(colmax).collect();
+        // Mix of untouched (threshold == norm) and clipped groups.
+        let thresholds: Vec<f64> =
+            norms.iter().enumerate().map(|(i, &n)| if i % 2 == 0 { n } else { n * 0.5 }).collect();
+        let mut a = vec![0.0; v.len()];
+        clip_groups_into(&v, group, &thresholds, &norms, &mut a);
+        let mut b = Vec::with_capacity(v.len());
+        for (g, chunk) in v.chunks_exact(group).enumerate() {
+            extend_clipped(&mut b, chunk, thresholds[g], norms[g]);
+        }
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // Untouched groups are verbatim copies.
+        assert_eq!(&a[..group], &v[..group]);
+    }
+
+    #[test]
+    fn clip1_matches_signum_formula() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..1000 {
+            let x: f64 = rng.uniform(-10.0, 10.0);
+            let c: f64 = rng.uniform(0.0, 5.0);
+            let old = x.signum_s() * x.abs().min_s(c);
+            assert_eq!(clip1(x, c), old, "x={x} c={c}");
+        }
+        // Exactly at the threshold: the clip is the identity.
+        assert_eq!(clip1(2.0, 2.0), 2.0);
+        assert_eq!(clip1(-2.0, 2.0), -2.0);
+    }
+
+    #[test]
+    fn soft1_matches_signum_formula() {
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        for _ in 0..1000 {
+            let x: f64 = rng.uniform(-10.0, 10.0);
+            let tau: f64 = rng.uniform(0.0, 5.0);
+            let old = x.signum_s() * (x.abs() - tau).pos();
+            assert!((soft1(x, tau) - old).abs() == 0.0, "x={x} tau={tau}");
+        }
+    }
+
+    #[test]
+    fn soft_threshold_chunked_bit_identical_to_ref() {
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 400 + i as u64);
+            let mut a = v.clone();
+            let mut b = v.clone();
+            soft_threshold_inplace(&mut a, 0.7);
+            soft_threshold_inplace_ref(&mut b, 0.7);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn scale_chunked_bit_identical_to_ref() {
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 500 + i as u64);
+            let mut a = v.clone();
+            let mut b = v.clone();
+            scale_inplace(&mut a, 0.37);
+            scale_inplace_ref(&mut b, 0.37);
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        let v: Vec<f64> = Vec::new();
+        assert_eq!(colmax(&v), 0.0);
+        assert_eq!(sum_abs(&v), 0.0);
+        assert_eq!(sumsq(&v), 0.0);
+        let mut d: Vec<f64> = Vec::new();
+        clip_into(&v, 1.0, &mut d);
+        soft_threshold_inplace(&mut d, 1.0);
+        scale_inplace(&mut d, 2.0);
+    }
+
+    #[test]
+    fn l2_norm_matches_hypot() {
+        let v = [3.0f64, -4.0];
+        assert_eq!(l2_norm(&v), 5.0);
+    }
+}

@@ -1,0 +1,438 @@
+//! Persistent parking worker pool for the column-parallel kernel stages.
+//!
+//! The seed's `bilevel_l1inf_parallel` spawned scoped OS threads on every
+//! call; at ~20–50 µs per spawn that overhead forced the
+//! sequential/parallel crossover up to 65 536 elements. This pool spawns
+//! its workers **once** (first use), parks them on a condvar between jobs,
+//! and hands each job out as `parts` independently-claimable chunks — a
+//! dispatch costs one mutex/condvar wake (~1–5 µs), which moves the
+//! crossover down an order of magnitude (see `ParallelPolicy::min_elems`
+//! and EXPERIMENTS.md §Perf).
+//!
+//! Design:
+//!
+//! * [`KernelPool::run`]`(parts, f)` publishes `f` and blocks until every
+//!   part index in `0..parts` has been executed exactly once. The calling
+//!   thread participates in the work, so a pool of `N` workers yields
+//!   `N + 1`-way parallelism and a zero-worker pool degrades to an inline
+//!   loop.
+//! * Submissions are serialized by a try-lock: if another thread is
+//!   already running a job, `run` executes its own parts inline instead of
+//!   queueing — graceful degradation under concurrent callers (e.g. many
+//!   serve workers projecting large matrices at once), never convoying.
+//! * The closure is shared with workers as a type-erased raw pointer; the
+//!   completion barrier (`completed == parts`) makes that sound: `run`
+//!   cannot return — and the closure cannot be dropped — while any claimed
+//!   part is still executing, and workers only dereference the pointer for
+//!   parts they claimed.
+//!
+//! [`SendPtr`] is the companion utility callers use to hand *disjoint*
+//! mutable regions of one buffer to different parts (each part derives its
+//! own chunk from the part index, so the regions never alias).
+
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// Copyable raw pointer that may cross thread boundaries. Used by pool
+/// callers to give each part index access to its own disjoint slice of a
+/// shared output buffer.
+///
+/// Safety contract (on the *user*, not this type): parts must derive
+/// non-overlapping regions from their part index, and the pointee must
+/// outlive the `run` call (guaranteed when it borrows from the caller's
+/// stack, since `run` blocks until completion).
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(pub *mut T);
+
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    #[inline(always)]
+    pub fn get(self) -> *mut T {
+        self.0
+    }
+}
+
+/// Type-erased job: a borrowed `Fn(part_index)` with its lifetime hidden.
+/// Only dereferenced between publication and the completion barrier.
+type Job = *const (dyn Fn(usize) + Sync + 'static);
+
+struct SharedJob(Job);
+
+// The pointer is only dereferenced while the submitting `run` call keeps
+// the closure alive (see module docs), and the closure itself is `Sync`.
+unsafe impl Send for SharedJob {}
+
+struct PoolState {
+    /// Bumped once per published job; workers use it to tell jobs apart.
+    epoch: u64,
+    job: Option<SharedJob>,
+    parts: usize,
+    /// Next unclaimed part index of the current job.
+    next_part: usize,
+    /// Parts whose closure call has finished (returned or panicked).
+    completed: usize,
+    /// Worker threads currently inside a closure call. The unwind guard
+    /// waits on this so the closure can never be dropped mid-call.
+    active_workers: usize,
+    /// A worker's closure call panicked; re-raised on the submitter.
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<PoolState>,
+    /// Workers park here between jobs.
+    work_cv: Condvar,
+    /// `run` waits here for the completion barrier.
+    done_cv: Condvar,
+    /// Serializes submitters (`run` falls back to inline when contended).
+    submit: Mutex<()>,
+}
+
+/// A persistent pool of parked worker threads executing part-indexed jobs.
+pub struct KernelPool {
+    inner: Arc<Inner>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl KernelPool {
+    /// Spawn a pool with `workers` parked threads. Zero workers is valid:
+    /// every `run` then executes inline on the caller.
+    pub fn with_workers(workers: usize) -> Self {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(PoolState {
+                epoch: 0,
+                job: None,
+                parts: 0,
+                next_part: 0,
+                completed: 0,
+                active_workers: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let w = Arc::clone(&inner);
+            let spawned = std::thread::Builder::new()
+                .name(format!("bilevel-kernel-{i}"))
+                .spawn(move || worker_loop(&w));
+            match spawned {
+                Ok(h) => handles.push(h),
+                // A failed spawn just leaves the pool smaller; the caller
+                // always participates, so jobs still complete.
+                Err(_) => break,
+            }
+        }
+        Self { inner, handles }
+    }
+
+    /// Number of parked worker threads (the caller adds one more lane).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Execute `f(0), f(1), …, f(parts-1)`, each exactly once, spread
+    /// across the pool plus the calling thread. Blocks until all parts
+    /// finished. Falls back to a plain inline loop when `parts < 2`, the
+    /// pool has no workers, or another thread is mid-submission.
+    pub fn run<F: Fn(usize) + Sync>(&self, parts: usize, f: F) {
+        if parts == 0 {
+            return;
+        }
+        if parts == 1 || self.handles.is_empty() {
+            for i in 0..parts {
+                f(i);
+            }
+            return;
+        }
+        let _submit_guard = match self.inner.submit.try_lock() {
+            Ok(g) => g,
+            // A previous job panicked out of `run` while holding the
+            // submit lock; the pool state is consistent (the unwind guard
+            // cleaned up), so poison is not contention — take the lock.
+            Err(std::sync::TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(std::sync::TryLockError::WouldBlock) => {
+                for i in 0..parts {
+                    f(i);
+                }
+                return;
+            }
+        };
+        let obj: &(dyn Fn(usize) + Sync) = &f;
+        let raw = obj as *const (dyn Fn(usize) + Sync);
+        // Erase the borrow's lifetime; the completion barrier (and, on the
+        // unwind path, `UnwindGuard`) keeps the pointee alive for as long
+        // as workers can dereference it.
+        let job = unsafe {
+            std::mem::transmute::<*const (dyn Fn(usize) + Sync + '_), Job>(raw)
+        };
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.epoch = st.epoch.wrapping_add(1);
+            st.job = Some(SharedJob(job));
+            st.parts = parts;
+            st.next_part = 0;
+            st.completed = 0;
+            st.panicked = false;
+            self.inner.work_cv.notify_all();
+        }
+        // From here on the closure must outlive every worker dereference —
+        // even if `f(part)` panics on *this* thread: the guard blocks the
+        // unwind until no worker is inside a call and no further part can
+        // be claimed.
+        let guard = UnwindGuard(&self.inner);
+        // Participate: claim parts exactly like a worker.
+        loop {
+            let part = {
+                let mut st = self.inner.state.lock().unwrap();
+                if st.next_part >= st.parts {
+                    break;
+                }
+                let p = st.next_part;
+                st.next_part += 1;
+                p
+            };
+            f(part);
+            let mut st = self.inner.state.lock().unwrap();
+            st.completed += 1;
+            if st.completed == st.parts {
+                self.inner.done_cv.notify_all();
+            }
+        }
+        // Completion barrier: wait out parts claimed by workers.
+        let mut st = self.inner.state.lock().unwrap();
+        while st.completed < st.parts {
+            st = self.inner.done_cv.wait(st).unwrap();
+        }
+        let panicked = st.panicked;
+        st.panicked = false;
+        drop(st);
+        drop(guard);
+        if panicked {
+            panic!("kernel pool: a worker's closure call panicked");
+        }
+    }
+}
+
+/// Blocks unwinding out of [`KernelPool::run`] until the published job can
+/// no longer be dereferenced: further claims are cut off and every worker
+/// has left its closure call. Runs on the normal path too (where it is a
+/// no-op beyond clearing the job slot).
+struct UnwindGuard<'a>(&'a Inner);
+
+impl Drop for UnwindGuard<'_> {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().unwrap();
+        // No new claims for this job.
+        st.next_part = st.parts;
+        while st.active_workers > 0 {
+            st = self.0.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+    }
+}
+
+impl Drop for KernelPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+            self.inner.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let mut seen = 0u64;
+    loop {
+        // Park until a job from an unseen epoch is published.
+        let (job, epoch) = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(sj) = &st.job {
+                        break (sj.0, st.epoch);
+                    }
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+        };
+        seen = epoch;
+        // Claim and execute parts until this job runs dry (or a newer job
+        // replaces it — then our claims no longer apply).
+        loop {
+            let part = {
+                let mut st = inner.state.lock().unwrap();
+                if st.epoch != epoch || st.next_part >= st.parts {
+                    break;
+                }
+                let p = st.next_part;
+                st.next_part += 1;
+                // Claim and the in-flight marker are one atomic step, so
+                // the submitter's unwind guard can never miss this call.
+                st.active_workers += 1;
+                p
+            };
+            // SAFETY: the part was claimed from the job of `epoch`; the
+            // submitter blocks (via the completion barrier or its unwind
+            // guard) until `active_workers` drops, so the closure outlives
+            // this call.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                unsafe { (&*job)(part) }
+            }));
+            let mut st = inner.state.lock().unwrap();
+            st.active_workers -= 1;
+            if outcome.is_err() {
+                st.panicked = true;
+            }
+            if st.epoch == epoch {
+                st.completed += 1;
+                if st.completed == st.parts {
+                    inner.done_cv.notify_all();
+                }
+            }
+            if st.active_workers == 0 {
+                inner.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// The process-wide pool used by the projection library: hardware threads
+/// minus one (the submitting thread is the extra lane). Created lazily on
+/// first parallel projection, parked forever after.
+pub fn global() -> &'static KernelPool {
+    static POOL: OnceLock<KernelPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        KernelPool::with_workers(hw.saturating_sub(1))
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_every_part_exactly_once() {
+        let pool = KernelPool::with_workers(3);
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "part {i}");
+        }
+    }
+
+    #[test]
+    fn reuse_across_many_jobs() {
+        let pool = KernelPool::with_workers(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(8, |i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 200 * (1 + 2 + 3 + 4 + 5 + 6 + 7 + 8));
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = KernelPool::with_workers(0);
+        let hits: Vec<AtomicUsize> = (0..5).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn disjoint_mutable_writes_via_sendptr() {
+        let pool = KernelPool::with_workers(3);
+        let mut buf = vec![0usize; 1024];
+        let chunk = 64;
+        let parts = buf.len() / chunk;
+        {
+            let ptr = SendPtr(buf.as_mut_ptr());
+            pool.run(parts, |t| {
+                let s = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(t * chunk), chunk) };
+                for (k, x) in s.iter_mut().enumerate() {
+                    *x = t * chunk + k;
+                }
+            });
+        }
+        for (i, &x) in buf.iter().enumerate() {
+            assert_eq!(x, i);
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        let pool = std::sync::Arc::new(KernelPool::with_workers(2));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let p = std::sync::Arc::clone(&pool);
+            joins.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let sum = AtomicUsize::new(0);
+                    p.run(6, |i| {
+                        sum.fetch_add(i, Ordering::Relaxed);
+                    });
+                    assert_eq!(sum.load(Ordering::Relaxed), 15, "submitter {t}");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn panicking_job_propagates_and_pool_survives() {
+        let pool = KernelPool::with_workers(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(result.is_err(), "panic inside a part must reach the submitter");
+        // The pool stays fully usable afterwards.
+        let hits = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn drop_joins_workers() {
+        let pool = KernelPool::with_workers(4);
+        pool.run(16, |_| {});
+        drop(pool); // must not hang or leak
+    }
+
+    #[test]
+    fn global_pool_is_usable() {
+        let hits = AtomicUsize::new(0);
+        global().run(10, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 10);
+    }
+}

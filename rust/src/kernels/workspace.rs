@@ -1,0 +1,95 @@
+//! Reusable projection scratch — the allocation side of the zero-alloc
+//! kernel story.
+//!
+//! A [`Workspace`] owns every intermediate buffer a bi-level projection
+//! needs: the column-norm vector, the per-column threshold vector, and the
+//! inner Condat solver's candidate/waste lists. All of them are `clear()`ed
+//! and refilled on each call, so their capacity is retained across calls
+//! and a steady-state projection (same shape, any contents) performs
+//! **zero heap allocations** — see `bilevel_l1inf_into` in
+//! `projection/bilevel` and the `kernels_alloc` integration test that
+//! proves it with a counting global allocator.
+//!
+//! The serve engine keeps one workspace per worker thread (a per-shard
+//! pool, since workers are pinned to shards), so sustained traffic only
+//! allocates the response payloads.
+
+use crate::scalar::Scalar;
+
+/// Scratch for Condat's ℓ1 threshold (`projection::l1::condat`): the
+/// candidate active set `v` and the once-revisited `waste` list. Both are
+/// bounded by the input length, so `threshold_with` reserves them to that
+/// worst case up front and never reallocates mid-scan.
+#[derive(Clone, Debug, Default)]
+pub struct CondatScratch<T: Scalar> {
+    pub v: Vec<T>,
+    pub waste: Vec<T>,
+}
+
+impl<T: Scalar> CondatScratch<T> {
+    pub fn new() -> Self {
+        Self { v: Vec::new(), waste: Vec::new() }
+    }
+}
+
+/// Reusable buffers for the workspace-based (`*_into`) projection entry
+/// points. Create once, feed to every call; shapes may vary between calls
+/// (buffers grow monotonically to the largest column count seen).
+#[derive(Clone, Debug, Default)]
+pub struct Workspace<T: Scalar> {
+    /// Stage-1 column aggregates (`‖y_j‖∞` for `BP¹,∞`).
+    pub norms: Vec<T>,
+    /// Inner-stage solution `û` — the per-column clip thresholds. After a
+    /// `bilevel_l1inf_into` call this holds the same vector
+    /// `BilevelResult::thresholds` would.
+    pub thresholds: Vec<T>,
+    /// Inner Condat solver scratch.
+    pub condat: CondatScratch<T>,
+}
+
+impl<T: Scalar> Workspace<T> {
+    pub fn new() -> Self {
+        Self { norms: Vec::new(), thresholds: Vec::new(), condat: CondatScratch::new() }
+    }
+
+    /// Pre-size every buffer for matrices with `cols` columns, so even the
+    /// first projection through this workspace is allocation-free.
+    pub fn for_cols(cols: usize) -> Self {
+        Self {
+            norms: Vec::with_capacity(cols),
+            thresholds: Vec::with_capacity(cols),
+            condat: CondatScratch {
+                v: Vec::with_capacity(cols),
+                waste: Vec::with_capacity(cols),
+            },
+        }
+    }
+
+    /// The per-column thresholds of the last `*_into` projection.
+    pub fn thresholds(&self) -> &[T] {
+        &self.thresholds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_cols_preallocates() {
+        let ws = Workspace::<f64>::for_cols(32);
+        assert!(ws.norms.capacity() >= 32);
+        assert!(ws.thresholds.capacity() >= 32);
+        assert!(ws.condat.v.capacity() >= 32);
+        assert!(ws.condat.waste.capacity() >= 32);
+        assert!(ws.thresholds().is_empty());
+    }
+
+    #[test]
+    fn default_is_empty() {
+        let ws = Workspace::<f32>::new();
+        assert_eq!(ws.norms.capacity(), 0);
+        let cs = CondatScratch::<f32>::new();
+        assert_eq!(cs.v.capacity(), 0);
+    }
+}

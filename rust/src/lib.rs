@@ -39,6 +39,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod norms;
@@ -53,8 +54,11 @@ pub mod tensor;
 
 /// Convenience re-exports covering the most common entry points.
 pub mod prelude {
+    pub use crate::kernels::Workspace;
     pub use crate::norms::{l11_norm, l12_norm, l1inf_norm, linf1_norm, frobenius_norm};
-    pub use crate::projection::bilevel::{bilevel_l11, bilevel_l12, bilevel_l1inf};
+    pub use crate::projection::bilevel::{
+        bilevel_l11, bilevel_l12, bilevel_l1inf, bilevel_l1inf_into,
+    };
     pub use crate::projection::l1::{project_l1, L1Algorithm};
     pub use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
     pub use crate::rng::{Rng, SplitMix64, Xoshiro256pp};

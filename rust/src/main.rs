@@ -31,6 +31,7 @@ fn main() -> ExitCode {
         "train" => cmd_train(&args),
         "experiment" => cmd_experiment(&args),
         "artifacts" => cmd_artifacts(&args),
+        "bench" => cmd_bench(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "help" | "" => {
@@ -269,6 +270,27 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let (serve_cfg, load_cfg) = serve_configs(args)?;
     println!("bilevel loadgen — closed-loop engine benchmark");
     run_engine_workload(&serve_cfg, &load_cfg)
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    let target = args.positional.first().map(String::as_str).unwrap_or("kernels");
+    match target {
+        "kernels" => {
+            let quick =
+                args.flag("quick") || std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+            println!(
+                "bilevel bench kernels — SIMD kernel layer vs scalar baseline{}",
+                if quick { " (quick)" } else { "" }
+            );
+            let report = bilevel_sparse::bench::kernels::run(quick);
+            println!("{}", report.markdown());
+            let out = args.str_or("out", "BENCH_kernels.json");
+            std::fs::write(&out, report.to_json()).map_err(|e| anyhow!("{out}: {e}"))?;
+            println!("wrote {out}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown bench target {other:?} (try: kernels)")),
+    }
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

@@ -26,8 +26,9 @@
 
 mod parallel;
 
-pub use parallel::{bilevel_l1inf_parallel, ParallelPolicy};
+pub use parallel::{bilevel_l1inf_parallel, bilevel_l1inf_parallel_into, ParallelPolicy};
 
+use crate::kernels::{self, Workspace};
 use crate::projection::l1::{self, L1Algorithm};
 use crate::projection::l2;
 use crate::scalar::Scalar;
@@ -107,34 +108,108 @@ fn bilevel_generic<T: Scalar>(
 
 /// `BP¹,∞_η(Y)` — paper Algorithm 1, with the threshold vector. O(nm).
 ///
-/// Fused implementation (EXPERIMENTS.md §Perf): the clip stage streams the
-/// source once and writes the output once (`x = sign(y)·min(|y|, u_j)`)
-/// instead of clone-then-clip-in-place, saving a full extra pass over the
-/// matrix — the operator is memory-bound, so this is a ~25% win at sizes
-/// past L2 cache.
+/// One-shot wrapper over [`bilevel_l1inf_into`]: allocates a workspace and
+/// output for this call. Hot paths keep a [`Workspace`] alive and use the
+/// workspace variants directly — the serve engine calls
+/// [`bilevel_l1inf_into`], the trainer projects W1 in place with
+/// [`bilevel_l1inf_inplace_cols`] — which perform zero heap allocations in
+/// steady state.
 pub fn bilevel_l1inf_with<T: Scalar>(
     y: &Matrix<T>,
     eta: T,
     algo: L1Algorithm,
 ) -> BilevelResult<T> {
     assert!(eta >= T::ZERO, "bilevel projection: radius must be non-negative");
-    let (n, m) = (y.rows(), y.cols());
-    // Stage 1: column inf-norms.
-    let v: Vec<T> = y.columns().map(crate::tensor::vec_ops::linf).collect();
-    // Inner l1 projection of the norm vector.
-    let u = l1::project_l1(&v, eta, algo);
-    // Stage 2 (fused): single read of Y, single write of X.
-    let mut data: Vec<T> = Vec::with_capacity(n * m);
+    let mut ws = Workspace::new();
+    l1inf_thresholds_into(y, eta, algo, &mut ws);
+    // Extend-based build: the output is written exactly once (no
+    // zero-fill pass), through the same shared copy-or-clip kernel ops as
+    // the `_into` path, so the two stay bit-identical.
+    let mut data: Vec<T> = Vec::with_capacity(y.len());
     for (j, col) in y.columns().enumerate() {
-        let c = u[j];
-        if c >= v[j] {
-            // Column untouched (threshold above its max): plain copy.
-            data.extend_from_slice(col);
-        } else {
-            data.extend(col.iter().map(|&x| x.signum_s() * x.abs().min_s(c)));
+        kernels::extend_clipped(&mut data, col, ws.thresholds[j], ws.norms[j]);
+    }
+    BilevelResult {
+        x: Matrix::from_col_major(y.rows(), y.cols(), data),
+        thresholds: std::mem::take(&mut ws.thresholds),
+    }
+}
+
+/// Stage 1 (column ∞-norms) plus the inner ℓ1 projection, into the
+/// workspace — the shared front half of every `BP¹,∞` entry point.
+fn l1inf_thresholds_into<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1Algorithm,
+    ws: &mut Workspace<T>,
+) {
+    ws.norms.clear();
+    ws.norms.extend(y.columns().map(kernels::colmax));
+    ws.thresholds.clear();
+    ws.thresholds.extend_from_slice(&ws.norms);
+    l1::project_l1_nonneg_inplace_with(&mut ws.thresholds, eta, algo, &mut ws.condat);
+}
+
+/// Workspace-based `BP¹,∞_η(Y)` (EXPERIMENTS.md §Perf): projects `y` into
+/// `out`, leaving the per-column thresholds `û` in `ws.thresholds`.
+///
+/// All four hot loops run through the lane-chunked [`crate::kernels`]
+/// layer, and every intermediate lives in `ws` — with a warm workspace and
+/// a right-sized `out` (both sized by any previous call of the same
+/// shape), a call performs **zero heap allocations** (proven by the
+/// `kernels_alloc` integration test). The clip stage is fused: one read of
+/// `Y`, one write of `X`, with untouched columns (`û_j ≥ ‖y_j‖∞`)
+/// degenerating to a `memcpy`.
+pub fn bilevel_l1inf_into<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1Algorithm,
+    ws: &mut Workspace<T>,
+    out: &mut Matrix<T>,
+) {
+    assert!(eta >= T::ZERO, "bilevel projection: radius must be non-negative");
+    let n = y.rows();
+    // Stage 1 + inner l1 projection (allocation-free via the Condat
+    // scratch; the norm vector is non-negative by construction).
+    l1inf_thresholds_into(y, eta, algo, ws);
+    // Stage 2 (fused): single read of Y, single write of X; untouched
+    // columns degenerate to a plain copy inside the shared kernel.
+    out.resize_reuse(n, y.cols());
+    kernels::clip_groups_into(
+        y.as_slice(),
+        n.max(1), // group size must be non-zero even for 0-row matrices
+        &ws.thresholds,
+        &ws.norms,
+        out.as_mut_slice(),
+    );
+}
+
+/// In-place workspace `BP¹,∞` over a flat column-major buffer (`rows`
+/// elements per column) — the trainer's W1 path, where the weights live
+/// in a flat tensor and cloning them into a [`Matrix`] would defeat the
+/// zero-allocation step. Bit-identical to [`bilevel_l1inf_into`] on the
+/// same data (same kernels per column; the untouched-column copy branch
+/// becomes a no-op in place). Thresholds land in `ws.thresholds`.
+pub fn bilevel_l1inf_inplace_cols<T: Scalar>(
+    data: &mut [T],
+    rows: usize,
+    eta: T,
+    algo: L1Algorithm,
+    ws: &mut Workspace<T>,
+) {
+    assert!(eta >= T::ZERO, "bilevel projection: radius must be non-negative");
+    assert!(rows > 0, "bilevel_l1inf_inplace_cols: rows must be positive");
+    assert_eq!(data.len() % rows, 0, "bilevel_l1inf_inplace_cols: ragged buffer");
+    ws.norms.clear();
+    ws.norms.extend(data.chunks_exact(rows).map(kernels::colmax));
+    ws.thresholds.clear();
+    ws.thresholds.extend_from_slice(&ws.norms);
+    l1::project_l1_nonneg_inplace_with(&mut ws.thresholds, eta, algo, &mut ws.condat);
+    for (j, col) in data.chunks_exact_mut(rows).enumerate() {
+        if ws.thresholds[j] < ws.norms[j] {
+            kernels::clip_inplace(col, ws.thresholds[j]);
         }
     }
-    BilevelResult { x: Matrix::from_col_major(n, m, data), thresholds: u }
 }
 
 /// `BP¹,¹_η(Y)` — paper Algorithm 2 (inner ℓ1 projection per column).
@@ -333,6 +408,48 @@ mod tests {
         );
         for j in 0..4 {
             assert!((x.get(0, j) - direct[j]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn inplace_cols_matches_with_bitwise() {
+        let mut ws = Workspace::new();
+        for (seed, n, m, eta) in
+            [(1u64, 16, 24, 1.5), (2, 1, 9, 0.2), (3, 33, 7, 4.0), (4, 8, 8, 1e6)]
+        {
+            let y = randmat(n, m, 500 + seed);
+            let r = bilevel_l1inf_with(&y, eta, L1Algorithm::Condat);
+            let mut flat = y.as_slice().to_vec();
+            bilevel_l1inf_inplace_cols(&mut flat, n, eta, L1Algorithm::Condat, &mut ws);
+            for (a, b) in r.x.as_slice().iter().zip(flat.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{m}");
+            }
+            for (a, b) in r.thresholds.iter().zip(ws.thresholds().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{m} thresholds");
+            }
+        }
+    }
+
+    #[test]
+    fn into_matches_with_bitwise_and_reuses_buffers() {
+        let mut ws = Workspace::new();
+        let mut out = Matrix::zeros(0, 0);
+        // Varying shapes through one workspace: buffers grow monotonically
+        // and results stay bit-identical to the one-shot entry point.
+        for (seed, n, m, eta) in
+            [(1u64, 30, 20, 2.0), (2, 1, 17, 0.5), (3, 17, 1, 0.1), (4, 64, 48, 5.0)]
+        {
+            let y = randmat(n, m, 400 + seed);
+            let r = bilevel_l1inf_with(&y, eta, L1Algorithm::Condat);
+            bilevel_l1inf_into(&y, eta, L1Algorithm::Condat, &mut ws, &mut out);
+            assert_eq!((out.rows(), out.cols()), (n, m));
+            for (a, b) in r.x.as_slice().iter().zip(out.as_slice().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{m}");
+            }
+            assert_eq!(r.thresholds.len(), ws.thresholds().len());
+            for (a, b) in r.thresholds.iter().zip(ws.thresholds().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{m} thresholds");
+            }
         }
     }
 

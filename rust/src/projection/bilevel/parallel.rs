@@ -3,31 +3,48 @@
 //! Both stages parallelize trivially over columns (the only cross-column
 //! coupling is the m-dimensional inner ℓ1 projection, which is cheap):
 //! stage 1 computes column ∞-norms in parallel, the inner projection runs
-//! single-threaded, stage 2 clips columns in parallel. Scoped std threads —
-//! no rayon offline.
+//! single-threaded, stage 2 clips columns in parallel — straight from the
+//! source into the output buffer, so the old clone-then-clip extra write
+//! pass is gone.
 //!
-//! The sequential path is kept for small inputs where thread spawn overhead
-//! dominates (crossover measured in `benches/fig1_time.rs`, see
-//! EXPERIMENTS.md §Perf).
+//! Work is dispatched through the persistent parking
+//! [`crate::kernels::pool`] (spawned once, condvar-parked between jobs)
+//! instead of the seed's scoped spawn-per-call threads. A dispatch costs a
+//! mutex/condvar wake (typically ~1–5 µs) instead of a thread spawn
+//! (~20–50 µs), which is why the [`ParallelPolicy::min_elems`] default
+//! dropped from the measured `1 << 16` of the spawn era to an estimated
+//! `1 << 13` — re-measure the crossover on your hardware with
+//! `bilevel bench kernels` (EXPERIMENTS.md §Perf) and override the policy
+//! if it lands elsewhere.
 
+use crate::kernels::pool::{self, SendPtr};
+use crate::kernels::{self, Workspace};
 use crate::projection::l1::{self, L1Algorithm};
 use crate::scalar::Scalar;
-use crate::tensor::{vec_ops, Matrix};
+use crate::tensor::Matrix;
 
 use super::BilevelResult;
 
 /// Threading policy for the parallel bi-level projection.
 #[derive(Clone, Copy, Debug)]
 pub struct ParallelPolicy {
-    /// Number of worker threads (0 ⇒ `available_parallelism`).
+    /// Maximum parallel parts a projection is split into (0 ⇒
+    /// `available_parallelism`). The parts execute on the shared kernel
+    /// pool; this caps the split, not the pool size.
     pub threads: usize,
-    /// Below this element count, run sequentially.
+    /// Below this element count, run sequentially. Default `1 << 13`
+    /// (8 192 elements, e.g. 64×128): the spawn-per-call implementation
+    /// this pool replaced had its crossover measured at `1 << 16`, and a
+    /// pool dispatch costs roughly an order of magnitude less than a
+    /// spawn, so the default scales that measurement down accordingly —
+    /// an estimate until `bilevel bench kernels` is run on the target
+    /// hardware (its `crossover/probe` rows re-measure it).
     pub min_elems: usize,
 }
 
 impl Default for ParallelPolicy {
     fn default() -> Self {
-        Self { threads: 0, min_elems: 1 << 16 }
+        Self { threads: 0, min_elems: 1 << 13 }
     }
 }
 
@@ -51,52 +68,83 @@ pub fn bilevel_l1inf_parallel<T: Scalar>(
     algo: L1Algorithm,
     policy: ParallelPolicy,
 ) -> BilevelResult<T> {
+    let mut ws = Workspace::new();
+    let mut out = Matrix::zeros(y.rows(), y.cols());
+    bilevel_l1inf_parallel_into(y, eta, algo, policy, &mut ws, &mut out);
+    BilevelResult { x: out, thresholds: std::mem::take(&mut ws.thresholds) }
+}
+
+/// Workspace-based parallel `BP¹,∞` — the zero-allocation steady-state
+/// variant of [`bilevel_l1inf_parallel`]; bit-identical to the sequential
+/// [`super::bilevel_l1inf_into`] (same kernels, per column).
+pub fn bilevel_l1inf_parallel_into<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1Algorithm,
+    policy: ParallelPolicy,
+    ws: &mut Workspace<T>,
+    out: &mut Matrix<T>,
+) {
     assert!(eta >= T::ZERO);
     let (n, m) = (y.rows(), y.cols());
-    if n * m < policy.min_elems || m < 2 {
-        return super::bilevel_l1inf_with(y, eta, algo);
+    if n == 0 || n * m < policy.min_elems || m < 2 {
+        return super::bilevel_l1inf_into(y, eta, algo, ws, out);
     }
-    let threads = policy.effective_threads(m);
+    let parts = policy.effective_threads(m);
+    let chunk = m.div_ceil(parts);
+    let pool = pool::global();
 
-    // Stage 1: column inf-norms, parallel over column chunks.
-    let mut v = vec![T::ZERO; m];
-    let chunk = m.div_ceil(threads);
-    std::thread::scope(|s| {
-        for (t, out_chunk) in v.chunks_mut(chunk).enumerate() {
-            let y_ref = &y;
-            s.spawn(move || {
-                let j0 = t * chunk;
-                for (dj, o) in out_chunk.iter_mut().enumerate() {
-                    *o = vec_ops::linf(y_ref.col(j0 + dj));
-                }
-            });
-        }
-    });
+    // Stage 1: column inf-norms, parallel over column chunks. Each part
+    // derives a disjoint slice of the norm buffer from its index.
+    ws.norms.clear();
+    ws.norms.resize(m, T::ZERO);
+    {
+        let norms_ptr = SendPtr(ws.norms.as_mut_ptr());
+        pool.run(parts, |t| {
+            let j0 = t * chunk;
+            if j0 >= m {
+                return;
+            }
+            let j1 = (j0 + chunk).min(m);
+            let norms =
+                unsafe { std::slice::from_raw_parts_mut(norms_ptr.get().add(j0), j1 - j0) };
+            for (dj, o) in norms.iter_mut().enumerate() {
+                *o = kernels::colmax(y.col(j0 + dj));
+            }
+        });
+    }
 
     // Inner l1 projection of the norm vector (cheap, sequential).
-    let u = l1::project_l1(&v, eta, algo);
+    ws.thresholds.clear();
+    ws.thresholds.extend_from_slice(&ws.norms);
+    l1::project_l1_nonneg_inplace_with(&mut ws.thresholds, eta, algo, &mut ws.condat);
 
-    // Stage 2: clip columns in parallel. Work directly on the column-major
-    // buffer so each worker owns a disjoint contiguous region.
-    let mut x = y.clone();
-    let rows = n;
-    std::thread::scope(|s| {
-        let data = x.as_mut_slice();
-        for (t, cols_chunk) in data.chunks_mut(chunk * rows).enumerate() {
-            let u_ref = &u;
-            s.spawn(move || {
-                let j0 = t * chunk;
-                for (dj, col) in cols_chunk.chunks_mut(rows).enumerate() {
-                    let c = u_ref[j0 + dj];
-                    for val in col.iter_mut() {
-                        *val = val.signum_s() * val.abs().min_s(c);
-                    }
-                }
-            });
-        }
-    });
-
-    BilevelResult { x, thresholds: u }
+    // Stage 2: fused clip, parallel over disjoint column ranges of the
+    // output buffer.
+    out.resize_reuse(n, m);
+    {
+        let src = y.as_slice();
+        let u = &ws.thresholds;
+        let v = &ws.norms;
+        let dst_ptr = SendPtr(out.as_mut_slice().as_mut_ptr());
+        pool.run(parts, |t| {
+            let j0 = t * chunk;
+            if j0 >= m {
+                return;
+            }
+            let j1 = (j0 + chunk).min(m);
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(dst_ptr.get().add(j0 * n), (j1 - j0) * n)
+            };
+            kernels::clip_groups_into(
+                &src[j0 * n..j1 * n],
+                n,
+                &u[j0..j1],
+                &v[j0..j1],
+                dst,
+            );
+        });
+    }
 }
 
 #[cfg(test)]
@@ -119,6 +167,30 @@ mod tests {
         assert_eq!(seq.thresholds.len(), par.thresholds.len());
         for (a, b) in seq.thresholds.iter().zip(par.thresholds.iter()) {
             assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_sequential() {
+        // Stronger than `matches_sequential`: the pool path runs the same
+        // kernels per column, so results agree to the last bit.
+        let mut rng = Xoshiro256pp::seed_from_u64(60);
+        for (n, m) in [(64, 129), (200, 33), (16, 1024)] {
+            let y = Matrix::<f64>::randn(n, m, &mut rng);
+            let seq =
+                crate::projection::bilevel::bilevel_l1inf_with(&y, 3.0, L1Algorithm::Condat);
+            let par = bilevel_l1inf_parallel(
+                &y,
+                3.0,
+                L1Algorithm::Condat,
+                ParallelPolicy { threads: 7, min_elems: 0 },
+            );
+            for (a, b) in seq.x.as_slice().iter().zip(par.x.as_slice().iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{m}");
+            }
+            for (a, b) in seq.thresholds.iter().zip(par.thresholds.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{n}x{m} thresholds");
+            }
         }
     }
 
@@ -158,5 +230,26 @@ mod tests {
         );
         let seq = crate::projection::bilevel::bilevel_l1inf_with(&y, 1.5, L1Algorithm::Condat);
         assert!(par.x.max_abs_diff(&seq.x) < 1e-15);
+    }
+
+    #[test]
+    fn parallel_into_reuses_workspace() {
+        let mut rng = Xoshiro256pp::seed_from_u64(59);
+        let mut ws = Workspace::new();
+        let mut out = Matrix::zeros(0, 0);
+        for _ in 0..3 {
+            let y = Matrix::<f64>::randn(48, 160, &mut rng);
+            bilevel_l1inf_parallel_into(
+                &y,
+                2.5,
+                L1Algorithm::Condat,
+                ParallelPolicy { threads: 3, min_elems: 0 },
+                &mut ws,
+                &mut out,
+            );
+            let seq =
+                crate::projection::bilevel::bilevel_l1inf_with(&y, 2.5, L1Algorithm::Condat);
+            assert!(out.max_abs_diff(&seq.x) == 0.0);
+        }
     }
 }

@@ -16,6 +16,7 @@
 //! The identity (Prop. III.3) transfers verbatim: clipping is per-group,
 //! so `Σ_g (max|resid_g|) + Σ_g (max|proj_g|) = Σ_g max|y_g|`.
 
+use crate::kernels;
 use crate::projection::l1::{self, L1Algorithm};
 use crate::scalar::Scalar;
 
@@ -69,21 +70,15 @@ pub fn bilevel_l1inf_grouped<T: Scalar>(
 ) -> GroupedResult<T> {
     assert_eq!(y.len(), spec.len(), "buffer does not match the group spec");
     assert!(eta >= T::ZERO);
-    // Stage 1: per-group inf-norms.
-    let v: Vec<T> = y
-        .chunks_exact(spec.group_size)
-        .map(crate::tensor::vec_ops::linf)
-        .collect();
+    // Stage 1: per-group inf-norms (lane-chunked kernel reduction).
+    let v: Vec<T> = y.chunks_exact(spec.group_size).map(kernels::colmax).collect();
     let u = l1::project_l1(&v, eta, algo);
-    // Stage 2: fused clip.
+    // Stage 2: fused clip through the shared kernel helper, so a
+    // column-shaped GroupSpec reproduces `bilevel_l1inf` bit-for-bit;
+    // extend-based fill keeps the output single-write (no zero-fill pass).
     let mut x = Vec::with_capacity(y.len());
     for (g, chunk) in y.chunks_exact(spec.group_size).enumerate() {
-        let c = u[g];
-        if c >= v[g] {
-            x.extend_from_slice(chunk);
-        } else {
-            x.extend(chunk.iter().map(|&e| e.signum_s() * e.abs().min_s(c)));
-        }
+        kernels::extend_clipped(&mut x, chunk, u[g], v[g]);
     }
     GroupedResult { x, thresholds: u }
 }

@@ -10,13 +10,31 @@
 //!
 //! The default algorithm of the whole repo: `BP¹,∞`'s O(m) inner step.
 
+use crate::kernels::CondatScratch;
 use crate::scalar::Scalar;
 
+/// One-shot entry point: allocates a fresh scratch per call. Hot paths use
+/// [`threshold_with`] with a reused [`CondatScratch`] instead.
 pub fn threshold<T: Scalar>(a: &[T], radius: T) -> T {
+    threshold_with(a, radius, &mut CondatScratch::new())
+}
+
+/// Allocation-free variant: the candidate set `v` and the `waste` list
+/// live in the caller's scratch. Both are bounded by `a.len()` (every
+/// input element enters `v` at most once from the scan and moves to
+/// `waste` at most once), so they are reserved to that worst case up
+/// front — after the first call at a given size the scratch never grows
+/// again. (The seed version seeded `v` with `with_capacity(len.min(64))`,
+/// which guaranteed mid-scan reallocations for every m > 64.)
+pub fn threshold_with<T: Scalar>(a: &[T], radius: T, scratch: &mut CondatScratch<T>) -> T {
     debug_assert!(!a.is_empty());
     // Work on the non-negative part; the simplex problem ignores negatives.
-    let mut v: Vec<T> = Vec::with_capacity(a.len().min(64));
-    let mut waste: Vec<T> = Vec::new();
+    let v = &mut scratch.v;
+    let waste = &mut scratch.waste;
+    v.clear();
+    waste.clear();
+    v.reserve(a.len());
+    waste.reserve(a.len());
 
     // Seed with the first non-negative-clamped value.
     let y0 = a[0].max_s(T::ZERO);
@@ -33,7 +51,7 @@ pub fn threshold<T: Scalar>(a: &[T], radius: T) -> T {
             } else {
                 // Everything collected so far may be inactive; restart the
                 // candidate set from y, park the old candidates for review.
-                waste.append(&mut v);
+                waste.append(v);
                 v.push(y);
                 rho = y - radius;
             }
@@ -41,7 +59,7 @@ pub fn threshold<T: Scalar>(a: &[T], radius: T) -> T {
     }
 
     // Second chance for the waste list.
-    for &y in &waste {
+    for &y in waste.iter() {
         if y > rho {
             v.push(y);
             rho += (y - rho) / T::from_usize(v.len());
@@ -108,6 +126,38 @@ mod tests {
         let a: Vec<f64> = (1..=1000).rev().map(|i| i as f64 / 10.0).collect();
         let want = super::super::sort::threshold(&a, 7.0);
         assert!((threshold(&a, 7.0) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical_and_stops_growing() {
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        let mut scratch = CondatScratch::new();
+        let mut cases: Vec<(Vec<f64>, f64)> = Vec::new();
+        for _ in 0..100 {
+            let n = 1 + rng.next_below(300) as usize;
+            let a: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 4.0)).collect();
+            let total: f64 = a.iter().sum();
+            if total < 1e-9 {
+                continue;
+            }
+            let radius = rng.uniform(total * 0.01, total * 0.95);
+            cases.push((a, radius));
+        }
+        for (trial, (a, radius)) in cases.iter().enumerate() {
+            let fresh = threshold(a, *radius);
+            let reused = threshold_with(a, *radius, &mut scratch);
+            assert_eq!(fresh.to_bits(), reused.to_bits(), "trial {trial}");
+        }
+        // The contract: once the largest input has been seen, replaying
+        // any of the inputs never grows the scratch again (zero-alloc
+        // steady state), regardless of std's amortized-growth policy.
+        let cap_v = scratch.v.capacity();
+        let cap_waste = scratch.waste.capacity();
+        for (a, radius) in &cases {
+            threshold_with(a, *radius, &mut scratch);
+        }
+        assert_eq!(scratch.v.capacity(), cap_v, "candidate scratch grew on reuse");
+        assert_eq!(scratch.waste.capacity(), cap_waste, "waste scratch grew on reuse");
     }
 
     #[test]

@@ -22,6 +22,7 @@ pub mod condat;
 pub mod michelot;
 pub mod sort;
 
+use crate::kernels::{self, CondatScratch};
 use crate::scalar::Scalar;
 use crate::tensor::vec_ops;
 
@@ -74,6 +75,46 @@ pub fn simplex_threshold<T: Scalar>(a: &[T], radius: T, algo: L1Algorithm) -> T 
     }
 }
 
+/// [`simplex_threshold`] with caller-provided scratch: the default Condat
+/// solver runs allocation-free through it; the other algorithms keep their
+/// own (allocating) scratch — they exist for cross-checks and benchmarks,
+/// not the hot path.
+pub fn simplex_threshold_with<T: Scalar>(
+    a: &[T],
+    radius: T,
+    algo: L1Algorithm,
+    scratch: &mut CondatScratch<T>,
+) -> T {
+    match algo {
+        L1Algorithm::Condat => condat::threshold_with(a, radius, scratch),
+        other => simplex_threshold(a, radius, other),
+    }
+}
+
+/// In-place ℓ1-ball projection of a **non-negative** vector with caller
+/// scratch — the inner stage of the workspace (`*_into`) bi-level path.
+/// For non-negative input this is bit-identical to [`project_l1_inplace`]
+/// (the `|v|` copy is the identity and soft-thresholding reduces to
+/// `(v-τ)₊`), but performs zero allocations with a warm scratch.
+pub fn project_l1_nonneg_inplace_with<T: Scalar>(
+    v: &mut [T],
+    eta: T,
+    algo: L1Algorithm,
+    scratch: &mut CondatScratch<T>,
+) {
+    debug_assert!(v.iter().all(|&x| x >= T::ZERO));
+    assert!(eta >= T::ZERO, "project_l1: radius must be non-negative");
+    if eta == T::ZERO {
+        v.iter_mut().for_each(|x| *x = T::ZERO);
+        return;
+    }
+    if kernels::sum_abs(v) <= eta {
+        return; // already inside the ball
+    }
+    let tau = simplex_threshold_with(v, eta, algo, scratch);
+    kernels::soft_threshold_inplace(v, tau);
+}
+
 /// Project `y` onto the ℓ1 ball of radius `eta`. Returns a fresh vector.
 pub fn project_l1<T: Scalar>(y: &[T], eta: T, algo: L1Algorithm) -> Vec<T> {
     let mut out = y.to_vec();
@@ -96,12 +137,11 @@ pub fn project_l1_inplace<T: Scalar>(y: &mut [T], eta: T, algo: L1Algorithm) {
     soft_threshold_inplace(y, tau);
 }
 
-/// `x_i ← sign(x_i)·max(|x_i| − tau, 0)`.
+/// `x_i ← sign(x_i)·max(|x_i| − tau, 0)` — the lane-chunked kernel.
+/// Requires `tau ≥ 0` (thresholds from [`simplex_threshold`] always are).
 pub fn soft_threshold_inplace<T: Scalar>(y: &mut [T], tau: T) {
-    for x in y.iter_mut() {
-        let mag = (x.abs() - tau).pos();
-        *x = x.signum_s() * mag;
-    }
+    debug_assert!(tau >= T::ZERO, "soft_threshold_inplace: tau must be non-negative");
+    kernels::soft_threshold_inplace(y, tau);
 }
 
 /// Projection onto the probability-simplex-like set `{x ≥ 0, Σx = radius}`
@@ -238,6 +278,33 @@ mod tests {
                 .map(|((&yi, &xi), &zi)| (yi - xi) * (zi - xi))
                 .sum();
             assert!(ip <= 1e-8, "VI violated: {ip}");
+        }
+    }
+
+    #[test]
+    fn nonneg_inplace_with_scratch_matches_project_l1_bitwise() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2028);
+        let mut scratch = CondatScratch::new();
+        for algo in L1Algorithm::all() {
+            for trial in 0..50 {
+                let n = 1 + rng.next_below(200) as usize;
+                let v: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 3.0)).collect();
+                let total: f64 = v.iter().sum();
+                // Cover inside-ball, tight, and zero radii.
+                for eta in [0.0, total * 0.4, total * 2.0] {
+                    let want = project_l1(&v, eta, *algo);
+                    let mut got = v.clone();
+                    project_l1_nonneg_inplace_with(&mut got, eta, *algo, &mut scratch);
+                    for (a, b) in want.iter().zip(got.iter()) {
+                        assert_eq!(
+                            a.to_bits(),
+                            b.to_bits(),
+                            "{} trial {trial} eta {eta}",
+                            algo.name()
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -2,18 +2,17 @@
 //!
 //! `P²_c(y) = y·min(1, c/‖y‖₂)`. The outer step of `BP¹,²` (paper Alg. 3).
 
+use crate::kernels;
 use crate::scalar::Scalar;
-use crate::tensor::vec_ops;
 
-/// Project onto `{x : ‖x‖₂ ≤ c}` in place.
+/// Project onto `{x : ‖x‖₂ ≤ c}` in place. Norm reduction and rescale run
+/// through the lane-chunked [`crate::kernels`] layer.
 pub fn project_l2_inplace<T: Scalar>(y: &mut [T], c: T) {
     debug_assert!(c >= T::ZERO);
-    let norm = vec_ops::l2(y);
+    let norm = kernels::l2_norm(y);
     if norm > c {
         let scale = if norm > T::ZERO { c / norm } else { T::ZERO };
-        for x in y.iter_mut() {
-            *x *= scale;
-        }
+        kernels::scale_inplace(y, scale);
     }
 }
 
@@ -27,6 +26,7 @@ pub fn project_l2<T: Scalar>(y: &[T], c: T) -> Vec<T> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::vec_ops;
 
     #[test]
     fn rescales_outside_ball() {

@@ -4,14 +4,13 @@
 //! `BP¹,∞` and the reason the whole bi-level projection is a *clipping
 //! operator* (Remark III.2).
 
+use crate::kernels;
 use crate::scalar::Scalar;
 
-/// Project onto `{x : ‖x‖∞ ≤ c}` in place.
+/// Project onto `{x : ‖x‖∞ ≤ c}` in place — the lane-chunked clip kernel.
 pub fn project_linf_inplace<T: Scalar>(y: &mut [T], c: T) {
     debug_assert!(c >= T::ZERO);
-    for x in y.iter_mut() {
-        *x = x.signum_s() * x.abs().min_s(c);
-    }
+    kernels::clip_inplace(y, c);
 }
 
 /// Out-of-place variant.

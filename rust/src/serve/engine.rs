@@ -194,6 +194,10 @@ impl Drop for Engine {
 }
 
 fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
+    // Per-worker reusable projection workspace (the per-shard workspace
+    // pool: workers are pinned to their shard). Steady-state bi-level
+    // traffic allocates only the response payloads.
+    let mut scratch = scheduler::WorkerScratch::new();
     while let Some(first) = shard.queue.pop_wait() {
         let batch = scheduler::collect_batch(&shard.queue, first, policy, |j: &Job| j.key);
         let batch_size = batch.len();
@@ -202,7 +206,7 @@ fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
         for job in batch {
             let queue_micros = job.enqueued.elapsed().as_micros() as u64;
             let t0 = Instant::now();
-            let out = scheduler::execute(&job.req, cache);
+            let out = scheduler::execute(&job.req, cache, &mut scratch);
             let exec_micros = t0.elapsed().as_micros() as u64;
             shard.counters.completed.inc();
             if scheduler::cacheable(job.req.kind) {

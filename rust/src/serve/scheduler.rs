@@ -17,7 +17,8 @@
 
 use std::time::{Duration, Instant};
 
-use crate::projection::bilevel::{self, BilevelVariant};
+use crate::kernels::{self, Workspace};
+use crate::projection::bilevel::{self, BilevelResult, BilevelVariant};
 use crate::projection::l1::{self, L1Algorithm};
 use crate::projection::ProjectionKind;
 use crate::projection::l2;
@@ -90,17 +91,39 @@ pub(crate) struct ExecOutcome {
     pub cache_hit: bool,
 }
 
+/// Per-worker reusable projection scratch (the engine's per-shard
+/// workspace pool: workers are pinned to shards, so one scratch per worker
+/// is one pool slot per shard worker). With it warm, the steady-state cost
+/// of a bi-level request is the response payload allocation and nothing
+/// else — norm vector, threshold vector, and Condat scratch are all
+/// reused.
+pub(crate) struct WorkerScratch {
+    ws32: Workspace<f32>,
+    ws64: Workspace<f64>,
+}
+
+impl WorkerScratch {
+    pub(crate) fn new() -> Self {
+        Self { ws32: Workspace::new(), ws64: Workspace::new() }
+    }
+}
+
 /// Whether results of this kind can be replayed from cached thresholds.
 pub fn cacheable(kind: ProjectionKind) -> bool {
     kind.bilevel_variant().is_some()
 }
 
 /// Execute one request against the projection library, consulting (and
-/// feeding) the threshold cache for the bi-level kinds.
-pub(crate) fn execute(req: &ProjectionRequest, cache: &ThresholdCache) -> ExecOutcome {
+/// feeding) the threshold cache for the bi-level kinds. `scratch` is the
+/// calling worker's reusable workspace.
+pub(crate) fn execute(
+    req: &ProjectionRequest,
+    cache: &ThresholdCache,
+    scratch: &mut WorkerScratch,
+) -> ExecOutcome {
     match &req.payload {
         Payload::F64(y) => {
-            let (x, thresholds, cache_hit) = exec_typed(y, req, cache);
+            let (x, thresholds, cache_hit) = exec_typed(y, req, cache, &mut scratch.ws64);
             ExecOutcome {
                 payload: Payload::F64(x),
                 thresholds: thresholds.map(|u| u.iter().map(|t| t.to_f64()).collect()),
@@ -108,7 +131,7 @@ pub(crate) fn execute(req: &ProjectionRequest, cache: &ThresholdCache) -> ExecOu
             }
         }
         Payload::F32(y) => {
-            let (x, thresholds, cache_hit) = exec_typed(y, req, cache);
+            let (x, thresholds, cache_hit) = exec_typed(y, req, cache, &mut scratch.ws32);
             ExecOutcome {
                 payload: Payload::F32(x),
                 thresholds: thresholds.map(|u| u.iter().map(|t| t.to_f64()).collect()),
@@ -118,10 +141,33 @@ pub(crate) fn execute(req: &ProjectionRequest, cache: &ThresholdCache) -> ExecOu
     }
 }
 
+/// Run a bi-level projection through the worker's workspace. `BP¹,∞` uses
+/// the allocation-free `_into` path (the output matrix is the response
+/// payload, so it is the one allocation left); the generic variants go
+/// through the library dispatch.
+fn run_bilevel<T: ThresholdScalar>(
+    y: &Matrix<T>,
+    eta: T,
+    variant: BilevelVariant,
+    algo: L1Algorithm,
+    ws: &mut Workspace<T>,
+) -> BilevelResult<T> {
+    match variant {
+        BilevelVariant::L1Inf => {
+            let mut out = Matrix::zeros(y.rows(), y.cols());
+            bilevel::bilevel_l1inf_into(y, eta, algo, ws, &mut out);
+            // Clone (not take) so the workspace keeps its capacity.
+            BilevelResult { x: out, thresholds: ws.thresholds.clone() }
+        }
+        _ => bilevel::bilevel(y, eta, variant, algo),
+    }
+}
+
 fn exec_typed<T: ThresholdScalar>(
     y: &Matrix<T>,
     req: &ProjectionRequest,
     cache: &ThresholdCache,
+    ws: &mut Workspace<T>,
 ) -> (Matrix<T>, Option<Vec<T>>, bool) {
     let eta = T::from_f64(req.eta);
     let Some(variant) = req.kind.bilevel_variant() else {
@@ -129,7 +175,7 @@ fn exec_typed<T: ThresholdScalar>(
         return (req.kind.apply_with(y, eta, req.algo), None, false);
     };
     if !cache.enabled() {
-        let r = bilevel::bilevel(y, eta, variant, req.algo);
+        let r = run_bilevel(y, eta, variant, req.algo, ws);
         return (r.x, Some(r.thresholds), false);
     }
     let key = CacheKey::for_matrix(y, req.eta, req.kind, req.algo, req.payload.dtype());
@@ -141,7 +187,7 @@ fn exec_typed<T: ThresholdScalar>(
             }
         }
     }
-    let r = bilevel::bilevel(y, eta, variant, req.algo);
+    let r = run_bilevel(y, eta, variant, req.algo, ws);
     cache.insert(key, T::wrap(r.thresholds.clone()));
     (r.x, Some(r.thresholds), false)
 }
@@ -163,12 +209,12 @@ fn replay<T: Scalar>(
             let (n, m) = (y.rows(), y.cols());
             let mut data: Vec<T> = Vec::with_capacity(n * m);
             for (j, col) in y.columns().enumerate() {
-                let c = u[j];
-                if c >= vec_ops::linf(col) {
-                    data.extend_from_slice(col);
-                } else {
-                    data.extend(col.iter().map(|&x| x.signum_s() * x.abs().min_s(c)));
-                }
+                // `vec_ops::linf` is the same kernel reduction the cold
+                // path stored in `ws.norms`, and `extend_clipped` shares
+                // the cold path's tie-break and element op, so the replay
+                // resolves bit-identically; extend keeps the output
+                // single-write.
+                kernels::extend_clipped(&mut data, col, u[j], vec_ops::linf(col));
             }
             Matrix::from_col_major(n, m, data)
         }
@@ -269,9 +315,10 @@ mod tests {
     #[test]
     fn execute_matches_direct_library_call() {
         let cache = ThresholdCache::new(0);
+        let mut scratch = WorkerScratch::new();
         for kind in ProjectionKind::all() {
             let req = mk_req(*kind, 2.0, 20, 12, 9);
-            let out = execute(&req, &cache);
+            let out = execute(&req, &cache, &mut scratch);
             let direct = kind.apply(req.payload.as_f64().unwrap(), 2.0);
             let Payload::F64(x) = &out.payload else { panic!("dtype changed") };
             assert_eq!(x.max_abs_diff(&direct), 0.0, "{} diverges", kind.name());
@@ -283,15 +330,16 @@ mod tests {
     #[test]
     fn cache_replay_is_bit_identical() {
         let cache = ThresholdCache::new(8);
+        let mut scratch = WorkerScratch::new();
         for kind in [
             ProjectionKind::BilevelL1Inf,
             ProjectionKind::BilevelL11,
             ProjectionKind::BilevelL12,
         ] {
             let req = mk_req(kind, 1.5, 24, 16, 10);
-            let cold = execute(&req, &cache);
+            let cold = execute(&req, &cache, &mut scratch);
             assert!(!cold.cache_hit);
-            let warm = execute(&req, &cache);
+            let warm = execute(&req, &cache, &mut scratch);
             assert!(warm.cache_hit, "{} second call should hit", kind.name());
             let (Payload::F64(a), Payload::F64(b)) = (&cold.payload, &warm.payload) else {
                 panic!("dtype changed")
@@ -307,8 +355,9 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(11);
         let y: Matrix<f32> = Matrix::<f64>::randn(16, 10, &mut rng).cast();
         let req = ProjectionRequest::f32(ProjectionKind::BilevelL1Inf, 1.0, y.clone());
-        let cold = execute(&req, &cache);
-        let warm = execute(&req, &cache);
+        let mut scratch = WorkerScratch::new();
+        let cold = execute(&req, &cache, &mut scratch);
+        let warm = execute(&req, &cache, &mut scratch);
         assert!(!cold.cache_hit && warm.cache_hit);
         let (Payload::F32(a), Payload::F32(b)) = (&cold.payload, &warm.payload) else {
             panic!("dtype changed")

@@ -38,26 +38,20 @@ impl<T: Scalar> Matrix<T> {
         Self { data, rows, cols }
     }
 
-    /// Build from row-major storage (PJRT literal layout).
+    /// Build from row-major storage (PJRT literal layout). Blocked
+    /// transpose — see [`transpose_into`].
     pub fn from_row_major(rows: usize, cols: usize, data: &[T]) -> Self {
         assert_eq!(data.len(), rows * cols, "from_row_major: size mismatch");
         let mut out = Self::zeros(rows, cols);
-        for i in 0..rows {
-            for j in 0..cols {
-                out.data[j * rows + i] = data[i * cols + j];
-            }
-        }
+        transpose_into(data, rows, cols, &mut out.data);
         out
     }
 
-    /// Export to row-major storage.
+    /// Export to row-major storage. Blocked transpose — see
+    /// [`transpose_into`].
     pub fn to_row_major(&self) -> Vec<T> {
         let mut out = vec![T::ZERO; self.data.len()];
-        for j in 0..self.cols {
-            for i in 0..self.rows {
-                out[i * self.cols + j] = self.data[j * self.rows + i];
-            }
-        }
+        transpose_into(&self.data, self.cols, self.rows, &mut out);
         out
     }
 
@@ -159,12 +153,18 @@ impl<T: Scalar> Matrix<T> {
     /// Transpose (fresh allocation).
     pub fn transpose(&self) -> Self {
         let mut out = Self::zeros(self.cols, self.rows);
-        for j in 0..self.cols {
-            for i in 0..self.rows {
-                out.set(j, i, self.get(i, j));
-            }
-        }
+        transpose_into(&self.data, self.cols, self.rows, &mut out.data);
         out
+    }
+
+    /// Reshape in place, reusing the existing allocation: after a warm-up
+    /// call at a given size, repeated reshapes to the same (or a smaller)
+    /// shape allocate nothing. The contents after a growth are
+    /// unspecified-but-initialized; callers overwrite every entry.
+    pub fn resize_reuse(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, T::ZERO);
     }
 
     /// Elementwise map.
@@ -224,23 +224,57 @@ impl<T: Scalar> Matrix<T> {
     }
 }
 
-/// Dense vector helpers shared by the projection algorithms.
+/// Tile edge for the blocked transposes. 32×32 `f64` tiles are 8 KiB —
+/// a source tile plus a destination tile sit comfortably in L1.
+const TRANSPOSE_BLOCK: usize = 32;
+
+/// Blocked (tiled) transpose: `dst[j*r + i] = src[i*c + j]` for an `r × c`
+/// row-major source. The naive strided sweep misses cache once per element
+/// as soon as a matrix dimension outgrows L1; walking `BLOCK × BLOCK`
+/// tiles keeps both the source rows and the destination columns resident,
+/// which is what makes the PJRT row-major interop (`from_row_major` /
+/// `to_row_major`) cheap for large weight matrices.
+fn transpose_into<T: Scalar>(src: &[T], r: usize, c: usize, dst: &mut [T]) {
+    debug_assert_eq!(src.len(), r * c);
+    debug_assert_eq!(dst.len(), r * c);
+    let mut ib = 0;
+    while ib < r {
+        let imax = (ib + TRANSPOSE_BLOCK).min(r);
+        let mut jb = 0;
+        while jb < c {
+            let jmax = (jb + TRANSPOSE_BLOCK).min(c);
+            for i in ib..imax {
+                for j in jb..jmax {
+                    dst[j * r + i] = src[i * c + j];
+                }
+            }
+            jb = jmax;
+        }
+        ib = imax;
+    }
+}
+
+/// Dense vector helpers shared by the projection algorithms. Thin wrappers
+/// over the lane-chunked [`crate::kernels`] reductions, so every caller
+/// (norms, projections, the serve replay path) agrees bit-for-bit on the
+/// aggregates.
 pub mod vec_ops {
+    use crate::kernels;
     use crate::scalar::Scalar;
 
     /// Σ|x_i|
     pub fn l1<T: Scalar>(xs: &[T]) -> T {
-        xs.iter().map(|&x| x.abs()).sum()
+        kernels::sum_abs(xs)
     }
 
     /// √Σx_i²
     pub fn l2<T: Scalar>(xs: &[T]) -> T {
-        xs.iter().map(|&x| x * x).sum::<T>().sqrt()
+        kernels::l2_norm(xs)
     }
 
     /// max|x_i| (0 for empty)
     pub fn linf<T: Scalar>(xs: &[T]) -> T {
-        xs.iter().fold(T::ZERO, |acc, &x| acc.max_s(x.abs()))
+        kernels::colmax(xs)
     }
 
     /// Euclidean distance.
@@ -318,6 +352,34 @@ mod tests {
         assert_eq!(vec_ops::l2(&v), 5.0);
         assert_eq!(vec_ops::linf(&v), 4.0);
         assert_eq!(vec_ops::dist2(&v, &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn blocked_transpose_matches_naive_on_awkward_shapes() {
+        // Shapes straddling the tile edge exercise every partial-tile path.
+        for (n, m) in [(1, 1), (1, 7), (7, 1), (31, 33), (32, 32), (33, 31), (65, 40)] {
+            let mut rng = Xoshiro256pp::seed_from_u64((n * 1000 + m) as u64);
+            let row_major: Vec<f64> =
+                (0..n * m).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mat = Matrix::from_row_major(n, m, &row_major);
+            for i in 0..n {
+                for j in 0..m {
+                    assert_eq!(mat.get(i, j), row_major[i * m + j], "({i},{j}) of {n}x{m}");
+                }
+            }
+            assert_eq!(mat.to_row_major(), row_major, "{n}x{m} roundtrip");
+        }
+    }
+
+    #[test]
+    fn resize_reuse_keeps_capacity() {
+        let mut m = Matrix::<f64>::zeros(8, 8);
+        let cap = m.data.capacity();
+        m.resize_reuse(4, 4);
+        assert_eq!((m.rows(), m.cols(), m.len()), (4, 4, 16));
+        m.resize_reuse(8, 8);
+        assert_eq!(m.len(), 64);
+        assert_eq!(m.data.capacity(), cap, "shrink+regrow must reuse the allocation");
     }
 
     #[test]

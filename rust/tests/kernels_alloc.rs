@@ -1,0 +1,83 @@
+//! Zero-allocation proof for the workspace projection path.
+//!
+//! A counting global allocator wraps the system allocator; after a warm-up
+//! call sizes every buffer, repeated `bilevel_l1inf_into` calls (varying
+//! radius and matrix contents, fixed shape) must not touch the allocator
+//! at all. Lives in its own integration-test binary so no concurrently
+//! running test can pollute the counter; the single `#[test]` keeps the
+//! harness quiet while the measurement runs.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOC_CALLS.load(Ordering::SeqCst)
+}
+
+use bilevel_sparse::kernels::Workspace;
+use bilevel_sparse::projection::bilevel::{bilevel_l1inf_into, bilevel_l1inf_with};
+use bilevel_sparse::projection::l1::L1Algorithm;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::tensor::Matrix;
+
+#[test]
+fn steady_state_projection_allocates_nothing() {
+    let (n, m) = (96, 64);
+    let mut rng = Xoshiro256pp::seed_from_u64(31);
+    let matrices: Vec<Matrix<f64>> =
+        (0..4).map(|_| Matrix::randn(n, m, &mut rng)).collect();
+
+    let mut ws = Workspace::new();
+    let mut out = Matrix::zeros(n, m);
+
+    // Warm-up: sizes the norm/threshold buffers, the Condat scratch, and
+    // the output buffer for this shape.
+    for y in &matrices {
+        bilevel_l1inf_into(y, 2.0, L1Algorithm::Condat, &mut ws, &mut out);
+    }
+
+    // Steady state: vary matrix contents and radius (covering the tight,
+    // loose, and zero-radius execution paths) at a fixed shape.
+    let before = alloc_count();
+    for round in 0..50 {
+        let y = &matrices[round % matrices.len()];
+        for eta in [0.0, 1.5, 40.0, 1e9] {
+            bilevel_l1inf_into(y, eta, L1Algorithm::Condat, &mut ws, &mut out);
+        }
+    }
+    let delta = alloc_count() - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state bilevel_l1inf_into must not allocate (saw {delta} allocator calls)"
+    );
+
+    // Sanity: the workspace path still computes the right answer.
+    let reference = bilevel_l1inf_with(&matrices[3], 1e9, L1Algorithm::Condat);
+    bilevel_l1inf_into(&matrices[3], 1e9, L1Algorithm::Condat, &mut ws, &mut out);
+    assert_eq!(reference.x.max_abs_diff(&out), 0.0);
+}

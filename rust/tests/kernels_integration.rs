@@ -1,0 +1,192 @@
+//! Kernel-layer acceptance suite: the lane-chunked SIMD paths are
+//! bit-identical to their scalar references across dtypes and edge shapes,
+//! the workspace (`*_into`) entry points reproduce the one-shot entry
+//! points exactly, and the pool-parallel path reproduces the sequential
+//! path exactly.
+
+use bilevel_sparse::kernels::{self, Workspace};
+use bilevel_sparse::projection::bilevel::{
+    bilevel_l1inf_into, bilevel_l1inf_parallel, bilevel_l1inf_parallel_into,
+    bilevel_l1inf_with, ParallelPolicy,
+};
+use bilevel_sparse::projection::l1::L1Algorithm;
+use bilevel_sparse::proptest::{forall, MatrixAndRadius, PropConfig};
+use bilevel_sparse::rng::{Rng, Xoshiro256pp};
+use bilevel_sparse::scalar::Scalar;
+use bilevel_sparse::tensor::Matrix;
+
+fn assert_bits_eq<T: Scalar>(a: &[T], b: &[T], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_f64().to_bits(),
+            y.to_f64().to_bits(),
+            "{what}: element {i}: {x} vs {y}"
+        );
+    }
+}
+
+/// Lengths straddling every lane boundary, plus degenerate ones.
+fn edge_lens() -> Vec<usize> {
+    let l = kernels::LANES;
+    vec![1, 2, l - 1, l, l + 1, 2 * l - 1, 2 * l, 3 * l + 1, 127, 128, 129]
+}
+
+fn kernel_equivalence_for<T: Scalar>(seed: u64) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    for n in edge_lens() {
+        let v: Vec<T> =
+            (0..n).map(|_| T::from_f64(rng.uniform(-3.0, 3.0))).collect();
+        assert_eq!(
+            kernels::colmax(&v).to_f64().to_bits(),
+            kernels::colmax_ref(&v).to_f64().to_bits(),
+            "colmax n={n}"
+        );
+        assert_eq!(
+            kernels::sum_abs(&v).to_f64().to_bits(),
+            kernels::sum_abs_ref(&v).to_f64().to_bits(),
+            "sum_abs n={n}"
+        );
+        assert_eq!(
+            kernels::sumsq(&v).to_f64().to_bits(),
+            kernels::sumsq_ref(&v).to_f64().to_bits(),
+            "sumsq n={n}"
+        );
+        // Clip at a strict threshold, at zero, and exactly at the column
+        // max (the copy-vs-clip boundary of the fused stage).
+        for c in [T::ZERO, T::from_f64(0.5), kernels::colmax(&v)] {
+            let mut a = vec![T::ZERO; n];
+            let mut b = vec![T::ZERO; n];
+            kernels::clip_into(&v, c, &mut a);
+            kernels::clip_into_ref(&v, c, &mut b);
+            assert_bits_eq(&a, &b, "clip");
+        }
+        let mut a = v.clone();
+        let mut b = v.clone();
+        kernels::soft_threshold_inplace(&mut a, T::from_f64(0.7));
+        kernels::soft_threshold_inplace_ref(&mut b, T::from_f64(0.7));
+        assert_bits_eq(&a, &b, "soft_threshold");
+        let mut a = v.clone();
+        let mut b = v;
+        kernels::scale_inplace(&mut a, T::from_f64(0.37));
+        kernels::scale_inplace_ref(&mut b, T::from_f64(0.37));
+        assert_bits_eq(&a, &b, "scale");
+    }
+}
+
+#[test]
+fn chunked_kernels_bit_identical_to_scalar_reference_f64() {
+    kernel_equivalence_for::<f64>(11);
+}
+
+#[test]
+fn chunked_kernels_bit_identical_to_scalar_reference_f32() {
+    kernel_equivalence_for::<f32>(12);
+}
+
+fn into_matches_with_for<T: Scalar>(y: &Matrix<T>, eta: T) {
+    let mut ws = Workspace::new();
+    let mut out = Matrix::zeros(0, 0);
+    for algo in L1Algorithm::all() {
+        let r = bilevel_l1inf_with(y, eta, *algo);
+        bilevel_l1inf_into(y, eta, *algo, &mut ws, &mut out);
+        assert_bits_eq(r.x.as_slice(), out.as_slice(), "into vs with (matrix)");
+        assert_bits_eq(&r.thresholds, ws.thresholds(), "into vs with (thresholds)");
+    }
+}
+
+#[test]
+fn prop_into_matches_with_exactly() {
+    forall::<MatrixAndRadius>(PropConfig { cases: 150, ..Default::default() }, |case| {
+        let mut ws = Workspace::new();
+        let mut out = Matrix::zeros(0, 0);
+        let r = bilevel_l1inf_with(&case.y, case.eta, L1Algorithm::Condat);
+        bilevel_l1inf_into(&case.y, case.eta, L1Algorithm::Condat, &mut ws, &mut out);
+        for (a, b) in r.x.as_slice().iter().zip(out.as_slice().iter()) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("matrix bits differ: {a} vs {b}"));
+            }
+        }
+        for (a, b) in r.thresholds.iter().zip(ws.thresholds().iter()) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("threshold bits differ: {a} vs {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn into_matches_with_on_edge_shapes() {
+    // n=1, m=1, non-lane-multiple rows, and a column exactly at its
+    // threshold (eta large enough that one column is untouched).
+    let mut rng = Xoshiro256pp::seed_from_u64(77);
+    for (n, m) in [(1, 1), (1, 9), (9, 1), (13, 7), (31, 33), (64, 5)] {
+        let y64 = Matrix::<f64>::randn(n, m, &mut rng);
+        for eta in [0.0, 0.3, 5.0, 1e6] {
+            into_matches_with_for(&y64, eta);
+            let y32: Matrix<f32> = y64.cast();
+            into_matches_with_for(&y32, eta as f32);
+        }
+    }
+}
+
+#[test]
+fn into_handles_columns_exactly_at_threshold() {
+    // A constant-magnitude matrix makes every column norm equal, so the
+    // inner projection puts thresholds exactly at (or symmetrically
+    // below) the norms — the `û_j >= ‖y_j‖∞` copy branch is exercised in
+    // both directions.
+    let n = 12;
+    let m = 8;
+    let y = Matrix::<f64>::full(n, m, -1.5);
+    // eta = m * 1.5 → inside the ball, all columns copied verbatim.
+    into_matches_with_for(&y, 12.0);
+    // eta tight → all columns clipped at the same threshold.
+    into_matches_with_for(&y, 3.0);
+}
+
+#[test]
+fn prop_pool_parallel_matches_sequential_exactly() {
+    forall::<MatrixAndRadius>(PropConfig { cases: 80, ..Default::default() }, |case| {
+        let seq = bilevel_l1inf_with(&case.y, case.eta, L1Algorithm::Condat);
+        for threads in [2usize, 5] {
+            let par = bilevel_l1inf_parallel(
+                &case.y,
+                case.eta,
+                L1Algorithm::Condat,
+                ParallelPolicy { threads, min_elems: 0 },
+            );
+            for (a, b) in seq.x.as_slice().iter().zip(par.x.as_slice().iter()) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!(
+                        "threads={threads}: matrix bits differ: {a} vs {b}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_into_reuses_buffers_across_shapes() {
+    let mut rng = Xoshiro256pp::seed_from_u64(88);
+    let mut ws = Workspace::new();
+    let mut out = Matrix::zeros(0, 0);
+    for (n, m) in [(40, 200), (8, 64), (100, 30)] {
+        let y = Matrix::<f64>::randn(n, m, &mut rng);
+        bilevel_l1inf_parallel_into(
+            &y,
+            1.7,
+            L1Algorithm::Condat,
+            ParallelPolicy { threads: 4, min_elems: 0 },
+            &mut ws,
+            &mut out,
+        );
+        let seq = bilevel_l1inf_with(&y, 1.7, L1Algorithm::Condat);
+        assert_bits_eq(seq.x.as_slice(), out.as_slice(), "parallel_into");
+        assert_eq!(out.rows(), n);
+        assert_eq!(out.cols(), m);
+    }
+}
