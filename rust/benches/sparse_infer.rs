@@ -1,0 +1,22 @@
+//! `cargo bench --bench sparse_infer` — dense vs compacted structured-
+//! sparse encode across column-sparsity levels 0–99%, f32/f64 (same engine
+//! as `bilevel bench sparse`). Verifies bitwise dense ≡ compact agreement
+//! per entry and writes `BENCH_sparse.json` in the working directory (repo
+//! root under cargo).
+//!
+//! Set `BILEVEL_BENCH_QUICK=1` for a shortened sweep.
+
+use bilevel_sparse::bench::sparse;
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let report = sparse::run(quick);
+    println!("{}", report.markdown());
+    std::fs::write("BENCH_sparse.json", report.to_json())
+        .expect("writing BENCH_sparse.json");
+    println!("wrote BENCH_sparse.json");
+    assert!(
+        report.all_bit_identical(),
+        "sparse encode diverged bitwise from dense encode"
+    );
+}

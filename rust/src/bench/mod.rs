@@ -4,6 +4,7 @@
 //! (linear for `BP¹,∞`, `n log n` for the exact projection).
 
 pub mod kernels;
+pub mod sparse;
 
 use std::time::{Duration, Instant};
 

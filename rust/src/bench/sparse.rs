@@ -1,0 +1,269 @@
+//! Sparse-inference benchmarks — `bilevel bench sparse` and
+//! `cargo bench --bench sparse_infer`.
+//!
+//! Measures the structured-sparse encode path ([`crate::sparse::linalg`])
+//! against the dense encode across column-sparsity levels 0–99%, for f32
+//! and f64, and verifies per entry that the two paths agree **bitwise**
+//! (the subsystem's core claim — a row that fails it is reported and fails
+//! the suite's consumers). Results render as a markdown table and
+//! serialize to `BENCH_sparse.json` (repo root) so the dense-vs-compact
+//! crossover is tracked across PRs — see EXPERIMENTS.md §Sparse inference.
+
+use crate::bench::{black_box, time_fn, BenchConfig};
+use crate::rng::{Rng, Xoshiro256pp};
+use crate::scalar::Scalar;
+use crate::sparse::{linalg, CompactPlan};
+use crate::tensor::Matrix;
+
+/// One measured dense-vs-compact comparison.
+#[derive(Clone, Debug)]
+pub struct SparseBenchEntry {
+    /// `encode/f32` or `encode/f64`.
+    pub name: String,
+    pub features: usize,
+    pub hidden: usize,
+    pub batch: usize,
+    /// Requested column sparsity in percent (0 = fully dense model).
+    pub sparsity_pct: usize,
+    /// Alive features after pruning.
+    pub alive: usize,
+    /// Median dense encode time, ms.
+    pub dense_ms: f64,
+    /// Median compacted encode time, ms.
+    pub compact_ms: f64,
+    /// Whether compact and dense outputs matched bit-for-bit.
+    pub bit_identical: bool,
+}
+
+impl SparseBenchEntry {
+    pub fn speedup(&self) -> f64 {
+        if self.compact_ms > 0.0 {
+            self.dense_ms / self.compact_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Full report of one `bench sparse` run.
+#[derive(Clone, Debug)]
+pub struct SparseBenchReport {
+    pub quick: bool,
+    pub entries: Vec<SparseBenchEntry>,
+}
+
+impl SparseBenchReport {
+    /// Every entry's sparse path reproduced the dense path bit-for-bit.
+    pub fn all_bit_identical(&self) -> bool {
+        self.entries.iter().all(|e| e.bit_identical)
+    }
+
+    /// Hand-rolled JSON (no serde offline). Stable key order,
+    /// diff-friendly — the tracked `BENCH_sparse.json` artifact.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"all_bit_identical\": {},\n", self.all_bit_identical()));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"features\": {}, \"hidden\": {}, \"batch\": {}, \
+                 \"sparsity_pct\": {}, \"alive\": {}, \"dense_ms\": {:.6}, \
+                 \"compact_ms\": {:.6}, \"speedup\": {:.3}, \"bit_identical\": {}}}{}\n",
+                e.name,
+                e.features,
+                e.hidden,
+                e.batch,
+                e.sparsity_pct,
+                e.alive,
+                e.dense_ms,
+                e.compact_ms,
+                e.speedup(),
+                e.bit_identical,
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Terminal rendering: the §Sparse inference markdown table.
+    pub fn markdown(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .entries
+            .iter()
+            .map(|e| {
+                vec![
+                    e.name.clone(),
+                    format!("{}x{} b{}", e.features, e.hidden, e.batch),
+                    format!("{}%", e.sparsity_pct),
+                    e.alive.to_string(),
+                    format!("{:.3}", e.dense_ms),
+                    format!("{:.3}", e.compact_ms),
+                    format!("{:.2}x", e.speedup()),
+                    if e.bit_identical { "yes".into() } else { "NO".into() },
+                ]
+            })
+            .collect();
+        let header =
+            ["bench", "shape", "sparsity", "alive", "dense ms", "compact ms", "speedup", "bitwise"];
+        crate::report::markdown_table(&header, &rows)
+    }
+}
+
+/// The column-sparsity levels of the sweep (percent of pruned features).
+pub const SPARSITY_LEVELS: [usize; 5] = [0, 50, 90, 95, 99];
+
+/// Build a pruned model slice: `(features, hidden)` row-major weights with
+/// a seeded `sparsity_pct`% of the rows exactly zeroed, plus the matching
+/// plan, compacted weights, and bias.
+#[allow(clippy::type_complexity)]
+fn pruned_model<T: Scalar>(
+    features: usize,
+    hidden: usize,
+    sparsity_pct: usize,
+    seed: u64,
+) -> (Vec<T>, Vec<T>, Vec<T>, CompactPlan) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut w1: Vec<T> = (0..features * hidden)
+        .map(|_| T::from_f64(rng.uniform(-1.0, 1.0)))
+        .collect();
+    let n_dead = features * sparsity_pct / 100;
+    // Seeded shuffle picks which features die; strictly-increasing alive
+    // list falls out of a linear scan.
+    let mut order: Vec<usize> = (0..features).collect();
+    rng.shuffle(&mut order);
+    let mut mask = vec![1.0f32; features];
+    for &f in order.iter().take(n_dead) {
+        mask[f] = 0.0;
+        w1[f * hidden..(f + 1) * hidden].fill(T::ZERO);
+    }
+    let plan = CompactPlan::from_mask(&mask);
+    let mut w1c = Vec::with_capacity(plan.alive() * hidden);
+    for &f in plan.alive_indices() {
+        w1c.extend_from_slice(&w1[f * hidden..(f + 1) * hidden]);
+    }
+    let b1: Vec<T> = (0..hidden).map(|_| T::from_f64(rng.uniform(-0.5, 0.5))).collect();
+    (w1, w1c, b1, plan)
+}
+
+/// Measure one (dtype, shape, sparsity) point.
+fn encode_entry<T: Scalar>(
+    cfg: &BenchConfig,
+    name: &str,
+    features: usize,
+    hidden: usize,
+    batch: usize,
+    sparsity_pct: usize,
+    seed: u64,
+) -> SparseBenchEntry {
+    let (w1, w1c, b1, plan) = pruned_model::<T>(features, hidden, sparsity_pct, seed);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5AE5);
+    let x = Matrix::<T>::rand_uniform(features, batch, -2.0, 2.0, &mut rng);
+    let mut dense_out = Matrix::<T>::zeros(hidden, batch);
+    let mut compact_out = Matrix::<T>::zeros(hidden, batch);
+
+    linalg::encode_batch_dense_into(&x, &w1, &b1, hidden, &mut dense_out);
+    linalg::encode_batch_compact_into(&x, &w1c, &b1, hidden, &plan, &mut compact_out);
+    let bit_identical = dense_out
+        .as_slice()
+        .iter()
+        .zip(compact_out.as_slice().iter())
+        .all(|(a, b)| a.to_f64().to_bits() == b.to_f64().to_bits());
+
+    let dense = time_fn(cfg, || {
+        linalg::encode_batch_dense_into(&x, &w1, &b1, hidden, &mut dense_out);
+        black_box(dense_out.as_slice()[0])
+    });
+    let compact = time_fn(cfg, || {
+        linalg::encode_batch_compact_into(&x, &w1c, &b1, hidden, &plan, &mut compact_out);
+        black_box(compact_out.as_slice()[0])
+    });
+    SparseBenchEntry {
+        name: name.into(),
+        features,
+        hidden,
+        batch,
+        sparsity_pct,
+        alive: plan.alive(),
+        dense_ms: dense.median * 1e3,
+        compact_ms: compact.median * 1e3,
+        bit_identical,
+    }
+}
+
+/// Run the full sparse-inference benchmark suite. `quick` shrinks shapes
+/// and timing budgets for CI-sized runs.
+pub fn run(quick: bool) -> SparseBenchReport {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let shapes: &[(usize, usize, usize)] = if quick {
+        &[(512, 64, 8)]
+    } else {
+        &[(2048, 128, 32), (8192, 256, 32)]
+    };
+    let mut entries = Vec::new();
+    for &(features, hidden, batch) in shapes {
+        for &sparsity in &SPARSITY_LEVELS {
+            let seed = (features ^ hidden ^ sparsity) as u64;
+            entries.push(encode_entry::<f32>(
+                &cfg, "encode/f32", features, hidden, batch, sparsity, seed,
+            ));
+            entries.push(encode_entry::<f64>(
+                &cfg, "encode/f64", features, hidden, batch, sparsity, seed + 1,
+            ));
+        }
+    }
+    SparseBenchReport { quick, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn entries_are_bit_identical_and_alive_counts_match() {
+        let cfg =
+            BenchConfig { warmup_iters: 0, min_iters: 1, max_iters: 1, ..BenchConfig::quick() };
+        for sparsity in SPARSITY_LEVELS {
+            let e = encode_entry::<f64>(&cfg, "encode/f64", 64, 8, 2, sparsity, 7);
+            assert!(e.bit_identical, "sparsity {sparsity}% diverged");
+            assert_eq!(e.alive, 64 - 64 * sparsity / 100);
+            assert!(e.dense_ms >= 0.0 && e.compact_ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn report_serializes_and_renders() {
+        let report = SparseBenchReport {
+            quick: true,
+            entries: vec![SparseBenchEntry {
+                name: "encode/f32".into(),
+                features: 512,
+                hidden: 64,
+                batch: 8,
+                sparsity_pct: 90,
+                alive: 52,
+                dense_ms: 2.0,
+                compact_ms: 0.5,
+                bit_identical: true,
+            }],
+        };
+        assert!(report.all_bit_identical());
+        let json = report.to_json();
+        assert!(json.contains("\"speedup\": 4.000"));
+        assert!(json.contains("\"all_bit_identical\": true"));
+        assert!(json.trim_end().ends_with('}'));
+        let md = report.markdown();
+        assert!(md.contains("encode/f32"));
+        assert!(md.contains("4.00x"));
+    }
+
+    #[test]
+    fn quick_suite_runs_end_to_end() {
+        // Tiny but real: exercises pruned_model + both timed paths.
+        let report = run(true);
+        assert_eq!(report.entries.len(), 2 * SPARSITY_LEVELS.len());
+        assert!(report.all_bit_identical());
+    }
+}

@@ -94,7 +94,8 @@ COMMANDS:
                --dataset synth64|synth16|hif2|tiny --projection <name> --eta E
                [--backend native|pallas] [--epochs1 N] [--epochs2 N] [--lr F]
                [--alpha F] [--seeds 1,2,3] [--config file.toml]
-  experiment   regenerate a paper table/figure (fig1..fig9, table1..table4, all)
+  experiment   regenerate a paper table/figure (fig1..fig9, table1..table4,
+               sparse, all)
                bilevel experiment fig1 [--quick] [--seeds 1,2,3]
   artifacts    list the AOT artifacts in the manifest [--dir artifacts]
   bench        run the in-process benchmark suites; `bench kernels`
@@ -102,6 +103,15 @@ COMMANDS:
                the pool vs sequential crossover, prints the §Perf table,
                and records BENCH_kernels.json for the perf trajectory
                bilevel bench kernels [--quick] [--out BENCH_kernels.json]
+               `bench sparse` measures dense vs compacted structured-sparse
+               encode across sparsity levels (f32/f64), verifies bitwise
+               agreement, and records BENCH_sparse.json
+               bilevel bench sparse [--quick] [--out BENCH_sparse.json]
+  sparsify     project a synthetic SAE's W1 with BP1,inf, derive the
+               support plan, compact the model, verify sparse encode ==
+               dense encode bitwise, and time both (no artifacts needed)
+               [--features N] [--hidden H] [--batch B] [--eta E]
+               [--seed S] [--reps R]
   serve        start the projection service engine (sharded workers,
                micro-batching, LRU threshold cache) and validate it with a
                short in-process smoke workload; prints per-shard stats

@@ -12,6 +12,7 @@ use crate::model::{SaeDims, SaeParams};
 use crate::projection::ProjectionKind;
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::runtime::{to_scalar_f32, to_vec_f32, ArtifactEntry, HostArg, Runtime};
+use crate::sparse::{compact_params, CompactPlan};
 
 /// Per-epoch statistics.
 #[derive(Clone, Debug)]
@@ -38,6 +39,12 @@ pub struct TrainOutcome {
     /// Final first-layer weights (for Fig. 9-style dumps).
     pub w1: Vec<f32>,
     pub dims: SaeDims,
+    /// Support set of the final mask: compact ↔ original feature indices.
+    pub plan: CompactPlan,
+    /// The final model with pruned features structurally removed
+    /// (`compact.dims.features == plan.alive()`) — ready for
+    /// [`crate::sparse::CompactEncoder`] / sparse serving.
+    pub compact: SaeParams,
 }
 
 /// Double-descent SAE trainer bound to one artifact preset.
@@ -176,12 +183,16 @@ impl<'rt> SaeTrainer<'rt> {
             .iter()
             .map(|h| h.test_accuracy)
             .fold(final_accuracy, f64::max);
-        let selected_features: Vec<usize> = mask
-            .iter()
-            .enumerate()
-            .filter(|(_, &m)| m > 0.0)
-            .map(|(i, _)| i)
-            .collect();
+        // Structured-sparse artifacts: the mask's support set and the
+        // compacted final model. The mask keeps pruned W1 rows exactly
+        // zero through phase 2, so the *encoder* loses nothing; the
+        // decoder weights of pruned features (W4 columns / b4 entries,
+        // which phase 2 still trains to reconstruct those inputs) are
+        // dropped by design — the compacted model reconstructs pruned
+        // features as zero.
+        let plan = CompactPlan::from_mask(&mask);
+        let selected_features = plan.alive_indices().to_vec();
+        let compact = compact_params(&state.params, &plan);
         Ok(TrainOutcome {
             seed,
             final_accuracy,
@@ -192,6 +203,8 @@ impl<'rt> SaeTrainer<'rt> {
             train_seconds: t0.elapsed().as_secs_f64(),
             w1: state.params.tensors[0].clone(),
             dims: self.dims,
+            plan,
+            compact,
         })
     }
 

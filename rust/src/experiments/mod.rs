@@ -18,9 +18,11 @@
 //! | fig8   | SAE accuracy vs η, HIF2-sim                     |
 //! | table4 | HIF2-sim best-radius accuracy table             |
 //! | fig9   | first-layer weight sparsity pattern             |
+//! | sparse | dense vs compacted sparse encode (repo-grown)   |
 
 mod identity;
 mod sae_sweep;
+mod sparse_infer;
 mod sparsity;
 mod timing;
 mod weights;
@@ -61,10 +63,12 @@ impl Default for ExpContext {
     }
 }
 
-/// All experiment ids in run order.
-pub const ALL: [&str; 13] = [
+/// All experiment ids in run order. `sparse` is repo-grown (dense vs
+/// compacted encode — EXPERIMENTS.md §Sparse inference), the rest map to
+/// paper artifacts.
+pub const ALL: [&str; 14] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "fig5", "fig6", "fig7", "table2", "table3",
-    "fig8", "table4", "fig9",
+    "fig8", "table4", "fig9", "sparse",
 ];
 
 /// Run one experiment by id.
@@ -83,6 +87,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
         "fig8" => sae_sweep::fig8(ctx),
         "table4" => sae_sweep::table4(ctx),
         "fig9" => weights::fig9(ctx),
+        "sparse" => sparse_infer::sparse(ctx),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

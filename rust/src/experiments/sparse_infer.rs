@@ -1,0 +1,58 @@
+//! `sparse` — dense vs compacted structured-sparse encode (the inference
+//! workload the paper's column sparsity pays for; companion to `bench
+//! sparse`, CSV'd for the results trajectory).
+//!
+//! Sweeps column-sparsity levels 0–99% for f32/f64 through
+//! [`crate::bench::sparse`] and writes `sparse_infer.csv`: per level the
+//! alive feature count, both encode medians, the speedup, and whether the
+//! compact path reproduced the dense path bit-for-bit (it must — the run
+//! errors otherwise).
+
+use anyhow::{anyhow, Result};
+
+use super::ExpContext;
+use crate::bench::sparse as sparse_bench;
+use crate::report::{markdown_table, CsvWriter};
+
+pub fn sparse(ctx: &ExpContext) -> Result<()> {
+    let report = sparse_bench::run(ctx.quick);
+    let mut csv = CsvWriter::create(
+        "sparse_infer.csv",
+        &[
+            "dtype", "features", "hidden", "batch", "sparsity_pct", "alive", "dense_s",
+            "compact_s", "speedup", "bit_identical",
+        ],
+    )?;
+    let mut rows = Vec::new();
+    for e in &report.entries {
+        let dtype = e.name.trim_start_matches("encode/");
+        csv.row(&[
+            dtype.into(),
+            e.features.to_string(),
+            e.hidden.to_string(),
+            e.batch.to_string(),
+            e.sparsity_pct.to_string(),
+            e.alive.to_string(),
+            format!("{:.6e}", e.dense_ms / 1e3),
+            format!("{:.6e}", e.compact_ms / 1e3),
+            format!("{:.3}", e.speedup()),
+            e.bit_identical.to_string(),
+        ])?;
+        rows.push(vec![
+            dtype.to_string(),
+            format!("{}x{} b{}", e.features, e.hidden, e.batch),
+            format!("{}%", e.sparsity_pct),
+            e.alive.to_string(),
+            format!("{:.2}x", e.speedup()),
+        ]);
+    }
+    println!(
+        "{}",
+        markdown_table(&["dtype", "shape", "sparsity", "alive", "speedup"], &rows)
+    );
+    println!("sparse: wrote {}", csv.path.display());
+    if !report.all_bit_identical() {
+        return Err(anyhow!("sparse encode diverged bitwise from dense encode"));
+    }
+    Ok(())
+}

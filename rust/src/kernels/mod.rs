@@ -257,6 +257,41 @@ pub fn clip_inplace<T: Scalar>(xs: &mut [T], c: T) {
     }
 }
 
+// ------------------------------------------------------------------ axpy
+
+/// Fused multiply-accumulate row update: `acc_j += a · row_j`. Chunked
+/// path — the inner loop of the structured-sparse encoder
+/// ([`crate::sparse::linalg`]): one call per (alive) weight row, `acc` is
+/// the hidden-unit accumulator.
+///
+/// Elementwise (every `acc_j` is touched exactly once per call), so the
+/// chunked path is bit-identical to [`axpy_ref`] by construction. No
+/// `mul_add` — a fused contraction would change the rounding and break the
+/// sparse ≡ dense bit-identity argument in `sparse::linalg`.
+#[inline]
+pub fn axpy<T: Scalar>(acc: &mut [T], a: T, row: &[T]) {
+    assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    let mut a_it = acc.chunks_exact_mut(LANES);
+    let mut r_it = row.chunks_exact(LANES);
+    for (ac, rc) in a_it.by_ref().zip(r_it.by_ref()) {
+        for (d, &r) in ac.iter_mut().zip(rc) {
+            *d += a * r;
+        }
+    }
+    for (d, &r) in a_it.into_remainder().iter_mut().zip(r_it.remainder()) {
+        *d += a * r;
+    }
+}
+
+/// Scalar reference for [`axpy`].
+#[inline]
+pub fn axpy_ref<T: Scalar>(acc: &mut [T], a: T, row: &[T]) {
+    assert_eq!(acc.len(), row.len(), "axpy_ref: length mismatch");
+    for (d, &r) in acc.iter_mut().zip(row) {
+        *d += a * r;
+    }
+}
+
 // -------------------------------------------------------- soft-threshold
 
 /// ℓ1 soft-threshold in place: `x_i ← sign(x_i)·(|x_i|-τ)₊`. Chunked path.
@@ -436,6 +471,38 @@ mod tests {
             scale_inplace_ref(&mut b, 0.37);
             for (x, y) in a.iter().zip(b.iter()) {
                 assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_chunked_bit_identical_to_ref() {
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 700 + i as u64);
+            let row = randvec(n, 800 + i as u64);
+            for a in [0.0, -1.5, 0.37] {
+                let mut x = v.clone();
+                let mut y = v.clone();
+                axpy(&mut x, a, &row);
+                axpy_ref(&mut y, a, &row);
+                for (p, q) in x.iter().zip(y.iter()) {
+                    assert_eq!(p.to_bits(), q.to_bits(), "n={n} a={a}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_zero_row_is_identity_from_nonnegative_zero_acc() {
+        // The sparse-encode bit-identity rests on this: adding a ±0.0 term
+        // never disturbs an accumulator that is +0.0 or non-zero.
+        let zeros = vec![0.0f64, -0.0, 0.0, -0.0];
+        let mut acc = vec![0.0f64, 0.0, 3.5, -2.0];
+        let before = acc.clone();
+        for a in [2.0, -2.0, 0.0] {
+            axpy(&mut acc, a, &zeros);
+            for (p, q) in acc.iter().zip(before.iter()) {
+                assert_eq!(p.to_bits(), q.to_bits(), "a={a}");
             }
         }
     }

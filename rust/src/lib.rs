@@ -15,7 +15,9 @@
 //!   service engine (bounded queues with backpressure, an LRU threshold
 //!   cache, per-shard telemetry) that turns the one-shot library calls
 //!   into a sustained request/response service (`bilevel serve` /
-//!   `bilevel loadgen`).
+//!   `bilevel loadgen`), and the [`sparse`] subsystem — structured-sparse
+//!   inference (compact plans, feature-dropping model compaction, and
+//!   column-support encode kernels whose cost scales with alive features).
 //! * **L2 (`python/compile/model.py`)** — the supervised autoencoder
 //!   forward/backward + Adam, lowered once to HLO text.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (bi-level
@@ -50,6 +52,7 @@ pub mod rng;
 pub mod runtime;
 pub mod scalar;
 pub mod serve;
+pub mod sparse;
 pub mod tensor;
 
 /// Convenience re-exports covering the most common entry points.
@@ -64,5 +67,6 @@ pub mod prelude {
     pub use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
     pub use crate::scalar::Scalar;
     pub use crate::serve::{Engine, ProjectionRequest, ProjectionResponse};
+    pub use crate::sparse::{compact_params, decompact_params, CompactEncoder, CompactPlan};
     pub use crate::tensor::{Matrix, Vector};
 }

@@ -32,6 +32,7 @@ fn main() -> ExitCode {
         "experiment" => cmd_experiment(&args),
         "artifacts" => cmd_artifacts(&args),
         "bench" => cmd_bench(&args),
+        "sparsify" => cmd_sparsify(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "help" | "" => {
@@ -142,7 +143,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let id = args
         .positional
         .first()
-        .ok_or_else(|| anyhow!("usage: bilevel experiment <id> (fig1..fig9, table1..table4, all)"))?;
+        .ok_or_else(|| {
+            anyhow!("usage: bilevel experiment <id> (fig1..fig9, table1..table4, sparse, all)")
+        })?;
     let seeds = args.u64_list_or("seeds", &[42, 43, 44, 45]).map_err(|e| anyhow!(e))?;
     let ctx = ExpContext::new(
         args.flag("quick"),
@@ -274,10 +277,9 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
 fn cmd_bench(args: &Args) -> Result<()> {
     let target = args.positional.first().map(String::as_str).unwrap_or("kernels");
+    let quick = args.flag("quick") || std::env::var("BILEVEL_BENCH_QUICK").is_ok();
     match target {
         "kernels" => {
-            let quick =
-                args.flag("quick") || std::env::var("BILEVEL_BENCH_QUICK").is_ok();
             println!(
                 "bilevel bench kernels — SIMD kernel layer vs scalar baseline{}",
                 if quick { " (quick)" } else { "" }
@@ -289,8 +291,125 @@ fn cmd_bench(args: &Args) -> Result<()> {
             println!("wrote {out}");
             Ok(())
         }
-        other => Err(anyhow!("unknown bench target {other:?} (try: kernels)")),
+        "sparse" => {
+            println!(
+                "bilevel bench sparse — dense vs compacted structured-sparse encode{}",
+                if quick { " (quick)" } else { "" }
+            );
+            let report = bilevel_sparse::bench::sparse::run(quick);
+            println!("{}", report.markdown());
+            let out = args.str_or("out", "BENCH_sparse.json");
+            std::fs::write(&out, report.to_json()).map_err(|e| anyhow!("{out}: {e}"))?;
+            println!("wrote {out}");
+            if !report.all_bit_identical() {
+                return Err(anyhow!("sparse encode diverged bitwise from dense encode"));
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown bench target {other:?} (try: kernels, sparse)")),
     }
+}
+
+/// `bilevel sparsify` — the project → plan → compact → verify → time
+/// pipeline on a synthetic SAE (no artifacts needed): projects W1 with
+/// BP¹,∞ at `--eta`, derives the support plan from the thresholds,
+/// compacts the model, proves sparse encode ≡ dense encode bitwise on a
+/// random batch, and reports parameter/time savings.
+fn cmd_sparsify(args: &Args) -> Result<()> {
+    use bilevel_sparse::kernels::Workspace;
+    use bilevel_sparse::model::{SaeDims, SaeParams};
+    use bilevel_sparse::projection::bilevel::bilevel_l1inf_inplace_cols;
+    use bilevel_sparse::sparse::{compact_params, linalg, CompactEncoder, CompactPlan};
+
+    let features = args.usize_or("features", 4096).map_err(|e| anyhow!(e))?;
+    let hidden = args.usize_or("hidden", 128).map_err(|e| anyhow!(e))?;
+    let batch = args.usize_or("batch", 32).map_err(|e| anyhow!(e))?;
+    let eta = args.f64_or("eta", 1.0).map_err(|e| anyhow!(e))?;
+    let seed = args.usize_or("seed", 42).map_err(|e| anyhow!(e))? as u64;
+    let reps = args.usize_or("reps", 20).map_err(|e| anyhow!(e))?;
+
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let dims = SaeDims { features, hidden, classes: 2 };
+    let mut params = SaeParams::init(dims, &mut rng);
+
+    // Project W1 in place (the trainer's native path) and read the
+    // per-column thresholds — zero threshold ⇒ feature pruned.
+    let mut ws = Workspace::new();
+    bilevel_l1inf_inplace_cols(
+        &mut params.tensors[0],
+        hidden,
+        eta as f32,
+        L1Algorithm::Condat,
+        &mut ws,
+    );
+    let plan = CompactPlan::from_thresholds(ws.thresholds(), 0.0);
+    let compact = compact_params(&params, &plan);
+
+    println!("model          : {features} features x {hidden} hidden (seed {seed})");
+    println!("projection     : bilevel-l1inf, eta = {eta}");
+    println!(
+        "support        : {} / {} features alive ({:.1} % column sparsity)",
+        plan.alive(),
+        features,
+        plan.sparsity_percent()
+    );
+    println!(
+        "params         : {} -> {} ({:.1} % smaller)",
+        params.n_params(),
+        compact.n_params(),
+        100.0 * (params.n_params() - compact.n_params()) as f64 / params.n_params() as f64
+    );
+
+    // Bitwise verification: sparse encode of the compacted encoder vs the
+    // dense encode of the projected (still-dense) weights.
+    let x = Matrix::<f32>::randn(features, batch, &mut rng);
+    let enc = CompactEncoder::<f32>::from_params(&params, &plan);
+    let sparse_h = enc.encode(&x);
+    let mut dense_h = Matrix::<f32>::zeros(0, 0);
+    linalg::encode_batch_dense_into(
+        &x,
+        &params.tensors[0],
+        &params.tensors[1],
+        hidden,
+        &mut dense_h,
+    );
+    let bitwise = sparse_h
+        .as_slice()
+        .iter()
+        .zip(dense_h.as_slice().iter())
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    println!(
+        "verify         : sparse encode vs dense encode on a {features}x{batch} batch: {}",
+        if bitwise { "bit-identical" } else { "MISMATCH" }
+    );
+
+    // Timing: median of `reps` encodes each.
+    let time_median = |f: &mut dyn FnMut()| -> f64 {
+        let mut samples = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples[samples.len() / 2]
+    };
+    let mut out = Matrix::<f32>::zeros(hidden, batch);
+    let dense_s = time_median(&mut || {
+        let (w1, b1) = (&params.tensors[0], &params.tensors[1]);
+        linalg::encode_batch_dense_into(&x, w1, b1, hidden, &mut out)
+    });
+    let compact_s = time_median(&mut || enc.encode_into(&x, &mut out));
+    println!(
+        "encode         : dense {:.3} ms, compact {:.3} ms ({:.2}x)",
+        dense_s * 1e3,
+        compact_s * 1e3,
+        if compact_s > 0.0 { dense_s / compact_s } else { 0.0 }
+    );
+    if !bitwise {
+        return Err(anyhow!("sparse encode diverged bitwise from dense encode"));
+    }
+    Ok(())
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

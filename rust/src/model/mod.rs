@@ -136,6 +136,13 @@ impl SaeParams {
     pub fn n_params(&self) -> usize {
         self.tensors.iter().map(|t| t.len()).sum()
     }
+
+    /// Feature `f`'s encoder weights: row `f` of the `(features, hidden)`
+    /// row-major W1 (== column `f` of the projection's column-major view).
+    pub fn w1_row(&self, f: usize) -> &[f32] {
+        let h = self.dims.hidden;
+        &self.tensors[0][f * h..(f + 1) * h]
+    }
 }
 
 /// Column mask from projection thresholds: feature stays iff `u_f > tol`.

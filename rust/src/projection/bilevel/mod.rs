@@ -15,14 +15,18 @@
 //! a single pass (no iteration). `BP¹,¹` and `BP¹,²` replace the column
 //! aggregator / outer ball by ℓ1/ℓ1 and ℓ2/ℓ2 respectively.
 //!
-//! Properties verified by the test-suite (and by `experiments::fig3`):
+//! Properties verified by the test-suite (by the differential conformance
+//! suite `rust/tests/l1inf_conformance.rs` — which also cross-checks every
+//! exact ℓ1,∞ solver against the others and `BP¹,∞` against them across
+//! shapes, dtypes, and radii — and by `experiments::fig3`):
 //!
 //! * feasibility: `‖BP¹,∞(Y)‖₁,∞ ≤ η`;
 //! * contraction (Remark III.1): `0 ≤ û_j ≤ ‖y_j‖∞`;
 //! * the ℓ1,∞ identity (Prop. III.3):
 //!   `‖Y − BP(Y)‖₁,∞ + ‖BP(Y)‖₁,∞ = ‖Y‖₁,∞`;
 //! * structured sparsity: columns whose ∞-norm falls below the inner
-//!   waterline are zeroed *entirely*.
+//!   waterline are zeroed *entirely*, and on the paper's scale-separated
+//!   ensembles no fewer columns than the exact projection zeroes (Fig. 2).
 
 mod parallel;
 

@@ -145,6 +145,75 @@ impl Arbitrary for MatrixAndRadius {
     }
 }
 
+/// Random pruned SAE + input batch — the canonical input of the sparse
+/// subsystem's properties (compact round-trip, sparse ≡ dense encode,
+/// plan/mask consistency). The mask is already applied to the params, and
+/// the sparsity level spans the extremes: roll 0 forces 0% pruned, roll 1
+/// forces 100%, otherwise each feature dies with probability ~1/3.
+#[derive(Clone, Debug)]
+pub struct SparseSaeCase {
+    pub params: crate::model::SaeParams,
+    pub mask: Vec<f32>,
+    /// Input batch, `(features, batch)` column-major (one sample per
+    /// column).
+    pub x: Matrix<f64>,
+}
+
+impl Arbitrary for SparseSaeCase {
+    fn generate(rng: &mut Xoshiro256pp) -> Self {
+        use crate::model::{SaeDims, SaeParams};
+        let features = 1 + rng.next_below(32) as usize;
+        let hidden = 1 + rng.next_below(12) as usize;
+        let dims = SaeDims { features, hidden, classes: 2 };
+        let mut params = SaeParams::init(dims, rng);
+        let roll = rng.next_below(6);
+        let mask: Vec<f32> = (0..features)
+            .map(|_| match roll {
+                0 => 1.0,
+                1 => 0.0,
+                _ => {
+                    if rng.next_below(3) == 0 {
+                        0.0
+                    } else {
+                        1.0
+                    }
+                }
+            })
+            .collect();
+        params.apply_feature_mask(&mask);
+        let batch = 1 + rng.next_below(8) as usize;
+        let x = Matrix::randn(features, batch, rng);
+        Self { params, mask, x }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        // Fewer batch columns only: shrinking the model would invalidate
+        // the mask/params pairing.
+        let cols = self.x.cols();
+        if cols <= 1 {
+            return Vec::new();
+        }
+        let mut x = Matrix::zeros(self.x.rows(), cols / 2);
+        for j in 0..cols / 2 {
+            for i in 0..self.x.rows() {
+                x.set(i, j, self.x.get(i, j));
+            }
+        }
+        vec![Self { params: self.params.clone(), mask: self.mask.clone(), x }]
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "SAE {}x{} ({} alive of {}), batch {}",
+            self.params.dims.features,
+            self.params.dims.hidden,
+            self.mask.iter().filter(|&&m| m > 0.0).count(),
+            self.params.dims.features,
+            self.x.cols()
+        )
+    }
+}
+
 /// Random non-negative vector + radius for ℓ1 projection properties.
 #[derive(Clone, Debug)]
 pub struct VectorAndRadius {

@@ -12,23 +12,50 @@
 //! Shutdown is graceful: queues are closed, already-accepted jobs execute,
 //! workers drain and exit, and `Drop` performs the same sequence so an
 //! engine can never leak threads.
+//!
+//! Besides projections, the engine runs **sparse encode** jobs: compacted
+//! encoders ([`crate::sparse::CompactEncoder`]) are registered once
+//! ([`Engine::register_encoder_f32`] / [`Engine::register_encoder_f64`]),
+//! then [`Engine::submit_encode`] submits input batches against the
+//! returned model id. Encode jobs ride the same queues, batching, and
+//! telemetry; the encoder is resolved to an `Arc` at submission, so
+//! workers never touch the registry lock.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
+use crate::sparse::CompactEncoder;
+use crate::tensor::Matrix;
 
 use super::cache::ThresholdCache;
 use super::queue::{JobQueue, PushError};
-use super::request::{BatchKey, ProjectionRequest, ProjectionResponse, SubmitError};
-use super::scheduler::{self, BatchPolicy};
+use super::request::{
+    BatchKey, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
+};
+use super::scheduler::{self, BatchPolicy, ExecOutcome};
 use super::stats::{EngineStats, ShardCounters};
 
-/// A queued unit of work.
+/// A registered encoder, typed at registration so workers dispatch without
+/// a dtype check.
+enum RegisteredEncoder {
+    F32(Arc<CompactEncoder<f32>>),
+    F64(Arc<CompactEncoder<f64>>),
+}
+
+/// What a queued job executes.
+enum Work {
+    Project(ProjectionRequest),
+    Encode32 { enc: Arc<CompactEncoder<f32>>, x: Matrix<f32> },
+    Encode64 { enc: Arc<CompactEncoder<f64>>, x: Matrix<f64> },
+}
+
+/// A queued unit of work. The job's [`JobKind`] lives in `key.kind`.
 struct Job {
-    req: ProjectionRequest,
+    work: Work,
     key: BatchKey,
     tx: mpsc::Sender<ProjectionResponse>,
     enqueued: Instant,
@@ -61,6 +88,9 @@ pub struct Engine {
     rr: AtomicUsize,
     retry_after: Duration,
     started: Instant,
+    /// Registered sparse encoders, keyed by engine-local model id.
+    encoders: RwLock<HashMap<u64, RegisteredEncoder>>,
+    next_model: AtomicU64,
 }
 
 impl Engine {
@@ -117,6 +147,8 @@ impl Engine {
             rr: AtomicUsize::new(0),
             retry_after,
             started: Instant::now(),
+            encoders: RwLock::new(HashMap::new()),
+            next_model: AtomicU64::new(1),
         })
     }
 
@@ -133,9 +165,96 @@ impl Engine {
     /// backpressure error. Never blocks.
     pub fn submit(&self, req: ProjectionRequest) -> Result<ResponseHandle, SubmitError> {
         req.validate().map_err(SubmitError::Invalid)?;
+        let key = req.batch_key();
+        self.enqueue(Work::Project(req), key)
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, req: ProjectionRequest) -> Result<ProjectionResponse, SubmitError> {
+        self.submit(req)?.wait().ok_or(SubmitError::ShuttingDown)
+    }
+
+    /// Register a compacted f32 encoder; returns the model id to encode
+    /// against. Registration is cheap (one registry write); the encoder is
+    /// shared by `Arc` from then on.
+    pub fn register_encoder_f32(&self, enc: CompactEncoder<f32>) -> u64 {
+        self.register(RegisteredEncoder::F32(Arc::new(enc)))
+    }
+
+    /// Register a compacted f64 encoder; returns the model id.
+    pub fn register_encoder_f64(&self, enc: CompactEncoder<f64>) -> u64 {
+        self.register(RegisteredEncoder::F64(Arc::new(enc)))
+    }
+
+    fn register(&self, enc: RegisteredEncoder) -> u64 {
+        let id = self.next_model.fetch_add(1, Ordering::Relaxed);
+        self.encoders.write().unwrap().insert(id, enc);
+        id
+    }
+
+    /// Number of registered encoders.
+    pub fn encoder_count(&self) -> usize {
+        self.encoders.read().unwrap().len()
+    }
+
+    /// Enqueue a sparse-encode job: run `x` (one sample per **column**, in
+    /// the original feature space) through the registered encoder `model`.
+    /// Validates model id, dtype, and shape up front; never blocks.
+    pub fn submit_encode(&self, model: u64, x: Payload) -> Result<ResponseHandle, SubmitError> {
+        if x.is_empty() {
+            return Err(SubmitError::Invalid("empty encode payload".into()));
+        }
+        let (rows, cols, dtype) = (x.rows(), x.cols(), x.dtype());
+        let work = {
+            let encoders = self.encoders.read().unwrap();
+            let Some(enc) = encoders.get(&model) else {
+                return Err(SubmitError::Invalid(format!("unknown encoder model {model}")));
+            };
+            match (enc, x) {
+                (RegisteredEncoder::F32(enc), Payload::F32(x)) => {
+                    check_features(rows, enc.features())?;
+                    Work::Encode32 { enc: Arc::clone(enc), x }
+                }
+                (RegisteredEncoder::F64(enc), Payload::F64(x)) => {
+                    check_features(rows, enc.features())?;
+                    Work::Encode64 { enc: Arc::clone(enc), x }
+                }
+                (RegisteredEncoder::F32(_), _) | (RegisteredEncoder::F64(_), _) => {
+                    return Err(SubmitError::Invalid(format!(
+                        "encoder model {model} dtype mismatch ({} payload)",
+                        dtype.name()
+                    )))
+                }
+            }
+        };
+        // `algo` is inert for encode jobs (it only discriminates projection
+        // batches); pinning it to the default keeps every same-model,
+        // same-shape encode under one key.
+        let key = BatchKey {
+            kind: JobKind::SparseEncode { model },
+            algo: crate::projection::l1::L1Algorithm::Condat,
+            dtype,
+            rows,
+            cols,
+        };
+        self.enqueue(work, key)
+    }
+
+    /// Submit an encode and block for the response.
+    pub fn submit_encode_wait(
+        &self,
+        model: u64,
+        x: Payload,
+    ) -> Result<ProjectionResponse, SubmitError> {
+        self.submit_encode(model, x)?.wait().ok_or(SubmitError::ShuttingDown)
+    }
+
+    /// Shared tail of every submit path: pick a shard round-robin, attach
+    /// the response channel, and convert queue pressure into errors.
+    fn enqueue(&self, work: Work, key: BatchKey) -> Result<ResponseHandle, SubmitError> {
         let shard = &self.shards[self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len()];
         let (tx, rx) = mpsc::channel();
-        let job = Job { key: req.batch_key(), req, tx, enqueued: Instant::now() };
+        let job = Job { work, key, tx, enqueued: Instant::now() };
         match shard.queue.try_push(job) {
             Ok(_depth) => {
                 shard.counters.submitted.inc();
@@ -151,11 +270,6 @@ impl Engine {
             }
             Err(PushError::Closed(_)) => Err(SubmitError::ShuttingDown),
         }
-    }
-
-    /// Submit and block for the response.
-    pub fn submit_wait(&self, req: ProjectionRequest) -> Result<ProjectionResponse, SubmitError> {
-        self.submit(req)?.wait().ok_or(SubmitError::ShuttingDown)
     }
 
     /// Point-in-time snapshot of every shard's counters.
@@ -193,6 +307,16 @@ impl Drop for Engine {
     }
 }
 
+/// Validate the feature (row) count of an encode payload.
+fn check_features(rows: usize, features: usize) -> Result<(), SubmitError> {
+    if rows != features {
+        return Err(SubmitError::Invalid(format!(
+            "encode payload has {rows} rows, encoder expects {features} features"
+        )));
+    }
+    Ok(())
+}
+
 fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
     // Per-worker reusable projection workspace (the per-shard workspace
     // pool: workers are pinned to their shard). Steady-state bi-level
@@ -206,21 +330,37 @@ fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
         for job in batch {
             let queue_micros = job.enqueued.elapsed().as_micros() as u64;
             let t0 = Instant::now();
-            let out = scheduler::execute(&job.req, cache, &mut scratch);
+            let out = match &job.work {
+                Work::Project(req) => scheduler::execute(req, cache, &mut scratch),
+                // Encodes allocate exactly the response payload (the
+                // per-sample kernel writes straight into it).
+                Work::Encode32 { enc, x } => ExecOutcome {
+                    payload: Payload::F32(enc.encode(x)),
+                    thresholds: None,
+                    cache_hit: false,
+                },
+                Work::Encode64 { enc, x } => ExecOutcome {
+                    payload: Payload::F64(enc.encode(x)),
+                    thresholds: None,
+                    cache_hit: false,
+                },
+            };
             let exec_micros = t0.elapsed().as_micros() as u64;
             shard.counters.completed.inc();
-            if scheduler::cacheable(job.req.kind) {
-                if out.cache_hit {
-                    shard.counters.cache_hits.inc();
-                } else {
-                    shard.counters.cache_misses.inc();
+            if let Work::Project(req) = &job.work {
+                if scheduler::cacheable(req.kind) {
+                    if out.cache_hit {
+                        shard.counters.cache_hits.inc();
+                    } else {
+                        shard.counters.cache_misses.inc();
+                    }
                 }
             }
             shard.counters.queue_wait.record_micros(queue_micros);
             shard.counters.exec.record_micros(exec_micros);
             // A dropped handle just means the client stopped caring.
             let _ = job.tx.send(ProjectionResponse {
-                kind: job.req.kind,
+                kind: job.key.kind,
                 payload: out.payload,
                 thresholds: out.thresholds,
                 cache_hit: out.cache_hit,
@@ -288,6 +428,97 @@ mod tests {
     fn invalid_config_refused() {
         let cfg = ServeConfig { queue_capacity: 0, ..ServeConfig::default() };
         assert!(Engine::start(&cfg).is_err());
+    }
+
+    fn masked_encoder<T: crate::scalar::Scalar>(
+        seed: u64,
+    ) -> (crate::model::SaeParams, CompactEncoder<T>) {
+        use crate::model::{SaeDims, SaeParams};
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut p = SaeParams::init(SaeDims { features: 10, hidden: 4, classes: 2 }, &mut rng);
+        let mut mask = vec![1.0f32; 10];
+        for f in [1usize, 3, 8] {
+            mask[f] = 0.0;
+        }
+        p.apply_feature_mask(&mask);
+        let plan = crate::sparse::CompactPlan::from_mask(&mask);
+        let enc = CompactEncoder::<T>::from_params(&p, &plan);
+        (p, enc)
+    }
+
+    #[test]
+    fn sparse_encode_round_trips_and_matches_library() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let (_, enc) = masked_encoder::<f64>(31);
+        let direct_enc = enc.clone();
+        let model = engine.register_encoder_f64(enc);
+        assert_eq!(engine.encoder_count(), 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let x = Matrix::<f64>::randn(10, 6, &mut rng);
+        let resp = engine
+            .submit_encode_wait(model, Payload::F64(x.clone()))
+            .unwrap();
+        assert_eq!(resp.kind, JobKind::SparseEncode { model });
+        assert!(resp.thresholds.is_none());
+        assert!(!resp.cache_hit);
+        let Payload::F64(h) = &resp.payload else { panic!("dtype changed") };
+        assert_eq!((h.rows(), h.cols()), (4, 6));
+        let direct = direct_enc.encode(&x);
+        assert_eq!(h.max_abs_diff(&direct), 0.0);
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed(), 1);
+        // encode jobs never touch the threshold cache counters
+        assert_eq!(stats.cache_hits() + stats.cache_misses(), 0);
+    }
+
+    #[test]
+    fn sparse_encode_f32_and_mixed_with_projections() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let (_, enc) = masked_encoder::<f32>(33);
+        let model = engine.register_encoder_f32(enc.clone());
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let x32: Matrix<f32> = Matrix::<f64>::randn(10, 3, &mut rng).cast();
+        let y = Matrix::<f64>::randn(8, 8, &mut rng);
+        let he = engine.submit_encode(model, Payload::F32(x32.clone())).unwrap();
+        let hp = engine
+            .submit(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y))
+            .unwrap();
+        let re = he.wait().unwrap();
+        let rp = hp.wait().unwrap();
+        let Payload::F32(h) = &re.payload else { panic!("dtype changed") };
+        assert_eq!(h.max_abs_diff(&enc.encode(&x32)), 0.0);
+        assert!(matches!(rp.kind, JobKind::Project(ProjectionKind::BilevelL1Inf)));
+        let stats = engine.shutdown();
+        assert_eq!(stats.completed(), 2);
+    }
+
+    #[test]
+    fn encode_submissions_are_validated() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let (_, enc) = masked_encoder::<f64>(35);
+        let model = engine.register_encoder_f64(enc);
+        let mut rng = Xoshiro256pp::seed_from_u64(36);
+        // unknown model
+        let err = engine
+            .submit_encode(999, Payload::F64(Matrix::randn(10, 2, &mut rng)))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "unknown model accepted");
+        // dtype mismatch
+        let x32: Matrix<f32> = Matrix::<f64>::randn(10, 2, &mut rng).cast();
+        let err = engine.submit_encode(model, Payload::F32(x32)).unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "dtype mismatch accepted");
+        // wrong feature count
+        let err = engine
+            .submit_encode(model, Payload::F64(Matrix::randn(7, 2, &mut rng)))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "wrong rows accepted");
+        // empty batch
+        let err = engine
+            .submit_encode(model, Payload::F64(Matrix::zeros(10, 0)))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)), "empty batch accepted");
+        assert_eq!(engine.stats().submitted(), 0);
+        engine.shutdown();
     }
 
     #[test]

@@ -24,6 +24,11 @@
 //!   cold call.
 //! * **Telemetry** ([`stats`]) — per-shard latency / throughput / batch /
 //!   hit-rate counters via [`crate::metrics::counters`].
+//! * **Sparse encode jobs** ([`JobKind::SparseEncode`]) — compacted
+//!   encoders ([`crate::sparse::CompactEncoder`]) registered on the engine
+//!   and driven by `Engine::submit_encode`: the structured-sparse
+//!   inference workload, sharing the queues, batching (keyed by model id +
+//!   shape + dtype), and telemetry of the projection kinds.
 //! * **Load generation** ([`loadgen`]) — the closed-loop driver behind the
 //!   `serve` / `loadgen` CLI subcommands and
 //!   `benches/serve_throughput.rs`.
@@ -60,7 +65,7 @@ pub use engine::{Engine, ResponseHandle};
 pub use loadgen::{run_loadgen, LoadReport, LoadgenConfig};
 pub use queue::{JobQueue, PushError};
 pub use request::{
-    BatchKey, Dtype, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
+    BatchKey, Dtype, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
 };
 pub use scheduler::{cacheable, BatchPolicy};
 pub use stats::{EngineStats, ShardStats};

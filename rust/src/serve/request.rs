@@ -6,6 +6,14 @@
 //! dtype the projection library supports. Requests that agree on
 //! (kind, algo, dtype, shape) share a [`BatchKey`] and are eligible for
 //! coalescing by the micro-batching scheduler.
+//!
+//! The engine also serves **sparse encode** jobs ([`JobKind::SparseEncode`],
+//! `Engine::submit_encode`): a batch of samples run through a registered
+//! [`crate::sparse::CompactEncoder`] — the structured-sparse inference
+//! workload the projection's column sparsity exists to enable. Encode jobs
+//! share the queue/batching/stats machinery; they carry the registered
+//! model id in their batch key, so same-model same-shape traffic coalesces
+//! exactly like same-key projections.
 
 use std::fmt;
 use std::time::Duration;
@@ -85,10 +93,29 @@ impl Payload {
     }
 }
 
+/// What a submitted job asks the engine to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum JobKind {
+    /// One of the library's matrix-ball projections.
+    Project(ProjectionKind),
+    /// Structured-sparse encode through the registered compacted encoder
+    /// with this engine-local model id.
+    SparseEncode { model: u64 },
+}
+
+impl JobKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Project(kind) => kind.name(),
+            Self::SparseEncode { .. } => "sparse-encode",
+        }
+    }
+}
+
 /// Coalescing key: requests with equal keys may execute in one batch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct BatchKey {
-    pub kind: ProjectionKind,
+    pub kind: JobKind,
     pub algo: L1Algorithm,
     pub dtype: Dtype,
     pub rows: usize,
@@ -125,7 +152,7 @@ impl ProjectionRequest {
 
     pub fn batch_key(&self) -> BatchKey {
         BatchKey {
-            kind: self.kind,
+            kind: JobKind::Project(self.kind),
             algo: self.algo,
             dtype: self.payload.dtype(),
             rows: self.payload.rows(),
@@ -148,11 +175,13 @@ impl ProjectionRequest {
     }
 }
 
-/// A completed projection.
+/// A completed job (projection or sparse encode).
 #[derive(Clone, Debug)]
 pub struct ProjectionResponse {
-    pub kind: ProjectionKind,
-    /// The projected matrix, same dtype and shape as the request payload.
+    pub kind: JobKind,
+    /// The result matrix: the projected matrix (same shape as the request
+    /// payload) for projections, the `(hidden, batch)` activations for
+    /// sparse encodes. Same dtype as the request payload either way.
     pub payload: Payload,
     /// Per-column thresholds `û` for the bi-level kinds (as `f64`).
     pub thresholds: Option<Vec<f64>>,
@@ -244,6 +273,16 @@ mod tests {
         )
         .validate()
         .is_err());
+    }
+
+    #[test]
+    fn encode_job_kinds_key_by_model() {
+        let a = JobKind::SparseEncode { model: 1 };
+        let b = JobKind::SparseEncode { model: 2 };
+        assert_ne!(a, b);
+        assert_eq!(a.name(), "sparse-encode");
+        assert_ne!(a, JobKind::Project(ProjectionKind::BilevelL1Inf));
+        assert_eq!(JobKind::Project(ProjectionKind::BilevelL11).name(), "bilevel-l11");
     }
 
     #[test]

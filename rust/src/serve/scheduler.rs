@@ -239,7 +239,7 @@ fn replay<T: Scalar>(
 mod tests {
     use super::*;
     use crate::rng::Xoshiro256pp;
-    use crate::serve::request::Dtype;
+    use crate::serve::request::{Dtype, JobKind};
 
     fn mk_req(kind: ProjectionKind, eta: f64, rows: usize, cols: usize, seed: u64) -> ProjectionRequest {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -251,7 +251,13 @@ mod tests {
     }
 
     fn bk(kind: ProjectionKind, rows: usize) -> BatchKey {
-        BatchKey { kind, algo: L1Algorithm::Condat, dtype: Dtype::F64, rows, cols: 4 }
+        BatchKey {
+            kind: JobKind::Project(kind),
+            algo: L1Algorithm::Condat,
+            dtype: Dtype::F64,
+            rows,
+            cols: 4,
+        }
     }
 
     #[test]

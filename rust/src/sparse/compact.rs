@@ -1,0 +1,365 @@
+//! Structural compaction of a trained SAE: drop pruned features from the
+//! parameter tensors, with an exact decompaction back to the original
+//! index space.
+//!
+//! In the [`crate::model`] layout the feature dimension appears in exactly
+//! three tensors:
+//!
+//! * `w1 (features, hidden)` row-major — feature `f` is the contiguous
+//!   **row** `f` (equivalently: column `f` of the `(hidden, features)`
+//!   column-major view the projection zeroes);
+//! * `w4 (hidden, features)` row-major — feature `f` is the strided
+//!   **column** `f` of the decoder;
+//! * `b4 (features)` — the decoder bias entry.
+//!
+//! [`compact_params`] keeps only the [`CompactPlan`]'s alive slices of
+//! those three (bitwise copies) and leaves the five feature-free tensors
+//! untouched, producing a genuine [`SaeParams`] with
+//! `dims.features == plan.alive()` — every existing accessor
+//! (`feature_scores`, `n_params`, `w1_as_feature_columns`, …) works on the
+//! compacted model in compact index space. [`decompact_params`] is the
+//! exact inverse on alive features (zeros elsewhere), so reports keep
+//! speaking original feature indices.
+//!
+//! [`CompactEncoder`] freezes the first (encoder) layer of a compacted
+//! model for inference — the unit the serve engine registers and the
+//! `bilevel sparsify` CLI measures.
+
+use crate::model::{SaeDims, SaeParams};
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+use super::linalg;
+use super::support::CompactPlan;
+
+/// Drop pruned features from `p` according to `plan`. Alive slices are
+/// copied bitwise; `plan.features()` must match `p.dims.features`.
+pub fn compact_params(p: &SaeParams, plan: &CompactPlan) -> SaeParams {
+    let d = p.dims;
+    assert_eq!(
+        plan.features(),
+        d.features,
+        "compact_params: plan features != model features"
+    );
+    let (h, a) = (d.hidden, plan.alive());
+    let dims = SaeDims { features: a, hidden: d.hidden, classes: d.classes };
+
+    // w1: keep alive rows of the (F, H) row-major tensor.
+    let mut w1 = Vec::with_capacity(a * h);
+    for &f in plan.alive_indices() {
+        w1.extend_from_slice(p.w1_row(f));
+    }
+    // w4 (H, F) row-major: keep alive entries of every row.
+    let w4_src = &p.tensors[6];
+    let mut w4 = Vec::with_capacity(h * a);
+    for i in 0..h {
+        for &f in plan.alive_indices() {
+            w4.push(w4_src[i * d.features + f]);
+        }
+    }
+    // b4: keep alive entries.
+    let b4: Vec<f32> = plan.alive_indices().iter().map(|&f| p.tensors[7][f]).collect();
+
+    let tensors = vec![
+        w1,
+        p.tensors[1].clone(),
+        p.tensors[2].clone(),
+        p.tensors[3].clone(),
+        p.tensors[4].clone(),
+        p.tensors[5].clone(),
+        w4,
+        b4,
+    ];
+    SaeParams { dims, tensors }
+}
+
+/// Exact inverse of [`compact_params`]: scatter the compacted tensors back
+/// to the original feature space, zero-filling pruned features.
+pub fn decompact_params(c: &SaeParams, plan: &CompactPlan) -> SaeParams {
+    let d = c.dims;
+    assert_eq!(
+        plan.alive(),
+        d.features,
+        "decompact_params: plan alive != compact features"
+    );
+    let (h, m) = (d.hidden, plan.features());
+    let dims = SaeDims { features: m, hidden: d.hidden, classes: d.classes };
+
+    let mut w1 = vec![0.0f32; m * h];
+    for (compact, &f) in plan.alive_indices().iter().enumerate() {
+        w1[f * h..(f + 1) * h].copy_from_slice(&c.tensors[0][compact * h..(compact + 1) * h]);
+    }
+    let mut w4 = vec![0.0f32; h * m];
+    for i in 0..h {
+        for (compact, &f) in plan.alive_indices().iter().enumerate() {
+            w4[i * m + f] = c.tensors[6][i * d.features + compact];
+        }
+    }
+    let mut b4 = vec![0.0f32; m];
+    for (compact, &f) in plan.alive_indices().iter().enumerate() {
+        b4[f] = c.tensors[7][compact];
+    }
+
+    let tensors = vec![
+        w1,
+        c.tensors[1].clone(),
+        c.tensors[2].clone(),
+        c.tensors[3].clone(),
+        c.tensors[4].clone(),
+        c.tensors[5].clone(),
+        w4,
+        b4,
+    ];
+    SaeParams { dims, tensors }
+}
+
+/// A frozen, compacted first layer — the structured-sparse inference unit.
+///
+/// Holds the compacted `(alive, hidden)` encoder weights, the bias, and
+/// the plan mapping back to original feature indices. `encode*` runs the
+/// column-support kernels of [`super::linalg`]: inputs stay in the
+/// **original** feature space (shape `(features, batch)`, one sample per
+/// column), cost scales with `alive()`.
+#[derive(Clone, Debug)]
+pub struct CompactEncoder<T: Scalar> {
+    plan: CompactPlan,
+    hidden: usize,
+    /// `(alive, hidden)` row-major compacted encoder weights.
+    w1c: Vec<T>,
+    b1: Vec<T>,
+}
+
+impl<T: Scalar> CompactEncoder<T> {
+    /// Extract the encoder of a **dense** model, compacting it under
+    /// `plan` (weights cast from the model's f32 storage).
+    pub fn from_params(p: &SaeParams, plan: &CompactPlan) -> Self {
+        let d = p.dims;
+        assert_eq!(
+            plan.features(),
+            d.features,
+            "CompactEncoder: plan features != model features"
+        );
+        let h = d.hidden;
+        let mut w1c = Vec::with_capacity(plan.alive() * h);
+        for &f in plan.alive_indices() {
+            w1c.extend(p.w1_row(f).iter().map(|&v| T::from_f64(v as f64)));
+        }
+        let b1 = p.tensors[1].iter().map(|&v| T::from_f64(v as f64)).collect();
+        Self { plan: plan.clone(), hidden: h, w1c, b1 }
+    }
+
+    pub fn plan(&self) -> &CompactPlan {
+        &self.plan
+    }
+
+    /// Original feature count an input batch must have (rows of `x`).
+    pub fn features(&self) -> usize {
+        self.plan.features()
+    }
+
+    pub fn hidden(&self) -> usize {
+        self.hidden
+    }
+
+    pub fn alive(&self) -> usize {
+        self.plan.alive()
+    }
+
+    /// Compacted weights, `(alive, hidden)` row-major.
+    pub fn w1c(&self) -> &[T] {
+        &self.w1c
+    }
+
+    pub fn b1(&self) -> &[T] {
+        &self.b1
+    }
+
+    /// Batch sparse encode into a reusable output (`(hidden, batch)`).
+    pub fn encode_into(&self, x: &Matrix<T>, out: &mut Matrix<T>) {
+        assert_eq!(x.rows(), self.features(), "CompactEncoder: input rows != features");
+        linalg::encode_batch_compact_into(x, &self.w1c, &self.b1, self.hidden, &self.plan, out);
+    }
+
+    /// Batch sparse encode (allocating form).
+    pub fn encode(&self, x: &Matrix<T>) -> Matrix<T> {
+        let mut out = Matrix::zeros(0, 0);
+        self.encode_into(x, &mut out);
+        out
+    }
+
+    /// 64-bit content fingerprint (weights, bias, plan) — a stable
+    /// identity for logging / deduplicating encoders across processes.
+    /// (The serve engine keys its registry by a cheap engine-local
+    /// sequential id, not this hash.)
+    pub fn fingerprint(&self) -> u64 {
+        const PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut step = |v: u64| h = (h ^ v).wrapping_mul(PRIME);
+        step(self.plan.features() as u64);
+        step(self.hidden as u64);
+        for &f in self.plan.alive_indices() {
+            step(f as u64);
+        }
+        for &w in &self.w1c {
+            step(w.to_f64().to_bits());
+        }
+        for &b in &self.b1 {
+            step(b.to_f64().to_bits());
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SaeDims;
+    use crate::rng::Xoshiro256pp;
+
+    fn masked_params(seed: u64, kill: &[usize]) -> (SaeParams, CompactPlan) {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut p = SaeParams::init(SaeDims { features: 12, hidden: 5, classes: 3 }, &mut rng);
+        let mut mask = vec![1.0f32; 12];
+        for &f in kill {
+            mask[f] = 0.0;
+        }
+        p.apply_feature_mask(&mask);
+        (p, CompactPlan::from_mask(&mask))
+    }
+
+    #[test]
+    fn compact_shapes_and_param_count() {
+        let (p, plan) = masked_params(1, &[0, 4, 5, 11]);
+        let c = compact_params(&p, &plan);
+        assert_eq!(c.dims.features, 8);
+        assert_eq!(c.dims.hidden, 5);
+        assert_eq!(c.dims.classes, 3);
+        let shapes = c.dims.shapes();
+        for (t, s) in c.tensors.iter().zip(shapes.iter()) {
+            assert_eq!(t.len(), s.iter().product::<usize>());
+        }
+        // dropped: 4 rows of w1 (4*5), 4 cols of w4 (5*4), 4 entries of b4
+        assert_eq!(p.n_params() - c.n_params(), 4 * 5 + 5 * 4 + 4);
+        assert_eq!(c.alive_features(), 8);
+    }
+
+    #[test]
+    fn compact_copies_alive_slices_bitwise() {
+        let (p, plan) = masked_params(2, &[1, 7]);
+        let c = compact_params(&p, &plan);
+        let (h, m) = (p.dims.hidden, p.dims.features);
+        for (compact, &f) in plan.alive_indices().iter().enumerate() {
+            for k in 0..h {
+                assert_eq!(
+                    c.tensors[0][compact * h + k].to_bits(),
+                    p.tensors[0][f * h + k].to_bits(),
+                    "w1 row {f}"
+                );
+            }
+            for i in 0..h {
+                assert_eq!(
+                    c.tensors[6][i * plan.alive() + compact].to_bits(),
+                    p.tensors[6][i * m + f].to_bits(),
+                    "w4 col {f}"
+                );
+            }
+            assert_eq!(c.tensors[7][compact].to_bits(), p.tensors[7][f].to_bits());
+        }
+        // feature-free tensors untouched
+        for t in [1usize, 2, 3, 4, 5] {
+            assert_eq!(c.tensors[t], p.tensors[t]);
+        }
+    }
+
+    #[test]
+    fn decompact_roundtrip_identity_on_alive_zero_elsewhere() {
+        let (p, plan) = masked_params(3, &[0, 2, 3, 9, 10]);
+        let back = decompact_params(&compact_params(&p, &plan), &plan);
+        assert_eq!(back.dims, p.dims);
+        let (h, m) = (p.dims.hidden, p.dims.features);
+        for f in 0..m {
+            if plan.is_alive(f) {
+                for k in 0..h {
+                    assert_eq!(
+                        back.tensors[0][f * h + k].to_bits(),
+                        p.tensors[0][f * h + k].to_bits(),
+                        "w1 row {f}"
+                    );
+                }
+                for i in 0..h {
+                    assert_eq!(
+                        back.tensors[6][i * m + f].to_bits(),
+                        p.tensors[6][i * m + f].to_bits(),
+                        "w4 col {f}"
+                    );
+                }
+                assert_eq!(back.tensors[7][f].to_bits(), p.tensors[7][f].to_bits());
+            } else {
+                // Pruned features come back zero everywhere. NOTE: the
+                // mask only zeroes W1 rows, so p's dead W4 columns / b4
+                // entries may be non-zero — decompact is the identity on
+                // the *support*, not on weights the plan dropped.
+                assert!(back.tensors[0][f * h..(f + 1) * h].iter().all(|&v| v == 0.0));
+                assert!((0..h).all(|i| back.tensors[6][i * m + f] == 0.0));
+                assert_eq!(back.tensors[7][f], 0.0);
+            }
+        }
+        // feature-free tensors round-trip untouched
+        for t in [1usize, 2, 3, 4, 5] {
+            assert_eq!(back.tensors[t], p.tensors[t]);
+        }
+    }
+
+    #[test]
+    fn extreme_plans_roundtrip() {
+        // 100% dead and 0% dead.
+        let (p, _) = masked_params(4, &[]);
+        let all = CompactPlan::dense(12);
+        let c = compact_params(&p, &all);
+        assert_eq!(c.n_params(), p.n_params());
+        assert_eq!(decompact_params(&c, &all).tensors, p.tensors);
+
+        let none = CompactPlan::from_mask(&[0.0f32; 12]);
+        let mut dead = p.clone();
+        dead.apply_feature_mask(&none.mask());
+        let c0 = compact_params(&dead, &none);
+        assert_eq!(c0.dims.features, 0);
+        assert_eq!(c0.tensors[0].len(), 0);
+        let back = decompact_params(&c0, &none);
+        assert_eq!(back.dims.features, 12);
+        assert!(back.tensors[0].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn encoder_matches_dense_encode_bitwise() {
+        let (p, plan) = masked_params(5, &[1, 2, 6, 8]);
+        let enc = CompactEncoder::<f32>::from_params(&p, &plan);
+        assert_eq!(enc.alive(), 8);
+        assert_eq!(enc.features(), 12);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let x = Matrix::<f32>::randn(12, 4, &mut rng);
+        let sparse = enc.encode(&x);
+        let mut dense = Matrix::zeros(0, 0);
+        super::linalg::encode_batch_dense_into(
+            &x,
+            &p.tensors[0],
+            &p.tensors[1],
+            p.dims.hidden,
+            &mut dense,
+        );
+        assert_eq!((sparse.rows(), sparse.cols()), (5, 4));
+        for (a, b) in sparse.as_slice().iter().zip(dense.as_slice().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn fingerprint_sensitive_to_weights_and_plan() {
+        let (p, plan) = masked_params(7, &[3]);
+        let enc = CompactEncoder::<f64>::from_params(&p, &plan);
+        assert_eq!(enc.fingerprint(), CompactEncoder::<f64>::from_params(&p, &plan).fingerprint());
+        let (p2, plan2) = masked_params(7, &[4]);
+        let enc2 = CompactEncoder::<f64>::from_params(&p2, &plan2);
+        assert_ne!(enc.fingerprint(), enc2.fingerprint());
+    }
+}

@@ -1,0 +1,303 @@
+//! Column-support matvec / SpMM kernels — the structured-sparse encoder.
+//!
+//! The encoder's hot loop is `h = xᵀ·W1 + b1` with `W1` stored `(features,
+//! hidden)` row-major (the [`crate::model`] convention): feature `f`'s
+//! weights are the contiguous row `w1[f·H .. (f+1)·H]`. That layout makes
+//! the matvec a sequence of row [`kernels::axpy`] updates — and makes
+//! column-structured sparsity *skippable*: a pruned feature's row never
+//! has to be read. Cost scales with the number of **alive** features, not
+//! the original `m`.
+//!
+//! Three entry points share one accumulation recipe:
+//!
+//! * [`encode_dense_into`] — every row, in index order (the dense
+//!   baseline);
+//! * [`encode_support_into`] — an explicit strictly-increasing support
+//!   list over the *dense* weights (skip-dead, no compaction);
+//! * [`encode_compact_into`] — compacted weights `(alive, hidden)` plus a
+//!   [`CompactPlan`] gathering the matching input entries.
+//!
+//! **Bit-identity.** All three produce bit-identical outputs on a model
+//! whose pruned rows are exactly zero and finite inputs, at every sparsity
+//! level including 0% and 100%, because:
+//!
+//! 1. the accumulator starts at `+0.0` and the bias is added **last** —
+//!    an IEEE-754 sum is `-0.0` only when *both* addends are `-0.0`, so
+//!    no intermediate accumulator is ever `-0.0`;
+//! 2. a pruned row contributes only `x_f · (±0.0) = ±0.0` terms, and
+//!    adding `±0.0` to an accumulator that is not `-0.0` returns it
+//!    unchanged, bit for bit;
+//! 3. alive rows are visited in the same (increasing) order with the same
+//!    bits by all three paths, and [`kernels::axpy`] applies the same
+//!    per-element `acc + a·row` (no `mul_add` fusion).
+//!
+//! So the dense path's extra (dead-row) axpys are exact no-ops, and every
+//! per-element rounding step agrees. `rust/tests/sparse_integration.rs`
+//! pins this for f32/f64 across sparsity levels; [`encode_dense_into_ref`]
+//! is the scalar reference the chunked paths are pinned against, PR-2
+//! style.
+
+use crate::kernels;
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+use super::support::CompactPlan;
+
+/// Shared epilogue: add the bias last (see the module docs — load-bearing
+/// for the `-0.0`-free accumulator argument).
+#[inline]
+fn add_bias<T: Scalar>(out: &mut [T], b1: &[T]) {
+    debug_assert_eq!(out.len(), b1.len());
+    for (o, &b) in out.iter_mut().zip(b1) {
+        *o += b;
+    }
+}
+
+/// Dense encode of one sample: `out = xᵀ·W1 + b1`, iterating **all**
+/// feature rows. `w1` is `(features, hidden)` row-major.
+pub fn encode_dense_into<T: Scalar>(
+    x: &[T],
+    w1: &[T],
+    b1: &[T],
+    hidden: usize,
+    out: &mut [T],
+) {
+    assert_eq!(out.len(), hidden, "encode: out length != hidden");
+    assert_eq!(b1.len(), hidden, "encode: bias length != hidden");
+    assert_eq!(w1.len(), x.len() * hidden, "encode: W1 shape mismatch");
+    out.fill(T::ZERO);
+    for (f, row) in w1.chunks_exact(hidden.max(1)).enumerate() {
+        kernels::axpy(out, x[f], row);
+    }
+    add_bias(out, b1);
+}
+
+/// Scalar reference for the encode recipe (naive loops, same term order).
+pub fn encode_dense_into_ref<T: Scalar>(
+    x: &[T],
+    w1: &[T],
+    b1: &[T],
+    hidden: usize,
+    out: &mut [T],
+) {
+    assert_eq!(out.len(), hidden, "encode_ref: out length != hidden");
+    assert_eq!(b1.len(), hidden, "encode_ref: bias length != hidden");
+    assert_eq!(w1.len(), x.len() * hidden, "encode_ref: W1 shape mismatch");
+    out.fill(T::ZERO);
+    for (f, row) in w1.chunks_exact(hidden.max(1)).enumerate() {
+        kernels::axpy_ref(out, x[f], row);
+    }
+    add_bias(out, b1);
+}
+
+/// Support-set encode over **dense** weights: only the rows named by
+/// `support` (strictly increasing original indices) are read.
+pub fn encode_support_into<T: Scalar>(
+    x: &[T],
+    w1: &[T],
+    b1: &[T],
+    hidden: usize,
+    support: &[usize],
+    out: &mut [T],
+) {
+    assert_eq!(out.len(), hidden, "encode_support: out length != hidden");
+    assert_eq!(b1.len(), hidden, "encode_support: bias length != hidden");
+    assert_eq!(w1.len(), x.len() * hidden, "encode_support: W1 shape mismatch");
+    out.fill(T::ZERO);
+    for &f in support {
+        kernels::axpy(out, x[f], &w1[f * hidden..(f + 1) * hidden]);
+    }
+    add_bias(out, b1);
+}
+
+/// Compact encode: `w1c` is the compacted `(alive, hidden)` row-major
+/// weights; inputs are gathered from the **original** index space through
+/// the plan (`x` keeps its full length).
+pub fn encode_compact_into<T: Scalar>(
+    x: &[T],
+    w1c: &[T],
+    b1: &[T],
+    hidden: usize,
+    plan: &CompactPlan,
+    out: &mut [T],
+) {
+    assert_eq!(out.len(), hidden, "encode_compact: out length != hidden");
+    assert_eq!(b1.len(), hidden, "encode_compact: bias length != hidden");
+    assert_eq!(x.len(), plan.features(), "encode_compact: input length != plan features");
+    assert_eq!(w1c.len(), plan.alive() * hidden, "encode_compact: W1c shape mismatch");
+    out.fill(T::ZERO);
+    for (row, &f) in w1c.chunks_exact(hidden.max(1)).zip(plan.alive_indices()) {
+        kernels::axpy(out, x[f], row);
+    }
+    add_bias(out, b1);
+}
+
+/// Batch (SpMM) forms: `x` is `(features, batch)` column-major (each
+/// column one sample — the [`Matrix`] layout keeps samples contiguous),
+/// `out` becomes `(hidden, batch)`.
+pub fn encode_batch_dense_into<T: Scalar>(
+    x: &Matrix<T>,
+    w1: &[T],
+    b1: &[T],
+    hidden: usize,
+    out: &mut Matrix<T>,
+) {
+    out.resize_reuse(hidden, x.cols());
+    for j in 0..x.cols() {
+        encode_dense_into(x.col(j), w1, b1, hidden, out.col_mut(j));
+    }
+}
+
+/// Batch form of [`encode_compact_into`].
+pub fn encode_batch_compact_into<T: Scalar>(
+    x: &Matrix<T>,
+    w1c: &[T],
+    b1: &[T],
+    hidden: usize,
+    plan: &CompactPlan,
+    out: &mut Matrix<T>,
+) {
+    out.resize_reuse(hidden, x.cols());
+    for j in 0..x.cols() {
+        encode_compact_into(x.col(j), w1c, b1, hidden, plan, out.col_mut(j));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Rng, Xoshiro256pp};
+
+    fn assert_bits_eq<T: Scalar>(a: &[T], b: &[T], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(
+                x.to_f64().to_bits(),
+                y.to_f64().to_bits(),
+                "{what}: element {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    /// Weights with the rows outside `alive` exactly zeroed.
+    fn masked_weights(features: usize, hidden: usize, alive: &[usize], seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut w1: Vec<f64> =
+            (0..features * hidden).map(|_| rng.uniform(-2.0, 2.0)).collect();
+        for f in 0..features {
+            if !alive.contains(&f) {
+                w1[f * hidden..(f + 1) * hidden].fill(0.0);
+            }
+        }
+        w1
+    }
+
+    #[test]
+    fn chunked_encode_bit_identical_to_scalar_ref() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for (features, hidden) in [(1usize, 1usize), (7, 5), (16, 8), (33, 17)] {
+            let w1: Vec<f64> =
+                (0..features * hidden).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let b1: Vec<f64> = (0..hidden).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..features).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let mut a = vec![0.0; hidden];
+            let mut b = vec![0.0; hidden];
+            encode_dense_into(&x, &w1, &b1, hidden, &mut a);
+            encode_dense_into_ref(&x, &w1, &b1, hidden, &mut b);
+            assert_bits_eq(&a, &b, "dense vs ref");
+        }
+    }
+
+    #[test]
+    fn support_and_compact_match_dense_bitwise() {
+        let (features, hidden) = (24usize, 10usize);
+        for alive in [
+            (0..features).collect::<Vec<_>>(), // 0% sparsity
+            vec![0, 3, 4, 11, 23],
+            vec![1],
+            vec![], // 100% sparsity
+        ] {
+            let w1 = masked_weights(features, hidden, &alive, 42);
+            let mut rng = Xoshiro256pp::seed_from_u64(43);
+            let b1: Vec<f64> = (0..hidden).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let x: Vec<f64> = (0..features).map(|_| rng.uniform(-3.0, 3.0)).collect();
+            let plan = CompactPlan::from_alive(features, alive.clone());
+            let w1c: Vec<f64> = alive
+                .iter()
+                .flat_map(|&f| w1[f * hidden..(f + 1) * hidden].to_vec())
+                .collect();
+            let mut dense = vec![0.0; hidden];
+            let mut supp = vec![0.0; hidden];
+            let mut comp = vec![0.0; hidden];
+            encode_dense_into(&x, &w1, &b1, hidden, &mut dense);
+            encode_support_into(&x, &w1, &b1, hidden, &alive, &mut supp);
+            encode_compact_into(&x, &w1c, &b1, hidden, &plan, &mut comp);
+            assert_bits_eq(&dense, &supp, "support vs dense");
+            assert_bits_eq(&dense, &comp, "compact vs dense");
+        }
+    }
+
+    #[test]
+    fn negative_zero_rows_cannot_flip_bits() {
+        // Projection-killed rows can hold -0.0 (clip at û=0 of a negative
+        // entry); the accumulator argument must survive that.
+        let (features, hidden) = (4usize, 3usize);
+        let mut w1 = vec![0.0f64; features * hidden];
+        w1[0..3].copy_from_slice(&[-0.0, -0.0, -0.0]); // dead row of -0.0
+        w1[3..6].copy_from_slice(&[1.0, -2.0, 0.5]); // alive
+        w1[6..9].copy_from_slice(&[0.0, -0.0, 0.0]); // dead, mixed zeros
+        w1[9..12].copy_from_slice(&[-1.0, 4.0, -0.25]); // alive
+        let b1 = [0.5f64, -0.0, 0.0];
+        let x = [-2.0f64, 3.0, 5.0, -1.0];
+        let alive = vec![1usize, 3];
+        let plan = CompactPlan::from_alive(features, alive.clone());
+        let w1c: Vec<f64> = alive
+            .iter()
+            .flat_map(|&f| w1[f * hidden..(f + 1) * hidden].to_vec())
+            .collect();
+        let mut dense = vec![0.0; hidden];
+        let mut comp = vec![0.0; hidden];
+        encode_dense_into(&x, &w1, &b1, hidden, &mut dense);
+        encode_compact_into(&x, &w1c, &b1, hidden, &plan, &mut comp);
+        assert_bits_eq(&dense, &comp, "compact vs dense with -0.0 rows");
+    }
+
+    #[test]
+    fn batch_forms_match_per_sample_calls() {
+        let (features, hidden, batch) = (12usize, 6usize, 5usize);
+        let alive = vec![0usize, 2, 7, 9];
+        let w1 = masked_weights(features, hidden, &alive, 7);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let b1: Vec<f64> = (0..hidden).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x = Matrix::<f64>::randn(features, batch, &mut rng);
+        let plan = CompactPlan::from_alive(features, alive.clone());
+        let w1c: Vec<f64> = alive
+            .iter()
+            .flat_map(|&f| w1[f * hidden..(f + 1) * hidden].to_vec())
+            .collect();
+        let mut dense = Matrix::zeros(0, 0);
+        let mut comp = Matrix::zeros(0, 0);
+        encode_batch_dense_into(&x, &w1, &b1, hidden, &mut dense);
+        encode_batch_compact_into(&x, &w1c, &b1, hidden, &plan, &mut comp);
+        assert_eq!((dense.rows(), dense.cols()), (hidden, batch));
+        assert_bits_eq(dense.as_slice(), comp.as_slice(), "batch compact vs dense");
+        for j in 0..batch {
+            let mut one = vec![0.0; hidden];
+            encode_dense_into(x.col(j), &w1, &b1, hidden, &mut one);
+            assert_bits_eq(dense.col(j), &one, "batch vs per-sample");
+        }
+    }
+
+    #[test]
+    fn zero_hidden_and_empty_support_are_safe() {
+        // hidden = 0: nothing to write.
+        let mut out: Vec<f64> = Vec::new();
+        encode_dense_into(&[1.0, 2.0], &[], &[], 0, &mut out);
+        // 100% sparsity: output is exactly the bias.
+        let plan = CompactPlan::from_mask(&[0.0, 0.0]);
+        let b1 = [0.25f64, -1.0];
+        let mut out = vec![9.0f64; 2];
+        encode_compact_into(&[1.0, 2.0], &[], &b1, 2, &plan, &mut out);
+        assert_eq!(out, b1);
+    }
+}

@@ -1,0 +1,38 @@
+//! # `sparse` — structured-sparse inference subsystem
+//!
+//! The paper's point (§V) is that the bi-level ℓ1,∞ projection zeroes
+//! *entire columns* of the encoder weights — structured sparsity that a
+//! dense matvec then ignores completely. This subsystem closes that loop:
+//! everything downstream of a projection can now *exploit* the killed
+//! columns instead of multiplying by them.
+//!
+//! * [`support`] — [`CompactPlan`]: the frozen support set derived from
+//!   the bi-level thresholds `û` (via
+//!   [`crate::model::mask_from_thresholds`]), mapping alive features ↔
+//!   original indices.
+//! * [`compact`] — [`compact_params`] / [`decompact_params`]: structurally
+//!   remove pruned features from a trained [`crate::model::SaeParams`]
+//!   (alive slices copied bitwise; the round-trip back to original
+//!   indices is exact on the support, pruned features come back zero)
+//!   and [`CompactEncoder`], the frozen compacted first layer.
+//! * [`linalg`] — column-support matvec / SpMM encode kernels routed
+//!   through the lane-chunked [`crate::kernels`] layer (`axpy` rows), with
+//!   a scalar reference pinned bit-identical PR-2 style. Encode cost
+//!   scales with **alive** features, not the original `m`; the dense and
+//!   sparse paths are bit-identical on pruned models (see the
+//!   [`linalg`] module docs for the `-0.0`-free accumulator argument).
+//!
+//! Wiring: [`crate::coordinator::TrainOutcome`] carries a compacted model
+//! + plan, the serve engine accepts a sparse-encode job kind running a
+//! registered [`CompactEncoder`], the `bilevel sparsify` CLI demonstrates
+//! the project → plan → compact → verify → time pipeline, and
+//! `bilevel bench sparse` / `cargo bench --bench sparse_infer` write
+//! `BENCH_sparse.json` (dense vs compacted encode across sparsity levels;
+//! see EXPERIMENTS.md §Sparse inference).
+
+pub mod compact;
+pub mod linalg;
+pub mod support;
+
+pub use compact::{compact_params, decompact_params, CompactEncoder};
+pub use support::CompactPlan;

@@ -1,0 +1,166 @@
+//! Column support sets: which features survived the projection, and the
+//! compact ↔ original index mapping everything downstream shares.
+//!
+//! The bi-level projection's structured sparsity lands as zero *columns*
+//! of the encoder weights (`û_j = 0` ⇒ feature `j` dead, Remark III.2).
+//! A [`CompactPlan`] freezes that pattern: the ordered list of alive
+//! original indices (the compact→original map) plus the inverse lookup,
+//! so compacted models, sparse kernels, and reports can all speak both
+//! index spaces without re-deriving anything.
+
+use crate::model::mask_from_thresholds;
+use crate::scalar::Scalar;
+
+/// Frozen support set of a structured-sparse model: maps compact slots
+/// (`0..alive`) to original feature indices and back.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompactPlan {
+    /// Original feature count (the dense model's `m`).
+    features: usize,
+    /// Alive original indices, strictly increasing; `alive[c]` is the
+    /// original index of compact slot `c`.
+    alive: Vec<usize>,
+    /// Inverse map: `compact_of[f] = Some(c)` iff original feature `f`
+    /// occupies compact slot `c`.
+    compact_of: Vec<Option<usize>>,
+}
+
+impl CompactPlan {
+    /// Build from a {0,1} feature mask (the trainer's mask convention:
+    /// `mask[f] > 0` ⇔ feature `f` alive).
+    pub fn from_mask(mask: &[f32]) -> Self {
+        let alive: Vec<usize> = mask
+            .iter()
+            .enumerate()
+            .filter(|(_, &m)| m > 0.0)
+            .map(|(f, _)| f)
+            .collect();
+        Self::from_alive(mask.len(), alive)
+    }
+
+    /// Build from the bi-level per-column thresholds `û` (feature alive iff
+    /// `û_f > tol` — the same rule as [`mask_from_thresholds`]).
+    pub fn from_thresholds<T: Scalar>(u: &[T], tol: T) -> Self {
+        Self::from_mask(&mask_from_thresholds(u, tol))
+    }
+
+    /// Build from an explicit strictly-increasing alive list.
+    pub fn from_alive(features: usize, alive: Vec<usize>) -> Self {
+        let mut compact_of = vec![None; features];
+        for w in alive.windows(2) {
+            assert!(w[0] < w[1], "CompactPlan: alive indices must be strictly increasing");
+        }
+        for (c, &f) in alive.iter().enumerate() {
+            assert!(f < features, "CompactPlan: alive index {f} out of range {features}");
+            compact_of[f] = Some(c);
+        }
+        Self { features, alive, compact_of }
+    }
+
+    /// The dense plan: every feature alive (0% sparsity).
+    pub fn dense(features: usize) -> Self {
+        Self::from_alive(features, (0..features).collect())
+    }
+
+    /// Original feature count.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Number of alive features (the compacted model's feature count).
+    pub fn alive(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Alive original indices, strictly increasing (compact → original).
+    pub fn alive_indices(&self) -> &[usize] {
+        &self.alive
+    }
+
+    /// Original index of compact slot `c`.
+    pub fn original_of(&self, c: usize) -> usize {
+        self.alive[c]
+    }
+
+    /// Compact slot of original feature `f`, `None` if it was pruned.
+    pub fn compact_of(&self, f: usize) -> Option<usize> {
+        self.compact_of[f]
+    }
+
+    /// Whether original feature `f` survived.
+    pub fn is_alive(&self, f: usize) -> bool {
+        self.compact_of[f].is_some()
+    }
+
+    /// The trainer's {0,1} mask for this support set.
+    pub fn mask(&self) -> Vec<f32> {
+        let mut mask = vec![0.0f32; self.features];
+        for &f in &self.alive {
+            mask[f] = 1.0;
+        }
+        mask
+    }
+
+    /// % of features pruned — the paper's structured sparsity score.
+    pub fn sparsity_percent(&self) -> f64 {
+        if self.features == 0 {
+            return 0.0;
+        }
+        100.0 * (self.features - self.alive.len()) as f64 / self.features as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_mask_roundtrips_indices() {
+        let mask = [1.0f32, 0.0, 0.0, 1.0, 1.0, 0.0];
+        let plan = CompactPlan::from_mask(&mask);
+        assert_eq!(plan.features(), 6);
+        assert_eq!(plan.alive(), 3);
+        assert_eq!(plan.alive_indices(), &[0, 3, 4]);
+        assert_eq!(plan.original_of(1), 3);
+        assert_eq!(plan.compact_of(3), Some(1));
+        assert_eq!(plan.compact_of(2), None);
+        assert!(plan.is_alive(4) && !plan.is_alive(5));
+        assert_eq!(plan.mask(), mask.to_vec());
+        assert!((plan.sparsity_percent() - 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_thresholds_matches_mask_rule() {
+        let u = [0.0f64, 1e-12, 0.5, 2.0];
+        let plan = CompactPlan::from_thresholds(&u, 1e-9);
+        assert_eq!(plan.alive_indices(), &[2, 3]);
+        // the trainer's exact-zero rule
+        let plan0 = CompactPlan::from_thresholds(&u, 0.0);
+        assert_eq!(plan0.alive_indices(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn dense_and_empty_extremes() {
+        let dense = CompactPlan::dense(4);
+        assert_eq!(dense.alive(), 4);
+        assert_eq!(dense.sparsity_percent(), 0.0);
+        let empty = CompactPlan::from_mask(&[0.0; 4]);
+        assert_eq!(empty.alive(), 0);
+        assert_eq!(empty.sparsity_percent(), 100.0);
+        let none = CompactPlan::from_mask(&[]);
+        assert_eq!(none.features(), 0);
+        assert_eq!(none.sparsity_percent(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn unsorted_alive_rejected() {
+        CompactPlan::from_alive(4, vec![2, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_alive_rejected() {
+        CompactPlan::from_alive(4, vec![4]);
+    }
+}

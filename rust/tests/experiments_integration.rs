@@ -138,6 +138,27 @@ fn fig9_runs_with_artifacts() {
 }
 
 #[test]
+fn sparse_experiment_reports_bitwise_dense_compact_agreement() {
+    let _g = lock();
+    let c = ctx();
+    run("sparse", &c).unwrap();
+    let (header, rows) = read_csv(&results_file("sparse_infer.csv")).unwrap();
+    let bit_col = header.iter().position(|h| h == "bit_identical").unwrap();
+    let sp_col = header.iter().position(|h| h == "sparsity_pct").unwrap();
+    assert!(!rows.is_empty());
+    for r in &rows {
+        assert_eq!(r[bit_col], "true", "sparse encode diverged at sparsity {}", r[sp_col]);
+    }
+    // both dtypes and the extreme levels are present
+    for dtype in ["f32", "f64"] {
+        assert!(rows.iter().any(|r| r[0] == dtype), "missing {dtype} rows");
+    }
+    for level in ["0", "99"] {
+        assert!(rows.iter().any(|r| r[sp_col] == level), "missing {level}% level");
+    }
+}
+
+#[test]
 fn unknown_id_is_error() {
     let _g = lock();
     assert!(run("fig99", &ctx()).is_err());

@@ -67,10 +67,18 @@ fn kernel_equivalence_for<T: Scalar>(seed: u64) {
         kernels::soft_threshold_inplace_ref(&mut b, T::from_f64(0.7));
         assert_bits_eq(&a, &b, "soft_threshold");
         let mut a = v.clone();
-        let mut b = v;
+        let mut b = v.clone();
         kernels::scale_inplace(&mut a, T::from_f64(0.37));
         kernels::scale_inplace_ref(&mut b, T::from_f64(0.37));
         assert_bits_eq(&a, &b, "scale");
+        // axpy — the sparse-encode row update
+        let row: Vec<T> =
+            (0..n).map(|_| T::from_f64(rng.uniform(-3.0, 3.0))).collect();
+        let mut a = v.clone();
+        let mut b = v;
+        kernels::axpy(&mut a, T::from_f64(-0.83), &row);
+        kernels::axpy_ref(&mut b, T::from_f64(-0.83), &row);
+        assert_bits_eq(&a, &b, "axpy");
     }
 }
 

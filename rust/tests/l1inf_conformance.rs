@@ -1,0 +1,253 @@
+//! Differential conformance suite for the ℓ1,∞ solver family.
+//!
+//! Cross-checks every exact solver (`quattoni`, `newton`, `ssn`) against
+//! the others (and the bisection golden reference) over random matrices
+//! spanning shapes, dtypes, and radii — including degenerate cases (η = 0,
+//! η ≥ ‖Y‖₁,∞, duplicate column norms, single row/column) — and checks the
+//! bi-level `BP¹,∞` against the exact family on the paper's claims:
+//!
+//! * feasibility `‖BP(Y)‖₁,∞ ≤ η`;
+//! * the Prop. III.3 identity
+//!   `‖Y − BP(Y)‖₁,∞ + ‖BP(Y)‖₁,∞ = ‖Y‖₁,∞`;
+//! * structured sparsity no worse than the exact projection on the
+//!   paper's scale-separated ensembles (the Fig. 2 claim — empirical on
+//!   that matrix family, not an instance-wise theorem, so the ensemble
+//!   mirrors the paper's).
+//!
+//! Referenced from `rust/src/projection/bilevel/mod.rs`.
+
+use bilevel_sparse::norms::l1inf_norm;
+use bilevel_sparse::projection::bilevel::bilevel_l1inf_with;
+use bilevel_sparse::projection::l1::L1Algorithm;
+use bilevel_sparse::projection::l1inf::{project_l1inf_with, L1InfAlgorithm};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::scalar::Scalar;
+use bilevel_sparse::tensor::Matrix;
+
+const EXACT: [L1InfAlgorithm; 3] =
+    [L1InfAlgorithm::Quattoni, L1InfAlgorithm::Newton, L1InfAlgorithm::Ssn];
+
+/// The shape grid: tall, wide, square, and single-row / single-column.
+const SHAPES: [(usize, usize); 7] =
+    [(1, 1), (1, 24), (24, 1), (8, 8), (40, 12), (12, 40), (30, 30)];
+
+/// Radius fractions of ‖Y‖₁,∞, spanning tight → inside-the-ball.
+const ETA_FRACS: [f64; 4] = [0.05, 0.3, 0.8, 1.5];
+
+fn randmat(n: usize, m: usize, seed: u64) -> Matrix<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    Matrix::randn(n, m, &mut rng)
+}
+
+/// A matrix with exact duplicate columns (and therefore duplicate column
+/// norms) — the tie-handling stressor.
+fn dupmat(n: usize, m: usize, seed: u64) -> Matrix<f64> {
+    let mut y = randmat(n, m, seed);
+    for j in (1..m).step_by(2) {
+        let src = y.col(j - 1).to_vec();
+        y.col_mut(j).copy_from_slice(&src);
+    }
+    y
+}
+
+/// Solver-agreement check at one (matrix, η) point. `tol` is absolute on
+/// entries (inputs are standard-normal scale).
+fn check_exact_agreement<T: Scalar>(y: &Matrix<T>, eta: T, tol: f64, what: &str) {
+    let golden = project_l1inf_with(y, eta, L1InfAlgorithm::Bisection);
+    for algo in EXACT {
+        let r = project_l1inf_with(y, eta, algo);
+        let diff = golden.x.max_abs_diff(&r.x);
+        assert!(
+            diff < tol,
+            "{what}: {} disagrees with bisection by {diff:e} (eta {eta})",
+            algo.name()
+        );
+        // μ levels drive the clip, so they must agree wherever they matter.
+        for (j, (a, b)) in golden.mu.iter().zip(r.mu.iter()).enumerate() {
+            assert!(
+                (a.to_f64() - b.to_f64()).abs() < tol,
+                "{what}: {} mu[{j}] {b} vs golden {a}",
+                algo.name()
+            );
+        }
+    }
+}
+
+/// Feasibility + Prop. III.3 identity for `BP¹,∞` at one point, and
+/// feasibility cross-checked against the exact family's ball.
+fn check_bilevel_claims<T: Scalar>(y: &Matrix<T>, eta: T, tol: f64, what: &str) {
+    let r = bilevel_l1inf_with(y, eta, L1Algorithm::Condat);
+    let norm = l1inf_norm(&r.x).to_f64();
+    let slack = tol * (1.0 + eta.to_f64());
+    assert!(
+        norm <= eta.to_f64() + slack,
+        "{what}: BP infeasible: ||BP(Y)|| = {norm} > eta = {eta}"
+    );
+    let lhs = l1inf_norm(&y.sub(&r.x)).to_f64() + norm;
+    let rhs = l1inf_norm(y).to_f64();
+    assert!(
+        (lhs - rhs).abs() < tol * (1.0 + rhs),
+        "{what}: Prop. III.3 identity violated: {lhs} vs {rhs}"
+    );
+    // The exact projection at the same radius is feasible too (sanity that
+    // both families talk about the same ball).
+    let exact = project_l1inf_with(y, eta, L1InfAlgorithm::Ssn);
+    assert!(
+        l1inf_norm(&exact.x).to_f64() <= eta.to_f64() + slack,
+        "{what}: exact infeasible"
+    );
+}
+
+#[test]
+fn exact_solvers_agree_across_shapes_and_radii_f64() {
+    for (i, &(n, m)) in SHAPES.iter().enumerate() {
+        let y = randmat(n, m, 1000 + i as u64);
+        let norm = l1inf_norm(&y);
+        for &frac in &ETA_FRACS {
+            check_exact_agreement(&y, norm * frac, 1e-6, &format!("{n}x{m} frac {frac}"));
+        }
+    }
+}
+
+#[test]
+fn exact_solvers_agree_across_shapes_and_radii_f32() {
+    // f32 convergence is EPSILON-scaled; the agreement bound scales
+    // accordingly (≈ 5e-3 absolute on standard-normal entries).
+    for (i, &(n, m)) in SHAPES.iter().enumerate() {
+        let y: Matrix<f32> = randmat(n, m, 2000 + i as u64).cast();
+        let norm = l1inf_norm(&y);
+        for &frac in &[0.1f32, 0.5] {
+            check_exact_agreement(&y, norm * frac, 5e-3, &format!("f32 {n}x{m} frac {frac}"));
+        }
+    }
+}
+
+#[test]
+fn exact_solvers_agree_on_duplicate_column_norms() {
+    for (n, m, seed) in [(10usize, 8usize, 1u64), (6, 12, 2), (20, 6, 3)] {
+        let y = dupmat(n, m, 3000 + seed);
+        let norm = l1inf_norm(&y);
+        for &frac in &[0.1, 0.4, 0.9] {
+            check_exact_agreement(&y, norm * frac, 1e-6, &format!("dup {n}x{m} frac {frac}"));
+        }
+        // constant matrix: every column norm tied
+        let c = Matrix::<f64>::full(n, m, 1.25);
+        check_exact_agreement(&c, l1inf_norm(&c) * 0.5, 1e-6, &format!("const {n}x{m}"));
+    }
+}
+
+#[test]
+fn degenerate_radii_are_consistent_across_all_solvers() {
+    let y = randmat(9, 7, 4000);
+    // η = 0 ⇒ zero matrix from every solver and from BP.
+    for algo in L1InfAlgorithm::all() {
+        let r = project_l1inf_with(&y, 0.0, *algo);
+        assert_eq!(r.x.count_zeros(0.0), 63, "{}: eta=0", algo.name());
+    }
+    let bp0 = bilevel_l1inf_with(&y, 0.0, L1Algorithm::Condat);
+    assert_eq!(bp0.x.count_zeros(0.0), 63, "BP eta=0");
+    assert!(bp0.thresholds.iter().all(|&u| u == 0.0));
+    // η ≥ ‖Y‖ ⇒ identity from every solver and from BP.
+    let big = l1inf_norm(&y) * 1.5;
+    for algo in L1InfAlgorithm::all() {
+        let r = project_l1inf_with(&y, big, *algo);
+        assert_eq!(y.max_abs_diff(&r.x), 0.0, "{}: eta>=norm", algo.name());
+    }
+    let bp = bilevel_l1inf_with(&y, big, L1Algorithm::Condat);
+    assert!(y.max_abs_diff(&bp.x) < 1e-12, "BP eta>=norm");
+}
+
+#[test]
+fn bilevel_feasibility_and_identity_f64() {
+    for (i, &(n, m)) in SHAPES.iter().enumerate() {
+        let y = randmat(n, m, 5000 + i as u64);
+        let norm = l1inf_norm(&y);
+        for &frac in &ETA_FRACS {
+            check_bilevel_claims(&y, norm * frac, 1e-9, &format!("{n}x{m} frac {frac}"));
+        }
+        check_bilevel_claims(&y, 0.0, 1e-9, &format!("{n}x{m} eta=0"));
+        // duplicate-column ties
+        let d = dupmat(n, m.max(2), 6000 + i as u64);
+        check_bilevel_claims(&d, l1inf_norm(&d) * 0.2, 1e-9, &format!("dup {n}x{m}"));
+    }
+}
+
+#[test]
+fn bilevel_feasibility_and_identity_f32() {
+    for (i, &(n, m)) in SHAPES.iter().enumerate() {
+        let y: Matrix<f32> = randmat(n, m, 7000 + i as u64).cast();
+        let norm = l1inf_norm(&y);
+        for &frac in &[0.05f32, 0.3, 0.8] {
+            check_bilevel_claims(&y, norm * frac, 1e-3, &format!("f32 {n}x{m} frac {frac}"));
+        }
+    }
+}
+
+#[test]
+fn bilevel_every_inner_solver_satisfies_the_claims() {
+    let y = randmat(25, 18, 8000);
+    let eta = l1inf_norm(&y) * 0.25;
+    let base = bilevel_l1inf_with(&y, eta, L1Algorithm::Sort);
+    for algo in L1Algorithm::all() {
+        let r = bilevel_l1inf_with(&y, eta, *algo);
+        assert!(l1inf_norm(&r.x) <= eta + 1e-9, "{} infeasible", algo.name());
+        assert!(
+            base.x.max_abs_diff(&r.x) < 1e-8,
+            "{} diverges from sort inner solver",
+            algo.name()
+        );
+    }
+}
+
+/// The paper's Fig. 2 matrix family: gaussian columns with a few boosted
+/// (scale-separated) ones, aggressive radius — the regime where the
+/// bi-level projection's sparsity advantage shows.
+fn boosted(n: usize, m: usize, boost: usize, factor: f64, seed: u64) -> Matrix<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut y = Matrix::<f64>::randn(n, m, &mut rng);
+    for j in 0..boost.min(m) {
+        for v in y.col_mut(j) {
+            *v *= factor;
+        }
+    }
+    y
+}
+
+#[test]
+fn bilevel_sparsity_no_worse_than_exact_on_paper_ensembles() {
+    let mut total_bp = 0usize;
+    let mut total_exact = 0usize;
+    for (case, (n, m, boost, factor, frac)) in [
+        (50usize, 40usize, 6usize, 20.0f64, 0.05f64),
+        (50, 40, 6, 50.0, 0.05),
+        (30, 60, 8, 30.0, 0.03),
+        (80, 25, 4, 25.0, 0.08),
+        (64, 64, 10, 40.0, 0.04),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        for seed in 0..4u64 {
+            let y = boosted(n, m, boost, factor, 9000 + 17 * case as u64 + seed);
+            let eta = l1inf_norm(&y) * frac;
+            let bp = bilevel_l1inf_with(&y, eta, L1Algorithm::Condat);
+            let exact = project_l1inf_with(&y, eta, L1InfAlgorithm::Ssn);
+            let s_bp = bp.x.zero_columns(1e-12).len();
+            let s_exact = exact.x.zero_columns(1e-12).len();
+            assert!(
+                s_bp >= s_exact,
+                "case {case} seed {seed}: BP zero-cols {s_bp} < exact {s_exact}"
+            );
+            // a zero threshold always means a zeroed column (the reverse
+            // can miss epsilon-sized thresholds, so inclusion, not
+            // equality)
+            assert!(bp.zero_columns().len() <= s_bp, "case {case} seed {seed}");
+            total_bp += s_bp;
+            total_exact += s_exact;
+        }
+    }
+    assert!(
+        total_bp > total_exact,
+        "BP should be strictly sparser in aggregate: {total_bp} vs {total_exact}"
+    );
+}

@@ -49,7 +49,7 @@ fn serve_results_bit_identical_to_library_calls() {
             "{} serve result differs from library",
             kind.name()
         );
-        assert_eq!(resp.kind, *kind);
+        assert_eq!(resp.kind, bilevel_sparse::serve::JobKind::Project(*kind));
         assert_eq!(resp.thresholds.is_some(), kind.bilevel_variant().is_some());
     }
     // identity kind round-trips too

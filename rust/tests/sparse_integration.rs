@@ -1,0 +1,276 @@
+//! Acceptance suite for the structured-sparse inference subsystem:
+//!
+//! * compact → decompact is the identity on alive features and zero
+//!   elsewhere (property, random pruned SAEs);
+//! * sparse encode ≡ dense encode **bit-identically** for f32 and f64 at
+//!   every sparsity level, including 0% (nothing pruned) and 100% (all
+//!   columns dead);
+//! * plan / mask consistency with `SaeParams::alive_features`;
+//! * the serve engine's sparse-encode job kind returns exactly the
+//!   library's sparse encode, end to end.
+
+use bilevel_sparse::config::ServeConfig;
+use bilevel_sparse::model::{SaeDims, SaeParams};
+use bilevel_sparse::projection::bilevel::bilevel_l1inf_inplace_cols;
+use bilevel_sparse::projection::l1::L1Algorithm;
+use bilevel_sparse::proptest::{forall, PropConfig, SparseSaeCase};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::scalar::Scalar;
+use bilevel_sparse::serve::{Engine, JobKind, Payload};
+use bilevel_sparse::sparse::{
+    compact_params, decompact_params, linalg, CompactEncoder, CompactPlan,
+};
+use bilevel_sparse::tensor::Matrix;
+
+fn assert_bits_eq<T: Scalar>(a: &[T], b: &[T], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_f64().to_bits(),
+            y.to_f64().to_bits(),
+            "{what}: element {i}: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn prop_compact_decompact_roundtrip() {
+    forall::<SparseSaeCase>(PropConfig { cases: 200, ..Default::default() }, |case| {
+        let plan = CompactPlan::from_mask(&case.mask);
+        let compact = compact_params(&case.params, &plan);
+        if compact.dims.features != plan.alive() {
+            return Err("compact feature count != plan alive".into());
+        }
+        let back = decompact_params(&compact, &plan);
+        if back.dims != case.params.dims {
+            return Err("decompact dims changed".into());
+        }
+        let h = case.params.dims.hidden;
+        let m = case.params.dims.features;
+        for f in 0..m {
+            if plan.is_alive(f) {
+                for k in 0..h {
+                    let (a, b) =
+                        (back.tensors[0][f * h + k], case.params.tensors[0][f * h + k]);
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("w1 row {f} not identical: {a} vs {b}"));
+                    }
+                }
+                for i in 0..h {
+                    let (a, b) =
+                        (back.tensors[6][i * m + f], case.params.tensors[6][i * m + f]);
+                    if a.to_bits() != b.to_bits() {
+                        return Err(format!("w4 col {f} not identical: {a} vs {b}"));
+                    }
+                }
+                if back.tensors[7][f].to_bits() != case.params.tensors[7][f].to_bits() {
+                    return Err(format!("b4[{f}] not identical"));
+                }
+            } else {
+                // pruned features come back zero in every tensor the plan
+                // touches (the source W4/b4 may be non-zero — the mask
+                // only zeroes W1 rows, so dropping them is by design)
+                if back.tensors[0][f * h..(f + 1) * h].iter().any(|&v| v != 0.0) {
+                    return Err(format!("pruned w1 row {f} not zero"));
+                }
+                if (0..h).any(|i| back.tensors[6][i * m + f] != 0.0) {
+                    return Err(format!("pruned w4 col {f} not zero"));
+                }
+                if back.tensors[7][f] != 0.0 {
+                    return Err(format!("pruned b4[{f}] not zero"));
+                }
+            }
+        }
+        // feature-free tensors round-trip untouched
+        for t in [1usize, 2, 3, 4, 5] {
+            if back.tensors[t] != case.params.tensors[t] {
+                return Err(format!("tensor {t} changed in round-trip"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sparse_encode_bit_identical_to_dense_f32_and_f64() {
+    forall::<SparseSaeCase>(PropConfig { cases: 200, ..Default::default() }, |case| {
+        let plan = CompactPlan::from_mask(&case.mask);
+        let p = &case.params;
+        let hidden = p.dims.hidden;
+        // f32: the model's native dtype.
+        let x32: Matrix<f32> = case.x.cast();
+        let enc32 = CompactEncoder::<f32>::from_params(p, &plan);
+        let sparse32 = enc32.encode(&x32);
+        let mut dense32 = Matrix::zeros(0, 0);
+        linalg::encode_batch_dense_into(&x32, &p.tensors[0], &p.tensors[1], hidden, &mut dense32);
+        for (a, b) in sparse32.as_slice().iter().zip(dense32.as_slice().iter()) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("f32 sparse {a} != dense {b}"));
+            }
+        }
+        // f64: widened weights (exact), f64 inputs.
+        let enc64 = CompactEncoder::<f64>::from_params(p, &plan);
+        let w1_64: Vec<f64> = p.tensors[0].iter().map(|&v| v as f64).collect();
+        let b1_64: Vec<f64> = p.tensors[1].iter().map(|&v| v as f64).collect();
+        let sparse64 = enc64.encode(&case.x);
+        let mut dense64 = Matrix::zeros(0, 0);
+        linalg::encode_batch_dense_into(&case.x, &w1_64, &b1_64, hidden, &mut dense64);
+        for (a, b) in sparse64.as_slice().iter().zip(dense64.as_slice().iter()) {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!("f64 sparse {a} != dense {b}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_mask_consistency_with_alive_features() {
+    forall::<SparseSaeCase>(PropConfig { cases: 200, ..Default::default() }, |case| {
+        let plan = CompactPlan::from_mask(&case.mask);
+        if plan.mask() != case.mask {
+            return Err("plan.mask() != source mask".into());
+        }
+        // He-init rows are non-zero, so after masking the alive count is
+        // exactly the mask's support.
+        if plan.alive() != case.params.alive_features() {
+            return Err(format!(
+                "plan alive {} != params alive_features {}",
+                plan.alive(),
+                case.params.alive_features()
+            ));
+        }
+        let compact = compact_params(&case.params, &plan);
+        if compact.alive_features() != plan.alive() {
+            return Err("compacted model lost alive features".into());
+        }
+        for (c, &f) in plan.alive_indices().iter().enumerate() {
+            if plan.compact_of(f) != Some(c) || plan.original_of(c) != f {
+                return Err(format!("index maps disagree at compact {c} / original {f}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Deterministic sweep of sparsity levels (incl. both extremes) for both
+/// dtypes — the fixed-grid complement of the property tests.
+#[test]
+fn sparse_encode_matches_dense_at_every_sparsity_level() {
+    let (features, hidden, batch) = (40usize, 7usize, 5usize);
+    for pct in [0usize, 25, 50, 90, 100] {
+        let mut rng = Xoshiro256pp::seed_from_u64(4242 + pct as u64);
+        let mut p =
+            SaeParams::init(SaeDims { features, hidden, classes: 2 }, &mut rng);
+        let n_dead = features * pct / 100;
+        let mask: Vec<f32> =
+            (0..features).map(|f| if f < n_dead { 0.0 } else { 1.0 }).collect();
+        p.apply_feature_mask(&mask);
+        let plan = CompactPlan::from_mask(&mask);
+        assert_eq!(plan.alive(), features - n_dead, "{pct}%");
+
+        let x64 = Matrix::<f64>::randn(features, batch, &mut rng);
+        let x32: Matrix<f32> = x64.cast();
+        let enc32 = CompactEncoder::<f32>::from_params(&p, &plan);
+        let sparse = enc32.encode(&x32);
+        let mut dense = Matrix::zeros(0, 0);
+        linalg::encode_batch_dense_into(
+            &x32,
+            &p.tensors[0],
+            &p.tensors[1],
+            hidden,
+            &mut dense,
+        );
+        assert_bits_eq(sparse.as_slice(), dense.as_slice(), &format!("f32 {pct}%"));
+        // 100%: output is exactly the bias for every sample
+        if pct == 100 {
+            for j in 0..batch {
+                assert_bits_eq(sparse.col(j), &p.tensors[1], "100% = bias");
+            }
+        }
+    }
+}
+
+/// The full pipeline the `sparsify` CLI runs: project → plan from
+/// thresholds → compact → sparse encode ≡ dense encode bitwise.
+#[test]
+fn projected_model_compacts_and_encodes_bit_identically() {
+    let (features, hidden) = (96usize, 11usize);
+    let mut rng = Xoshiro256pp::seed_from_u64(9001);
+    let mut p = SaeParams::init(SaeDims { features, hidden, classes: 2 }, &mut rng);
+    let mut ws = bilevel_sparse::kernels::Workspace::new();
+    // Radius far below the init norm ⇒ the projection kills many columns.
+    bilevel_l1inf_inplace_cols(&mut p.tensors[0], hidden, 0.5f32, L1Algorithm::Condat, &mut ws);
+    let plan = CompactPlan::from_thresholds(ws.thresholds(), 0.0);
+    assert!(plan.alive() < features, "projection should prune columns");
+    assert!((plan.sparsity_percent() - 100.0 * (features - plan.alive()) as f64
+        / features as f64)
+        .abs()
+        < 1e-12);
+
+    let x = Matrix::<f32>::randn(features, 6, &mut rng);
+    let enc = CompactEncoder::<f32>::from_params(&p, &plan);
+    let sparse = enc.encode(&x);
+    let mut dense = Matrix::zeros(0, 0);
+    linalg::encode_batch_dense_into(&x, &p.tensors[0], &p.tensors[1], hidden, &mut dense);
+    assert_bits_eq(sparse.as_slice(), dense.as_slice(), "projected model encode");
+
+    // The compacted model re-expanded: bitwise on alive rows; pruned rows
+    // are numerically zero (the projection may leave -0.0 there, the
+    // decompaction writes +0.0 — equal as numbers, not always as bits).
+    let back = decompact_params(&compact_params(&p, &plan), &plan);
+    for f in 0..features {
+        let (a, b) = (
+            &back.tensors[0][f * hidden..(f + 1) * hidden],
+            &p.tensors[0][f * hidden..(f + 1) * hidden],
+        );
+        if plan.is_alive(f) {
+            assert_bits_eq(a, b, &format!("projected w1 row {f} round-trip"));
+        } else {
+            assert!(a.iter().all(|&v| v == 0.0), "decompacted dead row {f} not zero");
+            assert!(b.iter().all(|&v| v == 0.0), "projected dead row {f} not zero");
+        }
+    }
+}
+
+#[test]
+fn serve_sparse_encode_end_to_end_matches_library() {
+    let cfg = ServeConfig {
+        shards: 2,
+        workers_per_shard: 1,
+        queue_capacity: 32,
+        max_batch: 4,
+        min_fill: 1,
+        max_wait_micros: 100,
+        cache_capacity: 8,
+    };
+    let engine = Engine::start(&cfg).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(515);
+    let mut p = SaeParams::init(SaeDims { features: 20, hidden: 6, classes: 2 }, &mut rng);
+    let mask: Vec<f32> = (0..20).map(|f| if f % 3 == 0 { 0.0 } else { 1.0 }).collect();
+    p.apply_feature_mask(&mask);
+    let plan = CompactPlan::from_mask(&mask);
+    let enc64 = CompactEncoder::<f64>::from_params(&p, &plan);
+    let enc32 = CompactEncoder::<f32>::from_params(&p, &plan);
+    let m64 = engine.register_encoder_f64(enc64.clone());
+    let m32 = engine.register_encoder_f32(enc32.clone());
+    assert_eq!(engine.encoder_count(), 2);
+
+    for i in 0..6u64 {
+        let x = Matrix::<f64>::randn(20, 3, &mut Xoshiro256pp::seed_from_u64(600 + i));
+        let resp = engine.submit_encode_wait(m64, Payload::F64(x.clone())).unwrap();
+        assert_eq!(resp.kind, JobKind::SparseEncode { model: m64 });
+        let Payload::F64(h) = &resp.payload else { panic!("dtype changed") };
+        assert_bits_eq(h.as_slice(), enc64.encode(&x).as_slice(), "served f64 encode");
+
+        let x32: Matrix<f32> = x.cast();
+        let resp = engine.submit_encode_wait(m32, Payload::F32(x32.clone())).unwrap();
+        let Payload::F32(h) = &resp.payload else { panic!("dtype changed") };
+        assert_bits_eq(h.as_slice(), enc32.encode(&x32).as_slice(), "served f32 encode");
+    }
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed(), 12);
+    assert_eq!(stats.submitted(), 12);
+    // encode traffic never counts against the threshold cache
+    assert_eq!(stats.cache_hits() + stats.cache_misses(), 0);
+}

@@ -52,6 +52,30 @@ fn double_descent_learns_tiny_dataset() {
         out.selected_features.len(),
         out.history.last().unwrap().alive_features
     );
+    // structured-sparse artifacts: plan speaks the mask, the compacted
+    // model drops exactly the pruned features and encodes bit-identically
+    // to the dense final weights.
+    assert_eq!(out.plan.alive_indices(), &out.selected_features[..]);
+    assert_eq!(out.compact.dims.features, out.plan.alive());
+    assert_eq!(out.compact.dims.hidden, out.dims.hidden);
+    let enc = bilevel_sparse::sparse::CompactEncoder::<f32>::from_params(
+        &bilevel_sparse::sparse::decompact_params(&out.compact, &out.plan),
+        &out.plan,
+    );
+    let mut rng = bilevel_sparse::rng::Xoshiro256pp::seed_from_u64(99);
+    let x = bilevel_sparse::tensor::Matrix::<f32>::randn(out.dims.features, 3, &mut rng);
+    let sparse = enc.encode(&x);
+    let mut dense = bilevel_sparse::tensor::Matrix::zeros(0, 0);
+    bilevel_sparse::sparse::linalg::encode_batch_dense_into(
+        &x,
+        &out.w1,
+        &out.compact.tensors[1],
+        out.dims.hidden,
+        &mut dense,
+    );
+    for (a, b) in sparse.as_slice().iter().zip(dense.as_slice().iter()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "trained sparse encode != dense encode");
+    }
 }
 
 #[test]
