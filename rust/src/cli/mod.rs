@@ -94,6 +94,9 @@ COMMANDS:
                --dataset synth64|synth16|hif2|tiny --projection <name> --eta E
                [--backend native|pallas] [--epochs1 N] [--epochs2 N] [--lr F]
                [--alpha F] [--seeds 1,2,3] [--config file.toml]
+               model lifecycle: [--checkpoint-every N] [--checkpoint-dir D]
+               [--resume model.ckpt] [--export model.ckpt] [--export-dense]
+               (a resumed run continues the interrupted trajectory exactly)
   experiment   regenerate a paper table/figure (fig1..fig9, table1..table4,
                sparse, all)
                bilevel experiment fig1 [--quick] [--seeds 1,2,3]
@@ -112,6 +115,18 @@ COMMANDS:
                dense encode bitwise, and time both (no artifacts needed)
                [--features N] [--hidden H] [--batch B] [--eta E]
                [--seed S] [--reps R]
+  export       write a versioned, checksummed model checkpoint
+               --out model.ckpt [--dense] plus either --synthetic
+               [--features N] [--hidden H] [--eta E] [--seed S]
+               (artifact-free: init -> project -> plan -> compact) or the
+               `train` flags for a single-seed trained export
+  import       load + fully validate a checkpoint (checksum, structure)
+               and print its contents; --verify re-derives the compact
+               tensors and exercises both encoder dtypes
+               bilevel import model.ckpt [--verify]
+  inspect      dump a checkpoint's fixed header without reading the
+               payload (format version, dtype, dims, seed, sections)
+               bilevel inspect model.ckpt
   serve        start the projection service engine (sharded workers,
                micro-batching, LRU threshold cache) and validate it with a
                short in-process smoke workload; prints per-shard stats
@@ -120,6 +135,9 @@ COMMANDS:
                [--min-fill N] [--wait-us U] [--cache N] [--clients C]
                [--requests N] [--rows N] [--cols M] [--eta E] [--pool P]
                [--f32-every K] [--mix k1,k2,...] [--seed S]
+               [--model model.ckpt] [--model-dtype f32|f64] loads the
+               checkpoint into the encoder registry and proves one served
+               SparseEncode == the in-memory encoder bit-for-bit
   loadgen      closed-loop load generator against an in-process engine:
                sustains a mixed-kind workload, honours backpressure
                retry-after, reports client latency/throughput + engine-side

@@ -8,5 +8,7 @@
 pub mod schema;
 pub mod toml;
 
-pub use schema::{DatasetKind, ProjectionBackend, RunConfig, ServeConfig, TrainConfig};
+pub use schema::{
+    DatasetKind, PersistConfig, ProjectionBackend, RunConfig, ServeConfig, TrainConfig,
+};
 pub use toml::{parse, TomlDoc, TomlValue};

@@ -166,6 +166,72 @@ impl TrainConfig {
         }
         Ok(())
     }
+
+    /// Stable 64-bit digest over every field that shapes the numerical
+    /// trajectory of a run (floats by bit pattern, enums by name).
+    /// Stamped into checkpoints so resume refuses a drifted
+    /// configuration; the seed is deliberately excluded (it is stored —
+    /// and checked — separately).
+    pub fn digest(&self) -> u64 {
+        let canon = format!(
+            "v1|{}|{}|{}|{}|{:016x}|{}|{}|{:016x}|{:016x}|{}|{:016x}|{}",
+            self.dataset.name(),
+            self.projection.name(),
+            self.backend.name(),
+            self.l1_algorithm.name(),
+            self.eta.to_bits(),
+            self.epochs_phase1,
+            self.epochs_phase2,
+            self.lr.to_bits(),
+            self.alpha.to_bits(),
+            self.project_every,
+            self.test_fraction.to_bits(),
+            self.use_epoch_artifact,
+        );
+        crate::persist::fnv1a64(canon.as_bytes())
+    }
+}
+
+/// Model-lifecycle configuration (`[persist]` TOML section): where the
+/// trainer's rolling checkpoints land and how often they are written.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PersistConfig {
+    /// Write a rolling checkpoint every this many completed epochs
+    /// (0 disables checkpointing).
+    pub checkpoint_every: usize,
+    /// Directory for checkpoint files (created on demand).
+    pub dir: String,
+    /// Include the full dense parameters in exported model checkpoints
+    /// (larger files; enables re-compaction and weight dumps offline).
+    pub export_dense: bool,
+}
+
+impl Default for PersistConfig {
+    fn default() -> Self {
+        Self { checkpoint_every: 0, dir: "checkpoints".into(), export_dense: false }
+    }
+}
+
+impl PersistConfig {
+    /// Build from a parsed TOML doc (`[persist]` section), defaults
+    /// elsewhere.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let cfg = Self {
+            checkpoint_every: doc.usize_or("persist.checkpoint_every", d.checkpoint_every),
+            dir: doc.str_or("persist.dir", &d.dir).to_string(),
+            export_dense: doc.bool_or("persist.export_dense", d.export_dense),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.dir.is_empty() {
+            return Err("persist.dir must not be empty".into());
+        }
+        Ok(())
+    }
 }
 
 /// Configuration of the projection service engine (`serve` subsystem): a
@@ -261,6 +327,7 @@ impl ServeConfig {
 pub struct RunConfig {
     pub train: TrainConfig,
     pub serve: ServeConfig,
+    pub persist: PersistConfig,
     pub artifacts_dir: String,
     pub seeds: Vec<u64>,
 }
@@ -270,6 +337,7 @@ impl Default for RunConfig {
         Self {
             train: TrainConfig::default(),
             serve: ServeConfig::default(),
+            persist: PersistConfig::default(),
             artifacts_dir: "artifacts".into(),
             seeds: vec![42, 43, 44, 45],
         }
@@ -291,6 +359,7 @@ impl RunConfig {
         Ok(Self {
             train: TrainConfig::from_doc(doc)?,
             serve: ServeConfig::from_doc(doc)?,
+            persist: PersistConfig::from_doc(doc)?,
             artifacts_dir: doc.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
             seeds,
         })
@@ -409,6 +478,38 @@ mod tests {
         assert_eq!(cfg.serve.shards, 2);
         assert_eq!(cfg.serve.max_batch, 4);
         assert_eq!(RunConfig::default().serve, ServeConfig::default());
+    }
+
+    #[test]
+    fn persist_section_parses_with_defaults() {
+        let d = PersistConfig::default();
+        assert_eq!(d.checkpoint_every, 0);
+        d.validate().unwrap();
+        let doc = parse("[persist]\ncheckpoint_every = 5\ndir = \"ckpts\"\nexport_dense = true")
+            .unwrap();
+        let cfg = PersistConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.checkpoint_every, 5);
+        assert_eq!(cfg.dir, "ckpts");
+        assert!(cfg.export_dense);
+        let doc = parse("[persist]\ndir = \"\"").unwrap();
+        assert!(PersistConfig::from_doc(&doc).is_err());
+        // RunConfig carries the section
+        let doc = parse("[persist]\ncheckpoint_every = 3").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().persist.checkpoint_every, 3);
+        assert_eq!(RunConfig::default().persist, PersistConfig::default());
+    }
+
+    #[test]
+    fn train_digest_tracks_trajectory_fields_only() {
+        let a = TrainConfig::default();
+        assert_eq!(a.digest(), TrainConfig::default().digest(), "digest must be stable");
+        let b = TrainConfig { eta: a.eta + 0.5, ..a.clone() };
+        assert_ne!(a.digest(), b.digest());
+        let c = TrainConfig { epochs_phase2: a.epochs_phase2 + 1, ..a.clone() };
+        assert_ne!(a.digest(), c.digest());
+        // the seed is checked separately, not part of the digest
+        let d = TrainConfig { seed: a.seed + 1, ..a.clone() };
+        assert_eq!(a.digest(), d.digest());
     }
 
     #[test]

@@ -21,7 +21,7 @@ mod projector;
 mod trainer;
 
 pub use projector::{project_w1, ProjectionOutcome};
-pub use trainer::{EpochStat, SaeTrainer, TrainOutcome};
+pub use trainer::{EpochStat, RunOptions, SaeTrainer, TrainOutcome};
 
 use crate::config::TrainConfig;
 use crate::metrics::mean_std;
@@ -44,10 +44,23 @@ pub fn run_seeds(
     cfg: &TrainConfig,
     seeds: &[u64],
 ) -> anyhow::Result<MultiSeedSummary> {
+    run_seeds_with(runtime, cfg, seeds, |_| Ok(RunOptions::default()))
+}
+
+/// [`run_seeds`] with per-seed lifecycle options (`opts_of(seed)` builds
+/// the [`RunOptions`] — per-seed checkpoint paths, a resume checkpoint,
+/// …). This is the single owner of the per-seed loop and the
+/// `accuracy ± std` aggregation for every train entry point.
+pub fn run_seeds_with(
+    runtime: &Runtime,
+    cfg: &TrainConfig,
+    seeds: &[u64],
+    mut opts_of: impl FnMut(u64) -> anyhow::Result<RunOptions>,
+) -> anyhow::Result<MultiSeedSummary> {
     let trainer = SaeTrainer::new(runtime, cfg.clone())?;
     let mut outcomes = Vec::with_capacity(seeds.len());
     for &seed in seeds {
-        outcomes.push(trainer.run(seed)?);
+        outcomes.push(trainer.run_with(seed, &opts_of(seed)?)?);
     }
     let accs: Vec<f64> = outcomes.iter().map(|o| o.final_accuracy * 100.0).collect();
     let sps: Vec<f64> = outcomes.iter().map(|o| o.sparsity_percent).collect();

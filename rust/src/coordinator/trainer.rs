@@ -1,5 +1,8 @@
-//! The SAE trainer: double-descent training through PJRT artifacts.
+//! The SAE trainer: double-descent training through PJRT artifacts, with
+//! optional rolling checkpoints and deterministic resume (see
+//! [`RunOptions`] and [`crate::persist`]).
 
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
@@ -9,13 +12,14 @@ use crate::data::{hif2_sim, make_classification, Dataset, Hif2Config, MakeClassi
                   StandardScaler};
 use crate::metrics::accuracy_from_logits;
 use crate::model::{SaeDims, SaeParams};
+use crate::persist::{Checkpoint, ModelBundle, TrainStateSnapshot};
 use crate::projection::ProjectionKind;
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::runtime::{to_scalar_f32, to_vec_f32, ArtifactEntry, HostArg, Runtime};
 use crate::sparse::{compact_params, CompactPlan};
 
 /// Per-epoch statistics.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct EpochStat {
     pub phase: u8,
     pub epoch: usize,
@@ -38,6 +42,9 @@ pub struct TrainOutcome {
     pub train_seconds: f64,
     /// Final first-layer weights (for Fig. 9-style dumps).
     pub w1: Vec<f32>,
+    /// The complete final dense model (original feature space) — what
+    /// `bilevel export` persists alongside the compacted one.
+    pub params: SaeParams,
     pub dims: SaeDims,
     /// Support set of the final mask: compact ↔ original feature indices.
     pub plan: CompactPlan,
@@ -45,6 +52,43 @@ pub struct TrainOutcome {
     /// (`compact.dims.features == plan.alive()`) — ready for
     /// [`crate::sparse::CompactEncoder`] / sparse serving.
     pub compact: SaeParams,
+}
+
+impl TrainOutcome {
+    /// Package the outcome as an exportable model checkpoint (plan +
+    /// compacted model, plus the dense parameters when `include_dense`).
+    pub fn to_checkpoint(&self, config_digest: u64, include_dense: bool) -> Checkpoint {
+        Checkpoint {
+            seed: self.seed,
+            config_digest,
+            dims: self.dims,
+            history: self.history.clone(),
+            model: Some(ModelBundle {
+                plan: self.plan.clone(),
+                compact: self.compact.clone(),
+                dense: include_dense.then(|| self.params.clone()),
+            }),
+            train_state: None,
+        }
+    }
+}
+
+/// Lifecycle options for one training run. `Default` is a plain
+/// in-memory run (no checkpoint IO).
+#[derive(Clone, Debug, Default)]
+pub struct RunOptions {
+    /// Write a rolling checkpoint after every this many completed epochs
+    /// (counted across both phases; 0 disables).
+    pub checkpoint_every: usize,
+    /// Rolling checkpoint file (written atomically via tmp + rename;
+    /// after the run it holds the last cadence snapshot — the final
+    /// *model* export is [`TrainOutcome::to_checkpoint`]'s job).
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this checkpoint. The seed, config digest, and dims
+    /// must match the current run; the resumed trajectory is
+    /// **bit-identical** to an uninterrupted one (optimizer state is
+    /// restored exactly and the shuffle RNG is replayed to its position).
+    pub resume_from: Option<Checkpoint>,
 }
 
 /// Double-descent SAE trainer bound to one artifact preset.
@@ -76,6 +120,24 @@ impl<'rt> SaeTrainer<'rt> {
         self.dims
     }
 
+    /// Digest binding a *resumable* run's full identity: the
+    /// [`TrainConfig::digest`] mixed with the artifact batch shape.
+    /// `batch` / `epoch_batches` / `eval_batch` live in the manifest, not
+    /// the config, yet they change how the shuffled order is sliced — so
+    /// resuming against regenerated artifacts with a different batch
+    /// size must be refused, not allowed to silently diverge from the
+    /// bit-identical-trajectory guarantee.
+    pub fn run_digest(&self) -> u64 {
+        let canon = format!(
+            "{:016x}|{}|{}|{}",
+            self.cfg.digest(),
+            self.entry.batch,
+            self.entry.epoch_batches,
+            self.entry.eval_batch
+        );
+        crate::persist::fnv1a64(canon.as_bytes())
+    }
+
     /// Generate the dataset for this config (seeded).
     pub fn make_dataset(&self, seed: u64) -> Dataset {
         let mut rng = Xoshiro256pp::seed_from_u64(seed);
@@ -91,8 +153,22 @@ impl<'rt> SaeTrainer<'rt> {
 
     /// Full double-descent run for one seed.
     pub fn run(&self, seed: u64) -> Result<TrainOutcome> {
+        self.run_with(seed, &RunOptions::default())
+    }
+
+    /// Full double-descent run with lifecycle options: rolling
+    /// checkpoints every `opts.checkpoint_every` epochs and/or resume
+    /// from a prior checkpoint. A resumed run reproduces the
+    /// uninterrupted trajectory exactly: the dataset, split, scaler, and
+    /// initial weights are re-derived from the seed, the optimizer state
+    /// (params/m/v/step) is restored bit-exactly, and the shuffle RNG is
+    /// replayed past the completed epochs.
+    pub fn run_with(&self, seed: u64, opts: &RunOptions) -> Result<TrainOutcome> {
         let t0 = Instant::now();
         let cfg = &self.cfg;
+        // Rolling checkpoints are stamped with the run digest (config ⊕
+        // artifact batch shape), which is what resume validates against.
+        let config_digest = self.run_digest();
         let ds = self.make_dataset(seed);
         if ds.n_features != self.dims.features {
             return Err(anyhow!(
@@ -118,52 +194,94 @@ impl<'rt> SaeTrainer<'rt> {
             (cfg.epochs_phase1, cfg.epochs_phase2)
         };
 
-        // ---------------- phase 1: projected training ----------------
-        let mut state = TrainState::new(params0.clone());
         let mask_all = vec![1.0f32; self.dims.features];
         let mut shuffle_rng = Xoshiro256pp::seed_from_u64(seed ^ 0xEF0C);
-        for epoch in 0..p1 {
-            let (loss, tacc) =
-                self.train_one_epoch(&mut state, &split.train, &mask_all, &mut shuffle_rng)?;
-            if !no_projection {
-                crate::coordinator::project_w1(
+        let mut state = TrainState::new(params0.clone());
+        // Which phase/epoch the run (re)starts from, and the phase-2 mask
+        // once derived.
+        let mut resume_phase = 1u8;
+        let mut resume_done = 0usize;
+        let mut mask = mask_all.clone();
+
+        if let Some(ck) = &opts.resume_from {
+            let snap = self.validate_resume(ck, seed, config_digest, p1, p2)?;
+            state = TrainState::from_snapshot(snap);
+            history = ck.history.clone();
+            resume_phase = snap.phase;
+            resume_done = snap.epochs_done;
+            if snap.phase == 2 {
+                mask = snap.mask.clone();
+            }
+            // Each completed epoch consumed exactly one shuffle of the
+            // train order (both epoch modes); replay them so the next
+            // epoch draws the batches an uninterrupted run would.
+            let consumed =
+                if snap.phase == 1 { snap.epochs_done } else { p1 + snap.epochs_done };
+            let mut order: Vec<usize> = (0..split.train.n_samples).collect();
+            for _ in 0..consumed {
+                shuffle_rng.shuffle(&mut order);
+            }
+        }
+        // Epochs completed since the (original) run start — drives the
+        // checkpoint cadence across resumes.
+        let mut epochs_total =
+            if resume_phase == 1 { resume_done } else { p1 + resume_done };
+
+        // ---------------- phase 1: projected training ----------------
+        if resume_phase == 1 {
+            for epoch in resume_done..p1 {
+                let (loss, tacc) =
+                    self.train_one_epoch(&mut state, &split.train, &mask_all, &mut shuffle_rng)?;
+                if !no_projection {
+                    crate::coordinator::project_w1(
+                        self.runtime,
+                        cfg.dataset.preset(),
+                        cfg,
+                        &mut state.params,
+                    )?;
+                }
+                let test_acc = self.evaluate(&state.params, &split.test)?;
+                history.push(EpochStat {
+                    phase: 1,
+                    epoch,
+                    train_loss: loss,
+                    train_accuracy: tacc,
+                    test_accuracy: test_acc,
+                    alive_features: state.params.alive_features(),
+                });
+                epochs_total += 1;
+                self.maybe_checkpoint(
+                    opts, seed, config_digest, epochs_total, &history,
+                    &state, 1, epoch + 1, &mask_all,
+                )?;
+            }
+
+            // ------------- mask derivation (end of phase 1) -----------
+            mask = if no_projection {
+                mask_all.clone()
+            } else {
+                // Final projection defines the mask.
+                let out = crate::coordinator::project_w1(
                     self.runtime,
                     cfg.dataset.preset(),
                     cfg,
                     &mut state.params,
                 )?;
+                crate::model::mask_from_thresholds(&out.thresholds, 0.0)
+            };
+
+            if p2 > 0 {
+                // Lottery-ticket rewind: initial weights, masked features.
+                let mut rewound = params0.clone();
+                rewound.apply_feature_mask(&mask);
+                state = TrainState::new(rewound);
             }
-            let test_acc = self.evaluate(&state.params, &split.test)?;
-            history.push(EpochStat {
-                phase: 1,
-                epoch,
-                train_loss: loss,
-                train_accuracy: tacc,
-                test_accuracy: test_acc,
-                alive_features: state.params.alive_features(),
-            });
         }
 
-        // ---------------- mask + phase 2: rewound retrain -------------
-        let mask = if no_projection {
-            mask_all.clone()
-        } else {
-            // Final projection defines the mask.
-            let out = crate::coordinator::project_w1(
-                self.runtime,
-                cfg.dataset.preset(),
-                cfg,
-                &mut state.params,
-            )?;
-            crate::model::mask_from_thresholds(&out.thresholds, 0.0)
-        };
-
+        // ---------------- phase 2: rewound retrain --------------------
         if p2 > 0 {
-            // Lottery-ticket rewind: initial weights, masked features.
-            let mut rewound = params0.clone();
-            rewound.apply_feature_mask(&mask);
-            state = TrainState::new(rewound);
-            for epoch in 0..p2 {
+            let start = if resume_phase == 2 { resume_done } else { 0 };
+            for epoch in start..p2 {
                 let (loss, tacc) =
                     self.train_one_epoch(&mut state, &split.train, &mask, &mut shuffle_rng)?;
                 let test_acc = self.evaluate(&state.params, &split.test)?;
@@ -175,6 +293,11 @@ impl<'rt> SaeTrainer<'rt> {
                     test_accuracy: test_acc,
                     alive_features: state.params.alive_features(),
                 });
+                epochs_total += 1;
+                self.maybe_checkpoint(
+                    opts, seed, config_digest, epochs_total, &history,
+                    &state, 2, epoch + 1, &mask,
+                )?;
             }
         }
 
@@ -202,10 +325,84 @@ impl<'rt> SaeTrainer<'rt> {
             history,
             train_seconds: t0.elapsed().as_secs_f64(),
             w1: state.params.tensors[0].clone(),
+            params: state.params.clone(),
             dims: self.dims,
             plan,
             compact,
         })
+    }
+
+    /// Check a resume checkpoint against this run's identity and return
+    /// its train-state snapshot.
+    fn validate_resume<'ck>(
+        &self,
+        ck: &'ck Checkpoint,
+        seed: u64,
+        config_digest: u64,
+        p1: usize,
+        p2: usize,
+    ) -> Result<&'ck TrainStateSnapshot> {
+        if ck.seed != seed {
+            return Err(anyhow!("resume: checkpoint seed {} != requested seed {seed}", ck.seed));
+        }
+        if ck.config_digest != config_digest {
+            return Err(anyhow!(
+                "resume: checkpoint run digest {:016x} != current {config_digest:016x} \
+                 (training config or artifact batch shape changed since the checkpoint)",
+                ck.config_digest
+            ));
+        }
+        if ck.dims != self.dims {
+            return Err(anyhow!(
+                "resume: checkpoint dims {:?} != artifact dims {:?}",
+                ck.dims,
+                self.dims
+            ));
+        }
+        let snap = ck.train_state.as_ref().ok_or_else(|| {
+            anyhow!("resume: checkpoint carries no train state (completed-run model export?)")
+        })?;
+        let limit = if snap.phase == 1 { p1 } else { p2 };
+        if snap.phase == 2 && p2 == 0 {
+            return Err(anyhow!("resume: checkpoint is in phase 2 but config has no phase-2 epochs"));
+        }
+        if snap.epochs_done > limit {
+            return Err(anyhow!(
+                "resume: {} epochs done exceeds phase {} budget {limit}",
+                snap.epochs_done,
+                snap.phase
+            ));
+        }
+        Ok(snap)
+    }
+
+    /// Write the rolling checkpoint when the cadence says so.
+    #[allow(clippy::too_many_arguments)]
+    fn maybe_checkpoint(
+        &self,
+        opts: &RunOptions,
+        seed: u64,
+        config_digest: u64,
+        epochs_total: usize,
+        history: &[EpochStat],
+        state: &TrainState,
+        phase: u8,
+        epochs_done: usize,
+        mask: &[f32],
+    ) -> Result<()> {
+        let Some(path) = &opts.checkpoint_path else { return Ok(()) };
+        if opts.checkpoint_every == 0 || epochs_total % opts.checkpoint_every != 0 {
+            return Ok(());
+        }
+        let ck = Checkpoint {
+            seed,
+            config_digest,
+            dims: self.dims,
+            history: history.to_vec(),
+            model: None,
+            train_state: Some(state.snapshot(phase, epochs_done, mask)),
+        };
+        save_checkpoint(&ck, path)
     }
 
     /// One epoch through the train artifacts. Returns (mean loss, accuracy).
@@ -275,6 +472,12 @@ impl<'rt> SaeTrainer<'rt> {
     }
 
     /// Epoch as individual `train_step` dispatches (fallback / ablation).
+    ///
+    /// Covers **every** sample: the final partial batch is padded by
+    /// recycling shuffled samples from the top of the order (the same
+    /// rule [`Self::train_epoch_scan`] uses to keep artifact shapes
+    /// static), and the reported loss/accuracy means are weighted by each
+    /// batch's real (non-recycled) rows.
     fn train_epoch_steps<R: Rng + ?Sized>(
         &self,
         state: &mut TrainState,
@@ -286,12 +489,13 @@ impl<'rt> SaeTrainer<'rt> {
         let (b, f, k) = (e.batch, e.features, e.classes);
         let mut order: Vec<usize> = (0..train.n_samples).collect();
         rng.shuffle(&mut order);
-        let n_batches = (train.n_samples / b).max(1);
+        let n_batches = step_batch_count(train.n_samples, b);
 
         let mut x = vec![0.0f32; b * f];
         let mut y = vec![0.0f32; b * k];
-        let mut loss_sum = 0.0;
-        let mut correct = 0.0;
+        let mut loss_wsum = 0.0;
+        let mut acc_wsum = 0.0;
+        let mut weight = 0.0;
         let name = format!("{}_train_step", e.preset);
         for bi in 0..n_batches {
             x.fill(0.0);
@@ -321,10 +525,15 @@ impl<'rt> SaeTrainer<'rt> {
             }
             state.absorb(&outputs[..24])?;
             state.step += 1.0;
-            loss_sum += to_scalar_f32(&outputs[24])? as f64;
-            correct += to_scalar_f32(&outputs[25])? as f64;
+            // The artifact reports batch-level aggregates over all `b`
+            // rows (recycled ones included), so a padded tail batch
+            // contributes its per-row mean scaled by real rows only.
+            let real = step_batch_real_rows(train.n_samples, b, bi) as f64;
+            loss_wsum += to_scalar_f32(&outputs[24])? as f64 * real;
+            acc_wsum += to_scalar_f32(&outputs[25])? as f64 / b as f64 * real;
+            weight += real;
         }
-        Ok((loss_sum / n_batches as f64, correct / (n_batches * b) as f64))
+        Ok((loss_wsum / weight, acc_wsum / weight))
     }
 
     /// Test-set accuracy through the eval artifact (padded batches).
@@ -351,6 +560,33 @@ impl<'rt> SaeTrainer<'rt> {
     }
 }
 
+/// Write a checkpoint, creating its parent directory on demand.
+fn save_checkpoint(ck: &Checkpoint, path: &Path) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
+        }
+    }
+    ck.save(path)
+        .map_err(|e| anyhow!("writing checkpoint {}: {e}", path.display()))
+}
+
+/// `train_step` dispatches needed to show every sample once per epoch:
+/// `ceil(n_samples / batch)`, never 0. The old `n_samples / batch`
+/// silently dropped up to `batch - 1` tail samples every epoch, making
+/// step-mode and scan-mode epochs see different data.
+pub(crate) fn step_batch_count(n_samples: usize, batch: usize) -> usize {
+    (n_samples.div_ceil(batch)).max(1)
+}
+
+/// Real (non-recycled) rows of step batch `bi`: `batch` for full batches,
+/// the remainder for the final partial one. Recycled padding rows repeat
+/// shuffled samples and are excluded from the loss/accuracy weighting.
+pub(crate) fn step_batch_real_rows(n_samples: usize, batch: usize, bi: usize) -> usize {
+    n_samples.saturating_sub(bi * batch).min(batch)
+}
+
 /// Mutable optimizer state.
 struct TrainState {
     params: SaeParams,
@@ -364,6 +600,26 @@ impl TrainState {
         let m = params.zeros_like();
         let v = params.zeros_like();
         Self { params, m, v, step: 0.0 }
+    }
+
+    /// Restore from a checkpoint snapshot (exact: same tensors, same
+    /// Adam step).
+    fn from_snapshot(s: &TrainStateSnapshot) -> Self {
+        Self { params: s.params.clone(), m: s.m.clone(), v: s.v.clone(), step: s.step }
+    }
+
+    /// Freeze for a checkpoint (taken after an epoch fully completes,
+    /// including the in-loop projection).
+    fn snapshot(&self, phase: u8, epochs_done: usize, mask: &[f32]) -> TrainStateSnapshot {
+        TrainStateSnapshot {
+            phase,
+            epochs_done,
+            step: self.step,
+            mask: mask.to_vec(),
+            params: self.params.clone(),
+            m: self.m.clone(),
+            v: self.v.clone(),
+        }
     }
 
     /// Absorb 24 output literals (params, m, v).
@@ -385,5 +641,56 @@ fn push_params<'a>(
 ) {
     for (tensor, shape) in p.tensors.iter().zip(shapes.iter()) {
         inputs.push(HostArg::tensor(tensor, shape));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn step_epoch_covers_the_tail() {
+        // Regression: `n_samples / b` dropped up to b-1 tail samples per
+        // epoch; `n = 10, b = 4` must now dispatch 3 batches, not 2.
+        assert_eq!(step_batch_count(10, 4), 3);
+        assert_eq!(step_batch_count(8, 4), 2); // divisible: unchanged
+        assert_eq!(step_batch_count(3, 4), 1); // tiny set: one padded batch
+        assert_eq!(step_batch_count(1, 4), 1);
+    }
+
+    #[test]
+    fn real_rows_partition_the_epoch() {
+        for (n, b) in [(10usize, 4usize), (7, 3), (16, 4), (1, 8), (9, 2)] {
+            let nb = step_batch_count(n, b);
+            let total: usize = (0..nb).map(|bi| step_batch_real_rows(n, b, bi)).sum();
+            assert_eq!(total, n, "weights must sum to n_samples for n={n} b={b}");
+            for bi in 0..nb.saturating_sub(1) {
+                assert_eq!(step_batch_real_rows(n, b, bi), b, "only the tail is partial");
+            }
+            assert!(step_batch_real_rows(n, b, nb - 1) >= 1);
+        }
+    }
+
+    #[test]
+    fn recycle_rule_fills_real_rows_with_distinct_samples() {
+        // Mirror the fill loop: real rows address distinct positions of
+        // the shuffled order (full epoch coverage), padding rows recycle
+        // from the top — the exact rule `train_epoch_scan` uses.
+        let (n, b) = (10usize, 4usize);
+        let order: Vec<usize> = (0..n).rev().collect(); // any permutation
+        let mut seen = vec![0usize; n];
+        for bi in 0..step_batch_count(n, b) {
+            let real = step_batch_real_rows(n, b, bi);
+            for r in 0..b {
+                let i = order[(bi * b + r) % order.len()];
+                if r < real {
+                    seen[i] += 1;
+                } else {
+                    // padding recycles an already-seen sample
+                    assert_eq!((bi * b + r) % n, bi * b + r - n);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every sample exactly once: {seen:?}");
     }
 }

@@ -15,9 +15,12 @@
 //!   service engine (bounded queues with backpressure, an LRU threshold
 //!   cache, per-shard telemetry) that turns the one-shot library calls
 //!   into a sustained request/response service (`bilevel serve` /
-//!   `bilevel loadgen`), and the [`sparse`] subsystem — structured-sparse
+//!   `bilevel loadgen`), the [`sparse`] subsystem — structured-sparse
 //!   inference (compact plans, feature-dropping model compaction, and
-//!   column-support encode kernels whose cost scales with alive features).
+//!   column-support encode kernels whose cost scales with alive features),
+//!   and the [`persist`] subsystem — versioned, checksummed model
+//!   checkpoints (train-once / serve-forever: export, import, inspect,
+//!   trainer resume, and serve-side model loading + hot-swap).
 //! * **L2 (`python/compile/model.py`)** — the supervised autoencoder
 //!   forward/backward + Adam, lowered once to HLO text.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (bi-level
@@ -45,6 +48,7 @@ pub mod kernels;
 pub mod metrics;
 pub mod model;
 pub mod norms;
+pub mod persist;
 pub mod projection;
 pub mod proptest;
 pub mod report;
@@ -59,6 +63,7 @@ pub mod tensor;
 pub mod prelude {
     pub use crate::kernels::Workspace;
     pub use crate::norms::{l11_norm, l12_norm, l1inf_norm, linf1_norm, frobenius_norm};
+    pub use crate::persist::{Checkpoint, ModelBundle, PersistError};
     pub use crate::projection::bilevel::{
         bilevel_l11, bilevel_l12, bilevel_l1inf, bilevel_l1inf_into,
     };

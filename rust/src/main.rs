@@ -4,18 +4,21 @@
 use std::process::ExitCode;
 use std::time::Instant;
 
+use std::path::{Path, PathBuf};
+
 use anyhow::{anyhow, Result};
 use bilevel_sparse::cli::{Args, USAGE};
 use bilevel_sparse::config::{
     DatasetKind, ProjectionBackend, RunConfig, ServeConfig, TomlDoc, TrainConfig,
 };
-use bilevel_sparse::coordinator::run_seeds;
+use bilevel_sparse::coordinator::{run_seeds, run_seeds_with, RunOptions, SaeTrainer};
 use bilevel_sparse::experiments::{self, ExpContext};
 use bilevel_sparse::norms::{column_sparsity, l1inf_norm};
+use bilevel_sparse::persist::{read_header, Checkpoint};
 use bilevel_sparse::projection::{l1::L1Algorithm, ProjectionKind};
 use bilevel_sparse::rng::Xoshiro256pp;
 use bilevel_sparse::runtime::Runtime;
-use bilevel_sparse::serve::{run_loadgen, Engine, LoadgenConfig};
+use bilevel_sparse::serve::{run_loadgen, Dtype, Engine, LoadgenConfig, Payload};
 use bilevel_sparse::tensor::Matrix;
 
 fn main() -> ExitCode {
@@ -33,6 +36,9 @@ fn main() -> ExitCode {
         "artifacts" => cmd_artifacts(&args),
         "bench" => cmd_bench(&args),
         "sparsify" => cmd_sparsify(&args),
+        "export" => cmd_export(&args),
+        "import" => cmd_import(&args),
+        "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "help" | "" => {
@@ -83,8 +89,9 @@ fn cmd_project(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
-    // Start from a config file when given, CLI flags override.
+/// Shared `train` / `export` config assembly: a `--config` file seeds the
+/// defaults, individual flags override.
+fn train_configs(args: &Args) -> Result<(TrainConfig, RunConfig)> {
     let mut run_cfg = match args.opt("config") {
         Some(path) => RunConfig::from_file(path).map_err(|e| anyhow!(e))?,
         None => RunConfig::default(),
@@ -106,7 +113,23 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.validate().map_err(|e| anyhow!(e))?;
     run_cfg.seeds = args.u64_list_or("seeds", &run_cfg.seeds).map_err(|e| anyhow!(e))?;
+    run_cfg.train = cfg.clone();
+    Ok((cfg, run_cfg))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let (cfg, run_cfg) = train_configs(args)?;
     let dir = args.str_or("artifacts-dir", &run_cfg.artifacts_dir);
+
+    // Model lifecycle flags (config `[persist]` supplies the defaults).
+    let ck_every = args
+        .usize_or("checkpoint-every", run_cfg.persist.checkpoint_every)
+        .map_err(|e| anyhow!(e))?;
+    let ck_dir = args.str_or("checkpoint-dir", &run_cfg.persist.dir);
+    let export = args.opt("export").map(PathBuf::from);
+    let resume = args.opt("resume").map(PathBuf::from);
+    let export_dense = args.flag("export-dense") || run_cfg.persist.export_dense;
+    let lifecycle = ck_every > 0 || export.is_some() || resume.is_some();
 
     println!(
         "training SAE: dataset={} projection={} backend={} eta={} epochs={}+{} seeds={:?}",
@@ -120,7 +143,48 @@ fn cmd_train(args: &Args) -> Result<()> {
     );
     let rt = Runtime::open(&dir)?;
     println!("PJRT platform: {}", rt.platform());
-    let summary = run_seeds(&rt, &cfg, &run_cfg.seeds)?;
+    let summary = if lifecycle {
+        if (export.is_some() || resume.is_some()) && run_cfg.seeds.len() != 1 {
+            return Err(anyhow!("--export / --resume require exactly one seed (use --seeds S)"));
+        }
+        run_seeds_with(&rt, &cfg, &run_cfg.seeds, |seed| {
+            let mut opts = RunOptions { checkpoint_every: ck_every, ..RunOptions::default() };
+            if ck_every > 0 {
+                let path = Path::new(&ck_dir)
+                    .join(format!("{}_seed{}.ckpt", cfg.dataset.name(), seed));
+                println!(
+                    "  seed {seed}: rolling checkpoint every {ck_every} epochs -> {}",
+                    path.display()
+                );
+                opts.checkpoint_path = Some(path);
+            }
+            if let Some(p) = &resume {
+                let ck = Checkpoint::load(p).map_err(|e| anyhow!("{}: {e}", p.display()))?;
+                match &ck.train_state {
+                    Some(ts) => println!(
+                        "  seed {seed}: resuming from {} (phase {}, {} epochs done)",
+                        p.display(),
+                        ts.phase,
+                        ts.epochs_done
+                    ),
+                    None => println!("  seed {seed}: resuming from {}", p.display()),
+                }
+                opts.resume_from = Some(ck);
+            }
+            Ok(opts)
+        })?
+    } else {
+        run_seeds(&rt, &cfg, &run_cfg.seeds)?
+    };
+    if let Some(p) = &export {
+        // exactly one seed, enforced above
+        let outcome = &summary.outcomes[0];
+        outcome
+            .to_checkpoint(cfg.digest(), export_dense)
+            .save(p)
+            .map_err(|e| anyhow!("{}: {e}", p.display()))?;
+        println!("exported model checkpoint -> {}", p.display());
+    }
     for o in &summary.outcomes {
         println!(
             "  seed {:>4}: accuracy {:.2} % (best {:.2} %), sparsity {:.1} %, {} features, {:.1}s",
@@ -208,9 +272,66 @@ fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig)> {
     Ok((serve, load))
 }
 
+/// Parse `--model <path>` (+ `--model-dtype f32|f64`, default f32) for the
+/// engine subcommands.
+fn model_arg(args: &Args) -> Result<Option<(PathBuf, Dtype)>> {
+    let Some(p) = args.opt("model") else { return Ok(None) };
+    let dtype = match args.str_or("model-dtype", "f32").as_str() {
+        "f32" => Dtype::F32,
+        "f64" => Dtype::F64,
+        other => return Err(anyhow!("--model-dtype: expected f32 or f64, got {other:?}")),
+    };
+    Ok(Some((PathBuf::from(p), dtype)))
+}
+
+/// Load a checkpoint into a running engine and prove the serve path: one
+/// `SparseEncode` request against the loaded model must match the
+/// checkpoint's in-memory encoder byte for byte. The file is read and
+/// validated once; the registered encoder and the reference encoder come
+/// from the same parsed bundle.
+fn load_and_verify_model(engine: &Engine, path: &Path, dtype: Dtype) -> Result<u64> {
+    let ck = Checkpoint::load(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let mb = ck.model.ok_or_else(|| anyhow!("{}: no model bundle", path.display()))?;
+    let mut rng = Xoshiro256pp::seed_from_u64(0x5EED);
+    let (id, rows, cols, identical) = match dtype {
+        Dtype::F64 => {
+            let reference = mb.encoder::<f64>();
+            let id = engine.register_encoder_f64(reference.clone());
+            let x = Matrix::<f64>::randn(mb.plan.features(), 8, &mut rng);
+            let resp = engine
+                .submit_encode_wait(id, Payload::F64(x.clone()))
+                .map_err(|e| anyhow!("verify encode: {e}"))?;
+            let Payload::F64(h) = &resp.payload else { return Err(anyhow!("dtype changed")) };
+            let direct = reference.encode(&x);
+            (id, h.rows(), h.cols(), h.max_abs_diff(&direct) == 0.0)
+        }
+        Dtype::F32 => {
+            let reference = mb.encoder::<f32>();
+            let id = engine.register_encoder_f32(reference.clone());
+            let x: Matrix<f32> = Matrix::<f64>::randn(mb.plan.features(), 8, &mut rng).cast();
+            let resp = engine
+                .submit_encode_wait(id, Payload::F32(x.clone()))
+                .map_err(|e| anyhow!("verify encode: {e}"))?;
+            let Payload::F32(h) = &resp.payload else { return Err(anyhow!("dtype changed")) };
+            let direct = reference.encode(&x);
+            (id, h.rows(), h.cols(), h.max_abs_diff(&direct) == 0.0)
+        }
+    };
+    if !identical {
+        return Err(anyhow!("loaded model diverged from the checkpoint's in-memory encoder"));
+    }
+    println!(
+        "model   : {} -> id {id} ({} dtype, {rows}x{cols} activations, serve == in-memory bit-identical)",
+        path.display(),
+        dtype.name(),
+    );
+    Ok(id)
+}
+
 fn run_engine_workload(
     serve_cfg: &ServeConfig,
     load_cfg: &LoadgenConfig,
+    model: Option<(PathBuf, Dtype)>,
 ) -> Result<()> {
     let mix_names: Vec<&str> = load_cfg.mix.iter().map(|k| k.name()).collect();
     println!(
@@ -234,6 +355,9 @@ fn run_engine_workload(
         mix_names.join(", "),
     );
     let engine = Engine::start(serve_cfg).map_err(|e| anyhow!(e))?;
+    if let Some((path, dtype)) = &model {
+        load_and_verify_model(&engine, path, *dtype)?;
+    }
     let report = run_loadgen(&engine, load_cfg);
     println!(
         "client  : {} completed, {} failed, {} backpressure retries",
@@ -266,13 +390,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         load_cfg.clients = 2;
     }
     println!("bilevel serve — projection service engine self-test");
-    run_engine_workload(&serve_cfg, &load_cfg)
+    run_engine_workload(&serve_cfg, &load_cfg, model_arg(args)?)
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
     let (serve_cfg, load_cfg) = serve_configs(args)?;
     println!("bilevel loadgen — closed-loop engine benchmark");
-    run_engine_workload(&serve_cfg, &load_cfg)
+    run_engine_workload(&serve_cfg, &load_cfg, model_arg(args)?)
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {
@@ -409,6 +533,202 @@ fn cmd_sparsify(args: &Args) -> Result<()> {
     if !bitwise {
         return Err(anyhow!("sparse encode diverged bitwise from dense encode"));
     }
+    Ok(())
+}
+
+/// Digest stamped into synthetic (artifact-free) exports, so resume /
+/// import tooling can still detect configuration drift.
+fn synthetic_digest(features: usize, hidden: usize, eta: f64) -> u64 {
+    let canon = format!("synthetic|{features}|{hidden}|{:016x}", eta.to_bits());
+    bilevel_sparse::persist::fnv1a64(canon.as_bytes())
+}
+
+/// `bilevel export` — persist a model checkpoint. `--synthetic` runs the
+/// artifact-free sparsify pipeline (init → BP¹,∞ project → plan →
+/// compact) and exports the result; without it, a full single-seed
+/// training run (needs `make artifacts`) is trained and exported.
+fn cmd_export(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.str_or("out", "model.ckpt"));
+    let dense = args.flag("dense") || args.flag("export-dense");
+    if args.flag("synthetic") {
+        use bilevel_sparse::kernels::Workspace;
+        use bilevel_sparse::model::{SaeDims, SaeParams};
+        use bilevel_sparse::persist::ModelBundle;
+        use bilevel_sparse::projection::bilevel::bilevel_l1inf_inplace_cols;
+        use bilevel_sparse::sparse::{compact_params, CompactPlan};
+
+        let features = args.usize_or("features", 256).map_err(|e| anyhow!(e))?;
+        let hidden = args.usize_or("hidden", 32).map_err(|e| anyhow!(e))?;
+        let eta = args.f64_or("eta", 1.0).map_err(|e| anyhow!(e))?;
+        let seed = args.usize_or("seed", 42).map_err(|e| anyhow!(e))? as u64;
+
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let dims = SaeDims { features, hidden, classes: 2 };
+        let mut params = SaeParams::init(dims, &mut rng);
+        let mut ws = Workspace::new();
+        bilevel_l1inf_inplace_cols(
+            &mut params.tensors[0],
+            hidden,
+            eta as f32,
+            L1Algorithm::Condat,
+            &mut ws,
+        );
+        let plan = CompactPlan::from_thresholds(ws.thresholds(), 0.0);
+        let compact = compact_params(&params, &plan);
+        let ck = Checkpoint {
+            seed,
+            config_digest: synthetic_digest(features, hidden, eta),
+            dims,
+            history: Vec::new(),
+            model: Some(ModelBundle {
+                plan: plan.clone(),
+                compact,
+                dense: dense.then(|| params.clone()),
+            }),
+            train_state: None,
+        };
+        ck.save(&out).map_err(|e| anyhow!("{}: {e}", out.display()))?;
+        println!(
+            "exported synthetic model: {} / {features} features alive ({:.1} % sparsity, eta {eta}) -> {}",
+            plan.alive(),
+            plan.sparsity_percent(),
+            out.display()
+        );
+        Ok(())
+    } else {
+        let (cfg, run_cfg) = train_configs(args)?;
+        // honour the config's [persist] export_dense like cmd_train does
+        let dense = dense || run_cfg.persist.export_dense;
+        if run_cfg.seeds.len() != 1 {
+            return Err(anyhow!("export trains exactly one seed (use --seeds S)"));
+        }
+        let seed = run_cfg.seeds[0];
+        let dir = args.str_or("artifacts-dir", &run_cfg.artifacts_dir);
+        let rt = Runtime::open(&dir)?;
+        let trainer = SaeTrainer::new(&rt, cfg.clone())?;
+        println!(
+            "export: training dataset={} eta={} seed={seed}, then writing {}",
+            cfg.dataset.name(),
+            cfg.eta,
+            out.display()
+        );
+        let outcome = trainer.run(seed)?;
+        outcome
+            .to_checkpoint(cfg.digest(), dense)
+            .save(&out)
+            .map_err(|e| anyhow!("{}: {e}", out.display()))?;
+        println!(
+            "exported trained model: accuracy {:.2} %, {} / {} features alive -> {}",
+            outcome.final_accuracy * 100.0,
+            outcome.plan.alive(),
+            outcome.dims.features,
+            out.display()
+        );
+        Ok(())
+    }
+}
+
+/// `bilevel import <path>` — load and fully validate a checkpoint
+/// (checksum + structure) and print its contents. `--verify` additionally
+/// re-derives the compact tensors from the dense model (when present) and
+/// exercises both encoder dtypes on a seeded batch.
+fn cmd_import(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: bilevel import <model.ckpt> [--verify]"))?;
+    let path = Path::new(path);
+    let ck = Checkpoint::load(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    println!("checkpoint : {} (checksum ok)", path.display());
+    println!("seed       : {}", ck.seed);
+    println!("config     : digest {:016x}", ck.config_digest);
+    println!(
+        "dims       : {} features x {} hidden x {} classes",
+        ck.dims.features, ck.dims.hidden, ck.dims.classes
+    );
+    println!("history    : {} epochs", ck.history.len());
+    match &ck.model {
+        Some(mb) => println!(
+            "model      : {} / {} features alive ({:.1} % sparsity), dense params {}",
+            mb.plan.alive(),
+            mb.plan.features(),
+            mb.plan.sparsity_percent(),
+            if mb.dense.is_some() { "included" } else { "omitted" }
+        ),
+        None => println!("model      : none (mid-train state checkpoint)"),
+    }
+    match &ck.train_state {
+        Some(ts) => println!(
+            "train state: phase {}, {} epochs done, step {}",
+            ts.phase, ts.epochs_done, ts.step
+        ),
+        None => println!("train state: none"),
+    }
+    if args.flag("verify") {
+        let mb = ck
+            .model
+            .as_ref()
+            .ok_or_else(|| anyhow!("--verify: checkpoint has no model bundle"))?;
+        if let Some(dense) = &mb.dense {
+            let rec = bilevel_sparse::sparse::compact_params(dense, &mb.plan);
+            let ok = rec.tensors.iter().zip(mb.compact.tensors.iter()).all(|(a, b)| {
+                a.len() == b.len()
+                    && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+            });
+            if !ok {
+                return Err(anyhow!(
+                    "verify FAILED: re-compacted dense model differs from stored compact tensors"
+                ));
+            }
+            println!("verify     : dense -> compact re-derivation bit-identical");
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(ck.seed);
+        let x = Matrix::<f64>::randn(ck.dims.features, 4, &mut rng);
+        let enc64 = mb.encoder::<f64>();
+        let h64 = enc64.encode(&x);
+        let h32 = mb.encoder::<f32>().encode(&x.cast::<f32>());
+        println!(
+            "verify     : f64 encode {}x{}, f32 encode {}x{}, fingerprint {:016x}",
+            h64.rows(),
+            h64.cols(),
+            h32.rows(),
+            h32.cols(),
+            enc64.fingerprint()
+        );
+    }
+    Ok(())
+}
+
+/// `bilevel inspect <path>` — dump the fixed 72-byte header without
+/// reading the payload (no checksum pass; `bilevel import` does that).
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("usage: bilevel inspect <model.ckpt>"))?;
+    let path = Path::new(path);
+    let h = read_header(path).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+    let file_len = std::fs::metadata(path)?.len();
+    println!("checkpoint : {}", path.display());
+    println!("format     : version {}, tensor dtype {}", h.version, h.dtype_name());
+    println!(
+        "dims       : {} features x {} hidden x {} classes",
+        h.dims.features, h.dims.hidden, h.dims.classes
+    );
+    println!("seed       : {}", h.seed);
+    println!("config     : digest {:016x}", h.config_digest);
+    println!(
+        "sections   : model={} dense={} train-state={}",
+        h.has_model(),
+        h.has_dense(),
+        h.has_train_state()
+    );
+    println!(
+        "size       : {} bytes declared, {file_len} on disk{}",
+        h.expected_file_len(),
+        if h.expected_file_len() == file_len { "" } else { "  (MISMATCH — corrupt/truncated)" }
+    );
+    println!("note       : header-only dump; `bilevel import` verifies the checksum");
     Ok(())
 }
 

@@ -1,0 +1,696 @@
+//! The checkpoint object model and its (de)serialization.
+//!
+//! See the [`super`] module docs for the wire layout. Everything here is
+//! deliberately boring: fixed field order, length-prefixed tensors,
+//! validation before allocation, and bit-pattern float IO so round-trips
+//! are exact for every value including `-0.0` and NaN payloads.
+
+use std::path::Path;
+
+use crate::coordinator::EpochStat;
+use crate::model::{SaeDims, SaeParams};
+use crate::scalar::Scalar;
+use crate::sparse::{CompactEncoder, CompactPlan};
+
+use super::wire::{Reader, Writer};
+use super::{hash128_bytes, PersistError};
+
+/// First 8 bytes of every checkpoint file.
+pub const MAGIC: [u8; 8] = *b"BLVLCKPT";
+
+/// Current wire format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Tensor storage dtype tag: the model's native f32.
+const DTYPE_F32: u32 = 0;
+
+/// Fixed header length (magic through payload_len).
+const HEADER_LEN: usize = 72;
+
+/// Sanity cap on any declared dimension / index-list length. The
+/// checksum gates random corruption, but a deliberately re-signed file
+/// (the footer hash is not cryptographic) must still fail with
+/// [`PersistError::Malformed`] rather than attempt a huge allocation —
+/// plan/mask buffers scale with `features` even when no tensor data
+/// backs them.
+const MAX_DIM: usize = 1 << 28;
+
+/// Footer length (128-bit checksum as two u64 words).
+const FOOTER_LEN: usize = 16;
+
+const FLAG_MODEL: u32 = 1 << 0;
+const FLAG_DENSE: u32 = 1 << 1;
+const FLAG_TRAIN_STATE: u32 = 1 << 2;
+
+/// The self-contained fixed header — everything `bilevel inspect` prints
+/// without reading the payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CheckpointHeader {
+    pub version: u32,
+    /// Tensor dtype tag (0 = f32).
+    pub dtype: u32,
+    /// Original (dense) model dimensions.
+    pub dims: SaeDims,
+    pub seed: u64,
+    /// Digest of the training configuration that produced the model.
+    pub config_digest: u64,
+    flags: u32,
+    /// Bytes between the header and the checksum footer.
+    pub payload_len: u64,
+}
+
+impl CheckpointHeader {
+    pub fn has_model(&self) -> bool {
+        self.flags & FLAG_MODEL != 0
+    }
+
+    pub fn has_dense(&self) -> bool {
+        self.flags & FLAG_DENSE != 0
+    }
+
+    pub fn has_train_state(&self) -> bool {
+        self.flags & FLAG_TRAIN_STATE != 0
+    }
+
+    /// Total file size this header declares (saturating: an absurd
+    /// `payload_len` from a corrupt header yields `u64::MAX`, which every
+    /// caller turns into a Truncated/size-mismatch report — never an
+    /// arithmetic panic).
+    pub fn expected_file_len(&self) -> u64 {
+        (HEADER_LEN as u64)
+            .saturating_add(self.payload_len)
+            .saturating_add(FOOTER_LEN as u64)
+    }
+
+    pub fn dtype_name(&self) -> &'static str {
+        match self.dtype {
+            DTYPE_F32 => "f32",
+            _ => "unknown",
+        }
+    }
+
+    /// Parse (and validate magic/version/dtype of) the first
+    /// [`HEADER_LEN`] bytes.
+    pub fn parse(bytes: &[u8]) -> Result<Self, PersistError> {
+        if bytes.len() < HEADER_LEN {
+            return Err(PersistError::Truncated { need: HEADER_LEN, have: bytes.len() });
+        }
+        if bytes[..8] != MAGIC {
+            return Err(PersistError::BadMagic);
+        }
+        let mut r = Reader::new(&bytes[8..HEADER_LEN]);
+        let version = r.u32()?;
+        if version != FORMAT_VERSION {
+            return Err(PersistError::UnsupportedVersion(version));
+        }
+        let dtype = r.u32()?;
+        if dtype != DTYPE_F32 {
+            return Err(PersistError::Malformed(format!("unknown tensor dtype tag {dtype}")));
+        }
+        let features = checked_dim(r.u64()?, "features")?;
+        let hidden = checked_dim(r.u64()?, "hidden")?;
+        let classes = checked_dim(r.u64()?, "classes")?;
+        let seed = r.u64()?;
+        let config_digest = r.u64()?;
+        let flags = r.u32()?;
+        let _reserved = r.u32()?;
+        let payload_len = r.u64()?;
+        Ok(Self {
+            version,
+            dtype,
+            dims: SaeDims { features, hidden, classes },
+            seed,
+            config_digest,
+            flags,
+            payload_len,
+        })
+    }
+}
+
+/// The servable half of a checkpoint: the frozen support set plus the
+/// compacted model (and optionally the full dense parameters it was cut
+/// from).
+#[derive(Clone, Debug)]
+pub struct ModelBundle {
+    pub plan: CompactPlan,
+    /// Compacted model: `dims.features == plan.alive()`.
+    pub compact: SaeParams,
+    /// Full dense final model (original feature space), when exported
+    /// with it.
+    pub dense: Option<SaeParams>,
+}
+
+impl ModelBundle {
+    /// Build the inference encoder straight from the compacted tensors —
+    /// bit-identical to `CompactEncoder::from_params` on the dense model
+    /// the bundle was compacted from.
+    pub fn encoder<T: Scalar>(&self) -> CompactEncoder<T> {
+        CompactEncoder::from_compact(&self.compact, &self.plan)
+    }
+}
+
+/// Mid-run optimizer state: everything the trainer needs to continue a
+/// run deterministically (the data/shuffle RNGs are reconstructed from
+/// the seed; see `SaeTrainer::run_with`).
+#[derive(Clone, Debug)]
+pub struct TrainStateSnapshot {
+    /// Double-descent phase the snapshot was taken in (1 or 2).
+    pub phase: u8,
+    /// Epochs already completed *within that phase*.
+    pub epochs_done: usize,
+    /// Adam step counter.
+    pub step: f32,
+    /// The feature mask in force (all-ones during phase 1; the derived
+    /// lottery-ticket mask during phase 2).
+    pub mask: Vec<f32>,
+    pub params: SaeParams,
+    /// Adam first moment.
+    pub m: SaeParams,
+    /// Adam second moment.
+    pub v: SaeParams,
+}
+
+/// One on-disk model lifecycle record.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub seed: u64,
+    pub config_digest: u64,
+    /// Original (dense) model dimensions.
+    pub dims: SaeDims,
+    /// Per-epoch training history up to the moment of the snapshot.
+    pub history: Vec<EpochStat>,
+    pub model: Option<ModelBundle>,
+    pub train_state: Option<TrainStateSnapshot>,
+}
+
+impl Checkpoint {
+    /// Serialize to the versioned wire format (header + payload +
+    /// checksum footer).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut p = Writer::new();
+        write_history(&mut p, &self.history);
+        let mut flags = 0u32;
+        if let Some(model) = &self.model {
+            flags |= FLAG_MODEL;
+            write_plan(&mut p, &model.plan);
+            write_params(&mut p, &model.compact);
+            if let Some(dense) = &model.dense {
+                flags |= FLAG_DENSE;
+                write_params(&mut p, dense);
+            }
+        }
+        if let Some(ts) = &self.train_state {
+            flags |= FLAG_TRAIN_STATE;
+            p.u32(ts.phase as u32);
+            p.u64(ts.epochs_done as u64);
+            p.f32(ts.step);
+            p.f32_slice(&ts.mask);
+            write_params(&mut p, &ts.params);
+            write_params(&mut p, &ts.m);
+            write_params(&mut p, &ts.v);
+        }
+        let payload = p.into_bytes();
+
+        let mut h = Writer::new();
+        // header
+        let mut out = MAGIC.to_vec();
+        h.u32(FORMAT_VERSION);
+        h.u32(DTYPE_F32);
+        h.u64(self.dims.features as u64);
+        h.u64(self.dims.hidden as u64);
+        h.u64(self.dims.classes as u64);
+        h.u64(self.seed);
+        h.u64(self.config_digest);
+        h.u32(flags);
+        h.u32(0); // reserved
+        h.u64(payload.len() as u64);
+        out.extend_from_slice(&h.into_bytes());
+        debug_assert_eq!(out.len(), HEADER_LEN);
+        out.extend_from_slice(&payload);
+        // footer
+        let sum = hash128_bytes(&out);
+        let mut f = Writer::new();
+        f.u64(sum as u64);
+        f.u64((sum >> 64) as u64);
+        out.extend_from_slice(&f.into_bytes());
+        out
+    }
+
+    /// Parse and fully validate (checksum, structure, dims) a checkpoint.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self, PersistError> {
+        let header = CheckpointHeader::parse(bytes)?;
+        let expected = header.expected_file_len() as usize;
+        if bytes.len() < expected {
+            return Err(PersistError::Truncated { need: expected, have: bytes.len() });
+        }
+        if bytes.len() > expected {
+            return Err(PersistError::Malformed(format!(
+                "{} trailing bytes after declared footer",
+                bytes.len() - expected
+            )));
+        }
+        let body_end = expected - FOOTER_LEN;
+        let mut fr = Reader::new(&bytes[body_end..]);
+        let stored = (fr.u64()? as u128) | ((fr.u64()? as u128) << 64);
+        if hash128_bytes(&bytes[..body_end]) != stored {
+            return Err(PersistError::ChecksumMismatch);
+        }
+
+        let dims = header.dims;
+        let mut r = Reader::new(&bytes[HEADER_LEN..body_end]);
+        let history = read_history(&mut r)?;
+        let model = if header.has_model() {
+            let plan = read_plan(&mut r, dims.features)?;
+            let compact_dims =
+                SaeDims { features: plan.alive(), hidden: dims.hidden, classes: dims.classes };
+            let compact = read_params(&mut r, compact_dims, "compact model")?;
+            let dense = if header.has_dense() {
+                Some(read_params(&mut r, dims, "dense model")?)
+            } else {
+                None
+            };
+            Some(ModelBundle { plan, compact, dense })
+        } else {
+            None
+        };
+        let train_state = if header.has_train_state() {
+            let phase = r.u32()?;
+            if !(1..=2).contains(&phase) {
+                return Err(PersistError::Malformed(format!("train-state phase {phase}")));
+            }
+            let epochs_done = r.u64()? as usize;
+            let step = r.f32()?;
+            let mask = r.f32_vec()?;
+            if mask.len() != dims.features {
+                return Err(PersistError::Malformed(format!(
+                    "train-state mask length {} != features {}",
+                    mask.len(),
+                    dims.features
+                )));
+            }
+            let params = read_params(&mut r, dims, "train-state params")?;
+            let m = read_params(&mut r, dims, "train-state m")?;
+            let v = read_params(&mut r, dims, "train-state v")?;
+            Some(TrainStateSnapshot { phase: phase as u8, epochs_done, step, mask, params, m, v })
+        } else {
+            None
+        };
+        if r.remaining() != 0 {
+            return Err(PersistError::Malformed(format!(
+                "{} undeclared payload bytes",
+                r.remaining()
+            )));
+        }
+        Ok(Self {
+            seed: header.seed,
+            config_digest: header.config_digest,
+            dims,
+            history,
+            model,
+            train_state,
+        })
+    }
+
+    /// Atomic, durable write: serialize to a dot-tmp sibling, fsync it,
+    /// rename into place, then fsync the parent directory — readers never
+    /// observe a partial checkpoint, a power cut cannot leave an
+    /// empty/partial file under the final name (the data blocks are on
+    /// disk before the name flips), and once `save` returns the rename
+    /// itself is durable, so a reported snapshot is never lost. A failed
+    /// write cleans up its tmp file.
+    pub fn save(&self, path: &Path) -> Result<(), PersistError> {
+        use std::io::Write;
+        let bytes = self.to_bytes();
+        let name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| PersistError::Malformed("checkpoint path has no file name".into()))?;
+        let tmp = path.with_file_name(format!(".{name}.tmp"));
+        let write_and_rename = || -> Result<(), PersistError> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            drop(f);
+            std::fs::rename(&tmp, path)?;
+            Ok(())
+        };
+        if let Err(e) = write_and_rename() {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(e);
+        }
+        // Durability of the rename: sync the directory entry (best-effort
+        // on filesystems/platforms where directories cannot be synced).
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                if let Ok(d) = std::fs::File::open(parent) {
+                    let _ = d.sync_all();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read and fully validate a checkpoint file.
+    pub fn load(path: &Path) -> Result<Self, PersistError> {
+        Self::from_bytes(&std::fs::read(path)?)
+    }
+}
+
+/// Read only the fixed header of a checkpoint file — the `bilevel
+/// inspect` path; cost is one 72-byte read however large the model is.
+pub fn read_header(path: &Path) -> Result<CheckpointHeader, PersistError> {
+    use std::io::Read;
+    let mut f = std::fs::File::open(path)?;
+    let mut buf = [0u8; HEADER_LEN];
+    let mut read = 0;
+    while read < HEADER_LEN {
+        let n = f.read(&mut buf[read..])?;
+        if n == 0 {
+            return Err(PersistError::Truncated { need: HEADER_LEN, have: read });
+        }
+        read += n;
+    }
+    CheckpointHeader::parse(&buf)
+}
+
+/// Reject file-declared dimensions beyond the sanity cap before anything
+/// allocates proportionally to them.
+fn checked_dim(v: u64, what: &str) -> Result<usize, PersistError> {
+    if v > MAX_DIM as u64 {
+        return Err(PersistError::Malformed(format!("{what} {v} exceeds the {MAX_DIM} cap")));
+    }
+    Ok(v as usize)
+}
+
+fn write_params(w: &mut Writer, p: &SaeParams) {
+    w.u64(p.dims.features as u64);
+    w.u64(p.dims.hidden as u64);
+    w.u64(p.dims.classes as u64);
+    for t in &p.tensors {
+        w.f32_slice(t);
+    }
+}
+
+fn read_params(
+    r: &mut Reader<'_>,
+    expected: SaeDims,
+    what: &str,
+) -> Result<SaeParams, PersistError> {
+    let features = r.u64()? as usize;
+    let hidden = r.u64()? as usize;
+    let classes = r.u64()? as usize;
+    let dims = SaeDims { features, hidden, classes };
+    if dims != expected {
+        return Err(PersistError::Malformed(format!(
+            "{what}: stored dims {dims:?} != expected {expected:?}"
+        )));
+    }
+    let shapes = dims.shapes();
+    let mut tensors = Vec::with_capacity(8);
+    for shape in shapes.iter() {
+        let t = r.f32_vec()?;
+        let want: usize = shape.iter().product();
+        if t.len() != want {
+            return Err(PersistError::Malformed(format!(
+                "{what}: tensor length {} != shape {shape:?}",
+                t.len()
+            )));
+        }
+        tensors.push(t);
+    }
+    Ok(SaeParams { dims, tensors })
+}
+
+fn write_plan(w: &mut Writer, plan: &CompactPlan) {
+    w.u64(plan.features() as u64);
+    w.u64_slice(&plan.alive_indices().iter().map(|&f| f as u64).collect::<Vec<_>>());
+}
+
+/// Read a plan, insisting its feature count matches the (already
+/// cap-checked) header dims *before* any feature-proportional allocation.
+fn read_plan(r: &mut Reader<'_>, expected_features: usize) -> Result<CompactPlan, PersistError> {
+    let features = r.u64()? as usize;
+    if features != expected_features {
+        return Err(PersistError::Malformed(format!(
+            "plan features {features} != header features {expected_features}"
+        )));
+    }
+    let alive_u64 = r.u64_vec()?;
+    let alive: Vec<usize> = alive_u64.iter().map(|&f| f as usize).collect();
+    // Validate before `from_alive` so malformed files error instead of
+    // panicking.
+    for w in alive.windows(2) {
+        if w[0] >= w[1] {
+            return Err(PersistError::Malformed(
+                "plan alive indices not strictly increasing".into(),
+            ));
+        }
+    }
+    if let Some(&last) = alive.last() {
+        if last >= features {
+            return Err(PersistError::Malformed(format!(
+                "plan alive index {last} out of range {features}"
+            )));
+        }
+    }
+    Ok(CompactPlan::from_alive(features, alive))
+}
+
+fn write_history(w: &mut Writer, history: &[EpochStat]) {
+    w.u64(history.len() as u64);
+    for h in history {
+        w.u32(h.phase as u32);
+        w.u64(h.epoch as u64);
+        w.f64(h.train_loss);
+        w.f64(h.train_accuracy);
+        w.f64(h.test_accuracy);
+        w.u64(h.alive_features as u64);
+    }
+}
+
+fn read_history(r: &mut Reader<'_>) -> Result<Vec<EpochStat>, PersistError> {
+    // 44 bytes per entry: u32 + u64 + 3×f64 + u64.
+    let n = r.checked_len(44)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(EpochStat {
+            phase: r.u32()? as u8,
+            epoch: r.u64()? as usize,
+            train_loss: r.f64()?,
+            train_accuracy: r.f64()?,
+            test_accuracy: r.f64()?,
+            alive_features: r.u64()? as usize,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::sparse::compact_params;
+
+    fn sample_checkpoint(seed: u64, with_dense: bool, with_state: bool) -> Checkpoint {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let dims = SaeDims { features: 14, hidden: 5, classes: 3 };
+        let mut params = SaeParams::init(dims, &mut rng);
+        let mut mask = vec![1.0f32; 14];
+        for f in [0usize, 3, 7, 8, 13] {
+            mask[f] = 0.0;
+        }
+        params.apply_feature_mask(&mask);
+        let plan = CompactPlan::from_mask(&mask);
+        let compact = compact_params(&params, &plan);
+        let history = vec![
+            EpochStat {
+                phase: 1,
+                epoch: 0,
+                train_loss: 0.75,
+                train_accuracy: 0.5,
+                test_accuracy: 0.25,
+                alive_features: 14,
+            },
+            EpochStat {
+                phase: 2,
+                epoch: 1,
+                train_loss: -0.0,
+                train_accuracy: 1.0,
+                test_accuracy: 0.875,
+                alive_features: 9,
+            },
+        ];
+        let train_state = with_state.then(|| TrainStateSnapshot {
+            phase: 2,
+            epochs_done: 1,
+            step: 17.0,
+            mask: mask.clone(),
+            params: params.clone(),
+            m: params.zeros_like(),
+            v: params.zeros_like(),
+        });
+        Checkpoint {
+            seed,
+            config_digest: 0xABCD_EF01_2345_6789,
+            dims,
+            history,
+            model: Some(ModelBundle {
+                plan,
+                compact,
+                dense: with_dense.then(|| params.clone()),
+            }),
+            train_state,
+        }
+    }
+
+    fn assert_params_bit_eq(a: &SaeParams, b: &SaeParams) {
+        assert_eq!(a.dims, b.dims);
+        for (ta, tb) in a.tensors.iter().zip(b.tensors.iter()) {
+            assert_eq!(ta.len(), tb.len());
+            for (x, y) in ta.iter().zip(tb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact() {
+        let ck = sample_checkpoint(11, true, true);
+        let bytes = ck.to_bytes();
+        let back = Checkpoint::from_bytes(&bytes).unwrap();
+        assert_eq!(back.seed, ck.seed);
+        assert_eq!(back.config_digest, ck.config_digest);
+        assert_eq!(back.dims, ck.dims);
+        assert_eq!(back.history, ck.history);
+        let (m0, m1) = (ck.model.as_ref().unwrap(), back.model.as_ref().unwrap());
+        assert_eq!(m0.plan, m1.plan);
+        assert_params_bit_eq(&m0.compact, &m1.compact);
+        assert_params_bit_eq(m0.dense.as_ref().unwrap(), m1.dense.as_ref().unwrap());
+        let (s0, s1) =
+            (ck.train_state.as_ref().unwrap(), back.train_state.as_ref().unwrap());
+        assert_eq!((s0.phase, s0.epochs_done), (s1.phase, s1.epochs_done));
+        assert_eq!(s0.step.to_bits(), s1.step.to_bits());
+        assert_eq!(s0.mask, s1.mask);
+        assert_params_bit_eq(&s0.params, &s1.params);
+        assert_params_bit_eq(&s0.m, &s1.m);
+        assert_params_bit_eq(&s0.v, &s1.v);
+        // serialization is deterministic
+        assert_eq!(bytes, back.to_bytes());
+    }
+
+    #[test]
+    fn optional_sections_roundtrip() {
+        for (dense, state) in [(false, false), (true, false), (false, true)] {
+            let ck = sample_checkpoint(12, dense, state);
+            let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            assert_eq!(back.model.as_ref().unwrap().dense.is_some(), dense);
+            assert_eq!(back.train_state.is_some(), state);
+        }
+        // model-less (pure train-state) checkpoint
+        let mut ck = sample_checkpoint(13, false, true);
+        ck.model = None;
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert!(back.model.is_none() && back.train_state.is_some());
+    }
+
+    #[test]
+    fn header_parses_without_payload() {
+        let ck = sample_checkpoint(14, true, false);
+        let bytes = ck.to_bytes();
+        let header = CheckpointHeader::parse(&bytes[..HEADER_LEN]).unwrap();
+        assert_eq!(header.version, FORMAT_VERSION);
+        assert_eq!(header.dims, ck.dims);
+        assert_eq!(header.seed, 14);
+        assert_eq!(header.config_digest, ck.config_digest);
+        assert!(header.has_model() && header.has_dense() && !header.has_train_state());
+        assert_eq!(header.expected_file_len() as usize, bytes.len());
+        assert_eq!(header.dtype_name(), "f32");
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let ck = sample_checkpoint(15, false, false);
+        let mut bytes = ck.to_bytes();
+        let mut wrong_magic = bytes.clone();
+        wrong_magic[0] ^= 0xFF;
+        assert!(matches!(Checkpoint::from_bytes(&wrong_magic), Err(PersistError::BadMagic)));
+        // bump the version field (offset 8)
+        bytes[8] = 99;
+        assert!(matches!(
+            Checkpoint::from_bytes(&bytes),
+            Err(PersistError::UnsupportedVersion(99))
+        ));
+    }
+
+    #[test]
+    fn corruption_and_truncation_detected() {
+        let ck = sample_checkpoint(16, true, true);
+        let bytes = ck.to_bytes();
+        // flip one payload bit
+        let mut corrupt = bytes.clone();
+        corrupt[HEADER_LEN + 9] ^= 0x01;
+        assert!(matches!(
+            Checkpoint::from_bytes(&corrupt),
+            Err(PersistError::ChecksumMismatch)
+        ));
+        // flip one footer bit
+        let mut bad_footer = bytes.clone();
+        let last = bad_footer.len() - 1;
+        bad_footer[last] ^= 0x80;
+        assert!(matches!(
+            Checkpoint::from_bytes(&bad_footer),
+            Err(PersistError::ChecksumMismatch)
+        ));
+        // cut the file short
+        assert!(matches!(
+            Checkpoint::from_bytes(&bytes[..bytes.len() - 17]),
+            Err(PersistError::Truncated { .. })
+        ));
+        // trailing junk
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(matches!(Checkpoint::from_bytes(&long), Err(PersistError::Malformed(_))));
+    }
+
+    #[test]
+    fn dims_tampering_is_malformed() {
+        // Change the header's feature count and re-sign the checksum: the
+        // structural validation (stored params dims vs header dims) must
+        // still reject it.
+        let ck = sample_checkpoint(17, false, false);
+        let mut bytes = ck.to_bytes();
+        bytes[16] = bytes[16].wrapping_add(1); // features LE low byte
+        let body_end = bytes.len() - FOOTER_LEN;
+        let sum = hash128_bytes(&bytes[..body_end]);
+        bytes[body_end..body_end + 8].copy_from_slice(&(sum as u64).to_le_bytes());
+        bytes[body_end + 8..].copy_from_slice(&((sum >> 64) as u64).to_le_bytes());
+        assert!(matches!(Checkpoint::from_bytes(&bytes), Err(PersistError::Malformed(_))));
+    }
+
+    #[test]
+    fn save_load_and_read_header() {
+        let dir = std::env::temp_dir().join(format!("bilevel-ckpt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("model.ckpt");
+        let ck = sample_checkpoint(18, true, false);
+        ck.save(&path).unwrap();
+        // no tmp file left behind
+        assert!(!dir.join(".model.ckpt.tmp").exists());
+        let header = read_header(&path).unwrap();
+        assert_eq!(header.dims, ck.dims);
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.history, ck.history);
+        // overwrite is atomic-rename too
+        let ck2 = sample_checkpoint(19, false, false);
+        ck2.save(&path).unwrap();
+        assert_eq!(Checkpoint::load(&path).unwrap().seed, 19);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        let p = Path::new("/nonexistent/dir/model.ckpt");
+        assert!(matches!(Checkpoint::load(p), Err(PersistError::Io(_))));
+        assert!(matches!(read_header(p), Err(PersistError::Io(_))));
+    }
+}

@@ -1,0 +1,155 @@
+//! # `persist` — versioned, checksummed model checkpoints
+//!
+//! The ROADMAP's train-once / serve-forever step: a trained model (the
+//! [`crate::sparse::CompactPlan`] + compacted [`crate::model::SaeParams`]
+//! of a [`crate::coordinator::TrainOutcome`], and optionally the full
+//! dense parameters and the mid-run optimizer state) survives the process
+//! as one self-describing binary file, so the serve engine can load and
+//! hot-swap models across restarts and fleet deploys.
+//!
+//! ## Wire format (version 1, all little-endian)
+//!
+//! | offset | field |
+//! |--------|-------|
+//! | 0      | magic `b"BLVLCKPT"` (8 bytes) |
+//! | 8      | format version (u32) |
+//! | 12     | tensor dtype tag (u32; 0 = f32) |
+//! | 16     | dims: features, hidden, classes (3 × u64) |
+//! | 40     | seed (u64) |
+//! | 48     | training-config digest (u64) |
+//! | 56     | section flags (u32) + reserved (u32) |
+//! | 64     | payload length (u64) |
+//! | 72     | payload: history, model bundle, train state (per flags) |
+//! | 72 + payload | checksum: 128-bit integrity hash (2 × u64) |
+//!
+//! The 72-byte header is self-contained — `bilevel inspect` dumps it
+//! without touching the payload. Tensor payloads are raw `f32` bit
+//! patterns (length-prefixed, validated against the header dims before
+//! any allocation), so export → import round-trips are **bit-exact**; the
+//! footer is the same two-lane 128-bit hash the serve threshold cache
+//! keys matrices with ([`crate::serve::cache::hash128_words`]), computed
+//! over every byte that precedes it.
+//!
+//! ## Lifecycle wiring
+//!
+//! * the trainer writes rolling checkpoints every
+//!   `[persist] checkpoint_every` epochs and resumes from one
+//!   deterministically ([`crate::coordinator::SaeTrainer::run_with`]);
+//! * the serve engine loads a checkpoint into its encoder registry
+//!   (`Engine::load_model`) and hot-swaps a model id under live traffic
+//!   (`Engine::swap_model`) — in-flight batches finish on the old `Arc`;
+//! * the CLI speaks `bilevel export` / `bilevel import` /
+//!   `bilevel inspect` / `bilevel serve --model` (see EXPERIMENTS.md
+//!   §Model lifecycle).
+
+mod checkpoint;
+mod wire;
+
+pub use checkpoint::{
+    read_header, Checkpoint, CheckpointHeader, ModelBundle, TrainStateSnapshot, FORMAT_VERSION,
+    MAGIC,
+};
+
+use std::fmt;
+
+/// Why a checkpoint could not be read (or written).
+#[derive(Debug)]
+pub enum PersistError {
+    /// Filesystem failure (open/read/write/rename).
+    Io(std::io::Error),
+    /// The file does not start with the checkpoint magic.
+    BadMagic,
+    /// The file's format version is newer (or older) than this build
+    /// understands.
+    UnsupportedVersion(u32),
+    /// The file ends before a declared field/section does.
+    Truncated { need: usize, have: usize },
+    /// The integrity footer does not match the file contents.
+    ChecksumMismatch,
+    /// Structurally invalid contents (dims/section mismatch, bad plan,
+    /// unknown dtype tag) — the checksum passed but the data lies.
+    Malformed(String),
+}
+
+impl fmt::Display for PersistError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Io(e) => write!(f, "checkpoint io: {e}"),
+            Self::BadMagic => write!(f, "not a bilevel checkpoint (bad magic)"),
+            Self::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint format version {v} (this build reads {})",
+                    FORMAT_VERSION)
+            }
+            Self::Truncated { need, have } => {
+                write!(f, "checkpoint truncated: need {need} bytes, have {have}")
+            }
+            Self::ChecksumMismatch => write!(f, "checkpoint checksum mismatch (corrupted file)"),
+            Self::Malformed(msg) => write!(f, "malformed checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for PersistError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for PersistError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// 64-bit FNV-1a over bytes — the digest primitive for configuration /
+/// identity stamps ([`crate::config::TrainConfig::digest`], the CLI's
+/// synthetic-export digest). The integrity *footer* uses the stronger
+/// [`hash128_bytes`]; this one exists so every identity stamp shares one
+/// implementation instead of hand-rolled copies that could drift.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// 128-bit integrity hash over a byte stream: the byte length followed by
+/// the zero-padded 8-byte little-endian words, fed through the serve
+/// cache's two-lane word hash. Shared by the checkpoint footer and its
+/// tests.
+pub fn hash128_bytes(bytes: &[u8]) -> u128 {
+    crate::serve::cache::hash128_words(std::iter::once(bytes.len() as u64).chain(
+        bytes.chunks(8).map(|c| {
+            let mut w = [0u8; 8];
+            w[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(w)
+        }),
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash128_is_length_and_content_sensitive() {
+        assert_ne!(hash128_bytes(b""), hash128_bytes(b"\0"));
+        assert_ne!(hash128_bytes(b"\0"), hash128_bytes(b"\0\0"));
+        assert_ne!(hash128_bytes(b"abcdefgh"), hash128_bytes(b"abcdefgi"));
+        assert_eq!(hash128_bytes(b"abcdefghij"), hash128_bytes(b"abcdefghij"));
+        // padding cannot alias: 8 bytes vs the same 8 bytes + a zero byte
+        assert_ne!(hash128_bytes(b"abcdefgh"), hash128_bytes(b"abcdefgh\0"));
+    }
+
+    #[test]
+    fn errors_display_usefully() {
+        let s = PersistError::Truncated { need: 100, have: 7 }.to_string();
+        assert!(s.contains("100") && s.contains("7"));
+        assert!(PersistError::BadMagic.to_string().contains("magic"));
+        assert!(PersistError::UnsupportedVersion(9).to_string().contains('9'));
+    }
+}

@@ -1,0 +1,186 @@
+//! Little-endian wire primitives for the checkpoint format.
+//!
+//! A [`Writer`] appends fixed-width little-endian fields to a growable
+//! byte buffer; a [`Reader`] consumes them back with explicit truncation
+//! errors (no panics on malformed input — every length is validated
+//! against the remaining bytes *before* any allocation, so a corrupted
+//! length field cannot OOM the loader).
+
+use super::PersistError;
+
+/// Append-only little-endian byte sink.
+#[derive(Default)]
+pub(crate) struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Bit-exact: writes `to_bits`, never a decimal round-trip.
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// Bit-exact: writes `to_bits`, never a decimal round-trip.
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    /// Length-prefixed f32 slice (u64 count + raw bit patterns).
+    pub fn f32_slice(&mut self, xs: &[f32]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    /// Length-prefixed u64 slice.
+    pub fn u64_slice(&mut self, xs: &[u64]) {
+        self.u64(xs.len() as u64);
+        for &x in xs {
+            self.u64(x);
+        }
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Cursor over a byte slice with truncation-checked reads.
+pub(crate) struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], PersistError> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(PersistError::Truncated { need: usize::MAX, have: self.bytes.len() })?;
+        if end > self.bytes.len() {
+            return Err(PersistError::Truncated { need: end, have: self.bytes.len() });
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, PersistError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, PersistError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, PersistError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, PersistError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A u64 count validated to describe at most the remaining bytes when
+    /// each element occupies `elem_bytes` — the pre-allocation guard.
+    pub fn checked_len(&mut self, elem_bytes: usize) -> Result<usize, PersistError> {
+        let n = self.u64()? as usize;
+        let need = n
+            .checked_mul(elem_bytes)
+            .ok_or(PersistError::Truncated { need: usize::MAX, have: self.remaining() })?;
+        if need > self.remaining() {
+            return Err(PersistError::Truncated {
+                need: self.pos + need,
+                have: self.bytes.len(),
+            });
+        }
+        Ok(n)
+    }
+
+    /// Length-prefixed f32 slice written by [`Writer::f32_slice`].
+    pub fn f32_vec(&mut self) -> Result<Vec<f32>, PersistError> {
+        let n = self.checked_len(4)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    /// Length-prefixed u64 slice written by [`Writer::u64_slice`].
+    pub fn u64_vec(&mut self) -> Result<Vec<u64>, PersistError> {
+        let n = self.checked_len(8)?;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_roundtrip_bit_exact() {
+        let mut w = Writer::new();
+        w.u32(0xDEAD_BEEF);
+        w.u64(u64::MAX - 1);
+        w.f32(-0.0f32);
+        w.f64(f64::from_bits(0x7FF8_0000_0000_0001)); // a specific NaN payload
+        w.f32_slice(&[1.5, -2.5, f32::MIN_POSITIVE]);
+        w.u64_slice(&[0, 7, 42]);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert_eq!(r.u32().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 1);
+        assert_eq!(r.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        assert_eq!(r.f64().unwrap().to_bits(), 0x7FF8_0000_0000_0001);
+        assert_eq!(r.f32_vec().unwrap(), vec![1.5, -2.5, f32::MIN_POSITIVE]);
+        assert_eq!(r.u64_vec().unwrap(), vec![0, 7, 42]);
+        assert_eq!(r.remaining(), 0);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = Writer::new();
+        w.u64(5);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes[..6]);
+        assert!(matches!(r.u64(), Err(PersistError::Truncated { .. })));
+    }
+
+    #[test]
+    fn absurd_length_prefix_rejected_before_allocation() {
+        // A corrupted length field claiming 2^60 elements must fail the
+        // remaining-bytes check, not attempt a huge Vec::with_capacity.
+        let mut w = Writer::new();
+        w.u64(1u64 << 60);
+        w.u32(0);
+        let bytes = w.into_bytes();
+        let mut r = Reader::new(&bytes);
+        assert!(matches!(r.f32_vec(), Err(PersistError::Truncated { .. })));
+    }
+}

@@ -37,6 +37,10 @@ impl Manifest {
     pub fn parse(text: &str) -> Result<Self> {
         let mut entries = HashMap::new();
         let mut cur = ArtifactEntry::default();
+        // Tracks whether `cur` holds any parsed fields, so a trailing
+        // record without a closing `---` is flushed (and validated) at
+        // EOF instead of silently dropped.
+        let mut in_entry = false;
         for (ln, line) in text.lines().enumerate() {
             let line = line.trim();
             if line.is_empty() {
@@ -47,8 +51,10 @@ impl Manifest {
                     return Err(anyhow!("manifest line {}: incomplete entry", ln + 1));
                 }
                 entries.insert(cur.name.clone(), std::mem::take(&mut cur));
+                in_entry = false;
                 continue;
             }
+            in_entry = true;
             let (k, v) = line
                 .split_once('=')
                 .ok_or_else(|| anyhow!("manifest line {}: expected key=value", ln + 1))?;
@@ -69,6 +75,13 @@ impl Manifest {
                 "eval_batch" => cur.eval_batch = usize_v()?,
                 _ => {} // forward compatible
             }
+        }
+        if in_entry {
+            // Separator-less trailing record: same validation as on `---`.
+            if cur.name.is_empty() || cur.file.is_empty() {
+                return Err(anyhow!("manifest: incomplete trailing entry (missing artifact/file)"));
+            }
+            entries.insert(cur.name.clone(), cur);
         }
         Ok(Self { entries })
     }
@@ -157,5 +170,27 @@ eval_batch=16
     fn empty_manifest_ok() {
         let m = Manifest::parse("").unwrap();
         assert!(m.is_empty());
+    }
+
+    #[test]
+    fn trailing_entry_without_separator_is_kept() {
+        // Regression: the final record used to be committed only on a
+        // `---` line, so a manifest not ending with the separator silently
+        // dropped its last artifact.
+        let text = SAMPLE.trim_end_matches("---\n").trim_end_matches('\n');
+        assert!(!text.ends_with("---"), "fixture must end mid-record");
+        let m = Manifest::parse(text).unwrap();
+        assert_eq!(m.len(), 2, "trailing record must be flushed at EOF");
+        let e = m.get("tiny_eval").unwrap();
+        assert_eq!((e.features, e.eval_batch, e.kind.as_str()), (64, 16, "eval"));
+    }
+
+    #[test]
+    fn incomplete_trailing_entry_rejected() {
+        // EOF flush applies the same name/file validation as `---`.
+        assert!(Manifest::parse("artifact=a\nkind=eval").is_err());
+        assert!(Manifest::parse("file=f.hlo.txt").is_err());
+        // trailing blank lines after the last separator stay fine
+        assert!(Manifest::parse("artifact=a\nfile=f\n---\n\n\n").is_ok());
     }
 }

@@ -15,7 +15,7 @@
 //! capacities are small).
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::projection::l1::L1Algorithm;
 use crate::projection::ProjectionKind;
@@ -36,17 +36,24 @@ use super::request::Dtype;
 /// for trusted traffic, not a defence against adversarially crafted
 /// payloads.
 pub fn fingerprint<T: Scalar>(y: &Matrix<T>) -> u128 {
+    hash128_words(
+        [y.rows() as u64, y.cols() as u64]
+            .into_iter()
+            .chain(y.as_slice().iter().map(|&x| x.to_f64().to_bits())),
+    )
+}
+
+/// The two-lane word hash behind [`fingerprint`], exposed so other
+/// integrity checks (notably the [`crate::persist`] checkpoint footer)
+/// share the exact same collision characteristics instead of inventing a
+/// weaker ad-hoc hash.
+pub fn hash128_words(words: impl IntoIterator<Item = u64>) -> u128 {
     const PRIME: u64 = 0x0000_0100_0000_01b3;
     let mut h1: u64 = 0xcbf2_9ce4_8422_2325; // FNV offset basis
     let mut h2: u64 = 0x9e37_79b9_7f4a_7c15; // independent lane basis
-    let step = |h1: &mut u64, h2: &mut u64, v: u64| {
-        *h1 = (*h1 ^ v).wrapping_mul(PRIME);
-        *h2 = (*h2 ^ splitmix64(v)).wrapping_mul(PRIME);
-    };
-    step(&mut h1, &mut h2, y.rows() as u64);
-    step(&mut h1, &mut h2, y.cols() as u64);
-    for &x in y.as_slice() {
-        step(&mut h1, &mut h2, x.to_f64().to_bits());
+    for v in words {
+        h1 = (h1 ^ v).wrapping_mul(PRIME);
+        h2 = (h2 ^ splitmix64(v)).wrapping_mul(PRIME);
     }
     ((h1 as u128) << 64) | h2 as u128
 }
@@ -115,18 +122,21 @@ impl CachedThresholds {
 }
 
 /// Scalar types whose threshold vectors the cache can store natively.
+/// `unwrap` borrows through the cached entry — a hit never copies the
+/// threshold vector (the `Arc` handed out by [`ThresholdCache::get`]
+/// keeps the storage alive while the replay reads it).
 pub trait ThresholdScalar: Scalar {
     fn wrap(v: Vec<Self>) -> CachedThresholds;
-    fn unwrap(ct: &CachedThresholds) -> Option<Vec<Self>>;
+    fn unwrap(ct: &CachedThresholds) -> Option<&[Self]>;
 }
 
 impl ThresholdScalar for f32 {
     fn wrap(v: Vec<Self>) -> CachedThresholds {
         CachedThresholds::F32(v)
     }
-    fn unwrap(ct: &CachedThresholds) -> Option<Vec<Self>> {
+    fn unwrap(ct: &CachedThresholds) -> Option<&[Self]> {
         match ct {
-            CachedThresholds::F32(v) => Some(v.clone()),
+            CachedThresholds::F32(v) => Some(v),
             _ => None,
         }
     }
@@ -136,16 +146,20 @@ impl ThresholdScalar for f64 {
     fn wrap(v: Vec<Self>) -> CachedThresholds {
         CachedThresholds::F64(v)
     }
-    fn unwrap(ct: &CachedThresholds) -> Option<Vec<Self>> {
+    fn unwrap(ct: &CachedThresholds) -> Option<&[Self]> {
         match ct {
-            CachedThresholds::F64(v) => Some(v.clone()),
+            CachedThresholds::F64(v) => Some(v),
             _ => None,
         }
     }
 }
 
 struct Entry {
-    thresholds: CachedThresholds,
+    /// Shared, not owned: a hit hands out a clone of this `Arc` while the
+    /// shard-shared mutex is held, so the lock covers a pointer bump, not
+    /// an O(cols) vector copy (which serialized every hit on large
+    /// models).
+    thresholds: Arc<CachedThresholds>,
     last_used: u64,
 }
 
@@ -186,8 +200,9 @@ impl ThresholdCache {
         self.len() == 0
     }
 
-    /// Look up and touch (refresh LRU recency of) an entry.
-    pub fn get(&self, key: &CacheKey) -> Option<CachedThresholds> {
+    /// Look up and touch (refresh LRU recency of) an entry. The returned
+    /// `Arc` clones in O(1); callers read the thresholds lock-free.
+    pub fn get(&self, key: &CacheKey) -> Option<Arc<CachedThresholds>> {
         if !self.enabled() {
             return None;
         }
@@ -196,7 +211,7 @@ impl ThresholdCache {
         let tick = inner.tick;
         inner.map.get_mut(key).map(|e| {
             e.last_used = tick;
-            e.thresholds.clone()
+            Arc::clone(&e.thresholds)
         })
     }
 
@@ -206,6 +221,7 @@ impl ThresholdCache {
         if !self.enabled() {
             return;
         }
+        let thresholds = Arc::new(thresholds);
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
@@ -254,14 +270,30 @@ mod tests {
         let c = ThresholdCache::new(4);
         assert!(c.get(&key(1)).is_none());
         c.insert(key(1), CachedThresholds::F64(vec![0.5, 0.25]));
-        match c.get(&key(1)) {
-            Some(CachedThresholds::F64(v)) => assert_eq!(v, vec![0.5, 0.25]),
+        match c.get(&key(1)).as_deref() {
+            Some(CachedThresholds::F64(v)) => assert_eq!(v, &vec![0.5, 0.25]),
             other => panic!("expected hit, got {other:?}"),
         }
         // eta participates in the key
         let mut k2 = key(1);
         k2.eta_bits = 2.0f64.to_bits();
         assert!(c.get(&k2).is_none());
+    }
+
+    #[test]
+    fn hits_share_one_allocation() {
+        // Regression: `get` used to clone the whole threshold vector while
+        // holding the shard-shared mutex. Two hits must now hand out the
+        // same `Arc` allocation (an O(1) pointer clone under the lock).
+        let c = ThresholdCache::new(4);
+        c.insert(key(7), CachedThresholds::F64(vec![1.0; 4096]));
+        let a = c.get(&key(7)).expect("hit");
+        let b = c.get(&key(7)).expect("hit");
+        assert!(Arc::ptr_eq(&a, &b), "hits must share the cached allocation");
+        // re-inserting the key swaps the allocation (fresh thresholds win)
+        c.insert(key(7), CachedThresholds::F64(vec![2.0; 4096]));
+        let d = c.get(&key(7)).expect("hit");
+        assert!(!Arc::ptr_eq(&a, &d));
     }
 
     #[test]
@@ -291,7 +323,7 @@ mod tests {
     fn threshold_scalar_roundtrip() {
         let ct = <f64 as ThresholdScalar>::wrap(vec![1.0, 2.0]);
         assert_eq!(ct.len(), 2);
-        assert_eq!(<f64 as ThresholdScalar>::unwrap(&ct), Some(vec![1.0, 2.0]));
+        assert_eq!(<f64 as ThresholdScalar>::unwrap(&ct), Some(&[1.0, 2.0][..]));
         assert_eq!(<f32 as ThresholdScalar>::unwrap(&ct), None);
     }
 }

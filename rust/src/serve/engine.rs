@@ -22,19 +22,21 @@
 //! workers never touch the registry lock.
 
 use std::collections::HashMap;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::ServeConfig;
+use crate::persist::Checkpoint;
 use crate::sparse::CompactEncoder;
 use crate::tensor::Matrix;
 
 use super::cache::ThresholdCache;
 use super::queue::{JobQueue, PushError};
 use super::request::{
-    BatchKey, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
+    BatchKey, Dtype, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
 };
 use super::scheduler::{self, BatchPolicy, ExecOutcome};
 use super::stats::{EngineStats, ShardCounters};
@@ -192,6 +194,53 @@ impl Engine {
         id
     }
 
+    /// Load a model checkpoint (see [`crate::persist`]) into the encoder
+    /// registry under a fresh model id. The checkpoint must carry a model
+    /// bundle (plan + compacted tensors); the encoder is built straight
+    /// from the compacted tensors, so it is bit-identical to the
+    /// in-memory encoder of the training run that exported it.
+    pub fn load_model(&self, path: &Path, dtype: Dtype) -> Result<u64, String> {
+        Ok(self.register(load_encoder(path, dtype)?))
+    }
+
+    /// Hot-swap: load a checkpoint and atomically replace the encoder
+    /// behind an existing model id, under live traffic. Submissions
+    /// resolve the registry entry to an `Arc` at admission, so every job
+    /// accepted before the swap completes on the old encoder; jobs
+    /// admitted after it run on the new one. Nothing is rejected by the
+    /// swap itself.
+    pub fn swap_model(&self, id: u64, path: &Path, dtype: Dtype) -> Result<(), String> {
+        self.swap(id, load_encoder(path, dtype)?)
+    }
+
+    /// Hot-swap an in-memory f32 encoder behind an existing model id.
+    pub fn swap_encoder_f32(&self, id: u64, enc: CompactEncoder<f32>) -> Result<(), String> {
+        self.swap(id, RegisteredEncoder::F32(Arc::new(enc)))
+    }
+
+    /// Hot-swap an in-memory f64 encoder behind an existing model id.
+    pub fn swap_encoder_f64(&self, id: u64, enc: CompactEncoder<f64>) -> Result<(), String> {
+        self.swap(id, RegisteredEncoder::F64(Arc::new(enc)))
+    }
+
+    fn swap(&self, id: u64, enc: RegisteredEncoder) -> Result<(), String> {
+        let mut encoders = self.encoders.write().unwrap();
+        match encoders.get_mut(&id) {
+            Some(slot) => {
+                *slot = enc;
+                Ok(())
+            }
+            None => Err(format!("swap: unknown encoder model {id}")),
+        }
+    }
+
+    /// Drop a model id from the registry. Jobs already admitted still
+    /// complete (they hold the `Arc`); new submissions get
+    /// `SubmitError::Invalid`. Returns whether the id existed.
+    pub fn unregister_encoder(&self, id: u64) -> bool {
+        self.encoders.write().unwrap().remove(&id).is_some()
+    }
+
     /// Number of registered encoders.
     pub fn encoder_count(&self) -> usize {
         self.encoders.read().unwrap().len()
@@ -305,6 +354,18 @@ impl Drop for Engine {
     fn drop(&mut self) {
         self.finish();
     }
+}
+
+/// Read a checkpoint's model bundle as a typed registry entry.
+fn load_encoder(path: &Path, dtype: Dtype) -> Result<RegisteredEncoder, String> {
+    let ck = Checkpoint::load(path).map_err(|e| format!("{}: {e}", path.display()))?;
+    let bundle = ck.model.ok_or_else(|| {
+        format!("{}: checkpoint has no model bundle (mid-train state only)", path.display())
+    })?;
+    Ok(match dtype {
+        Dtype::F32 => RegisteredEncoder::F32(Arc::new(bundle.encoder::<f32>())),
+        Dtype::F64 => RegisteredEncoder::F64(Arc::new(bundle.encoder::<f64>())),
+    })
 }
 
 /// Validate the feature (row) count of an encode payload.
@@ -518,6 +579,95 @@ mod tests {
             .unwrap_err();
         assert!(matches!(err, SubmitError::Invalid(_)), "empty batch accepted");
         assert_eq!(engine.stats().submitted(), 0);
+        engine.shutdown();
+    }
+
+    fn write_checkpoint<T: crate::scalar::Scalar>(
+        seed: u64,
+        path: &std::path::Path,
+    ) -> CompactEncoder<T> {
+        use crate::persist::{Checkpoint, ModelBundle};
+        let (p, enc) = masked_encoder::<T>(seed);
+        let plan = enc.plan().clone();
+        let compact = crate::sparse::compact_params(&p, &plan);
+        Checkpoint {
+            seed,
+            config_digest: 0,
+            dims: p.dims,
+            history: Vec::new(),
+            model: Some(ModelBundle { plan, compact, dense: None }),
+            train_state: None,
+        }
+        .save(path)
+        .unwrap();
+        enc
+    }
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bilevel-engine-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn load_model_serves_checkpointed_encoder_bit_identically() {
+        let dir = tmp_dir("load");
+        let path = dir.join("m.ckpt");
+        let enc_mem = write_checkpoint::<f64>(41, &path);
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let model = engine.load_model(&path, Dtype::F64).unwrap();
+        assert_eq!(engine.encoder_count(), 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let x = Matrix::<f64>::randn(10, 5, &mut rng);
+        let resp = engine.submit_encode_wait(model, Payload::F64(x.clone())).unwrap();
+        let Payload::F64(h) = &resp.payload else { panic!("dtype changed") };
+        assert_eq!(h.max_abs_diff(&enc_mem.encode(&x)), 0.0, "loaded model must serve bit-identically");
+        // a model-less path errors cleanly
+        assert!(engine.load_model(&dir.join("missing.ckpt"), Dtype::F64).is_err());
+        engine.shutdown();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn hot_swap_replaces_under_live_arcs() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let (_, old_enc) = masked_encoder::<f64>(51);
+        let model = engine.register_encoder_f64(old_enc.clone());
+        let mut rng = Xoshiro256pp::seed_from_u64(52);
+        let x = Matrix::<f64>::randn(10, 4, &mut rng);
+        // Admit a job, then swap before waiting: the job resolved its Arc
+        // at submission, so it must complete on the OLD encoder.
+        let inflight = engine.submit_encode(model, Payload::F64(x.clone())).unwrap();
+        let (_, new_enc) = masked_encoder::<f64>(53);
+        engine.swap_encoder_f64(model, new_enc.clone()).unwrap();
+        let resp = inflight.wait().unwrap();
+        let Payload::F64(h) = &resp.payload else { panic!("dtype changed") };
+        assert_eq!(h.max_abs_diff(&old_enc.encode(&x)), 0.0, "in-flight job must finish on old Arc");
+        // Jobs admitted after the swap run on the new encoder.
+        let resp = engine.submit_encode_wait(model, Payload::F64(x.clone())).unwrap();
+        let Payload::F64(h) = &resp.payload else { panic!("dtype changed") };
+        assert_eq!(h.max_abs_diff(&new_enc.encode(&x)), 0.0, "post-swap job must use new encoder");
+        // Swap of an unknown id is an error; the registry size is stable.
+        assert!(engine.swap_encoder_f64(999, new_enc).is_err());
+        assert_eq!(engine.encoder_count(), 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn unregister_rejects_new_but_not_inflight() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let (_, enc) = masked_encoder::<f64>(61);
+        let model = engine.register_encoder_f64(enc.clone());
+        let mut rng = Xoshiro256pp::seed_from_u64(62);
+        let x = Matrix::<f64>::randn(10, 2, &mut rng);
+        let inflight = engine.submit_encode(model, Payload::F64(x.clone())).unwrap();
+        assert!(engine.unregister_encoder(model));
+        assert!(!engine.unregister_encoder(model), "second unregister is a no-op");
+        assert!(inflight.wait().is_some(), "admitted job must still complete");
+        let err = engine.submit_encode(model, Payload::F64(x)).unwrap_err();
+        assert!(matches!(err, SubmitError::Invalid(_)));
+        assert_eq!(engine.encoder_count(), 0);
         engine.shutdown();
     }
 

@@ -32,6 +32,13 @@
 //! * **Load generation** ([`loadgen`]) — the closed-loop driver behind the
 //!   `serve` / `loadgen` CLI subcommands and
 //!   `benches/serve_throughput.rs`.
+//! * **Model lifecycle** — `Engine::load_model` admits a
+//!   [`crate::persist`] checkpoint into the encoder registry
+//!   (`bilevel serve --model`), and `Engine::swap_model` /
+//!   `Engine::swap_encoder_f32/f64` hot-swap the encoder behind a live
+//!   model id: submissions resolve the registry entry to an `Arc` at
+//!   admission, so in-flight batches finish on the old encoder and the
+//!   swap rejects nothing.
 //!
 //! Sizing lives in [`ServeConfig`] (`[serve]` section of the TOML config).
 //!

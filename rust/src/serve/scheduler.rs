@@ -124,19 +124,11 @@ pub(crate) fn execute(
     match &req.payload {
         Payload::F64(y) => {
             let (x, thresholds, cache_hit) = exec_typed(y, req, cache, &mut scratch.ws64);
-            ExecOutcome {
-                payload: Payload::F64(x),
-                thresholds: thresholds.map(|u| u.iter().map(|t| t.to_f64()).collect()),
-                cache_hit,
-            }
+            ExecOutcome { payload: Payload::F64(x), thresholds, cache_hit }
         }
         Payload::F32(y) => {
             let (x, thresholds, cache_hit) = exec_typed(y, req, cache, &mut scratch.ws32);
-            ExecOutcome {
-                payload: Payload::F32(x),
-                thresholds: thresholds.map(|u| u.iter().map(|t| t.to_f64()).collect()),
-                cache_hit,
-            }
+            ExecOutcome { payload: Payload::F32(x), thresholds, cache_hit }
         }
     }
 }
@@ -168,7 +160,7 @@ fn exec_typed<T: ThresholdScalar>(
     req: &ProjectionRequest,
     cache: &ThresholdCache,
     ws: &mut Workspace<T>,
-) -> (Matrix<T>, Option<Vec<T>>, bool) {
+) -> (Matrix<T>, Option<Vec<f64>>, bool) {
     let eta = T::from_f64(req.eta);
     let Some(variant) = req.kind.bilevel_variant() else {
         // Exact ℓ1,∞ kinds and the identity: no thresholds, nothing to cache.
@@ -176,20 +168,30 @@ fn exec_typed<T: ThresholdScalar>(
     };
     if !cache.enabled() {
         let r = run_bilevel(y, eta, variant, req.algo, ws);
-        return (r.x, Some(r.thresholds), false);
+        return (r.x, Some(to_f64_vec(&r.thresholds)), false);
     }
     let key = CacheKey::for_matrix(y, req.eta, req.kind, req.algo, req.payload.dtype());
     if let Some(cached) = cache.get(&key) {
+        // Borrow straight through the Arc: a hit replays without copying
+        // the threshold vector; the only allocation is the response's
+        // f64 view.
         if let Some(u) = T::unwrap(&cached) {
             if u.len() == y.cols() {
-                let x = replay(y, variant, req.algo, &u);
-                return (x, Some(u), true);
+                let x = replay(y, variant, req.algo, u);
+                return (x, Some(to_f64_vec(u)), true);
             }
         }
     }
     let r = run_bilevel(y, eta, variant, req.algo, ws);
-    cache.insert(key, T::wrap(r.thresholds.clone()));
-    (r.x, Some(r.thresholds), false)
+    let thresholds = to_f64_vec(&r.thresholds);
+    // The cache takes ownership of the native-dtype vector — no clone.
+    cache.insert(key, T::wrap(r.thresholds));
+    (r.x, Some(thresholds), false)
+}
+
+/// The response-facing `f64` view of a threshold vector.
+fn to_f64_vec<T: Scalar>(u: &[T]) -> Vec<f64> {
+    u.iter().map(|t| t.to_f64()).collect()
 }
 
 /// Re-run only the outer column stage with known thresholds `û`.

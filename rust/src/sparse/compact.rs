@@ -148,6 +148,24 @@ impl<T: Scalar> CompactEncoder<T> {
         Self { plan: plan.clone(), hidden: h, w1c, b1 }
     }
 
+    /// Extract the encoder of an **already compacted** model (e.g. a
+    /// loaded [`crate::persist::Checkpoint`]'s bundle): `c.tensors[0]` is
+    /// the `(alive, hidden)` encoder verbatim, so this is bit-identical
+    /// to [`Self::from_params`] on the dense model `c` was compacted
+    /// from — `compact_params` copies alive W1 rows bitwise and both
+    /// paths apply the same `f32 → T` cast.
+    pub fn from_compact(c: &SaeParams, plan: &CompactPlan) -> Self {
+        let d = c.dims;
+        assert_eq!(
+            plan.alive(),
+            d.features,
+            "CompactEncoder: plan alive != compact features"
+        );
+        let w1c = c.tensors[0].iter().map(|&v| T::from_f64(v as f64)).collect();
+        let b1 = c.tensors[1].iter().map(|&v| T::from_f64(v as f64)).collect();
+        Self { plan: plan.clone(), hidden: d.hidden, w1c, b1 }
+    }
+
     pub fn plan(&self) -> &CompactPlan {
         &self.plan
     }
@@ -351,6 +369,26 @@ mod tests {
         for (a, b) in sparse.as_slice().iter().zip(dense.as_slice().iter()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn from_compact_matches_from_params_bitwise() {
+        let (p, plan) = masked_params(9, &[0, 2, 5, 9]);
+        let c = compact_params(&p, &plan);
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let x = Matrix::<f64>::randn(12, 3, &mut rng);
+        let via_dense = CompactEncoder::<f64>::from_params(&p, &plan);
+        let via_compact = CompactEncoder::<f64>::from_compact(&c, &plan);
+        assert_eq!(via_dense.fingerprint(), via_compact.fingerprint());
+        let (a, b) = (via_dense.encode(&x), via_compact.encode(&x));
+        for (u, v) in a.as_slice().iter().zip(b.as_slice().iter()) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+        // f32 cast path agrees too
+        assert_eq!(
+            CompactEncoder::<f32>::from_params(&p, &plan).fingerprint(),
+            CompactEncoder::<f32>::from_compact(&c, &plan).fingerprint()
+        );
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Model-lifecycle integration: property-based checkpoint round-trips
+//! (export → import bit-identical across sparsity levels and dtypes),
+//! file-level error paths, serve-side model loading (including dims
+//! mismatch at admission), and hot-swap under live traffic.
+
+use std::time::Duration;
+
+use bilevel_sparse::config::ServeConfig;
+use bilevel_sparse::model::{SaeDims, SaeParams};
+use bilevel_sparse::persist::{read_header, Checkpoint, ModelBundle, PersistError};
+use bilevel_sparse::proptest::{forall, PropConfig, SparseSaeCase};
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::serve::{Dtype, Engine, Payload, SubmitError};
+use bilevel_sparse::sparse::{compact_params, CompactEncoder, CompactPlan};
+use bilevel_sparse::tensor::Matrix;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir()
+        .join(format!("bilevel-persist-it-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bits_eq_params(a: &SaeParams, b: &SaeParams) -> Result<(), String> {
+    if a.dims != b.dims {
+        return Err(format!("dims {:?} != {:?}", a.dims, b.dims));
+    }
+    for (i, (ta, tb)) in a.tensors.iter().zip(b.tensors.iter()).enumerate() {
+        if ta.len() != tb.len() {
+            return Err(format!("tensor {i} length {} != {}", ta.len(), tb.len()));
+        }
+        for (j, (x, y)) in ta.iter().zip(tb.iter()).enumerate() {
+            if x.to_bits() != y.to_bits() {
+                return Err(format!("tensor {i}[{j}]: {x:?} != {y:?} (bit pattern)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn bits_eq_matrix<T: bilevel_sparse::scalar::Scalar>(
+    a: &Matrix<T>,
+    b: &Matrix<T>,
+) -> Result<(), String> {
+    if (a.rows(), a.cols()) != (b.rows(), b.cols()) {
+        return Err("shape mismatch".into());
+    }
+    for (x, y) in a.as_slice().iter().zip(b.as_slice().iter()) {
+        if x.to_f64().to_bits() != y.to_f64().to_bits() {
+            return Err(format!("entry {x:?} != {y:?}"));
+        }
+    }
+    Ok(())
+}
+
+fn checkpoint_of(case: &SparseSaeCase, seed: u64) -> (Checkpoint, CompactPlan) {
+    let plan = CompactPlan::from_mask(&case.mask);
+    let compact = compact_params(&case.params, &plan);
+    let ck = Checkpoint {
+        seed,
+        config_digest: 0xD1CE57,
+        dims: case.params.dims,
+        history: Vec::new(),
+        model: Some(ModelBundle {
+            plan: plan.clone(),
+            compact,
+            dense: Some(case.params.clone()),
+        }),
+        train_state: None,
+    };
+    (ck, plan)
+}
+
+#[test]
+fn export_import_is_bit_identical_for_params_plan_compact() {
+    // Property over random pruned SAEs spanning 0–100 % sparsity: the
+    // serialized checkpoint reproduces plan, compact, and dense tensors
+    // bit-for-bit, and encoders built from the loaded bundle encode the
+    // case's batch identically to in-memory encoders — in both dtypes.
+    forall::<SparseSaeCase>(PropConfig { cases: 120, ..Default::default() }, |case| {
+        let (ck, plan) = checkpoint_of(case, 5);
+        let back = Checkpoint::from_bytes(&ck.to_bytes())
+            .map_err(|e| format!("reload failed: {e}"))?;
+        let mb0 = ck.model.as_ref().unwrap();
+        let mb1 = back.model.as_ref().ok_or("model bundle lost")?;
+        if mb1.plan != plan {
+            return Err("plan changed across the round-trip".into());
+        }
+        bits_eq_params(&mb1.compact, &mb0.compact)?;
+        bits_eq_params(mb1.dense.as_ref().ok_or("dense lost")?, &case.params)?;
+
+        // dtype sweep: loaded encoder ≡ in-memory encoder, bitwise
+        let mem64 = CompactEncoder::<f64>::from_params(&case.params, &plan);
+        bits_eq_matrix(&mb1.encoder::<f64>().encode(&case.x), &mem64.encode(&case.x))?;
+        let x32: Matrix<f32> = case.x.cast();
+        let mem32 = CompactEncoder::<f32>::from_params(&case.params, &plan);
+        bits_eq_matrix(&mb1.encoder::<f32>().encode(&x32), &mem32.encode(&x32))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn file_error_paths_are_typed() {
+    let dir = tmp_dir("errors");
+    let path = dir.join("m.ckpt");
+    let mut rng = Xoshiro256pp::seed_from_u64(71);
+    let p = SaeParams::init(SaeDims { features: 9, hidden: 3, classes: 2 }, &mut rng);
+    let plan = CompactPlan::dense(9);
+    let ck = Checkpoint {
+        seed: 71,
+        config_digest: 1,
+        dims: p.dims,
+        history: Vec::new(),
+        model: Some(ModelBundle { plan, compact: compact_params(&p, &CompactPlan::dense(9)), dense: None }),
+        train_state: None,
+    };
+    ck.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // truncated file
+    let trunc = dir.join("trunc.ckpt");
+    std::fs::write(&trunc, &bytes[..bytes.len() / 2]).unwrap();
+    assert!(matches!(Checkpoint::load(&trunc), Err(PersistError::Truncated { .. })));
+
+    // corrupted checksum (payload bit flip)
+    let mut corrupt = bytes.clone();
+    corrupt[100] ^= 0x40;
+    let bad = dir.join("bad.ckpt");
+    std::fs::write(&bad, &corrupt).unwrap();
+    assert!(matches!(Checkpoint::load(&bad), Err(PersistError::ChecksumMismatch)));
+
+    // wrong format version (header is read first, so inspect fails too)
+    let mut vers = bytes.clone();
+    vers[8] = 0xEE;
+    let old = dir.join("old.ckpt");
+    std::fs::write(&old, &vers).unwrap();
+    assert!(matches!(Checkpoint::load(&old), Err(PersistError::UnsupportedVersion(0xEE))));
+    assert!(matches!(read_header(&old), Err(PersistError::UnsupportedVersion(0xEE))));
+
+    // not a checkpoint at all
+    let junk = dir.join("junk.ckpt");
+    std::fs::write(&junk, b"definitely not a checkpoint").unwrap();
+    assert!(matches!(read_header(&junk), Err(PersistError::BadMagic)));
+
+    // the engine surfaces these as load errors, not panics
+    let engine = Engine::start(&small_cfg()).unwrap();
+    assert!(engine.load_model(&bad, Dtype::F32).is_err());
+    assert!(engine.load_model(&trunc, Dtype::F64).is_err());
+    assert_eq!(engine.encoder_count(), 0);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+fn small_cfg() -> ServeConfig {
+    ServeConfig {
+        shards: 2,
+        workers_per_shard: 1,
+        queue_capacity: 256,
+        max_batch: 4,
+        min_fill: 1,
+        max_wait_micros: 100,
+        cache_capacity: 8,
+    }
+}
+
+fn pruned_model(seed: u64, features: usize, hidden: usize) -> (SaeParams, CompactPlan) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut p =
+        SaeParams::init(SaeDims { features, hidden, classes: 2 }, &mut rng);
+    let mut mask = vec![1.0f32; features];
+    for f in (0..features).step_by(3) {
+        mask[f] = 0.0;
+    }
+    p.apply_feature_mask(&mask);
+    (p, CompactPlan::from_mask(&mask))
+}
+
+fn export_model(seed: u64, path: &std::path::Path) -> (SaeParams, CompactPlan) {
+    let (p, plan) = pruned_model(seed, 12, 5);
+    let compact = compact_params(&p, &plan);
+    Checkpoint {
+        seed,
+        config_digest: 2,
+        dims: p.dims,
+        history: Vec::new(),
+        model: Some(ModelBundle { plan: plan.clone(), compact, dense: None }),
+        train_state: None,
+    }
+    .save(path)
+    .unwrap();
+    (p, plan)
+}
+
+#[test]
+fn export_import_serve_roundtrip_bit_identical_both_dtypes() {
+    let dir = tmp_dir("serve");
+    let path = dir.join("m.ckpt");
+    let (p, plan) = export_model(91, &path);
+    let engine = Engine::start(&small_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(92);
+
+    let id64 = engine.load_model(&path, Dtype::F64).unwrap();
+    let x = Matrix::<f64>::randn(12, 7, &mut rng);
+    let resp = engine.submit_encode_wait(id64, Payload::F64(x.clone())).unwrap();
+    let Payload::F64(h) = &resp.payload else { panic!("dtype changed") };
+    let mem = CompactEncoder::<f64>::from_params(&p, &plan);
+    bits_eq_matrix(h, &mem.encode(&x)).expect("f64 serve output must be bit-identical");
+
+    let id32 = engine.load_model(&path, Dtype::F32).unwrap();
+    let x32: Matrix<f32> = x.cast();
+    let resp = engine.submit_encode_wait(id32, Payload::F32(x32.clone())).unwrap();
+    let Payload::F32(h) = &resp.payload else { panic!("dtype changed") };
+    let mem32 = CompactEncoder::<f32>::from_params(&p, &plan);
+    bits_eq_matrix(h, &mem32.encode(&x32)).expect("f32 serve output must be bit-identical");
+
+    // dims mismatch at serve admission: wrong row count is rejected with
+    // a typed Invalid, not a panic or a silent misread.
+    let err = engine
+        .submit_encode(id64, Payload::F64(Matrix::randn(11, 7, &mut rng)))
+        .unwrap_err();
+    assert!(matches!(err, SubmitError::Invalid(_)), "dims mismatch must be Invalid");
+    // dtype mismatch against a loaded model likewise
+    let err = engine
+        .submit_encode(id64, Payload::F32(Matrix::<f32>::zeros(12, 2)))
+        .unwrap_err();
+    assert!(matches!(err, SubmitError::Invalid(_)));
+
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn hot_swap_under_live_traffic_completes_everything() {
+    // Acceptance: swapping a model id under closed-loop traffic completes
+    // every in-flight request with zero rejects attributable to the swap;
+    // each response matches one of the two encoder generations bitwise.
+    let engine = Engine::start(&ServeConfig {
+        shards: 2,
+        workers_per_shard: 2,
+        queue_capacity: 1024,
+        max_batch: 4,
+        min_fill: 1,
+        max_wait_micros: 50,
+        cache_capacity: 0,
+    })
+    .unwrap();
+    let (pa, plan_a) = pruned_model(101, 10, 4);
+    let (pb, plan_b) = pruned_model(102, 10, 4);
+    let enc_a = CompactEncoder::<f64>::from_params(&pa, &plan_a);
+    let enc_b = CompactEncoder::<f64>::from_params(&pb, &plan_b);
+    let model = engine.register_encoder_f64(enc_a.clone());
+    let mut rng = Xoshiro256pp::seed_from_u64(103);
+    let x = Matrix::<f64>::randn(10, 6, &mut rng);
+    let out_a = enc_a.encode(&x);
+    let out_b = enc_b.encode(&x);
+    assert!(bits_eq_matrix(&out_a, &out_b).is_err(), "fixture models must differ");
+
+    const CLIENTS: usize = 4;
+    const REQS: usize = 60;
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for _ in 0..CLIENTS {
+            let engine = &engine;
+            let (x, out_a, out_b) = (&x, &out_a, &out_b);
+            handles.push(s.spawn(move || {
+                for i in 0..REQS {
+                    match engine.submit_encode_wait(model, Payload::F64(x.clone())) {
+                        Ok(resp) => {
+                            let Payload::F64(h) = &resp.payload else {
+                                panic!("dtype changed")
+                            };
+                            let matches_a = bits_eq_matrix(h, out_a).is_ok();
+                            let matches_b = bits_eq_matrix(h, out_b).is_ok();
+                            assert!(
+                                matches_a || matches_b,
+                                "request {i}: response matches neither encoder generation"
+                            );
+                        }
+                        Err(e) => panic!("request {i} rejected during hot-swap: {e}"),
+                    }
+                }
+                REQS
+            }));
+        }
+        // Flip the model back and forth while the clients hammer it.
+        for round in 0..8 {
+            std::thread::sleep(Duration::from_millis(2));
+            let res = if round % 2 == 0 {
+                engine.swap_encoder_f64(model, enc_b.clone())
+            } else {
+                engine.swap_encoder_f64(model, enc_a.clone())
+            };
+            res.expect("swap of a live id must succeed");
+        }
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(total, CLIENTS * REQS);
+    });
+    let stats = engine.shutdown();
+    assert_eq!(stats.completed(), (CLIENTS * REQS) as u64);
+    assert_eq!(stats.submitted(), (CLIENTS * REQS) as u64);
+}
+
+#[test]
+fn mid_train_state_checkpoint_roundtrips_and_refuses_serving() {
+    // A rolling trainer checkpoint (train state, no model bundle) must
+    // round-trip its optimizer tensors bit-exactly and be rejected by the
+    // serve loader with a clear error.
+    use bilevel_sparse::persist::TrainStateSnapshot;
+    let dir = tmp_dir("state");
+    let path = dir.join("roll.ckpt");
+    let mut rng = Xoshiro256pp::seed_from_u64(111);
+    let p = SaeParams::init(SaeDims { features: 8, hidden: 4, classes: 2 }, &mut rng);
+    let ck = Checkpoint {
+        seed: 111,
+        config_digest: 3,
+        dims: p.dims,
+        history: Vec::new(),
+        model: None,
+        train_state: Some(TrainStateSnapshot {
+            phase: 1,
+            epochs_done: 2,
+            step: 34.0,
+            mask: vec![1.0; 8],
+            params: p.clone(),
+            m: p.zeros_like(),
+            v: p.zeros_like(),
+        }),
+    };
+    ck.save(&path).unwrap();
+    let back = Checkpoint::load(&path).unwrap();
+    let ts = back.train_state.as_ref().unwrap();
+    assert_eq!((ts.phase, ts.epochs_done), (1, 2));
+    assert_eq!(ts.step.to_bits(), 34.0f32.to_bits());
+    bits_eq_params(&ts.params, &p).unwrap();
+    let header = read_header(&path).unwrap();
+    assert!(header.has_train_state() && !header.has_model());
+
+    let engine = Engine::start(&small_cfg()).unwrap();
+    let err = engine.load_model(&path, Dtype::F32).unwrap_err();
+    assert!(err.contains("no model bundle"), "got: {err}");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
