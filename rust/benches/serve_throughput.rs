@@ -102,6 +102,7 @@ fn main() {
     // -------- 2. engine, sharding only (max_batch = 1, no cache) -------
     let (unbatched, _, _) = run_engine(&engine_cfg(shards, 1, 0), &load);
     report_line("engine unbatched", unbatched.throughput_rps(), direct_rps, "");
+    println!("  {:<26} {}", "", unbatched.latency_summary());
 
     // -------- 3. engine, micro-batching (no cache) ---------------------
     let (batched, mean_batch, _) = run_engine(&engine_cfg(shards, 16, 0), &load);
@@ -111,6 +112,7 @@ fn main() {
         direct_rps,
         &format!("   mean batch {mean_batch:.2}"),
     );
+    println!("  {:<26} {}", "", batched.latency_summary());
 
     // -------- 4. engine, batching + threshold cache --------------------
     let (cached, _, hit_rate) = run_engine(&engine_cfg(shards, 16, 64), &load);
@@ -120,6 +122,7 @@ fn main() {
         direct_rps,
         &format!("   hit-rate {:.1}%", hit_rate * 100.0),
     );
+    println!("  {:<26} {}", "", cached.latency_summary());
 
     // -------- acceptance lines -----------------------------------------
     let ok_tput = batched.throughput_rps() >= direct_rps;

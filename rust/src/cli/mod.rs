@@ -138,10 +138,19 @@ COMMANDS:
                [--model model.ckpt] [--model-dtype f32|f64] loads the
                checkpoint into the encoder registry and proves one served
                SparseEncode == the in-memory encoder bit-for-bit
+               network mode: --listen IP:PORT puts the dependency-free
+               HTTP/1.1 front-end on the engine (POST /v1/project,
+               POST /v1/encode/{model}, GET /v1/stats|/v1/models|/healthz,
+               GET /v1/events SSE, POST /v1/drain for graceful drain;
+               per-client quotas from [serve.http]); --addr-file F writes
+               the resolved address (useful with --listen 127.0.0.1:0)
   loadgen      closed-loop load generator against an in-process engine:
                sustains a mixed-kind workload, honours backpressure
-               retry-after, reports client latency/throughput + engine-side
-               shard counters (same options as serve, bigger defaults)
+               retry-after, reports client latency/throughput (mean +
+               p50/p99/p999) + engine-side shard counters (same options as
+               serve, bigger defaults); --connect IP:PORT drives a
+               `serve --listen` server over real sockets instead, obeying
+               HTTP 429 Retry-After backpressure
   help         print this help
 
 PROJECTION METHODS:

@@ -9,6 +9,7 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    DatasetKind, PersistConfig, ProjectionBackend, RunConfig, ServeConfig, TrainConfig,
+    DatasetKind, HttpConfig, PersistConfig, ProjectionBackend, RunConfig, ServeConfig,
+    TrainConfig,
 };
 pub use toml::{parse, TomlDoc, TomlValue};

@@ -322,6 +322,104 @@ impl ServeConfig {
     }
 }
 
+/// HTTP front-end configuration (`[serve.http]` TOML section): the
+/// listener, connection/parse hardening limits, per-client quotas, and the
+/// SSE snapshot cadence. Consumed by `net::Server`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HttpConfig {
+    /// Listen address, numeric `ip:port` (`:0` lets the OS pick the port).
+    pub listen: String,
+    /// Concurrent connections beyond this are refused with 503.
+    pub max_connections: usize,
+    /// Socket read timeout — a stalled peer is timed out (408) after this.
+    pub read_timeout_ms: u64,
+    /// Request-body cap (413 beyond it).
+    pub max_body_bytes: usize,
+    /// Header-section cap (431 beyond it).
+    pub max_header_bytes: usize,
+    /// Sustained per-client requests/second; 0 disables quota admission.
+    pub quota_rps: f64,
+    /// Token-bucket burst capacity (only read when `quota_rps > 0`).
+    pub quota_burst: f64,
+    /// Interval between SSE stats snapshots on `GET /v1/events`.
+    pub sse_interval_ms: u64,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:8080".into(),
+            max_connections: 256,
+            read_timeout_ms: 5_000,
+            max_body_bytes: 16 * 1024 * 1024,
+            max_header_bytes: 16 * 1024,
+            quota_rps: 0.0,
+            quota_burst: 8.0,
+            sse_interval_ms: 200,
+        }
+    }
+}
+
+impl HttpConfig {
+    pub fn read_timeout(&self) -> Duration {
+        Duration::from_millis(self.read_timeout_ms)
+    }
+
+    pub fn sse_interval(&self) -> Duration {
+        Duration::from_millis(self.sse_interval_ms)
+    }
+
+    /// Build from a parsed TOML doc (`[serve.http]` section), defaults
+    /// elsewhere.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let cfg = Self {
+            listen: doc.str_or("serve.http.listen", &d.listen).to_string(),
+            max_connections: doc.usize_or("serve.http.max_connections", d.max_connections),
+            read_timeout_ms: doc
+                .usize_or("serve.http.read_timeout_ms", d.read_timeout_ms as usize)
+                as u64,
+            max_body_bytes: doc.usize_or("serve.http.max_body_bytes", d.max_body_bytes),
+            max_header_bytes: doc.usize_or("serve.http.max_header_bytes", d.max_header_bytes),
+            quota_rps: doc.f64_or("serve.http.quota_rps", d.quota_rps),
+            quota_burst: doc.f64_or("serve.http.quota_burst", d.quota_burst),
+            sse_interval_ms: doc
+                .usize_or("serve.http.sse_interval_ms", d.sse_interval_ms as usize)
+                as u64,
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.listen.is_empty() {
+            return Err("serve.http.listen must not be empty".into());
+        }
+        if self.max_connections == 0 {
+            return Err("serve.http.max_connections must be >= 1".into());
+        }
+        if self.read_timeout_ms == 0 {
+            return Err("serve.http.read_timeout_ms must be >= 1".into());
+        }
+        if self.max_body_bytes == 0 {
+            return Err("serve.http.max_body_bytes must be >= 1".into());
+        }
+        if self.max_header_bytes < 256 {
+            return Err("serve.http.max_header_bytes must be >= 256".into());
+        }
+        if !self.quota_rps.is_finite() || self.quota_rps < 0.0 {
+            return Err("serve.http.quota_rps must be finite and >= 0".into());
+        }
+        if self.quota_rps > 0.0 && (!self.quota_burst.is_finite() || self.quota_burst < 1.0) {
+            return Err("serve.http.quota_burst must be >= 1 when quotas are on".into());
+        }
+        if self.sse_interval_ms == 0 {
+            return Err("serve.http.sse_interval_ms must be >= 1".into());
+        }
+        Ok(())
+    }
+}
+
 /// Top-level run configuration (CLI entry).
 #[derive(Clone, Debug)]
 pub struct RunConfig {
@@ -497,6 +595,65 @@ mod tests {
         let doc = parse("[persist]\ncheckpoint_every = 3").unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().persist.checkpoint_every, 3);
         assert_eq!(RunConfig::default().persist, PersistConfig::default());
+    }
+
+    #[test]
+    fn http_section_parses_with_defaults() {
+        let d = HttpConfig::default();
+        d.validate().unwrap();
+        assert_eq!(d.listen, "127.0.0.1:8080");
+        assert_eq!(d.quota_rps, 0.0, "quotas default off");
+        let doc = parse(
+            r#"
+            [serve.http]
+            listen = "127.0.0.1:0"
+            max_connections = 32
+            read_timeout_ms = 250
+            max_body_bytes = 1048576
+            quota_rps = 50.0
+            quota_burst = 10.0
+            sse_interval_ms = 25
+            "#,
+        )
+        .unwrap();
+        let cfg = HttpConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.listen, "127.0.0.1:0");
+        assert_eq!(cfg.max_connections, 32);
+        assert_eq!(cfg.read_timeout(), std::time::Duration::from_millis(250));
+        assert_eq!(cfg.max_body_bytes, 1 << 20);
+        assert_eq!(cfg.quota_rps, 50.0);
+        assert_eq!(cfg.sse_interval(), std::time::Duration::from_millis(25));
+        // defaults fill the gaps
+        assert_eq!(cfg.max_header_bytes, HttpConfig::default().max_header_bytes);
+    }
+
+    #[test]
+    fn http_invalid_values_rejected() {
+        for bad in [
+            "[serve.http]\nlisten = \"\"",
+            "[serve.http]\nmax_connections = 0",
+            "[serve.http]\nread_timeout_ms = 0",
+            "[serve.http]\nmax_body_bytes = 0",
+            "[serve.http]\nmax_header_bytes = 10",
+            "[serve.http]\nquota_rps = -1.0",
+            "[serve.http]\nquota_rps = 5.0\nquota_burst = 0.5",
+            "[serve.http]\nsse_interval_ms = 0",
+        ] {
+            let doc = parse(bad).unwrap();
+            assert!(HttpConfig::from_doc(&doc).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn serve_http_config_file_parses() {
+        let text = std::fs::read_to_string("configs/serve_http.toml").unwrap();
+        let doc = parse(&text).unwrap();
+        let http = HttpConfig::from_doc(&doc).unwrap();
+        assert!(http.quota_rps > 0.0, "sample config must exercise quotas");
+        // the file also carries coherent [serve] + [loadgen] sections
+        let serve = ServeConfig::from_doc(&doc).unwrap();
+        serve.validate().unwrap();
+        assert!(doc.get("loadgen.clients").is_some());
     }
 
     #[test]

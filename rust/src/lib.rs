@@ -15,7 +15,9 @@
 //!   service engine (bounded queues with backpressure, an LRU threshold
 //!   cache, per-shard telemetry) that turns the one-shot library calls
 //!   into a sustained request/response service (`bilevel serve` /
-//!   `bilevel loadgen`), the [`sparse`] subsystem — structured-sparse
+//!   `bilevel loadgen`) with a dependency-free HTTP/1.1 front-end
+//!   ([`net`]: SSE telemetry, per-client quotas, graceful drain),
+//!   the [`sparse`] subsystem — structured-sparse
 //!   inference (compact plans, feature-dropping model compaction, and
 //!   column-support encode kernels whose cost scales with alive features),
 //!   and the [`persist`] subsystem — versioned, checksummed model
@@ -47,6 +49,8 @@ pub mod experiments;
 pub mod kernels;
 pub mod metrics;
 pub mod model;
+#[deny(clippy::all)]
+pub mod net;
 pub mod norms;
 pub mod persist;
 pub mod projection;

@@ -2,6 +2,7 @@
 //! trainer, and the experiment harness.
 
 use std::process::ExitCode;
+use std::sync::Arc;
 use std::time::Instant;
 
 use std::path::{Path, PathBuf};
@@ -9,16 +10,19 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 use bilevel_sparse::cli::{Args, USAGE};
 use bilevel_sparse::config::{
-    DatasetKind, ProjectionBackend, RunConfig, ServeConfig, TomlDoc, TrainConfig,
+    DatasetKind, HttpConfig, ProjectionBackend, RunConfig, ServeConfig, TomlDoc, TrainConfig,
 };
 use bilevel_sparse::coordinator::{run_seeds, run_seeds_with, RunOptions, SaeTrainer};
 use bilevel_sparse::experiments::{self, ExpContext};
+use bilevel_sparse::net::Server;
 use bilevel_sparse::norms::{column_sparsity, l1inf_norm};
 use bilevel_sparse::persist::{read_header, Checkpoint};
 use bilevel_sparse::projection::{l1::L1Algorithm, ProjectionKind};
 use bilevel_sparse::rng::Xoshiro256pp;
 use bilevel_sparse::runtime::Runtime;
-use bilevel_sparse::serve::{run_loadgen, Dtype, Engine, LoadgenConfig, Payload};
+use bilevel_sparse::serve::{
+    run_loadgen, run_loadgen_net, Dtype, Engine, LoadgenConfig, Payload,
+};
 use bilevel_sparse::tensor::Matrix;
 
 fn main() -> ExitCode {
@@ -223,8 +227,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 }
 
 /// Shared flag/config plumbing for `serve` and `loadgen`: `--config` seeds
-/// both sections, individual flags override.
-fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig)> {
+/// all three sections (`[serve]`, `[serve.http]`, `[loadgen]`), individual
+/// flags override.
+fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig, HttpConfig)> {
     let doc = match args.opt("config") {
         Some(path) => {
             let text =
@@ -269,7 +274,13 @@ fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig)> {
             .collect::<Result<Vec<_>>>()?;
     }
     load.validate().map_err(|e| anyhow!(e))?;
-    Ok((serve, load))
+
+    let mut http = HttpConfig::from_doc(&doc).map_err(|e| anyhow!(e))?;
+    if let Some(listen) = args.opt("listen") {
+        http.listen = listen.to_string();
+    }
+    http.validate().map_err(|e| anyhow!(e))?;
+    Ok((serve, load, http))
 }
 
 /// Parse `--model <path>` (+ `--model-dtype f32|f64`, default f32) for the
@@ -371,6 +382,7 @@ fn run_engine_workload(
         report.cache_hits,
         report.hit_fraction() * 100.0,
     );
+    println!("          {}", report.latency_summary());
     let stats = engine.shutdown();
     print!("{stats}");
     if report.failed > 0 {
@@ -379,8 +391,54 @@ fn run_engine_workload(
     Ok(())
 }
 
+/// Network mode for `serve --listen`: start the engine, put the HTTP
+/// front-end on it, and block until something drains us (`POST /v1/drain`
+/// over the wire, or [`Server::drain`] via signal-free shutdown paths).
+fn run_http_server(
+    serve_cfg: &ServeConfig,
+    http_cfg: &HttpConfig,
+    model: Option<(PathBuf, Dtype)>,
+    addr_file: Option<&str>,
+) -> Result<()> {
+    let engine = Arc::new(Engine::start(serve_cfg).map_err(|e| anyhow!(e))?);
+    if let Some((path, dtype)) = &model {
+        load_and_verify_model(&engine, path, *dtype)?;
+    }
+    let server = Server::start(Arc::clone(&engine), http_cfg).map_err(|e| anyhow!(e))?;
+    let addr = server.addr();
+    println!("listening: http://{addr} (drain with: curl -X POST http://{addr}/v1/drain)");
+    if http_cfg.quota_rps > 0.0 {
+        println!(
+            "quota    : {} req/s per client, burst {}",
+            http_cfg.quota_rps, http_cfg.quota_burst
+        );
+    }
+    if let Some(f) = addr_file {
+        // written last so a watcher that sees the file can connect at once
+        std::fs::write(f, addr.to_string()).map_err(|e| anyhow!("{f}: {e}"))?;
+        println!("addr file: {f}");
+    }
+    server.wait_for_drain();
+    let report = server.join();
+    println!("{report}");
+    let stats = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow!("server leaked an engine reference"))?
+        .shutdown();
+    print!("{stats}");
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (serve_cfg, mut load_cfg) = serve_configs(args)?;
+    let (serve_cfg, mut load_cfg, http_cfg) = serve_configs(args)?;
+    if args.opt("listen").is_some() {
+        println!("bilevel serve — HTTP projection service");
+        return run_http_server(
+            &serve_cfg,
+            &http_cfg,
+            model_arg(args)?,
+            args.opt("addr-file"),
+        );
+    }
     // `serve` validates a configuration with a short smoke workload unless
     // the caller asked for specific volumes.
     if args.opt("requests").is_none() {
@@ -394,7 +452,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    let (serve_cfg, load_cfg) = serve_configs(args)?;
+    let (serve_cfg, load_cfg, _http_cfg) = serve_configs(args)?;
+    if let Some(addr) = args.opt("connect") {
+        println!("bilevel loadgen — network closed-loop benchmark against {addr}");
+        let report = run_loadgen_net(addr, &load_cfg).map_err(|e| anyhow!(e))?;
+        println!(
+            "client  : {} completed, {} failed, {} backpressure retries",
+            report.completed, report.failed, report.retries
+        );
+        println!(
+            "          {:.0} req/s, latency mean {:.0} us, cache hits {} ({:.1} %)",
+            report.throughput_rps(),
+            report.mean_latency_micros(),
+            report.cache_hits,
+            report.hit_fraction() * 100.0,
+        );
+        println!("          {}", report.latency_summary());
+        if report.failed > 0 {
+            return Err(anyhow!("{} requests failed", report.failed));
+        }
+        return Ok(());
+    }
     println!("bilevel loadgen — closed-loop engine benchmark");
     run_engine_workload(&serve_cfg, &load_cfg, model_arg(args)?)
 }

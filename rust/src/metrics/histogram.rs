@@ -1,0 +1,239 @@
+//! Log-bucketed latency histogram.
+//!
+//! [`LatencyHistogram`] records microsecond observations into
+//! geometrically-spaced buckets: values below 16 µs get one bucket each,
+//! and every power-of-two octave above that is split into 8 sub-buckets,
+//! so a reported quantile is at most ~12.5 % above the true value while
+//! the whole histogram stays a fixed 496 × u64 — cheap enough to keep one
+//! per load-generator client and merge at the end. The serve loadgen (both
+//! in-process and network mode) reports p50/p99/p999 from it, replacing
+//! mean/max-only latency accounting that hides tail behaviour.
+//!
+//! This is a plain (non-atomic) accumulator: writers own their histogram
+//! and [`LatencyHistogram::merge`] combines thread-local tallies, matching
+//! the aggregation pattern already used by `serve::loadgen::LoadReport`.
+
+/// Sub-bucket resolution: 2^3 = 8 sub-buckets per octave.
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS;
+/// Bucket count covering the full u64 range (shift ≤ 60 ⇒ index < 496).
+const N_BUCKETS: usize = 496;
+
+/// Index of the bucket holding `v` (microseconds).
+#[inline]
+fn bucket_index(v: u64) -> usize {
+    if v < 2 * SUB {
+        return v as usize;
+    }
+    // v ≥ 16 ⇒ top ≥ 4 ⇒ shift ≥ 1; (v >> shift) ∈ [SUB, 2·SUB).
+    let top = 63 - v.leading_zeros();
+    let shift = top - SUB_BITS;
+    let index = (shift as u64 * SUB + (v >> shift)) as usize;
+    index.min(N_BUCKETS - 1)
+}
+
+/// Largest value mapping into bucket `i` (inclusive upper bound).
+#[inline]
+fn bucket_upper(i: usize) -> u64 {
+    if i < (2 * SUB) as usize {
+        return i as u64;
+    }
+    let shift = (i as u64 / SUB) - 1;
+    let mantissa = i as u64 - shift * SUB;
+    ((mantissa + 1) << shift) - 1
+}
+
+/// Fixed-size log-bucketed histogram of microsecond latencies.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    total_micros: u64,
+    max_micros: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self { counts: vec![0; N_BUCKETS], count: 0, total_micros: 0, max_micros: 0 }
+    }
+
+    /// Record one observation (microseconds).
+    pub fn record_micros(&mut self, micros: u64) {
+        self.counts[bucket_index(micros)] += 1;
+        self.count += 1;
+        self.total_micros = self.total_micros.saturating_add(micros);
+        self.max_micros = self.max_micros.max(micros);
+    }
+
+    /// Fold another histogram's tallies into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.total_micros = self.total_micros.saturating_add(other.total_micros);
+        self.max_micros = self.max_micros.max(other.max_micros);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max_micros(&self) -> u64 {
+        self.max_micros
+    }
+
+    pub fn mean_micros(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_micros as f64 / self.count as f64
+        }
+    }
+
+    /// Value at quantile `q` ∈ [0, 1]: the upper bound of the bucket
+    /// holding the ⌈q·n⌉-th smallest observation (≤ ~12.5 % above the true
+    /// order statistic), clamped to the recorded maximum so `quantile(1.0)`
+    /// is exact. Returns 0 on an empty histogram.
+    pub fn quantile_micros(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i).min(self.max_micros);
+            }
+        }
+        self.max_micros
+    }
+
+    pub fn p50_micros(&self) -> u64 {
+        self.quantile_micros(0.50)
+    }
+
+    pub fn p99_micros(&self) -> u64 {
+        self.quantile_micros(0.99)
+    }
+
+    pub fn p999_micros(&self) -> u64 {
+        self.quantile_micros(0.999)
+    }
+
+    /// One-line `p50/p99/p999/max` summary for CLI and bench output.
+    pub fn summary(&self) -> String {
+        format!(
+            "p50 {} us, p99 {} us, p999 {} us, max {} us",
+            self.p50_micros(),
+            self.p99_micros(),
+            self.p999_micros(),
+            self.max_micros
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_contiguous_and_monotonic() {
+        // Every value maps into a bucket whose bounds contain it, and
+        // bucket indices never decrease with the value.
+        let mut last = 0usize;
+        for v in (0u64..4096).chain([1 << 20, (1 << 20) + 1, u64::MAX >> 1, u64::MAX]) {
+            let i = bucket_index(v);
+            assert!(i >= last || v < 4096, "index regressed at {v}");
+            if v < 4096 {
+                assert!(v <= bucket_upper(i), "v={v} above upper bound of bucket {i}");
+                if i > 0 {
+                    assert!(v > bucket_upper(i - 1), "v={v} below bucket {i}");
+                }
+                last = i;
+            }
+            assert!(i < N_BUCKETS);
+        }
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LatencyHistogram::new();
+        for v in [0u64, 1, 5, 15] {
+            h.record_micros(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.quantile_micros(0.25), 0);
+        assert_eq!(h.quantile_micros(0.5), 1);
+        assert_eq!(h.quantile_micros(0.75), 5);
+        assert_eq!(h.quantile_micros(1.0), 15);
+        assert_eq!(h.max_micros(), 15);
+    }
+
+    #[test]
+    fn quantile_error_is_bounded() {
+        // Uniform 1..=100_000: each reported quantile must be within
+        // +12.5 % of the true order statistic (and never below it).
+        let mut h = LatencyHistogram::new();
+        for v in 1..=100_000u64 {
+            h.record_micros(v);
+        }
+        for (q, truth) in [(0.5, 50_000u64), (0.99, 99_000), (0.999, 99_900)] {
+            let got = h.quantile_micros(q);
+            assert!(got >= truth, "q={q}: {got} < {truth}");
+            assert!((got as f64) <= truth as f64 * 1.125 + 1.0, "q={q}: {got} >> {truth}");
+        }
+    }
+
+    #[test]
+    fn merge_combines_tallies() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for v in [10u64, 20, 30] {
+            a.record_micros(v);
+        }
+        for v in [1_000u64, 2_000] {
+            b.record_micros(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 5);
+        assert_eq!(a.max_micros(), 2_000);
+        assert!(a.mean_micros() > 0.0);
+        // p50 of {10,20,30,1000,2000} sits in 30's bucket
+        assert!(a.p50_micros() >= 30 && a.p50_micros() <= 34, "{}", a.p50_micros());
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_micros(0.5), 0);
+        assert_eq!(h.mean_micros(), 0.0);
+        assert!(h.summary().contains("p50 0 us"));
+    }
+
+    #[test]
+    fn quantiles_never_decrease_with_q() {
+        let mut h = LatencyHistogram::new();
+        let mut x = 7u64;
+        for _ in 0..5_000 {
+            // cheap LCG spread over ~6 orders of magnitude
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            h.record_micros(x % 3_000_000);
+        }
+        let mut last = 0u64;
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let v = h.quantile_micros(q);
+            assert!(v >= last, "quantile decreased at q={q}");
+            last = v;
+        }
+        assert_eq!(h.quantile_micros(1.0), h.max_micros());
+    }
+}

@@ -1,10 +1,14 @@
 //! Evaluation metrics + aggregation across seeds/folds, plus the atomic
 //! operational counters ([`counters`]) that the serve engine publishes its
-//! per-shard latency / throughput / hit-rate telemetry through.
+//! per-shard latency / throughput / hit-rate telemetry through, and the
+//! log-bucketed [`LatencyHistogram`] the load generators report
+//! p50/p99/p999 tail latency from.
 
 pub mod counters;
+pub mod histogram;
 
 pub use counters::{Counter, LatencyStat};
+pub use histogram::LatencyHistogram;
 
 use crate::scalar::Scalar;
 use crate::tensor::Matrix;

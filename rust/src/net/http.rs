@@ -1,0 +1,600 @@
+//! HTTP/1.1 message primitives over plain `std::io` streams.
+//!
+//! Dependency-free request parsing and response writing for the serve
+//! front-end, plus the client half the network loadgen and integration
+//! tests drive. Hardening is part of the contract, not an afterthought:
+//!
+//! * header section capped at [`HttpLimits::max_header_bytes`] → `431`
+//! * bodies (Content-Length **and** decoded chunked) capped at
+//!   [`HttpLimits::max_body_bytes`] → `413`
+//! * slow/stalled peers surface as [`HttpError::TimedOut`] (the server
+//!   sets `set_read_timeout` on the socket) → `408`
+//! * anything structurally wrong is [`HttpError::Malformed`] → `400`
+//!
+//! Keep-alive is the default for HTTP/1.1 peers; `Connection: close` (or
+//! an HTTP/1.0 request) closes after the response. Chunked
+//! transfer-encoding is supported both ways — the SSE stats stream writes
+//! chunks via [`write_response_head`] / [`write_chunk`].
+
+use std::fmt;
+use std::io::{self, BufRead, Read, Write};
+
+/// Parse-time resource limits (wired from `[serve.http]`).
+#[derive(Clone, Copy, Debug)]
+pub struct HttpLimits {
+    pub max_header_bytes: usize,
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpLimits {
+    fn default() -> Self {
+        Self { max_header_bytes: 16 * 1024, max_body_bytes: 16 * 1024 * 1024 }
+    }
+}
+
+/// Why reading an HTTP message failed. Each variant maps to one status
+/// code in the connection loop (see module docs).
+#[derive(Debug)]
+pub enum HttpError {
+    /// Structurally invalid message (bad request line, header, chunk…).
+    Malformed(String),
+    /// Header section exceeded `max_header_bytes`.
+    HeadersTooLarge,
+    /// Declared or decoded body exceeded `max_body_bytes`.
+    BodyTooLarge,
+    /// Peer closed the connection mid-message.
+    UnexpectedEof,
+    /// Read timeout expired (slow or stalled peer).
+    TimedOut,
+    /// Any other transport error.
+    Io(io::Error),
+}
+
+impl fmt::Display for HttpError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Malformed(msg) => write!(f, "malformed message: {msg}"),
+            Self::HeadersTooLarge => write!(f, "header section too large"),
+            Self::BodyTooLarge => write!(f, "body too large"),
+            Self::UnexpectedEof => write!(f, "connection closed mid-message"),
+            Self::TimedOut => write!(f, "read timed out"),
+            Self::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for HttpError {}
+
+impl From<io::Error> for HttpError {
+    fn from(e: io::Error) -> Self {
+        match e.kind() {
+            // Unix reports an expired SO_RCVTIMEO as WouldBlock.
+            io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut => Self::TimedOut,
+            io::ErrorKind::UnexpectedEof => Self::UnexpectedEof,
+            _ => Self::Io(e),
+        }
+    }
+}
+
+/// A parsed request. Header names are lowercased at parse time; values
+/// keep their bytes (trimmed).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// Path without the query string.
+    pub path: String,
+    /// Raw query string (no leading `?`), empty if absent.
+    pub query: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    /// False for HTTP/1.0 peers (implies `Connection: close` semantics).
+    pub http11: bool,
+}
+
+impl Request {
+    /// First header value by (case-insensitive) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Value of `name` in the query string (`a=1&b=2` form; no decoding).
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=')?;
+            (k == name).then_some(v)
+        })
+    }
+
+    /// Whether the client asked to keep the connection open.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v.contains("close") => false,
+            Some(v) if v.contains("keep-alive") => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// A parsed response (client side). Chunked bodies arrive already
+/// de-chunked; use [`read_response_head`] + [`read_chunk`] instead to
+/// stream (SSE).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(k, _)| *k == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Standard reason phrase for the status codes the front-end emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "",
+    }
+}
+
+/// Read one CRLF- (or LF-) terminated line, excluding the terminator.
+/// `budget` is decremented by the bytes consumed. `Ok(None)` only at
+/// clean EOF before the first byte.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+) -> Result<Option<String>, HttpError> {
+    let mut line = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if line.is_empty() {
+                    return Ok(None);
+                }
+                return Err(HttpError::UnexpectedEof);
+            }
+            Ok(_) => {
+                if *budget == 0 {
+                    return Err(HttpError::HeadersTooLarge);
+                }
+                *budget -= 1;
+                if byte[0] == b'\n' {
+                    if line.last() == Some(&b'\r') {
+                        line.pop();
+                    }
+                    return Ok(Some(String::from_utf8(line).map_err(|_| {
+                        HttpError::Malformed("non-UTF-8 header line".into())
+                    })?));
+                }
+                line.push(byte[0]);
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Read the header block (after the start line) into lowercased pairs.
+fn read_headers<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+) -> Result<Vec<(String, String)>, HttpError> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r, budget)?.ok_or(HttpError::UnexpectedEof)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| HttpError::Malformed(format!("header without colon: {line:?}")))?;
+        if name.is_empty() || name.contains(' ') {
+            return Err(HttpError::Malformed(format!("invalid header name: {name:?}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+/// Read a message body given the parsed headers.
+fn read_body<R: BufRead>(
+    r: &mut R,
+    headers: &[(String, String)],
+    limits: &HttpLimits,
+) -> Result<Vec<u8>, HttpError> {
+    let find = |name: &str| headers.iter().find(|(k, _)| k == name).map(|(_, v)| v.as_str());
+    if let Some(te) = find("transfer-encoding") {
+        if !te.eq_ignore_ascii_case("chunked") {
+            return Err(HttpError::Malformed(format!("unsupported transfer-encoding {te:?}")));
+        }
+        let mut body = Vec::new();
+        while let Some(chunk) = read_chunk_limited(r, limits.max_body_bytes)? {
+            if body.len() + chunk.len() > limits.max_body_bytes {
+                return Err(HttpError::BodyTooLarge);
+            }
+            body.extend_from_slice(&chunk);
+        }
+        return Ok(body);
+    }
+    match find("content-length") {
+        Some(v) => {
+            let n: usize = v
+                .trim()
+                .parse()
+                .map_err(|_| HttpError::Malformed(format!("bad content-length {v:?}")))?;
+            if n > limits.max_body_bytes {
+                return Err(HttpError::BodyTooLarge);
+            }
+            let mut body = vec![0u8; n];
+            r.read_exact(&mut body)?;
+            Ok(body)
+        }
+        None => Ok(Vec::new()),
+    }
+}
+
+/// Server side: read one request. `Ok(None)` means the peer closed the
+/// connection cleanly between requests (normal keep-alive end). A
+/// `100-continue` expectation is acknowledged on `w` before the body is
+/// read (curl sends it for large payloads and stalls without the ack).
+pub fn read_request<R: BufRead, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    limits: &HttpLimits,
+) -> Result<Option<Request>, HttpError> {
+    let mut budget = limits.max_header_bytes;
+    let Some(start) = read_line(r, &mut budget)? else {
+        return Ok(None);
+    };
+    let mut parts = start.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) if !m.is_empty() && !t.is_empty() => (m, t, v),
+        _ => return Err(HttpError::Malformed(format!("bad request line: {start:?}"))),
+    };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        other => return Err(HttpError::Malformed(format!("unsupported version {other:?}"))),
+    };
+    let headers = read_headers(r, &mut budget)?;
+    if headers
+        .iter()
+        .any(|(k, v)| k == "expect" && v.eq_ignore_ascii_case("100-continue"))
+    {
+        w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n")?;
+        w.flush()?;
+    }
+    let body = read_body(r, &headers, limits)?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    Ok(Some(Request { method: method.to_string(), path, query, headers, body, http11 }))
+}
+
+/// Write a complete response with `Content-Length` framing.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+    extra_headers: &[(String, String)],
+    keep_alive: bool,
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    write!(w, "Connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Write a response head announcing a chunked body (streaming / SSE).
+pub fn write_response_head<W: Write>(
+    w: &mut W,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(String, String)],
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {}\r\n", reason(status))?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    w.write_all(b"Transfer-Encoding: chunked\r\n")?;
+    w.write_all(b"Cache-Control: no-store\r\n")?;
+    for (k, v) in extra_headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"Connection: close\r\n\r\n")?;
+    w.flush()
+}
+
+/// Write one transfer-encoding chunk (no-op for empty data — an empty
+/// chunk would terminate the stream).
+pub fn write_chunk<W: Write>(w: &mut W, data: &[u8]) -> io::Result<()> {
+    if data.is_empty() {
+        return Ok(());
+    }
+    write!(w, "{:x}\r\n", data.len())?;
+    w.write_all(data)?;
+    w.write_all(b"\r\n")?;
+    w.flush()
+}
+
+/// Terminate a chunked body.
+pub fn finish_chunks<W: Write>(w: &mut W) -> io::Result<()> {
+    w.write_all(b"0\r\n\r\n")?;
+    w.flush()
+}
+
+/// Client side: write a request with `Content-Length` framing.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    target: &str,
+    headers: &[(String, String)],
+    body: &[u8],
+) -> io::Result<()> {
+    write!(w, "{method} {target} HTTP/1.1\r\n")?;
+    for (k, v) in headers {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    if !body.is_empty() || method == "POST" {
+        write!(w, "Content-Length: {}\r\n", body.len())?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Client side: read a response head (status + headers), body not yet
+/// consumed. Use when the body is a chunked stream to iterate with
+/// [`read_chunk`].
+pub fn read_response_head<R: BufRead>(
+    r: &mut R,
+    limits: &HttpLimits,
+) -> Result<(u16, Vec<(String, String)>), HttpError> {
+    let mut budget = limits.max_header_bytes;
+    let start = read_line(r, &mut budget)?.ok_or(HttpError::UnexpectedEof)?;
+    let mut parts = start.split(' ');
+    let (version, code) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed(format!("bad status line: {start:?}")));
+    }
+    let status: u16 = code
+        .parse()
+        .map_err(|_| HttpError::Malformed(format!("bad status code {code:?}")))?;
+    let headers = read_headers(r, &mut budget)?;
+    Ok((status, headers))
+}
+
+/// Client side: read a complete response (chunked bodies de-chunked).
+pub fn read_response<R: BufRead>(r: &mut R, limits: &HttpLimits) -> Result<Response, HttpError> {
+    let (status, headers) = read_response_head(r, limits)?;
+    let body = read_body(r, &headers, limits)?;
+    Ok(Response { status, headers, body })
+}
+
+/// Read one chunk of a chunked body; `Ok(None)` at the terminating
+/// 0-chunk (trailers consumed).
+pub fn read_chunk<R: BufRead>(r: &mut R) -> Result<Option<Vec<u8>>, HttpError> {
+    read_chunk_limited(r, usize::MAX)
+}
+
+fn read_chunk_limited<R: BufRead>(
+    r: &mut R,
+    max: usize,
+) -> Result<Option<Vec<u8>>, HttpError> {
+    // Chunk-size lines are tiny; a generous fixed budget suffices.
+    let mut budget = 1024;
+    let line = read_line(r, &mut budget)?.ok_or(HttpError::UnexpectedEof)?;
+    let size_str = line.split(';').next().unwrap_or("").trim();
+    let size = usize::from_str_radix(size_str, 16)
+        .map_err(|_| HttpError::Malformed(format!("bad chunk size {size_str:?}")))?;
+    if size == 0 {
+        // trailers (if any) end with an empty line
+        loop {
+            let mut budget = 1024;
+            let t = read_line(r, &mut budget)?.ok_or(HttpError::UnexpectedEof)?;
+            if t.is_empty() {
+                return Ok(None);
+            }
+        }
+    }
+    if size > max {
+        return Err(HttpError::BodyTooLarge);
+    }
+    let mut data = vec![0u8; size];
+    r.read_exact(&mut data)?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)?;
+    if &crlf != b"\r\n" {
+        return Err(HttpError::Malformed("chunk not CRLF-terminated".into()));
+    }
+    Ok(Some(data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8], limits: &HttpLimits) -> Result<Option<Request>, HttpError> {
+        let mut sink = Vec::new();
+        read_request(&mut Cursor::new(raw), &mut sink, limits)
+    }
+
+    #[test]
+    fn parses_a_basic_request() {
+        let raw = b"POST /v1/project?n=3 HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\nX-Client-Id: abc\r\n\r\nhello";
+        let req = parse(raw, &HttpLimits::default()).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/project");
+        assert_eq!(req.query, "n=3");
+        assert_eq!(req.query_param("n"), Some("3"));
+        assert_eq!(req.query_param("missing"), None);
+        assert_eq!(req.header("x-client-id"), Some("abc"));
+        assert_eq!(req.header("X-CLIENT-ID"), Some("abc"));
+        assert_eq!(req.body, b"hello");
+        assert!(req.http11);
+        assert!(req.keep_alive());
+    }
+
+    #[test]
+    fn connection_close_and_http10() {
+        let raw = b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n";
+        let req = parse(raw, &HttpLimits::default()).unwrap().unwrap();
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\n\r\n";
+        let req = parse(raw, &HttpLimits::default()).unwrap().unwrap();
+        assert!(!req.http11);
+        assert!(!req.keep_alive());
+        let raw = b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n";
+        assert!(parse(raw, &HttpLimits::default()).unwrap().unwrap().keep_alive());
+    }
+
+    #[test]
+    fn clean_eof_is_none_mid_message_is_error() {
+        assert!(parse(b"", &HttpLimits::default()).unwrap().is_none());
+        assert!(matches!(
+            parse(b"GET / HT", &HttpLimits::default()),
+            Err(HttpError::UnexpectedEof)
+        ));
+        assert!(matches!(
+            parse(b"GET / HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc", &HttpLimits::default()),
+            Err(HttpError::UnexpectedEof)
+        ));
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        for raw in [
+            &b"NOT-A-REQUEST\r\n\r\n"[..],
+            b"GET / SPDY/3\r\n\r\n",
+            b"GET / HTTP/1.1 extra\r\n\r\n",
+            b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET / HTTP/1.1\r\nContent-Length: banana\r\n\r\n",
+            b"GET / HTTP/1.1\r\nTransfer-Encoding: gzip\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse(raw, &HttpLimits::default()), Err(HttpError::Malformed(_))),
+                "accepted {:?}",
+                String::from_utf8_lossy(raw)
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_headers_and_bodies_are_rejected() {
+        let limits = HttpLimits { max_header_bytes: 64, max_body_bytes: 8 };
+        let raw = format!("GET / HTTP/1.1\r\nX-Pad: {}\r\n\r\n", "a".repeat(100));
+        assert!(matches!(parse(raw.as_bytes(), &limits), Err(HttpError::HeadersTooLarge)));
+        // declared oversized body is rejected without reading it
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 9\r\n\r\n123456789";
+        assert!(matches!(parse(raw, &limits), Err(HttpError::BodyTooLarge)));
+        // chunked body that decodes past the cap is rejected too
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n6\r\nabcdef\r\n6\r\nghijkl\r\n0\r\n\r\n";
+        assert!(matches!(parse(raw, &limits), Err(HttpError::BodyTooLarge)));
+    }
+
+    #[test]
+    fn chunked_request_body_is_decoded() {
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n5\r\nhello\r\n6\r\n world\r\n0\r\n\r\n";
+        let req = parse(raw, &HttpLimits::default()).unwrap().unwrap();
+        assert_eq!(req.body, b"hello world");
+    }
+
+    #[test]
+    fn expect_100_continue_is_acknowledged() {
+        let raw = b"POST / HTTP/1.1\r\nExpect: 100-continue\r\nContent-Length: 2\r\n\r\nok";
+        let mut ack = Vec::new();
+        let req = read_request(&mut Cursor::new(&raw[..]), &mut ack, &HttpLimits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.body, b"ok");
+        assert!(ack.starts_with(b"HTTP/1.1 100 Continue"));
+    }
+
+    #[test]
+    fn response_round_trip() {
+        let mut buf = Vec::new();
+        write_response(
+            &mut buf,
+            429,
+            "application/json",
+            b"{\"error\":\"overloaded\"}",
+            &[("Retry-After".into(), "1".into())],
+            true,
+        )
+        .unwrap();
+        let resp = read_response(&mut Cursor::new(&buf), &HttpLimits::default()).unwrap();
+        assert_eq!(resp.status, 429);
+        assert_eq!(resp.header("retry-after"), Some("1"));
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.body, b"{\"error\":\"overloaded\"}");
+    }
+
+    #[test]
+    fn chunked_response_streams_and_terminates() {
+        let mut buf = Vec::new();
+        write_response_head(&mut buf, 200, "text/event-stream", &[]).unwrap();
+        write_chunk(&mut buf, b"event: stats\ndata: {}\n\n").unwrap();
+        write_chunk(&mut buf, b"").unwrap(); // no-op, must not terminate
+        write_chunk(&mut buf, b"second").unwrap();
+        finish_chunks(&mut buf).unwrap();
+        let mut r = Cursor::new(&buf);
+        let (status, headers) = read_response_head(&mut r, &HttpLimits::default()).unwrap();
+        assert_eq!(status, 200);
+        assert!(headers.iter().any(|(k, v)| k == "transfer-encoding" && v == "chunked"));
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"event: stats\ndata: {}\n\n");
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"second");
+        assert!(read_chunk(&mut r).unwrap().is_none());
+        // whole-body read path de-chunks the same bytes
+        let mut r = Cursor::new(&buf);
+        let resp = read_response(&mut r, &HttpLimits::default()).unwrap();
+        assert_eq!(resp.body, b"event: stats\ndata: {}\n\nsecond");
+    }
+
+    #[test]
+    fn client_request_writer_frames_posts() {
+        let mut buf = Vec::new();
+        write_request(&mut buf, "POST", "/v1/project", &[("Host".into(), "x".into())], b"{}")
+            .unwrap();
+        let mut sink = Vec::new();
+        let req = read_request(&mut Cursor::new(&buf), &mut sink, &HttpLimits::default())
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{}");
+        // GET with no body carries no Content-Length
+        let mut buf = Vec::new();
+        write_request(&mut buf, "GET", "/healthz", &[], b"").unwrap();
+        assert!(!String::from_utf8(buf).unwrap().contains("Content-Length"));
+    }
+
+    #[test]
+    fn timeout_error_kind_maps() {
+        let e: HttpError = io::Error::new(io::ErrorKind::WouldBlock, "t").into();
+        assert!(matches!(e, HttpError::TimedOut));
+        let e: HttpError = io::Error::new(io::ErrorKind::TimedOut, "t").into();
+        assert!(matches!(e, HttpError::TimedOut));
+        let e: HttpError = io::Error::new(io::ErrorKind::BrokenPipe, "t").into();
+        assert!(matches!(e, HttpError::Io(_)));
+    }
+}

@@ -1,0 +1,39 @@
+//! Dependency-free HTTP/1.1 front-end for the serve engine.
+//!
+//! Everything here is built on `std::net` — no async runtime, no serde,
+//! no HTTP crate (the vendored registry is offline). The layering:
+//!
+//! | module | role |
+//! |---|---|
+//! | [`http`] | HTTP/1.1 parse/serialize: keep-alive, chunked transfer, hardened with read timeouts and header/body size caps |
+//! | [`wire`] | JSON encode/decode for payloads, responses, stats — bit-exact `f32`/`f64` round trips via shortest-representation formatting |
+//! | [`quota`] | per-client token-bucket admission ([`QuotaGate`]) |
+//! | [`routes`] | URL → engine dispatch, typed [`RouteError`] → status/headers, SSE stats streaming |
+//! | [`server`] | bind/accept/drain lifecycle ([`Server`]), thread-per-connection |
+//!
+//! Routes:
+//!
+//! * `POST /v1/project` — run one projection (`Engine::submit_wait`)
+//! * `POST /v1/encode/{model}` — sparse encode through a registered model
+//! * `GET /v1/stats` — engine counters snapshot (JSON)
+//! * `GET /v1/models` — registered encoder inventory
+//! * `GET /v1/events[?n=K]` — Server-Sent Events stream of stats snapshots
+//! * `GET /healthz` — 200 `ok`, or 503 once draining
+//! * `POST /v1/drain` — begin graceful drain
+//!
+//! Backpressure surfaces as HTTP 429 with both `Retry-After` (whole
+//! seconds) and `X-Retry-After-Micros` (exact) headers; quota rejections
+//! and engine-queue overload carry distinct error tags so clients can
+//! tell "slow down" from "server is saturated".
+
+pub mod http;
+pub mod quota;
+pub mod routes;
+pub mod server;
+pub mod wire;
+
+pub use http::{HttpError, HttpLimits, Request, Response};
+pub use quota::QuotaGate;
+pub use routes::{dispatch, stream_stats, Action, RouteCtx, RouteError};
+pub use server::{NetError, NetReport, Server};
+pub use wire::Json;

@@ -1,0 +1,581 @@
+//! Server lifecycle: bind, accept, serve, drain.
+//!
+//! Thread-per-connection over `std::net::TcpListener`, matching the
+//! repo's hand-rolled threading style (no async runtime): one named
+//! accept thread, one named handler thread per connection, bounded by
+//! `max_connections` (excess connections are refused with 503 without
+//! spawning).
+//!
+//! **Graceful drain** (`POST /v1/drain` or [`Server::drain`]):
+//! 1. the draining flag flips (new submits on live connections get 503,
+//!    `/healthz` reports 503 — load balancers stop routing here);
+//! 2. a self-connect pokes the accept loop awake so it stops accepting;
+//! 3. every connection's **read** half is shut down — handlers blocked
+//!    waiting for the next keep-alive request wake up with EOF and exit,
+//!    while responses still in flight keep their write half and complete.
+//! No accepted request is abandoned: a request that was fully read and
+//! dispatched always gets its response written. This composes with
+//! `Engine::swap_model` hot-swaps (admission resolves encoder `Arc`s), and
+//! the `net_integration` suite drives both at once under client traffic.
+//!
+//! Bind failures are typed ([`NetError`]): a malformed listen address, a
+//! port already in use, and other bind errors each render a clear message
+//! instead of a panic.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::io::{self, BufReader};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::config::HttpConfig;
+use crate::metrics::Counter;
+use crate::serve::Engine;
+
+use super::http::{self, HttpError, HttpLimits};
+use super::quota::QuotaGate;
+use super::routes::{dispatch, stream_stats, Action, RouteCtx, RouteError};
+use super::wire;
+
+/// Why the front-end could not start (or perform I/O).
+#[derive(Debug)]
+pub enum NetError {
+    /// The listen address did not parse as numeric `ip:port`.
+    MalformedAddr { addr: String, source: String },
+    /// Another process (or server) already owns the port.
+    AddrInUse { addr: String },
+    /// Any other bind failure (permissions, missing interface…).
+    Bind { addr: String, source: String },
+    /// Invalid `[serve.http]` configuration.
+    Config(String),
+    Io(String),
+}
+
+impl fmt::Display for NetError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::MalformedAddr { addr, source } => {
+                write!(f, "malformed listen address {addr:?} (expected ip:port): {source}")
+            }
+            Self::AddrInUse { addr } => {
+                write!(f, "listen address {addr:?} is already in use")
+            }
+            Self::Bind { addr, source } => write!(f, "binding {addr:?}: {source}"),
+            Self::Config(msg) => write!(f, "invalid http config: {msg}"),
+            Self::Io(msg) => write!(f, "network error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Front-end counters (relaxed atomics, server lifetime).
+#[derive(Debug, Default)]
+struct NetCounters {
+    accepted: Counter,
+    refused: Counter,
+    served_ok: Counter,
+    served_err: Counter,
+    quota_rejected: Counter,
+    overloaded: Counter,
+}
+
+/// Point-in-time snapshot of the front-end counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetReport {
+    /// Connections accepted and handed to a handler thread.
+    pub accepted_connections: u64,
+    /// Connections refused at the `max_connections` cap (503, no thread).
+    pub refused_connections: u64,
+    /// Requests answered 2xx.
+    pub served_ok: u64,
+    /// Requests answered with an error status.
+    pub served_err: u64,
+    /// 429s from per-client quota exhaustion.
+    pub quota_rejected: u64,
+    /// 429s from engine queue overload.
+    pub overloaded: u64,
+}
+
+impl fmt::Display for NetReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "http: conns {} (+{} refused) | ok {} | err {} | 429 quota {} | 429 overload {}",
+            self.accepted_connections,
+            self.refused_connections,
+            self.served_ok,
+            self.served_err,
+            self.quota_rejected,
+            self.overloaded,
+        )
+    }
+}
+
+/// State shared by the accept loop and every handler thread.
+struct Shared {
+    engine: Arc<Engine>,
+    cfg: HttpConfig,
+    limits: HttpLimits,
+    quota: Option<QuotaGate>,
+    draining: AtomicBool,
+    counters: NetCounters,
+    /// Read-half clones of live connections, for drain wake-up.
+    conns: Mutex<HashMap<u64, TcpStream>>,
+    handlers: Mutex<Vec<JoinHandle<()>>>,
+    next_conn: AtomicU64,
+    active: AtomicUsize,
+    addr: SocketAddr,
+}
+
+impl Shared {
+    fn report(&self) -> NetReport {
+        NetReport {
+            accepted_connections: self.counters.accepted.get(),
+            refused_connections: self.counters.refused.get(),
+            served_ok: self.counters.served_ok.get(),
+            served_err: self.counters.served_err.get(),
+            quota_rejected: self.counters.quota_rejected.get(),
+            overloaded: self.counters.overloaded.get(),
+        }
+    }
+}
+
+/// The HTTP front-end. Bind with [`Server::start`]; stop with
+/// [`Server::join`] (drains first). Dropping without joining drains and
+/// joins too — a server can never leak threads.
+pub struct Server {
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Validate `cfg`, bind the listener, and spawn the accept loop.
+    pub fn start(engine: Arc<Engine>, cfg: &HttpConfig) -> Result<Server, NetError> {
+        cfg.validate().map_err(NetError::Config)?;
+        let addr: SocketAddr = cfg.listen.parse().map_err(|e: std::net::AddrParseError| {
+            NetError::MalformedAddr { addr: cfg.listen.clone(), source: e.to_string() }
+        })?;
+        let listener = TcpListener::bind(addr).map_err(|e| match e.kind() {
+            io::ErrorKind::AddrInUse => NetError::AddrInUse { addr: cfg.listen.clone() },
+            _ => NetError::Bind { addr: cfg.listen.clone(), source: e.to_string() },
+        })?;
+        let local = listener.local_addr().map_err(|e| NetError::Io(e.to_string()))?;
+        let quota = if cfg.quota_rps > 0.0 {
+            Some(QuotaGate::new(cfg.quota_rps, cfg.quota_burst))
+        } else {
+            None
+        };
+        let shared = Arc::new(Shared {
+            engine,
+            limits: HttpLimits {
+                max_header_bytes: cfg.max_header_bytes,
+                max_body_bytes: cfg.max_body_bytes,
+            },
+            cfg: cfg.clone(),
+            quota,
+            draining: AtomicBool::new(false),
+            counters: NetCounters::default(),
+            conns: Mutex::new(HashMap::new()),
+            handlers: Mutex::new(Vec::new()),
+            next_conn: AtomicU64::new(0),
+            active: AtomicUsize::new(0),
+            addr: local,
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::Builder::new()
+            .name("http-accept".into())
+            .spawn(move || accept_loop(&listener, &accept_shared))
+            .map_err(|e| NetError::Io(format!("spawning accept thread: {e}")))?;
+        Ok(Server { shared, accept: Some(accept) })
+    }
+
+    /// The bound address (resolves `:0` to the OS-assigned port).
+    pub fn addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Connections currently being handled.
+    pub fn active_connections(&self) -> usize {
+        self.shared.active.load(Ordering::SeqCst)
+    }
+
+    /// Initiate a graceful drain (idempotent; see module docs).
+    pub fn drain(&self) {
+        begin_drain(&self.shared);
+    }
+
+    pub fn report(&self) -> NetReport {
+        self.shared.report()
+    }
+
+    /// Block until a drain has been initiated (here or via `POST
+    /// /v1/drain`) and every connection has finished — the CLI's
+    /// foreground wait.
+    pub fn wait_for_drain(&self) {
+        loop {
+            if self.is_draining() && self.active_connections() == 0 {
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(25));
+        }
+    }
+
+    /// Drain (if not already draining), join every thread, and return the
+    /// final counters. In-flight requests complete first.
+    pub fn join(mut self) -> NetReport {
+        self.finish();
+        self.shared.report()
+    }
+
+    fn finish(&mut self) {
+        if self.accept.is_none() {
+            return;
+        }
+        begin_drain(&self.shared);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        loop {
+            let drained: Vec<_> = std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+            if drained.is_empty() {
+                break;
+            }
+            for h in drained {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// Flip the drain flag (first caller only), wake the accept loop, and
+/// wake handlers parked between keep-alive requests.
+fn begin_drain(shared: &Shared) {
+    if shared.draining.swap(true, Ordering::SeqCst) {
+        return;
+    }
+    // Poke the accept loop out of its blocking accept(). The loop sees
+    // the flag and exits; the poke connection itself is refused.
+    let _ = TcpStream::connect(shared.addr);
+    // Read-half shutdown: blocked reads return EOF; in-flight response
+    // writes are untouched.
+    for conn in shared.conns.lock().unwrap().values() {
+        let _ = conn.shutdown(Shutdown::Read);
+    }
+}
+
+/// Best-effort one-shot error response on a connection we refuse to
+/// service (over capacity or draining).
+fn refuse(mut stream: TcpStream, status: u16, tag: &str, message: &str) {
+    let body = wire::error_body(tag, message, None);
+    let _ = http::write_response(
+        &mut stream,
+        status,
+        "application/json",
+        body.as_bytes(),
+        &[],
+        false,
+    );
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(_) if shared.draining.load(Ordering::SeqCst) => break,
+            Err(_) => continue,
+        };
+        if shared.draining.load(Ordering::SeqCst) {
+            refuse(stream, 503, "draining", "server is draining");
+            break;
+        }
+        if shared.active.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+            shared.counters.refused.inc();
+            refuse(stream, 503, "capacity", "connection limit reached; retry");
+            continue;
+        }
+        reap_finished(shared);
+        let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
+        if let Ok(clone) = stream.try_clone() {
+            shared.conns.lock().unwrap().insert(id, clone);
+        }
+        shared.active.fetch_add(1, Ordering::SeqCst);
+        shared.counters.accepted.inc();
+        let conn_shared = Arc::clone(shared);
+        let spawned = std::thread::Builder::new().name(format!("http-conn-{id}")).spawn(
+            move || {
+                handle_conn(&conn_shared, stream, peer);
+                conn_shared.conns.lock().unwrap().remove(&id);
+                conn_shared.active.fetch_sub(1, Ordering::SeqCst);
+            },
+        );
+        match spawned {
+            Ok(h) => shared.handlers.lock().unwrap().push(h),
+            Err(_) => {
+                // Spawn failure: undo the bookkeeping; the stream (moved
+                // into the dead closure) is already gone.
+                shared.conns.lock().unwrap().remove(&id);
+                shared.active.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+/// Join handler threads that already finished (keeps the handle list from
+/// growing unboundedly under connection churn).
+fn reap_finished(shared: &Shared) {
+    let mut handlers = shared.handlers.lock().unwrap();
+    let mut i = 0;
+    while i < handlers.len() {
+        if handlers[i].is_finished() {
+            let _ = handlers.swap_remove(i).join();
+        } else {
+            i += 1;
+        }
+    }
+}
+
+/// Serve one connection: keep-alive request loop until EOF, timeout,
+/// `Connection: close`, a streaming route, or drain.
+fn handle_conn(shared: &Shared, stream: TcpStream, peer: SocketAddr) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout()));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let peer_ip = peer.ip().to_string();
+    loop {
+        let req = match http::read_request(&mut reader, &mut writer, &shared.limits) {
+            Ok(Some(req)) => req,
+            // clean EOF between requests: normal keep-alive end (or drain)
+            Ok(None) => return,
+            Err(e) => {
+                let (status, tag) = match &e {
+                    HttpError::Malformed(_) => (400, "bad_request"),
+                    HttpError::HeadersTooLarge => (431, "headers_too_large"),
+                    HttpError::BodyTooLarge => (413, "body_too_large"),
+                    HttpError::TimedOut => (408, "timeout"),
+                    HttpError::UnexpectedEof | HttpError::Io(_) => return,
+                };
+                shared.counters.served_err.inc();
+                let body = wire::error_body(tag, &e.to_string(), None);
+                let _ = http::write_response(
+                    &mut writer,
+                    status,
+                    "application/json",
+                    body.as_bytes(),
+                    &[],
+                    false,
+                );
+                return;
+            }
+        };
+        let keep = req.keep_alive();
+        let ctx = RouteCtx {
+            engine: &shared.engine,
+            quota: shared.quota.as_ref(),
+            draining: &shared.draining,
+        };
+        match dispatch(&req, &peer_ip, &ctx) {
+            Ok(Action::Respond { status, body }) => {
+                let wrote = http::write_response(
+                    &mut writer,
+                    status,
+                    "application/json",
+                    body.as_bytes(),
+                    &[],
+                    keep,
+                )
+                .is_ok();
+                if wrote {
+                    shared.counters.served_ok.inc();
+                }
+                if !wrote || !keep {
+                    return;
+                }
+            }
+            Ok(Action::StreamStats { limit }) => {
+                // streams own the connection; always close afterwards
+                let _ = stream_stats(
+                    &mut writer,
+                    &shared.engine,
+                    &shared.draining,
+                    shared.cfg.sse_interval(),
+                    limit,
+                );
+                shared.counters.served_ok.inc();
+                return;
+            }
+            Ok(Action::BeginDrain { body }) => {
+                let _ = http::write_response(
+                    &mut writer,
+                    200,
+                    "application/json",
+                    body.as_bytes(),
+                    &[],
+                    false,
+                );
+                shared.counters.served_ok.inc();
+                begin_drain(shared);
+                return;
+            }
+            Err(err) => {
+                match &err {
+                    RouteError::QuotaExceeded { .. } => shared.counters.quota_rejected.inc(),
+                    RouteError::Overloaded { .. } => shared.counters.overloaded.inc(),
+                    _ => {}
+                }
+                shared.counters.served_err.inc();
+                let wrote = http::write_response(
+                    &mut writer,
+                    err.status(),
+                    "application/json",
+                    err.body().as_bytes(),
+                    &err.headers(),
+                    keep,
+                )
+                .is_ok();
+                if !wrote || !keep {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ServeConfig;
+    use std::io::Write as _;
+
+    fn test_http_cfg(listen: &str) -> HttpConfig {
+        HttpConfig { listen: listen.into(), read_timeout_ms: 2_000, ..HttpConfig::default() }
+    }
+
+    fn small_engine() -> Arc<Engine> {
+        Arc::new(
+            Engine::start(&ServeConfig {
+                shards: 1,
+                workers_per_shard: 1,
+                cache_capacity: 8,
+                ..ServeConfig::default()
+            })
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn malformed_listen_addr_is_typed() {
+        let engine = small_engine();
+        for bad in ["not-an-addr", "127.0.0.1", "localhost:8080", "1.2.3.4:notaport"] {
+            let err = Server::start(Arc::clone(&engine), &test_http_cfg(bad)).unwrap_err();
+            assert!(
+                matches!(err, NetError::MalformedAddr { .. }),
+                "{bad}: got {err:?}"
+            );
+            assert!(err.to_string().contains(bad), "message must name the address: {err}");
+        }
+    }
+
+    #[test]
+    fn bind_in_use_is_typed() {
+        let engine = small_engine();
+        let holder = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = holder.local_addr().unwrap();
+        let err =
+            Server::start(Arc::clone(&engine), &test_http_cfg(&addr.to_string())).unwrap_err();
+        assert!(matches!(err, NetError::AddrInUse { .. }), "got {err:?}");
+        assert!(err.to_string().contains("in use"));
+    }
+
+    #[test]
+    fn invalid_http_config_is_typed() {
+        let engine = small_engine();
+        let cfg = HttpConfig { max_connections: 0, ..test_http_cfg("127.0.0.1:0") };
+        let err = Server::start(engine, &cfg).unwrap_err();
+        assert!(matches!(err, NetError::Config(_)), "got {err:?}");
+    }
+
+    #[test]
+    fn serves_healthz_then_drains_cleanly() {
+        let engine = small_engine();
+        let server = Server::start(Arc::clone(&engine), &test_http_cfg("127.0.0.1:0")).unwrap();
+        let addr = server.addr();
+        assert_ne!(addr.port(), 0, ":0 must resolve to a real port");
+
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        http::write_request(&mut conn, "GET", "/healthz", &[], b"").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let resp = http::read_response(&mut reader, &HttpLimits::default()).unwrap();
+        assert_eq!(resp.status, 200);
+        assert!(String::from_utf8_lossy(&resp.body).contains("ok"));
+
+        // keep-alive: a second request on the same connection works
+        http::write_request(&mut conn, "GET", "/v1/stats", &[], b"").unwrap();
+        let resp = http::read_response(&mut reader, &HttpLimits::default()).unwrap();
+        assert_eq!(resp.status, 200);
+
+        // drain over the wire
+        http::write_request(&mut conn, "POST", "/v1/drain", &[], b"").unwrap();
+        let resp = http::read_response(&mut reader, &HttpLimits::default()).unwrap();
+        assert_eq!(resp.status, 200);
+        server.wait_for_drain();
+        let report = server.join();
+        assert!(report.served_ok >= 3, "{report:?}");
+        assert_eq!(report.refused_connections, 0);
+
+        // listener is gone: new connections are refused by the OS
+        assert!(TcpStream::connect(addr).is_err() || {
+            // (a racing late accept may still succeed at the TCP level on
+            // some kernels; any such socket is immediately dead)
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.set_read_timeout(Some(Duration::from_millis(500))).unwrap();
+            s.write_all(b"GET /healthz HTTP/1.1\r\n\r\n").ok();
+            let mut buf = [0u8; 1];
+            matches!(std::io::Read::read(&mut s, &mut buf), Ok(0) | Err(_))
+        });
+        // the engine is still ours to shut down
+        let engine = Arc::try_unwrap(engine).ok().expect("server must release its engine Arc");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn malformed_wire_bytes_get_400_not_a_hang() {
+        let engine = small_engine();
+        let server = Server::start(Arc::clone(&engine), &test_http_cfg("127.0.0.1:0")).unwrap();
+        let mut conn = TcpStream::connect(server.addr()).unwrap();
+        conn.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        conn.write_all(b"THIS IS NOT HTTP\r\n\r\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let resp = http::read_response(&mut reader, &HttpLimits::default()).unwrap();
+        assert_eq!(resp.status, 400);
+        drop(conn);
+        server.join();
+        Arc::try_unwrap(engine).ok().unwrap().shutdown();
+    }
+
+    #[test]
+    fn drop_without_join_drains() {
+        let engine = small_engine();
+        let server = Server::start(Arc::clone(&engine), &test_http_cfg("127.0.0.1:0")).unwrap();
+        let addr = server.addr();
+        let _ = TcpStream::connect(addr).unwrap();
+        drop(server); // must not hang or leak threads
+        Arc::try_unwrap(engine).ok().expect("drop must release the engine Arc").shutdown();
+    }
+}

@@ -1,0 +1,866 @@
+//! JSON wire codecs for the HTTP front-end — no serde.
+//!
+//! A small recursive-descent JSON value type ([`Json`]) plus the typed
+//! encode/decode functions for the serve wire protocol. Matrix payloads
+//! travel as a flat **column-major** `data` array (the native layout of
+//! [`crate::tensor::Matrix`]) alongside `dtype`/`rows`/`cols`.
+//!
+//! Bit-identity over the wire: `f64` values are written with Rust's `{}`
+//! formatting, which produces the shortest decimal that parses back to the
+//! same bits; `f32` values are formatted from the typed slice (shortest
+//! `f32` repr) and decoded by parsing to `f64` then casting — exact,
+//! because every shortest-`f32` decimal is representable in `f64` and the
+//! double rounding through 53 bits cannot move a 24-bit value. The
+//! `net_integration` suite pins the guarantee end-to-end against
+//! `Engine::submit_wait`.
+
+use std::fmt::{self, Write as _};
+
+use crate::projection::l1::L1Algorithm;
+use crate::projection::ProjectionKind;
+use crate::serve::engine::ModelInfo;
+use crate::serve::{
+    Dtype, EngineStats, JobKind, Payload, ProjectionRequest, ProjectionResponse,
+};
+use crate::tensor::Matrix;
+
+/// Maximum nesting depth accepted by the parser (malice guard; the wire
+/// protocol itself nests three levels).
+const MAX_DEPTH: usize = 64;
+
+/// A parsed JSON value. Objects keep insertion order (`Vec`, not a map):
+/// the wire shapes are small and fixed, and order-preserving output keeps
+/// responses byte-stable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse one JSON document (trailing whitespace only).
+    pub fn parse(text: &str) -> Result<Json, String> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            return Err(format!("trailing bytes at offset {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None on non-objects).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Non-negative integer (rejects fractional parts and values beyond
+    /// exact f64 integer range).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v <= 9_007_199_254_740_992.0 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().and_then(|v| usize::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => f.write_str(if *b { "true" } else { "false" }),
+            Json::Num(v) => {
+                if v.is_finite() {
+                    write!(f, "{v}")
+                } else {
+                    f.write_str("null")
+                }
+            }
+            Json::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                push_json_string(&mut out, s);
+                f.write_str(&out)
+            }
+            Json::Arr(items) => {
+                f.write_str("[")?;
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{v}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(fields) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in fields.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    let mut key = String::with_capacity(k.len() + 2);
+                    push_json_string(&mut key, k);
+                    write!(f, "{key}:{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+/// Append `s` as a quoted, escaped JSON string.
+fn push_json_string(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn eat(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at offset {}", b as char, self.pos))
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at offset {}", self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH}"));
+        }
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => {
+                self.pos += 1;
+                let mut items = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b']') {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                loop {
+                    items.push(self.value(depth + 1)?);
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                        }
+                        Some(b']') => {
+                            self.pos += 1;
+                            return Ok(Json::Arr(items));
+                        }
+                        _ => return Err(format!("expected ',' or ']' at offset {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'{') => {
+                self.pos += 1;
+                let mut fields = Vec::new();
+                self.skip_ws();
+                if self.peek() == Some(b'}') {
+                    self.pos += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                loop {
+                    self.skip_ws();
+                    let key = self.string()?;
+                    self.skip_ws();
+                    self.eat(b':')?;
+                    fields.push((key, self.value(depth + 1)?));
+                    self.skip_ws();
+                    match self.peek() {
+                        Some(b',') => {
+                            self.pos += 1;
+                        }
+                        Some(b'}') => {
+                            self.pos += 1;
+                            return Ok(Json::Obj(fields));
+                        }
+                        _ => return Err(format!("expected ',' or '}}' at offset {}", self.pos)),
+                    }
+                }
+            }
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(b) => Err(format!("unexpected byte {:?} at offset {}", b as char, self.pos)),
+            None => Err("unexpected end of input".into()),
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if matches!(b, b'-' | b'+' | b'.' | b'e' | b'E' | b'0'..=b'9') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| format!("invalid number at offset {start}"))?;
+        let v: f64 =
+            text.parse().map_err(|_| format!("invalid number {text:?} at offset {start}"))?;
+        if v.is_finite() {
+            Ok(Json::Num(v))
+        } else {
+            Err(format!("non-finite number {text:?} at offset {start}"))
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // fast path: raw UTF-8 run up to the next quote/escape
+            while let Some(&b) = self.bytes.get(self.pos) {
+                if b == b'"' || b == b'\\' || b < 0x20 {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.bytes[start..self.pos])
+                    .map_err(|_| format!("invalid UTF-8 in string at offset {start}"))?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'u' => {
+                            let hi = self.hex4()?;
+                            let c = if (0xD800..0xDC00).contains(&hi) {
+                                // surrogate pair: require \uXXXX low half
+                                if self.peek() != Some(b'\\') {
+                                    return Err("lone high surrogate".into());
+                                }
+                                self.pos += 1;
+                                if self.peek() != Some(b'u') {
+                                    return Err("lone high surrogate".into());
+                                }
+                                self.pos += 1;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err("invalid low surrogate".into());
+                                }
+                                let code =
+                                    0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00);
+                                char::from_u32(code).ok_or("invalid surrogate pair")?
+                            } else {
+                                char::from_u32(hi).ok_or("invalid \\u escape")?
+                            };
+                            out.push(c);
+                        }
+                        _ => return Err(format!("invalid escape at offset {}", self.pos - 1)),
+                    }
+                }
+                Some(b) => {
+                    return Err(format!(
+                        "unescaped control byte {b:#04x} at offset {}",
+                        self.pos
+                    ))
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn hex4(&mut self) -> Result<u32, String> {
+        let end = self.pos + 4;
+        let hex = self
+            .bytes
+            .get(self.pos..end)
+            .and_then(|b| std::str::from_utf8(b).ok())
+            .ok_or("truncated \\u escape")?;
+        let v = u32::from_str_radix(hex, 16).map_err(|_| format!("bad \\u escape {hex:?}"))?;
+        self.pos = end;
+        Ok(v)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed wire codecs
+// ---------------------------------------------------------------------------
+
+/// Append `v` as a JSON number (shortest round-trip repr); non-finite
+/// values become `null`, which the decoders reject — the projections never
+/// produce them from finite inputs, so this only surfaces corruption.
+fn push_f64(out: &mut String, v: f64) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+fn push_f32(out: &mut String, v: f32) {
+    if v.is_finite() {
+        let _ = write!(out, "{v}");
+    } else {
+        out.push_str("null");
+    }
+}
+
+/// Append the `"dtype":…,"rows":…,"cols":…,"data":[…]` fields of `p`
+/// (no surrounding braces, no trailing comma).
+fn push_payload_fields(out: &mut String, p: &Payload) {
+    let _ = write!(out, "\"dtype\":\"{}\",\"rows\":{},\"cols\":{},\"data\":[", p.dtype().name(), p.rows(), p.cols());
+    match p {
+        Payload::F64(m) => {
+            for (i, &v) in m.as_slice().iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                push_f64(out, v);
+            }
+        }
+        Payload::F32(m) => {
+            for (i, &v) in m.as_slice().iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                push_f32(out, v);
+            }
+        }
+    }
+    out.push(']');
+}
+
+/// Decode a payload object (`dtype`/`rows`/`cols`/`data`, column-major).
+pub fn decode_payload(v: &Json) -> Result<Payload, String> {
+    let dtype = match v.get("dtype").and_then(Json::as_str) {
+        Some("f64") => Dtype::F64,
+        Some("f32") => Dtype::F32,
+        Some(other) => return Err(format!("unknown dtype {other:?}")),
+        None => return Err("missing dtype".into()),
+    };
+    let rows = v.get("rows").and_then(Json::as_usize).ok_or("missing/invalid rows")?;
+    let cols = v.get("cols").and_then(Json::as_usize).ok_or("missing/invalid cols")?;
+    let expect = rows.checked_mul(cols).ok_or("rows*cols overflows")?;
+    let data = v.get("data").and_then(Json::as_arr).ok_or("missing data array")?;
+    if data.len() != expect {
+        return Err(format!("data has {} elements, expected rows*cols = {expect}", data.len()));
+    }
+    if expect == 0 {
+        return Err("empty matrix payload".into());
+    }
+    match dtype {
+        Dtype::F64 => {
+            let mut flat = Vec::with_capacity(expect);
+            for (i, item) in data.iter().enumerate() {
+                flat.push(item.as_f64().ok_or_else(|| format!("data[{i}] is not a number"))?);
+            }
+            Ok(Payload::F64(Matrix::from_col_major(rows, cols, flat)))
+        }
+        Dtype::F32 => {
+            let mut flat = Vec::with_capacity(expect);
+            for (i, item) in data.iter().enumerate() {
+                let v = item.as_f64().ok_or_else(|| format!("data[{i}] is not a number"))?;
+                flat.push(v as f32);
+            }
+            Ok(Payload::F32(Matrix::from_col_major(rows, cols, flat)))
+        }
+    }
+}
+
+/// Client-side body for `POST /v1/project`.
+pub fn project_request_body(req: &ProjectionRequest) -> String {
+    let mut out = String::with_capacity(64 + req.payload.len() * 12);
+    let _ = write!(
+        out,
+        "{{\"kind\":\"{}\",\"algo\":\"{}\",\"eta\":",
+        req.kind.name(),
+        req.algo.name()
+    );
+    push_f64(&mut out, req.eta);
+    out.push(',');
+    push_payload_fields(&mut out, &req.payload);
+    out.push('}');
+    out
+}
+
+/// Server-side decode for `POST /v1/project`.
+pub fn decode_project_request(body: &str) -> Result<ProjectionRequest, String> {
+    let v = Json::parse(body)?;
+    let kind_name = v.get("kind").and_then(Json::as_str).ok_or("missing kind")?;
+    let kind = ProjectionKind::parse(kind_name)
+        .ok_or_else(|| format!("unknown projection kind {kind_name:?}"))?;
+    let algo = match v.get("algo") {
+        Some(a) => {
+            let name = a.as_str().ok_or("algo must be a string")?;
+            L1Algorithm::parse(name).ok_or_else(|| format!("unknown l1 algorithm {name:?}"))?
+        }
+        None => L1Algorithm::Condat,
+    };
+    let eta = v.get("eta").and_then(Json::as_f64).ok_or("missing/invalid eta")?;
+    let payload = decode_payload(&v)?;
+    Ok(ProjectionRequest { kind, algo, eta, payload })
+}
+
+/// Client-side body for `POST /v1/encode/{model}` (payload fields only —
+/// the model id travels in the path).
+pub fn encode_request_body(payload: &Payload) -> String {
+    let mut out = String::with_capacity(48 + payload.len() * 12);
+    out.push('{');
+    push_payload_fields(&mut out, payload);
+    out.push('}');
+    out
+}
+
+/// Server-side decode for `POST /v1/encode/{model}`.
+pub fn decode_encode_request(body: &str) -> Result<Payload, String> {
+    decode_payload(&Json::parse(body)?)
+}
+
+/// Server-side body for a completed job (projection or encode).
+pub fn response_body(resp: &ProjectionResponse) -> String {
+    let mut out = String::with_capacity(128 + resp.payload.len() * 12);
+    let _ = write!(out, "{{\"kind\":\"{}\",", resp.kind.name());
+    if let JobKind::SparseEncode { model } = resp.kind {
+        let _ = write!(out, "\"model\":{model},");
+    }
+    push_payload_fields(&mut out, &resp.payload);
+    out.push_str(",\"thresholds\":");
+    match &resp.thresholds {
+        Some(t) => {
+            out.push('[');
+            for (i, &v) in t.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                push_f64(&mut out, v);
+            }
+            out.push(']');
+        }
+        None => out.push_str("null"),
+    }
+    let _ = write!(
+        out,
+        ",\"cache_hit\":{},\"batch_size\":{},\"shard\":{},\"queue_micros\":{},\"exec_micros\":{}}}",
+        resp.cache_hit, resp.batch_size, resp.shard, resp.queue_micros, resp.exec_micros
+    );
+    out
+}
+
+/// Client-side decode of a completed-job body.
+pub fn decode_response(body: &str) -> Result<ProjectionResponse, String> {
+    let v = Json::parse(body)?;
+    let kind_name = v.get("kind").and_then(Json::as_str).ok_or("missing kind")?;
+    let kind = if kind_name == "sparse-encode" {
+        let model = v.get("model").and_then(Json::as_u64).ok_or("missing model id")?;
+        JobKind::SparseEncode { model }
+    } else {
+        JobKind::Project(
+            ProjectionKind::parse(kind_name)
+                .ok_or_else(|| format!("unknown response kind {kind_name:?}"))?,
+        )
+    };
+    let payload = decode_payload(&v)?;
+    let thresholds = match v.get("thresholds") {
+        None | Some(Json::Null) => None,
+        Some(Json::Arr(items)) => {
+            let mut t = Vec::with_capacity(items.len());
+            for (i, item) in items.iter().enumerate() {
+                t.push(item.as_f64().ok_or_else(|| format!("thresholds[{i}] not a number"))?);
+            }
+            Some(t)
+        }
+        Some(_) => return Err("thresholds must be an array or null".into()),
+    };
+    Ok(ProjectionResponse {
+        kind,
+        payload,
+        thresholds,
+        cache_hit: v.get("cache_hit").and_then(Json::as_bool).unwrap_or(false),
+        batch_size: v.get("batch_size").and_then(Json::as_usize).unwrap_or(1),
+        shard: v.get("shard").and_then(Json::as_usize).unwrap_or(0),
+        queue_micros: v.get("queue_micros").and_then(Json::as_u64).unwrap_or(0),
+        exec_micros: v.get("exec_micros").and_then(Json::as_u64).unwrap_or(0),
+    })
+}
+
+/// Body for `GET /v1/stats` and each SSE `stats` event.
+pub fn stats_body(stats: &EngineStats) -> String {
+    let mut out = String::with_capacity(256 + stats.shards.len() * 256);
+    let _ = write!(
+        out,
+        "{{\"uptime_micros\":{},\"submitted\":{},\"completed\":{},\"rejected\":{},\"cache_hits\":{},\"cache_misses\":{},\"hit_rate\":",
+        stats.uptime.as_micros(),
+        stats.submitted(),
+        stats.completed(),
+        stats.rejected(),
+        stats.cache_hits(),
+        stats.cache_misses(),
+    );
+    push_f64(&mut out, stats.hit_rate());
+    out.push_str(",\"mean_batch\":");
+    push_f64(&mut out, stats.mean_batch());
+    out.push_str(",\"throughput_rps\":");
+    push_f64(&mut out, stats.throughput_rps());
+    out.push_str(",\"shards\":[");
+    for (i, s) in stats.shards.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"shard\":{},\"depth\":{},\"submitted\":{},\"completed\":{},\"rejected\":{},\"batches\":{},\"batched_jobs\":{},\"cache_hits\":{},\"cache_misses\":{},\"mean_batch\":",
+            s.shard, s.depth, s.submitted, s.completed, s.rejected, s.batches, s.batched_jobs, s.cache_hits, s.cache_misses,
+        );
+        push_f64(&mut out, s.mean_batch);
+        out.push_str(",\"mean_queue_micros\":");
+        push_f64(&mut out, s.mean_queue_micros);
+        out.push_str(",\"mean_exec_micros\":");
+        push_f64(&mut out, s.mean_exec_micros);
+        let _ = write!(out, ",\"max_exec_micros\":{}}}", s.max_exec_micros);
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Body for `GET /v1/models`.
+pub fn models_body(models: &[ModelInfo]) -> String {
+    let mut out = String::from("{\"models\":[");
+    for (i, m) in models.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let _ = write!(
+            out,
+            "{{\"id\":{},\"dtype\":\"{}\",\"features\":{},\"hidden\":{},\"alive\":{}}}",
+            m.id,
+            m.dtype.name(),
+            m.features,
+            m.hidden,
+            m.alive
+        );
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Error body: machine-readable `error` tag + human message; 429 bodies
+/// also carry the exact backoff in `retry_after_micros`.
+pub fn error_body(error: &str, message: &str, retry_after_micros: Option<u64>) -> String {
+    let mut out = String::with_capacity(64 + message.len());
+    out.push_str("{\"error\":");
+    push_json_string(&mut out, error);
+    out.push_str(",\"message\":");
+    push_json_string(&mut out, message);
+    if let Some(micros) = retry_after_micros {
+        let _ = write!(out, ",\"retry_after_micros\":{micros}");
+    }
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::serve::ShardStats;
+    use std::time::Duration;
+
+    #[test]
+    fn parses_scalars_and_containers() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse(" true ").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("-2.5e3").unwrap(), Json::Num(-2500.0));
+        assert_eq!(Json::parse("\"a\\nb\"").unwrap(), Json::Str("a\nb".into()));
+        let v = Json::parse(r#"{"a":[1,2],"b":{"c":null}}"#).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("b").unwrap().get("c"), Some(&Json::Null));
+        assert_eq!(v.get("missing"), None);
+    }
+
+    #[test]
+    fn unicode_escapes_and_surrogates() {
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse("\"\\ud83d\\ude00\"").unwrap(), Json::Str("😀".into()));
+        assert_eq!(Json::parse(r#""😀""#).unwrap(), Json::Str("😀".into()));
+        assert!(Json::parse("\"\\ud83d\"").is_err(), "lone high surrogate");
+        assert!(Json::parse("\"\\udc00\\udc00\"").is_err(), "lone low surrogate");
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in [
+            "", "{", "[1,", "{\"a\":}", "tru", "1 2", "\"unterminated", "{\"a\" 1}", "nan",
+            "[1,]",
+        ] {
+            assert!(Json::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn rejects_pathological_nesting() {
+        let deep = "[".repeat(100) + &"]".repeat(100);
+        assert!(Json::parse(&deep).is_err());
+        let ok = "[".repeat(20) + &"]".repeat(20);
+        assert!(Json::parse(&ok).is_ok());
+    }
+
+    #[test]
+    fn display_round_trips_strings_and_numbers() {
+        let v = Json::Obj(vec![
+            ("k\"ey".into(), Json::Str("line\nbreak\t\\".into())),
+            ("n".into(), Json::Num(0.1)),
+            ("z".into(), Json::Arr(vec![Json::Bool(false), Json::Null])),
+        ]);
+        let text = v.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_payload_round_trip_is_bit_identical() {
+        let tricky = vec![
+            0.1,
+            -0.0,
+            1.0 / 3.0,
+            f64::MIN_POSITIVE,
+            5e-324, // smallest subnormal
+            1.7976931348623157e308,
+            -123456.789e-30,
+            2.0_f64.powi(-60) + 1.0,
+        ];
+        let p = Payload::F64(Matrix::from_col_major(4, 2, tricky.clone()));
+        let body = encode_request_body(&p);
+        let back = decode_encode_request(&body).unwrap();
+        let Payload::F64(m) = &back else { panic!("dtype changed") };
+        for (a, b) in tricky.iter().zip(m.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round-tripped to {b}");
+        }
+    }
+
+    #[test]
+    fn f32_payload_round_trip_is_bit_identical() {
+        let tricky: Vec<f32> = vec![
+            0.1,
+            -0.0,
+            1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            1e-45, // smallest f32 subnormal
+            3.4028235e38,
+            -2.7182817,
+            1.0000001,
+        ];
+        let p = Payload::F32(Matrix::from_col_major(2, 4, tricky.clone()));
+        let body = encode_request_body(&p);
+        let back = decode_encode_request(&body).unwrap();
+        let Payload::F32(m) = &back else { panic!("dtype changed") };
+        for (a, b) in tricky.iter().zip(m.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} round-tripped to {b}");
+        }
+    }
+
+    #[test]
+    fn project_request_round_trips() {
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let y = Matrix::<f64>::randn(6, 3, &mut rng);
+        let req = ProjectionRequest::f64(ProjectionKind::BilevelL12, 0.75, y.clone())
+            .with_algo(L1Algorithm::Michelot);
+        let back = decode_project_request(&project_request_body(&req)).unwrap();
+        assert_eq!(back.kind, ProjectionKind::BilevelL12);
+        assert_eq!(back.algo, L1Algorithm::Michelot);
+        assert_eq!(back.eta, 0.75);
+        assert_eq!(back.payload.as_f64().unwrap().max_abs_diff(&y), 0.0);
+        // algo defaults to condat when omitted
+        let body = r#"{"kind":"bilevel-l1inf","eta":1,"dtype":"f64","rows":1,"cols":1,"data":[2]}"#;
+        assert_eq!(decode_project_request(body).unwrap().algo, L1Algorithm::Condat);
+    }
+
+    #[test]
+    fn decode_rejects_bad_wire_payloads() {
+        for (body, why) in [
+            (r#"{"kind":"bogus","eta":1,"dtype":"f64","rows":1,"cols":1,"data":[1]}"#, "kind"),
+            (r#"{"kind":"bilevel-l1inf","dtype":"f64","rows":1,"cols":1,"data":[1]}"#, "eta"),
+            (r#"{"kind":"bilevel-l1inf","eta":1,"dtype":"f16","rows":1,"cols":1,"data":[1]}"#, "dtype"),
+            (r#"{"kind":"bilevel-l1inf","eta":1,"dtype":"f64","rows":2,"cols":1,"data":[1]}"#, "shape"),
+            (r#"{"kind":"bilevel-l1inf","eta":1,"dtype":"f64","rows":0,"cols":0,"data":[]}"#, "empty"),
+            (r#"{"kind":"bilevel-l1inf","eta":1,"dtype":"f64","rows":1,"cols":1,"data":[null]}"#, "null elem"),
+            (r#"{"kind":"bilevel-l1inf","eta":1,"dtype":"f64","rows":1.5,"cols":1,"data":[1]}"#, "frac rows"),
+        ] {
+            assert!(decode_project_request(body).is_err(), "accepted bad body ({why})");
+        }
+    }
+
+    #[test]
+    fn response_round_trips_with_and_without_thresholds() {
+        let resp = ProjectionResponse {
+            kind: JobKind::Project(ProjectionKind::BilevelL1Inf),
+            payload: Payload::F64(Matrix::from_col_major(2, 1, vec![1.5, -2.25])),
+            thresholds: Some(vec![0.5]),
+            cache_hit: true,
+            batch_size: 3,
+            shard: 1,
+            queue_micros: 42,
+            exec_micros: 17,
+        };
+        let back = decode_response(&response_body(&resp)).unwrap();
+        assert_eq!(back.kind, resp.kind);
+        assert_eq!(back.thresholds, resp.thresholds);
+        assert!(back.cache_hit);
+        assert_eq!((back.batch_size, back.shard), (3, 1));
+        assert_eq!((back.queue_micros, back.exec_micros), (42, 17));
+
+        let enc = ProjectionResponse {
+            kind: JobKind::SparseEncode { model: 7 },
+            payload: Payload::F32(Matrix::from_col_major(1, 2, vec![0.25f32, -4.0])),
+            thresholds: None,
+            cache_hit: false,
+            batch_size: 1,
+            shard: 0,
+            queue_micros: 0,
+            exec_micros: 1,
+        };
+        let back = decode_response(&response_body(&enc)).unwrap();
+        assert_eq!(back.kind, JobKind::SparseEncode { model: 7 });
+        assert!(back.thresholds.is_none());
+        assert_eq!(back.payload.dtype(), Dtype::F32);
+    }
+
+    #[test]
+    fn stats_and_models_bodies_parse() {
+        let stats = EngineStats {
+            uptime: Duration::from_micros(1234),
+            shards: vec![ShardStats {
+                shard: 0,
+                depth: 2,
+                submitted: 10,
+                completed: 9,
+                rejected: 1,
+                batches: 4,
+                batched_jobs: 9,
+                cache_hits: 3,
+                cache_misses: 2,
+                mean_batch: 2.25,
+                hit_rate: 0.6,
+                mean_queue_micros: 11.5,
+                mean_exec_micros: 99.0,
+                max_exec_micros: 200,
+            }],
+        };
+        let v = Json::parse(&stats_body(&stats)).unwrap();
+        assert_eq!(v.get("completed").unwrap().as_u64(), Some(9));
+        assert_eq!(v.get("uptime_micros").unwrap().as_u64(), Some(1234));
+        let shards = v.get("shards").unwrap().as_arr().unwrap();
+        assert_eq!(shards[0].get("depth").unwrap().as_u64(), Some(2));
+        assert_eq!(shards[0].get("max_exec_micros").unwrap().as_u64(), Some(200));
+
+        let models = vec![ModelInfo { id: 3, dtype: Dtype::F32, features: 10, hidden: 4, alive: 7 }];
+        let v = Json::parse(&models_body(&models)).unwrap();
+        let arr = v.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("id").unwrap().as_u64(), Some(3));
+        assert_eq!(arr[0].get("dtype").unwrap().as_str(), Some("f32"));
+        assert_eq!(arr[0].get("alive").unwrap().as_u64(), Some(7));
+    }
+
+    #[test]
+    fn error_body_shape() {
+        let v = Json::parse(&error_body("overloaded", "shard 0 full", Some(250))).unwrap();
+        assert_eq!(v.get("error").unwrap().as_str(), Some("overloaded"));
+        assert_eq!(v.get("retry_after_micros").unwrap().as_u64(), Some(250));
+        let v = Json::parse(&error_body("bad_request", "nope \"quoted\"", None)).unwrap();
+        assert!(v.get("retry_after_micros").is_none());
+        assert_eq!(v.get("message").unwrap().as_str(), Some("nope \"quoted\""));
+    }
+}

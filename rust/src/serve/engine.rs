@@ -48,6 +48,20 @@ enum RegisteredEncoder {
     F64(Arc<CompactEncoder<f64>>),
 }
 
+/// Snapshot of one registry entry, for telemetry surfaces (`GET
+/// /v1/models`, CLI stats) that must not hold the registry lock.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelInfo {
+    pub id: u64,
+    pub dtype: Dtype,
+    /// Input features the encoder expects (payload rows).
+    pub features: usize,
+    /// Hidden units produced per sample.
+    pub hidden: usize,
+    /// Surviving (non-pruned) input columns in the compacted plan.
+    pub alive: usize,
+}
+
 /// What a queued job executes.
 enum Work {
     Project(ProjectionRequest),
@@ -244,6 +258,32 @@ impl Engine {
     /// Number of registered encoders.
     pub fn encoder_count(&self) -> usize {
         self.encoders.read().unwrap().len()
+    }
+
+    /// Snapshot of every registered model, sorted by id.
+    pub fn models(&self) -> Vec<ModelInfo> {
+        let encoders = self.encoders.read().unwrap();
+        let mut out: Vec<ModelInfo> = encoders
+            .iter()
+            .map(|(&id, enc)| match enc {
+                RegisteredEncoder::F32(e) => ModelInfo {
+                    id,
+                    dtype: Dtype::F32,
+                    features: e.features(),
+                    hidden: e.hidden(),
+                    alive: e.alive(),
+                },
+                RegisteredEncoder::F64(e) => ModelInfo {
+                    id,
+                    dtype: Dtype::F64,
+                    features: e.features(),
+                    hidden: e.hidden(),
+                    alive: e.alive(),
+                },
+            })
+            .collect();
+        out.sort_by_key(|m| m.id);
+        out
     }
 
     /// Enqueue a sparse-encode job: run `x` (one sample per **column**, in
@@ -668,6 +708,26 @@ mod tests {
         let err = engine.submit_encode(model, Payload::F64(x)).unwrap_err();
         assert!(matches!(err, SubmitError::Invalid(_)));
         assert_eq!(engine.encoder_count(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn models_snapshot_reports_registry() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        assert!(engine.models().is_empty());
+        let (_, e64) = masked_encoder::<f64>(71);
+        let (_, e32) = masked_encoder::<f32>(72);
+        let id64 = engine.register_encoder_f64(e64);
+        let id32 = engine.register_encoder_f32(e32);
+        let models = engine.models();
+        assert_eq!(models.len(), 2);
+        assert!(models.windows(2).all(|w| w[0].id < w[1].id), "sorted by id");
+        let m64 = models.iter().find(|m| m.id == id64).unwrap();
+        assert_eq!(m64.dtype, Dtype::F64);
+        assert_eq!((m64.features, m64.hidden, m64.alive), (10, 4, 7));
+        assert_eq!(models.iter().find(|m| m.id == id32).unwrap().dtype, Dtype::F32);
+        engine.unregister_encoder(id64);
+        assert_eq!(engine.models().len(), 1);
         engine.shutdown();
     }
 

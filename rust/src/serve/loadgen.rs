@@ -6,11 +6,22 @@
 //! engine's backpressure protocol: an `Overloaded` rejection sleeps for the
 //! suggested `retry_after` and resubmits. Used by the `loadgen` and `serve`
 //! CLI subcommands and `benches/serve_throughput.rs`.
+//!
+//! Two drivers share the [`LoadgenConfig`] workload shape and the
+//! [`LoadReport`] tally (mean + log-bucketed p50/p99/p999 latency):
+//! [`run_loadgen`] calls the engine in-process; [`run_loadgen_net`] speaks
+//! the `net` wire protocol over real sockets, honouring HTTP 429
+//! backpressure via the `X-Retry-After-Micros` / `Retry-After` headers.
 
+use std::io::BufReader;
+use std::net::TcpStream;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::TomlDoc;
+use crate::metrics::LatencyHistogram;
+use crate::net::http::{self, HttpError, HttpLimits, Response};
+use crate::net::wire;
 use crate::projection::ProjectionKind;
 use crate::tensor::Matrix;
 
@@ -124,6 +135,9 @@ pub struct LoadReport {
     pub cache_hits: u64,
     pub total_latency_micros: u64,
     pub max_latency_micros: u64,
+    /// Log-bucketed per-request latency (≤12.5% relative error) for
+    /// p50/p99/p999 tail reporting.
+    pub latency: LatencyHistogram,
     pub elapsed: Duration,
 }
 
@@ -153,6 +167,33 @@ impl LoadReport {
         }
     }
 
+    pub fn p50_micros(&self) -> u64 {
+        self.latency.p50_micros()
+    }
+
+    pub fn p99_micros(&self) -> u64 {
+        self.latency.p99_micros()
+    }
+
+    pub fn p999_micros(&self) -> u64 {
+        self.latency.p999_micros()
+    }
+
+    /// `"p50 .. us, p99 .. us, p999 .. us, max .. us"`.
+    pub fn latency_summary(&self) -> String {
+        self.latency.summary()
+    }
+
+    fn record(&mut self, micros: u64, cache_hit: bool) {
+        self.completed += 1;
+        if cache_hit {
+            self.cache_hits += 1;
+        }
+        self.total_latency_micros += micros;
+        self.max_latency_micros = self.max_latency_micros.max(micros);
+        self.latency.record_micros(micros);
+    }
+
     fn absorb(&mut self, other: &LoadReport) {
         self.completed += other.completed;
         self.retries += other.retries;
@@ -160,6 +201,7 @@ impl LoadReport {
         self.cache_hits += other.cache_hits;
         self.total_latency_micros += other.total_latency_micros;
         self.max_latency_micros = self.max_latency_micros.max(other.max_latency_micros);
+        self.latency.merge(&other.latency);
     }
 }
 
@@ -199,13 +241,7 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
                     loop {
                         match engine.submit_wait(request.clone()) {
                             Ok(resp) => {
-                                let micros = t.elapsed().as_micros() as u64;
-                                local.completed += 1;
-                                if resp.cache_hit {
-                                    local.cache_hits += 1;
-                                }
-                                local.total_latency_micros += micros;
-                                local.max_latency_micros = local.max_latency_micros.max(micros);
+                                local.record(t.elapsed().as_micros() as u64, resp.cache_hit);
                                 break;
                             }
                             Err(SubmitError::Overloaded { retry_after, .. }) => {
@@ -231,6 +267,151 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
     let mut report = aggregate.into_inner().unwrap();
     report.elapsed = t0.elapsed();
     report
+}
+
+/// One keep-alive client connection to a `net::Server`.
+struct NetConn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    limits: HttpLimits,
+}
+
+impl NetConn {
+    fn connect(addr: &str) -> Result<Self, String> {
+        let stream =
+            TcpStream::connect(addr).map_err(|e| format!("connecting to {addr}: {e}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(Duration::from_secs(30)));
+        let read_half = stream.try_clone().map_err(|e| format!("cloning socket: {e}"))?;
+        Ok(Self {
+            reader: BufReader::new(read_half),
+            writer: stream,
+            limits: HttpLimits::default(),
+        })
+    }
+
+    fn post(
+        &mut self,
+        path: &str,
+        headers: &[(String, String)],
+        body: &[u8],
+    ) -> Result<Response, HttpError> {
+        http::write_request(&mut self.writer, "POST", path, headers, body)?;
+        http::read_response(&mut self.reader, &self.limits)
+    }
+}
+
+/// Backoff suggested by a 429: the exact `X-Retry-After-Micros` header
+/// when present, else `Retry-After` (whole seconds), else 1ms.
+fn retry_after_of(resp: &Response) -> Duration {
+    if let Some(us) = resp.header("x-retry-after-micros").and_then(|v| v.parse::<u64>().ok()) {
+        return Duration::from_micros(us);
+    }
+    if let Some(secs) = resp.header("retry-after").and_then(|v| v.parse::<u64>().ok()) {
+        return Duration::from_secs(secs);
+    }
+    Duration::from_millis(1)
+}
+
+/// Network-mode driver: the same closed-loop workload as [`run_loadgen`],
+/// but through a `net::Server` at `addr` over real sockets (`POST
+/// /v1/project`, one keep-alive connection per client, distinct
+/// `X-Client-Id`s so quota buckets are per client). 429 responses sleep
+/// for the advertised retry-after and resubmit; a broken connection is
+/// re-dialed and the request retried. `Err` only if a client never
+/// manages to connect at all.
+pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, String> {
+    cfg.validate()?;
+    let pool: Vec<Matrix<f64>> = {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(cfg.seed);
+        (0..cfg.pool).map(|_| Matrix::randn(cfg.rows, cfg.cols, &mut rng)).collect()
+    };
+    let pool32: Vec<Matrix<f32>> = if cfg.f32_every > 0 {
+        pool.iter().map(|m| m.cast()).collect()
+    } else {
+        Vec::new()
+    };
+    let aggregate = Mutex::new(LoadReport::default());
+    let connect_errors = Mutex::new(Vec::<String>::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for client in 0..cfg.clients {
+            let pool = &pool;
+            let pool32 = &pool32;
+            let aggregate = &aggregate;
+            let connect_errors = &connect_errors;
+            s.spawn(move || {
+                let mut conn = match NetConn::connect(addr) {
+                    Ok(c) => c,
+                    Err(e) => {
+                        connect_errors.lock().unwrap().push(e);
+                        return;
+                    }
+                };
+                let headers =
+                    vec![("X-Client-Id".to_string(), format!("loadgen-{client}"))];
+                let mut local = LoadReport::default();
+                for i in 0..cfg.requests_per_client {
+                    let idx = (client + i) % pool.len();
+                    let kind = cfg.mix[(client + i) % cfg.mix.len()];
+                    let use_f32 = cfg.f32_every > 0 && (i + 1) % cfg.f32_every == 0;
+                    let request = if use_f32 {
+                        ProjectionRequest::f32(kind, cfg.eta, pool32[idx].clone())
+                    } else {
+                        ProjectionRequest::f64(kind, cfg.eta, pool[idx].clone())
+                    };
+                    let body = wire::project_request_body(&request);
+                    let t = Instant::now();
+                    let mut attempts = 0u32;
+                    loop {
+                        attempts += 1;
+                        if attempts > 10_000 {
+                            local.failed += 1;
+                            break;
+                        }
+                        match conn.post("/v1/project", &headers, body.as_bytes()) {
+                            Ok(resp) if resp.status == 200 => {
+                                let micros = t.elapsed().as_micros() as u64;
+                                // wire-format-aware fast path:
+                                // `wire::response_body` always emits this
+                                // exact key, so a substring check avoids
+                                // re-parsing the matrix payload per request
+                                let needle: &[u8] = b"\"cache_hit\":true";
+                                let hit =
+                                    resp.body.windows(needle.len()).any(|w| w == needle);
+                                local.record(micros, hit);
+                                break;
+                            }
+                            Ok(resp) if resp.status == 429 => {
+                                local.retries += 1;
+                                std::thread::sleep(retry_after_of(&resp));
+                            }
+                            Ok(_) => {
+                                // 4xx/5xx other than backpressure: no retry
+                                local.failed += 1;
+                                break;
+                            }
+                            Err(_) => match NetConn::connect(addr) {
+                                Ok(c) => conn = c,
+                                Err(_) => {
+                                    local.failed += 1;
+                                    break;
+                                }
+                            },
+                        }
+                    }
+                }
+                aggregate.lock().unwrap().absorb(&local);
+            });
+        }
+    });
+    let errors = connect_errors.into_inner().unwrap();
+    if let Some(e) = errors.into_iter().next() {
+        return Err(e);
+    }
+    let mut report = aggregate.into_inner().unwrap();
+    report.elapsed = t0.elapsed();
+    Ok(report)
 }
 
 #[cfg(test)]
@@ -290,6 +471,13 @@ mod tests {
         assert_eq!(report.failed, 0);
         assert!(report.elapsed > Duration::ZERO);
         assert!(report.throughput_rps() > 0.0);
+        // the histogram tallies every completion and its quantiles are
+        // ordered and bounded by the exact max
+        assert_eq!(report.latency.count(), 30);
+        assert!(report.p50_micros() <= report.p99_micros());
+        assert!(report.p99_micros() <= report.p999_micros());
+        assert!(report.p999_micros() <= report.max_latency_micros);
+        assert!(report.latency_summary().contains("p99"));
         let stats = engine.shutdown();
         assert_eq!(stats.completed(), 30);
     }

@@ -31,7 +31,10 @@
 //!   shape + dtype), and telemetry of the projection kinds.
 //! * **Load generation** ([`loadgen`]) — the closed-loop driver behind the
 //!   `serve` / `loadgen` CLI subcommands and
-//!   `benches/serve_throughput.rs`.
+//!   `benches/serve_throughput.rs`, in two modes: in-process
+//!   ([`run_loadgen`]) and over real sockets against the
+//!   [`crate::net`] HTTP front-end ([`run_loadgen_net`]), both reporting
+//!   p50/p99/p999 from a shared log-bucketed histogram.
 //! * **Model lifecycle** — `Engine::load_model` admits a
 //!   [`crate::persist`] checkpoint into the encoder registry
 //!   (`bilevel serve --model`), and `Engine::swap_model` /
@@ -68,8 +71,8 @@ pub mod scheduler;
 pub mod stats;
 
 pub use cache::{fingerprint, CacheKey, CachedThresholds, ThresholdCache};
-pub use engine::{Engine, ResponseHandle};
-pub use loadgen::{run_loadgen, LoadReport, LoadgenConfig};
+pub use engine::{Engine, ModelInfo, ResponseHandle};
+pub use loadgen::{run_loadgen, run_loadgen_net, LoadReport, LoadgenConfig};
 pub use queue::{JobQueue, PushError};
 pub use request::{
     BatchKey, Dtype, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,

@@ -1,0 +1,452 @@
+//! End-to-end tests of the HTTP front-end over real sockets: wire results
+//! bit-identical to in-process library calls, 429 + Retry-After
+//! backpressure honoured by the network loadgen, quota vs overload tag
+//! distinction, SSE monotonic stats snapshots, and graceful drain
+//! composing with `swap_model` under live client traffic with zero lost
+//! accepted requests.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bilevel_sparse::config::{HttpConfig, ServeConfig};
+use bilevel_sparse::model::{SaeDims, SaeParams};
+use bilevel_sparse::net::http::{
+    read_chunk, read_response, read_response_head, write_request, HttpError, HttpLimits,
+    Response,
+};
+use bilevel_sparse::net::{wire, Server};
+use bilevel_sparse::projection::ProjectionKind;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::serve::{
+    run_loadgen_net, Engine, LoadgenConfig, Payload, ProjectionRequest,
+};
+use bilevel_sparse::sparse::{CompactEncoder, CompactPlan};
+use bilevel_sparse::tensor::Matrix;
+
+/// One keep-alive client connection (test side — deliberately independent
+/// of the loadgen's client so the two implementations cross-check).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn open(addr: SocketAddr) -> Conn {
+        let s = TcpStream::connect(addr).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let _ = s.set_nodelay(true);
+        Conn { reader: BufReader::new(s.try_clone().unwrap()), writer: s }
+    }
+
+    fn send(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(String, String)],
+        body: &[u8],
+    ) -> Result<Response, HttpError> {
+        write_request(&mut self.writer, method, path, headers, body)?;
+        read_response(&mut self.reader, &HttpLimits::default())
+    }
+}
+
+fn http_cfg() -> HttpConfig {
+    HttpConfig { listen: "127.0.0.1:0".into(), ..HttpConfig::default() }
+}
+
+fn base_serve_cfg() -> ServeConfig {
+    ServeConfig { shards: 2, workers_per_shard: 1, cache_capacity: 32, ..ServeConfig::default() }
+}
+
+fn bits_equal(a: &Matrix<f64>, b: &Matrix<f64>) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.as_slice().iter().zip(b.as_slice()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A 10-feature / 4-hidden encoder with a seed-dependent pruned support,
+/// mirroring the engine's own registry tests.
+fn test_encoder<T: bilevel_sparse::scalar::Scalar>(seed: u64) -> CompactEncoder<T> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut p = SaeParams::init(SaeDims { features: 10, hidden: 4, classes: 2 }, &mut rng);
+    let mut mask = vec![1.0f32; 10];
+    for f in [1usize, 3, 8] {
+        mask[f] = 0.0;
+    }
+    p.apply_feature_mask(&mask);
+    let plan = CompactPlan::from_mask(&mask);
+    CompactEncoder::<T>::from_params(&p, &plan)
+}
+
+fn body_str(resp: &Response) -> &str {
+    std::str::from_utf8(&resp.body).expect("response body must be UTF-8")
+}
+
+#[test]
+fn project_and_encode_over_socket_bit_identical_to_in_process() {
+    let engine = Arc::new(Engine::start(&base_serve_cfg()).unwrap());
+    let enc64 = test_encoder::<f64>(301);
+    let enc32 = test_encoder::<f32>(302);
+    let id64 = engine.register_encoder_f64(enc64.clone());
+    let id32 = engine.register_encoder_f32(enc32.clone());
+    let server = Server::start(Arc::clone(&engine), &http_cfg()).unwrap();
+    let mut conn = Conn::open(server.addr());
+    let mut rng = Xoshiro256pp::seed_from_u64(300);
+
+    // projections: every wire round trip must equal the direct library call
+    let eta = 1.5;
+    for kind in [
+        ProjectionKind::BilevelL1Inf,
+        ProjectionKind::BilevelL11,
+        ProjectionKind::BilevelL12,
+        ProjectionKind::ExactL1InfSsn,
+    ] {
+        let y = Matrix::<f64>::randn(24, 16, &mut rng);
+        let body = wire::project_request_body(&ProjectionRequest::f64(kind, eta, y.clone()));
+        let resp = conn.send("POST", "/v1/project", &[], body.as_bytes()).unwrap();
+        assert_eq!(resp.status, 200, "{}: {}", kind.name(), body_str(&resp));
+        let over_wire = wire::decode_response(body_str(&resp)).unwrap();
+        let direct = kind.apply(&y, eta);
+        assert!(
+            bits_equal(over_wire.payload.as_f64().unwrap(), &direct),
+            "{}: socket result must be bit-identical to the library",
+            kind.name()
+        );
+    }
+
+    // f32 projection round trip
+    let y32: Matrix<f32> = Matrix::<f64>::randn(12, 10, &mut rng).cast();
+    let body = wire::project_request_body(&ProjectionRequest::f32(
+        ProjectionKind::BilevelL1Inf,
+        1.0,
+        y32.clone(),
+    ));
+    let resp = conn.send("POST", "/v1/project", &[], body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200);
+    let over_wire = wire::decode_response(body_str(&resp)).unwrap();
+    let direct32 = ProjectionKind::BilevelL1Inf.apply(&y32, 1.0f32);
+    let x32 = over_wire.payload.as_f32().unwrap();
+    assert!(
+        x32.as_slice().iter().zip(direct32.as_slice()).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "f32 socket result must be bit-identical"
+    );
+
+    // sparse encode through both registered models
+    let x = Matrix::<f64>::randn(10, 5, &mut rng);
+    let body = wire::encode_request_body(&Payload::F64(x.clone()));
+    let resp = conn.send("POST", &format!("/v1/encode/{id64}"), &[], body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200, "{}", body_str(&resp));
+    let over_wire = wire::decode_response(body_str(&resp)).unwrap();
+    assert!(bits_equal(over_wire.payload.as_f64().unwrap(), &enc64.encode(&x)));
+
+    let xf: Matrix<f32> = x.cast();
+    let body = wire::encode_request_body(&Payload::F32(xf.clone()));
+    let resp = conn.send("POST", &format!("/v1/encode/{id32}"), &[], body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200, "{}", body_str(&resp));
+    let over_wire = wire::decode_response(body_str(&resp)).unwrap();
+    let direct = enc32.encode(&xf);
+    let h = over_wire.payload.as_f32().unwrap();
+    assert!(h.as_slice().iter().zip(direct.as_slice()).all(|(a, b)| a.to_bits() == b.to_bits()));
+
+    // inventory + stats routes agree with the engine
+    let resp = conn.send("GET", "/v1/models", &[], b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let v = wire::Json::parse(body_str(&resp)).unwrap();
+    let models = v.get("models").and_then(wire::Json::as_arr).unwrap();
+    assert_eq!(models.len(), 2);
+    assert!(models.iter().any(|m| m.get("id").and_then(wire::Json::as_u64) == Some(id64)));
+
+    let resp = conn.send("GET", "/v1/stats", &[], b"").unwrap();
+    assert_eq!(resp.status, 200);
+    let v = wire::Json::parse(body_str(&resp)).unwrap();
+    let completed = v.get("completed").and_then(wire::Json::as_u64).unwrap();
+    assert_eq!(completed, 7, "5 projections + 2 encodes served");
+
+    drop(conn);
+    server.join();
+    Arc::try_unwrap(engine).ok().unwrap().shutdown();
+}
+
+#[test]
+fn network_loadgen_honours_429_retry_after() {
+    // One worker parked in a batch-fill window on one kind while the other
+    // kind piles into a depth-1 queue: overload 429s are a certainty, and
+    // the loadgen must absorb every one of them via the advertised backoff
+    // and still complete the full workload.
+    let engine = Arc::new(
+        Engine::start(&ServeConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            queue_capacity: 1,
+            max_batch: 8,
+            min_fill: 8,
+            max_wait_micros: 20_000,
+            cache_capacity: 0,
+        })
+        .unwrap(),
+    );
+    let server = Server::start(Arc::clone(&engine), &http_cfg()).unwrap();
+    let cfg = LoadgenConfig {
+        clients: 4,
+        requests_per_client: 16,
+        rows: 12,
+        cols: 8,
+        eta: 1.0,
+        mix: vec![ProjectionKind::BilevelL1Inf, ProjectionKind::BilevelL11],
+        pool: 2,
+        f32_every: 0,
+        seed: 7,
+    };
+    let report = run_loadgen_net(&server.addr().to_string(), &cfg).unwrap();
+    assert_eq!(report.completed, 64, "every request must eventually complete");
+    assert_eq!(report.failed, 0);
+    assert!(report.retries > 0, "contended depth-1 queue must shed load at least once");
+    assert_eq!(report.latency.count(), 64);
+    assert!(report.p50_micros() <= report.p99_micros());
+    assert!(report.p99_micros() <= report.p999_micros());
+
+    let http_report = server.join();
+    assert_eq!(http_report.overloaded, report.retries, "every 429 the clients saw was engine overload");
+    assert_eq!(http_report.quota_rejected, 0);
+    let stats = Arc::try_unwrap(engine).ok().unwrap().shutdown();
+    assert_eq!(stats.completed(), 64);
+    assert_eq!(stats.rejected(), report.retries);
+}
+
+#[test]
+fn overload_429_advertises_exact_backoff_headers() {
+    // Deterministic single overflow: worker parked on kind/shape A, one
+    // same-shard B request occupying the depth-1 queue, a second B must be
+    // shed with the engine's exact retry-after on the wire.
+    let engine = Arc::new(
+        Engine::start(&ServeConfig {
+            shards: 1,
+            workers_per_shard: 1,
+            queue_capacity: 1,
+            max_batch: 64,
+            min_fill: 64,
+            max_wait_micros: 300_000,
+            cache_capacity: 0,
+        })
+        .unwrap(),
+    );
+    let server = Server::start(Arc::clone(&engine), &http_cfg()).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(310);
+    let a = Matrix::<f64>::randn(8, 6, &mut rng);
+    let b1 = Matrix::<f64>::randn(6, 8, &mut rng);
+    let b2 = Matrix::<f64>::randn(6, 8, &mut rng);
+
+    // A is picked up by the worker and parks in the 300ms batch window.
+    let a_handle = engine
+        .submit(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, a))
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(50));
+
+    // B1 (different shape => different batch key) fills the queue; its
+    // connection blocks in submit_wait on the handler thread.
+    let addr = server.addr();
+    let b1_body =
+        wire::project_request_body(&ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, b1));
+    let blocked = std::thread::spawn(move || {
+        let mut conn = Conn::open(addr);
+        conn.send("POST", "/v1/project", &[], b1_body.as_bytes()).unwrap()
+    });
+    std::thread::sleep(Duration::from_millis(50));
+
+    // B2 overflows: 429 now, with the engine's exact backoff surfaced.
+    let mut conn = Conn::open(addr);
+    let b2_body =
+        wire::project_request_body(&ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, b2));
+    let resp = conn.send("POST", "/v1/project", &[], b2_body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 429);
+    assert!(body_str(&resp).contains("\"error\":\"overloaded\""), "{}", body_str(&resp));
+    // engine retry_after = 2 * max_wait = 600ms
+    assert_eq!(resp.header("x-retry-after-micros"), Some("600000"));
+    assert_eq!(resp.header("retry-after"), Some("1"), "600ms rounds up to 1s");
+
+    let b1_resp = blocked.join().unwrap();
+    assert_eq!(b1_resp.status, 200, "the queued request still completes");
+    assert!(a_handle.wait().is_some());
+    drop(conn);
+    server.join();
+    let stats = Arc::try_unwrap(engine).ok().unwrap().shutdown();
+    assert_eq!(stats.rejected(), 1);
+    assert_eq!(stats.completed(), 2);
+}
+
+#[test]
+fn quota_429_is_distinct_from_overload_and_per_client() {
+    let engine = Arc::new(Engine::start(&base_serve_cfg()).unwrap());
+    let cfg = HttpConfig {
+        quota_rps: 0.01, // effectively no refill within the test
+        quota_burst: 2.0,
+        ..http_cfg()
+    };
+    let server = Server::start(Arc::clone(&engine), &cfg).unwrap();
+    let mut conn = Conn::open(server.addr());
+    let mut rng = Xoshiro256pp::seed_from_u64(320);
+    let y = Matrix::<f64>::randn(6, 6, &mut rng);
+    let body =
+        wire::project_request_body(&ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y));
+    let tenant = |name: &str| vec![("X-Client-Id".to_string(), name.to_string())];
+
+    // burst of 2 admitted, third rejected with the quota tag
+    for i in 0..2 {
+        let resp = conn.send("POST", "/v1/project", &tenant("tenant-a"), body.as_bytes()).unwrap();
+        assert_eq!(resp.status, 200, "burst request {i}");
+    }
+    let resp = conn.send("POST", "/v1/project", &tenant("tenant-a"), body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 429);
+    assert!(body_str(&resp).contains("\"error\":\"quota\""), "{}", body_str(&resp));
+    assert!(resp.header("retry-after").is_some());
+    assert!(resp.header("x-retry-after-micros").is_some());
+
+    // a different client id on the same connection is a different bucket
+    let resp = conn.send("POST", "/v1/project", &tenant("tenant-b"), body.as_bytes()).unwrap();
+    assert_eq!(resp.status, 200);
+
+    // read-only routes are never quota-gated
+    for _ in 0..4 {
+        let resp = conn.send("GET", "/healthz", &tenant("tenant-a"), b"").unwrap();
+        assert_eq!(resp.status, 200);
+    }
+
+    drop(conn);
+    let report = server.join();
+    assert_eq!(report.quota_rejected, 1);
+    assert_eq!(report.overloaded, 0, "quota and overload counters must not mix");
+    Arc::try_unwrap(engine).ok().unwrap().shutdown();
+}
+
+#[test]
+fn sse_events_stream_monotonic_snapshots_over_socket() {
+    let engine = Arc::new(Engine::start(&base_serve_cfg()).unwrap());
+    let cfg = HttpConfig { sse_interval_ms: 30, ..http_cfg() };
+    let server = Server::start(Arc::clone(&engine), &cfg).unwrap();
+
+    // traffic in the background so the counters actually move mid-stream
+    let bg_engine = Arc::clone(&engine);
+    let bg = std::thread::spawn(move || {
+        let mut rng = Xoshiro256pp::seed_from_u64(330);
+        for _ in 0..30 {
+            let y = Matrix::<f64>::randn(8, 8, &mut rng);
+            let _ = bg_engine
+                .submit_wait(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    });
+
+    let mut conn = Conn::open(server.addr());
+    write_request(&mut conn.writer, "GET", "/v1/events?n=4", &[], b"").unwrap();
+    let limits = HttpLimits::default();
+    let (status, headers) = read_response_head(&mut conn.reader, &limits).unwrap();
+    assert_eq!(status, 200);
+    assert!(headers
+        .iter()
+        .any(|(k, v)| k == "content-type" && v.starts_with("text/event-stream")));
+
+    let mut text = String::new();
+    while let Some(chunk) = read_chunk(&mut conn.reader).unwrap() {
+        text.push_str(std::str::from_utf8(&chunk).unwrap());
+    }
+    bg.join().unwrap();
+
+    let mut seqs = Vec::new();
+    let mut submitted = Vec::new();
+    for line in text.lines().filter(|l| l.starts_with("data: {\"seq\":")) {
+        let json = wire::Json::parse(&line["data: ".len()..]).unwrap();
+        seqs.push(json.get("seq").and_then(wire::Json::as_u64).unwrap());
+        submitted.push(json.get("submitted").and_then(wire::Json::as_u64).unwrap());
+    }
+    assert_eq!(seqs, vec![0, 1, 2, 3], "snapshots must be sequenced");
+    assert!(
+        submitted.windows(2).all(|w| w[0] <= w[1]),
+        "submitted counter must be monotonic: {submitted:?}"
+    );
+    assert!(
+        *submitted.last().unwrap() > submitted[0],
+        "counters should move under background traffic: {submitted:?}"
+    );
+
+    drop(conn);
+    server.join();
+    Arc::try_unwrap(engine).ok().unwrap().shutdown();
+}
+
+#[test]
+fn drain_composes_with_encoder_hot_swap_zero_lost_requests() {
+    let engine = Arc::new(Engine::start(&base_serve_cfg()).unwrap());
+    let enc_a = test_encoder::<f64>(341);
+    let enc_b = test_encoder::<f64>(342);
+    let id = engine.register_encoder_f64(enc_a.clone());
+
+    let mut rng = Xoshiro256pp::seed_from_u64(340);
+    let x = Matrix::<f64>::randn(10, 5, &mut rng);
+    let expect_a = enc_a.encode(&x);
+    let expect_b = enc_b.encode(&x);
+    assert!(!bits_equal(&expect_a, &expect_b), "the two encoders must be distinguishable");
+
+    let server = Server::start(Arc::clone(&engine), &http_cfg()).unwrap();
+    let addr = server.addr();
+    let body = wire::encode_request_body(&Payload::F64(x.clone()));
+    let a_seen = AtomicU64::new(0);
+    let b_seen = AtomicU64::new(0);
+
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            let body = body.as_str();
+            let (a_seen, b_seen) = (&a_seen, &b_seen);
+            let expect_a = &expect_a;
+            let expect_b = &expect_b;
+            s.spawn(move || {
+                let mut conn = Conn::open(addr);
+                let path = format!("/v1/encode/{id}");
+                for _ in 0..100_000 {
+                    match conn.send("POST", &path, &[], body.as_bytes()) {
+                        Ok(resp) if resp.status == 200 => {
+                            let wire_resp = wire::decode_response(body_str(&resp)).unwrap();
+                            let h = wire_resp.payload.as_f64().unwrap();
+                            if bits_equal(h, expect_a) {
+                                a_seen.fetch_add(1, Ordering::Relaxed);
+                            } else if bits_equal(h, expect_b) {
+                                b_seen.fetch_add(1, Ordering::Relaxed);
+                            } else {
+                                panic!("200 response matched neither encoder");
+                            }
+                        }
+                        Ok(resp) if resp.status == 429 => {
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                        // 503 = drained; Err = connection closed by drain
+                        Ok(_) | Err(_) => return,
+                    }
+                }
+                panic!("drain never arrived");
+            });
+        }
+
+        // let traffic run on encoder A, hot-swap to B mid-flight, let it
+        // run some more, then drain over the wire — all under load
+        std::thread::sleep(Duration::from_millis(150));
+        engine.swap_encoder_f64(id, enc_b.clone()).unwrap();
+        std::thread::sleep(Duration::from_millis(150));
+        let mut conn = Conn::open(addr);
+        let resp = conn.send("POST", "/v1/drain", &[], b"").unwrap();
+        assert_eq!(resp.status, 200);
+    });
+
+    server.wait_for_drain();
+    let report = server.join();
+    let (a_n, b_n) = (a_seen.load(Ordering::Relaxed), b_seen.load(Ordering::Relaxed));
+    assert!(a_n > 0, "some responses must come from the pre-swap encoder");
+    assert!(b_n > 0, "some responses must come from the post-swap encoder");
+    // zero lost accepted requests: every 200 the server wrote was read and
+    // verified by a client (+1 for the drain acknowledgement itself), and
+    // every engine completion was delivered
+    assert_eq!(report.served_ok, a_n + b_n + 1, "{report:?}");
+    let stats = Arc::try_unwrap(engine).ok().unwrap().shutdown();
+    assert_eq!(stats.completed(), a_n + b_n);
+}
