@@ -34,6 +34,7 @@ fn engine_cfg(shards: usize, max_batch: usize, cache: usize) -> ServeConfig {
         min_fill: 1, // opportunistic: batch whatever is queued, never wait
         max_wait_micros: 200,
         cache_capacity: cache,
+        ..ServeConfig::default()
     }
 }
 
@@ -97,6 +98,7 @@ fn main() {
         pool: POOL,
         f32_every: 0,
         seed: 1,
+        ..LoadgenConfig::default()
     };
 
     // -------- 2. engine, sharding only (max_batch = 1, no cache) -------

@@ -143,14 +143,31 @@ COMMANDS:
                POST /v1/encode/{model}, GET /v1/stats|/v1/models|/healthz,
                GET /v1/events SSE, POST /v1/drain for graceful drain;
                per-client quotas from [serve.http]); --addr-file F writes
-               the resolved address (useful with --listen 127.0.0.1:0)
+               the resolved address (useful with --listen 127.0.0.1:0);
+               a [fault] config section (or --faults/--fault-seed) arms
+               the seeded fault-injection layer for chaos testing
   loadgen      closed-loop load generator against an in-process engine:
                sustains a mixed-kind workload, honours backpressure
-               retry-after, reports client latency/throughput (mean +
-               p50/p99/p999) + engine-side shard counters (same options as
-               serve, bigger defaults); --connect IP:PORT drives a
-               `serve --listen` server over real sockets instead, obeying
-               HTTP 429 Retry-After backpressure
+               retry-after with jittered capped exponential backoff
+               ([--retry-budget N] [--backoff-cap-ms MS]), reports client
+               latency/throughput (mean + p50/p99/p999) + engine-side
+               shard counters (same options as serve, bigger defaults);
+               --connect IP:PORT drives a `serve --listen` server over
+               real sockets instead, obeying HTTP 429 Retry-After;
+               --chaos also retries 500/503 recovery errors, injects
+               client-side slow reads from the fault plan, and counts
+               redials separately from backpressure retries
+  chaos        deterministic fault-injection drill, one process: install
+               the seeded fault plan (--faults \"site:spec;...\"
+               [--fault-seed S], or the [fault] section of --config, or a
+               built-in default), serve over a real socket under the
+               chaos loadgen, drain, then corrupt the newest rolling
+               checkpoint on disk and prove bit-exact recovery from the
+               prior snapshot; exits nonzero if any request is lost, a
+               worker panic goes unrespawned, or recovery diverges
+               sites: persist.short_write|short_read|torn_rename|
+               checksum_flip, worker.panic|stall, conn.reset|slow_read
+               spec keys: p=F every=N after=N limit=N param=N
   help         print this help
 
 PROJECTION METHODS:

@@ -257,6 +257,12 @@ pub struct ServeConfig {
     pub max_wait_micros: u64,
     /// LRU threshold-cache entries shared by all shards (0 disables).
     pub cache_capacity: usize,
+    /// Consecutive encode execution failures that trip a model's circuit
+    /// breaker open.
+    pub breaker_threshold: usize,
+    /// How long a tripped breaker refuses a model's traffic before
+    /// admitting a half-open probe.
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -269,6 +275,8 @@ impl Default for ServeConfig {
             min_fill: 1,
             max_wait_micros: 200,
             cache_capacity: 256,
+            breaker_threshold: 5,
+            breaker_cooldown_ms: 1_000,
         }
     }
 }
@@ -300,6 +308,10 @@ impl ServeConfig {
             max_wait_micros: doc.usize_or("serve.max_wait_micros", d.max_wait_micros as usize)
                 as u64,
             cache_capacity: doc.usize_or("serve.cache_capacity", d.cache_capacity),
+            breaker_threshold: doc.usize_or("serve.breaker_threshold", d.breaker_threshold),
+            breaker_cooldown_ms: doc
+                .usize_or("serve.breaker_cooldown_ms", d.breaker_cooldown_ms as usize)
+                as u64,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -318,6 +330,15 @@ impl ServeConfig {
         if self.min_fill == 0 || self.min_fill > self.max_batch {
             return Err("serve.min_fill must be in 1..=serve.max_batch".into());
         }
+        if self.breaker_threshold == 0 {
+            return Err("serve.breaker_threshold must be >= 1".into());
+        }
+        if self.breaker_threshold > u32::MAX as usize {
+            return Err("serve.breaker_threshold is out of range".into());
+        }
+        if self.breaker_cooldown_ms == 0 {
+            return Err("serve.breaker_cooldown_ms must be >= 1".into());
+        }
         Ok(())
     }
 }
@@ -333,6 +354,9 @@ pub struct HttpConfig {
     pub max_connections: usize,
     /// Socket read timeout — a stalled peer is timed out (408) after this.
     pub read_timeout_ms: u64,
+    /// Socket write timeout — a peer that stops reading its response is
+    /// timed out (connection closed, counted in the net report) after this.
+    pub write_timeout_ms: u64,
     /// Request-body cap (413 beyond it).
     pub max_body_bytes: usize,
     /// Header-section cap (431 beyond it).
@@ -351,6 +375,7 @@ impl Default for HttpConfig {
             listen: "127.0.0.1:8080".into(),
             max_connections: 256,
             read_timeout_ms: 5_000,
+            write_timeout_ms: 5_000,
             max_body_bytes: 16 * 1024 * 1024,
             max_header_bytes: 16 * 1024,
             quota_rps: 0.0,
@@ -363,6 +388,10 @@ impl Default for HttpConfig {
 impl HttpConfig {
     pub fn read_timeout(&self) -> Duration {
         Duration::from_millis(self.read_timeout_ms)
+    }
+
+    pub fn write_timeout(&self) -> Duration {
+        Duration::from_millis(self.write_timeout_ms)
     }
 
     pub fn sse_interval(&self) -> Duration {
@@ -378,6 +407,9 @@ impl HttpConfig {
             max_connections: doc.usize_or("serve.http.max_connections", d.max_connections),
             read_timeout_ms: doc
                 .usize_or("serve.http.read_timeout_ms", d.read_timeout_ms as usize)
+                as u64,
+            write_timeout_ms: doc
+                .usize_or("serve.http.write_timeout_ms", d.write_timeout_ms as usize)
                 as u64,
             max_body_bytes: doc.usize_or("serve.http.max_body_bytes", d.max_body_bytes),
             max_header_bytes: doc.usize_or("serve.http.max_header_bytes", d.max_header_bytes),
@@ -400,6 +432,9 @@ impl HttpConfig {
         }
         if self.read_timeout_ms == 0 {
             return Err("serve.http.read_timeout_ms must be >= 1".into());
+        }
+        if self.write_timeout_ms == 0 {
+            return Err("serve.http.write_timeout_ms must be >= 1".into());
         }
         if self.max_body_bytes == 0 {
             return Err("serve.http.max_body_bytes must be >= 1".into());
@@ -555,6 +590,11 @@ mod tests {
         assert_eq!(cfg.cache_capacity, 0);
         // defaults fill the gaps
         assert_eq!(cfg.workers_per_shard, 1);
+        assert_eq!(cfg.breaker_threshold, 5);
+        assert_eq!(cfg.breaker_cooldown_ms, 1_000);
+        let doc = parse("[serve]\nbreaker_threshold = 2\nbreaker_cooldown_ms = 75").unwrap();
+        let cfg = ServeConfig::from_doc(&doc).unwrap();
+        assert_eq!((cfg.breaker_threshold, cfg.breaker_cooldown_ms), (2, 75));
     }
 
     #[test]
@@ -566,6 +606,10 @@ mod tests {
         let doc = parse("[serve]\nmax_batch = 4\nmin_fill = 5").unwrap();
         assert!(ServeConfig::from_doc(&doc).is_err());
         let doc = parse("[serve]\nworkers_per_shard = 0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        let doc = parse("[serve]\nbreaker_threshold = 0").unwrap();
+        assert!(ServeConfig::from_doc(&doc).is_err());
+        let doc = parse("[serve]\nbreaker_cooldown_ms = 0").unwrap();
         assert!(ServeConfig::from_doc(&doc).is_err());
     }
 
@@ -609,6 +653,7 @@ mod tests {
             listen = "127.0.0.1:0"
             max_connections = 32
             read_timeout_ms = 250
+            write_timeout_ms = 300
             max_body_bytes = 1048576
             quota_rps = 50.0
             quota_burst = 10.0
@@ -620,6 +665,7 @@ mod tests {
         assert_eq!(cfg.listen, "127.0.0.1:0");
         assert_eq!(cfg.max_connections, 32);
         assert_eq!(cfg.read_timeout(), std::time::Duration::from_millis(250));
+        assert_eq!(cfg.write_timeout(), std::time::Duration::from_millis(300));
         assert_eq!(cfg.max_body_bytes, 1 << 20);
         assert_eq!(cfg.quota_rps, 50.0);
         assert_eq!(cfg.sse_interval(), std::time::Duration::from_millis(25));
@@ -633,6 +679,7 @@ mod tests {
             "[serve.http]\nlisten = \"\"",
             "[serve.http]\nmax_connections = 0",
             "[serve.http]\nread_timeout_ms = 0",
+            "[serve.http]\nwrite_timeout_ms = 0",
             "[serve.http]\nmax_body_bytes = 0",
             "[serve.http]\nmax_header_bytes = 10",
             "[serve.http]\nquota_rps = -1.0",
@@ -654,6 +701,20 @@ mod tests {
         let serve = ServeConfig::from_doc(&doc).unwrap();
         serve.validate().unwrap();
         assert!(doc.get("loadgen.clients").is_some());
+    }
+
+    #[test]
+    fn chaos_config_file_parses_with_fault_plan() {
+        let text = std::fs::read_to_string("configs/chaos.toml").unwrap();
+        let doc = parse(&text).unwrap();
+        ServeConfig::from_doc(&doc).unwrap().validate().unwrap();
+        HttpConfig::from_doc(&doc).unwrap().validate().unwrap();
+        crate::serve::LoadgenConfig::from_doc(&doc).unwrap().validate().unwrap();
+        let plan = crate::fault::FaultPlan::from_doc(&doc)
+            .unwrap()
+            .expect("chaos config must arm at least one fault site");
+        assert!(plan.site(crate::fault::FaultSite::WorkerPanic).is_some());
+        assert!(plan.site(crate::fault::FaultSite::ConnReset).is_some());
     }
 
     #[test]

@@ -1,0 +1,548 @@
+//! # `fault` — deterministic, seeded fault injection
+//!
+//! A chaos-engineering layer in the spirit of `fail-rs`: named *sites* in
+//! persist I/O, serve workers, and net connections consult a globally
+//! installed [`FaultPlan`] and, per the plan's schedule, simulate a
+//! failure (short read/write, torn rename, checksum flip, worker panic or
+//! stall, connection reset, slow reader). With no plan installed the
+//! check is one relaxed atomic load — production code pays a branch, not
+//! a lock.
+//!
+//! ## Determinism
+//!
+//! Every decision is a pure function of `(plan.seed, site, hit index)`:
+//! each site keeps a monotonically increasing hit counter, and hit `n`
+//! fires according to the site's [`SiteSpec`] — either a deterministic
+//! `every=K` stride (exactly replayable regardless of thread
+//! interleaving) or a seeded per-hit Bernoulli draw (`p=0.1`) hashed from
+//! `seed ^ site ^ n` with SplitMix64, so the *set of firing hit indices*
+//! is identical across replays. `limit=` caps total fires in arrival
+//! order; combine it with `every=` when byte-for-byte replay matters.
+//!
+//! ## Spec grammar
+//!
+//! A site spec is a comma list of `key=value` pairs:
+//!
+//! | key     | meaning                                            |
+//! |---------|----------------------------------------------------|
+//! | `p`     | fire probability per hit (seeded, in `[0,1]`)      |
+//! | `every` | fire every `K`-th hit (takes precedence over `p`)  |
+//! | `after` | skip the first `N` hits                            |
+//! | `limit` | fire at most `N` times (0 = unlimited)             |
+//! | `param` | site parameter: bytes to cut / keep, millis, bits  |
+//!
+//! Plans come from the `[fault]` config section
+//! ([`FaultPlan::from_doc`]), from the CLI (`bilevel chaos
+//! --faults "worker.panic:every=8,limit=2;conn.reset:p=0.1,param=256"`),
+//! or programmatically ([`FaultPlan::with_site`]). Install with
+//! [`install`], tear down with [`clear`]; sites call [`fire`].
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::TomlDoc;
+use crate::rng::{Rng, SplitMix64};
+
+/// Number of named injection sites.
+pub const SITE_COUNT: usize = 8;
+
+/// A named fault-injection point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Checkpoint save writes fewer bytes than intended (torn tail).
+    PersistShortWrite,
+    /// Checkpoint load observes a truncated byte stream.
+    PersistShortRead,
+    /// Checkpoint save crashes between the tmp write and the rename: the
+    /// tmp file is left behind and the save reports an I/O error.
+    PersistTornRename,
+    /// One payload bit of a saved checkpoint is flipped on disk.
+    PersistChecksumFlip,
+    /// A serve worker panics mid-job.
+    WorkerPanic,
+    /// A serve worker stalls for `param` milliseconds before executing.
+    WorkerStall,
+    /// The server resets a connection after writing `param` response bytes.
+    ConnReset,
+    /// A chaos loadgen client sleeps `param` milliseconds before reading
+    /// the response (exercises the server's write timeout).
+    ConnSlowRead,
+}
+
+impl FaultSite {
+    /// Every site, in declaration order (stable indices).
+    pub const ALL: [FaultSite; SITE_COUNT] = [
+        FaultSite::PersistShortWrite,
+        FaultSite::PersistShortRead,
+        FaultSite::PersistTornRename,
+        FaultSite::PersistChecksumFlip,
+        FaultSite::WorkerPanic,
+        FaultSite::WorkerStall,
+        FaultSite::ConnReset,
+        FaultSite::ConnSlowRead,
+    ];
+
+    /// The dotted name used by config keys, CLI specs, and reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::PersistShortWrite => "persist.short_write",
+            FaultSite::PersistShortRead => "persist.short_read",
+            FaultSite::PersistTornRename => "persist.torn_rename",
+            FaultSite::PersistChecksumFlip => "persist.checksum_flip",
+            FaultSite::WorkerPanic => "worker.panic",
+            FaultSite::WorkerStall => "worker.stall",
+            FaultSite::ConnReset => "conn.reset",
+            FaultSite::ConnSlowRead => "conn.slow_read",
+        }
+    }
+
+    /// Inverse of [`FaultSite::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.into_iter().find(|site| site.name() == s)
+    }
+
+    fn index(self) -> usize {
+        Self::ALL.iter().position(|&s| s == self).expect("site in ALL")
+    }
+
+    /// Stable per-site tag mixed into the decision hash so two sites with
+    /// the same hit index draw independent Bernoulli streams.
+    fn tag(self) -> u64 {
+        crate::persist::fnv1a64(self.name().as_bytes())
+    }
+}
+
+/// When (and how hard) one site fires. See the module docs for the
+/// spec grammar.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SiteSpec {
+    /// Per-hit fire probability (seeded; ignored when `every > 0`).
+    pub probability: f64,
+    /// Fire deterministically every `every`-th eligible hit (0 = off).
+    pub every: u64,
+    /// Skip the first `after` hits.
+    pub after: u64,
+    /// Fire at most `limit` times (0 = unlimited).
+    pub limit: u64,
+    /// Site-specific parameter (bytes, millis, bit index).
+    pub param: u64,
+}
+
+impl SiteSpec {
+    /// Parse `"p=0.5,every=3,after=10,limit=2,param=64"`.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut out = Self::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec entry {part:?}: expected key=value"))?;
+            match k.trim() {
+                "p" | "prob" | "probability" => {
+                    let p: f64 = v
+                        .trim()
+                        .parse()
+                        .map_err(|_| format!("fault spec p: bad number {v:?}"))?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!("fault spec p={p} outside [0,1]"));
+                    }
+                    out.probability = p;
+                }
+                "every" => out.every = parse_u64("every", v)?,
+                "after" => out.after = parse_u64("after", v)?,
+                "limit" => out.limit = parse_u64("limit", v)?,
+                "param" => out.param = parse_u64("param", v)?,
+                other => return Err(format!("fault spec: unknown key {other:?}")),
+            }
+        }
+        if out.probability == 0.0 && out.every == 0 {
+            return Err(format!("fault spec {spec:?} never fires: set p= or every="));
+        }
+        Ok(out)
+    }
+
+    /// Does the schedule pass for 0-based hit `n` (ignoring `limit`)?
+    /// Pure: identical across replays for the same `(seed, site, n)`.
+    pub fn schedule_fires(&self, seed: u64, site: FaultSite, n: u64) -> bool {
+        if n < self.after {
+            return false;
+        }
+        if self.every > 0 {
+            return (n - self.after) % self.every == 0;
+        }
+        if self.probability > 0.0 {
+            let mut h =
+                SplitMix64::new(seed ^ site.tag() ^ n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            return h.next_f64() < self.probability;
+        }
+        false
+    }
+}
+
+fn parse_u64(key: &str, v: &str) -> Result<u64, String> {
+    v.trim().parse().map_err(|_| format!("fault spec {key}: bad integer {v:?}"))
+}
+
+/// A seeded schedule of faults across any subset of the named sites.
+/// Empty plans are inert; the default is empty.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    sites: Vec<(FaultSite, SiteSpec)>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, sites: Vec::new() }
+    }
+
+    /// Add (or replace) one site's spec.
+    pub fn with_site(mut self, site: FaultSite, spec: SiteSpec) -> Self {
+        self.sites.retain(|(s, _)| *s != site);
+        self.sites.push((site, spec));
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sites.is_empty()
+    }
+
+    pub fn site(&self, site: FaultSite) -> Option<&SiteSpec> {
+        self.sites.iter().find(|(s, _)| *s == site).map(|(_, spec)| spec)
+    }
+
+    pub fn sites(&self) -> impl Iterator<Item = (FaultSite, &SiteSpec)> {
+        self.sites.iter().map(|(s, spec)| (*s, spec))
+    }
+
+    /// Parse a CLI spec list:
+    /// `"worker.panic:every=8,limit=2;conn.reset:p=0.1,param=256"`.
+    pub fn parse_sites(seed: u64, list: &str) -> Result<Self, String> {
+        let mut plan = Self::new(seed);
+        for entry in list.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (name, spec) = entry
+                .split_once(':')
+                .ok_or_else(|| format!("fault entry {entry:?}: expected site:spec"))?;
+            let site = FaultSite::parse(name.trim())
+                .ok_or_else(|| format!("unknown fault site {:?}", name.trim()))?;
+            plan = plan.with_site(site, SiteSpec::parse(spec)?);
+        }
+        Ok(plan)
+    }
+
+    /// Build from the `[fault]` config section: `fault.seed` plus one
+    /// string spec per site, e.g.
+    ///
+    /// ```toml
+    /// [fault]
+    /// seed = 7
+    /// [fault.worker]
+    /// panic = "every=64,limit=2"
+    /// [fault.conn]
+    /// reset = "p=0.05,param=256"
+    /// ```
+    ///
+    /// Returns `Ok(None)` when the section configures no sites.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<Self>, String> {
+        let seed = doc.usize_or("fault.seed", 0) as u64;
+        let mut plan = Self::new(seed);
+        for site in FaultSite::ALL {
+            let key = format!("fault.{}", site.name());
+            if let Some(v) = doc.get(&key) {
+                let spec = v
+                    .as_str()
+                    .ok_or_else(|| format!("{key} must be a string fault spec"))?;
+                plan = plan.with_site(site, SiteSpec::parse(spec)?);
+            }
+        }
+        if plan.is_empty() {
+            Ok(None)
+        } else {
+            Ok(Some(plan))
+        }
+    }
+
+    /// One-line human summary, e.g.
+    /// `seed 7: worker.panic[every=8 limit=2] conn.reset[p=0.05 param=256]`.
+    pub fn summary(&self) -> String {
+        let mut out = format!("seed {}:", self.seed);
+        for (site, spec) in &self.sites {
+            out.push(' ');
+            out.push_str(site.name());
+            out.push('[');
+            let mut parts = Vec::new();
+            if spec.every > 0 {
+                parts.push(format!("every={}", spec.every));
+            } else {
+                parts.push(format!("p={}", spec.probability));
+            }
+            if spec.after > 0 {
+                parts.push(format!("after={}", spec.after));
+            }
+            if spec.limit > 0 {
+                parts.push(format!("limit={}", spec.limit));
+            }
+            if spec.param > 0 {
+                parts.push(format!("param={}", spec.param));
+            }
+            out.push_str(&parts.join(" "));
+            out.push(']');
+        }
+        out
+    }
+}
+
+/// An installed plan plus per-site hit/fire telemetry.
+#[derive(Debug)]
+pub struct Injector {
+    plan: FaultPlan,
+    hits: [AtomicU64; SITE_COUNT],
+    fired: [AtomicU64; SITE_COUNT],
+}
+
+impl Injector {
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            hits: std::array::from_fn(|_| AtomicU64::new(0)),
+            fired: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Total times `site` was reached (configured sites only count when a
+    /// plan is installed — unconfigured sites short-circuit).
+    pub fn hits(&self, site: FaultSite) -> u64 {
+        self.hits[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Total times `site` actually fired.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Decide whether this hit of `site` fires; returns the site param.
+    fn decide(&self, site: FaultSite) -> Option<u64> {
+        let spec = self.plan.site(site)?;
+        let i = site.index();
+        let n = self.hits[i].fetch_add(1, Ordering::Relaxed);
+        if !spec.schedule_fires(self.plan.seed, site, n) {
+            return None;
+        }
+        if spec.limit > 0 {
+            // exact cap: only count a fire we actually claim
+            let mut cur = self.fired[i].load(Ordering::Relaxed);
+            loop {
+                if cur >= spec.limit {
+                    return None;
+                }
+                match self.fired[i].compare_exchange_weak(
+                    cur,
+                    cur + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(actual) => cur = actual,
+                }
+            }
+        } else {
+            self.fired[i].fetch_add(1, Ordering::Relaxed);
+        }
+        Some(spec.param)
+    }
+
+    /// `"  site: fired F / hits H"` lines for every configured site.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (site, _) in self.plan.sites() {
+            out.push_str(&format!(
+                "  {:<22} fired {:>4} / {:>6} hits\n",
+                site.name(),
+                self.fired(site),
+                self.hits(site)
+            ));
+        }
+        out
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static INSTALLED: Mutex<Option<Arc<Injector>>> = Mutex::new(None);
+
+/// Install `plan` globally (replacing any previous one) and return a
+/// handle for reading its telemetry. An empty plan disables injection
+/// (equivalent to [`clear`], but still returns an inert handle).
+pub fn install(plan: FaultPlan) -> Arc<Injector> {
+    let inj = Arc::new(Injector::new(plan));
+    let enable = !inj.plan.is_empty();
+    *INSTALLED.lock().unwrap() = Some(Arc::clone(&inj));
+    ENABLED.store(enable, Ordering::SeqCst);
+    inj
+}
+
+/// Remove the installed plan; every subsequent [`fire`] is a no-op.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *INSTALLED.lock().unwrap() = None;
+}
+
+/// Is a non-empty plan installed?
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// The currently installed injector, if any.
+pub fn installed() -> Option<Arc<Injector>> {
+    INSTALLED.lock().unwrap().clone()
+}
+
+/// The hook production code calls at a site: `None` (overwhelmingly, and
+/// with only an atomic load when no plan is installed) or `Some(param)`
+/// when the installed plan says this hit fires.
+#[inline]
+pub fn fire(site: FaultSite) -> Option<u64> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let inj = INSTALLED.lock().unwrap().clone()?;
+    inj.decide(site)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(site.name()), Some(site));
+            assert_eq!(site.index(), FaultSite::ALL.iter().position(|&s| s == site).unwrap());
+        }
+        assert_eq!(FaultSite::parse("bogus.site"), None);
+    }
+
+    #[test]
+    fn spec_parses_and_rejects() {
+        let s = SiteSpec::parse("p=0.5,after=10,limit=2,param=64").unwrap();
+        assert_eq!(
+            s,
+            SiteSpec { probability: 0.5, every: 0, after: 10, limit: 2, param: 64 }
+        );
+        let s = SiteSpec::parse("every=3").unwrap();
+        assert_eq!(s.every, 3);
+        assert!(SiteSpec::parse("p=1.5").is_err());
+        assert!(SiteSpec::parse("nope=1").is_err());
+        assert!(SiteSpec::parse("after=2").is_err(), "schedule that never fires");
+        assert!(SiteSpec::parse("p=abc").is_err());
+    }
+
+    #[test]
+    fn every_schedule_is_exact() {
+        let spec = SiteSpec::parse("every=3,after=2").unwrap();
+        let fires: Vec<u64> = (0..12)
+            .filter(|&n| spec.schedule_fires(1, FaultSite::WorkerPanic, n))
+            .collect();
+        assert_eq!(fires, vec![2, 5, 8, 11]);
+    }
+
+    #[test]
+    fn probability_schedule_is_deterministic_and_calibrated() {
+        let spec = SiteSpec::parse("p=0.25").unwrap();
+        let draws = |seed: u64| -> Vec<u64> {
+            (0..4000)
+                .filter(|&n| spec.schedule_fires(seed, FaultSite::ConnReset, n))
+                .collect()
+        };
+        let a = draws(7);
+        assert_eq!(a, draws(7), "same seed => identical firing set");
+        assert_ne!(a, draws(8), "different seed => different firing set");
+        let frac = a.len() as f64 / 4000.0;
+        assert!((frac - 0.25).abs() < 0.05, "fire fraction {frac} far from p");
+        // sites draw independent streams under one seed
+        let b: Vec<u64> = (0..4000)
+            .filter(|&n| spec.schedule_fires(7, FaultSite::WorkerStall, n))
+            .collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn injector_respects_limit_and_counts() {
+        let plan = FaultPlan::new(3).with_site(
+            FaultSite::WorkerPanic,
+            SiteSpec::parse("every=2,limit=3,param=9").unwrap(),
+        );
+        let inj = Injector::new(plan);
+        let fired: Vec<Option<u64>> =
+            (0..10).map(|_| inj.decide(FaultSite::WorkerPanic)).collect();
+        let n_fired = fired.iter().filter(|f| f.is_some()).count();
+        assert_eq!(n_fired, 3, "limit=3 caps fires");
+        assert!(fired.iter().flatten().all(|&p| p == 9));
+        assert_eq!(inj.hits(FaultSite::WorkerPanic), 10);
+        assert_eq!(inj.fired(FaultSite::WorkerPanic), 3);
+        // unconfigured site never fires and never counts
+        assert_eq!(inj.decide(FaultSite::ConnReset), None);
+        assert_eq!(inj.hits(FaultSite::ConnReset), 0);
+        assert!(inj.report().contains("worker.panic"));
+    }
+
+    #[test]
+    fn plan_parsing_doc_and_cli_agree() {
+        let doc = crate::config::parse(
+            r#"
+            [fault]
+            seed = 7
+            [fault.worker]
+            panic = "every=8,limit=2"
+            [fault.conn]
+            reset = "p=0.05,param=256"
+            "#,
+        )
+        .unwrap();
+        let from_doc = FaultPlan::from_doc(&doc).unwrap().unwrap();
+        let from_cli = FaultPlan::parse_sites(
+            7,
+            "worker.panic:every=8,limit=2; conn.reset:p=0.05,param=256",
+        )
+        .unwrap();
+        assert_eq!(from_doc.seed, 7);
+        assert_eq!(from_doc.site(FaultSite::WorkerPanic), from_cli.site(FaultSite::WorkerPanic));
+        assert_eq!(from_doc.site(FaultSite::ConnReset), from_cli.site(FaultSite::ConnReset));
+        assert!(from_doc.summary().contains("worker.panic[every=8 limit=2]"));
+        // empty section => no plan
+        let empty = crate::config::parse("[serve]\nshards = 1").unwrap();
+        assert!(FaultPlan::from_doc(&empty).unwrap().is_none());
+        // bad spec => error, unknown key => error
+        let bad = crate::config::parse("[fault.worker]\npanic = \"nope=1\"").unwrap();
+        assert!(FaultPlan::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn global_install_clear_plumbing() {
+        // Uses a schedule that can never fire, so parallel lib tests that
+        // reach real sites are unaffected while the plan is installed.
+        let plan = FaultPlan::new(1).with_site(
+            FaultSite::WorkerStall,
+            SiteSpec { probability: 1.0, every: 0, after: u64::MAX, limit: 0, param: 1 },
+        );
+        let inj = install(plan);
+        assert!(active());
+        assert_eq!(fire(FaultSite::WorkerStall), None, "after=MAX never fires");
+        assert_eq!(fire(FaultSite::ConnReset), None, "unconfigured site");
+        assert!(inj.hits(FaultSite::WorkerStall) >= 1);
+        clear();
+        assert!(!active());
+        assert_eq!(fire(FaultSite::WorkerStall), None);
+        assert!(installed().is_none());
+    }
+}

@@ -22,7 +22,11 @@
 //!   column-support encode kernels whose cost scales with alive features),
 //!   and the [`persist`] subsystem — versioned, checksummed model
 //!   checkpoints (train-once / serve-forever: export, import, inspect,
-//!   trainer resume, and serve-side model loading + hot-swap).
+//!   trainer resume, and serve-side model loading + hot-swap), hardened
+//!   by the [`fault`] subsystem — deterministic seeded fault injection
+//!   (`bilevel chaos`) plus the recovery machinery it exercises
+//!   (supervised worker respawn, per-model circuit breakers, and the
+//!   newest-valid-snapshot checkpoint recovery chain).
 //! * **L2 (`python/compile/model.py`)** — the supervised autoencoder
 //!   forward/backward + Adam, lowered once to HLO text.
 //! * **L1 (`python/compile/kernels/`)** — Pallas kernels (bi-level
@@ -46,12 +50,15 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+#[deny(clippy::all)]
+pub mod fault;
 pub mod kernels;
 pub mod metrics;
 pub mod model;
 #[deny(clippy::all)]
 pub mod net;
 pub mod norms;
+#[deny(clippy::all)]
 pub mod persist;
 pub mod projection;
 pub mod proptest;
@@ -59,6 +66,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod scalar;
+#[deny(clippy::all)]
 pub mod serve;
 pub mod sparse;
 pub mod tensor;

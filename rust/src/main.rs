@@ -14,9 +14,10 @@ use bilevel_sparse::config::{
 };
 use bilevel_sparse::coordinator::{run_seeds, run_seeds_with, RunOptions, SaeTrainer};
 use bilevel_sparse::experiments::{self, ExpContext};
+use bilevel_sparse::fault::{self, FaultPlan, FaultSite};
 use bilevel_sparse::net::Server;
 use bilevel_sparse::norms::{column_sparsity, l1inf_norm};
-use bilevel_sparse::persist::{read_header, Checkpoint};
+use bilevel_sparse::persist::{read_header, recover_latest, Checkpoint};
 use bilevel_sparse::projection::{l1::L1Algorithm, ProjectionKind};
 use bilevel_sparse::rng::Xoshiro256pp;
 use bilevel_sparse::runtime::Runtime;
@@ -45,6 +46,7 @@ fn main() -> ExitCode {
         "inspect" => cmd_inspect(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "chaos" => cmd_chaos(&args),
         "help" | "" => {
             println!("{USAGE}");
             Ok(())
@@ -226,18 +228,39 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Shared flag/config plumbing for `serve` and `loadgen`: `--config` seeds
-/// all three sections (`[serve]`, `[serve.http]`, `[loadgen]`), individual
-/// flags override.
-fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig, HttpConfig)> {
-    let doc = match args.opt("config") {
+/// Load the `--config` TOML document (empty doc when the flag is absent).
+fn config_doc(args: &Args) -> Result<TomlDoc> {
+    match args.opt("config") {
         Some(path) => {
             let text =
                 std::fs::read_to_string(path).map_err(|e| anyhow!("{path}: {e}"))?;
-            bilevel_sparse::config::parse(&text).map_err(|e| anyhow!("{path}: {e}"))?
+            bilevel_sparse::config::parse(&text).map_err(|e| anyhow!("{path}: {e}"))
         }
-        None => TomlDoc::default(),
-    };
+        None => Ok(TomlDoc::default()),
+    }
+}
+
+/// Assemble a fault plan for the chaos-capable subcommands. An explicit
+/// `--faults "site:spec;..."` list (with `--fault-seed S`) wins outright;
+/// otherwise the `[fault]` section of the `--config` document is used.
+/// `Ok(None)` means no injection anywhere — the failpoint layer stays a
+/// no-op.
+fn fault_plan_arg(args: &Args, doc: &TomlDoc) -> Result<Option<FaultPlan>> {
+    if let Some(list) = args.opt("faults") {
+        let seed = args.usize_or("fault-seed", 7).map_err(|e| anyhow!(e))? as u64;
+        let plan = FaultPlan::parse_sites(seed, list).map_err(|e| anyhow!(e))?;
+        return Ok((!plan.is_empty()).then_some(plan));
+    }
+    FaultPlan::from_doc(doc).map_err(|e| anyhow!(e))
+}
+
+/// Shared flag/config plumbing for `serve`, `loadgen`, and `chaos`:
+/// `--config` seeds all three sections (`[serve]`, `[serve.http]`,
+/// `[loadgen]`), individual flags override. The parsed document is
+/// returned too so callers can pull the `[fault]` section from the same
+/// file.
+fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig, HttpConfig, TomlDoc)> {
+    let doc = config_doc(args)?;
     let mut serve = ServeConfig::from_doc(&doc).map_err(|e| anyhow!(e))?;
     serve.shards = args.usize_or("shards", serve.shards).map_err(|e| anyhow!(e))?;
     serve.workers_per_shard = args
@@ -264,6 +287,12 @@ fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig, HttpConfig)
     load.pool = args.usize_or("pool", load.pool).map_err(|e| anyhow!(e))?;
     load.f32_every = args.usize_or("f32-every", load.f32_every).map_err(|e| anyhow!(e))?;
     load.seed = args.usize_or("seed", load.seed as usize).map_err(|e| anyhow!(e))? as u64;
+    load.retry_budget = args
+        .usize_or("retry-budget", load.retry_budget as usize)
+        .map_err(|e| anyhow!(e))? as u32;
+    load.backoff_cap_ms = args
+        .usize_or("backoff-cap-ms", load.backoff_cap_ms as usize)
+        .map_err(|e| anyhow!(e))? as u64;
     if let Some(mix) = args.opt("mix") {
         load.mix = mix
             .split(',')
@@ -280,7 +309,7 @@ fn serve_configs(args: &Args) -> Result<(ServeConfig, LoadgenConfig, HttpConfig)
         http.listen = listen.to_string();
     }
     http.validate().map_err(|e| anyhow!(e))?;
-    Ok((serve, load, http))
+    Ok((serve, load, http, doc))
 }
 
 /// Parse `--model <path>` (+ `--model-dtype f32|f64`, default f32) for the
@@ -371,8 +400,8 @@ fn run_engine_workload(
     }
     let report = run_loadgen(&engine, load_cfg);
     println!(
-        "client  : {} completed, {} failed, {} backpressure retries",
-        report.completed, report.failed, report.retries
+        "client  : {} completed, {} failed, {} backpressure retries, {} redials",
+        report.completed, report.failed, report.retries, report.redials
     );
     println!(
         "          {:.0} req/s, latency mean {:.0} us / max {} us, cache hits {} ({:.1} %)",
@@ -425,13 +454,21 @@ fn run_http_server(
         .map_err(|_| anyhow!("server leaked an engine reference"))?
         .shutdown();
     print!("{stats}");
+    if let Some(injector) = fault::installed() {
+        println!("{}", injector.report());
+        fault::clear();
+    }
     Ok(())
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let (serve_cfg, mut load_cfg, http_cfg) = serve_configs(args)?;
+    let (serve_cfg, mut load_cfg, http_cfg, doc) = serve_configs(args)?;
     if args.opt("listen").is_some() {
         println!("bilevel serve — HTTP projection service");
+        if let Some(plan) = fault_plan_arg(args, &doc)? {
+            println!("fault plan: {}", plan.summary());
+            fault::install(plan);
+        }
         return run_http_server(
             &serve_cfg,
             &http_cfg,
@@ -452,13 +489,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_loadgen(args: &Args) -> Result<()> {
-    let (serve_cfg, load_cfg, _http_cfg) = serve_configs(args)?;
-    if let Some(addr) = args.opt("connect") {
+    let (serve_cfg, mut load_cfg, _http_cfg, doc) = serve_configs(args)?;
+    if args.flag("chaos") {
+        load_cfg.chaos = true;
+        // client-side sites (conn.slow_read) need a plan installed in the
+        // loadgen process; server-side sites belong to the serve process.
+        if let Some(plan) = fault_plan_arg(args, &doc)? {
+            println!("fault plan: {}", plan.summary());
+            fault::install(plan);
+        }
+    }
+    let result = if let Some(addr) = args.opt("connect") {
         println!("bilevel loadgen — network closed-loop benchmark against {addr}");
         let report = run_loadgen_net(addr, &load_cfg).map_err(|e| anyhow!(e))?;
         println!(
-            "client  : {} completed, {} failed, {} backpressure retries",
-            report.completed, report.failed, report.retries
+            "client  : {} completed, {} failed, {} backpressure retries, {} redials",
+            report.completed, report.failed, report.retries, report.redials
         );
         println!(
             "          {:.0} req/s, latency mean {:.0} us, cache hits {} ({:.1} %)",
@@ -469,12 +515,195 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         );
         println!("          {}", report.latency_summary());
         if report.failed > 0 {
-            return Err(anyhow!("{} requests failed", report.failed));
+            Err(anyhow!("{} requests failed", report.failed))
+        } else {
+            Ok(())
         }
-        return Ok(());
+    } else {
+        println!("bilevel loadgen — closed-loop engine benchmark");
+        run_engine_workload(&serve_cfg, &load_cfg, model_arg(args)?)
+    };
+    if let Some(injector) = fault::installed() {
+        println!("{}", injector.report());
+        fault::clear();
     }
-    println!("bilevel loadgen — closed-loop engine benchmark");
-    run_engine_workload(&serve_cfg, &load_cfg, model_arg(args)?)
+    result
+}
+
+/// The small synthetic checkpoint used by the chaos persist drill: the
+/// artifact-free sparsify pipeline (init → BP¹,∞ project → plan →
+/// compact) at a fixed shape, fully determined by `seed`.
+fn chaos_checkpoint(seed: u64) -> Checkpoint {
+    use bilevel_sparse::kernels::Workspace;
+    use bilevel_sparse::model::{SaeDims, SaeParams};
+    use bilevel_sparse::persist::ModelBundle;
+    use bilevel_sparse::projection::bilevel::bilevel_l1inf_inplace_cols;
+    use bilevel_sparse::sparse::{compact_params, CompactPlan};
+
+    let (features, hidden, eta) = (32, 8, 1.0);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let dims = SaeDims { features, hidden, classes: 2 };
+    let mut params = SaeParams::init(dims, &mut rng);
+    let mut ws = Workspace::new();
+    bilevel_l1inf_inplace_cols(
+        &mut params.tensors[0],
+        hidden,
+        eta as f32,
+        L1Algorithm::Condat,
+        &mut ws,
+    );
+    let plan = CompactPlan::from_thresholds(ws.thresholds(), 0.0);
+    let compact = compact_params(&params, &plan);
+    Checkpoint {
+        seed,
+        config_digest: synthetic_digest(features, hidden, eta),
+        dims,
+        history: Vec::new(),
+        model: Some(ModelBundle { plan, compact, dense: None }),
+        train_state: None,
+    }
+}
+
+/// `bilevel chaos` — deterministic fault-injection drill in one process.
+///
+/// Installs the seeded fault plan (from `--faults`/`--fault-seed`, the
+/// `--config` `[fault]` section, or a built-in default), serves over a
+/// real socket while the chaos loadgen hammers it, drains, and then runs
+/// the persist recovery drill (corrupt the newest rolling checkpoint on
+/// disk, prove the recovery chain falls back bit-exactly). Exits nonzero
+/// if any robustness invariant is violated: every accepted request must
+/// complete, injected worker panics must produce respawns, and recovery
+/// must land on the prior snapshot byte for byte.
+fn cmd_chaos(args: &Args) -> Result<()> {
+    let (serve_cfg, mut load_cfg, mut http_cfg, doc) = serve_configs(args)?;
+    load_cfg.chaos = true;
+    let plan = match fault_plan_arg(args, &doc)? {
+        Some(p) => p,
+        None => FaultPlan::parse_sites(
+            args.usize_or("fault-seed", 7).map_err(|e| anyhow!(e))? as u64,
+            "worker.panic:every=16,limit=2;\
+             conn.reset:every=9,param=512,limit=4;\
+             conn.slow_read:every=7,param=10,limit=6",
+        )
+        .map_err(|e| anyhow!(e))?,
+    };
+    println!("bilevel chaos — seeded fault-injection drill");
+    println!("fault plan: {}", plan.summary());
+    let fault_seed = plan.seed;
+    let expect_restart = plan.site(FaultSite::WorkerPanic).is_some();
+    let injector = fault::install(plan);
+
+    // ---- serve drill: engine + HTTP front-end + chaos loadgen ----
+    if args.opt("listen").is_none() {
+        http_cfg.listen = "127.0.0.1:0".to_string();
+    }
+    let engine = Arc::new(Engine::start(&serve_cfg).map_err(|e| anyhow!(e))?);
+    if let Some((path, dtype)) = model_arg(args)? {
+        load_and_verify_model(&engine, &path, dtype)?;
+    }
+    let server = Server::start(Arc::clone(&engine), &http_cfg).map_err(|e| anyhow!(e))?;
+    let addr = server.addr().to_string();
+    println!("serving  : http://{addr} under injected faults");
+    let report = run_loadgen_net(&addr, &load_cfg).map_err(|e| anyhow!(e))?;
+    server.drain();
+    server.wait_for_drain();
+    let net_report = server.join();
+    let stats = Arc::try_unwrap(engine)
+        .map_err(|_| anyhow!("server leaked an engine reference"))?
+        .shutdown();
+    println!(
+        "client  : {} completed, {} failed, {} backpressure retries, {} redials",
+        report.completed, report.failed, report.retries, report.redials
+    );
+    println!("{net_report}");
+    print!("{stats}");
+    println!("{}", injector.report());
+    fault::clear();
+
+    let total = (load_cfg.clients * load_cfg.requests_per_client) as u64;
+    let mut violations = Vec::new();
+    if report.completed != total {
+        violations.push(format!(
+            "lost requests: {} of {total} completed ({} failed)",
+            report.completed, report.failed
+        ));
+    }
+    if expect_restart {
+        let panics = injector.fired(FaultSite::WorkerPanic);
+        if panics == 0 {
+            violations.push(
+                "worker.panic never fired — plan schedule too sparse for this workload".into(),
+            );
+        } else if stats.worker_restarts() == 0 {
+            violations.push(format!(
+                "{panics} worker panics fired but no restart was recorded"
+            ));
+        } else {
+            println!(
+                "supervise: {} worker panics -> {} respawns, shard capacity restored",
+                stats.worker_panics(),
+                stats.worker_restarts()
+            );
+        }
+    }
+
+    // ---- persist drill: corrupt the newest rolling checkpoint, recover ----
+    let dir = std::env::temp_dir().join(format!("bilevel-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
+    let save = |ck: &Checkpoint, name: &str| -> Result<()> {
+        let p = dir.join(name);
+        ck.save(&p).map_err(|e| anyhow!("{}: {e}", p.display()))
+    };
+    let survivor = chaos_checkpoint(21);
+    save(&chaos_checkpoint(20), "epoch-0001.ckpt")?;
+    save(&survivor, "epoch-0002.ckpt")?;
+    // the newest checkpoint is written through a checksum-flip failpoint:
+    // save() reports success but the bytes on disk are corrupt
+    fault::install(
+        FaultPlan::parse_sites(fault_seed, "persist.checksum_flip:every=1,limit=1")
+            .map_err(|e| anyhow!(e))?,
+    );
+    save(&chaos_checkpoint(22), "epoch-0003.ckpt")?;
+    fault::clear();
+    let outcome = recover_latest(&dir).map_err(|e| anyhow!("{}: {e}", dir.display()))?;
+    match &outcome.recovered {
+        None => violations.push("recovery chain found no valid checkpoint".into()),
+        Some((path, ck)) => {
+            if !path.ends_with("epoch-0002.ckpt") {
+                violations.push(format!(
+                    "recovered from {} instead of the prior snapshot",
+                    path.display()
+                ));
+            }
+            if ck.to_bytes() != survivor.to_bytes() {
+                violations.push("recovered checkpoint is not bit-exact".into());
+            }
+            if outcome.quarantined.len() != 1 {
+                violations.push(format!(
+                    "expected 1 quarantined file, found {}",
+                    outcome.quarantined.len()
+                ));
+            } else {
+                println!(
+                    "recover  : {} quarantined, resumed bit-exactly from {}",
+                    outcome.quarantined[0].0.display(),
+                    path.display()
+                );
+            }
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if violations.is_empty() {
+        println!("chaos drill passed: no lost requests, supervision and recovery held");
+        Ok(())
+    } else {
+        for v in &violations {
+            eprintln!("violation: {v}");
+        }
+        Err(anyhow!("{} robustness invariant(s) violated", violations.len()))
+    }
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

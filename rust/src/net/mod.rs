@@ -18,13 +18,17 @@
 //! * `GET /v1/stats` — engine counters snapshot (JSON)
 //! * `GET /v1/models` — registered encoder inventory
 //! * `GET /v1/events[?n=K]` — Server-Sent Events stream of stats snapshots
-//! * `GET /healthz` — 200 `ok`, or 503 once draining
+//! * `GET /healthz` — 200 with the engine's health machine
+//!   (`ok`/`degraded` + reasons), or 503 once draining
 //! * `POST /v1/drain` — begin graceful drain
 //!
 //! Backpressure surfaces as HTTP 429 with both `Retry-After` (whole
 //! seconds) and `X-Retry-After-Micros` (exact) headers; quota rejections
 //! and engine-queue overload carry distinct error tags so clients can
-//! tell "slow down" from "server is saturated".
+//! tell "slow down" from "server is saturated". Recovery failures are
+//! typed the same way: an open per-model circuit breaker is 503
+//! `circuit_open` (with the same retry headers) and a worker panic that
+//! killed an accepted job is 500 `worker_panic`.
 
 pub mod http;
 pub mod quota;

@@ -62,6 +62,12 @@ pub enum RouteError {
     QuotaExceeded { client: String, retry_after: Duration },
     /// The engine's shard queue is at its high-water mark.
     Overloaded { retry_after: Duration },
+    /// The model's circuit breaker is open: recent jobs against it kept
+    /// failing, so the engine refuses new ones until the cooldown lapses.
+    CircuitOpen { model: u64, retry_after: Duration },
+    /// The job was accepted but the worker executing it panicked; the
+    /// supervisor has already respawned the worker.
+    WorkerFailed(String),
     /// The server is draining (or the engine is shutting down).
     Draining,
 }
@@ -73,7 +79,8 @@ impl RouteError {
             Self::NotFound(_) => 404,
             Self::MethodNotAllowed(_) => 405,
             Self::QuotaExceeded { .. } | Self::Overloaded { .. } => 429,
-            Self::Draining => 503,
+            Self::WorkerFailed(_) => 500,
+            Self::CircuitOpen { .. } | Self::Draining => 503,
         }
     }
 
@@ -85,15 +92,17 @@ impl RouteError {
             Self::MethodNotAllowed(_) => "method_not_allowed",
             Self::QuotaExceeded { .. } => "quota",
             Self::Overloaded { .. } => "overloaded",
+            Self::CircuitOpen { .. } => "circuit_open",
+            Self::WorkerFailed(_) => "worker_panic",
             Self::Draining => "draining",
         }
     }
 
     pub fn retry_after(&self) -> Option<Duration> {
         match self {
-            Self::QuotaExceeded { retry_after, .. } | Self::Overloaded { retry_after } => {
-                Some(*retry_after)
-            }
+            Self::QuotaExceeded { retry_after, .. }
+            | Self::Overloaded { retry_after }
+            | Self::CircuitOpen { retry_after, .. } => Some(*retry_after),
             _ => None,
         }
     }
@@ -107,6 +116,10 @@ impl RouteError {
             Self::Overloaded { retry_after } => {
                 format!("engine overloaded; retry after {retry_after:?}")
             }
+            Self::CircuitOpen { model, retry_after } => {
+                format!("model {model} circuit open; retry after {retry_after:?}")
+            }
+            Self::WorkerFailed(m) => m.clone(),
             Self::Draining => "server is draining; no new work accepted".into(),
         }
     }
@@ -150,6 +163,10 @@ fn submit_error(e: SubmitError) -> RouteError {
     match e {
         SubmitError::Invalid(msg) => RouteError::BadRequest(msg),
         SubmitError::Overloaded { retry_after, .. } => RouteError::Overloaded { retry_after },
+        SubmitError::CircuitOpen { model, retry_after } => {
+            RouteError::CircuitOpen { model, retry_after }
+        }
+        SubmitError::Failed(e) => RouteError::WorkerFailed(e.to_string()),
         SubmitError::ShuttingDown => RouteError::Draining,
     }
 }
@@ -182,7 +199,10 @@ pub fn dispatch(req: &Request, peer: &str, ctx: &RouteCtx) -> Result<Action, Rou
             if ctx.draining.load(Ordering::SeqCst) {
                 return Err(RouteError::Draining);
             }
-            Ok(Action::Respond { status: 200, body: "{\"status\":\"ok\"}".into() })
+            // Liveness stays 200 while degraded — the body carries the
+            // health machine so probes can distinguish the states.
+            let health = ctx.engine.stats().health;
+            Ok(Action::Respond { status: 200, body: wire::health_body(&health) })
         }
         "/v1/stats" => {
             if method != "GET" {
@@ -442,6 +462,25 @@ mod tests {
         assert_eq!(overload.status(), 429);
         assert_eq!(overload.tag(), "overloaded");
         engine.shutdown();
+    }
+
+    #[test]
+    fn circuit_and_worker_failure_map_to_typed_errors() {
+        let open = submit_error(SubmitError::CircuitOpen {
+            model: 9,
+            retry_after: Duration::from_millis(250),
+        });
+        assert_eq!(open.status(), 503);
+        assert_eq!(open.tag(), "circuit_open");
+        assert_eq!(open.retry_after(), Some(Duration::from_millis(250)));
+        assert!(open.headers().iter().any(|(k, _)| k == "Retry-After"));
+        assert!(open.message().contains("model 9"));
+        let failed =
+            submit_error(SubmitError::Failed(crate::serve::JobError::WorkerPanic { shard: 2 }));
+        assert_eq!(failed.status(), 500);
+        assert_eq!(failed.tag(), "worker_panic");
+        assert!(failed.retry_after().is_none());
+        assert!(failed.message().contains("shard 2"));
     }
 
     #[test]

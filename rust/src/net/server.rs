@@ -21,6 +21,14 @@
 //! Bind failures are typed ([`NetError`]): a malformed listen address, a
 //! port already in use, and other bind errors each render a clear message
 //! instead of a panic.
+//!
+//! Sockets carry **both** timeouts: `set_read_timeout` (slow senders →
+//! 408) and `set_write_timeout` (slow readers → the response write fails
+//! and is counted in [`NetReport::write_timeouts`]). The
+//! [`crate::fault`] site `conn.reset` wraps each connection's write half
+//! (`FaultStream`) to sever it after an injected byte budget —
+//! chaos-testing the drain guarantee that no *accepted* request is
+//! silently lost.
 
 use std::collections::HashMap;
 use std::fmt;
@@ -32,6 +40,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::config::HttpConfig;
+use crate::fault::{self, FaultSite};
 use crate::metrics::Counter;
 use crate::serve::Engine;
 
@@ -81,6 +90,7 @@ struct NetCounters {
     served_err: Counter,
     quota_rejected: Counter,
     overloaded: Counter,
+    write_timeouts: Counter,
 }
 
 /// Point-in-time snapshot of the front-end counters.
@@ -98,19 +108,23 @@ pub struct NetReport {
     pub quota_rejected: u64,
     /// 429s from engine queue overload.
     pub overloaded: u64,
+    /// Response writes abandoned because the peer read too slowly
+    /// (`set_write_timeout` expired mid-response).
+    pub write_timeouts: u64,
 }
 
 impl fmt::Display for NetReport {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "http: conns {} (+{} refused) | ok {} | err {} | 429 quota {} | 429 overload {}",
+            "http: conns {} (+{} refused) | ok {} | err {} | 429 quota {} | 429 overload {} | write timeouts {}",
             self.accepted_connections,
             self.refused_connections,
             self.served_ok,
             self.served_err,
             self.quota_rejected,
             self.overloaded,
+            self.write_timeouts,
         )
     }
 }
@@ -140,6 +154,7 @@ impl Shared {
             served_err: self.counters.served_err.get(),
             quota_rejected: self.counters.quota_rejected.get(),
             overloaded: self.counters.overloaded.get(),
+            write_timeouts: self.counters.write_timeouts.get(),
         }
     }
 }
@@ -348,14 +363,59 @@ fn reap_finished(shared: &Shared) {
     }
 }
 
+/// Write wrapper carrying the `conn.reset` fault site: bytes pass
+/// through until the injected budget is spent, then every write fails
+/// with `ConnectionReset` — the server-side view of a peer that vanished
+/// mid-response. `reset_after: None` (the unconfigured default) is a
+/// plain pass-through.
+struct FaultStream<W> {
+    inner: W,
+    reset_after: Option<u64>,
+}
+
+impl<W: io::Write> io::Write for FaultStream<W> {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match &mut self.reset_after {
+            None => self.inner.write(buf),
+            Some(left) => {
+                if *left == 0 && !buf.is_empty() {
+                    return Err(io::Error::new(
+                        io::ErrorKind::ConnectionReset,
+                        "injected fault: conn.reset",
+                    ));
+                }
+                let allowed = (*left).min(buf.len() as u64) as usize;
+                let n = self.inner.write(&buf[..allowed])?;
+                *left -= n as u64;
+                Ok(n)
+            }
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.inner.flush()
+    }
+}
+
+/// Record a failed response write. An expired `SO_SNDTIMEO` surfaces as
+/// `WouldBlock` on Unix (`TimedOut` elsewhere); anything else is the peer
+/// disconnecting, which the caller already treats as end-of-connection.
+fn note_write_error(shared: &Shared, e: &io::Error) {
+    if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) {
+        shared.counters.write_timeouts.inc();
+    }
+}
+
 /// Serve one connection: keep-alive request loop until EOF, timeout,
 /// `Connection: close`, a streaming route, or drain.
 fn handle_conn(shared: &Shared, stream: TcpStream, peer: SocketAddr) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout()));
+    let _ = stream.set_write_timeout(Some(shared.cfg.write_timeout()));
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = BufReader::new(read_half);
-    let mut writer = stream;
+    let mut writer =
+        FaultStream { inner: stream, reset_after: fault::fire(FaultSite::ConnReset) };
     let peer_ip = peer.ip().to_string();
     loop {
         let req = match http::read_request(&mut reader, &mut writer, &shared.limits) {
@@ -372,14 +432,16 @@ fn handle_conn(shared: &Shared, stream: TcpStream, peer: SocketAddr) {
                 };
                 shared.counters.served_err.inc();
                 let body = wire::error_body(tag, &e.to_string(), None);
-                let _ = http::write_response(
+                if let Err(we) = http::write_response(
                     &mut writer,
                     status,
                     "application/json",
                     body.as_bytes(),
                     &[],
                     false,
-                );
+                ) {
+                    note_write_error(shared, &we);
+                }
                 return;
             }
         };
@@ -391,15 +453,20 @@ fn handle_conn(shared: &Shared, stream: TcpStream, peer: SocketAddr) {
         };
         match dispatch(&req, &peer_ip, &ctx) {
             Ok(Action::Respond { status, body }) => {
-                let wrote = http::write_response(
+                let wrote = match http::write_response(
                     &mut writer,
                     status,
                     "application/json",
                     body.as_bytes(),
                     &[],
                     keep,
-                )
-                .is_ok();
+                ) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        note_write_error(shared, &e);
+                        false
+                    }
+                };
                 if wrote {
                     shared.counters.served_ok.inc();
                 }
@@ -409,25 +476,29 @@ fn handle_conn(shared: &Shared, stream: TcpStream, peer: SocketAddr) {
             }
             Ok(Action::StreamStats { limit }) => {
                 // streams own the connection; always close afterwards
-                let _ = stream_stats(
+                if let Err(e) = stream_stats(
                     &mut writer,
                     &shared.engine,
                     &shared.draining,
                     shared.cfg.sse_interval(),
                     limit,
-                );
+                ) {
+                    note_write_error(shared, &e);
+                }
                 shared.counters.served_ok.inc();
                 return;
             }
             Ok(Action::BeginDrain { body }) => {
-                let _ = http::write_response(
+                if let Err(e) = http::write_response(
                     &mut writer,
                     200,
                     "application/json",
                     body.as_bytes(),
                     &[],
                     false,
-                );
+                ) {
+                    note_write_error(shared, &e);
+                }
                 shared.counters.served_ok.inc();
                 begin_drain(shared);
                 return;
@@ -439,15 +510,20 @@ fn handle_conn(shared: &Shared, stream: TcpStream, peer: SocketAddr) {
                     _ => {}
                 }
                 shared.counters.served_err.inc();
-                let wrote = http::write_response(
+                let wrote = match http::write_response(
                     &mut writer,
                     err.status(),
                     "application/json",
                     err.body().as_bytes(),
                     &err.headers(),
                     keep,
-                )
-                .is_ok();
+                ) {
+                    Ok(()) => true,
+                    Err(e) => {
+                        note_write_error(shared, &e);
+                        false
+                    }
+                };
                 if !wrote || !keep {
                     return;
                 }
@@ -476,6 +552,19 @@ mod tests {
             })
             .unwrap(),
         )
+    }
+
+    #[test]
+    fn fault_stream_passes_through_then_resets() {
+        let mut fs = FaultStream { inner: Vec::new(), reset_after: Some(5) };
+        assert_eq!(fs.write(b"abc").unwrap(), 3);
+        assert_eq!(fs.write(b"defg").unwrap(), 2, "budget caps the partial write");
+        let err = fs.write(b"hi").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        assert_eq!(fs.inner, b"abcde", "bytes up to the budget must be delivered");
+        let mut clean = FaultStream { inner: Vec::new(), reset_after: None };
+        assert_eq!(clean.write(b"hello").unwrap(), 5);
+        clean.flush().unwrap();
     }
 
     #[test]

@@ -20,7 +20,8 @@ use crate::projection::l1::L1Algorithm;
 use crate::projection::ProjectionKind;
 use crate::serve::engine::ModelInfo;
 use crate::serve::{
-    Dtype, EngineStats, JobKind, Payload, ProjectionRequest, ProjectionResponse,
+    Dtype, EngineStats, HealthReport, HealthState, JobKind, Payload, ProjectionRequest,
+    ProjectionResponse,
 };
 use crate::tensor::Matrix;
 
@@ -596,6 +597,22 @@ pub fn stats_body(stats: &EngineStats) -> String {
     push_f64(&mut out, stats.mean_batch());
     out.push_str(",\"throughput_rps\":");
     push_f64(&mut out, stats.throughput_rps());
+    let _ = write!(
+        out,
+        ",\"worker_panics\":{},\"worker_restarts\":{}",
+        stats.worker_panics(),
+        stats.worker_restarts(),
+    );
+    out.push_str(",\"health\":{\"state\":");
+    push_json_string(&mut out, stats.health.state.name());
+    out.push_str(",\"reasons\":[");
+    for (i, reason) in stats.health.reasons.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_json_string(&mut out, reason);
+    }
+    out.push_str("]}");
     out.push_str(",\"shards\":[");
     for (i, s) in stats.shards.iter().enumerate() {
         if i > 0 {
@@ -603,8 +620,8 @@ pub fn stats_body(stats: &EngineStats) -> String {
         }
         let _ = write!(
             out,
-            "{{\"shard\":{},\"depth\":{},\"submitted\":{},\"completed\":{},\"rejected\":{},\"batches\":{},\"batched_jobs\":{},\"cache_hits\":{},\"cache_misses\":{},\"mean_batch\":",
-            s.shard, s.depth, s.submitted, s.completed, s.rejected, s.batches, s.batched_jobs, s.cache_hits, s.cache_misses,
+            "{{\"shard\":{},\"depth\":{},\"submitted\":{},\"completed\":{},\"rejected\":{},\"batches\":{},\"batched_jobs\":{},\"cache_hits\":{},\"cache_misses\":{},\"worker_panics\":{},\"worker_restarts\":{},\"mean_batch\":",
+            s.shard, s.depth, s.submitted, s.completed, s.rejected, s.batches, s.batched_jobs, s.cache_hits, s.cache_misses, s.worker_panics, s.worker_restarts,
         );
         push_f64(&mut out, s.mean_batch);
         out.push_str(",\"mean_queue_micros\":");
@@ -638,6 +655,32 @@ pub fn models_body(models: &[ModelInfo]) -> String {
     out
 }
 
+/// Body for `GET /healthz`: liveness (`status`) plus the engine's
+/// three-state health machine. `status` stays `"ok"` while degraded —
+/// the process is alive and serving — and the `health`/`reasons` fields
+/// say what is impaired.
+pub fn health_body(health: &HealthReport) -> String {
+    let mut out = String::from("{\"status\":");
+    push_json_string(
+        &mut out,
+        match health.state {
+            HealthState::Healthy => "ok",
+            other => other.name(),
+        },
+    );
+    out.push_str(",\"health\":");
+    push_json_string(&mut out, health.state.name());
+    out.push_str(",\"reasons\":[");
+    for (i, reason) in health.reasons.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_json_string(&mut out, reason);
+    }
+    out.push_str("]}");
+    out
+}
+
 /// Error body: machine-readable `error` tag + human message; 429 bodies
 /// also carry the exact backoff in `retry_after_micros`.
 pub fn error_body(error: &str, message: &str, retry_after_micros: Option<u64>) -> String {
@@ -657,7 +700,7 @@ pub fn error_body(error: &str, message: &str, retry_after_micros: Option<u64>) -
 mod tests {
     use super::*;
     use crate::rng::Xoshiro256pp;
-    use crate::serve::ShardStats;
+    use crate::serve::{HealthReport, ShardStats};
     use std::time::Duration;
 
     #[test]
@@ -832,19 +875,31 @@ mod tests {
                 batched_jobs: 9,
                 cache_hits: 3,
                 cache_misses: 2,
+                worker_panics: 1,
+                worker_restarts: 1,
                 mean_batch: 2.25,
                 hit_rate: 0.6,
                 mean_queue_micros: 11.5,
                 mean_exec_micros: 99.0,
                 max_exec_micros: 200,
             }],
+            health: HealthReport::degraded(vec!["model 7 circuit open".into()]),
         };
         let v = Json::parse(&stats_body(&stats)).unwrap();
         assert_eq!(v.get("completed").unwrap().as_u64(), Some(9));
         assert_eq!(v.get("uptime_micros").unwrap().as_u64(), Some(1234));
+        assert_eq!(v.get("worker_panics").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("worker_restarts").unwrap().as_u64(), Some(1));
+        let health = v.get("health").unwrap();
+        assert_eq!(health.get("state").unwrap().as_str(), Some("degraded"));
+        assert_eq!(
+            health.get("reasons").unwrap().as_arr().unwrap()[0].as_str(),
+            Some("model 7 circuit open")
+        );
         let shards = v.get("shards").unwrap().as_arr().unwrap();
         assert_eq!(shards[0].get("depth").unwrap().as_u64(), Some(2));
         assert_eq!(shards[0].get("max_exec_micros").unwrap().as_u64(), Some(200));
+        assert_eq!(shards[0].get("worker_panics").unwrap().as_u64(), Some(1));
 
         let models = vec![ModelInfo { id: 3, dtype: Dtype::F32, features: 10, hidden: 4, alive: 7 }];
         let v = Json::parse(&models_body(&models)).unwrap();

@@ -319,8 +319,25 @@ impl Checkpoint {
     /// itself is durable, so a reported snapshot is never lost. A failed
     /// write cleans up its tmp file.
     pub fn save(&self, path: &Path) -> Result<(), PersistError> {
+        use crate::fault::{self, FaultSite};
         use std::io::Write;
-        let bytes = self.to_bytes();
+        let mut bytes = self.to_bytes();
+        // Fault sites (no-ops unless a `FaultPlan` is installed): the
+        // on-disk corruptions the recovery chain must survive, injected
+        // *after* serialization so the in-memory checkpoint stays intact.
+        if let Some(param) = fault::fire(FaultSite::PersistChecksumFlip) {
+            // Flip one payload bit; the save "succeeds", the next load
+            // fails its checksum.
+            let idx = HEADER_LEN + (param as usize) % (bytes.len() - HEADER_LEN);
+            bytes[idx] ^= 1u8 << ((param % 8) as u32);
+        }
+        if let Some(param) = fault::fire(FaultSite::PersistShortWrite) {
+            // Drop the file's tail (at least one byte), as if the write
+            // was cut mid-stream.
+            let cut = (param as usize).clamp(1, bytes.len() - 1);
+            bytes.truncate(bytes.len() - cut);
+        }
+        let torn = fault::fire(FaultSite::PersistTornRename).is_some();
         let name = path
             .file_name()
             .and_then(|n| n.to_str())
@@ -331,11 +348,22 @@ impl Checkpoint {
             f.write_all(&bytes)?;
             f.sync_all()?;
             drop(f);
+            if torn {
+                // Simulate a crash between the tmp write and the rename:
+                // the tmp file stays on disk, the final name is never
+                // created/replaced.
+                return Err(PersistError::Io(std::io::Error::new(
+                    std::io::ErrorKind::Interrupted,
+                    "injected fault: persist.torn_rename (tmp written, rename skipped)",
+                )));
+            }
             std::fs::rename(&tmp, path)?;
             Ok(())
         };
         if let Err(e) = write_and_rename() {
-            let _ = std::fs::remove_file(&tmp);
+            if !torn {
+                let _ = std::fs::remove_file(&tmp);
+            }
             return Err(e);
         }
         // Durability of the rename: sync the directory entry (best-effort
@@ -352,7 +380,14 @@ impl Checkpoint {
 
     /// Read and fully validate a checkpoint file.
     pub fn load(path: &Path) -> Result<Self, PersistError> {
-        Self::from_bytes(&std::fs::read(path)?)
+        let mut bytes = std::fs::read(path)?;
+        // Fault site (no-op unless a `FaultPlan` is installed): a read
+        // that returns fewer bytes than the file holds.
+        if let Some(param) = crate::fault::fire(crate::fault::FaultSite::PersistShortRead) {
+            let cut = (param as usize).clamp(1, bytes.len());
+            bytes.truncate(bytes.len() - cut);
+        }
+        Self::from_bytes(&bytes)
     }
 }
 

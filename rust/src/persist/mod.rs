@@ -40,15 +40,24 @@
 //!   (`Engine::swap_model`) — in-flight batches finish on the old `Arc`;
 //! * the CLI speaks `bilevel export` / `bilevel import` /
 //!   `bilevel inspect` / `bilevel serve --model` (see EXPERIMENTS.md
-//!   §Model lifecycle).
+//!   §Model lifecycle);
+//! * [`recover_latest`] implements the **recovery chain**: scan a rolling
+//!   checkpoint directory newest → oldest, step over (and quarantine as
+//!   `<name>.corrupt`) anything that fails validation — truncated tails,
+//!   flipped bits, torn renames — and resume from the newest snapshot
+//!   that checks out, bit-exactly. The [`crate::fault`] sites
+//!   `persist.short_write` / `persist.short_read` / `persist.torn_rename`
+//!   / `persist.checksum_flip` inject exactly these damages.
 
 mod checkpoint;
+mod recover;
 mod wire;
 
 pub use checkpoint::{
     read_header, Checkpoint, CheckpointHeader, ModelBundle, TrainStateSnapshot, FORMAT_VERSION,
     MAGIC,
 };
+pub use recover::{recover_latest, RecoveryOutcome};
 
 use std::fmt;
 

@@ -1,0 +1,214 @@
+//! Checkpoint recovery chain: resume from the newest *valid* snapshot.
+//!
+//! A rolling-checkpoint directory accumulates snapshots over a training
+//! run; any of them can be damaged — a torn write, a flipped bit, a
+//! truncated tail. [`recover_latest`] scans the directory newest → oldest
+//! and returns the first checkpoint that parses and passes its checksum,
+//! so one corrupt file costs at most one checkpoint interval of progress
+//! and **never** yields wrong bits: a file either validates end-to-end
+//! (magic, structure, 128-bit checksum) or is stepped over.
+//!
+//! Corrupt files are **quarantined** — renamed to `<name>.corrupt` — so
+//! the next scan does not re-parse them and an operator can inspect what
+//! was damaged. Files that fail with a plain IO error (unreadable, racing
+//! deletion) are skipped but left in place: the file may be fine, the
+//! reader was not.
+//!
+//! Ordering is by modification time, newest first, with the file name
+//! (descending) as the tie-break — rolling checkpoints carry monotonic
+//! names (`epoch-0004.ckpt`), so same-second snapshots still resolve to
+//! the latest one.
+
+use std::path::{Path, PathBuf};
+
+use super::checkpoint::Checkpoint;
+use super::PersistError;
+
+/// What a recovery scan found.
+#[derive(Debug, Default)]
+pub struct RecoveryOutcome {
+    /// The newest checkpoint that validated end-to-end, with its path.
+    /// `None` when the directory holds no loadable checkpoint.
+    pub recovered: Option<(PathBuf, Checkpoint)>,
+    /// Corrupt files stepped over, each renamed to `<name>.corrupt`
+    /// (recorded under its *original* path) with the validation error.
+    pub quarantined: Vec<(PathBuf, String)>,
+    /// Files skipped on IO errors — not quarantined, the bytes were
+    /// never judged.
+    pub skipped_io: Vec<(PathBuf, String)>,
+}
+
+/// Scan `dir` for `*.ckpt` files and load the newest valid one, falling
+/// back past (and quarantining) corrupt files. Errors only when the
+/// directory itself cannot be listed; an empty or all-corrupt directory
+/// is `Ok` with `recovered: None`.
+pub fn recover_latest(dir: &Path) -> Result<RecoveryOutcome, PersistError> {
+    let mut candidates: Vec<(std::time::SystemTime, PathBuf)> = Vec::new();
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.extension().and_then(|e| e.to_str()) != Some("ckpt") {
+            continue;
+        }
+        // Skip in-flight tmp files (dot-prefixed) defensively; their
+        // extension is `.tmp` so the filter above already drops them.
+        let modified = entry
+            .metadata()
+            .and_then(|m| m.modified())
+            .unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+        candidates.push((modified, path));
+    }
+    // Newest first; name (descending) breaks same-timestamp ties.
+    candidates.sort_by(|a, b| b.cmp(a));
+
+    let mut outcome = RecoveryOutcome::default();
+    for (_, path) in candidates {
+        match Checkpoint::load(&path) {
+            Ok(ck) => {
+                outcome.recovered = Some((path, ck));
+                break;
+            }
+            Err(PersistError::Io(e)) => {
+                outcome.skipped_io.push((path, e.to_string()));
+            }
+            Err(e) => {
+                // Corrupt class (BadMagic / UnsupportedVersion /
+                // Truncated / ChecksumMismatch / Malformed): quarantine
+                // so the next scan skips straight past it.
+                let msg = e.to_string();
+                let corrupt = quarantine_name(&path);
+                if let Err(re) = std::fs::rename(&path, &corrupt) {
+                    outcome
+                        .quarantined
+                        .push((path, format!("{msg} (quarantine rename failed: {re})")));
+                } else {
+                    outcome.quarantined.push((path, msg));
+                }
+            }
+        }
+    }
+    Ok(outcome)
+}
+
+/// `<name>.corrupt` sibling of a quarantined checkpoint.
+fn quarantine_name(path: &Path) -> PathBuf {
+    let name = path.file_name().map(|n| n.to_string_lossy()).unwrap_or_default();
+    path.with_file_name(format!("{name}.corrupt"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::EpochStat;
+    use crate::model::{SaeDims, SaeParams};
+    use crate::persist::ModelBundle;
+    use crate::rng::Xoshiro256pp;
+    use crate::sparse::{compact_params, CompactPlan};
+
+    fn sample_checkpoint(seed: u64) -> Checkpoint {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let dims = SaeDims { features: 6, hidden: 3, classes: 2 };
+        let mut params = SaeParams::init(dims, &mut rng);
+        let mut mask = vec![1.0f32; 6];
+        mask[1] = 0.0;
+        mask[4] = 0.0;
+        params.apply_feature_mask(&mask);
+        let plan = CompactPlan::from_mask(&mask);
+        let compact = compact_params(&params, &plan);
+        Checkpoint {
+            seed,
+            config_digest: 7,
+            dims,
+            history: vec![EpochStat {
+                phase: 1,
+                epoch: 0,
+                train_loss: 0.5,
+                train_accuracy: 0.5,
+                test_accuracy: 0.5,
+                alive_features: 4,
+            }],
+            model: Some(ModelBundle { plan, compact, dense: None }),
+            train_state: None,
+        }
+    }
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bilevel-recover-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn empty_directory_recovers_nothing() {
+        let dir = tmp_dir("empty");
+        let out = recover_latest(&dir).unwrap();
+        assert!(out.recovered.is_none());
+        assert!(out.quarantined.is_empty() && out.skipped_io.is_empty());
+        // a missing directory is an IO error, not a silent None
+        assert!(recover_latest(&dir.join("nope")).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn picks_the_newest_valid_checkpoint() {
+        let dir = tmp_dir("newest");
+        for (i, seed) in [(1u32, 10u64), (2, 11), (3, 12)] {
+            sample_checkpoint(seed).save(&dir.join(format!("epoch-{i:04}.ckpt"))).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        let out = recover_latest(&dir).unwrap();
+        let (path, ck) = out.recovered.expect("should recover");
+        assert_eq!(ck.seed, 12);
+        assert!(path.ends_with("epoch-0003.ckpt"), "{path:?}");
+        assert!(out.quarantined.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn falls_back_past_corruption_and_quarantines() {
+        let dir = tmp_dir("fallback");
+        let good = sample_checkpoint(20);
+        good.save(&dir.join("epoch-0001.ckpt")).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(15));
+        sample_checkpoint(21).save(&dir.join("epoch-0002.ckpt")).unwrap();
+        // Corrupt the newest on disk: flip one payload bit.
+        let newest = dir.join("epoch-0002.ckpt");
+        let mut bytes = std::fs::read(&newest).unwrap();
+        let idx = bytes.len() - 30;
+        bytes[idx] ^= 0x10;
+        std::fs::write(&newest, &bytes).unwrap();
+
+        let out = recover_latest(&dir).unwrap();
+        let (path, ck) = out.recovered.expect("older snapshot must be recovered");
+        assert_eq!(ck.seed, 20, "must fall back to the prior snapshot");
+        assert!(path.ends_with("epoch-0001.ckpt"));
+        // Bit-exact fallback: the recovered bytes equal the good save.
+        assert_eq!(ck.to_bytes(), good.to_bytes());
+        assert_eq!(out.quarantined.len(), 1);
+        assert!(out.quarantined[0].1.contains("checksum"), "{:?}", out.quarantined);
+        assert!(!newest.exists(), "corrupt file must be moved aside");
+        assert!(dir.join("epoch-0002.ckpt.corrupt").exists());
+        // A second scan does not re-judge the quarantined file.
+        let again = recover_latest(&dir).unwrap();
+        assert_eq!(again.recovered.unwrap().1.seed, 20);
+        assert!(again.quarantined.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn all_corrupt_yields_none_and_quarantines_everything() {
+        let dir = tmp_dir("allbad");
+        for i in 1..=2 {
+            let p = dir.join(format!("epoch-{i:04}.ckpt"));
+            sample_checkpoint(30 + i).save(&p).unwrap();
+            let bytes = std::fs::read(&p).unwrap();
+            std::fs::write(&p, &bytes[..40]).unwrap(); // truncate into the header
+        }
+        let out = recover_latest(&dir).unwrap();
+        assert!(out.recovered.is_none());
+        assert_eq!(out.quarantined.len(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,203 @@
+//! Per-model circuit breaker for the sparse-encode path.
+//!
+//! Classic three-state machine, one gate per registered model id:
+//!
+//! * **Closed** — traffic flows; consecutive execution failures are
+//!   counted, successes reset the count.
+//! * **Open** — tripped after `threshold` consecutive failures; encode
+//!   admissions are refused with the remaining cooldown as the suggested
+//!   retry-after (the net layer turns this into a 503 + `Retry-After`).
+//! * **Half-open** — after the cooldown one probe request is admitted;
+//!   success closes the gate, failure re-opens it for a full cooldown.
+//!
+//! Failures here mean *execution* failures the supervisor caught (a
+//! worker panic inside an encode job) — admission rejections like
+//! overload or invalid dims never touch the breaker.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Public view of one gate's state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Closed => "closed",
+            Self::Open => "open",
+            Self::HalfOpen => "half-open",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Gate {
+    Closed { failures: u32 },
+    Open { until: Instant },
+    HalfOpen,
+}
+
+/// Per-model circuit breaker shared by the engine's admission path and
+/// its workers.
+#[derive(Debug)]
+pub struct CircuitBreaker {
+    threshold: u32,
+    cooldown: Duration,
+    gates: Mutex<HashMap<u64, Gate>>,
+}
+
+impl CircuitBreaker {
+    /// `threshold` consecutive failures trip a gate open for `cooldown`.
+    pub fn new(threshold: u32, cooldown: Duration) -> Self {
+        Self {
+            threshold: threshold.max(1),
+            cooldown,
+            gates: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Admission check for `model`. `Ok(())` lets the request through
+    /// (including the single half-open probe); `Err(retry_after)` refuses
+    /// it with the suggested backoff.
+    pub fn admit(&self, model: u64) -> Result<(), Duration> {
+        let mut gates = self.gates.lock().unwrap();
+        let gate = gates.entry(model).or_insert(Gate::Closed { failures: 0 });
+        match *gate {
+            Gate::Closed { .. } => Ok(()),
+            Gate::HalfOpen => Err(self.cooldown),
+            Gate::Open { until } => {
+                let now = Instant::now();
+                if now >= until {
+                    *gate = Gate::HalfOpen;
+                    Ok(())
+                } else {
+                    Err(until - now)
+                }
+            }
+        }
+    }
+
+    /// Record a successful encode execution: closes the gate and resets
+    /// the failure count.
+    pub fn record_success(&self, model: u64) {
+        let mut gates = self.gates.lock().unwrap();
+        gates.insert(model, Gate::Closed { failures: 0 });
+    }
+
+    /// Record an execution failure: counts toward the trip threshold, and
+    /// re-opens immediately from half-open.
+    pub fn record_failure(&self, model: u64) {
+        let mut gates = self.gates.lock().unwrap();
+        let gate = gates.entry(model).or_insert(Gate::Closed { failures: 0 });
+        *gate = match *gate {
+            Gate::Closed { failures } => {
+                let failures = failures + 1;
+                if failures >= self.threshold {
+                    Gate::Open { until: Instant::now() + self.cooldown }
+                } else {
+                    Gate::Closed { failures }
+                }
+            }
+            Gate::HalfOpen => Gate::Open { until: Instant::now() + self.cooldown },
+            open @ Gate::Open { .. } => open,
+        };
+    }
+
+    /// Current state of `model`'s gate (`Closed` if never seen).
+    pub fn state(&self, model: u64) -> BreakerState {
+        match self.gates.lock().unwrap().get(&model) {
+            None | Some(Gate::Closed { .. }) => BreakerState::Closed,
+            Some(Gate::Open { .. }) => BreakerState::Open,
+            Some(Gate::HalfOpen) => BreakerState::HalfOpen,
+        }
+    }
+
+    /// Drop the gate for an unregistered model.
+    pub fn forget(&self, model: u64) {
+        self.gates.lock().unwrap().remove(&model);
+    }
+
+    /// Models whose gate is not closed, for health reporting.
+    pub fn impaired(&self) -> Vec<(u64, BreakerState)> {
+        let gates = self.gates.lock().unwrap();
+        let mut out: Vec<(u64, BreakerState)> = gates
+            .iter()
+            .filter_map(|(&model, gate)| match gate {
+                Gate::Closed { .. } => None,
+                Gate::Open { .. } => Some((model, BreakerState::Open)),
+                Gate::HalfOpen => Some((model, BreakerState::HalfOpen)),
+            })
+            .collect();
+        out.sort_by_key(|(model, _)| *model);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_threshold_consecutive_failures() {
+        let b = CircuitBreaker::new(3, Duration::from_secs(60));
+        assert!(b.admit(1).is_ok());
+        b.record_failure(1);
+        b.record_failure(1);
+        assert_eq!(b.state(1), BreakerState::Closed);
+        assert!(b.admit(1).is_ok(), "still closed below threshold");
+        b.record_failure(1);
+        assert_eq!(b.state(1), BreakerState::Open);
+        let retry = b.admit(1).unwrap_err();
+        assert!(retry > Duration::ZERO && retry <= Duration::from_secs(60));
+        // other models unaffected
+        assert!(b.admit(2).is_ok());
+        assert_eq!(b.impaired(), vec![(1, BreakerState::Open)]);
+    }
+
+    #[test]
+    fn success_resets_the_failure_count() {
+        let b = CircuitBreaker::new(2, Duration::from_secs(60));
+        b.record_failure(5);
+        b.record_success(5);
+        b.record_failure(5);
+        assert_eq!(b.state(5), BreakerState::Closed, "count reset by success");
+        b.record_failure(5);
+        assert_eq!(b.state(5), BreakerState::Open);
+    }
+
+    #[test]
+    fn half_open_probe_closes_on_success_reopens_on_failure() {
+        let b = CircuitBreaker::new(1, Duration::from_millis(20));
+        b.record_failure(9);
+        assert_eq!(b.state(9), BreakerState::Open);
+        assert!(b.admit(9).is_err(), "inside cooldown");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.admit(9).is_ok(), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(9), BreakerState::HalfOpen);
+        assert!(b.admit(9).is_err(), "only one probe at a time");
+        b.record_failure(9);
+        assert_eq!(b.state(9), BreakerState::Open, "probe failure re-opens");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.admit(9).is_ok());
+        b.record_success(9);
+        assert_eq!(b.state(9), BreakerState::Closed, "probe success closes");
+        assert!(b.admit(9).is_ok());
+    }
+
+    #[test]
+    fn forget_drops_the_gate() {
+        let b = CircuitBreaker::new(1, Duration::from_secs(60));
+        b.record_failure(3);
+        assert_eq!(b.state(3), BreakerState::Open);
+        b.forget(3);
+        assert_eq!(b.state(3), BreakerState::Closed);
+        assert!(b.impaired().is_empty());
+        assert_eq!(BreakerState::HalfOpen.name(), "half-open");
+    }
+}

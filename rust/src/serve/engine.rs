@@ -22,9 +22,10 @@
 //! workers never touch the registry lock.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, RwLock};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -33,13 +34,18 @@ use crate::persist::Checkpoint;
 use crate::sparse::CompactEncoder;
 use crate::tensor::Matrix;
 
+use super::breaker::CircuitBreaker;
 use super::cache::ThresholdCache;
 use super::queue::{JobQueue, PushError};
 use super::request::{
-    BatchKey, Dtype, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
+    BatchKey, Dtype, JobError, JobKind, Payload, ProjectionRequest, ProjectionResponse,
+    SubmitError,
 };
 use super::scheduler::{self, BatchPolicy, ExecOutcome};
-use super::stats::{EngineStats, ShardCounters};
+use super::stats::{EngineStats, HealthReport, ShardCounters};
+
+/// How long after a worker respawn the engine reports itself `Degraded`.
+const RESTART_DEGRADED_WINDOW: Duration = Duration::from_secs(5);
 
 /// A registered encoder, typed at registration so workers dispatch without
 /// a dtype check.
@@ -70,10 +76,13 @@ enum Work {
 }
 
 /// A queued unit of work. The job's [`JobKind`] lives in `key.kind`.
+/// Accepted jobs always answer: a successful execution sends
+/// `Ok(response)`, a supervised panic sends `Err(JobError)` — waiters
+/// never hang on a job a dead worker dropped.
 struct Job {
     work: Work,
     key: BatchKey,
-    tx: mpsc::Sender<ProjectionResponse>,
+    tx: mpsc::Sender<Result<ProjectionResponse, JobError>>,
     enqueued: Instant,
 }
 
@@ -85,14 +94,20 @@ struct Shard {
 
 /// Receiver side of a submitted request.
 pub struct ResponseHandle {
-    rx: mpsc::Receiver<ProjectionResponse>,
+    rx: mpsc::Receiver<Result<ProjectionResponse, JobError>>,
 }
 
 impl ResponseHandle {
-    /// Block until the response arrives. `None` only if the engine was
-    /// torn down before the job executed.
-    pub fn wait(self) -> Option<ProjectionResponse> {
-        self.rx.recv().ok()
+    /// Block until the job resolves. An accepted job that failed in
+    /// execution (its worker panicked) resolves to
+    /// [`SubmitError::Failed`]; a channel closed by engine teardown
+    /// before the job executed resolves to [`SubmitError::ShuttingDown`].
+    pub fn wait(self) -> Result<ProjectionResponse, SubmitError> {
+        match self.rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(SubmitError::Failed(e)),
+            Err(_) => Err(SubmitError::ShuttingDown),
+        }
     }
 }
 
@@ -107,6 +122,11 @@ pub struct Engine {
     /// Registered sparse encoders, keyed by engine-local model id.
     encoders: RwLock<HashMap<u64, RegisteredEncoder>>,
     next_model: AtomicU64,
+    /// Per-model circuit breaker gating the sparse-encode admission path.
+    breaker: Arc<CircuitBreaker>,
+    /// When the supervisor last respawned a panicked worker (health: a
+    /// recent respawn reports the engine `Degraded`).
+    last_restart: Arc<Mutex<Option<Instant>>>,
 }
 
 impl Engine {
@@ -120,6 +140,11 @@ impl Engine {
             max_wait: cfg.max_wait(),
         };
         let cache = Arc::new(ThresholdCache::new(cfg.cache_capacity));
+        let breaker = Arc::new(CircuitBreaker::new(
+            cfg.breaker_threshold as u32,
+            Duration::from_millis(cfg.breaker_cooldown_ms),
+        ));
+        let last_restart = Arc::new(Mutex::new(None));
         let mut shards = Vec::with_capacity(nshards);
         let mut workers = Vec::with_capacity(nshards * cfg.workers_per_shard);
         for index in 0..nshards {
@@ -131,9 +156,19 @@ impl Engine {
             for w in 0..cfg.workers_per_shard {
                 let worker_shard = Arc::clone(&shard);
                 let worker_cache = Arc::clone(&cache);
+                let worker_breaker = Arc::clone(&breaker);
+                let worker_restart = Arc::clone(&last_restart);
                 let spawned = std::thread::Builder::new()
                     .name(format!("serve-{index}.{w}"))
-                    .spawn(move || worker_loop(&worker_shard, &worker_cache, policy));
+                    .spawn(move || {
+                        supervised_worker(
+                            &worker_shard,
+                            &worker_cache,
+                            policy,
+                            &worker_breaker,
+                            &worker_restart,
+                        )
+                    });
                 match spawned {
                     Ok(handle) => workers.push(handle),
                     Err(e) => {
@@ -165,7 +200,15 @@ impl Engine {
             started: Instant::now(),
             encoders: RwLock::new(HashMap::new()),
             next_model: AtomicU64::new(1),
+            breaker,
+            last_restart,
         })
+    }
+
+    /// The engine's per-model circuit breaker (read-only view for
+    /// telemetry and tests; the engine itself records outcomes).
+    pub fn breaker(&self) -> &CircuitBreaker {
+        &self.breaker
     }
 
     pub fn shard_count(&self) -> usize {
@@ -187,7 +230,7 @@ impl Engine {
 
     /// Submit and block for the response.
     pub fn submit_wait(&self, req: ProjectionRequest) -> Result<ProjectionResponse, SubmitError> {
-        self.submit(req)?.wait().ok_or(SubmitError::ShuttingDown)
+        self.submit(req)?.wait()
     }
 
     /// Register a compacted f32 encoder; returns the model id to encode
@@ -252,6 +295,7 @@ impl Engine {
     /// complete (they hold the `Arc`); new submissions get
     /// `SubmitError::Invalid`. Returns whether the id existed.
     pub fn unregister_encoder(&self, id: u64) -> bool {
+        self.breaker.forget(id);
         self.encoders.write().unwrap().remove(&id).is_some()
     }
 
@@ -292,6 +336,13 @@ impl Engine {
     pub fn submit_encode(&self, model: u64, x: Payload) -> Result<ResponseHandle, SubmitError> {
         if x.is_empty() {
             return Err(SubmitError::Invalid("empty encode payload".into()));
+        }
+        // Circuit-breaker gate: a model tripped by repeated execution
+        // failures sheds load here (503 + Retry-After at the net layer)
+        // instead of feeding more jobs to a failing path. The single
+        // half-open probe after the cooldown passes this check.
+        if let Err(retry_after) = self.breaker.admit(model) {
+            return Err(SubmitError::CircuitOpen { model, retry_after });
         }
         let (rows, cols, dtype) = (x.rows(), x.cols(), x.dtype());
         let work = {
@@ -335,7 +386,7 @@ impl Engine {
         model: u64,
         x: Payload,
     ) -> Result<ProjectionResponse, SubmitError> {
-        self.submit_encode(model, x)?.wait().ok_or(SubmitError::ShuttingDown)
+        self.submit_encode(model, x)?.wait()
     }
 
     /// Shared tail of every submit path: pick a shard round-robin, attach
@@ -361,8 +412,27 @@ impl Engine {
         }
     }
 
-    /// Point-in-time snapshot of every shard's counters.
+    /// Point-in-time snapshot of every shard's counters, including the
+    /// health machine's verdict: `Degraded` while any model's circuit
+    /// breaker is not closed or a worker respawned within the last few
+    /// seconds, `Healthy` otherwise. (The net layer overrides the state
+    /// to `Draining` during a graceful drain.)
     pub fn stats(&self) -> EngineStats {
+        let mut reasons = Vec::new();
+        for (model, state) in self.breaker.impaired() {
+            reasons.push(format!("model {model} circuit {}", state.name()));
+        }
+        if let Some(at) = *self.last_restart.lock().unwrap() {
+            let ago = at.elapsed();
+            if ago < RESTART_DEGRADED_WINDOW {
+                reasons.push(format!("worker restarted {:.1}s ago", ago.as_secs_f64()));
+            }
+        }
+        let health = if reasons.is_empty() {
+            HealthReport::healthy()
+        } else {
+            HealthReport::degraded(reasons)
+        };
         EngineStats {
             uptime: self.started.elapsed(),
             shards: self
@@ -370,6 +440,7 @@ impl Engine {
                 .iter()
                 .map(|s| s.counters.snapshot(s.index, s.queue.len()))
                 .collect(),
+            health,
         }
     }
 
@@ -418,33 +489,108 @@ fn check_features(rows: usize, features: usize) -> Result<(), SubmitError> {
     Ok(())
 }
 
-fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
+/// Why a `worker_loop` call returned.
+enum WorkerExit {
+    /// The shard queue closed and drained: clean shutdown.
+    Drained,
+    /// A job panicked mid-execution; the loop failed the affected jobs
+    /// with typed errors and unwound so the supervisor can respawn it.
+    Panicked,
+}
+
+/// The supervisor wrapping every worker thread: run the worker loop,
+/// and when a job execution panics, respawn the loop in place with a
+/// fresh scratch workspace — the thread (and the shard's capacity)
+/// survives any panicking job. Each respawn bumps the shard's
+/// `worker_restarts` counter and stamps the engine's last-restart clock
+/// for health reporting.
+fn supervised_worker(
+    shard: &Shard,
+    cache: &ThresholdCache,
+    policy: BatchPolicy,
+    breaker: &CircuitBreaker,
+    last_restart: &Mutex<Option<Instant>>,
+) {
+    loop {
+        match worker_loop(shard, cache, policy, breaker) {
+            WorkerExit::Drained => return,
+            WorkerExit::Panicked => {
+                shard.counters.worker_restarts.inc();
+                *last_restart.lock().unwrap() = Some(Instant::now());
+            }
+        }
+    }
+}
+
+/// Fail one job with a typed worker-panic error: the waiter gets
+/// `SubmitError::Failed(JobError::WorkerPanic)` instead of a hung or
+/// dropped channel, and encode failures count against the model's
+/// circuit breaker.
+fn fail_job(shard: &Shard, breaker: &CircuitBreaker, job: &Job) {
+    shard.counters.worker_panics.inc();
+    if let JobKind::SparseEncode { model } = job.key.kind {
+        breaker.record_failure(model);
+    }
+    let _ = job.tx.send(Err(JobError::WorkerPanic { shard: shard.index }));
+}
+
+fn worker_loop(
+    shard: &Shard,
+    cache: &ThresholdCache,
+    policy: BatchPolicy,
+    breaker: &CircuitBreaker,
+) -> WorkerExit {
     // Per-worker reusable projection workspace (the per-shard workspace
     // pool: workers are pinned to their shard). Steady-state bi-level
-    // traffic allocates only the response payloads.
+    // traffic allocates only the response payloads. A respawn after a
+    // panic rebuilds it from scratch — a panicking job may have left it
+    // mid-mutation.
     let mut scratch = scheduler::WorkerScratch::new();
     while let Some(first) = shard.queue.pop_wait() {
         let batch = scheduler::collect_batch(&shard.queue, first, policy, |j: &Job| j.key);
         let batch_size = batch.len();
         shard.counters.batches.inc();
         shard.counters.batched_jobs.add(batch_size as u64);
-        for job in batch {
+        // Manual iteration (not a `for` loop) so the panic arm can fail
+        // the *remaining* jobs of the batch before unwinding.
+        let mut jobs = batch.into_iter();
+        loop {
+            let Some(job) = jobs.next() else { break };
             let queue_micros = job.enqueued.elapsed().as_micros() as u64;
             let t0 = Instant::now();
-            let out = match &job.work {
-                Work::Project(req) => scheduler::execute(req, cache, &mut scratch),
-                // Encodes allocate exactly the response payload (the
-                // per-sample kernel writes straight into it).
-                Work::Encode32 { enc, x } => ExecOutcome {
-                    payload: Payload::F32(enc.encode(x)),
-                    thresholds: None,
-                    cache_hit: false,
-                },
-                Work::Encode64 { enc, x } => ExecOutcome {
-                    payload: Payload::F64(enc.encode(x)),
-                    thresholds: None,
-                    cache_hit: false,
-                },
+            // Supervision boundary: a panic inside execution (a library
+            // bug, a poisoned payload, or an injected `worker.panic`
+            // fault) is caught here instead of killing the thread.
+            let caught = catch_unwind(AssertUnwindSafe(|| {
+                scheduler::fire_worker_faults();
+                match &job.work {
+                    Work::Project(req) => scheduler::execute(req, cache, &mut scratch),
+                    // Encodes allocate exactly the response payload (the
+                    // per-sample kernel writes straight into it).
+                    Work::Encode32 { enc, x } => ExecOutcome {
+                        payload: Payload::F32(enc.encode(x)),
+                        thresholds: None,
+                        cache_hit: false,
+                    },
+                    Work::Encode64 { enc, x } => ExecOutcome {
+                        payload: Payload::F64(enc.encode(x)),
+                        thresholds: None,
+                        cache_hit: false,
+                    },
+                }
+            }));
+            let out = match caught {
+                Ok(out) => out,
+                Err(_) => {
+                    // Fail the panicked job and the rest of its batch
+                    // (the shared scratch is suspect), then unwind to
+                    // the supervisor for a respawn.
+                    fail_job(shard, breaker, &job);
+                    for j in jobs {
+                        fail_job(shard, breaker, &j);
+                    }
+                    return WorkerExit::Panicked;
+                }
             };
             let exec_micros = t0.elapsed().as_micros() as u64;
             shard.counters.completed.inc();
@@ -457,10 +603,13 @@ fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
                     }
                 }
             }
+            if let JobKind::SparseEncode { model } = job.key.kind {
+                breaker.record_success(model);
+            }
             shard.counters.queue_wait.record_micros(queue_micros);
             shard.counters.exec.record_micros(exec_micros);
             // A dropped handle just means the client stopped caring.
-            let _ = job.tx.send(ProjectionResponse {
+            let _ = job.tx.send(Ok(ProjectionResponse {
                 kind: job.key.kind,
                 payload: out.payload,
                 thresholds: out.thresholds,
@@ -469,9 +618,10 @@ fn worker_loop(shard: &Shard, cache: &ThresholdCache, policy: BatchPolicy) {
                 shard: shard.index,
                 queue_micros,
                 exec_micros,
-            });
+            }));
         }
     }
+    WorkerExit::Drained
 }
 
 #[cfg(test)]
@@ -491,6 +641,8 @@ mod tests {
             min_fill: 1,
             max_wait_micros: 100,
             cache_capacity: 8,
+            breaker_threshold: 3,
+            breaker_cooldown_ms: 50,
         }
     }
 
@@ -622,6 +774,43 @@ mod tests {
         engine.shutdown();
     }
 
+    #[test]
+    fn breaker_trips_encode_admission_and_degrades_health() {
+        let engine = Engine::start(&small_cfg()).unwrap();
+        let (_, enc) = masked_encoder::<f64>(81);
+        let model = engine.register_encoder_f64(enc);
+        assert_eq!(engine.stats().health.state, crate::serve::stats::HealthState::Healthy);
+        // Trip the gate directly (threshold 3 in small_cfg).
+        for _ in 0..3 {
+            engine.breaker().record_failure(model);
+        }
+        let mut rng = Xoshiro256pp::seed_from_u64(82);
+        let err = engine
+            .submit_encode(model, Payload::F64(Matrix::randn(10, 2, &mut rng)))
+            .unwrap_err();
+        assert!(
+            matches!(err, SubmitError::CircuitOpen { model: m, .. } if m == model),
+            "expected CircuitOpen, got {err}"
+        );
+        let stats = engine.stats();
+        assert_eq!(stats.health.state, crate::serve::stats::HealthState::Degraded);
+        assert!(
+            stats.health.reasons.iter().any(|r| r.contains("circuit")),
+            "{:?}",
+            stats.health.reasons
+        );
+        // After the cooldown the half-open probe is admitted; its success
+        // closes the gate and health returns to Healthy.
+        std::thread::sleep(Duration::from_millis(60));
+        let resp = engine.submit_encode_wait(model, Payload::F64(Matrix::randn(10, 2, &mut rng)));
+        assert!(resp.is_ok(), "half-open probe should be admitted and succeed");
+        assert_eq!(engine.stats().health.state, crate::serve::stats::HealthState::Healthy);
+        // Unregistering drops the gate too.
+        engine.unregister_encoder(model);
+        assert!(engine.breaker().impaired().is_empty());
+        engine.shutdown();
+    }
+
     fn write_checkpoint<T: crate::scalar::Scalar>(
         seed: u64,
         path: &std::path::Path,
@@ -704,7 +893,7 @@ mod tests {
         let inflight = engine.submit_encode(model, Payload::F64(x.clone())).unwrap();
         assert!(engine.unregister_encoder(model));
         assert!(!engine.unregister_encoder(model), "second unregister is a no-op");
-        assert!(inflight.wait().is_some(), "admitted job must still complete");
+        assert!(inflight.wait().is_ok(), "admitted job must still complete");
         let err = engine.submit_encode(model, Payload::F64(x)).unwrap_err();
         assert!(matches!(err, SubmitError::Invalid(_)));
         assert_eq!(engine.encoder_count(), 0);
@@ -747,7 +936,7 @@ mod tests {
         drop(engine); // graceful: queued jobs still execute
         let mut got = 0;
         for h in handles {
-            if h.wait().is_some() {
+            if h.wait().is_ok() {
                 got += 1;
             }
         }

@@ -12,6 +12,18 @@
 //! [`run_loadgen`] calls the engine in-process; [`run_loadgen_net`] speaks
 //! the `net` wire protocol over real sockets, honouring HTTP 429
 //! backpressure via the `X-Retry-After-Micros` / `Retry-After` headers.
+//!
+//! Backoff is **jittered, capped exponential** layered on the advertised
+//! retry-after: the server's hint is the base, doubled per consecutive
+//! retry of the same request, capped at `backoff_cap_ms`, with equal
+//! jitter (half fixed + half seeded-random) so synchronized clients
+//! spread out. Every request has an explicit abandon budget
+//! (`retry_budget` attempts) and the report distinguishes backoff
+//! `retries` from connection `redials`. `chaos: true` additionally fires
+//! the client-side [`crate::fault`] site `conn.slow_read` (stall between
+//! request and response read — provoking server write timeouts) and
+//! retries transient 5xx responses (`worker_panic`, `circuit_open`)
+//! within the same budget.
 
 use std::io::BufReader;
 use std::net::TcpStream;
@@ -19,10 +31,12 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::config::TomlDoc;
+use crate::fault::{self, FaultSite};
 use crate::metrics::LatencyHistogram;
 use crate::net::http::{self, HttpError, HttpLimits, Response};
 use crate::net::wire;
 use crate::projection::ProjectionKind;
+use crate::rng::{Rng, Xoshiro256pp};
 use crate::tensor::Matrix;
 
 use super::engine::Engine;
@@ -46,6 +60,16 @@ pub struct LoadgenConfig {
     /// 0 keeps the workload pure `f64`.
     pub f32_every: usize,
     pub seed: u64,
+    /// Abandon budget: attempts per request (first try + retries) before
+    /// it is counted as `failed`.
+    pub retry_budget: u32,
+    /// Ceiling on one backoff sleep; the exponential doubling never
+    /// exceeds it.
+    pub backoff_cap_ms: u64,
+    /// Chaos mode (`loadgen --chaos`): fire the client-side
+    /// `conn.slow_read` fault site and retry transient 5xx within the
+    /// budget. CLI-set; not a `[loadgen]` key.
+    pub chaos: bool,
 }
 
 impl Default for LoadgenConfig {
@@ -65,6 +89,9 @@ impl Default for LoadgenConfig {
             pool: 8,
             f32_every: 4,
             seed: 42,
+            retry_budget: 10_000,
+            backoff_cap_ms: 250,
+            chaos: false,
         }
     }
 }
@@ -97,6 +124,10 @@ impl LoadgenConfig {
             pool: doc.usize_or("loadgen.pool", d.pool),
             f32_every: doc.usize_or("loadgen.f32_every", d.f32_every),
             seed: doc.usize_or("loadgen.seed", d.seed as usize) as u64,
+            retry_budget: doc.usize_or("loadgen.retry_budget", d.retry_budget as usize) as u32,
+            backoff_cap_ms: doc.usize_or("loadgen.backoff_cap_ms", d.backoff_cap_ms as usize)
+                as u64,
+            chaos: d.chaos,
         };
         cfg.validate()?;
         Ok(cfg)
@@ -119,6 +150,12 @@ impl LoadgenConfig {
         if self.pool == 0 {
             return Err("loadgen.pool must be >= 1".into());
         }
+        if self.retry_budget == 0 {
+            return Err("loadgen.retry_budget must be >= 1".into());
+        }
+        if self.backoff_cap_ms == 0 {
+            return Err("loadgen.backoff_cap_ms must be >= 1".into());
+        }
         Ok(())
     }
 }
@@ -128,8 +165,13 @@ impl LoadgenConfig {
 #[derive(Clone, Debug, Default)]
 pub struct LoadReport {
     pub completed: u64,
-    /// Backpressure rejections that were retried.
+    /// Backpressure / transient-error rejections that were retried after
+    /// a backoff sleep (the connection stayed up).
     pub retries: u64,
+    /// Broken connections that were re-dialed (network mode only) —
+    /// deliberately distinct from `retries`: a redial means the transport
+    /// failed, not that the server pushed back.
+    pub redials: u64,
     /// Requests abandoned (engine shut down or retry budget exhausted).
     pub failed: u64,
     pub cache_hits: u64,
@@ -197,6 +239,7 @@ impl LoadReport {
     fn absorb(&mut self, other: &LoadReport) {
         self.completed += other.completed;
         self.retries += other.retries;
+        self.redials += other.redials;
         self.failed += other.failed;
         self.cache_hits += other.cache_hits;
         self.total_latency_micros += other.total_latency_micros;
@@ -227,6 +270,8 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
             let aggregate = &aggregate;
             s.spawn(move || {
                 let mut local = LoadReport::default();
+                let mut rng = client_rng(cfg.seed, client);
+                let cap = Duration::from_millis(cfg.backoff_cap_ms);
                 for i in 0..cfg.requests_per_client {
                     let idx = (client + i) % pool.len();
                     let kind = cfg.mix[(client + i) % cfg.mix.len()];
@@ -237,7 +282,7 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
                         ProjectionRequest::f64(kind, cfg.eta, pool[idx].clone())
                     };
                     let t = Instant::now();
-                    let mut attempts = 0u32;
+                    let mut retries = 0u32;
                     loop {
                         match engine.submit_wait(request.clone()) {
                             Ok(resp) => {
@@ -245,13 +290,14 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
                                 break;
                             }
                             Err(SubmitError::Overloaded { retry_after, .. }) => {
-                                attempts += 1;
-                                if attempts > 10_000 {
+                                if retries + 1 >= cfg.retry_budget {
                                     local.failed += 1;
                                     break;
                                 }
                                 local.retries += 1;
-                                std::thread::sleep(retry_after);
+                                let delay = backoff_delay(retry_after, retries, cap, &mut rng);
+                                retries += 1;
+                                std::thread::sleep(delay);
                             }
                             Err(_) => {
                                 local.failed += 1;
@@ -295,8 +341,15 @@ impl NetConn {
         path: &str,
         headers: &[(String, String)],
         body: &[u8],
+        stall: Option<Duration>,
     ) -> Result<Response, HttpError> {
         http::write_request(&mut self.writer, "POST", path, headers, body)?;
+        // `conn.slow_read` (chaos mode): the request is written but this
+        // client dawdles before reading the response — the server-side
+        // view is a slow reader, provoking its write timeout.
+        if let Some(d) = stall {
+            std::thread::sleep(d);
+        }
         http::read_response(&mut self.reader, &self.limits)
     }
 }
@@ -311,6 +364,32 @@ fn retry_after_of(resp: &Response) -> Duration {
         return Duration::from_secs(secs);
     }
     Duration::from_millis(1)
+}
+
+/// One backoff sleep: the advertised hint (floored at 100µs) doubled per
+/// consecutive retry of the same request, capped at `cap`, with equal
+/// jitter — half the capped delay is fixed, half uniformly random from
+/// the client's seeded stream, so synchronized clients fan out
+/// deterministically per seed.
+fn backoff_delay(
+    advertised: Duration,
+    retry_index: u32,
+    cap: Duration,
+    rng: &mut Xoshiro256pp,
+) -> Duration {
+    let base = advertised.max(Duration::from_micros(100));
+    let doubled = base.saturating_mul(1u32 << retry_index.min(20));
+    let capped = doubled.min(cap);
+    let half = capped / 2;
+    let span = (half.as_micros() as u64).max(1);
+    half + Duration::from_micros(rng.next_u64() % span)
+}
+
+/// Per-client backoff RNG stream, decorrelated from the matrix-pool seed.
+fn client_rng(seed: u64, client: usize) -> Xoshiro256pp {
+    Xoshiro256pp::seed_from_u64(
+        seed ^ 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(client as u64 + 1),
+    )
 }
 
 /// Network-mode driver: the same closed-loop workload as [`run_loadgen`],
@@ -351,6 +430,8 @@ pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, St
                 let headers =
                     vec![("X-Client-Id".to_string(), format!("loadgen-{client}"))];
                 let mut local = LoadReport::default();
+                let mut rng = client_rng(cfg.seed, client);
+                let cap = Duration::from_millis(cfg.backoff_cap_ms);
                 for i in 0..cfg.requests_per_client {
                     let idx = (client + i) % pool.len();
                     let kind = cfg.mix[(client + i) % cfg.mix.len()];
@@ -363,13 +444,19 @@ pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, St
                     let body = wire::project_request_body(&request);
                     let t = Instant::now();
                     let mut attempts = 0u32;
+                    let mut retries = 0u32;
                     loop {
                         attempts += 1;
-                        if attempts > 10_000 {
+                        if attempts > cfg.retry_budget {
                             local.failed += 1;
                             break;
                         }
-                        match conn.post("/v1/project", &headers, body.as_bytes()) {
+                        let stall = if cfg.chaos {
+                            fault::fire(FaultSite::ConnSlowRead).map(Duration::from_millis)
+                        } else {
+                            None
+                        };
+                        match conn.post("/v1/project", &headers, body.as_bytes(), stall) {
                             Ok(resp) if resp.status == 200 => {
                                 let micros = t.elapsed().as_micros() as u64;
                                 // wire-format-aware fast path:
@@ -382,9 +469,24 @@ pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, St
                                 local.record(micros, hit);
                                 break;
                             }
-                            Ok(resp) if resp.status == 429 => {
+                            Ok(resp)
+                                if resp.status == 429
+                                    || (cfg.chaos
+                                        && (resp.status == 500 || resp.status == 503)) =>
+                            {
+                                // 429 always backs off; chaos mode also
+                                // treats worker_panic (500) and
+                                // circuit_open / draining (503) as
+                                // transient within the same budget.
                                 local.retries += 1;
-                                std::thread::sleep(retry_after_of(&resp));
+                                let delay = backoff_delay(
+                                    retry_after_of(&resp),
+                                    retries,
+                                    cap,
+                                    &mut rng,
+                                );
+                                retries += 1;
+                                std::thread::sleep(delay);
                             }
                             Ok(_) => {
                                 // 4xx/5xx other than backpressure: no retry
@@ -392,7 +494,10 @@ pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, St
                                 break;
                             }
                             Err(_) => match NetConn::connect(addr) {
-                                Ok(c) => conn = c,
+                                Ok(c) => {
+                                    local.redials += 1;
+                                    conn = c;
+                                }
                                 Err(_) => {
                                     local.failed += 1;
                                     break;
@@ -432,6 +537,8 @@ mod tests {
             pool = 2
             f32_every = 0
             seed = 7
+            retry_budget = 12
+            backoff_cap_ms = 40
             mix = ["bilevel-l1inf", "none"]
             "#,
         )
@@ -442,6 +549,37 @@ mod tests {
         assert_eq!(cfg.mix, vec![ProjectionKind::BilevelL1Inf, ProjectionKind::None]);
         assert_eq!(cfg.eta, 0.5);
         assert_eq!(cfg.seed, 7);
+        assert_eq!(cfg.retry_budget, 12);
+        assert_eq!(cfg.backoff_cap_ms, 40);
+        assert!(!cfg.chaos, "chaos is CLI-set, never a config default");
+    }
+
+    #[test]
+    fn backoff_is_capped_jittered_and_deterministic() {
+        let cap = Duration::from_millis(10);
+        let hint = Duration::from_millis(1);
+        let mut a = client_rng(7, 0);
+        let mut b = client_rng(7, 0);
+        assert_eq!(
+            backoff_delay(hint, 0, cap, &mut a),
+            backoff_delay(hint, 0, cap, &mut b),
+            "same seed, same jitter"
+        );
+        // the exponential doubling never escapes the cap, and equal
+        // jitter keeps at least half of it
+        let d = backoff_delay(hint, 30, cap, &mut a);
+        assert!(d <= cap, "{d:?}");
+        assert!(d >= cap / 2, "{d:?}");
+        // a zero advertised hint still sleeps a little
+        assert!(backoff_delay(Duration::ZERO, 0, cap, &mut a) > Duration::ZERO);
+    }
+
+    #[test]
+    fn zero_budgets_are_rejected() {
+        let bad = LoadgenConfig { retry_budget: 0, ..LoadgenConfig::default() };
+        assert!(bad.validate().is_err());
+        let bad = LoadgenConfig { backoff_cap_ms: 0, ..LoadgenConfig::default() };
+        assert!(bad.validate().is_err());
     }
 
     #[test]

@@ -42,6 +42,16 @@
 //!   model id: submissions resolve the registry entry to an `Arc` at
 //!   admission, so in-flight batches finish on the old encoder and the
 //!   swap rejects nothing.
+//! * **Supervision & recovery** ([`breaker`], worker supervision in
+//!   [`engine`]) — workers wrap every job execution in `catch_unwind`: a
+//!   panicking job fails its batch with a typed [`JobError::WorkerPanic`]
+//!   instead of hanging its waiters, and the supervisor respawns the
+//!   worker in place (restart counters in [`stats`]); repeated encode
+//!   failures trip a per-model [`CircuitBreaker`] (open → refused with a
+//!   retry-after → single half-open probe); the engine reports a
+//!   three-state health machine ([`HealthState`]) through `/healthz` and
+//!   `/v1/stats`. The [`crate::fault`] sites `worker.panic` /
+//!   `worker.stall` exercise exactly these paths.
 //!
 //! Sizing lives in [`ServeConfig`] (`[serve]` section of the TOML config).
 //!
@@ -62,6 +72,7 @@
 //! println!("{}", engine.shutdown());
 //! ```
 
+pub mod breaker;
 pub mod cache;
 pub mod engine;
 pub mod loadgen;
@@ -70,15 +81,17 @@ pub mod request;
 pub mod scheduler;
 pub mod stats;
 
+pub use breaker::{BreakerState, CircuitBreaker};
 pub use cache::{fingerprint, CacheKey, CachedThresholds, ThresholdCache};
 pub use engine::{Engine, ModelInfo, ResponseHandle};
 pub use loadgen::{run_loadgen, run_loadgen_net, LoadReport, LoadgenConfig};
 pub use queue::{JobQueue, PushError};
 pub use request::{
-    BatchKey, Dtype, JobKind, Payload, ProjectionRequest, ProjectionResponse, SubmitError,
+    BatchKey, Dtype, JobError, JobKind, Payload, ProjectionRequest, ProjectionResponse,
+    SubmitError,
 };
 pub use scheduler::{cacheable, BatchPolicy};
-pub use stats::{EngineStats, ShardStats};
+pub use stats::{EngineStats, HealthReport, HealthState, ShardStats};
 
 // Convenience re-export (the config type lives with the other schemas).
 pub use crate::config::ServeConfig;

@@ -197,7 +197,32 @@ pub struct ProjectionResponse {
     pub exec_micros: u64,
 }
 
-/// Why a submission was not accepted.
+/// Why an *accepted* job failed to produce a result. Delivered through
+/// the response channel in place of a [`ProjectionResponse`], so a
+/// poisoned job surfaces as a typed error instead of a hung or dropped
+/// waiter.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobError {
+    /// The worker executing the job panicked; the supervisor respawned it
+    /// (see `Engine` worker supervision) and failed the batch's jobs with
+    /// this error.
+    WorkerPanic { shard: usize },
+}
+
+impl fmt::Display for JobError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::WorkerPanic { shard } => {
+                write!(f, "worker on shard {shard} panicked executing the job")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JobError {}
+
+/// Why a submission was not accepted (or, for the `_wait` entry points,
+/// why an accepted job did not complete).
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum SubmitError {
     /// The request failed admission checks (bad η, empty payload).
@@ -205,6 +230,11 @@ pub enum SubmitError {
     /// The target shard's queue is at its high-water mark; retry after the
     /// suggested backoff.
     Overloaded { shard: usize, depth: usize, retry_after: Duration },
+    /// The model's circuit breaker is open after repeated encode
+    /// failures; retry after the suggested cooldown.
+    CircuitOpen { model: u64, retry_after: Duration },
+    /// The job was accepted but failed during execution.
+    Failed(JobError),
     /// The engine is shutting down and no longer accepts work.
     ShuttingDown,
 }
@@ -217,6 +247,11 @@ impl fmt::Display for SubmitError {
                 f,
                 "shard {shard} overloaded (queue depth {depth}); retry after {retry_after:?}"
             ),
+            Self::CircuitOpen { model, retry_after } => write!(
+                f,
+                "model {model} circuit breaker open; retry after {retry_after:?}"
+            ),
+            Self::Failed(e) => write!(f, "job failed: {e}"),
             Self::ShuttingDown => write!(f, "engine is shutting down"),
         }
     }
@@ -283,6 +318,14 @@ mod tests {
         assert_eq!(a.name(), "sparse-encode");
         assert_ne!(a, JobKind::Project(ProjectionKind::BilevelL1Inf));
         assert_eq!(JobKind::Project(ProjectionKind::BilevelL11).name(), "bilevel-l11");
+    }
+
+    #[test]
+    fn typed_errors_display() {
+        let e = SubmitError::Failed(JobError::WorkerPanic { shard: 2 });
+        assert!(e.to_string().contains("shard 2"), "{e}");
+        let c = SubmitError::CircuitOpen { model: 7, retry_after: Duration::from_millis(50) };
+        assert!(c.to_string().contains("model 7"), "{c}");
     }
 
     #[test]

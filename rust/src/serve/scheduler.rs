@@ -84,6 +84,23 @@ pub(crate) fn collect_batch<T>(
     batch
 }
 
+/// Fire the worker-level fault sites. Called by the engine's worker loop
+/// at the top of every job execution, **inside** the supervised
+/// `catch_unwind` scope, so an injected `worker.panic` exercises exactly
+/// the recovery path a real execution panic would: the batch's jobs fail
+/// with a typed [`JobError`](super::request::JobError) and the supervisor
+/// respawns the worker. `worker.stall` sleeps for the site's `param`
+/// milliseconds to simulate a wedged kernel.
+pub(crate) fn fire_worker_faults() {
+    use crate::fault::{self, FaultSite};
+    if let Some(ms) = fault::fire(FaultSite::WorkerStall) {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    if fault::fire(FaultSite::WorkerPanic).is_some() {
+        panic!("injected fault: worker.panic");
+    }
+}
+
 /// Result of executing one request.
 pub(crate) struct ExecOutcome {
     pub payload: Payload,

@@ -19,6 +19,10 @@ pub(crate) struct ShardCounters {
     pub batched_jobs: Counter,
     pub cache_hits: Counter,
     pub cache_misses: Counter,
+    /// Jobs that failed because their worker panicked mid-execution.
+    pub worker_panics: Counter,
+    /// Times a supervised worker was respawned after a panic.
+    pub worker_restarts: Counter,
     pub queue_wait: LatencyStat,
     pub exec: LatencyStat,
 }
@@ -43,6 +47,8 @@ impl ShardCounters {
             batched_jobs,
             cache_hits: hits,
             cache_misses: misses,
+            worker_panics: self.worker_panics.get(),
+            worker_restarts: self.worker_restarts.get(),
             mean_batch: if batches > 0 { batched_jobs as f64 / batches as f64 } else { 0.0 },
             hit_rate: if hits + misses > 0 { hits as f64 / (hits + misses) as f64 } else { 0.0 },
             mean_queue_micros: self.queue_wait.mean_micros(),
@@ -69,6 +75,10 @@ pub struct ShardStats {
     pub batched_jobs: u64,
     pub cache_hits: u64,
     pub cache_misses: u64,
+    /// Jobs failed by a mid-execution worker panic.
+    pub worker_panics: u64,
+    /// Supervised worker respawns after panics.
+    pub worker_restarts: u64,
     pub mean_batch: f64,
     pub hit_rate: f64,
     pub mean_queue_micros: f64,
@@ -76,11 +86,65 @@ pub struct ShardStats {
     pub max_exec_micros: u64,
 }
 
+/// The serve health machine's three states, surfaced through `/healthz`
+/// and `/v1/stats`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HealthState {
+    /// Full capacity, no tripped breakers, no recent worker restarts.
+    Healthy,
+    /// Serving, but impaired: an open/probing circuit breaker or a recent
+    /// worker restart. Reasons are listed in [`HealthReport::reasons`].
+    Degraded,
+    /// Graceful drain in progress; new work is refused.
+    Draining,
+}
+
+impl HealthState {
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Healthy => "healthy",
+            Self::Degraded => "degraded",
+            Self::Draining => "draining",
+        }
+    }
+}
+
+/// A health state plus the human-readable reasons behind it (empty when
+/// healthy).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HealthReport {
+    pub state: HealthState,
+    pub reasons: Vec<String>,
+}
+
+impl HealthReport {
+    pub fn healthy() -> Self {
+        Self { state: HealthState::Healthy, reasons: Vec::new() }
+    }
+
+    pub fn degraded(reasons: Vec<String>) -> Self {
+        Self { state: HealthState::Degraded, reasons }
+    }
+
+    pub fn draining() -> Self {
+        Self { state: HealthState::Draining, reasons: vec!["drain in progress".into()] }
+    }
+}
+
+impl Default for HealthReport {
+    fn default() -> Self {
+        Self::healthy()
+    }
+}
+
 /// Snapshot of a whole engine.
 #[derive(Clone, Debug)]
 pub struct EngineStats {
     pub uptime: Duration,
     pub shards: Vec<ShardStats>,
+    /// The engine-level health machine state at snapshot time (the net
+    /// layer overrides this to `Draining` while a drain is in progress).
+    pub health: HealthReport,
 }
 
 impl EngineStats {
@@ -102,6 +166,14 @@ impl EngineStats {
 
     pub fn cache_misses(&self) -> u64 {
         self.shards.iter().map(|s| s.cache_misses).sum()
+    }
+
+    pub fn worker_panics(&self) -> u64 {
+        self.shards.iter().map(|s| s.worker_panics).sum()
+    }
+
+    pub fn worker_restarts(&self) -> u64 {
+        self.shards.iter().map(|s| s.worker_restarts).sum()
     }
 
     /// Cache hit-rate over the cacheable (bi-level) traffic.
@@ -149,6 +221,20 @@ impl fmt::Display for EngineStats {
             self.mean_batch(),
             self.hit_rate() * 100.0,
         )?;
+        write!(f, "health: {}", self.health.state.name())?;
+        if self.worker_panics() > 0 || self.worker_restarts() > 0 {
+            write!(
+                f,
+                " | worker panics {} | restarts {}",
+                self.worker_panics(),
+                self.worker_restarts()
+            )?;
+        }
+        if self.health.reasons.is_empty() {
+            writeln!(f)?;
+        } else {
+            writeln!(f, " ({})", self.health.reasons.join("; "))?;
+        }
         writeln!(
             f,
             "  {:>5} {:>6} {:>9} {:>9} {:>8} {:>7} {:>7} {:>7} {:>10} {:>10}",
@@ -216,6 +302,7 @@ mod tests {
         let stats = EngineStats {
             uptime: Duration::from_secs(2),
             shards: vec![a.snapshot(0, 0), b.snapshot(1, 1)],
+            health: HealthReport::healthy(),
         };
         assert_eq!(stats.completed(), 10);
         assert_eq!(stats.cache_hits(), 2);
@@ -229,10 +316,36 @@ mod tests {
 
     #[test]
     fn empty_engine_stats_are_zero() {
-        let stats = EngineStats { uptime: Duration::ZERO, shards: vec![] };
+        let stats = EngineStats {
+            uptime: Duration::ZERO,
+            shards: vec![],
+            health: HealthReport::default(),
+        };
         assert_eq!(stats.completed(), 0);
         assert_eq!(stats.hit_rate(), 0.0);
         assert_eq!(stats.mean_batch(), 0.0);
         assert_eq!(stats.throughput_rps(), 0.0);
+        assert_eq!(stats.worker_panics(), 0);
+        assert_eq!(stats.health.state, HealthState::Healthy);
+    }
+
+    #[test]
+    fn health_states_render_with_reasons() {
+        let c = ShardCounters::new();
+        c.worker_panics.inc();
+        c.worker_restarts.inc();
+        let snap = c.snapshot(0, 0);
+        assert_eq!((snap.worker_panics, snap.worker_restarts), (1, 1));
+        let stats = EngineStats {
+            uptime: Duration::from_secs(1),
+            shards: vec![snap],
+            health: HealthReport::degraded(vec!["worker restarted 0.1s ago".into()]),
+        };
+        let rendered = format!("{stats}");
+        assert!(rendered.contains("health: degraded"), "{rendered}");
+        assert!(rendered.contains("worker restarted"), "{rendered}");
+        assert!(rendered.contains("restarts 1"), "{rendered}");
+        assert_eq!(HealthState::Draining.name(), "draining");
+        assert_eq!(HealthReport::draining().state, HealthState::Draining);
     }
 }

@@ -1,0 +1,225 @@
+//! End-to-end tests of the fault-injection harness and the recovery
+//! machinery it exercises: seeded schedules replay byte for byte, an
+//! injected worker panic surfaces as a typed error while the supervisor
+//! respawns the worker and restores shard capacity, and a chaos loadgen
+//! run under injected connection resets and worker panics (plus an
+//! encoder hot-swap mid-flight) loses zero accepted requests.
+//!
+//! The failpoint registry is process-global, so every test serializes on
+//! `gate()` before installing a plan and clears it before releasing.
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use bilevel_sparse::config::{HttpConfig, ServeConfig};
+use bilevel_sparse::fault::{self, FaultPlan, FaultSite};
+use bilevel_sparse::model::{SaeDims, SaeParams};
+use bilevel_sparse::net::Server;
+use bilevel_sparse::projection::ProjectionKind;
+use bilevel_sparse::rng::Xoshiro256pp;
+use bilevel_sparse::serve::{
+    run_loadgen_net, Engine, JobError, LoadgenConfig, Payload, ProjectionRequest, SubmitError,
+};
+use bilevel_sparse::sparse::{CompactEncoder, CompactPlan};
+use bilevel_sparse::tensor::Matrix;
+
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+fn bits_equal(a: &Matrix<f64>, b: &Matrix<f64>) -> bool {
+    a.rows() == b.rows()
+        && a.cols() == b.cols()
+        && a.as_slice().iter().zip(b.as_slice()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A 10-feature / 4-hidden encoder with a seed-dependent pruned support
+/// (mirrors the net integration tests).
+fn test_encoder(seed: u64) -> CompactEncoder<f64> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut p = SaeParams::init(SaeDims { features: 10, hidden: 4, classes: 2 }, &mut rng);
+    let mut mask = vec![1.0f32; 10];
+    for f in [1usize, 3, 8] {
+        mask[f] = 0.0;
+    }
+    p.apply_feature_mask(&mask);
+    let plan = CompactPlan::from_mask(&mask);
+    CompactEncoder::<f64>::from_params(&p, &plan)
+}
+
+#[test]
+fn seeded_fault_schedule_replays_exactly() {
+    let _g = gate();
+    fault::clear();
+    let plan = FaultPlan::parse_sites(
+        99,
+        "conn.slow_read:p=0.3,param=64;worker.stall:every=3,limit=4,param=1",
+    )
+    .unwrap();
+    let run = || {
+        let inj = fault::install(plan.clone());
+        let mut trace = Vec::with_capacity(128);
+        for _ in 0..64 {
+            trace.push(fault::fire(FaultSite::ConnSlowRead));
+            trace.push(fault::fire(FaultSite::WorkerStall));
+        }
+        let counts = (
+            inj.hits(FaultSite::ConnSlowRead),
+            inj.fired(FaultSite::ConnSlowRead),
+            inj.fired(FaultSite::WorkerStall),
+        );
+        fault::clear();
+        (trace, counts)
+    };
+    let (t1, c1) = run();
+    let (t2, c2) = run();
+    assert_eq!(t1, t2, "same seed, same plan must replay byte for byte");
+    assert_eq!(c1, c2);
+    assert_eq!(c1.0, 64, "every call is a hit");
+    assert!(c1.1 > 0, "p=0.3 over 64 draws must fire");
+    assert!(c1.1 < 64, "p=0.3 must not fire on every draw");
+    assert_eq!(c1.2, 4, "limit=4 caps worker.stall fires");
+
+    // a different seed yields a different schedule for the same site
+    let other = FaultPlan::parse_sites(100, "conn.slow_read:p=0.3,param=64").unwrap();
+    fault::install(other);
+    let t3: Vec<Option<u64>> = (0..64).map(|_| fault::fire(FaultSite::ConnSlowRead)).collect();
+    fault::clear();
+    let t1_slow: Vec<Option<u64>> = t1.iter().step_by(2).cloned().collect();
+    assert_ne!(t1_slow, t3, "a different seed must reschedule");
+
+    // with the registry cleared the sites are inert again
+    assert!(!fault::active());
+    assert_eq!(fault::fire(FaultSite::ConnSlowRead), None);
+}
+
+#[test]
+fn injected_worker_panic_is_typed_and_respawn_restores_capacity() {
+    let _g = gate();
+    fault::clear();
+    let inj = fault::install(FaultPlan::parse_sites(11, "worker.panic:every=1,limit=1").unwrap());
+    let engine = Engine::start(&ServeConfig {
+        shards: 1,
+        workers_per_shard: 1,
+        ..ServeConfig::default()
+    })
+    .unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(401);
+    let y = Matrix::<f64>::randn(16, 8, &mut rng);
+
+    // the first executed job hits the armed panic site: its waiter gets a
+    // typed error instead of a hang or a dropped channel
+    let err = engine
+        .submit_wait(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y.clone()))
+        .unwrap_err();
+    match err {
+        SubmitError::Failed(JobError::WorkerPanic { shard }) => assert_eq!(shard, 0),
+        other => panic!("expected a typed worker panic, got: {other}"),
+    }
+    assert_eq!(inj.fired(FaultSite::WorkerPanic), 1);
+
+    // the supervisor respawned the sole worker in place: the shard keeps
+    // serving, bit-identical to the library
+    let direct = ProjectionKind::BilevelL1Inf.apply(&y, 1.0);
+    for i in 0..8 {
+        let resp = engine
+            .submit_wait(ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y.clone()))
+            .unwrap_or_else(|e| panic!("post-respawn request {i} failed: {e}"));
+        assert!(
+            bits_equal(resp.payload.as_f64().unwrap(), &direct),
+            "post-respawn result must be bit-identical"
+        );
+    }
+
+    let stats = engine.shutdown();
+    assert_eq!(stats.worker_panics(), 1);
+    assert_eq!(stats.worker_restarts(), 1);
+    assert_eq!(stats.completed(), 8);
+    fault::clear();
+}
+
+#[test]
+fn chaos_load_with_hot_swap_and_drain_loses_no_accepted_requests() {
+    let _g = gate();
+    fault::clear();
+    let plan = FaultPlan::parse_sites(
+        7,
+        "worker.panic:every=10,limit=2;conn.reset:every=2,param=400,limit=3",
+    )
+    .unwrap();
+    let inj = fault::install(plan);
+
+    let engine = Arc::new(
+        Engine::start(&ServeConfig {
+            shards: 2,
+            workers_per_shard: 1,
+            cache_capacity: 16,
+            ..ServeConfig::default()
+        })
+        .unwrap(),
+    );
+    let enc_a = test_encoder(341);
+    let enc_b = test_encoder(342);
+    let id = engine.register_encoder_f64(enc_a);
+    let server = Server::start(
+        Arc::clone(&engine),
+        &HttpConfig { listen: "127.0.0.1:0".into(), ..HttpConfig::default() },
+    )
+    .unwrap();
+    let addr = server.addr().to_string();
+
+    let cfg = LoadgenConfig {
+        clients: 3,
+        requests_per_client: 24,
+        rows: 12,
+        cols: 10,
+        eta: 1.0,
+        mix: vec![ProjectionKind::BilevelL1Inf, ProjectionKind::BilevelL11],
+        pool: 2,
+        f32_every: 3,
+        seed: 9,
+        backoff_cap_ms: 20,
+        chaos: true,
+        ..LoadgenConfig::default()
+    };
+    let total = (cfg.clients * cfg.requests_per_client) as u64;
+    let lg = std::thread::spawn(move || run_loadgen_net(&addr, &cfg).unwrap());
+
+    // hot-swap the live encoder while the chaos load is in flight
+    std::thread::sleep(Duration::from_millis(50));
+    engine.swap_encoder_f64(id, enc_b.clone()).unwrap();
+
+    let report = lg.join().unwrap();
+    assert_eq!(
+        report.completed, total,
+        "every accepted request must eventually complete ({} failed)",
+        report.failed
+    );
+    assert_eq!(report.failed, 0);
+    assert!(inj.fired(FaultSite::ConnReset) > 0, "the reset site must actually fire");
+    assert!(
+        report.redials > 0,
+        "injected connection resets must surface as redials, not losses"
+    );
+    assert_eq!(inj.fired(FaultSite::WorkerPanic), 2, "both scheduled panics fire under load");
+
+    // the swapped-in encoder serves after the chaos run, bit-identical
+    let mut rng = Xoshiro256pp::seed_from_u64(343);
+    let x = Matrix::<f64>::randn(10, 5, &mut rng);
+    let resp = engine.submit_encode_wait(id, Payload::F64(x.clone())).unwrap();
+    assert!(bits_equal(resp.payload.as_f64().unwrap(), &enc_b.encode(&x)));
+
+    server.drain();
+    server.wait_for_drain();
+    server.join();
+    let stats = Arc::try_unwrap(engine).ok().unwrap().shutdown();
+    assert!(stats.worker_restarts() >= 2, "each injected panic must respawn its worker");
+    assert!(
+        stats.completed() >= total,
+        "redialed requests re-execute; the engine completes at least the client total"
+    );
+    fault::clear();
+}

@@ -185,6 +185,7 @@ fn network_loadgen_honours_429_retry_after() {
             min_fill: 8,
             max_wait_micros: 20_000,
             cache_capacity: 0,
+            ..ServeConfig::default()
         })
         .unwrap(),
     );
@@ -199,6 +200,7 @@ fn network_loadgen_honours_429_retry_after() {
         pool: 2,
         f32_every: 0,
         seed: 7,
+        ..LoadgenConfig::default()
     };
     let report = run_loadgen_net(&server.addr().to_string(), &cfg).unwrap();
     assert_eq!(report.completed, 64, "every request must eventually complete");
@@ -230,6 +232,7 @@ fn overload_429_advertises_exact_backoff_headers() {
             min_fill: 64,
             max_wait_micros: 300_000,
             cache_capacity: 0,
+            ..ServeConfig::default()
         })
         .unwrap(),
     );
@@ -269,7 +272,7 @@ fn overload_429_advertises_exact_backoff_headers() {
 
     let b1_resp = blocked.join().unwrap();
     assert_eq!(b1_resp.status, 200, "the queued request still completes");
-    assert!(a_handle.wait().is_some());
+    assert!(a_handle.wait().is_ok());
     drop(conn);
     server.join();
     let stats = Arc::try_unwrap(engine).ok().unwrap().shutdown();
@@ -318,6 +321,33 @@ fn quota_429_is_distinct_from_overload_and_per_client() {
     let report = server.join();
     assert_eq!(report.quota_rejected, 1);
     assert_eq!(report.overloaded, 0, "quota and overload counters must not mix");
+    Arc::try_unwrap(engine).ok().unwrap().shutdown();
+}
+
+#[test]
+fn stalled_reader_trips_write_timeout_and_is_counted() {
+    let engine = Arc::new(Engine::start(&base_serve_cfg()).unwrap());
+    let cfg = HttpConfig { write_timeout_ms: 150, ..http_cfg() };
+    let server = Server::start(Arc::clone(&engine), &cfg).unwrap();
+    let mut rng = Xoshiro256pp::seed_from_u64(350);
+    // A response far larger than the combined socket buffers, so the
+    // server's response write stalls once the client stops reading and
+    // SO_SNDTIMEO (write_timeout_ms) must break the stall.
+    let y = Matrix::<f64>::randn(1024, 512, &mut rng);
+    let body =
+        wire::project_request_body(&ProjectionRequest::f64(ProjectionKind::BilevelL1Inf, 1.0, y));
+    let conn = TcpStream::connect(server.addr()).unwrap();
+    let mut writer = conn.try_clone().unwrap();
+    write_request(&mut writer, "POST", "/v1/project", &[], body.as_bytes()).unwrap();
+    // deliberately never read the response; give the server time to
+    // compute, fill the socket buffers, and hit the write timeout
+    std::thread::sleep(Duration::from_millis(2_000));
+    drop(writer);
+    drop(conn);
+    server.drain();
+    server.wait_for_drain();
+    let report = server.join();
+    assert!(report.write_timeouts >= 1, "stalled reader must be counted: {report:?}");
     Arc::try_unwrap(engine).ok().unwrap().shutdown();
 }
 

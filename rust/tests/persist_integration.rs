@@ -1,13 +1,17 @@
 //! Model-lifecycle integration: property-based checkpoint round-trips
 //! (export → import bit-identical across sparsity levels and dtypes),
 //! file-level error paths, serve-side model loading (including dims
-//! mismatch at admission), and hot-swap under live traffic.
+//! mismatch at admission), hot-swap under live traffic, and the recovery
+//! chain's guarantees under exhaustive truncation and single-bit-flip
+//! damage (quarantine + bit-exact fallback, never wrong bits).
 
 use std::time::Duration;
 
 use bilevel_sparse::config::ServeConfig;
 use bilevel_sparse::model::{SaeDims, SaeParams};
-use bilevel_sparse::persist::{read_header, Checkpoint, ModelBundle, PersistError};
+use bilevel_sparse::persist::{
+    read_header, recover_latest, Checkpoint, ModelBundle, PersistError,
+};
 use bilevel_sparse::proptest::{forall, PropConfig, SparseSaeCase};
 use bilevel_sparse::rng::Xoshiro256pp;
 use bilevel_sparse::serve::{Dtype, Engine, Payload, SubmitError};
@@ -160,6 +164,7 @@ fn small_cfg() -> ServeConfig {
         min_fill: 1,
         max_wait_micros: 100,
         cache_capacity: 8,
+        ..ServeConfig::default()
     }
 }
 
@@ -242,6 +247,7 @@ fn hot_swap_under_live_traffic_completes_everything() {
         min_fill: 1,
         max_wait_micros: 50,
         cache_capacity: 0,
+        ..ServeConfig::default()
     })
     .unwrap();
     let (pa, plan_a) = pruned_model(101, 10, 4);
@@ -298,6 +304,106 @@ fn hot_swap_under_live_traffic_completes_everything() {
     let stats = engine.shutdown();
     assert_eq!(stats.completed(), (CLIENTS * REQS) as u64);
     assert_eq!(stats.submitted(), (CLIENTS * REQS) as u64);
+}
+
+/// Shared fixture for the recovery property tests: a directory holding an
+/// older valid snapshot plus the serialized bytes of a newer one. The
+/// names make name-descending tie-breaking pick `z-newest` first even
+/// when both files land in the same mtime granule.
+fn recovery_fixture(tag: &str) -> (std::path::PathBuf, Vec<u8>, Vec<u8>) {
+    let dir = tmp_dir(tag);
+    let (p_old, plan_old) = pruned_model(121, 12, 5);
+    let old = Checkpoint {
+        seed: 121,
+        config_digest: 4,
+        dims: p_old.dims,
+        history: Vec::new(),
+        model: Some(ModelBundle {
+            plan: plan_old.clone(),
+            compact: compact_params(&p_old, &plan_old),
+            dense: None,
+        }),
+        train_state: None,
+    };
+    old.save(&dir.join("a-old.ckpt")).unwrap();
+    let old_bytes = old.to_bytes();
+    let (p_new, plan_new) = pruned_model(122, 12, 5);
+    let new = Checkpoint {
+        seed: 122,
+        config_digest: 4,
+        dims: p_new.dims,
+        history: Vec::new(),
+        model: Some(ModelBundle {
+            plan: plan_new.clone(),
+            compact: compact_params(&p_new, &plan_new),
+            dense: None,
+        }),
+        train_state: None,
+    };
+    (dir, old_bytes, new.to_bytes())
+}
+
+/// Run one recovery round against a damaged newest checkpoint and verify
+/// the chain's guarantees: the damaged file is quarantined, the prior
+/// snapshot comes back byte for byte, and wrong bits are never returned.
+fn assert_falls_back(
+    dir: &std::path::Path,
+    old_bytes: &[u8],
+    damaged: &[u8],
+    what: &str,
+) {
+    let newest = dir.join("z-newest.ckpt");
+    std::fs::write(&newest, damaged).unwrap();
+    let out = recover_latest(dir).unwrap();
+    let (path, ck) = out
+        .recovered
+        .unwrap_or_else(|| panic!("{what}: prior snapshot must be recoverable"));
+    assert!(path.ends_with("a-old.ckpt"), "{what}: recovered {path:?}");
+    assert_eq!(
+        ck.to_bytes(),
+        old_bytes,
+        "{what}: recovery must be bit-exact, never wrong bits"
+    );
+    assert_eq!(out.quarantined.len(), 1, "{what}: {:?}", out.quarantined);
+    assert!(!newest.exists(), "{what}: damaged file must be moved aside");
+    let corrupt = dir.join("z-newest.ckpt.corrupt");
+    assert!(corrupt.exists(), "{what}: quarantine sibling must exist");
+    std::fs::remove_file(&corrupt).unwrap();
+}
+
+#[test]
+fn recovery_survives_truncation_at_every_offset() {
+    // Property: however many trailing bytes a torn write loses — from the
+    // whole file down to a single byte — loading never yields wrong bits;
+    // the chain quarantines the stump and falls back to the prior
+    // snapshot bit-exactly.
+    let (dir, old_bytes, new_bytes) = recovery_fixture("truncate");
+    for cut in 0..new_bytes.len() {
+        assert_falls_back(&dir, &old_bytes, &new_bytes[..cut], &format!("truncated to {cut}"));
+    }
+    // The undamaged file at full length recovers as itself.
+    std::fs::write(dir.join("z-newest.ckpt"), &new_bytes).unwrap();
+    let out = recover_latest(&dir).unwrap();
+    let (path, ck) = out.recovered.unwrap();
+    assert!(path.ends_with("z-newest.ckpt"));
+    assert_eq!(ck.to_bytes(), new_bytes);
+    assert!(out.quarantined.is_empty());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn recovery_survives_any_single_bit_flip() {
+    // Property: one flipped bit anywhere in the newest checkpoint —
+    // magic, version, dims, payload, or the checksum itself — is always
+    // detected (the 128-bit checksum covers everything before it), the
+    // file is quarantined, and the prior snapshot is restored bit-exactly.
+    let (dir, old_bytes, new_bytes) = recovery_fixture("bitflip");
+    for i in 0..new_bytes.len() {
+        let mut damaged = new_bytes.clone();
+        damaged[i] ^= 1u8 << (i % 8);
+        assert_falls_back(&dir, &old_bytes, &damaged, &format!("bit flip in byte {i}"));
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]

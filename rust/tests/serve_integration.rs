@@ -25,6 +25,7 @@ fn base_cfg() -> ServeConfig {
         min_fill: 1,
         max_wait_micros: 200,
         cache_capacity: 64,
+        ..ServeConfig::default()
     }
 }
 
@@ -111,6 +112,7 @@ fn micro_batching_coalesces_concurrent_same_key_requests() {
         min_fill: 16,
         max_wait_micros: 200_000,
         cache_capacity: 0,
+        ..ServeConfig::default()
     };
     let engine = Engine::start(&cfg).unwrap();
     let mut rng = Xoshiro256pp::seed_from_u64(103);
@@ -215,6 +217,7 @@ fn backpressure_rejects_with_retry_after_at_high_water() {
         min_fill: 64,
         max_wait_micros: 150_000,
         cache_capacity: 0,
+        ..ServeConfig::default()
     };
     let engine = Engine::start(&cfg).unwrap();
     let mut rng = Xoshiro256pp::seed_from_u64(106);
@@ -243,7 +246,7 @@ fn backpressure_rejects_with_retry_after_at_high_water() {
     assert!(rejected >= 2, "expected >= 2 rejections, got {rejected}");
     // Accepted work still completes after the batch window expires.
     for h in accepted {
-        assert!(h.wait().is_some());
+        assert!(h.wait().is_ok());
     }
     let stats = engine.shutdown();
     assert_eq!(stats.rejected(), rejected);
@@ -269,6 +272,7 @@ fn loadgen_sustains_mixed_workload_with_cache_hits() {
         pool: 4,
         f32_every: 4,
         seed: 9,
+        ..LoadgenConfig::default()
     };
     let report = run_loadgen(&engine, &cfg);
     assert_eq!(report.completed, 160);

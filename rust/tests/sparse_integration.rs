@@ -243,6 +243,7 @@ fn serve_sparse_encode_end_to_end_matches_library() {
         min_fill: 1,
         max_wait_micros: 100,
         cache_capacity: 8,
+        ..ServeConfig::default()
     };
     let engine = Engine::start(&cfg).unwrap();
     let mut rng = Xoshiro256pp::seed_from_u64(515);

@@ -252,6 +252,7 @@ fn exported_checkpoint_serves_the_trained_model() {
             min_fill: 1,
             max_wait_micros: 50,
             cache_capacity: 0,
+            ..bilevel_sparse::config::ServeConfig::default()
         },
     )
     .unwrap();
