@@ -1,0 +1,324 @@
+//! Perf-regression comparison: a fresh bench run vs a committed
+//! `BENCH_*.json` snapshot — the engine behind `bilevel bench compare`
+//! and the CI `Perf regression gate`.
+//!
+//! A row **regresses** when the fresh kernel-side median exceeds
+//! `tolerance ×` the committed one *and* the committed number is at least
+//! `min_ms` (sub-`min_ms` rows are dominated by timer noise on shared CI
+//! runners, so they are compared but never gate). Rows present only in
+//! one side are skipped and counted, never failed: the committed
+//! snapshots are full-mode runs, a fresh `--quick` run covers a subset of
+//! their (name, shape) keys by construction.
+
+use crate::bench::kernels::KernelBenchReport;
+use crate::bench::sparse::SparseBenchReport;
+use crate::net::wire::Json;
+
+/// One (name, shape)-matched pair of committed vs fresh medians.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub name: String,
+    /// Human-readable shape key, e.g. `512x512` or `512x64 b8 @90%`.
+    pub shape: String,
+    pub committed_ms: f64,
+    pub fresh_ms: f64,
+    /// `fresh > tolerance × committed` with `committed >= min_ms`.
+    pub regressed: bool,
+}
+
+impl CompareRow {
+    /// `fresh / committed` (0 when the committed median is 0).
+    pub fn ratio(&self) -> f64 {
+        if self.committed_ms > 0.0 {
+            self.fresh_ms / self.committed_ms
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Outcome of one suite comparison.
+#[derive(Clone, Debug)]
+pub struct CompareReport {
+    /// `kernels` or `sparse`.
+    pub suite: &'static str,
+    pub tolerance: f64,
+    pub min_ms: f64,
+    pub rows: Vec<CompareRow>,
+    /// Fresh rows with no committed counterpart (ignored, reported).
+    pub skipped_fresh_only: usize,
+}
+
+impl CompareReport {
+    /// The rows that exceeded tolerance.
+    pub fn regressions(&self) -> Vec<&CompareRow> {
+        self.rows.iter().filter(|r| r.regressed).collect()
+    }
+
+    /// Terminal rendering of the comparison.
+    pub fn markdown(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| {
+                vec![
+                    r.name.clone(),
+                    r.shape.clone(),
+                    format!("{:.3}", r.committed_ms),
+                    format!("{:.3}", r.fresh_ms),
+                    format!("{:.2}x", r.ratio()),
+                    if r.regressed { "REGRESSED".into() } else { "ok".into() },
+                ]
+            })
+            .collect();
+        let mut s = crate::report::markdown_table(
+            &["bench", "shape", "committed ms", "fresh ms", "ratio", "verdict"],
+            &rows,
+        );
+        s.push_str(&format!(
+            "\nsuite: {} — {} rows compared, {} regression(s), tolerance {:.2}x, \
+             min gate {:.3} ms, {} fresh-only row(s) skipped\n",
+            self.suite,
+            self.rows.len(),
+            self.regressions().len(),
+            self.tolerance,
+            self.min_ms,
+            self.skipped_fresh_only
+        ));
+        s
+    }
+}
+
+fn committed_entries(committed_json: &str) -> Result<Vec<Json>, String> {
+    let doc = Json::parse(committed_json)?;
+    let entries = doc
+        .get("entries")
+        .and_then(|e| e.as_arr())
+        .ok_or_else(|| "committed snapshot has no \"entries\" array".to_string())?;
+    Ok(entries.to_vec())
+}
+
+fn gate(committed_ms: f64, fresh_ms: f64, tolerance: f64, min_ms: f64) -> bool {
+    committed_ms >= min_ms && fresh_ms > tolerance * committed_ms
+}
+
+/// Compare a fresh kernel bench run against a committed
+/// `BENCH_kernels.json`. Entries match on `(name, rows, cols)`; the gated
+/// quantity is `kernel_ms` (the production path — baselines drift with
+/// the baseline code, not the kernels).
+pub fn compare_kernels(
+    committed_json: &str,
+    fresh: &KernelBenchReport,
+    tolerance: f64,
+    min_ms: f64,
+) -> Result<CompareReport, String> {
+    let entries = committed_entries(committed_json)?;
+    let mut rows = Vec::new();
+    let mut skipped = 0usize;
+    for f in &fresh.entries {
+        let hit = entries.iter().find(|e| {
+            e.get("name").and_then(|v| v.as_str()) == Some(f.name.as_str())
+                && e.get("rows").and_then(|v| v.as_usize()) == Some(f.rows)
+                && e.get("cols").and_then(|v| v.as_usize()) == Some(f.cols)
+        });
+        let Some(hit) = hit else {
+            skipped += 1;
+            continue;
+        };
+        let committed_ms = hit
+            .get("kernel_ms")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("committed entry {} has no kernel_ms", f.name))?;
+        rows.push(CompareRow {
+            name: f.name.clone(),
+            shape: format!("{}x{}", f.rows, f.cols),
+            committed_ms,
+            fresh_ms: f.kernel_ms,
+            regressed: gate(committed_ms, f.kernel_ms, tolerance, min_ms),
+        });
+    }
+    if rows.is_empty() {
+        return Err("no comparable kernel rows between fresh run and committed snapshot".into());
+    }
+    Ok(CompareReport { suite: "kernels", tolerance, min_ms, rows, skipped_fresh_only: skipped })
+}
+
+/// Compare a fresh sparse bench run against a committed
+/// `BENCH_sparse.json`. Entries match on
+/// `(name, features, hidden, batch, sparsity_pct)`; the gated quantity is
+/// `compact_ms` (the production sparse path).
+pub fn compare_sparse(
+    committed_json: &str,
+    fresh: &SparseBenchReport,
+    tolerance: f64,
+    min_ms: f64,
+) -> Result<CompareReport, String> {
+    let entries = committed_entries(committed_json)?;
+    let mut rows = Vec::new();
+    let mut skipped = 0usize;
+    for f in &fresh.entries {
+        let hit = entries.iter().find(|e| {
+            e.get("name").and_then(|v| v.as_str()) == Some(f.name.as_str())
+                && e.get("features").and_then(|v| v.as_usize()) == Some(f.features)
+                && e.get("hidden").and_then(|v| v.as_usize()) == Some(f.hidden)
+                && e.get("batch").and_then(|v| v.as_usize()) == Some(f.batch)
+                && e.get("sparsity_pct").and_then(|v| v.as_usize()) == Some(f.sparsity_pct)
+        });
+        let Some(hit) = hit else {
+            skipped += 1;
+            continue;
+        };
+        let committed_ms = hit
+            .get("compact_ms")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("committed entry {} has no compact_ms", f.name))?;
+        rows.push(CompareRow {
+            name: f.name.clone(),
+            shape: format!("{}x{} b{} @{}%", f.features, f.hidden, f.batch, f.sparsity_pct),
+            committed_ms,
+            fresh_ms: f.compact_ms,
+            regressed: gate(committed_ms, f.compact_ms, tolerance, min_ms),
+        });
+    }
+    if rows.is_empty() {
+        return Err("no comparable sparse rows between fresh run and committed snapshot".into());
+    }
+    Ok(CompareReport { suite: "sparse", tolerance, min_ms, rows, skipped_fresh_only: skipped })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::kernels::KernelBenchEntry;
+    use crate::bench::machine_info;
+    use crate::bench::sparse::SparseBenchEntry;
+    use crate::projection::bilevel::ParallelPolicy;
+
+    fn kernel_report(entries: Vec<KernelBenchEntry>) -> KernelBenchReport {
+        let d = ParallelPolicy::default().min_elems;
+        KernelBenchReport {
+            quick: true,
+            machine: machine_info(),
+            entries,
+            crossover_elems: 0,
+            default_min_elems: d,
+            recommended_min_elems: d,
+            effective_min_elems: d,
+        }
+    }
+
+    fn kentry(name: &str, n: usize, kernel_ms: f64) -> KernelBenchEntry {
+        KernelBenchEntry {
+            name: name.into(),
+            rows: n,
+            cols: n,
+            baseline_ms: kernel_ms * 2.0,
+            kernel_ms,
+        }
+    }
+
+    const COMMITTED_KERNELS: &str = r#"{
+      "quick": false,
+      "crossover_elems": 9216,
+      "default_min_elems": 8192,
+      "entries": [
+        {"name": "bp1inf/seq", "rows": 128, "cols": 128, "baseline_ms": 0.1, "kernel_ms": 0.05, "speedup": 2.0},
+        {"name": "bp1inf/seq", "rows": 256, "cols": 256, "baseline_ms": 0.4, "kernel_ms": 0.2, "speedup": 2.0},
+        {"name": "kernel/colmax", "rows": 65536, "cols": 1, "baseline_ms": 0.06, "kernel_ms": 0.015, "speedup": 4.0}
+      ]
+    }"#;
+
+    #[test]
+    fn within_tolerance_passes() {
+        let fresh =
+            kernel_report(vec![kentry("bp1inf/seq", 128, 0.08), kentry("bp1inf/seq", 256, 0.3)]);
+        let rep = compare_kernels(COMMITTED_KERNELS, &fresh, 2.0, 0.02).unwrap();
+        assert_eq!(rep.rows.len(), 2);
+        assert!(rep.regressions().is_empty(), "{}", rep.markdown());
+    }
+
+    #[test]
+    fn beyond_tolerance_regresses() {
+        let fresh = kernel_report(vec![kentry("bp1inf/seq", 128, 0.2)]);
+        let rep = compare_kernels(COMMITTED_KERNELS, &fresh, 2.0, 0.02).unwrap();
+        assert_eq!(rep.regressions().len(), 1);
+        assert!(rep.markdown().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn sub_min_ms_rows_never_gate() {
+        // Committed colmax is 0.015 ms < min_ms 0.02 — even a 10x-slower
+        // fresh run is noise-exempt.
+        let fresh = kernel_report(vec![
+            kentry("bp1inf/seq", 128, 0.05),
+            kentry("kernel/colmax", 65536, 0.15),
+        ]);
+        let rep = compare_kernels(COMMITTED_KERNELS, &fresh, 2.0, 0.02).unwrap();
+        assert_eq!(rep.rows.len(), 2);
+        assert!(rep.regressions().is_empty());
+    }
+
+    #[test]
+    fn fresh_only_rows_are_skipped_not_failed() {
+        let fresh = kernel_report(vec![
+            kentry("bp1inf/seq", 128, 0.05),
+            kentry("crossover/probe", 32, 0.001),
+        ]);
+        let rep = compare_kernels(COMMITTED_KERNELS, &fresh, 2.0, 0.02).unwrap();
+        assert_eq!(rep.rows.len(), 1);
+        assert_eq!(rep.skipped_fresh_only, 1);
+    }
+
+    #[test]
+    fn zero_overlap_is_an_error() {
+        let fresh = kernel_report(vec![kentry("bp1inf/seq", 999, 0.05)]);
+        assert!(compare_kernels(COMMITTED_KERNELS, &fresh, 2.0, 0.02).is_err());
+    }
+
+    #[test]
+    fn malformed_committed_json_is_an_error() {
+        let fresh = kernel_report(vec![kentry("bp1inf/seq", 128, 0.05)]);
+        assert!(compare_kernels("{\"quick\": true}", &fresh, 2.0, 0.02).is_err());
+        assert!(compare_kernels("not json", &fresh, 2.0, 0.02).is_err());
+    }
+
+    #[test]
+    fn sparse_compare_matches_on_full_shape_key() {
+        let committed = r#"{
+          "entries": [
+            {"name": "encode/f32", "features": 512, "hidden": 64, "batch": 8,
+             "sparsity_pct": 90, "alive": 52, "dense_ms": 0.056, "compact_ms": 0.008,
+             "speedup": 7.0, "bit_identical": true}
+          ]
+        }"#;
+        let entry = |sparsity: usize, compact_ms: f64| SparseBenchEntry {
+            name: "encode/f32".into(),
+            features: 512,
+            hidden: 64,
+            batch: 8,
+            sparsity_pct: sparsity,
+            alive: 52,
+            dense_ms: 0.06,
+            compact_ms,
+            bit_identical: true,
+        };
+        let fresh = SparseBenchReport {
+            quick: true,
+            machine: machine_info(),
+            entries: vec![entry(90, 0.012), entry(95, 0.004)],
+        };
+        let rep = compare_sparse(committed, &fresh, 2.0, 0.002).unwrap();
+        // 95% row has no committed counterpart; 90% row is within 2x.
+        assert_eq!(rep.rows.len(), 1);
+        assert_eq!(rep.skipped_fresh_only, 1);
+        assert!(rep.regressions().is_empty());
+
+        let slow = SparseBenchReport {
+            quick: true,
+            machine: machine_info(),
+            entries: vec![entry(90, 0.05)],
+        };
+        let rep = compare_sparse(committed, &slow, 2.0, 0.002).unwrap();
+        assert_eq!(rep.regressions().len(), 1);
+    }
+}

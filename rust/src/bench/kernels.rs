@@ -10,7 +10,7 @@
 //! serialize to `BENCH_kernels.json` (repo root) so the perf trajectory is
 //! tracked across PRs — see EXPERIMENTS.md §Perf for how to regenerate.
 
-use crate::bench::{black_box, time_fn, BenchConfig};
+use crate::bench::{black_box, machine_info, time_fn, BenchConfig, MachineInfo};
 use crate::kernels;
 use crate::projection::bilevel::{
     bilevel_l1inf_parallel, bilevel_l1inf_with, BilevelResult, ParallelPolicy,
@@ -80,7 +80,9 @@ impl KernelBenchEntry {
 #[derive(Clone, Debug)]
 pub struct KernelBenchReport {
     pub quick: bool,
-    pub hardware_threads: usize,
+    /// What produced these numbers: CPU model, arch/OS, dispatched ISA,
+    /// hardware threads. Stamped into `BENCH_kernels.json`.
+    pub machine: MachineInfo,
     pub entries: Vec<KernelBenchEntry>,
     /// Smallest probed element count where the pool-parallel path beat the
     /// sequential kernel path (the measured `min_elems` candidate); 0 if
@@ -88,6 +90,13 @@ pub struct KernelBenchReport {
     pub crossover_elems: usize,
     /// The `ParallelPolicy::min_elems` default compiled into the library.
     pub default_min_elems: usize,
+    /// The autotune verdict: [`crossover_elems`](Self::crossover_elems)
+    /// when the pool won somewhere, else the library default. Export it as
+    /// `BILEVEL_MIN_ELEMS` to apply without a recompile.
+    pub recommended_min_elems: usize,
+    /// What `ParallelPolicy::from_env_or_default()` resolves to in this
+    /// process (the library default unless `BILEVEL_MIN_ELEMS` overrides).
+    pub effective_min_elems: usize,
 }
 
 impl KernelBenchReport {
@@ -97,9 +106,11 @@ impl KernelBenchReport {
         let mut s = String::new();
         s.push_str("{\n");
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
-        s.push_str(&format!("  \"hardware_threads\": {},\n", self.hardware_threads));
+        s.push_str(&format!("  \"machine\": {},\n", self.machine.to_json()));
         s.push_str(&format!("  \"crossover_elems\": {},\n", self.crossover_elems));
         s.push_str(&format!("  \"default_min_elems\": {},\n", self.default_min_elems));
+        s.push_str(&format!("  \"recommended_min_elems\": {},\n", self.recommended_min_elems));
+        s.push_str(&format!("  \"effective_min_elems\": {},\n", self.effective_min_elems));
         s.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
             s.push_str(&format!(
@@ -138,8 +149,20 @@ impl KernelBenchReport {
             &rows,
         );
         s.push_str(&format!(
-            "\ncrossover: pool wins from {} elements (library default min_elems = {})\n",
+            "\nmachine: {} ({}/{}, {} threads), kernel isa: {}\n",
+            self.machine.cpu_model,
+            self.machine.arch,
+            self.machine.os,
+            self.machine.hardware_threads,
+            self.machine.isa
+        ));
+        s.push_str(&format!(
+            "crossover: pool wins from {} elements (library default min_elems = {})\n",
             self.crossover_elems, self.default_min_elems
+        ));
+        s.push_str(&format!(
+            "autotune: recommended min_elems = {} (effective in this process: {})\n",
+            self.recommended_min_elems, self.effective_min_elems
         ));
         s
     }
@@ -185,11 +208,66 @@ pub fn bp1inf_entries(cfg: &BenchConfig, sizes: &[usize]) -> Vec<KernelBenchEntr
     entries
 }
 
+/// Result of the sequential/parallel crossover autotune pass.
+#[derive(Clone, Debug)]
+pub struct Autotune {
+    /// One `crossover/probe` row per probed square size (`baseline_ms` =
+    /// sequential kernel path, `kernel_ms` = pool path forced on).
+    pub entries: Vec<KernelBenchEntry>,
+    /// Smallest probed element count where the pool won; 0 if it never
+    /// did.
+    pub crossover_elems: usize,
+    /// The `min_elems` this machine should run with: the measured
+    /// crossover when the pool won somewhere, else the library default
+    /// (no evidence the default is wrong).
+    pub recommended_min_elems: usize,
+}
+
+/// Measure the sequential/parallel crossover over `probe` square sizes
+/// and derive a recommended `ParallelPolicy::min_elems`. The pool path is
+/// forced on (`min_elems: 0`) so each probe is a genuine seq-vs-pool race
+/// at that size.
+pub fn autotune(cfg: &BenchConfig, probe: &[usize]) -> Autotune {
+    let mut entries = Vec::new();
+    let mut crossover_elems = 0usize;
+    for &n in probe {
+        let mut rng = Xoshiro256pp::seed_from_u64(7000 + n as u64);
+        let y = Matrix::<f64>::randn(n, n, &mut rng);
+        let seq =
+            time_fn(cfg, || black_box(bilevel_l1inf_with(&y, 1.0, L1Algorithm::Condat)));
+        let par = time_fn(cfg, || {
+            black_box(bilevel_l1inf_parallel(
+                &y,
+                1.0,
+                L1Algorithm::Condat,
+                ParallelPolicy { threads: 0, min_elems: 0 },
+            ))
+        });
+        entries.push(KernelBenchEntry {
+            name: "crossover/probe".into(),
+            rows: n,
+            cols: n,
+            baseline_ms: seq.median * 1e3,
+            kernel_ms: par.median * 1e3,
+        });
+        if crossover_elems == 0 && par.median < seq.median {
+            crossover_elems = n * n;
+        }
+    }
+    let recommended_min_elems = if crossover_elems > 0 {
+        crossover_elems
+    } else {
+        ParallelPolicy::default().min_elems
+    };
+    Autotune { entries, crossover_elems, recommended_min_elems }
+}
+
 /// Run the full kernel benchmark suite. `quick` shrinks sizes and timing
 /// budgets for CI-sized runs.
 pub fn run(quick: bool) -> KernelBenchReport {
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
-    let sizes: &[usize] = if quick { &[128, 256, 512] } else { &[256, 512, 1024, 2048] };
+    let sizes: &[usize] =
+        if quick { &[128, 256, 512] } else { &[128, 256, 512, 1024, 2048] };
 
     // ---- end-to-end BP¹,∞: seed scalar vs kernel, sequential vs pool ----
     let mut entries = bp1inf_entries(&cfg, sizes);
@@ -256,40 +334,19 @@ pub fn run(quick: bool) -> KernelBenchReport {
         kernel_ms: kern.median * 1e3,
     });
 
-    // ---- sequential/parallel crossover probe ---------------------------
+    // ---- sequential/parallel crossover autotune ------------------------
     let probe: &[usize] = if quick { &[32, 64, 96, 128] } else { &[32, 48, 64, 96, 128, 192, 256] };
-    let mut crossover_elems = 0usize;
-    for &n in probe {
-        let mut rng = Xoshiro256pp::seed_from_u64(7000 + n as u64);
-        let y = Matrix::<f64>::randn(n, n, &mut rng);
-        let seq =
-            time_fn(&cfg, || black_box(bilevel_l1inf_with(&y, 1.0, L1Algorithm::Condat)));
-        let par = time_fn(&cfg, || {
-            black_box(bilevel_l1inf_parallel(
-                &y,
-                1.0,
-                L1Algorithm::Condat,
-                ParallelPolicy { threads: 0, min_elems: 0 },
-            ))
-        });
-        entries.push(KernelBenchEntry {
-            name: "crossover/probe".into(),
-            rows: n,
-            cols: n,
-            baseline_ms: seq.median * 1e3,
-            kernel_ms: par.median * 1e3,
-        });
-        if crossover_elems == 0 && par.median < seq.median {
-            crossover_elems = n * n;
-        }
-    }
+    let tune = autotune(&cfg, probe);
+    entries.extend(tune.entries);
 
     KernelBenchReport {
         quick,
-        hardware_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        machine: machine_info(),
         entries,
-        crossover_elems,
+        crossover_elems: tune.crossover_elems,
         default_min_elems: ParallelPolicy::default().min_elems,
+        recommended_min_elems: tune.recommended_min_elems,
+        effective_min_elems: ParallelPolicy::from_env_or_default().min_elems,
     }
 }
 
@@ -311,9 +368,13 @@ mod tests {
 
     #[test]
     fn report_serializes_to_valid_shape() {
+        // The default comes from the policy, not a hardcoded copy of it —
+        // a hardcoded 8192 here would keep passing-while-wrong the moment
+        // autotuning moves `ParallelPolicy::default().min_elems`.
+        let default_min = ParallelPolicy::default().min_elems;
         let report = KernelBenchReport {
             quick: true,
-            hardware_threads: 4,
+            machine: crate::bench::machine_info(),
             entries: vec![KernelBenchEntry {
                 name: "bp1inf/seq".into(),
                 rows: 8,
@@ -322,14 +383,44 @@ mod tests {
                 kernel_ms: 1.0,
             }],
             crossover_elems: 4096,
-            default_min_elems: 8192,
+            default_min_elems: default_min,
+            recommended_min_elems: 4096,
+            effective_min_elems: default_min,
         };
         let json = report.to_json();
         assert!(json.contains("\"speedup\": 2.000"));
         assert!(json.contains("\"crossover_elems\": 4096"));
+        assert!(json.contains(&format!("\"default_min_elems\": {default_min}")));
+        assert!(json.contains("\"recommended_min_elems\": 4096"));
+        assert!(json.contains("\"machine\": {\"cpu_model\""));
         assert!(json.trim_end().ends_with('}'));
         let md = report.markdown();
         assert!(md.contains("bp1inf/seq"));
         assert!(md.contains("2.00x"));
+        assert!(md.contains(&format!("library default min_elems = {default_min}")));
+        assert!(md.contains("recommended min_elems = 4096"));
+        assert!(md.contains(crate::kernels::active_isa().name()));
+    }
+
+    #[test]
+    fn autotune_probes_every_size_and_recommends_a_positive_min_elems() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target_time: std::time::Duration::from_millis(1),
+        };
+        let tune = autotune(&cfg, &[8, 16]);
+        assert_eq!(tune.entries.len(), 2);
+        assert!(tune.entries.iter().all(|e| e.name == "crossover/probe"));
+        // Either a measured crossover (some probed n*n) or the library
+        // default — never zero.
+        assert!(tune.recommended_min_elems > 0);
+        if tune.crossover_elems > 0 {
+            assert_eq!(tune.recommended_min_elems, tune.crossover_elems);
+            assert!([64, 256].contains(&tune.crossover_elems));
+        } else {
+            assert_eq!(tune.recommended_min_elems, ParallelPolicy::default().min_elems);
+        }
     }
 }

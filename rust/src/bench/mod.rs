@@ -3,10 +3,65 @@
 //! plus the least-squares growth-rate fits the paper's Fig. 1 uses
 //! (linear for `BP¹,∞`, `n log n` for the exact projection).
 
+pub mod compare;
 pub mod kernels;
 pub mod sparse;
 
 use std::time::{Duration, Instant};
+
+/// Machine metadata stamped into every committed `BENCH_*.json` snapshot
+/// so a perf number is never read without knowing what produced it.
+#[derive(Clone, Debug)]
+pub struct MachineInfo {
+    /// CPU model string (`/proc/cpuinfo` on Linux, `"unknown"` elsewhere).
+    pub cpu_model: String,
+    /// `std::env::consts::ARCH` of the bench binary.
+    pub arch: &'static str,
+    /// `std::env::consts::OS` of the bench binary.
+    pub os: &'static str,
+    /// The kernel ISA the dispatcher selected for this process
+    /// (`portable` / `avx2` / `neon`) — see [`crate::kernels::active_isa`].
+    pub isa: &'static str,
+    /// `std::thread::available_parallelism()`.
+    pub hardware_threads: usize,
+}
+
+impl MachineInfo {
+    /// Render as a JSON object (the `"machine"` block of the reports).
+    pub fn to_json(&self) -> String {
+        format!(
+            "{{\"cpu_model\": {:?}, \"arch\": {:?}, \"os\": {:?}, \"isa\": {:?}, \"hardware_threads\": {}}}",
+            self.cpu_model, self.arch, self.os, self.isa, self.hardware_threads
+        )
+    }
+}
+
+/// Probe the machine the bench is running on.
+pub fn machine_info() -> MachineInfo {
+    MachineInfo {
+        cpu_model: cpu_model(),
+        arch: std::env::consts::ARCH,
+        os: std::env::consts::OS,
+        isa: crate::kernels::active_isa().name(),
+        hardware_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+fn cpu_model() -> String {
+    #[cfg(target_os = "linux")]
+    {
+        if let Ok(info) = std::fs::read_to_string("/proc/cpuinfo") {
+            for line in info.lines() {
+                if let Some(rest) = line.strip_prefix("model name") {
+                    if let Some((_, model)) = rest.split_once(':') {
+                        return model.trim().to_string();
+                    }
+                }
+            }
+        }
+    }
+    "unknown".to_string()
+}
 
 /// Timing statistics over repeated runs (seconds).
 #[derive(Clone, Debug)]
@@ -184,6 +239,18 @@ mod tests {
         let (_, _, r2_lin) = fit_linear(&xs, &ys);
         let (_, _, r2_nlogn) = fit_nlogn(&xs, &ys);
         assert!(r2_lin >= r2_nlogn);
+    }
+
+    #[test]
+    fn machine_info_is_populated_and_renders() {
+        let m = machine_info();
+        assert!(!m.cpu_model.is_empty());
+        assert!(m.hardware_threads >= 1);
+        assert_eq!(m.isa, crate::kernels::active_isa().name());
+        let json = m.to_json();
+        assert!(json.contains("\"cpu_model\""));
+        assert!(json.contains("\"isa\""));
+        assert!(json.contains(m.isa));
     }
 
     #[test]

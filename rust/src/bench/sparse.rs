@@ -9,7 +9,7 @@
 //! serialize to `BENCH_sparse.json` (repo root) so the dense-vs-compact
 //! crossover is tracked across PRs — see EXPERIMENTS.md §Sparse inference.
 
-use crate::bench::{black_box, time_fn, BenchConfig};
+use crate::bench::{black_box, machine_info, time_fn, BenchConfig, MachineInfo};
 use crate::rng::{Rng, Xoshiro256pp};
 use crate::scalar::Scalar;
 use crate::sparse::{linalg, CompactPlan};
@@ -49,6 +49,9 @@ impl SparseBenchEntry {
 #[derive(Clone, Debug)]
 pub struct SparseBenchReport {
     pub quick: bool,
+    /// What produced these numbers — see [`MachineInfo`]. Stamped into
+    /// `BENCH_sparse.json`.
+    pub machine: MachineInfo,
     pub entries: Vec<SparseBenchEntry>,
 }
 
@@ -64,6 +67,7 @@ impl SparseBenchReport {
         let mut s = String::new();
         s.push_str("{\n");
         s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"machine\": {},\n", self.machine.to_json()));
         s.push_str(&format!("  \"all_bit_identical\": {},\n", self.all_bit_identical()));
         s.push_str("  \"entries\": [\n");
         for (i, e) in self.entries.iter().enumerate() {
@@ -197,10 +201,13 @@ fn encode_entry<T: Scalar>(
 /// and timing budgets for CI-sized runs.
 pub fn run(quick: bool) -> SparseBenchReport {
     let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    // The quick shape is also the first full shape so `bench compare` has
+    // overlapping (name, shape, sparsity) keys between a committed full
+    // snapshot and a fresh quick run.
     let shapes: &[(usize, usize, usize)] = if quick {
         &[(512, 64, 8)]
     } else {
-        &[(2048, 128, 32), (8192, 256, 32)]
+        &[(512, 64, 8), (2048, 128, 32), (8192, 256, 32)]
     };
     let mut entries = Vec::new();
     for &(features, hidden, batch) in shapes {
@@ -214,7 +221,7 @@ pub fn run(quick: bool) -> SparseBenchReport {
             ));
         }
     }
-    SparseBenchReport { quick, entries }
+    SparseBenchReport { quick, machine: machine_info(), entries }
 }
 
 #[cfg(test)]
@@ -237,6 +244,7 @@ mod tests {
     fn report_serializes_and_renders() {
         let report = SparseBenchReport {
             quick: true,
+            machine: machine_info(),
             entries: vec![SparseBenchEntry {
                 name: "encode/f32".into(),
                 features: 512,
@@ -253,6 +261,7 @@ mod tests {
         let json = report.to_json();
         assert!(json.contains("\"speedup\": 4.000"));
         assert!(json.contains("\"all_bit_identical\": true"));
+        assert!(json.contains("\"machine\": {\"cpu_model\""));
         assert!(json.trim_end().ends_with('}'));
         let md = report.markdown();
         assert!(md.contains("encode/f32"));

@@ -110,6 +110,14 @@ COMMANDS:
                encode across sparsity levels (f32/f64), verifies bitwise
                agreement, and records BENCH_sparse.json
                bilevel bench sparse [--quick] [--out BENCH_sparse.json]
+               `bench compare` is the perf-regression gate: a fresh quick
+               run diffed against the committed snapshots; exits nonzero
+               when any overlapping row regresses beyond the tolerance
+               bilevel bench compare [--tolerance 2.0] [--min-ms 0.02]
+               [--kernels BENCH_kernels.json] [--sparse BENCH_sparse.json]
+               env: BILEVEL_FORCE_SCALAR=1 pins the portable kernel path
+               (no AVX2/NEON dispatch); BILEVEL_MIN_ELEMS=N overrides the
+               pool-vs-sequential crossover threshold
   sparsify     project a synthetic SAE's W1 with BP1,inf, derive the
                support plan, compact the model, verify sparse encode ==
                dense encode bitwise, and time both (no artifacts needed)

@@ -1,0 +1,525 @@
+//! Explicit AVX2 kernels (`core::arch::x86_64`, stable Rust).
+//!
+//! Each kernel is an `unsafe fn` annotated `#[target_feature(enable =
+//! "avx2")]` plus a safe public wrapper that asserts runtime support; the
+//! dispatch table points at the wrappers, and only after
+//! `is_x86_feature_detected!("avx2")` succeeded, so the assertion is a
+//! cached atomic load in practice.
+//!
+//! Bit-identity contract with the portable/reference kernels (see the
+//! [`crate::kernels`] module docs for the full statement):
+//!
+//! * `colmax` — exact: `max` over non-negative magnitudes is
+//!   order-independent, and `vmaxpd` ties return identical bits.
+//! * `sum_abs` / `sumsq` — exact: the two 4-lane (`f64`) or one 8-lane
+//!   (`f32`) accumulators reproduce the portable lane decomposition
+//!   (element `i` → accumulator `i % LANES`) add-for-add, and finish with
+//!   the same [`combine8`](super::combine8) tree.
+//! * `scale` / `axpy` — exact: same IEEE multiply/add per element, no FMA
+//!   contraction (`vmulpd` + `vaddpd`, never `vfmadd`).
+//! * `clip` / `soft-threshold` — exact except the **sign of a zero output
+//!   when the threshold is exactly 0**: `vmaxpd`/`vminpd` resolve `±0.0`
+//!   ties to the second operand, so clipping at `c == 0` yields `+0.0`
+//!   for every element, while the scalar `f64::max`/`min` lowering leaves
+//!   that sign unspecified. Magnitudes always agree; thresholds > 0 are
+//!   bit-exact.
+//!
+//! Remainders (`len % width`) are handled by copying the tail into a
+//! stack pad, running the same packed instruction, and writing back only
+//! the valid lanes — so tail elements see *vector* semantics, not a
+//! second scalar code path, and the per-kernel semantics are uniform over
+//! the whole slice. Zero padding is exact for the reductions because
+//! their accumulator lanes are never `-0.0` (they start at `+0.0` and
+//! only ever add non-negative terms, and `x + 0.0 == x` bitwise for every
+//! `x` except `-0.0`).
+
+use core::arch::x86_64::*;
+
+use super::dispatch::{Isa, KernelOps};
+use super::{combine8, LANES};
+
+#[inline]
+fn have_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+macro_rules! assert_avx2 {
+    () => {
+        assert!(have_avx2(), "AVX2 kernel called on a CPU without AVX2");
+    };
+}
+
+/// The dispatch table for this ISA (see [`super::dispatch`]).
+pub static OPS: KernelOps = KernelOps {
+    isa: Isa::Avx2,
+    colmax_f32,
+    colmax_f64,
+    sum_abs_f32,
+    sum_abs_f64,
+    sumsq_f32,
+    sumsq_f64,
+    clip_into_f32,
+    clip_into_f64,
+    clip_inplace_f32,
+    clip_inplace_f64,
+    soft_threshold_f32,
+    soft_threshold_f64,
+    scale_f32,
+    scale_f64,
+    axpy_f32,
+    axpy_f64,
+};
+
+// ------------------------------------------------------------------- f64
+
+#[target_feature(enable = "avx2")]
+unsafe fn colmax_f64_imp(xs: &[f64]) -> f64 {
+    let sign = _mm256_set1_pd(-0.0);
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        acc0 = _mm256_max_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr())));
+        acc1 = _mm256_max_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr().add(4))));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut pad = [0.0f64; LANES];
+        pad[..rem.len()].copy_from_slice(rem);
+        acc0 = _mm256_max_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr())));
+        acc1 = _mm256_max_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr().add(4))));
+    }
+    let mut lanes = [0.0f64; LANES];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    lanes.iter().fold(0.0f64, |m, &x| m.max(x))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_abs_f64_imp(xs: &[f64]) -> f64 {
+    let sign = _mm256_set1_pd(-0.0);
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr())));
+        acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr().add(4))));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut pad = [0.0f64; LANES];
+        pad[..rem.len()].copy_from_slice(rem);
+        acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr())));
+        acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr().add(4))));
+    }
+    let mut lanes = [0.0f64; LANES];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    combine8(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sumsq_f64_imp(xs: &[f64]) -> f64 {
+    let mut acc0 = _mm256_setzero_pd();
+    let mut acc1 = _mm256_setzero_pd();
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        let a = _mm256_loadu_pd(ch.as_ptr());
+        let b = _mm256_loadu_pd(ch.as_ptr().add(4));
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(a, a));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(b, b));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut pad = [0.0f64; LANES];
+        pad[..rem.len()].copy_from_slice(rem);
+        let a = _mm256_loadu_pd(pad.as_ptr());
+        let b = _mm256_loadu_pd(pad.as_ptr().add(4));
+        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(a, a));
+        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(b, b));
+    }
+    let mut lanes = [0.0f64; LANES];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+    combine8(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn clip_into_f64_imp(src: &[f64], c: f64, dst: &mut [f64]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let lo = _mm256_set1_pd(-c);
+    let hi = _mm256_set1_pd(c);
+    let n = src.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x = _mm256_loadu_pd(src.as_ptr().add(i));
+        _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+        i += 4;
+    }
+    if i < n {
+        let mut pad = [0.0f64; 4];
+        pad[..n - i].copy_from_slice(&src[i..]);
+        let x = _mm256_loadu_pd(pad.as_ptr());
+        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+        dst[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn clip_inplace_f64_imp(xs: &mut [f64], c: f64) {
+    let lo = _mm256_set1_pd(-c);
+    let hi = _mm256_set1_pd(c);
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x = _mm256_loadu_pd(xs.as_ptr().add(i));
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+        i += 4;
+    }
+    if i < n {
+        let mut pad = [0.0f64; 4];
+        pad[..n - i].copy_from_slice(&xs[i..]);
+        let x = _mm256_loadu_pd(pad.as_ptr());
+        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+        xs[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn soft_threshold_f64_imp(xs: &mut [f64], tau: f64) {
+    let t = _mm256_set1_pd(tau);
+    let z = _mm256_setzero_pd();
+    let sign = _mm256_set1_pd(-0.0);
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x = _mm256_loadu_pd(xs.as_ptr().add(i));
+        let a = _mm256_max_pd(_mm256_sub_pd(x, t), z);
+        let b = _mm256_max_pd(_mm256_sub_pd(_mm256_xor_pd(x, sign), t), z);
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_sub_pd(a, b));
+        i += 4;
+    }
+    if i < n {
+        let mut pad = [0.0f64; 4];
+        pad[..n - i].copy_from_slice(&xs[i..]);
+        let x = _mm256_loadu_pd(pad.as_ptr());
+        let a = _mm256_max_pd(_mm256_sub_pd(x, t), z);
+        let b = _mm256_max_pd(_mm256_sub_pd(_mm256_xor_pd(x, sign), t), z);
+        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_sub_pd(a, b));
+        xs[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_f64_imp(xs: &mut [f64], s: f64) {
+    let sv = _mm256_set1_pd(s);
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let x = _mm256_loadu_pd(xs.as_ptr().add(i));
+        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_mul_pd(x, sv));
+        i += 4;
+    }
+    if i < n {
+        let mut pad = [0.0f64; 4];
+        pad[..n - i].copy_from_slice(&xs[i..]);
+        let x = _mm256_loadu_pd(pad.as_ptr());
+        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_mul_pd(x, sv));
+        xs[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f64_imp(acc: &mut [f64], a: f64, row: &[f64]) {
+    debug_assert_eq!(acc.len(), row.len());
+    let av = _mm256_set1_pd(a);
+    let n = acc.len();
+    let mut i = 0usize;
+    while i + 4 <= n {
+        let d = _mm256_loadu_pd(acc.as_ptr().add(i));
+        let r = _mm256_loadu_pd(row.as_ptr().add(i));
+        _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_add_pd(d, _mm256_mul_pd(av, r)));
+        i += 4;
+    }
+    if i < n {
+        let mut pad_d = [0.0f64; 4];
+        let mut pad_r = [0.0f64; 4];
+        pad_d[..n - i].copy_from_slice(&acc[i..]);
+        pad_r[..n - i].copy_from_slice(&row[i..]);
+        let d = _mm256_loadu_pd(pad_d.as_ptr());
+        let r = _mm256_loadu_pd(pad_r.as_ptr());
+        _mm256_storeu_pd(pad_d.as_mut_ptr(), _mm256_add_pd(d, _mm256_mul_pd(av, r)));
+        acc[i..].copy_from_slice(&pad_d[..n - i]);
+    }
+}
+
+// ------------------------------------------------------------------- f32
+
+#[target_feature(enable = "avx2")]
+unsafe fn colmax_f32_imp(xs: &[f32]) -> f32 {
+    let sign = _mm256_set1_ps(-0.0);
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(ch.as_ptr())));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut pad = [0.0f32; LANES];
+        pad[..rem.len()].copy_from_slice(rem);
+        acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(pad.as_ptr())));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    lanes.iter().fold(0.0f32, |m, &x| m.max(x))
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sum_abs_f32_imp(xs: &[f32]) -> f32 {
+    let sign = _mm256_set1_ps(-0.0);
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(ch.as_ptr())));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut pad = [0.0f32; LANES];
+        pad[..rem.len()].copy_from_slice(rem);
+        acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(pad.as_ptr())));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    combine8(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn sumsq_f32_imp(xs: &[f32]) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut chunks = xs.chunks_exact(LANES);
+    for ch in chunks.by_ref() {
+        let a = _mm256_loadu_ps(ch.as_ptr());
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, a));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let mut pad = [0.0f32; LANES];
+        pad[..rem.len()].copy_from_slice(rem);
+        let a = _mm256_loadu_ps(pad.as_ptr());
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, a));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    combine8(&lanes)
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn clip_into_f32_imp(src: &[f32], c: f32, dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    let lo = _mm256_set1_ps(-c);
+    let hi = _mm256_set1_ps(c);
+    let n = src.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(src.as_ptr().add(i));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+        i += 8;
+    }
+    if i < n {
+        let mut pad = [0.0f32; 8];
+        pad[..n - i].copy_from_slice(&src[i..]);
+        let x = _mm256_loadu_ps(pad.as_ptr());
+        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+        dst[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn clip_inplace_f32_imp(xs: &mut [f32], c: f32) {
+    let lo = _mm256_set1_ps(-c);
+    let hi = _mm256_set1_ps(c);
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+        _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+        i += 8;
+    }
+    if i < n {
+        let mut pad = [0.0f32; 8];
+        pad[..n - i].copy_from_slice(&xs[i..]);
+        let x = _mm256_loadu_ps(pad.as_ptr());
+        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+        xs[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn soft_threshold_f32_imp(xs: &mut [f32], tau: f32) {
+    let t = _mm256_set1_ps(tau);
+    let z = _mm256_setzero_ps();
+    let sign = _mm256_set1_ps(-0.0);
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+        let a = _mm256_max_ps(_mm256_sub_ps(x, t), z);
+        let b = _mm256_max_ps(_mm256_sub_ps(_mm256_xor_ps(x, sign), t), z);
+        _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_sub_ps(a, b));
+        i += 8;
+    }
+    if i < n {
+        let mut pad = [0.0f32; 8];
+        pad[..n - i].copy_from_slice(&xs[i..]);
+        let x = _mm256_loadu_ps(pad.as_ptr());
+        let a = _mm256_max_ps(_mm256_sub_ps(x, t), z);
+        let b = _mm256_max_ps(_mm256_sub_ps(_mm256_xor_ps(x, sign), t), z);
+        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_sub_ps(a, b));
+        xs[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn scale_f32_imp(xs: &mut [f32], s: f32) {
+    let sv = _mm256_set1_ps(s);
+    let n = xs.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+        _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_mul_ps(x, sv));
+        i += 8;
+    }
+    if i < n {
+        let mut pad = [0.0f32; 8];
+        pad[..n - i].copy_from_slice(&xs[i..]);
+        let x = _mm256_loadu_ps(pad.as_ptr());
+        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_mul_ps(x, sv));
+        xs[i..].copy_from_slice(&pad[..n - i]);
+    }
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_f32_imp(acc: &mut [f32], a: f32, row: &[f32]) {
+    debug_assert_eq!(acc.len(), row.len());
+    let av = _mm256_set1_ps(a);
+    let n = acc.len();
+    let mut i = 0usize;
+    while i + 8 <= n {
+        let d = _mm256_loadu_ps(acc.as_ptr().add(i));
+        let r = _mm256_loadu_ps(row.as_ptr().add(i));
+        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(av, r)));
+        i += 8;
+    }
+    if i < n {
+        let mut pad_d = [0.0f32; 8];
+        let mut pad_r = [0.0f32; 8];
+        pad_d[..n - i].copy_from_slice(&acc[i..]);
+        pad_r[..n - i].copy_from_slice(&row[i..]);
+        let d = _mm256_loadu_ps(pad_d.as_ptr());
+        let r = _mm256_loadu_ps(pad_r.as_ptr());
+        _mm256_storeu_ps(pad_d.as_mut_ptr(), _mm256_add_ps(d, _mm256_mul_ps(av, r)));
+        acc[i..].copy_from_slice(&pad_d[..n - i]);
+    }
+}
+
+// ------------------------------------------------- safe public wrappers
+
+/// Safe entry: `max_i |x_i|` with AVX2 (panics without AVX2 support).
+pub fn colmax_f64(xs: &[f64]) -> f64 {
+    assert_avx2!();
+    unsafe { colmax_f64_imp(xs) }
+}
+
+/// Safe entry: `max_i |x_i|` with AVX2 (panics without AVX2 support).
+pub fn colmax_f32(xs: &[f32]) -> f32 {
+    assert_avx2!();
+    unsafe { colmax_f32_imp(xs) }
+}
+
+/// Safe entry: lane-decomposed `Σ|x_i|` with AVX2.
+pub fn sum_abs_f64(xs: &[f64]) -> f64 {
+    assert_avx2!();
+    unsafe { sum_abs_f64_imp(xs) }
+}
+
+/// Safe entry: lane-decomposed `Σ|x_i|` with AVX2.
+pub fn sum_abs_f32(xs: &[f32]) -> f32 {
+    assert_avx2!();
+    unsafe { sum_abs_f32_imp(xs) }
+}
+
+/// Safe entry: lane-decomposed `Σx_i²` with AVX2.
+pub fn sumsq_f64(xs: &[f64]) -> f64 {
+    assert_avx2!();
+    unsafe { sumsq_f64_imp(xs) }
+}
+
+/// Safe entry: lane-decomposed `Σx_i²` with AVX2.
+pub fn sumsq_f32(xs: &[f32]) -> f32 {
+    assert_avx2!();
+    unsafe { sumsq_f32_imp(xs) }
+}
+
+/// Safe entry: `dst = clamp(src, -c, c)` with AVX2.
+pub fn clip_into_f64(src: &[f64], c: f64, dst: &mut [f64]) {
+    assert_avx2!();
+    assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    unsafe { clip_into_f64_imp(src, c, dst) }
+}
+
+/// Safe entry: `dst = clamp(src, -c, c)` with AVX2.
+pub fn clip_into_f32(src: &[f32], c: f32, dst: &mut [f32]) {
+    assert_avx2!();
+    assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    unsafe { clip_into_f32_imp(src, c, dst) }
+}
+
+/// Safe entry: in-place `clamp(x, -c, c)` with AVX2.
+pub fn clip_inplace_f64(xs: &mut [f64], c: f64) {
+    assert_avx2!();
+    unsafe { clip_inplace_f64_imp(xs, c) }
+}
+
+/// Safe entry: in-place `clamp(x, -c, c)` with AVX2.
+pub fn clip_inplace_f32(xs: &mut [f32], c: f32) {
+    assert_avx2!();
+    unsafe { clip_inplace_f32_imp(xs, c) }
+}
+
+/// Safe entry: in-place `(x-τ)₊ − (-x-τ)₊` with AVX2.
+pub fn soft_threshold_f64(xs: &mut [f64], tau: f64) {
+    assert_avx2!();
+    unsafe { soft_threshold_f64_imp(xs, tau) }
+}
+
+/// Safe entry: in-place `(x-τ)₊ − (-x-τ)₊` with AVX2.
+pub fn soft_threshold_f32(xs: &mut [f32], tau: f32) {
+    assert_avx2!();
+    unsafe { soft_threshold_f32_imp(xs, tau) }
+}
+
+/// Safe entry: in-place `x·s` with AVX2.
+pub fn scale_f64(xs: &mut [f64], s: f64) {
+    assert_avx2!();
+    unsafe { scale_f64_imp(xs, s) }
+}
+
+/// Safe entry: in-place `x·s` with AVX2.
+pub fn scale_f32(xs: &mut [f32], s: f32) {
+    assert_avx2!();
+    unsafe { scale_f32_imp(xs, s) }
+}
+
+/// Safe entry: `acc += a·row` with AVX2 (no FMA — see module docs).
+pub fn axpy_f64(acc: &mut [f64], a: f64, row: &[f64]) {
+    assert_avx2!();
+    assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    unsafe { axpy_f64_imp(acc, a, row) }
+}
+
+/// Safe entry: `acc += a·row` with AVX2 (no FMA — see module docs).
+pub fn axpy_f32(acc: &mut [f32], a: f32, row: &[f32]) {
+    assert_avx2!();
+    assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    unsafe { axpy_f32_imp(acc, a, row) }
+}

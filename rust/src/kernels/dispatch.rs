@@ -1,0 +1,283 @@
+//! One-time runtime CPU detection and the kernel dispatch table.
+//!
+//! The public kernels in [`crate::kernels`] route through a process-wide
+//! table of concrete `f32`/`f64` function pointers selected **once** (a
+//! `OnceLock`): AVX2 on `x86_64` when `is_x86_feature_detected!("avx2")`
+//! holds, NEON on `aarch64`, and `None` otherwise — in which case the
+//! callers fall through to the portable lane-chunked implementations
+//! (`*_portable`), which LLVM still autovectorizes.
+//!
+//! Setting `BILEVEL_FORCE_SCALAR` to any value other than `0`/empty pins
+//! the process to the portable path regardless of what the CPU supports
+//! (the detection result is cached on first use, so set it before the
+//! first projection). CI runs the whole test suite once per path.
+//!
+//! The generic shims below bridge `T: Scalar` call sites to the concrete
+//! tables with a `TypeId` check — the comparison is against a constant per
+//! monomorphization, so the branch folds away and the shim compiles to a
+//! direct indirect call for `f32`/`f64` and to `None`/`false` for any
+//! other scalar.
+
+use std::any::TypeId;
+use std::sync::OnceLock;
+
+use crate::scalar::Scalar;
+
+/// Instruction set the dispatched kernels execute on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// Lane-chunked portable Rust (autovectorized by LLVM).
+    Portable,
+    /// Explicit 256-bit `core::arch::x86_64` intrinsics.
+    Avx2,
+    /// Explicit 128-bit `core::arch::aarch64` intrinsics.
+    Neon,
+}
+
+impl Isa {
+    /// Lower-case name used in bench reports and `BENCH_*.json` metadata.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Portable => "portable",
+            Isa::Avx2 => "avx2",
+            Isa::Neon => "neon",
+        }
+    }
+}
+
+/// Concrete kernel entry points for one ISA. Fields are plain safe `fn`
+/// pointers (the per-ISA wrappers check feature support on entry), so a
+/// table is a `'static` constant and dispatch is one indirect call.
+pub struct KernelOps {
+    pub isa: Isa,
+    pub colmax_f32: fn(&[f32]) -> f32,
+    pub colmax_f64: fn(&[f64]) -> f64,
+    pub sum_abs_f32: fn(&[f32]) -> f32,
+    pub sum_abs_f64: fn(&[f64]) -> f64,
+    pub sumsq_f32: fn(&[f32]) -> f32,
+    pub sumsq_f64: fn(&[f64]) -> f64,
+    pub clip_into_f32: fn(&[f32], f32, &mut [f32]),
+    pub clip_into_f64: fn(&[f64], f64, &mut [f64]),
+    pub clip_inplace_f32: fn(&mut [f32], f32),
+    pub clip_inplace_f64: fn(&mut [f64], f64),
+    pub soft_threshold_f32: fn(&mut [f32], f32),
+    pub soft_threshold_f64: fn(&mut [f64], f64),
+    pub scale_f32: fn(&mut [f32], f32),
+    pub scale_f64: fn(&mut [f64], f64),
+    pub axpy_f32: fn(&mut [f32], f32, &[f32]),
+    pub axpy_f64: fn(&mut [f64], f64, &[f64]),
+}
+
+static ACTIVE: OnceLock<Option<&'static KernelOps>> = OnceLock::new();
+
+fn force_scalar() -> bool {
+    matches!(std::env::var("BILEVEL_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0")
+}
+
+fn detect() -> Option<&'static KernelOps> {
+    if force_scalar() {
+        return None;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Some(&super::avx2::OPS);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        if std::arch::is_aarch64_feature_detected!("neon") {
+            return Some(&super::neon::OPS);
+        }
+    }
+    None
+}
+
+/// The cached dispatch table; `None` means the portable fallback.
+#[inline]
+pub(crate) fn active() -> Option<&'static KernelOps> {
+    *ACTIVE.get_or_init(detect)
+}
+
+/// The ISA the process dispatched to (cached on first use). Surfaced by
+/// `bilevel bench kernels` and the `BENCH_*.json` machine metadata.
+pub fn active_isa() -> Isa {
+    active().map(|ops| ops.isa).unwrap_or(Isa::Portable)
+}
+
+#[inline(always)]
+fn is<T: 'static, U: 'static>() -> bool {
+    TypeId::of::<T>() == TypeId::of::<U>()
+}
+
+/// Reinterpret `&[T]` as `&[U]`.
+///
+/// # Safety
+/// Caller must have proved `T` and `U` are the same type (via [`is`]).
+#[inline(always)]
+unsafe fn cast_slice<T, U>(xs: &[T]) -> &[U] {
+    std::slice::from_raw_parts(xs.as_ptr() as *const U, xs.len())
+}
+
+/// Reinterpret `&mut [T]` as `&mut [U]`.
+///
+/// # Safety
+/// Caller must have proved `T` and `U` are the same type (via [`is`]).
+#[inline(always)]
+unsafe fn cast_slice_mut<T, U>(xs: &mut [T]) -> &mut [U] {
+    std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut U, xs.len())
+}
+
+/// Reinterpret a scalar `T` as `U`.
+///
+/// # Safety
+/// Caller must have proved `T` and `U` are the same type (via [`is`]).
+#[inline(always)]
+unsafe fn cast_val<T: Copy + 'static, U: 'static>(v: T) -> U {
+    debug_assert!(is::<T, U>());
+    std::mem::transmute_copy(&v)
+}
+
+macro_rules! reduce_shim {
+    ($name:ident, $f32field:ident, $f64field:ident) => {
+        /// Dispatched reduction; `None` ⇒ caller runs the portable body.
+        #[inline]
+        pub(crate) fn $name<T: Scalar>(xs: &[T]) -> Option<T> {
+            let ops = active()?;
+            if is::<T, f64>() {
+                let r = (ops.$f64field)(unsafe { cast_slice::<T, f64>(xs) });
+                Some(unsafe { cast_val::<f64, T>(r) })
+            } else if is::<T, f32>() {
+                let r = (ops.$f32field)(unsafe { cast_slice::<T, f32>(xs) });
+                Some(unsafe { cast_val::<f32, T>(r) })
+            } else {
+                None
+            }
+        }
+    };
+}
+
+reduce_shim!(colmax, colmax_f32, colmax_f64);
+reduce_shim!(sum_abs, sum_abs_f32, sum_abs_f64);
+reduce_shim!(sumsq, sumsq_f32, sumsq_f64);
+
+macro_rules! inplace_shim {
+    ($name:ident, $f32field:ident, $f64field:ident) => {
+        /// Dispatched in-place map; `false` ⇒ caller runs the portable body.
+        #[inline]
+        pub(crate) fn $name<T: Scalar>(xs: &mut [T], p: T) -> bool {
+            let Some(ops) = active() else {
+                return false;
+            };
+            if is::<T, f64>() {
+                (ops.$f64field)(
+                    unsafe { cast_slice_mut::<T, f64>(xs) },
+                    unsafe { cast_val::<T, f64>(p) },
+                );
+                true
+            } else if is::<T, f32>() {
+                (ops.$f32field)(
+                    unsafe { cast_slice_mut::<T, f32>(xs) },
+                    unsafe { cast_val::<T, f32>(p) },
+                );
+                true
+            } else {
+                false
+            }
+        }
+    };
+}
+
+inplace_shim!(clip_inplace, clip_inplace_f32, clip_inplace_f64);
+inplace_shim!(soft_threshold_inplace, soft_threshold_f32, soft_threshold_f64);
+inplace_shim!(scale_inplace, scale_f32, scale_f64);
+
+/// Dispatched `clip_into`; `false` ⇒ caller runs the portable body.
+#[inline]
+pub(crate) fn clip_into<T: Scalar>(src: &[T], c: T, dst: &mut [T]) -> bool {
+    let Some(ops) = active() else {
+        return false;
+    };
+    if is::<T, f64>() {
+        (ops.clip_into_f64)(
+            unsafe { cast_slice::<T, f64>(src) },
+            unsafe { cast_val::<T, f64>(c) },
+            unsafe { cast_slice_mut::<T, f64>(dst) },
+        );
+        true
+    } else if is::<T, f32>() {
+        (ops.clip_into_f32)(
+            unsafe { cast_slice::<T, f32>(src) },
+            unsafe { cast_val::<T, f32>(c) },
+            unsafe { cast_slice_mut::<T, f32>(dst) },
+        );
+        true
+    } else {
+        false
+    }
+}
+
+/// Dispatched `axpy`; `false` ⇒ caller runs the portable body.
+#[inline]
+pub(crate) fn axpy<T: Scalar>(acc: &mut [T], a: T, row: &[T]) -> bool {
+    let Some(ops) = active() else {
+        return false;
+    };
+    if is::<T, f64>() {
+        (ops.axpy_f64)(
+            unsafe { cast_slice_mut::<T, f64>(acc) },
+            unsafe { cast_val::<T, f64>(a) },
+            unsafe { cast_slice::<T, f64>(row) },
+        );
+        true
+    } else if is::<T, f32>() {
+        (ops.axpy_f32)(
+            unsafe { cast_slice_mut::<T, f32>(acc) },
+            unsafe { cast_val::<T, f32>(a) },
+            unsafe { cast_slice::<T, f32>(row) },
+        );
+        true
+    } else {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isa_names_are_stable() {
+        assert_eq!(Isa::Portable.name(), "portable");
+        assert_eq!(Isa::Avx2.name(), "avx2");
+        assert_eq!(Isa::Neon.name(), "neon");
+    }
+
+    #[test]
+    fn active_isa_is_consistent_with_table() {
+        match active() {
+            Some(ops) => assert_eq!(active_isa(), ops.isa),
+            None => assert_eq!(active_isa(), Isa::Portable),
+        }
+    }
+
+    #[test]
+    fn active_isa_matches_target_capabilities() {
+        // The cached decision must be one this target can actually take.
+        match active_isa() {
+            Isa::Portable => {}
+            Isa::Avx2 => {
+                #[cfg(not(target_arch = "x86_64"))]
+                panic!("avx2 selected on a non-x86_64 target");
+                #[cfg(target_arch = "x86_64")]
+                assert!(std::arch::is_x86_feature_detected!("avx2"));
+            }
+            Isa::Neon => {
+                #[cfg(not(target_arch = "aarch64"))]
+                panic!("neon selected on a non-aarch64 target");
+                #[cfg(target_arch = "aarch64")]
+                assert!(std::arch::is_aarch64_feature_detected!("neon"));
+            }
+        }
+    }
+}

@@ -1,44 +1,71 @@
 //! Zero-allocation SIMD kernel layer — the four hot loops of the bi-level
-//! projections, written lane-chunked and branch-free so LLVM's
-//! autovectorizer turns them into packed min/max/add sequences.
+//! projections.
 //!
-//! Every kernel comes in two flavours:
+//! Every kernel comes in **three flavours**:
 //!
 //! * a **scalar reference** (`*_ref`) that defines the semantics with a
-//!   naive loop, and
-//! * the **chunked** production path (the unsuffixed name) that processes
-//!   `LANES` elements per inner-loop iteration over `chunks_exact`, with a
-//!   scalar tail.
+//!   naive loop — the bit-identity oracle;
+//! * the **portable chunked** path (`*_portable`) that processes
+//!   [`LANES`] elements per inner-loop iteration over `chunks_exact`,
+//!   with a scalar tail, written branch-free so LLVM's autovectorizer
+//!   turns it into packed min/max/add sequences on any target; and
+//! * an **explicit SIMD** path — stable-Rust `core::arch` intrinsics,
+//!   AVX2 on `x86_64` ([`avx2`]) and NEON on `aarch64` ([`neon`]) —
+//!   selected once per process by runtime CPU detection ([`dispatch`]).
 //!
-//! The two are **bit-identical** by construction for every input the
-//! projections feed them (finite floats):
+//! The unsuffixed production names (`colmax`, `clip_into`, …) dispatch:
+//! they consult the cached [`dispatch::active`] table and fall through to
+//! the portable body when no explicit table applies (unsupported CPU,
+//! non-`f32`/`f64` scalar, or `BILEVEL_FORCE_SCALAR=1` in the
+//! environment — see the [`dispatch`] docs). `active_isa()` reports which
+//! path the process is on.
+//!
+//! All three flavours are **bit-identical** for every input the
+//! projections feed them (finite floats), with one documented corner:
 //!
 //! * `colmax` reduces with `max` over non-negative magnitudes —
 //!   order-independent, so any chunking returns the same bits;
 //! * `sum_abs` / `sumsq` define their semantics as a *lane-decomposed*
 //!   sum (element `i` goes to accumulator `i % LANES`, accumulators are
 //!   combined by the fixed [`combine8`] tree); the reference implements
-//!   exactly that order with scalar code, the chunked path implements it
-//!   with stride-`LANES` accumulation — same additions in the same order;
-//! * `clip1` / `soft1` are elementwise, both paths apply the identical
-//!   scalar formula per element.
+//!   exactly that order with scalar code, the chunked and explicit-SIMD
+//!   paths implement it with stride-`LANES` accumulation — same additions
+//!   in the same order, so **no** reassociation delta;
+//! * `clip1` / `soft1` are elementwise; every path applies the identical
+//!   per-element formula, and `axpy`/`scale` never use FMA contraction.
+//!
+//! **The documented delta:** when the clip/soft-threshold parameter is
+//! *exactly* `0`, the sign of a zero output is path-dependent (AVX2
+//! `vmaxpd`/`vminpd` ties resolve to the second operand ⇒ always `+0.0`;
+//! NEON `FMAX`/`FMIN` order `-0.0 < +0.0` ⇒ sign-direction-preserving;
+//! the scalar `f64::max`/`min` lowering leaves it unspecified). Magnitudes
+//! always agree, every norm, sparsity count, and comparison in this repo
+//! treats `-0.0 == +0.0`, and all production entry points route through
+//! the *same* dispatched kernel, so cross-entry-point bit-identity (cache
+//! replay, sparse ≡ dense, serve) is unaffected. Thresholds > 0 are
+//! bit-exact everywhere. The conformance suite in
+//! `tests/kernels_integration.rs` pins exactly this contract.
 //!
 //! The clip kernel replaces the seed's branchy
 //! `signum_s() * abs().min_s(c)` with the two-instruction clamp
 //! `max(x, -c).min(c)` — mathematically identical for `c ≥ 0` (it is the
 //! ℓ∞-ball projection, eq. 13 of the paper) and a straight `vmaxp*` /
-//! `vminp*` pair after vectorization. The only observable difference is
-//! the sign of a zero output (e.g. input `-0.0`), which every norm,
-//! sparsity count, and comparison in this repo treats as equal to `+0.0`.
+//! `vminp*` pair.
 //!
 //! [`workspace`] adds the reusable scratch that makes the steady-state
 //! projection allocation-free; [`pool`] adds the persistent worker pool
 //! that replaced the spawn-per-call threading (see
 //! `projection/bilevel/parallel.rs` and EXPERIMENTS.md §Perf).
 
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+pub mod dispatch;
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
 pub mod pool;
 pub mod workspace;
 
+pub use dispatch::{active_isa, Isa};
 pub use workspace::{CondatScratch, Workspace};
 
 use crate::scalar::Scalar;
@@ -66,10 +93,11 @@ pub fn soft1<T: Scalar>(x: T, tau: T) -> T {
 }
 
 /// The fixed combination tree for the `LANES` partial accumulators of the
-/// sum kernels. Both the reference and the chunked paths end with this
-/// exact reduction, so their results match bit-for-bit.
+/// sum kernels. The reference, the portable chunked path, and the
+/// explicit-SIMD paths all end with this exact reduction, so their
+/// results match bit-for-bit.
 #[inline(always)]
-fn combine8<T: Scalar>(acc: &[T; LANES]) -> T {
+pub(crate) fn combine8<T: Scalar>(acc: &[T; LANES]) -> T {
     let s04 = acc[0] + acc[4];
     let s15 = acc[1] + acc[5];
     let s26 = acc[2] + acc[6];
@@ -79,9 +107,19 @@ fn combine8<T: Scalar>(acc: &[T; LANES]) -> T {
 
 // ---------------------------------------------------------------- colmax
 
-/// Column ∞-norm reduction: `max_i |x_i|` (0 for empty). Chunked path.
+/// Column ∞-norm reduction: `max_i |x_i|` (0 for empty). Dispatched
+/// production path.
 #[inline]
 pub fn colmax<T: Scalar>(xs: &[T]) -> T {
+    if let Some(r) = dispatch::colmax(xs) {
+        return r;
+    }
+    colmax_portable(xs)
+}
+
+/// Portable chunked fallback for [`colmax`].
+#[inline]
+pub fn colmax_portable<T: Scalar>(xs: &[T]) -> T {
     let mut acc = [T::ZERO; LANES];
     let mut it = xs.chunks_exact(LANES);
     for ch in it.by_ref() {
@@ -107,9 +145,18 @@ pub fn colmax_ref<T: Scalar>(xs: &[T]) -> T {
 
 // --------------------------------------------------------------- sum_abs
 
-/// Lane-decomposed `Σ|x_i|`. Chunked path.
+/// Lane-decomposed `Σ|x_i|`. Dispatched production path.
 #[inline]
 pub fn sum_abs<T: Scalar>(xs: &[T]) -> T {
+    if let Some(r) = dispatch::sum_abs(xs) {
+        return r;
+    }
+    sum_abs_portable(xs)
+}
+
+/// Portable chunked fallback for [`sum_abs`].
+#[inline]
+pub fn sum_abs_portable<T: Scalar>(xs: &[T]) -> T {
     let mut acc = [T::ZERO; LANES];
     let mut it = xs.chunks_exact(LANES);
     for ch in it.by_ref() {
@@ -135,9 +182,18 @@ pub fn sum_abs_ref<T: Scalar>(xs: &[T]) -> T {
 
 // ----------------------------------------------------------------- sumsq
 
-/// Lane-decomposed `Σ x_i²`. Chunked path.
+/// Lane-decomposed `Σ x_i²`. Dispatched production path.
 #[inline]
 pub fn sumsq<T: Scalar>(xs: &[T]) -> T {
+    if let Some(r) = dispatch::sumsq(xs) {
+        return r;
+    }
+    sumsq_portable(xs)
+}
+
+/// Portable chunked fallback for [`sumsq`].
+#[inline]
+pub fn sumsq_portable<T: Scalar>(xs: &[T]) -> T {
     let mut acc = [T::ZERO; LANES];
     let mut it = xs.chunks_exact(LANES);
     for ch in it.by_ref() {
@@ -170,9 +226,20 @@ pub fn l2_norm<T: Scalar>(xs: &[T]) -> T {
 // ------------------------------------------------------------------ clip
 
 /// Fused column clip: `dst_i = clamp(src_i, -c, c)` — a single read of the
-/// source and a single write of the destination. Chunked path.
+/// source and a single write of the destination. Dispatched production
+/// path.
 #[inline]
 pub fn clip_into<T: Scalar>(src: &[T], c: T, dst: &mut [T]) {
+    assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    if dispatch::clip_into(src, c, dst) {
+        return;
+    }
+    clip_into_portable(src, c, dst);
+}
+
+/// Portable chunked fallback for [`clip_into`].
+#[inline]
+pub fn clip_into_portable<T: Scalar>(src: &[T], c: T, dst: &mut [T]) {
     assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
     let mut s_it = src.chunks_exact(LANES);
     let mut d_it = dst.chunks_exact_mut(LANES);
@@ -239,13 +306,28 @@ pub fn extend_clipped<T: Scalar>(dst: &mut Vec<T>, src: &[T], threshold: T, norm
     if threshold >= norm {
         dst.extend_from_slice(src);
     } else {
-        dst.extend(src.iter().map(|&x| clip1(x, threshold)));
+        // Resize-then-clip so this Vec-building form runs the *same*
+        // dispatched clip kernel as `clip_groups_into` — that shared path
+        // is what keeps cache replay bit-identical to cold execution on
+        // every ISA.
+        let start = dst.len();
+        dst.resize(start + src.len(), T::ZERO);
+        clip_into(src, threshold, &mut dst[start..]);
     }
 }
 
-/// In-place variant of [`clip_into`].
+/// In-place variant of [`clip_into`]. Dispatched production path.
 #[inline]
 pub fn clip_inplace<T: Scalar>(xs: &mut [T], c: T) {
+    if dispatch::clip_inplace(xs, c) {
+        return;
+    }
+    clip_inplace_portable(xs, c);
+}
+
+/// Portable chunked fallback for [`clip_inplace`].
+#[inline]
+pub fn clip_inplace_portable<T: Scalar>(xs: &mut [T], c: T) {
     let mut it = xs.chunks_exact_mut(LANES);
     for ch in it.by_ref() {
         for x in ch {
@@ -259,17 +341,27 @@ pub fn clip_inplace<T: Scalar>(xs: &mut [T], c: T) {
 
 // ------------------------------------------------------------------ axpy
 
-/// Fused multiply-accumulate row update: `acc_j += a · row_j`. Chunked
-/// path — the inner loop of the structured-sparse encoder
+/// Fused multiply-accumulate row update: `acc_j += a · row_j`. Dispatched
+/// production path — the inner loop of the structured-sparse encoder
 /// ([`crate::sparse::linalg`]): one call per (alive) weight row, `acc` is
 /// the hidden-unit accumulator.
 ///
-/// Elementwise (every `acc_j` is touched exactly once per call), so the
-/// chunked path is bit-identical to [`axpy_ref`] by construction. No
-/// `mul_add` — a fused contraction would change the rounding and break the
+/// Elementwise (every `acc_j` is touched exactly once per call), so every
+/// path is bit-identical to [`axpy_ref`] by construction. No `mul_add` —
+/// a fused contraction would change the rounding and break the
 /// sparse ≡ dense bit-identity argument in `sparse::linalg`.
 #[inline]
 pub fn axpy<T: Scalar>(acc: &mut [T], a: T, row: &[T]) {
+    assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    if dispatch::axpy(acc, a, row) {
+        return;
+    }
+    axpy_portable(acc, a, row);
+}
+
+/// Portable chunked fallback for [`axpy`].
+#[inline]
+pub fn axpy_portable<T: Scalar>(acc: &mut [T], a: T, row: &[T]) {
     assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
     let mut a_it = acc.chunks_exact_mut(LANES);
     let mut r_it = row.chunks_exact(LANES);
@@ -294,9 +386,20 @@ pub fn axpy_ref<T: Scalar>(acc: &mut [T], a: T, row: &[T]) {
 
 // -------------------------------------------------------- soft-threshold
 
-/// ℓ1 soft-threshold in place: `x_i ← sign(x_i)·(|x_i|-τ)₊`. Chunked path.
+/// ℓ1 soft-threshold in place: `x_i ← sign(x_i)·(|x_i|-τ)₊`. Dispatched
+/// production path.
 #[inline]
 pub fn soft_threshold_inplace<T: Scalar>(xs: &mut [T], tau: T) {
+    debug_assert!(tau >= T::ZERO, "soft-threshold requires tau >= 0");
+    if dispatch::soft_threshold_inplace(xs, tau) {
+        return;
+    }
+    soft_threshold_inplace_portable(xs, tau);
+}
+
+/// Portable chunked fallback for [`soft_threshold_inplace`].
+#[inline]
+pub fn soft_threshold_inplace_portable<T: Scalar>(xs: &mut [T], tau: T) {
     let mut it = xs.chunks_exact_mut(LANES);
     for ch in it.by_ref() {
         for x in ch {
@@ -319,9 +422,18 @@ pub fn soft_threshold_inplace_ref<T: Scalar>(xs: &mut [T], tau: T) {
 // ----------------------------------------------------------------- scale
 
 /// ℓ2 rescale in place: `x_i ← x_i · s` (the outer stage of `BP¹,²`).
-/// Chunked path.
+/// Dispatched production path.
 #[inline]
 pub fn scale_inplace<T: Scalar>(xs: &mut [T], s: T) {
+    if dispatch::scale_inplace(xs, s) {
+        return;
+    }
+    scale_inplace_portable(xs, s);
+}
+
+/// Portable chunked fallback for [`scale_inplace`].
+#[inline]
+pub fn scale_inplace_portable<T: Scalar>(xs: &mut [T], s: T) {
     let mut it = xs.chunks_exact_mut(LANES);
     for ch in it.by_ref() {
         for x in ch {
@@ -381,16 +493,49 @@ mod tests {
     }
 
     #[test]
-    fn clip_chunked_bit_identical_to_ref() {
+    fn clip_portable_bit_identical_to_ref() {
+        // The portable chunked path applies the identical scalar formula
+        // per element, so it matches the reference strictly — including
+        // the degenerate threshold c = 0.0.
+        for (i, n) in edge_lens().into_iter().enumerate() {
+            let v = randvec(n, 300 + i as u64);
+            for c in [0.0, 0.5, 2.0, colmax(&v)] {
+                let mut a = vec![0.0; n];
+                let mut b = vec![0.0; n];
+                clip_into_portable(&v, c, &mut a);
+                clip_into_ref(&v, c, &mut b);
+                for (x, y) in a.iter().zip(b.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} c={c}");
+                }
+                let mut inplace = v.clone();
+                clip_inplace_portable(&mut inplace, c);
+                for (x, y) in inplace.iter().zip(a.iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "inplace n={n} c={c}");
+                }
+            }
+        }
+    }
+
+    /// Bits equal, or both zero (the documented zero-sign delta of the
+    /// explicit-SIMD clip at threshold exactly 0 — see the module docs).
+    fn eq_mod_zero_sign(x: f64, y: f64) -> bool {
+        x.to_bits() == y.to_bits() || (x == 0.0 && y == 0.0)
+    }
+
+    #[test]
+    fn clip_dispatched_matches_portable_mod_zero_sign() {
         for (i, n) in edge_lens().into_iter().enumerate() {
             let v = randvec(n, 300 + i as u64);
             for c in [0.0, 0.5, 2.0, colmax(&v)] {
                 let mut a = vec![0.0; n];
                 let mut b = vec![0.0; n];
                 clip_into(&v, c, &mut a);
-                clip_into_ref(&v, c, &mut b);
+                clip_into_portable(&v, c, &mut b);
                 for (x, y) in a.iter().zip(b.iter()) {
-                    assert_eq!(x.to_bits(), y.to_bits(), "n={n} c={c}");
+                    assert!(eq_mod_zero_sign(*x, *y), "n={n} c={c} {x} vs {y}");
+                    if c > 0.0 {
+                        assert_eq!(x.to_bits(), y.to_bits(), "n={n} c={c}");
+                    }
                 }
                 let mut inplace = v.clone();
                 clip_inplace(&mut inplace, c);

@@ -715,6 +715,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 "bilevel bench kernels — SIMD kernel layer vs scalar baseline{}",
                 if quick { " (quick)" } else { "" }
             );
+            println!("kernel isa: {}", bilevel_sparse::kernels::active_isa().name());
             let report = bilevel_sparse::bench::kernels::run(quick);
             println!("{}", report.markdown());
             let out = args.str_or("out", "BENCH_kernels.json");
@@ -737,7 +738,61 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }
             Ok(())
         }
-        other => Err(anyhow!("unknown bench target {other:?} (try: kernels, sparse)")),
+        "compare" => {
+            // Perf-regression gate: fresh quick runs vs the committed
+            // BENCH_*.json snapshots, matched on overlapping (name, shape)
+            // keys. Regressed = committed_ms >= min_ms AND
+            // fresh_ms > tolerance × committed_ms.
+            use bilevel_sparse::bench::compare::{compare_kernels, compare_sparse};
+            let tolerance = args.f64_or("tolerance", 2.0).map_err(|e| anyhow!(e))?;
+            let min_ms = args.f64_or("min-ms", 0.02).map_err(|e| anyhow!(e))?;
+            let kernels_path = args.str_or("kernels", "BENCH_kernels.json");
+            let sparse_path = args.str_or("sparse", "BENCH_sparse.json");
+            println!(
+                "bilevel bench compare — fresh quick run vs committed snapshots \
+                 (tolerance {tolerance}x, min {min_ms} ms)"
+            );
+            println!("kernel isa: {}", bilevel_sparse::kernels::active_isa().name());
+
+            let committed_kernels = std::fs::read_to_string(&kernels_path)
+                .map_err(|e| anyhow!("{kernels_path}: {e}"))?;
+            let fresh_kernels = bilevel_sparse::bench::kernels::run(true);
+            let kernels_report =
+                compare_kernels(&committed_kernels, &fresh_kernels, tolerance, min_ms)
+                    .map_err(|e| anyhow!("kernels compare: {e}"))?;
+            println!("{}", kernels_report.markdown());
+
+            let committed_sparse = std::fs::read_to_string(&sparse_path)
+                .map_err(|e| anyhow!("{sparse_path}: {e}"))?;
+            let fresh_sparse = bilevel_sparse::bench::sparse::run(true);
+            let sparse_report = compare_sparse(&committed_sparse, &fresh_sparse, tolerance, min_ms)
+                .map_err(|e| anyhow!("sparse compare: {e}"))?;
+            println!("{}", sparse_report.markdown());
+
+            let mut regressions: Vec<String> = Vec::new();
+            for rep in [&kernels_report, &sparse_report] {
+                for row in rep.regressions() {
+                    regressions.push(format!(
+                        "{} {}: {:.4} ms committed -> {:.4} ms fresh ({:.2}x)",
+                        row.name,
+                        row.shape,
+                        row.committed_ms,
+                        row.fresh_ms,
+                        row.ratio()
+                    ));
+                }
+            }
+            if regressions.is_empty() {
+                println!("perf gate passed: no row regressed beyond {tolerance}x");
+                Ok(())
+            } else {
+                for r in &regressions {
+                    eprintln!("regression: {r}");
+                }
+                Err(anyhow!("{} bench row(s) regressed beyond {tolerance}x", regressions.len()))
+            }
+        }
+        other => Err(anyhow!("unknown bench target {other:?} (try: kernels, sparse, compare)")),
     }
 }
 

@@ -40,7 +40,13 @@ fn bucket_upper(i: usize) -> u64 {
     }
     let shift = (i as u64 / SUB) - 1;
     let mantissa = i as u64 - shift * SUB;
-    ((mantissa + 1) << shift) - 1
+    // Widen before shifting: the last bucket (i = 495) has shift = 60 and
+    // mantissa = 15, where `(16u64 << 60)` silently truncates to 0 and the
+    // `- 1` underflows (panics in debug). In u128 the bound is 2^64 - 1,
+    // which saturates to exactly `u64::MAX` — the true inclusive upper
+    // bound of the final bucket.
+    let upper = ((mantissa as u128 + 1) << shift) - 1;
+    upper.min(u64::MAX as u128) as u64
 }
 
 /// Fixed-size log-bucketed histogram of microsecond latencies.
@@ -147,20 +153,35 @@ mod tests {
     #[test]
     fn buckets_are_contiguous_and_monotonic() {
         // Every value maps into a bucket whose bounds contain it, and
-        // bucket indices never decrease with the value.
-        let mut last = 0usize;
-        for v in (0u64..4096).chain([1 << 20, (1 << 20) + 1, u64::MAX >> 1, u64::MAX]) {
-            let i = bucket_index(v);
-            assert!(i >= last || v < 4096, "index regressed at {v}");
-            if v < 4096 {
-                assert!(v <= bucket_upper(i), "v={v} above upper bound of bucket {i}");
-                if i > 0 {
-                    assert!(v > bucket_upper(i - 1), "v={v} below bucket {i}");
-                }
-                last = i;
-            }
-            assert!(i < N_BUCKETS);
+        // bucket indices never decrease with the value — checked densely
+        // below 2^11 and at sampled points in EVERY octave up to u64::MAX
+        // (lower edge, edge+1, mid, top-1, top). Pre-fix, bucket_upper
+        // overflowed for the final bucket (`16u64 << 60` → 0, then `0 - 1`
+        // panics in debug), so the u64::MAX samples here fail without the
+        // widening fix.
+        let mut samples: Vec<u64> = (0u64..2048).collect();
+        for e in 11..64u32 {
+            let lo = 1u64 << e;
+            let hi = if e == 63 { u64::MAX } else { (1u64 << (e + 1)) - 1 };
+            samples.extend([lo, lo + 1, lo + (lo >> 1), hi - 1, hi]);
         }
+        let mut last = 0usize;
+        for v in samples {
+            let i = bucket_index(v);
+            assert!(i < N_BUCKETS, "v={v} escaped the bucket range");
+            assert!(i >= last, "index regressed at {v}");
+            last = i;
+            // Containment: v never exceeds its bucket's inclusive upper
+            // bound, and strictly exceeds the previous bucket's.
+            assert!(v <= bucket_upper(i), "v={v} above upper bound of bucket {i}");
+            if i > 0 {
+                assert!(v > bucket_upper(i - 1), "v={v} below bucket {i}");
+            }
+        }
+        // The final bucket is exactly the saturation point: u64::MAX maps
+        // into it and its upper bound is u64::MAX itself.
+        assert_eq!(bucket_index(u64::MAX), N_BUCKETS - 1);
+        assert_eq!(bucket_upper(N_BUCKETS - 1), u64::MAX);
     }
 
     #[test]

@@ -49,6 +49,19 @@ impl QuotaGate {
         let mut buckets = self.buckets.lock().unwrap();
         if buckets.len() >= MAX_TRACKED && !buckets.contains_key(key) {
             buckets.retain(|_, b| now.duration_since(b.last) < STALE_AFTER);
+            // A spoofed-`X-Client-Id` flood keeps every bucket fresh, so
+            // the stale sweep alone can evict nothing and the insert below
+            // would grow the map without bound. Hard cap: drop the
+            // least-recently-used bucket to make room. (The victim loses
+            // only its refill progress — at most one request's worth of
+            // fairness — while the map stays bounded.)
+            if buckets.len() >= MAX_TRACKED {
+                let oldest: Option<String> =
+                    buckets.iter().min_by_key(|(_, b)| b.last).map(|(k, _)| k.clone());
+                if let Some(k) = oldest {
+                    buckets.remove(&k);
+                }
+            }
         }
         let bucket = buckets
             .entry(key.to_string())
@@ -120,5 +133,22 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_rate_is_a_bug() {
         let _ = QuotaGate::new(0.0, 1.0);
+    }
+
+    #[test]
+    fn tracked_never_exceeds_cap_under_id_flood() {
+        // Regression: all buckets stay fresh (created microseconds ago, so
+        // the STALE_AFTER sweep evicts nothing) while a spoofed client id
+        // changes every request. Pre-fix the map grew past MAX_TRACKED.
+        let gate = QuotaGate::new(1000.0, 4.0);
+        for i in 0..(MAX_TRACKED + 500) {
+            let _ = gate.admit(&format!("client-{i}"));
+            assert!(
+                gate.tracked() <= MAX_TRACKED,
+                "tracked {} exceeded cap at request {i}",
+                gate.tracked()
+            );
+        }
+        assert_eq!(gate.tracked(), MAX_TRACKED);
     }
 }

@@ -49,6 +49,23 @@ impl Default for ParallelPolicy {
 }
 
 impl ParallelPolicy {
+    /// The default policy with `min_elems` overridden by the
+    /// `BILEVEL_MIN_ELEMS` environment variable when it is set to a valid
+    /// `usize` (anything else — unset, empty, non-numeric — leaves the
+    /// built-in default). This is how a crossover measured by
+    /// `bilevel bench kernels --autotune` (its `recommended_min_elems`
+    /// output) is fed back into production without a recompile; the CLI
+    /// and the serve engine construct their policies through this.
+    pub fn from_env_or_default() -> Self {
+        let mut policy = Self::default();
+        if let Ok(v) = std::env::var("BILEVEL_MIN_ELEMS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                policy.min_elems = n;
+            }
+        }
+        policy
+    }
+
     fn effective_threads(&self, work_items: usize) -> usize {
         let hw = if self.threads > 0 {
             self.threads
@@ -230,6 +247,26 @@ mod tests {
         );
         let seq = crate::projection::bilevel::bilevel_l1inf_with(&y, 1.5, L1Algorithm::Condat);
         assert!(par.x.max_abs_diff(&seq.x) < 1e-15);
+    }
+
+    #[test]
+    fn policy_from_env_honours_min_elems_override() {
+        // No other test reads BILEVEL_MIN_ELEMS, and `from_env_or_default`
+        // reads it fresh on every call (unlike the cached ISA dispatch),
+        // so setting and removing it here is race-free.
+        std::env::remove_var("BILEVEL_MIN_ELEMS");
+        assert_eq!(
+            ParallelPolicy::from_env_or_default().min_elems,
+            ParallelPolicy::default().min_elems
+        );
+        std::env::set_var("BILEVEL_MIN_ELEMS", "4096");
+        assert_eq!(ParallelPolicy::from_env_or_default().min_elems, 4096);
+        std::env::set_var("BILEVEL_MIN_ELEMS", "not-a-number");
+        assert_eq!(
+            ParallelPolicy::from_env_or_default().min_elems,
+            ParallelPolicy::default().min_elems
+        );
+        std::env::remove_var("BILEVEL_MIN_ELEMS");
     }
 
     #[test]

@@ -1,8 +1,16 @@
-//! Kernel-layer acceptance suite: the lane-chunked SIMD paths are
-//! bit-identical to their scalar references across dtypes and edge shapes,
-//! the workspace (`*_into`) entry points reproduce the one-shot entry
-//! points exactly, and the pool-parallel path reproduces the sequential
-//! path exactly.
+//! Kernel-layer acceptance suite: every kernel's three flavours —
+//! scalar reference, portable chunked, and runtime-dispatched explicit
+//! SIMD — agree bitwise across dtypes and lane-boundary shapes (modulo
+//! the documented zero-sign delta of clip/soft-threshold at a threshold
+//! of exactly 0), the workspace (`*_into`) entry points reproduce the
+//! one-shot entry points exactly, and the pool-parallel path reproduces
+//! the sequential path exactly. Inputs include `-0.0`, subnormals, and
+//! values exactly at the threshold.
+//!
+//! CI runs this suite twice: once on the detected ISA and once with
+//! `BILEVEL_FORCE_SCALAR=1` pinning the portable path; the forced-ISA
+//! tests below additionally call the per-ISA tables directly, so the
+//! explicit SIMD kernels are exercised even under force-scalar.
 
 use bilevel_sparse::kernels::{self, Workspace};
 use bilevel_sparse::projection::bilevel::{
@@ -23,6 +31,18 @@ fn assert_bits_eq<T: Scalar>(a: &[T], b: &[T], what: &str) {
             y.to_f64().to_bits(),
             "{what}: element {i}: {x} vs {y}"
         );
+    }
+}
+
+/// Bitwise equality except both-zero (any sign) is accepted — the
+/// documented zero-sign delta of the explicit-SIMD clip/soft-threshold at
+/// a threshold of exactly 0 (see the `kernels` module docs).
+fn assert_bits_eq_mod_zero_sign<T: Scalar>(a: &[T], b: &[T], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let same_bits = x.to_f64().to_bits() == y.to_f64().to_bits();
+        let both_zero = x.to_f64() == 0.0 && y.to_f64() == 0.0;
+        assert!(same_bits || both_zero, "{what}: element {i}: {x} vs {y}");
     }
 }
 
@@ -53,13 +73,19 @@ fn kernel_equivalence_for<T: Scalar>(seed: u64) {
             "sumsq n={n}"
         );
         // Clip at a strict threshold, at zero, and exactly at the column
-        // max (the copy-vs-clip boundary of the fused stage).
+        // max (the copy-vs-clip boundary of the fused stage). At c = 0
+        // every output is a zero whose sign is the documented
+        // path-dependent delta, so that case compares modulo zero sign.
         for c in [T::ZERO, T::from_f64(0.5), kernels::colmax(&v)] {
             let mut a = vec![T::ZERO; n];
             let mut b = vec![T::ZERO; n];
             kernels::clip_into(&v, c, &mut a);
             kernels::clip_into_ref(&v, c, &mut b);
-            assert_bits_eq(&a, &b, "clip");
+            if c > T::ZERO {
+                assert_bits_eq(&a, &b, "clip");
+            } else {
+                assert_bits_eq_mod_zero_sign(&a, &b, "clip(c=0)");
+            }
         }
         let mut a = v.clone();
         let mut b = v.clone();
@@ -175,6 +201,308 @@ fn prop_pool_parallel_matches_sequential_exactly() {
         }
         Ok(())
     });
+}
+
+// ---------------------------------------------------------------------
+// Three-path SIMD conformance suite: scalar ref × portable chunked ×
+// runtime-dispatched explicit SIMD, per kernel, per dtype, across
+// lane-boundary lengths, with signed zeros / subnormals / at-threshold
+// values injected.
+// ---------------------------------------------------------------------
+
+/// The lane-boundary lengths the conformance contract names.
+fn conformance_lens() -> Vec<usize> {
+    let l = kernels::LANES;
+    vec![0, 1, l - 1, l, l + 1, 4 * l + 3]
+}
+
+/// Random values with special cases injected at the head: both zero
+/// signs, values exactly at the 0.5 thresholds used below, and
+/// subnormals.
+fn conformance_vec<T: Scalar>(n: usize, seed: u64) -> Vec<T> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut v: Vec<T> = (0..n).map(|_| T::from_f64(rng.uniform(-3.0, 3.0))).collect();
+    let sub = T::MIN_POSITIVE / T::from_f64(4.0);
+    let specials =
+        [T::ZERO, -T::ZERO, T::from_f64(0.5), T::from_f64(-0.5), sub, -sub, T::MIN_POSITIVE];
+    for (k, s) in specials.into_iter().enumerate() {
+        if k < n {
+            v[k] = s;
+        }
+    }
+    v
+}
+
+fn three_path_conformance_for<T: Scalar>(seed: u64) {
+    for (k, n) in conformance_lens().into_iter().enumerate() {
+        let v = conformance_vec::<T>(n, seed + k as u64);
+
+        // Reductions: dispatched == portable == ref bitwise, always (the
+        // explicit SIMD paths reproduce the lane decomposition exactly).
+        let triples = [
+            ("colmax", kernels::colmax(&v), kernels::colmax_portable(&v), kernels::colmax_ref(&v)),
+            (
+                "sum_abs",
+                kernels::sum_abs(&v),
+                kernels::sum_abs_portable(&v),
+                kernels::sum_abs_ref(&v),
+            ),
+            ("sumsq", kernels::sumsq(&v), kernels::sumsq_portable(&v), kernels::sumsq_ref(&v)),
+        ];
+        for (what, d, p, r) in triples {
+            let (db, pb, rb) = (d.to_f64().to_bits(), p.to_f64().to_bits(), r.to_f64().to_bits());
+            assert_eq!(db, pb, "{what} dispatched vs portable, n={n}");
+            assert_eq!(pb, rb, "{what} portable vs ref, n={n}");
+        }
+
+        // Clip: strict for c > 0 (including elements exactly at the
+        // threshold), modulo zero sign at c == 0.
+        for c in [T::ZERO, T::from_f64(0.5), T::from_f64(2.0)] {
+            let mut d = vec![T::ZERO; n];
+            let mut p = vec![T::ZERO; n];
+            let mut r = vec![T::ZERO; n];
+            kernels::clip_into(&v, c, &mut d);
+            kernels::clip_into_portable(&v, c, &mut p);
+            kernels::clip_into_ref(&v, c, &mut r);
+            assert_bits_eq(&p, &r, "clip portable vs ref");
+            if c > T::ZERO {
+                assert_bits_eq(&d, &p, "clip dispatched vs portable");
+            } else {
+                assert_bits_eq_mod_zero_sign(&d, &p, "clip(c=0) dispatched vs portable");
+            }
+            let mut inplace = v.clone();
+            kernels::clip_inplace(&mut inplace, c);
+            assert_bits_eq(&inplace, &d, "clip_inplace vs clip_into");
+        }
+
+        // Soft-threshold: strict for tau > 0, modulo zero sign at 0.
+        for tau in [T::ZERO, T::from_f64(0.5), T::from_f64(0.7)] {
+            let mut d = v.clone();
+            let mut p = v.clone();
+            let mut r = v.clone();
+            kernels::soft_threshold_inplace(&mut d, tau);
+            kernels::soft_threshold_inplace_portable(&mut p, tau);
+            kernels::soft_threshold_inplace_ref(&mut r, tau);
+            assert_bits_eq(&p, &r, "soft portable vs ref");
+            if tau > T::ZERO {
+                assert_bits_eq(&d, &p, "soft dispatched vs portable");
+            } else {
+                assert_bits_eq_mod_zero_sign(&d, &p, "soft(tau=0) dispatched vs portable");
+            }
+        }
+
+        // Scale and axpy: elementwise without FMA — strict always.
+        let mut d = v.clone();
+        let mut p = v.clone();
+        let mut r = v.clone();
+        kernels::scale_inplace(&mut d, T::from_f64(-0.37));
+        kernels::scale_inplace_portable(&mut p, T::from_f64(-0.37));
+        kernels::scale_inplace_ref(&mut r, T::from_f64(-0.37));
+        assert_bits_eq(&d, &p, "scale dispatched vs portable");
+        assert_bits_eq(&p, &r, "scale portable vs ref");
+
+        let row = conformance_vec::<T>(n, (seed ^ 0xABCD) + k as u64);
+        let mut d = v.clone();
+        let mut p = v.clone();
+        let mut r = v.clone();
+        kernels::axpy(&mut d, T::from_f64(-0.83), &row);
+        kernels::axpy_portable(&mut p, T::from_f64(-0.83), &row);
+        kernels::axpy_ref(&mut r, T::from_f64(-0.83), &row);
+        assert_bits_eq(&d, &p, "axpy dispatched vs portable");
+        assert_bits_eq(&p, &r, "axpy portable vs ref");
+    }
+}
+
+#[test]
+fn three_path_conformance_f64() {
+    three_path_conformance_for::<f64>(21);
+}
+
+#[test]
+fn three_path_conformance_f32() {
+    three_path_conformance_for::<f32>(22);
+}
+
+#[test]
+fn dispatch_is_consistent_with_environment() {
+    let forced =
+        matches!(std::env::var("BILEVEL_FORCE_SCALAR"), Ok(v) if !v.is_empty() && v != "0");
+    let isa = kernels::active_isa();
+    if forced {
+        assert_eq!(
+            isa,
+            kernels::Isa::Portable,
+            "BILEVEL_FORCE_SCALAR must pin the portable path"
+        );
+    }
+    #[cfg(target_arch = "x86_64")]
+    if !forced && std::arch::is_x86_feature_detected!("avx2") {
+        assert_eq!(isa, kernels::Isa::Avx2, "AVX2 detected but not dispatched");
+    }
+    #[cfg(target_arch = "aarch64")]
+    if !forced && std::arch::is_aarch64_feature_detected!("neon") {
+        assert_eq!(isa, kernels::Isa::Neon, "NEON detected but not dispatched");
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    assert_eq!(isa, kernels::Isa::Portable);
+}
+
+/// Calls the AVX2 table directly (not through the cached dispatcher), so
+/// this coverage survives `BILEVEL_FORCE_SCALAR=1` runs too.
+#[cfg(target_arch = "x86_64")]
+#[test]
+fn avx2_table_matches_portable_when_detected() {
+    if !std::arch::is_x86_feature_detected!("avx2") {
+        eprintln!("skipping: no AVX2 on this CPU");
+        return;
+    }
+    let ops = &kernels::avx2::OPS;
+    for (k, n) in conformance_lens().into_iter().enumerate() {
+        let v64 = conformance_vec::<f64>(n, 31 + k as u64);
+        let v32 = conformance_vec::<f32>(n, 33 + k as u64);
+
+        assert_eq!((ops.colmax_f64)(&v64).to_bits(), kernels::colmax_portable(&v64).to_bits());
+        assert_eq!((ops.colmax_f32)(&v32).to_bits(), kernels::colmax_portable(&v32).to_bits());
+        assert_eq!((ops.sum_abs_f64)(&v64).to_bits(), kernels::sum_abs_portable(&v64).to_bits());
+        assert_eq!((ops.sum_abs_f32)(&v32).to_bits(), kernels::sum_abs_portable(&v32).to_bits());
+        assert_eq!((ops.sumsq_f64)(&v64).to_bits(), kernels::sumsq_portable(&v64).to_bits());
+        assert_eq!((ops.sumsq_f32)(&v32).to_bits(), kernels::sumsq_portable(&v32).to_bits());
+
+        let mut a = vec![0.0f64; n];
+        let mut b = vec![0.0f64; n];
+        (ops.clip_into_f64)(&v64, 0.5, &mut a);
+        kernels::clip_into_portable(&v64, 0.5, &mut b);
+        assert_bits_eq(&a, &b, "avx2 clip_into_f64");
+        let mut a32 = vec![0.0f32; n];
+        let mut b32 = vec![0.0f32; n];
+        (ops.clip_into_f32)(&v32, 0.5, &mut a32);
+        kernels::clip_into_portable(&v32, 0.5, &mut b32);
+        assert_bits_eq(&a32, &b32, "avx2 clip_into_f32");
+
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.clip_inplace_f64)(&mut a, 2.0);
+        kernels::clip_inplace_portable(&mut b, 2.0);
+        assert_bits_eq(&a, &b, "avx2 clip_inplace_f64");
+        let mut a32 = v32.clone();
+        let mut b32 = v32.clone();
+        (ops.clip_inplace_f32)(&mut a32, 2.0);
+        kernels::clip_inplace_portable(&mut b32, 2.0);
+        assert_bits_eq(&a32, &b32, "avx2 clip_inplace_f32");
+
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.soft_threshold_f64)(&mut a, 0.5);
+        kernels::soft_threshold_inplace_portable(&mut b, 0.5);
+        assert_bits_eq(&a, &b, "avx2 soft_f64");
+        let mut a32 = v32.clone();
+        let mut b32 = v32.clone();
+        (ops.soft_threshold_f32)(&mut a32, 0.5);
+        kernels::soft_threshold_inplace_portable(&mut b32, 0.5);
+        assert_bits_eq(&a32, &b32, "avx2 soft_f32");
+
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.scale_f64)(&mut a, -0.37);
+        kernels::scale_inplace_portable(&mut b, -0.37);
+        assert_bits_eq(&a, &b, "avx2 scale_f64");
+        let mut a32 = v32.clone();
+        let mut b32 = v32.clone();
+        (ops.scale_f32)(&mut a32, -0.37);
+        kernels::scale_inplace_portable(&mut b32, -0.37);
+        assert_bits_eq(&a32, &b32, "avx2 scale_f32");
+
+        let row64 = conformance_vec::<f64>(n, 35 + k as u64);
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.axpy_f64)(&mut a, -0.83, &row64);
+        kernels::axpy_portable(&mut b, -0.83, &row64);
+        assert_bits_eq(&a, &b, "avx2 axpy_f64");
+        let row32 = conformance_vec::<f32>(n, 37 + k as u64);
+        let mut a32 = v32.clone();
+        let mut b32 = v32.clone();
+        (ops.axpy_f32)(&mut a32, -0.83, &row32);
+        kernels::axpy_portable(&mut b32, -0.83, &row32);
+        assert_bits_eq(&a32, &b32, "avx2 axpy_f32");
+
+        // The documented zero-threshold corner, pinned to its AVX2 shape:
+        // every clipped element comes out exactly +0.0.
+        let mut z = v64.clone();
+        (ops.clip_inplace_f64)(&mut z, 0.0);
+        for (i, x) in z.iter().enumerate() {
+            assert_eq!(x.to_bits(), 0.0f64.to_bits(), "avx2 clip(c=0) element {i} not +0.0");
+        }
+    }
+}
+
+/// NEON mirror of the AVX2 table test (compile-gated to aarch64).
+#[cfg(target_arch = "aarch64")]
+#[test]
+fn neon_table_matches_portable_when_detected() {
+    if !std::arch::is_aarch64_feature_detected!("neon") {
+        eprintln!("skipping: no NEON on this CPU");
+        return;
+    }
+    let ops = &kernels::neon::OPS;
+    for (k, n) in conformance_lens().into_iter().enumerate() {
+        let v64 = conformance_vec::<f64>(n, 41 + k as u64);
+        let v32 = conformance_vec::<f32>(n, 43 + k as u64);
+
+        assert_eq!((ops.colmax_f64)(&v64).to_bits(), kernels::colmax_portable(&v64).to_bits());
+        assert_eq!((ops.colmax_f32)(&v32).to_bits(), kernels::colmax_portable(&v32).to_bits());
+        assert_eq!((ops.sum_abs_f64)(&v64).to_bits(), kernels::sum_abs_portable(&v64).to_bits());
+        assert_eq!((ops.sum_abs_f32)(&v32).to_bits(), kernels::sum_abs_portable(&v32).to_bits());
+        assert_eq!((ops.sumsq_f64)(&v64).to_bits(), kernels::sumsq_portable(&v64).to_bits());
+        assert_eq!((ops.sumsq_f32)(&v32).to_bits(), kernels::sumsq_portable(&v32).to_bits());
+
+        let mut a = vec![0.0f64; n];
+        let mut b = vec![0.0f64; n];
+        (ops.clip_into_f64)(&v64, 0.5, &mut a);
+        kernels::clip_into_portable(&v64, 0.5, &mut b);
+        assert_bits_eq(&a, &b, "neon clip_into_f64");
+        let mut a32 = vec![0.0f32; n];
+        let mut b32 = vec![0.0f32; n];
+        (ops.clip_into_f32)(&v32, 0.5, &mut a32);
+        kernels::clip_into_portable(&v32, 0.5, &mut b32);
+        assert_bits_eq(&a32, &b32, "neon clip_into_f32");
+
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.soft_threshold_f64)(&mut a, 0.5);
+        kernels::soft_threshold_inplace_portable(&mut b, 0.5);
+        assert_bits_eq(&a, &b, "neon soft_f64");
+        let mut a32 = v32.clone();
+        let mut b32 = v32.clone();
+        (ops.soft_threshold_f32)(&mut a32, 0.5);
+        kernels::soft_threshold_inplace_portable(&mut b32, 0.5);
+        assert_bits_eq(&a32, &b32, "neon soft_f32");
+
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.scale_f64)(&mut a, -0.37);
+        kernels::scale_inplace_portable(&mut b, -0.37);
+        assert_bits_eq(&a, &b, "neon scale_f64");
+
+        let row64 = conformance_vec::<f64>(n, 45 + k as u64);
+        let mut a = v64.clone();
+        let mut b = v64.clone();
+        (ops.axpy_f64)(&mut a, -0.83, &row64);
+        kernels::axpy_portable(&mut b, -0.83, &row64);
+        assert_bits_eq(&a, &b, "neon axpy_f64");
+
+        // NEON's zero-threshold shape: magnitude 0 with the input's sign
+        // direction preserved (FMAX/FMIN order -0.0 < +0.0).
+        let mut z = v64.clone();
+        (ops.clip_inplace_f64)(&mut z, 0.0);
+        for (i, (x, orig)) in z.iter().zip(v64.iter()).enumerate() {
+            assert_eq!(*x, 0.0, "neon clip(c=0) element {i} not zero");
+            assert_eq!(
+                x.is_sign_negative(),
+                orig.is_sign_negative(),
+                "neon clip(c=0) element {i} lost its sign direction"
+            );
+        }
+    }
 }
 
 #[test]
