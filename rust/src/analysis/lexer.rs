@@ -1,0 +1,365 @@
+//! A lightweight Rust surface lexer for the audit rules.
+//!
+//! The rules in [`super::rules`] scan for *tokens* (`unsafe`,
+//! `.lock().unwrap()`, `todo!`) and must never fire on text inside string
+//! literals or comments — `let s = "unsafe";` is not an unsafe block. A
+//! full parser is overkill (and no parser crate is available offline), so
+//! this lexer does exactly one job: split every line of a source file
+//! into its **code** text and its **comment** text, with the contents of
+//! string/char literals blanked out of the code channel.
+//!
+//! Handled syntax:
+//!
+//! * line comments `//`, doc comments `///` and `//!`;
+//! * block comments `/* ... */`, including nesting and doc forms;
+//! * string literals with escapes (`"a\"b"`), byte strings (`b"..."`);
+//! * raw strings `r"..."`, `r#"..."#` (any hash depth), `br#"..."#`;
+//! * char and byte-char literals (`'x'`, `'\n'`, `b'\0'`) versus
+//!   lifetimes and labels (`'a`, `'static`, `'outer:`), disambiguated by
+//!   lookahead.
+//!
+//! The output preserves line structure: `code[i]` and `comment[i]` are
+//! the two channels of input line `i`, with literal contents replaced by
+//! spaces (delimiters kept) so column positions stay meaningful.
+
+/// A source file split into per-line code and comment channels.
+#[derive(Debug, Clone)]
+pub struct Lexed {
+    /// Source line with comments removed and literal contents blanked.
+    pub code: Vec<String>,
+    /// Comment text found on the line (empty when none).
+    pub comment: Vec<String>,
+}
+
+impl Lexed {
+    /// Number of lines in the file.
+    pub fn len(&self) -> usize {
+        self.code.len()
+    }
+
+    /// True for a zero-line file.
+    pub fn is_empty(&self) -> bool {
+        self.code.is_empty()
+    }
+
+    /// The code channel joined back into one string (newline-separated) —
+    /// what multi-line token scans operate on.
+    pub fn code_text(&self) -> String {
+        self.code.join("\n")
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Block comment with its nesting depth.
+    BlockComment(u32),
+    /// Regular string literal (escapes active).
+    Str,
+    /// Raw string terminated by `"` followed by this many `#`s.
+    RawStr(u32),
+    /// Char literal (escapes active).
+    CharLit,
+}
+
+/// Split `src` into per-line code and comment channels.
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let mut code = Vec::new();
+    let mut comment = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0usize;
+    let n = chars.len();
+
+    macro_rules! newline {
+        () => {{
+            code.push(std::mem::take(&mut cur_code));
+            comment.push(std::mem::take(&mut cur_comment));
+        }};
+    }
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            // A newline ends line comments; every other state carries over.
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            newline!();
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur_code.push('"');
+                    i += 1;
+                } else if let Some(hashes) = raw_string_at(&chars, i) {
+                    // `r`/`br` + hashes + the opening quote stay in code.
+                    let intro = i..=(i + raw_intro_len(&chars, i, hashes));
+                    for k in intro {
+                        cur_code.push(chars[k]);
+                    }
+                    i += raw_intro_len(&chars, i, hashes) + 1;
+                    state = State::RawStr(hashes);
+                } else if c == '\'' && char_literal_at(&chars, i) {
+                    state = State::CharLit;
+                    cur_code.push('\'');
+                    i += 1;
+                } else {
+                    cur_code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                cur_comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth > 1 { State::BlockComment(depth - 1) } else { State::Code };
+                    if state == State::Code {
+                        cur_code.push_str("  ");
+                    }
+                    i += 2;
+                } else {
+                    cur_comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    if chars.get(i + 1) == Some(&'\n') {
+                        // Line continuation: keep the newline for the top of
+                        // the loop so line numbering stays aligned.
+                        cur_code.push(' ');
+                        i += 1;
+                    } else {
+                        cur_code.push_str("  ");
+                        i += 2; // skip the escaped char (may be `"` or `\`)
+                    }
+                } else if c == '"' {
+                    cur_code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    cur_code.push('"');
+                    for _ in 0..hashes {
+                        cur_code.push('#');
+                    }
+                    i += 1 + hashes as usize;
+                    state = State::Code;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+            State::CharLit => {
+                if c == '\\' {
+                    cur_code.push_str("  ");
+                    i += 2;
+                } else if c == '\'' {
+                    cur_code.push('\'');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    cur_code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    newline!();
+    Lexed { code, comment }
+}
+
+/// Is the `'` at `chars[i]` a char literal (vs a lifetime/label)?
+///
+/// Char literal iff the quote is followed by an escape, or by exactly one
+/// character and a closing quote. `'a` (no closing quote after one char)
+/// is a lifetime.
+fn char_literal_at(chars: &[char], i: usize) -> bool {
+    match chars.get(i + 1) {
+        Some('\\') => true,
+        Some(_) => chars.get(i + 2) == Some(&'\''),
+        None => false,
+    }
+}
+
+/// If an `r"`/`r#"`/`br#"` raw-string intro starts at `chars[i]`, return
+/// its hash count; `None` otherwise. `i` must not be mid-identifier
+/// (callers guarantee this implicitly: mid-identifier positions were
+/// consumed char-by-char, and `var"` is not valid Rust anyway).
+fn raw_string_at(chars: &[char], i: usize) -> Option<u32> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    // Reject identifier continuations like `for r in ..` → `r` followed by
+    // a space is not a raw string; require hashes-then-quote immediately.
+    j += 1;
+    let mut hashes = 0u32;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        // Also make sure `chars[i]` starts a token: the previous char must
+        // not be part of an identifier (e.g. `attr"` inside a macro).
+        if i > 0 {
+            let p = chars[i - 1];
+            if p.is_alphanumeric() || p == '_' {
+                return None;
+            }
+        }
+        Some(hashes)
+    } else {
+        None
+    }
+}
+
+/// Offset from `i` to the opening quote of a raw-string intro: the
+/// optional `b`, the `r`, and the hashes.
+fn raw_intro_len(chars: &[char], i: usize, hashes: u32) -> usize {
+    usize::from(chars.get(i) == Some(&'b')) + 1 + hashes as usize
+}
+
+/// Does the `"` at `chars[i]` close a raw string expecting `hashes` `#`s?
+fn closes_raw(chars: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_comments_split_into_the_comment_channel() {
+        let l = lex("let a = 1; // SAFETY: fine\nlet b = 2;");
+        assert_eq!(l.code[0], "let a = 1; ");
+        assert_eq!(l.comment[0], " SAFETY: fine");
+        assert_eq!(l.code[1], "let b = 2;");
+        assert_eq!(l.comment[1], "");
+    }
+
+    #[test]
+    fn string_contents_are_blanked_but_delimiters_kept() {
+        let l = lex(r#"let s = "unsafe { lock().unwrap() }";"#);
+        assert!(!l.code[0].contains("unsafe"));
+        assert!(!l.code[0].contains("unwrap"));
+        assert!(l.code[0].starts_with("let s = \""));
+        assert!(l.code[0].ends_with("\";"));
+    }
+
+    #[test]
+    fn escaped_quotes_do_not_end_the_string() {
+        let l = lex(r#"let s = "a\"unsafe\"b"; let t = 1;"#);
+        assert!(!l.code[0].contains("unsafe"));
+        assert!(l.code[0].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        let l = lex("let s = r#\"unsafe \"quoted\" todo!\"#; let u = 2;");
+        assert!(!l.code[0].contains("unsafe"));
+        assert!(!l.code[0].contains("todo!"));
+        assert!(l.code[0].contains("let u = 2;"));
+    }
+
+    #[test]
+    fn byte_and_plain_raw_strings() {
+        let l = lex(r#"let a = br"unsafe"; let b = r"dbg!"; let c = 3;"#);
+        assert!(!l.code[0].contains("unsafe"));
+        assert!(!l.code[0].contains("dbg!"));
+        assert!(l.code[0].contains("let c = 3;"));
+    }
+
+    #[test]
+    fn block_comments_nest_and_span_lines() {
+        let l = lex("a /* one /* two */ still */ b\nc /* open\nunsafe\n*/ d");
+        assert_eq!(l.code[0].split_whitespace().collect::<Vec<_>>(), ["a", "b"]);
+        assert!(l.comment[0].contains("one"));
+        assert!(!l.code[2].contains("unsafe"));
+        assert!(l.comment[2].contains("unsafe"));
+        assert!(l.code[3].contains('d'));
+    }
+
+    #[test]
+    fn lifetimes_are_not_char_literals() {
+        let src =
+            "fn f<'a>(x: &'a str) -> MutexGuard<'static, u8> { 'outer: loop { break 'outer; } }";
+        let l = lex(src);
+        // Everything stays in the code channel; nothing is swallowed as a
+        // string-like literal.
+        assert!(l.code[0].contains("'a str"));
+        assert!(l.code[0].contains("'static"));
+        assert!(l.code[0].contains("'outer: loop"));
+    }
+
+    #[test]
+    fn char_literals_are_blanked() {
+        let l = lex("let c = 'u'; let d = '\\''; let e = '\\n'; let f = 9;");
+        assert!(l.code[0].contains("let f = 9;"));
+        // the literal contents are gone, the quotes remain
+        assert!(!l.code[0].contains("'u'"));
+        assert!(l.code[0].contains('\''));
+    }
+
+    #[test]
+    fn doc_comments_are_comments() {
+        let l = lex("/// # Safety\n//! module doc\npub fn x() {}");
+        assert_eq!(l.code[0].trim(), "");
+        assert!(l.comment[0].contains("# Safety"));
+        assert!(l.comment[1].contains("module doc"));
+        assert_eq!(l.code[2], "pub fn x() {}");
+    }
+
+    #[test]
+    fn multiline_strings_keep_line_structure() {
+        let l = lex("let s = \"line one\nunsafe two\";\nlet t = 1;");
+        assert_eq!(l.len(), 3);
+        assert!(!l.code[1].contains("unsafe"));
+        assert!(l.code[2].contains("let t = 1;"));
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_numbers() {
+        let l = lex("let s = \"a\\\nunsafe b\";\nlet t = 2;");
+        assert_eq!(l.len(), 3);
+        assert!(!l.code[1].contains("unsafe"));
+        assert!(l.code[2].contains("let t = 2;"));
+    }
+
+    #[test]
+    fn code_text_preserves_line_count() {
+        let src = "a\nb\n\nc";
+        let l = lex(src);
+        assert_eq!(l.len(), 4);
+        assert_eq!(l.code_text().matches('\n').count(), 3);
+    }
+}

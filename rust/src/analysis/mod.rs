@@ -1,0 +1,171 @@
+//! Repo-aware static analysis (`bilevel audit`).
+//!
+//! A dependency-free lint pass over this repository's own sources: a
+//! lightweight Rust lexer ([`lexer`]) that strips strings and comments so
+//! token scans cannot misfire, and a rule engine ([`rules`]) with
+//! per-rule allowlists producing typed [`Finding`]s with `file:line`
+//! spans. The same rules run three ways:
+//!
+//! * `bilevel audit` — CLI entry point, nonzero exit on any finding;
+//! * `cargo test --test audit_integration` — the repo must stay clean
+//!   under plain `cargo test`;
+//! * unit fixtures in [`rules`] — each rule is pinned to fire exactly
+//!   once on a minimal violation and never inside strings or comments.
+//!
+//! See `EXPERIMENTS.md` §Static analysis for the rule table, rationale,
+//! and the allowlist policy.
+
+pub mod lexer;
+pub mod rules;
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One rule violation, anchored to a source span.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Stable rule identifier (e.g. `safety-comment`).
+    pub rule: &'static str,
+    /// Repo-relative path with unix separators.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable explanation of the violation.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// The outcome of [`audit_repo`].
+#[derive(Debug, Clone)]
+pub struct AuditReport {
+    /// All findings, sorted by (path, line, rule).
+    pub findings: Vec<Finding>,
+    /// Number of `.rs` files scanned.
+    pub files_scanned: usize,
+}
+
+impl AuditReport {
+    /// True when the audit is clean.
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Run every audit rule over the repository rooted at `root` (the
+/// directory containing `Cargo.toml`).
+///
+/// Scans `rust/src/` recursively plus the top level of `rust/tests/` and
+/// `rust/benches/`, then checks `Cargo.toml` target registration.
+pub fn audit_repo(root: &Path) -> io::Result<AuditReport> {
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust/src"), &mut files)?;
+    collect_rs(&root.join("rust/tests"), &mut files)?;
+    collect_rs(&root.join("rust/benches"), &mut files)?;
+    files.sort();
+
+    let mut findings = Vec::new();
+    for file in &files {
+        let src = fs::read_to_string(file)?;
+        findings.extend(rules::check_source(&rel_unix(root, file), &src));
+    }
+
+    let cargo = fs::read_to_string(root.join("Cargo.toml"))?;
+    let tests = file_names(&root.join("rust/tests"))?;
+    let benches = file_names(&root.join("rust/benches"))?;
+    findings.extend(rules::check_registration(&cargo, &tests, &benches));
+
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(AuditReport { findings, files_scanned: files.len() })
+}
+
+/// Render a report the way compilers do: one `file:line: [rule] message`
+/// per finding, then a one-line summary.
+pub fn render(report: &AuditReport) -> String {
+    let mut out = String::new();
+    for finding in &report.findings {
+        out.push_str(&finding.to_string());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "audit: {} file(s) scanned, {} finding(s)\n",
+        report.files_scanned,
+        report.findings.len()
+    ));
+    out
+}
+
+/// Recursively collect `.rs` files under `dir` (no-op if it is absent, so
+/// the audit degrades gracefully on partial checkouts).
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    if !dir.is_dir() {
+        return Ok(());
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Top-level `.rs` file names (not paths) in `dir`, sorted.
+fn file_names(dir: &Path) -> io::Result<Vec<String>> {
+    let mut names = Vec::new();
+    if !dir.is_dir() {
+        return Ok(names);
+    }
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_file() && path.extension().is_some_and(|e| e == "rs") {
+            if let Some(name) = path.file_name() {
+                names.push(name.to_string_lossy().into_owned());
+            }
+        }
+    }
+    names.sort();
+    Ok(names)
+}
+
+/// Repo-relative unix-separator rendering of `path`.
+fn rel_unix(root: &Path, path: &Path) -> String {
+    let rel = path.strip_prefix(root).unwrap_or(path);
+    rel.components()
+        .map(|c| c.as_os_str().to_string_lossy())
+        .collect::<Vec<_>>()
+        .join("/")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn findings_render_like_compiler_diagnostics() {
+        let f = Finding {
+            rule: rules::RULE_SAFETY,
+            path: "rust/src/kernels/avx2.rs".to_string(),
+            line: 42,
+            message: "msg".to_string(),
+        };
+        assert_eq!(f.to_string(), "rust/src/kernels/avx2.rs:42: [safety-comment] msg");
+    }
+
+    #[test]
+    fn render_includes_a_summary_line() {
+        let report = AuditReport { findings: Vec::new(), files_scanned: 3 };
+        assert!(report.is_clean());
+        assert!(render(&report).contains("3 file(s) scanned, 0 finding(s)"));
+    }
+}

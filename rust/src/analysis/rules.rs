@@ -1,0 +1,503 @@
+//! The audit rules.
+//!
+//! Each rule is derived from a real hazard in this codebase (see
+//! `EXPERIMENTS.md` §Static analysis for the full table):
+//!
+//! * **safety-comment** — every `unsafe` keyword must be immediately
+//!   preceded (same line, or a contiguous comment block above, attributes
+//!   allowed in between) by a comment containing `SAFETY` (doc-comment
+//!   `# Safety` sections count).
+//! * **unsafe-allowlist** — `unsafe` may only appear in the files of
+//!   [`UNSAFE_ALLOWLIST`]: the SIMD kernels, the dispatch cast shims, the
+//!   parking pool, the parallel column splitter, and the counting
+//!   allocator used by the zero-alloc test.
+//! * **lock-unwrap** — non-test code under `rust/src/` must not call
+//!   `.lock().unwrap()`; it must use the poison-recovering helpers in
+//!   [`crate::sync`] so one panicking thread cannot cascade into
+//!   process-wide panics.
+//! * **registered-target** — every file under `rust/tests/` and
+//!   `rust/benches/` must be registered in `Cargo.toml`; with
+//!   `autotests = false` an unregistered suite silently never runs.
+//! * **banned-macro** — no `todo!` / `unimplemented!` / `dbg!` under
+//!   `rust/src/`.
+//! * **clippy-deny** — every module declared in `rust/src/lib.rs` carries
+//!   `#[deny(clippy::all)]` (or a comment containing `clippy-exempt:`
+//!   explaining why not).
+//!
+//! All token scans run on the lexer's code channel, so nothing fires on
+//! text inside string literals or comments.
+
+use super::lexer::{lex, Lexed};
+use super::Finding;
+
+/// Rule names (stable identifiers used in findings and docs).
+pub const RULE_SAFETY: &str = "safety-comment";
+/// See [`RULE_SAFETY`].
+pub const RULE_ALLOWLIST: &str = "unsafe-allowlist";
+/// See [`RULE_SAFETY`].
+pub const RULE_LOCK: &str = "lock-unwrap";
+/// See [`RULE_SAFETY`].
+pub const RULE_REGISTERED: &str = "registered-target";
+/// See [`RULE_SAFETY`].
+pub const RULE_BANNED: &str = "banned-macro";
+/// See [`RULE_SAFETY`].
+pub const RULE_CLIPPY: &str = "clippy-deny";
+
+/// Files (repo-relative, unix separators) allowed to contain `unsafe`
+/// code. Everything here is either a SIMD kernel reached only behind a
+/// runtime CPU-feature check, a TypeId-guarded cast shim, the parking
+/// pool's scoped-borrow machinery, the parallel splitter's disjoint-chunk
+/// slicing, or the counting global allocator of the zero-alloc test.
+pub const UNSAFE_ALLOWLIST: &[&str] = &[
+    "rust/src/kernels/avx2.rs",
+    "rust/src/kernels/dispatch.rs",
+    "rust/src/kernels/neon.rs",
+    "rust/src/kernels/pool.rs",
+    "rust/src/projection/bilevel/parallel.rs",
+    "rust/tests/kernels_alloc.rs",
+];
+
+/// Run every per-file rule that applies to `rel_path` over `src`.
+///
+/// `rel_path` is repo-relative with unix separators (`rust/src/...`);
+/// which rules apply depends on it: the unsafe rules run everywhere,
+/// lock/banned-macro rules only under `rust/src/`, and the clippy-deny
+/// rule only on `rust/src/lib.rs`.
+pub fn check_source(rel_path: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let mask = test_region_mask(&lexed);
+    let mut findings = Vec::new();
+    unsafe_rules(rel_path, &lexed, &mut findings);
+    if rel_path.starts_with("rust/src/") {
+        lock_unwrap_rule(rel_path, &lexed, &mask, &mut findings);
+        banned_macro_rule(rel_path, &lexed, &mut findings);
+    }
+    if rel_path == "rust/src/lib.rs" {
+        clippy_deny_rule(rel_path, &lexed, &mut findings);
+    }
+    findings
+}
+
+/// Rules 1 + 2: SAFETY coverage for every `unsafe` keyword, and the
+/// file-level allowlist.
+fn unsafe_rules(rel_path: &str, lexed: &Lexed, findings: &mut Vec<Finding>) {
+    let allowlisted = UNSAFE_ALLOWLIST.contains(&rel_path);
+    let mut first_unsafe_line = None;
+    for i in 0..lexed.len() {
+        if word_positions(&lexed.code[i], "unsafe").is_empty() {
+            continue;
+        }
+        first_unsafe_line.get_or_insert(i);
+        if !safety_covered(lexed, i) {
+            findings.push(Finding {
+                rule: RULE_SAFETY,
+                path: rel_path.to_string(),
+                line: i + 1,
+                message: "`unsafe` without an immediately preceding `// SAFETY:` comment"
+                    .to_string(),
+            });
+        }
+    }
+    if let (false, Some(line)) = (allowlisted, first_unsafe_line) {
+        findings.push(Finding {
+            rule: RULE_ALLOWLIST,
+            path: rel_path.to_string(),
+            line: line + 1,
+            message: "file contains `unsafe` but is not in analysis::rules::UNSAFE_ALLOWLIST"
+                .to_string(),
+        });
+    }
+}
+
+/// Is the `unsafe` on `line` covered by a SAFETY comment?
+///
+/// Accepted: a comment containing `safety` (case-insensitive) on the same
+/// line, or a contiguous comment block directly above the line — attribute
+/// lines (`#[...]` / `#![...]`) may sit between the comment and the item,
+/// so `/// # Safety` docs above `#[target_feature]` functions count.
+fn safety_covered(lexed: &Lexed, line: usize) -> bool {
+    if has_safety(&lexed.comment[line]) {
+        return true;
+    }
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let code = lexed.code[i].trim();
+        let comment = lexed.comment[i].trim();
+        if code.starts_with("#[") || code.starts_with("#![") {
+            continue;
+        }
+        if code.is_empty() && !comment.is_empty() {
+            if has_safety(comment) {
+                return true;
+            }
+            continue;
+        }
+        // A code line or a blank line ends the contiguous block.
+        return false;
+    }
+    false
+}
+
+fn has_safety(comment: &str) -> bool {
+    comment.to_ascii_lowercase().contains("safety")
+}
+
+/// Rule 3: `.lock()` immediately followed (whitespace allowed, including
+/// line breaks) by `.unwrap()` outside `#[cfg(test)]` regions.
+fn lock_unwrap_rule(rel_path: &str, lexed: &Lexed, mask: &[bool], findings: &mut Vec<Finding>) {
+    let text = lexed.code_text();
+    let bytes = text.as_bytes();
+    for (at, _) in text.match_indices(".lock()") {
+        let mut j = at + ".lock()".len();
+        while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+            j += 1;
+        }
+        if !text[j..].starts_with(".unwrap()") {
+            continue;
+        }
+        let line = text[..at].matches('\n').count();
+        if mask[line] {
+            continue;
+        }
+        findings.push(Finding {
+            rule: RULE_LOCK,
+            path: rel_path.to_string(),
+            line: line + 1,
+            message: "`.lock().unwrap()` panic-cascades on poison; use sync::lock_unpoisoned"
+                .to_string(),
+        });
+    }
+}
+
+/// Rule 5: `todo!` / `unimplemented!` / `dbg!` anywhere under `rust/src/`
+/// (test modules included — debug scaffolding must not land at all).
+fn banned_macro_rule(rel_path: &str, lexed: &Lexed, findings: &mut Vec<Finding>) {
+    for mac in ["todo!", "unimplemented!", "dbg!"] {
+        for (i, code) in lexed.code.iter().enumerate() {
+            if word_positions(code, mac).is_empty() {
+                continue;
+            }
+            findings.push(Finding {
+                rule: RULE_BANNED,
+                path: rel_path.to_string(),
+                line: i + 1,
+                message: format!("`{mac}` must not appear in library code"),
+            });
+        }
+    }
+}
+
+/// Rule 6: every `pub mod` declared in `lib.rs` is pinned to
+/// `#[deny(clippy::all)]` or carries a `clippy-exempt:` comment.
+fn clippy_deny_rule(rel_path: &str, lexed: &Lexed, findings: &mut Vec<Finding>) {
+    for i in 0..lexed.len() {
+        let code = lexed.code[i].trim();
+        if !code.starts_with("pub mod ") {
+            continue;
+        }
+        if !clippy_covered(lexed, i) {
+            findings.push(Finding {
+                rule: RULE_CLIPPY,
+                path: rel_path.to_string(),
+                line: i + 1,
+                message: "module not pinned to deny(clippy::all) and no clippy-exempt: note"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+fn clippy_covered(lexed: &Lexed, line: usize) -> bool {
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let code = lexed.code[i].trim();
+        let comment = lexed.comment[i].trim();
+        if code.starts_with("#[") {
+            if code.contains("deny(clippy::all)") {
+                return true;
+            }
+            continue;
+        }
+        if code.is_empty() && !comment.is_empty() {
+            if comment.contains("clippy-exempt:") {
+                return true;
+            }
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Rule 4: every top-level file in `rust/tests/` and `rust/benches/` must
+/// be registered as a `path = "..."` target in `Cargo.toml`, and the
+/// manifest must keep auto-discovery off (so the registration list *is*
+/// the truth about what runs).
+pub fn check_registration(
+    cargo_toml: &str,
+    test_files: &[String],
+    bench_files: &[String],
+) -> Vec<Finding> {
+    let mut registered = Vec::new();
+    let mut autotests_off = false;
+    let mut autobenches_off = false;
+    for line in cargo_toml.lines() {
+        let t = line.trim();
+        let squashed: String = t.chars().filter(|c| !c.is_whitespace()).collect();
+        if squashed == "autotests=false" {
+            autotests_off = true;
+        }
+        if squashed == "autobenches=false" {
+            autobenches_off = true;
+        }
+        if let Some(rest) = t.strip_prefix("path") {
+            if let Some(eq) = rest.trim_start().strip_prefix('=') {
+                if let Some(v) = extract_quoted(eq) {
+                    registered.push(v);
+                }
+            }
+        }
+    }
+    let mut findings = Vec::new();
+    for (flag, name) in [(autotests_off, "autotests"), (autobenches_off, "autobenches")] {
+        if !flag {
+            findings.push(Finding {
+                rule: RULE_REGISTERED,
+                path: "Cargo.toml".to_string(),
+                line: 1,
+                message: format!("{name} = false missing; target auto-discovery must stay off"),
+            });
+        }
+    }
+    for (dir, files) in [("rust/tests", test_files), ("rust/benches", bench_files)] {
+        for f in files {
+            let rel = format!("{dir}/{f}");
+            if !registered.iter().any(|r| r == &rel) {
+                findings.push(Finding {
+                    rule: RULE_REGISTERED,
+                    path: rel,
+                    line: 1,
+                    message: "not registered in Cargo.toml; with auto-discovery off it never runs"
+                        .to_string(),
+                });
+            }
+        }
+    }
+    findings
+}
+
+/// First quoted value in `s`, if any.
+fn extract_quoted(s: &str) -> Option<String> {
+    let open = s.find('"')?;
+    let rest = &s[open + 1..];
+    let close = rest.find('"')?;
+    Some(rest[..close].to_string())
+}
+
+/// Per-line mask of `#[cfg(test)]` regions: from the attribute line to the
+/// closing brace of the item it gates (brace counting on the code channel,
+/// where string/char contents are already blanked).
+fn test_region_mask(lexed: &Lexed) -> Vec<bool> {
+    let n = lexed.len();
+    let mut mask = vec![false; n];
+    let mut i = 0;
+    while i < n {
+        if !lexed.code[i].trim_start().starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        let mut opened = false;
+        let mut j = i;
+        while j < n {
+            mask[j] = true;
+            for ch in lexed.code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth = depth.saturating_sub(1),
+                    _ => {}
+                }
+            }
+            if opened && depth == 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Word-boundary occurrences of `word` in `line` (identifier characters on
+/// either side disqualify a match, so e.g. a keyword embedded in a longer
+/// identifier does not count).
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(pos) = line[start..].find(word) {
+        let at = start + pos;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_word_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_word_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = end;
+    }
+    out
+}
+
+fn is_word_byte(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KERNEL_PATH: &str = "rust/src/kernels/avx2.rs";
+    const PLAIN_PATH: &str = "rust/src/serve/engine.rs";
+
+    fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_one_finding() {
+        let src = "pub fn f(x: &[f64]) -> f64 {\n    unsafe { *x.get_unchecked(0) }\n}\n";
+        let findings = check_source(KERNEL_PATH, src);
+        assert_eq!(rules_of(&findings), [RULE_SAFETY]);
+        assert_eq!(findings[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_on_the_line_above_clears_the_finding() {
+        let src = "pub fn f(x: &[f64]) -> f64 {\n    // SAFETY: caller guarantees non-empty.\n    unsafe { *x.get_unchecked(0) }\n}\n";
+        assert!(check_source(KERNEL_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn safety_doc_section_above_attributes_counts() {
+        let src = "/// Sums four lanes.\n///\n/// # Safety\n/// Caller must have AVX2.\n#[target_feature(enable = \"avx2\")]\npub unsafe fn sum(x: &[f64]) -> f64 {\n    x[0]\n}\n";
+        assert!(check_source(KERNEL_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn trailing_same_line_safety_comment_counts() {
+        let src = "pub fn f(p: *const f64) -> f64 {\n    unsafe { *p } // SAFETY: p is valid by construction\n}\n";
+        assert!(check_source(KERNEL_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn a_blank_line_breaks_safety_contiguity() {
+        let src = "// SAFETY: too far away\n\nfn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        assert_eq!(rules_of(&check_source(KERNEL_PATH, src)), [RULE_SAFETY]);
+    }
+
+    #[test]
+    fn unsafe_outside_the_allowlist_is_flagged() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: justified but in the wrong file\n    unsafe { *p }\n}\n";
+        let findings = check_source(PLAIN_PATH, src);
+        assert_eq!(rules_of(&findings), [RULE_ALLOWLIST]);
+        assert_eq!(findings[0].line, 3);
+    }
+
+    #[test]
+    fn unsafe_inside_a_string_or_comment_never_fires() {
+        let src = "fn f() -> &'static str {\n    // this comment says unsafe and that is fine\n    \"unsafe { lock().unwrap() } todo!\"\n}\n";
+        assert!(check_source(PLAIN_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_embedded_in_an_identifier_never_fires() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\nfn not_unsafe_at_all() {}\n";
+        assert!(check_source(PLAIN_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_is_one_finding_with_the_right_line() {
+        let src = "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n";
+        let findings = check_source(PLAIN_PATH, src);
+        assert_eq!(rules_of(&findings), [RULE_LOCK]);
+        assert_eq!(findings[0].line, 2);
+    }
+
+    #[test]
+    fn lock_unwrap_split_across_lines_is_still_found() {
+        let src = "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock()\n        .unwrap()\n}\n";
+        let findings = check_source(PLAIN_PATH, src);
+        assert_eq!(rules_of(&findings), [RULE_LOCK]);
+        assert_eq!(findings[0].line, 2, "span anchors on the .lock() line");
+    }
+
+    #[test]
+    fn lock_unwrap_inside_cfg_test_is_allowed() {
+        let src = "pub fn ok() {}\n\n#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() {\n        let m = std::sync::Mutex::new(1u8);\n        assert_eq!(*m.lock().unwrap(), 1);\n    }\n}\n";
+        assert!(check_source(PLAIN_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_or_else_recovery_is_allowed() {
+        let src = "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap_or_else(|p| p.into_inner())\n}\n";
+        assert!(check_source(PLAIN_PATH, src).is_empty());
+    }
+
+    #[test]
+    fn lock_unwrap_outside_src_is_not_this_rules_business() {
+        let src = "fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n";
+        assert!(check_source("rust/tests/serve_integration.rs", src).is_empty());
+    }
+
+    #[test]
+    fn banned_macros_each_produce_one_finding() {
+        for mac in ["todo!()", "unimplemented!()", "dbg!(x)"] {
+            let src = format!("fn f(x: u8) -> u8 {{\n    {mac}\n}}\n");
+            let findings = check_source(PLAIN_PATH, &src);
+            assert_eq!(rules_of(&findings), [RULE_BANNED], "{mac}");
+            assert_eq!(findings[0].line, 2);
+        }
+    }
+
+    #[test]
+    fn clippy_deny_missing_on_a_module_is_flagged() {
+        let src = "#[deny(clippy::all)]\npub mod good;\npub mod bad;\n";
+        let findings = check_source("rust/src/lib.rs", src);
+        assert_eq!(rules_of(&findings), [RULE_CLIPPY]);
+        assert_eq!(findings[0].line, 3);
+    }
+
+    #[test]
+    fn clippy_exempt_note_clears_the_finding() {
+        let src = "// clippy-exempt: generated code, lints waived upstream.\npub mod generated;\n";
+        assert!(check_source("rust/src/lib.rs", src).is_empty());
+    }
+
+    #[test]
+    fn registration_flags_an_unregistered_test_file() {
+        let cargo = "[package]\nautotests = false\nautobenches = false\n\n[[test]]\nname = \"a\"\npath = \"rust/tests/a.rs\"\n";
+        let tests = ["a.rs".to_string(), "orphan.rs".to_string()];
+        let findings = check_registration(cargo, &tests, &[]);
+        assert_eq!(rules_of(&findings), [RULE_REGISTERED]);
+        assert_eq!(findings[0].path, "rust/tests/orphan.rs");
+    }
+
+    #[test]
+    fn registration_requires_autodiscovery_off() {
+        let findings = check_registration("[package]\n", &[], &[]);
+        assert_eq!(rules_of(&findings), [RULE_REGISTERED, RULE_REGISTERED]);
+    }
+
+    #[test]
+    fn registration_accepts_a_fully_registered_layout() {
+        let cargo = "autotests = false\nautobenches = false\n[[test]]\npath = \"rust/tests/a.rs\"\n[[bench]]\npath = \"rust/benches/b.rs\"\n";
+        let tests = ["a.rs".to_string()];
+        let benches = ["b.rs".to_string()];
+        assert!(check_registration(cargo, &tests, &benches).is_empty());
+    }
+}

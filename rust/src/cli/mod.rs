@@ -176,6 +176,17 @@ COMMANDS:
                sites: persist.short_write|short_read|torn_rename|
                checksum_flip, worker.panic|stall, conn.reset|slow_read
                spec keys: p=F every=N after=N limit=N param=N
+  audit        repo-aware static analysis over this repository's own
+               sources: a lightweight Rust lexer (strings/comments
+               stripped so rules cannot misfire on literals) feeding a
+               rule engine — SAFETY-comment coverage for every unsafe,
+               the unsafe file allowlist, no .lock().unwrap() outside
+               tests, Cargo.toml target registration (autotests=false
+               means an unregistered suite never runs), banned macros
+               (todo!/unimplemented!/dbg!), and per-module
+               deny(clippy::all) pinning; prints file:line findings and
+               exits nonzero on any [--root DIR] (the same rules gate
+               `cargo test --test audit_integration`)
   help         print this help
 
 PROJECTION METHODS:

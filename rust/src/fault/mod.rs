@@ -42,6 +42,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::config::TomlDoc;
 use crate::rng::{Rng, SplitMix64};
+use crate::sync::lock_unpoisoned;
 
 /// Number of named injection sites.
 pub const SITE_COUNT: usize = 8;
@@ -323,11 +324,14 @@ impl Injector {
     /// Total times `site` was reached (configured sites only count when a
     /// plan is installed — unconfigured sites short-circuit).
     pub fn hits(&self, site: FaultSite) -> u64 {
+        // Relaxed: point-in-time telemetry snapshot; no data is published
+        // through this counter, so atomicity alone suffices.
         self.hits[site.index()].load(Ordering::Relaxed)
     }
 
     /// Total times `site` actually fired.
     pub fn fired(&self, site: FaultSite) -> u64 {
+        // Relaxed: same as `hits` — a statistic, not a synchronization edge.
         self.fired[site.index()].load(Ordering::Relaxed)
     }
 
@@ -335,12 +339,17 @@ impl Injector {
     fn decide(&self, site: FaultSite) -> Option<u64> {
         let spec = self.plan.site(site)?;
         let i = site.index();
+        // Relaxed: each thread only needs a unique ticket value; the
+        // fetch_add's atomicity guarantees that without any ordering.
         let n = self.hits[i].fetch_add(1, Ordering::Relaxed);
         if !spec.schedule_fires(self.plan.seed, site, n) {
             return None;
         }
         if spec.limit > 0 {
-            // exact cap: only count a fire we actually claim
+            // Exact cap: only count a fire we actually claim. Relaxed is
+            // enough for the whole CAS loop — the loop's correctness rests
+            // on the atomicity of compare_exchange (at most `limit` claims
+            // ever succeed), not on ordering with any other location.
             let mut cur = self.fired[i].load(Ordering::Relaxed);
             loop {
                 if cur >= spec.limit {
@@ -357,6 +366,7 @@ impl Injector {
                 }
             }
         } else {
+            // Relaxed: unlimited site — pure statistic, as in `hits`.
             self.fired[i].fetch_add(1, Ordering::Relaxed);
         }
         Some(spec.param)
@@ -377,6 +387,15 @@ impl Injector {
     }
 }
 
+// Memory-ordering protocol: `ENABLED` is only a fast-path *hint* — it never
+// publishes data by itself. Any thread that sees it `true` goes on to lock
+// `INSTALLED`, and that mutex acquire synchronizes with the unlock in
+// `install`/`clear`, so the injector read under the lock is always current.
+// A stale hint is benign in both directions: a stale `false` skips injection
+// for a hit that raced installation (indistinguishable from the hit landing
+// a moment earlier), and a stale `true` costs one mutex round-trip that
+// finds `None`. Stores use `Release` so the flag itself is conservatively
+// ordered after the plan swap; loads stay `Relaxed` per the above.
 static ENABLED: AtomicBool = AtomicBool::new(false);
 static INSTALLED: Mutex<Option<Arc<Injector>>> = Mutex::new(None);
 
@@ -386,25 +405,30 @@ static INSTALLED: Mutex<Option<Arc<Injector>>> = Mutex::new(None);
 pub fn install(plan: FaultPlan) -> Arc<Injector> {
     let inj = Arc::new(Injector::new(plan));
     let enable = !inj.plan.is_empty();
-    *INSTALLED.lock().unwrap() = Some(Arc::clone(&inj));
-    ENABLED.store(enable, Ordering::SeqCst);
+    *lock_unpoisoned(&INSTALLED) = Some(Arc::clone(&inj));
+    // Release: flips the hint only after the mutex above published the
+    // plan (see the protocol note on `ENABLED`).
+    ENABLED.store(enable, Ordering::Release);
     inj
 }
 
 /// Remove the installed plan; every subsequent [`fire`] is a no-op.
 pub fn clear() {
-    ENABLED.store(false, Ordering::SeqCst);
-    *INSTALLED.lock().unwrap() = None;
+    // Release: hint off first so new hits short-circuit; stragglers that
+    // already read `true` find `None` under the `INSTALLED` lock.
+    ENABLED.store(false, Ordering::Release);
+    *lock_unpoisoned(&INSTALLED) = None;
 }
 
 /// Is a non-empty plan installed?
 pub fn active() -> bool {
+    // Relaxed: hint only — see the protocol note on `ENABLED`.
     ENABLED.load(Ordering::Relaxed)
 }
 
 /// The currently installed injector, if any.
 pub fn installed() -> Option<Arc<Injector>> {
-    INSTALLED.lock().unwrap().clone()
+    lock_unpoisoned(&INSTALLED).clone()
 }
 
 /// The hook production code calls at a site: `None` (overwhelmingly, and
@@ -412,10 +436,12 @@ pub fn installed() -> Option<Arc<Injector>> {
 /// when the installed plan says this hit fires.
 #[inline]
 pub fn fire(site: FaultSite) -> Option<u64> {
+    // Relaxed: fast-path hint; the `INSTALLED` mutex below is the real
+    // synchronization point (see the protocol note on `ENABLED`).
     if !ENABLED.load(Ordering::Relaxed) {
         return None;
     }
-    let inj = INSTALLED.lock().unwrap().clone()?;
+    let inj = lock_unpoisoned(&INSTALLED).clone()?;
     inj.decide(site)
 }
 

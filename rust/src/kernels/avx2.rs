@@ -72,353 +72,533 @@ pub static OPS: KernelOps = KernelOps {
 
 // ------------------------------------------------------------------- f64
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn colmax_f64_imp(xs: &[f64]) -> f64 {
-    let sign = _mm256_set1_pd(-0.0);
-    let mut acc0 = _mm256_setzero_pd();
-    let mut acc1 = _mm256_setzero_pd();
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        acc0 = _mm256_max_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr())));
-        acc1 = _mm256_max_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr().add(4))));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sign = _mm256_set1_pd(-0.0);
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            acc0 = _mm256_max_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr())));
+            acc1 = _mm256_max_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr().add(4))));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f64; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            let lo = _mm256_loadu_pd(pad.as_ptr());
+            let hi = _mm256_loadu_pd(pad.as_ptr().add(4));
+            acc0 = _mm256_max_pd(acc0, _mm256_andnot_pd(sign, lo));
+            acc1 = _mm256_max_pd(acc1, _mm256_andnot_pd(sign, hi));
+        }
+        let mut lanes = [0.0f64; LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        lanes.iter().fold(0.0f64, |m, &x| m.max(x))
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f64; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        acc0 = _mm256_max_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr())));
-        acc1 = _mm256_max_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr().add(4))));
-    }
-    let mut lanes = [0.0f64; LANES];
-    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
-    lanes.iter().fold(0.0f64, |m, &x| m.max(x))
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn sum_abs_f64_imp(xs: &[f64]) -> f64 {
-    let sign = _mm256_set1_pd(-0.0);
-    let mut acc0 = _mm256_setzero_pd();
-    let mut acc1 = _mm256_setzero_pd();
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr())));
-        acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr().add(4))));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sign = _mm256_set1_pd(-0.0);
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr())));
+            acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(ch.as_ptr().add(4))));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f64; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            let lo = _mm256_loadu_pd(pad.as_ptr());
+            let hi = _mm256_loadu_pd(pad.as_ptr().add(4));
+            acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, lo));
+            acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, hi));
+        }
+        let mut lanes = [0.0f64; LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        combine8(&lanes)
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f64; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        acc0 = _mm256_add_pd(acc0, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr())));
-        acc1 = _mm256_add_pd(acc1, _mm256_andnot_pd(sign, _mm256_loadu_pd(pad.as_ptr().add(4))));
-    }
-    let mut lanes = [0.0f64; LANES];
-    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn sumsq_f64_imp(xs: &[f64]) -> f64 {
-    let mut acc0 = _mm256_setzero_pd();
-    let mut acc1 = _mm256_setzero_pd();
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        let a = _mm256_loadu_pd(ch.as_ptr());
-        let b = _mm256_loadu_pd(ch.as_ptr().add(4));
-        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(a, a));
-        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(b, b));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            let a = _mm256_loadu_pd(ch.as_ptr());
+            let b = _mm256_loadu_pd(ch.as_ptr().add(4));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(a, a));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(b, b));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f64; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            let a = _mm256_loadu_pd(pad.as_ptr());
+            let b = _mm256_loadu_pd(pad.as_ptr().add(4));
+            acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(a, a));
+            acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(b, b));
+        }
+        let mut lanes = [0.0f64; LANES];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        combine8(&lanes)
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f64; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        let a = _mm256_loadu_pd(pad.as_ptr());
-        let b = _mm256_loadu_pd(pad.as_ptr().add(4));
-        acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(a, a));
-        acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(b, b));
-    }
-    let mut lanes = [0.0f64; LANES];
-    _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
-    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn clip_into_f64_imp(src: &[f64], c: f64, dst: &mut [f64]) {
-    debug_assert_eq!(src.len(), dst.len());
-    let lo = _mm256_set1_pd(-c);
-    let hi = _mm256_set1_pd(c);
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = _mm256_loadu_pd(src.as_ptr().add(i));
-        _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 4];
-        pad[..n - i].copy_from_slice(&src[i..]);
-        let x = _mm256_loadu_pd(pad.as_ptr());
-        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
-        dst[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = _mm256_set1_pd(-c);
+        let hi = _mm256_set1_pd(c);
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(src.as_ptr().add(i));
+            _mm256_storeu_pd(dst.as_mut_ptr().add(i), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 4];
+            pad[..n - i].copy_from_slice(&src[i..]);
+            let x = _mm256_loadu_pd(pad.as_ptr());
+            _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+            dst[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn clip_inplace_f64_imp(xs: &mut [f64], c: f64) {
-    let lo = _mm256_set1_pd(-c);
-    let hi = _mm256_set1_pd(c);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = _mm256_loadu_pd(xs.as_ptr().add(i));
-        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 4];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = _mm256_loadu_pd(pad.as_ptr());
-        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let lo = _mm256_set1_pd(-c);
+        let hi = _mm256_set1_pd(c);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(xs.as_ptr().add(i));
+            _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 4];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = _mm256_loadu_pd(pad.as_ptr());
+            _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_min_pd(_mm256_max_pd(x, lo), hi));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn soft_threshold_f64_imp(xs: &mut [f64], tau: f64) {
-    let t = _mm256_set1_pd(tau);
-    let z = _mm256_setzero_pd();
-    let sign = _mm256_set1_pd(-0.0);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = _mm256_loadu_pd(xs.as_ptr().add(i));
-        let a = _mm256_max_pd(_mm256_sub_pd(x, t), z);
-        let b = _mm256_max_pd(_mm256_sub_pd(_mm256_xor_pd(x, sign), t), z);
-        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_sub_pd(a, b));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 4];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = _mm256_loadu_pd(pad.as_ptr());
-        let a = _mm256_max_pd(_mm256_sub_pd(x, t), z);
-        let b = _mm256_max_pd(_mm256_sub_pd(_mm256_xor_pd(x, sign), t), z);
-        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_sub_pd(a, b));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let t = _mm256_set1_pd(tau);
+        let z = _mm256_setzero_pd();
+        let sign = _mm256_set1_pd(-0.0);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(xs.as_ptr().add(i));
+            let a = _mm256_max_pd(_mm256_sub_pd(x, t), z);
+            let b = _mm256_max_pd(_mm256_sub_pd(_mm256_xor_pd(x, sign), t), z);
+            _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_sub_pd(a, b));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 4];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = _mm256_loadu_pd(pad.as_ptr());
+            let a = _mm256_max_pd(_mm256_sub_pd(x, t), z);
+            let b = _mm256_max_pd(_mm256_sub_pd(_mm256_xor_pd(x, sign), t), z);
+            _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_sub_pd(a, b));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn scale_f64_imp(xs: &mut [f64], s: f64) {
-    let sv = _mm256_set1_pd(s);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = _mm256_loadu_pd(xs.as_ptr().add(i));
-        _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_mul_pd(x, sv));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 4];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = _mm256_loadu_pd(pad.as_ptr());
-        _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_mul_pd(x, sv));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sv = _mm256_set1_pd(s);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = _mm256_loadu_pd(xs.as_ptr().add(i));
+            _mm256_storeu_pd(xs.as_mut_ptr().add(i), _mm256_mul_pd(x, sv));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 4];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = _mm256_loadu_pd(pad.as_ptr());
+            _mm256_storeu_pd(pad.as_mut_ptr(), _mm256_mul_pd(x, sv));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_f64_imp(acc: &mut [f64], a: f64, row: &[f64]) {
-    debug_assert_eq!(acc.len(), row.len());
-    let av = _mm256_set1_pd(a);
-    let n = acc.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let d = _mm256_loadu_pd(acc.as_ptr().add(i));
-        let r = _mm256_loadu_pd(row.as_ptr().add(i));
-        _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_add_pd(d, _mm256_mul_pd(av, r)));
-        i += 4;
-    }
-    if i < n {
-        let mut pad_d = [0.0f64; 4];
-        let mut pad_r = [0.0f64; 4];
-        pad_d[..n - i].copy_from_slice(&acc[i..]);
-        pad_r[..n - i].copy_from_slice(&row[i..]);
-        let d = _mm256_loadu_pd(pad_d.as_ptr());
-        let r = _mm256_loadu_pd(pad_r.as_ptr());
-        _mm256_storeu_pd(pad_d.as_mut_ptr(), _mm256_add_pd(d, _mm256_mul_pd(av, r)));
-        acc[i..].copy_from_slice(&pad_d[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(acc.len(), row.len());
+        let av = _mm256_set1_pd(a);
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = _mm256_loadu_pd(acc.as_ptr().add(i));
+            let r = _mm256_loadu_pd(row.as_ptr().add(i));
+            _mm256_storeu_pd(acc.as_mut_ptr().add(i), _mm256_add_pd(d, _mm256_mul_pd(av, r)));
+            i += 4;
+        }
+        if i < n {
+            let mut pad_d = [0.0f64; 4];
+            let mut pad_r = [0.0f64; 4];
+            pad_d[..n - i].copy_from_slice(&acc[i..]);
+            pad_r[..n - i].copy_from_slice(&row[i..]);
+            let d = _mm256_loadu_pd(pad_d.as_ptr());
+            let r = _mm256_loadu_pd(pad_r.as_ptr());
+            _mm256_storeu_pd(pad_d.as_mut_ptr(), _mm256_add_pd(d, _mm256_mul_pd(av, r)));
+            acc[i..].copy_from_slice(&pad_d[..n - i]);
+        }
     }
 }
 
 // ------------------------------------------------------------------- f32
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn colmax_f32_imp(xs: &[f32]) -> f32 {
-    let sign = _mm256_set1_ps(-0.0);
-    let mut acc = _mm256_setzero_ps();
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(ch.as_ptr())));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(ch.as_ptr())));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f32; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(pad.as_ptr())));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        lanes.iter().fold(0.0f32, |m, &x| m.max(x))
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f32; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        acc = _mm256_max_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(pad.as_ptr())));
-    }
-    let mut lanes = [0.0f32; LANES];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
-    lanes.iter().fold(0.0f32, |m, &x| m.max(x))
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn sum_abs_f32_imp(xs: &[f32]) -> f32 {
-    let sign = _mm256_set1_ps(-0.0);
-    let mut acc = _mm256_setzero_ps();
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(ch.as_ptr())));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sign = _mm256_set1_ps(-0.0);
+        let mut acc = _mm256_setzero_ps();
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(ch.as_ptr())));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f32; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(pad.as_ptr())));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        combine8(&lanes)
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f32; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        acc = _mm256_add_ps(acc, _mm256_andnot_ps(sign, _mm256_loadu_ps(pad.as_ptr())));
-    }
-    let mut lanes = [0.0f32; LANES];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn sumsq_f32_imp(xs: &[f32]) -> f32 {
-    let mut acc = _mm256_setzero_ps();
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        let a = _mm256_loadu_ps(ch.as_ptr());
-        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, a));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = _mm256_setzero_ps();
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            let a = _mm256_loadu_ps(ch.as_ptr());
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(a, a));
+        }
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f32; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            let a = _mm256_loadu_ps(pad.as_ptr());
+            acc = _mm256_add_ps(acc, _mm256_mul_ps(a, a));
+        }
+        let mut lanes = [0.0f32; LANES];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+        combine8(&lanes)
     }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f32; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        let a = _mm256_loadu_ps(pad.as_ptr());
-        acc = _mm256_add_ps(acc, _mm256_mul_ps(a, a));
-    }
-    let mut lanes = [0.0f32; LANES];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn clip_into_f32_imp(src: &[f32], c: f32, dst: &mut [f32]) {
-    debug_assert_eq!(src.len(), dst.len());
-    let lo = _mm256_set1_ps(-c);
-    let hi = _mm256_set1_ps(c);
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let x = _mm256_loadu_ps(src.as_ptr().add(i));
-        _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
-        i += 8;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 8];
-        pad[..n - i].copy_from_slice(&src[i..]);
-        let x = _mm256_loadu_ps(pad.as_ptr());
-        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
-        dst[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = _mm256_set1_ps(-c);
+        let hi = _mm256_set1_ps(c);
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(src.as_ptr().add(i));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+            i += 8;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 8];
+            pad[..n - i].copy_from_slice(&src[i..]);
+            let x = _mm256_loadu_ps(pad.as_ptr());
+            _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+            dst[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn clip_inplace_f32_imp(xs: &mut [f32], c: f32) {
-    let lo = _mm256_set1_ps(-c);
-    let hi = _mm256_set1_ps(c);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
-        _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
-        i += 8;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 8];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = _mm256_loadu_ps(pad.as_ptr());
-        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let lo = _mm256_set1_ps(-c);
+        let hi = _mm256_set1_ps(c);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+            i += 8;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 8];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = _mm256_loadu_ps(pad.as_ptr());
+            _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_min_ps(_mm256_max_ps(x, lo), hi));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn soft_threshold_f32_imp(xs: &mut [f32], tau: f32) {
-    let t = _mm256_set1_ps(tau);
-    let z = _mm256_setzero_ps();
-    let sign = _mm256_set1_ps(-0.0);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
-        let a = _mm256_max_ps(_mm256_sub_ps(x, t), z);
-        let b = _mm256_max_ps(_mm256_sub_ps(_mm256_xor_ps(x, sign), t), z);
-        _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_sub_ps(a, b));
-        i += 8;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 8];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = _mm256_loadu_ps(pad.as_ptr());
-        let a = _mm256_max_ps(_mm256_sub_ps(x, t), z);
-        let b = _mm256_max_ps(_mm256_sub_ps(_mm256_xor_ps(x, sign), t), z);
-        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_sub_ps(a, b));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let t = _mm256_set1_ps(tau);
+        let z = _mm256_setzero_ps();
+        let sign = _mm256_set1_ps(-0.0);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            let a = _mm256_max_ps(_mm256_sub_ps(x, t), z);
+            let b = _mm256_max_ps(_mm256_sub_ps(_mm256_xor_ps(x, sign), t), z);
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_sub_ps(a, b));
+            i += 8;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 8];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = _mm256_loadu_ps(pad.as_ptr());
+            let a = _mm256_max_ps(_mm256_sub_ps(x, t), z);
+            let b = _mm256_max_ps(_mm256_sub_ps(_mm256_xor_ps(x, sign), t), z);
+            _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_sub_ps(a, b));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn scale_f32_imp(xs: &mut [f32], s: f32) {
-    let sv = _mm256_set1_ps(s);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let x = _mm256_loadu_ps(xs.as_ptr().add(i));
-        _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_mul_ps(x, sv));
-        i += 8;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 8];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = _mm256_loadu_ps(pad.as_ptr());
-        _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_mul_ps(x, sv));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sv = _mm256_set1_ps(s);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_loadu_ps(xs.as_ptr().add(i));
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), _mm256_mul_ps(x, sv));
+            i += 8;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 8];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = _mm256_loadu_ps(pad.as_ptr());
+            _mm256_storeu_ps(pad.as_mut_ptr(), _mm256_mul_ps(x, sv));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports AVX2 (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_f32_imp(acc: &mut [f32], a: f32, row: &[f32]) {
-    debug_assert_eq!(acc.len(), row.len());
-    let av = _mm256_set1_ps(a);
-    let n = acc.len();
-    let mut i = 0usize;
-    while i + 8 <= n {
-        let d = _mm256_loadu_ps(acc.as_ptr().add(i));
-        let r = _mm256_loadu_ps(row.as_ptr().add(i));
-        _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(av, r)));
-        i += 8;
-    }
-    if i < n {
-        let mut pad_d = [0.0f32; 8];
-        let mut pad_r = [0.0f32; 8];
-        pad_d[..n - i].copy_from_slice(&acc[i..]);
-        pad_r[..n - i].copy_from_slice(&row[i..]);
-        let d = _mm256_loadu_ps(pad_d.as_ptr());
-        let r = _mm256_loadu_ps(pad_r.as_ptr());
-        _mm256_storeu_ps(pad_d.as_mut_ptr(), _mm256_add_ps(d, _mm256_mul_ps(av, r)));
-        acc[i..].copy_from_slice(&pad_d[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(acc.len(), row.len());
+        let av = _mm256_set1_ps(a);
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_loadu_ps(acc.as_ptr().add(i));
+            let r = _mm256_loadu_ps(row.as_ptr().add(i));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(d, _mm256_mul_ps(av, r)));
+            i += 8;
+        }
+        if i < n {
+            let mut pad_d = [0.0f32; 8];
+            let mut pad_r = [0.0f32; 8];
+            pad_d[..n - i].copy_from_slice(&acc[i..]);
+            pad_r[..n - i].copy_from_slice(&row[i..]);
+            let d = _mm256_loadu_ps(pad_d.as_ptr());
+            let r = _mm256_loadu_ps(pad_r.as_ptr());
+            _mm256_storeu_ps(pad_d.as_mut_ptr(), _mm256_add_ps(d, _mm256_mul_ps(av, r)));
+            acc[i..].copy_from_slice(&pad_d[..n - i]);
+        }
     }
 }
 
@@ -427,36 +607,42 @@ unsafe fn axpy_f32_imp(acc: &mut [f32], a: f32, row: &[f32]) {
 /// Safe entry: `max_i |x_i|` with AVX2 (panics without AVX2 support).
 pub fn colmax_f64(xs: &[f64]) -> f64 {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { colmax_f64_imp(xs) }
 }
 
 /// Safe entry: `max_i |x_i|` with AVX2 (panics without AVX2 support).
 pub fn colmax_f32(xs: &[f32]) -> f32 {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { colmax_f32_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σ|x_i|` with AVX2.
 pub fn sum_abs_f64(xs: &[f64]) -> f64 {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { sum_abs_f64_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σ|x_i|` with AVX2.
 pub fn sum_abs_f32(xs: &[f32]) -> f32 {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { sum_abs_f32_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σx_i²` with AVX2.
 pub fn sumsq_f64(xs: &[f64]) -> f64 {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { sumsq_f64_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σx_i²` with AVX2.
 pub fn sumsq_f32(xs: &[f32]) -> f32 {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { sumsq_f32_imp(xs) }
 }
 
@@ -464,6 +650,7 @@ pub fn sumsq_f32(xs: &[f32]) -> f32 {
 pub fn clip_into_f64(src: &[f64], c: f64, dst: &mut [f64]) {
     assert_avx2!();
     assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { clip_into_f64_imp(src, c, dst) }
 }
 
@@ -471,42 +658,49 @@ pub fn clip_into_f64(src: &[f64], c: f64, dst: &mut [f64]) {
 pub fn clip_into_f32(src: &[f32], c: f32, dst: &mut [f32]) {
     assert_avx2!();
     assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { clip_into_f32_imp(src, c, dst) }
 }
 
 /// Safe entry: in-place `clamp(x, -c, c)` with AVX2.
 pub fn clip_inplace_f64(xs: &mut [f64], c: f64) {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { clip_inplace_f64_imp(xs, c) }
 }
 
 /// Safe entry: in-place `clamp(x, -c, c)` with AVX2.
 pub fn clip_inplace_f32(xs: &mut [f32], c: f32) {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { clip_inplace_f32_imp(xs, c) }
 }
 
 /// Safe entry: in-place `(x-τ)₊ − (-x-τ)₊` with AVX2.
 pub fn soft_threshold_f64(xs: &mut [f64], tau: f64) {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { soft_threshold_f64_imp(xs, tau) }
 }
 
 /// Safe entry: in-place `(x-τ)₊ − (-x-τ)₊` with AVX2.
 pub fn soft_threshold_f32(xs: &mut [f32], tau: f32) {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { soft_threshold_f32_imp(xs, tau) }
 }
 
 /// Safe entry: in-place `x·s` with AVX2.
 pub fn scale_f64(xs: &mut [f64], s: f64) {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { scale_f64_imp(xs, s) }
 }
 
 /// Safe entry: in-place `x·s` with AVX2.
 pub fn scale_f32(xs: &mut [f32], s: f32) {
     assert_avx2!();
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { scale_f32_imp(xs, s) }
 }
 
@@ -514,6 +708,7 @@ pub fn scale_f32(xs: &mut [f32], s: f32) {
 pub fn axpy_f64(acc: &mut [f64], a: f64, row: &[f64]) {
     assert_avx2!();
     assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { axpy_f64_imp(acc, a, row) }
 }
 
@@ -521,5 +716,6 @@ pub fn axpy_f64(acc: &mut [f64], a: f64, row: &[f64]) {
 pub fn axpy_f32(acc: &mut [f32], a: f32, row: &[f32]) {
     assert_avx2!();
     assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    // SAFETY: `assert_avx2!` above just proved AVX2 support at runtime.
     unsafe { axpy_f32_imp(acc, a, row) }
 }

@@ -116,7 +116,9 @@ fn is<T: 'static, U: 'static>() -> bool {
 /// Caller must have proved `T` and `U` are the same type (via [`is`]).
 #[inline(always)]
 unsafe fn cast_slice<T, U>(xs: &[T]) -> &[U] {
-    std::slice::from_raw_parts(xs.as_ptr() as *const U, xs.len())
+    // SAFETY: T == U per the caller contract, so layout, validity, and
+    // provenance are untouched; the length is the original slice length.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const U, xs.len()) }
 }
 
 /// Reinterpret `&mut [T]` as `&mut [U]`.
@@ -125,7 +127,9 @@ unsafe fn cast_slice<T, U>(xs: &[T]) -> &[U] {
 /// Caller must have proved `T` and `U` are the same type (via [`is`]).
 #[inline(always)]
 unsafe fn cast_slice_mut<T, U>(xs: &mut [T]) -> &mut [U] {
-    std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut U, xs.len())
+    // SAFETY: T == U per the caller contract; exclusivity carries over
+    // from the `&mut` borrow this function consumes.
+    unsafe { std::slice::from_raw_parts_mut(xs.as_mut_ptr() as *mut U, xs.len()) }
 }
 
 /// Reinterpret a scalar `T` as `U`.
@@ -135,7 +139,9 @@ unsafe fn cast_slice_mut<T, U>(xs: &mut [T]) -> &mut [U] {
 #[inline(always)]
 unsafe fn cast_val<T: Copy + 'static, U: 'static>(v: T) -> U {
     debug_assert!(is::<T, U>());
-    std::mem::transmute_copy(&v)
+    // SAFETY: T == U per the caller contract, so this is an identity copy
+    // of a `Copy` value.
+    unsafe { std::mem::transmute_copy(&v) }
 }
 
 macro_rules! reduce_shim {
@@ -145,10 +151,14 @@ macro_rules! reduce_shim {
         pub(crate) fn $name<T: Scalar>(xs: &[T]) -> Option<T> {
             let ops = active()?;
             if is::<T, f64>() {
+                // SAFETY: the TypeId guard above proved T == f64.
                 let r = (ops.$f64field)(unsafe { cast_slice::<T, f64>(xs) });
+                // SAFETY: same guard, identity cast back to T.
                 Some(unsafe { cast_val::<f64, T>(r) })
             } else if is::<T, f32>() {
+                // SAFETY: the TypeId guard above proved T == f32.
                 let r = (ops.$f32field)(unsafe { cast_slice::<T, f32>(xs) });
+                // SAFETY: same guard, identity cast back to T.
                 Some(unsafe { cast_val::<f32, T>(r) })
             } else {
                 None
@@ -170,16 +180,16 @@ macro_rules! inplace_shim {
                 return false;
             };
             if is::<T, f64>() {
-                (ops.$f64field)(
-                    unsafe { cast_slice_mut::<T, f64>(xs) },
-                    unsafe { cast_val::<T, f64>(p) },
-                );
+                // SAFETY: the TypeId guard above proved T == f64, so both
+                // reinterpretations are identity casts.
+                let (xs64, p64) = unsafe { (cast_slice_mut::<T, f64>(xs), cast_val::<T, f64>(p)) };
+                (ops.$f64field)(xs64, p64);
                 true
             } else if is::<T, f32>() {
-                (ops.$f32field)(
-                    unsafe { cast_slice_mut::<T, f32>(xs) },
-                    unsafe { cast_val::<T, f32>(p) },
-                );
+                // SAFETY: the TypeId guard above proved T == f32, so both
+                // reinterpretations are identity casts.
+                let (xs32, p32) = unsafe { (cast_slice_mut::<T, f32>(xs), cast_val::<T, f32>(p)) };
+                (ops.$f32field)(xs32, p32);
                 true
             } else {
                 false
@@ -199,18 +209,20 @@ pub(crate) fn clip_into<T: Scalar>(src: &[T], c: T, dst: &mut [T]) -> bool {
         return false;
     };
     if is::<T, f64>() {
-        (ops.clip_into_f64)(
-            unsafe { cast_slice::<T, f64>(src) },
-            unsafe { cast_val::<T, f64>(c) },
-            unsafe { cast_slice_mut::<T, f64>(dst) },
-        );
+        // SAFETY: the TypeId guard above proved T == f64, so all three
+        // reinterpretations are identity casts.
+        let (src64, c64) = unsafe { (cast_slice::<T, f64>(src), cast_val::<T, f64>(c)) };
+        // SAFETY: same guard; `dst` is an independent exclusive borrow.
+        let dst64 = unsafe { cast_slice_mut::<T, f64>(dst) };
+        (ops.clip_into_f64)(src64, c64, dst64);
         true
     } else if is::<T, f32>() {
-        (ops.clip_into_f32)(
-            unsafe { cast_slice::<T, f32>(src) },
-            unsafe { cast_val::<T, f32>(c) },
-            unsafe { cast_slice_mut::<T, f32>(dst) },
-        );
+        // SAFETY: the TypeId guard above proved T == f32, so all three
+        // reinterpretations are identity casts.
+        let (src32, c32) = unsafe { (cast_slice::<T, f32>(src), cast_val::<T, f32>(c)) };
+        // SAFETY: same guard; `dst` is an independent exclusive borrow.
+        let dst32 = unsafe { cast_slice_mut::<T, f32>(dst) };
+        (ops.clip_into_f32)(src32, c32, dst32);
         true
     } else {
         false
@@ -224,18 +236,20 @@ pub(crate) fn axpy<T: Scalar>(acc: &mut [T], a: T, row: &[T]) -> bool {
         return false;
     };
     if is::<T, f64>() {
-        (ops.axpy_f64)(
-            unsafe { cast_slice_mut::<T, f64>(acc) },
-            unsafe { cast_val::<T, f64>(a) },
-            unsafe { cast_slice::<T, f64>(row) },
-        );
+        // SAFETY: the TypeId guard above proved T == f64, so all three
+        // reinterpretations are identity casts.
+        let (acc64, a64) = unsafe { (cast_slice_mut::<T, f64>(acc), cast_val::<T, f64>(a)) };
+        // SAFETY: same guard; `row` is an independent shared borrow.
+        let row64 = unsafe { cast_slice::<T, f64>(row) };
+        (ops.axpy_f64)(acc64, a64, row64);
         true
     } else if is::<T, f32>() {
-        (ops.axpy_f32)(
-            unsafe { cast_slice_mut::<T, f32>(acc) },
-            unsafe { cast_val::<T, f32>(a) },
-            unsafe { cast_slice::<T, f32>(row) },
-        );
+        // SAFETY: the TypeId guard above proved T == f32, so all three
+        // reinterpretations are identity casts.
+        let (acc32, a32) = unsafe { (cast_slice_mut::<T, f32>(acc), cast_val::<T, f32>(a)) };
+        // SAFETY: same guard; `row` is an independent shared borrow.
+        let row32 = unsafe { cast_slice::<T, f32>(row) };
+        (ops.axpy_f32)(acc32, a32, row32);
         true
     } else {
         false

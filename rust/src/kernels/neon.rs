@@ -56,369 +56,545 @@ pub static OPS: KernelOps = KernelOps {
 
 // ------------------------------------------------------------------- f64
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn colmax_f64_imp(xs: &[f64]) -> f64 {
-    let mut acc = [vdupq_n_f64(0.0); 4];
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vmaxq_f64(*a, vabsq_f64(vld1q_f64(ch.as_ptr().add(2 * k))));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = [vdupq_n_f64(0.0); 4];
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vmaxq_f64(*a, vabsq_f64(vld1q_f64(ch.as_ptr().add(2 * k))));
+            }
         }
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f64; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vmaxq_f64(*a, vabsq_f64(vld1q_f64(pad.as_ptr().add(2 * k))));
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f64; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vmaxq_f64(*a, vabsq_f64(vld1q_f64(pad.as_ptr().add(2 * k))));
+            }
         }
+        let mut lanes = [0.0f64; LANES];
+        for (k, a) in acc.iter().enumerate() {
+            vst1q_f64(lanes.as_mut_ptr().add(2 * k), *a);
+        }
+        lanes.iter().fold(0.0f64, |m, &x| m.max(x))
     }
-    let mut lanes = [0.0f64; LANES];
-    for (k, a) in acc.iter().enumerate() {
-        vst1q_f64(lanes.as_mut_ptr().add(2 * k), *a);
-    }
-    lanes.iter().fold(0.0f64, |m, &x| m.max(x))
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn sum_abs_f64_imp(xs: &[f64]) -> f64 {
-    let mut acc = [vdupq_n_f64(0.0); 4];
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vaddq_f64(*a, vabsq_f64(vld1q_f64(ch.as_ptr().add(2 * k))));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = [vdupq_n_f64(0.0); 4];
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vaddq_f64(*a, vabsq_f64(vld1q_f64(ch.as_ptr().add(2 * k))));
+            }
         }
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f64; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vaddq_f64(*a, vabsq_f64(vld1q_f64(pad.as_ptr().add(2 * k))));
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f64; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vaddq_f64(*a, vabsq_f64(vld1q_f64(pad.as_ptr().add(2 * k))));
+            }
         }
+        let mut lanes = [0.0f64; LANES];
+        for (k, a) in acc.iter().enumerate() {
+            vst1q_f64(lanes.as_mut_ptr().add(2 * k), *a);
+        }
+        combine8(&lanes)
     }
-    let mut lanes = [0.0f64; LANES];
-    for (k, a) in acc.iter().enumerate() {
-        vst1q_f64(lanes.as_mut_ptr().add(2 * k), *a);
-    }
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn sumsq_f64_imp(xs: &[f64]) -> f64 {
-    let mut acc = [vdupq_n_f64(0.0); 4];
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        for (k, a) in acc.iter_mut().enumerate() {
-            let x = vld1q_f64(ch.as_ptr().add(2 * k));
-            *a = vaddq_f64(*a, vmulq_f64(x, x));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = [vdupq_n_f64(0.0); 4];
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (k, a) in acc.iter_mut().enumerate() {
+                let x = vld1q_f64(ch.as_ptr().add(2 * k));
+                *a = vaddq_f64(*a, vmulq_f64(x, x));
+            }
         }
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f64; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        for (k, a) in acc.iter_mut().enumerate() {
-            let x = vld1q_f64(pad.as_ptr().add(2 * k));
-            *a = vaddq_f64(*a, vmulq_f64(x, x));
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f64; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            for (k, a) in acc.iter_mut().enumerate() {
+                let x = vld1q_f64(pad.as_ptr().add(2 * k));
+                *a = vaddq_f64(*a, vmulq_f64(x, x));
+            }
         }
+        let mut lanes = [0.0f64; LANES];
+        for (k, a) in acc.iter().enumerate() {
+            vst1q_f64(lanes.as_mut_ptr().add(2 * k), *a);
+        }
+        combine8(&lanes)
     }
-    let mut lanes = [0.0f64; LANES];
-    for (k, a) in acc.iter().enumerate() {
-        vst1q_f64(lanes.as_mut_ptr().add(2 * k), *a);
-    }
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn clip_into_f64_imp(src: &[f64], c: f64, dst: &mut [f64]) {
-    debug_assert_eq!(src.len(), dst.len());
-    let lo = vdupq_n_f64(-c);
-    let hi = vdupq_n_f64(c);
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 2 <= n {
-        let x = vld1q_f64(src.as_ptr().add(i));
-        vst1q_f64(dst.as_mut_ptr().add(i), vminq_f64(vmaxq_f64(x, lo), hi));
-        i += 2;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 2];
-        pad[..n - i].copy_from_slice(&src[i..]);
-        let x = vld1q_f64(pad.as_ptr());
-        vst1q_f64(pad.as_mut_ptr(), vminq_f64(vmaxq_f64(x, lo), hi));
-        dst[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = vdupq_n_f64(-c);
+        let hi = vdupq_n_f64(c);
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let x = vld1q_f64(src.as_ptr().add(i));
+            vst1q_f64(dst.as_mut_ptr().add(i), vminq_f64(vmaxq_f64(x, lo), hi));
+            i += 2;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 2];
+            pad[..n - i].copy_from_slice(&src[i..]);
+            let x = vld1q_f64(pad.as_ptr());
+            vst1q_f64(pad.as_mut_ptr(), vminq_f64(vmaxq_f64(x, lo), hi));
+            dst[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn clip_inplace_f64_imp(xs: &mut [f64], c: f64) {
-    let lo = vdupq_n_f64(-c);
-    let hi = vdupq_n_f64(c);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 2 <= n {
-        let x = vld1q_f64(xs.as_ptr().add(i));
-        vst1q_f64(xs.as_mut_ptr().add(i), vminq_f64(vmaxq_f64(x, lo), hi));
-        i += 2;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 2];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = vld1q_f64(pad.as_ptr());
-        vst1q_f64(pad.as_mut_ptr(), vminq_f64(vmaxq_f64(x, lo), hi));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let lo = vdupq_n_f64(-c);
+        let hi = vdupq_n_f64(c);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let x = vld1q_f64(xs.as_ptr().add(i));
+            vst1q_f64(xs.as_mut_ptr().add(i), vminq_f64(vmaxq_f64(x, lo), hi));
+            i += 2;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 2];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = vld1q_f64(pad.as_ptr());
+            vst1q_f64(pad.as_mut_ptr(), vminq_f64(vmaxq_f64(x, lo), hi));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn soft_threshold_f64_imp(xs: &mut [f64], tau: f64) {
-    let t = vdupq_n_f64(tau);
-    let z = vdupq_n_f64(0.0);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 2 <= n {
-        let x = vld1q_f64(xs.as_ptr().add(i));
-        let a = vmaxq_f64(vsubq_f64(x, t), z);
-        let b = vmaxq_f64(vsubq_f64(vnegq_f64(x), t), z);
-        vst1q_f64(xs.as_mut_ptr().add(i), vsubq_f64(a, b));
-        i += 2;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 2];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = vld1q_f64(pad.as_ptr());
-        let a = vmaxq_f64(vsubq_f64(x, t), z);
-        let b = vmaxq_f64(vsubq_f64(vnegq_f64(x), t), z);
-        vst1q_f64(pad.as_mut_ptr(), vsubq_f64(a, b));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let t = vdupq_n_f64(tau);
+        let z = vdupq_n_f64(0.0);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let x = vld1q_f64(xs.as_ptr().add(i));
+            let a = vmaxq_f64(vsubq_f64(x, t), z);
+            let b = vmaxq_f64(vsubq_f64(vnegq_f64(x), t), z);
+            vst1q_f64(xs.as_mut_ptr().add(i), vsubq_f64(a, b));
+            i += 2;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 2];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = vld1q_f64(pad.as_ptr());
+            let a = vmaxq_f64(vsubq_f64(x, t), z);
+            let b = vmaxq_f64(vsubq_f64(vnegq_f64(x), t), z);
+            vst1q_f64(pad.as_mut_ptr(), vsubq_f64(a, b));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn scale_f64_imp(xs: &mut [f64], s: f64) {
-    let sv = vdupq_n_f64(s);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 2 <= n {
-        let x = vld1q_f64(xs.as_ptr().add(i));
-        vst1q_f64(xs.as_mut_ptr().add(i), vmulq_f64(x, sv));
-        i += 2;
-    }
-    if i < n {
-        let mut pad = [0.0f64; 2];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = vld1q_f64(pad.as_ptr());
-        vst1q_f64(pad.as_mut_ptr(), vmulq_f64(x, sv));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sv = vdupq_n_f64(s);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let x = vld1q_f64(xs.as_ptr().add(i));
+            vst1q_f64(xs.as_mut_ptr().add(i), vmulq_f64(x, sv));
+            i += 2;
+        }
+        if i < n {
+            let mut pad = [0.0f64; 2];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = vld1q_f64(pad.as_ptr());
+            vst1q_f64(pad.as_mut_ptr(), vmulq_f64(x, sv));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn axpy_f64_imp(acc: &mut [f64], a: f64, row: &[f64]) {
-    debug_assert_eq!(acc.len(), row.len());
-    let av = vdupq_n_f64(a);
-    let n = acc.len();
-    let mut i = 0usize;
-    while i + 2 <= n {
-        let d = vld1q_f64(acc.as_ptr().add(i));
-        let r = vld1q_f64(row.as_ptr().add(i));
-        vst1q_f64(acc.as_mut_ptr().add(i), vaddq_f64(d, vmulq_f64(av, r)));
-        i += 2;
-    }
-    if i < n {
-        let mut pad_d = [0.0f64; 2];
-        let mut pad_r = [0.0f64; 2];
-        pad_d[..n - i].copy_from_slice(&acc[i..]);
-        pad_r[..n - i].copy_from_slice(&row[i..]);
-        let d = vld1q_f64(pad_d.as_ptr());
-        let r = vld1q_f64(pad_r.as_ptr());
-        vst1q_f64(pad_d.as_mut_ptr(), vaddq_f64(d, vmulq_f64(av, r)));
-        acc[i..].copy_from_slice(&pad_d[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(acc.len(), row.len());
+        let av = vdupq_n_f64(a);
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 2 <= n {
+            let d = vld1q_f64(acc.as_ptr().add(i));
+            let r = vld1q_f64(row.as_ptr().add(i));
+            vst1q_f64(acc.as_mut_ptr().add(i), vaddq_f64(d, vmulq_f64(av, r)));
+            i += 2;
+        }
+        if i < n {
+            let mut pad_d = [0.0f64; 2];
+            let mut pad_r = [0.0f64; 2];
+            pad_d[..n - i].copy_from_slice(&acc[i..]);
+            pad_r[..n - i].copy_from_slice(&row[i..]);
+            let d = vld1q_f64(pad_d.as_ptr());
+            let r = vld1q_f64(pad_r.as_ptr());
+            vst1q_f64(pad_d.as_mut_ptr(), vaddq_f64(d, vmulq_f64(av, r)));
+            acc[i..].copy_from_slice(&pad_d[..n - i]);
+        }
     }
 }
 
 // ------------------------------------------------------------------- f32
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn colmax_f32_imp(xs: &[f32]) -> f32 {
-    let mut acc = [vdupq_n_f32(0.0); 2];
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vmaxq_f32(*a, vabsq_f32(vld1q_f32(ch.as_ptr().add(4 * k))));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = [vdupq_n_f32(0.0); 2];
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vmaxq_f32(*a, vabsq_f32(vld1q_f32(ch.as_ptr().add(4 * k))));
+            }
         }
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f32; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vmaxq_f32(*a, vabsq_f32(vld1q_f32(pad.as_ptr().add(4 * k))));
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f32; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vmaxq_f32(*a, vabsq_f32(vld1q_f32(pad.as_ptr().add(4 * k))));
+            }
         }
+        let mut lanes = [0.0f32; LANES];
+        for (k, a) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * k), *a);
+        }
+        lanes.iter().fold(0.0f32, |m, &x| m.max(x))
     }
-    let mut lanes = [0.0f32; LANES];
-    for (k, a) in acc.iter().enumerate() {
-        vst1q_f32(lanes.as_mut_ptr().add(4 * k), *a);
-    }
-    lanes.iter().fold(0.0f32, |m, &x| m.max(x))
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn sum_abs_f32_imp(xs: &[f32]) -> f32 {
-    let mut acc = [vdupq_n_f32(0.0); 2];
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vaddq_f32(*a, vabsq_f32(vld1q_f32(ch.as_ptr().add(4 * k))));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = [vdupq_n_f32(0.0); 2];
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vaddq_f32(*a, vabsq_f32(vld1q_f32(ch.as_ptr().add(4 * k))));
+            }
         }
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f32; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        for (k, a) in acc.iter_mut().enumerate() {
-            *a = vaddq_f32(*a, vabsq_f32(vld1q_f32(pad.as_ptr().add(4 * k))));
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f32; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            for (k, a) in acc.iter_mut().enumerate() {
+                *a = vaddq_f32(*a, vabsq_f32(vld1q_f32(pad.as_ptr().add(4 * k))));
+            }
         }
+        let mut lanes = [0.0f32; LANES];
+        for (k, a) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * k), *a);
+        }
+        combine8(&lanes)
     }
-    let mut lanes = [0.0f32; LANES];
-    for (k, a) in acc.iter().enumerate() {
-        vst1q_f32(lanes.as_mut_ptr().add(4 * k), *a);
-    }
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn sumsq_f32_imp(xs: &[f32]) -> f32 {
-    let mut acc = [vdupq_n_f32(0.0); 2];
-    let mut chunks = xs.chunks_exact(LANES);
-    for ch in chunks.by_ref() {
-        for (k, a) in acc.iter_mut().enumerate() {
-            let x = vld1q_f32(ch.as_ptr().add(4 * k));
-            *a = vaddq_f32(*a, vmulq_f32(x, x));
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let mut acc = [vdupq_n_f32(0.0); 2];
+        let mut chunks = xs.chunks_exact(LANES);
+        for ch in chunks.by_ref() {
+            for (k, a) in acc.iter_mut().enumerate() {
+                let x = vld1q_f32(ch.as_ptr().add(4 * k));
+                *a = vaddq_f32(*a, vmulq_f32(x, x));
+            }
         }
-    }
-    let rem = chunks.remainder();
-    if !rem.is_empty() {
-        let mut pad = [0.0f32; LANES];
-        pad[..rem.len()].copy_from_slice(rem);
-        for (k, a) in acc.iter_mut().enumerate() {
-            let x = vld1q_f32(pad.as_ptr().add(4 * k));
-            *a = vaddq_f32(*a, vmulq_f32(x, x));
+        let rem = chunks.remainder();
+        if !rem.is_empty() {
+            let mut pad = [0.0f32; LANES];
+            pad[..rem.len()].copy_from_slice(rem);
+            for (k, a) in acc.iter_mut().enumerate() {
+                let x = vld1q_f32(pad.as_ptr().add(4 * k));
+                *a = vaddq_f32(*a, vmulq_f32(x, x));
+            }
         }
+        let mut lanes = [0.0f32; LANES];
+        for (k, a) in acc.iter().enumerate() {
+            vst1q_f32(lanes.as_mut_ptr().add(4 * k), *a);
+        }
+        combine8(&lanes)
     }
-    let mut lanes = [0.0f32; LANES];
-    for (k, a) in acc.iter().enumerate() {
-        vst1q_f32(lanes.as_mut_ptr().add(4 * k), *a);
-    }
-    combine8(&lanes)
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn clip_into_f32_imp(src: &[f32], c: f32, dst: &mut [f32]) {
-    debug_assert_eq!(src.len(), dst.len());
-    let lo = vdupq_n_f32(-c);
-    let hi = vdupq_n_f32(c);
-    let n = src.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = vld1q_f32(src.as_ptr().add(i));
-        vst1q_f32(dst.as_mut_ptr().add(i), vminq_f32(vmaxq_f32(x, lo), hi));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 4];
-        pad[..n - i].copy_from_slice(&src[i..]);
-        let x = vld1q_f32(pad.as_ptr());
-        vst1q_f32(pad.as_mut_ptr(), vminq_f32(vmaxq_f32(x, lo), hi));
-        dst[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(src.len(), dst.len());
+        let lo = vdupq_n_f32(-c);
+        let hi = vdupq_n_f32(c);
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(src.as_ptr().add(i));
+            vst1q_f32(dst.as_mut_ptr().add(i), vminq_f32(vmaxq_f32(x, lo), hi));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 4];
+            pad[..n - i].copy_from_slice(&src[i..]);
+            let x = vld1q_f32(pad.as_ptr());
+            vst1q_f32(pad.as_mut_ptr(), vminq_f32(vmaxq_f32(x, lo), hi));
+            dst[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn clip_inplace_f32_imp(xs: &mut [f32], c: f32) {
-    let lo = vdupq_n_f32(-c);
-    let hi = vdupq_n_f32(c);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = vld1q_f32(xs.as_ptr().add(i));
-        vst1q_f32(xs.as_mut_ptr().add(i), vminq_f32(vmaxq_f32(x, lo), hi));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 4];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = vld1q_f32(pad.as_ptr());
-        vst1q_f32(pad.as_mut_ptr(), vminq_f32(vmaxq_f32(x, lo), hi));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let lo = vdupq_n_f32(-c);
+        let hi = vdupq_n_f32(c);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            vst1q_f32(xs.as_mut_ptr().add(i), vminq_f32(vmaxq_f32(x, lo), hi));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 4];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = vld1q_f32(pad.as_ptr());
+            vst1q_f32(pad.as_mut_ptr(), vminq_f32(vmaxq_f32(x, lo), hi));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn soft_threshold_f32_imp(xs: &mut [f32], tau: f32) {
-    let t = vdupq_n_f32(tau);
-    let z = vdupq_n_f32(0.0);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = vld1q_f32(xs.as_ptr().add(i));
-        let a = vmaxq_f32(vsubq_f32(x, t), z);
-        let b = vmaxq_f32(vsubq_f32(vnegq_f32(x), t), z);
-        vst1q_f32(xs.as_mut_ptr().add(i), vsubq_f32(a, b));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 4];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = vld1q_f32(pad.as_ptr());
-        let a = vmaxq_f32(vsubq_f32(x, t), z);
-        let b = vmaxq_f32(vsubq_f32(vnegq_f32(x), t), z);
-        vst1q_f32(pad.as_mut_ptr(), vsubq_f32(a, b));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let t = vdupq_n_f32(tau);
+        let z = vdupq_n_f32(0.0);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            let a = vmaxq_f32(vsubq_f32(x, t), z);
+            let b = vmaxq_f32(vsubq_f32(vnegq_f32(x), t), z);
+            vst1q_f32(xs.as_mut_ptr().add(i), vsubq_f32(a, b));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 4];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = vld1q_f32(pad.as_ptr());
+            let a = vmaxq_f32(vsubq_f32(x, t), z);
+            let b = vmaxq_f32(vsubq_f32(vnegq_f32(x), t), z);
+            vst1q_f32(pad.as_mut_ptr(), vsubq_f32(a, b));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn scale_f32_imp(xs: &mut [f32], s: f32) {
-    let sv = vdupq_n_f32(s);
-    let n = xs.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let x = vld1q_f32(xs.as_ptr().add(i));
-        vst1q_f32(xs.as_mut_ptr().add(i), vmulq_f32(x, sv));
-        i += 4;
-    }
-    if i < n {
-        let mut pad = [0.0f32; 4];
-        pad[..n - i].copy_from_slice(&xs[i..]);
-        let x = vld1q_f32(pad.as_ptr());
-        vst1q_f32(pad.as_mut_ptr(), vmulq_f32(x, sv));
-        xs[i..].copy_from_slice(&pad[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        let sv = vdupq_n_f32(s);
+        let n = xs.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let x = vld1q_f32(xs.as_ptr().add(i));
+            vst1q_f32(xs.as_mut_ptr().add(i), vmulq_f32(x, sv));
+            i += 4;
+        }
+        if i < n {
+            let mut pad = [0.0f32; 4];
+            pad[..n - i].copy_from_slice(&xs[i..]);
+            let x = vld1q_f32(pad.as_ptr());
+            vst1q_f32(pad.as_mut_ptr(), vmulq_f32(x, sv));
+            xs[i..].copy_from_slice(&pad[..n - i]);
+        }
     }
 }
 
+/// # Safety
+///
+/// Caller must ensure the CPU supports NEON (the safe wrappers below
+/// assert it, and the dispatch table is installed only after runtime
+/// feature detection).
 #[target_feature(enable = "neon")]
 unsafe fn axpy_f32_imp(acc: &mut [f32], a: f32, row: &[f32]) {
-    debug_assert_eq!(acc.len(), row.len());
-    let av = vdupq_n_f32(a);
-    let n = acc.len();
-    let mut i = 0usize;
-    while i + 4 <= n {
-        let d = vld1q_f32(acc.as_ptr().add(i));
-        let r = vld1q_f32(row.as_ptr().add(i));
-        vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(d, vmulq_f32(av, r)));
-        i += 4;
-    }
-    if i < n {
-        let mut pad_d = [0.0f32; 4];
-        let mut pad_r = [0.0f32; 4];
-        pad_d[..n - i].copy_from_slice(&acc[i..]);
-        pad_r[..n - i].copy_from_slice(&row[i..]);
-        let d = vld1q_f32(pad_d.as_ptr());
-        let r = vld1q_f32(pad_r.as_ptr());
-        vst1q_f32(pad_d.as_mut_ptr(), vaddq_f32(d, vmulq_f32(av, r)));
-        acc[i..].copy_from_slice(&pad_d[..n - i]);
+    // SAFETY: `#[target_feature]` matches the caller-guaranteed CPU
+    // feature, and every pointer dereference stays in bounds of the
+    // borrowed slices: full chunks are exact multiples of the vector
+    // width, and tails go through a fixed-size stack pad.
+    unsafe {
+        debug_assert_eq!(acc.len(), row.len());
+        let av = vdupq_n_f32(a);
+        let n = acc.len();
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let d = vld1q_f32(acc.as_ptr().add(i));
+            let r = vld1q_f32(row.as_ptr().add(i));
+            vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(d, vmulq_f32(av, r)));
+            i += 4;
+        }
+        if i < n {
+            let mut pad_d = [0.0f32; 4];
+            let mut pad_r = [0.0f32; 4];
+            pad_d[..n - i].copy_from_slice(&acc[i..]);
+            pad_r[..n - i].copy_from_slice(&row[i..]);
+            let d = vld1q_f32(pad_d.as_ptr());
+            let r = vld1q_f32(pad_r.as_ptr());
+            vst1q_f32(pad_d.as_mut_ptr(), vaddq_f32(d, vmulq_f32(av, r)));
+            acc[i..].copy_from_slice(&pad_d[..n - i]);
+        }
     }
 }
 
@@ -427,36 +603,42 @@ unsafe fn axpy_f32_imp(acc: &mut [f32], a: f32, row: &[f32]) {
 /// Safe entry: `max_i |x_i|` with NEON (panics without NEON support).
 pub fn colmax_f64(xs: &[f64]) -> f64 {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { colmax_f64_imp(xs) }
 }
 
 /// Safe entry: `max_i |x_i|` with NEON (panics without NEON support).
 pub fn colmax_f32(xs: &[f32]) -> f32 {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { colmax_f32_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σ|x_i|` with NEON.
 pub fn sum_abs_f64(xs: &[f64]) -> f64 {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { sum_abs_f64_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σ|x_i|` with NEON.
 pub fn sum_abs_f32(xs: &[f32]) -> f32 {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { sum_abs_f32_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σx_i²` with NEON.
 pub fn sumsq_f64(xs: &[f64]) -> f64 {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { sumsq_f64_imp(xs) }
 }
 
 /// Safe entry: lane-decomposed `Σx_i²` with NEON.
 pub fn sumsq_f32(xs: &[f32]) -> f32 {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { sumsq_f32_imp(xs) }
 }
 
@@ -464,6 +646,7 @@ pub fn sumsq_f32(xs: &[f32]) -> f32 {
 pub fn clip_into_f64(src: &[f64], c: f64, dst: &mut [f64]) {
     assert_neon!();
     assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { clip_into_f64_imp(src, c, dst) }
 }
 
@@ -471,42 +654,49 @@ pub fn clip_into_f64(src: &[f64], c: f64, dst: &mut [f64]) {
 pub fn clip_into_f32(src: &[f32], c: f32, dst: &mut [f32]) {
     assert_neon!();
     assert_eq!(src.len(), dst.len(), "clip_into: length mismatch");
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { clip_into_f32_imp(src, c, dst) }
 }
 
 /// Safe entry: in-place `clamp(x, -c, c)` with NEON.
 pub fn clip_inplace_f64(xs: &mut [f64], c: f64) {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { clip_inplace_f64_imp(xs, c) }
 }
 
 /// Safe entry: in-place `clamp(x, -c, c)` with NEON.
 pub fn clip_inplace_f32(xs: &mut [f32], c: f32) {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { clip_inplace_f32_imp(xs, c) }
 }
 
 /// Safe entry: in-place `(x-τ)₊ − (-x-τ)₊` with NEON.
 pub fn soft_threshold_f64(xs: &mut [f64], tau: f64) {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { soft_threshold_f64_imp(xs, tau) }
 }
 
 /// Safe entry: in-place `(x-τ)₊ − (-x-τ)₊` with NEON.
 pub fn soft_threshold_f32(xs: &mut [f32], tau: f32) {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { soft_threshold_f32_imp(xs, tau) }
 }
 
 /// Safe entry: in-place `x·s` with NEON.
 pub fn scale_f64(xs: &mut [f64], s: f64) {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { scale_f64_imp(xs, s) }
 }
 
 /// Safe entry: in-place `x·s` with NEON.
 pub fn scale_f32(xs: &mut [f32], s: f32) {
     assert_neon!();
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { scale_f32_imp(xs, s) }
 }
 
@@ -514,6 +704,7 @@ pub fn scale_f32(xs: &mut [f32], s: f32) {
 pub fn axpy_f64(acc: &mut [f64], a: f64, row: &[f64]) {
     assert_neon!();
     assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { axpy_f64_imp(acc, a, row) }
 }
 
@@ -521,5 +712,6 @@ pub fn axpy_f64(acc: &mut [f64], a: f64, row: &[f64]) {
 pub fn axpy_f32(acc: &mut [f32], a: f32, row: &[f32]) {
     assert_neon!();
     assert_eq!(acc.len(), row.len(), "axpy: length mismatch");
+    // SAFETY: `assert_neon!` above just proved NEON support at runtime.
     unsafe { axpy_f32_imp(acc, a, row) }
 }

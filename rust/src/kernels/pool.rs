@@ -33,6 +33,8 @@
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
+use crate::sync::{lock_unpoisoned, wait_unpoisoned};
+
 /// Copyable raw pointer that may cross thread boundaries. Used by pool
 /// callers to give each part index access to its own disjoint slice of a
 /// shared output buffer.
@@ -44,7 +46,11 @@ use std::thread::JoinHandle;
 #[derive(Clone, Copy)]
 pub struct SendPtr<T>(pub *mut T);
 
+// SAFETY: a raw pointer is thread-neutral by itself; what makes
+// cross-thread use sound is the safety contract documented on the type
+// (disjoint regions per part, pointee outlives the blocking `run` call).
 unsafe impl<T> Send for SendPtr<T> {}
+// SAFETY: same argument as Send — the type-level contract above.
 unsafe impl<T> Sync for SendPtr<T> {}
 
 impl<T> SendPtr<T> {
@@ -60,8 +66,9 @@ type Job = *const (dyn Fn(usize) + Sync + 'static);
 
 struct SharedJob(Job);
 
-// The pointer is only dereferenced while the submitting `run` call keeps
-// the closure alive (see module docs), and the closure itself is `Sync`.
+// SAFETY: the pointer is only dereferenced while the submitting `run`
+// call keeps the closure alive (see module docs), and the closure itself
+// is `Sync`, so shared calls from worker threads are sound.
 unsafe impl Send for SharedJob {}
 
 struct PoolState {
@@ -166,14 +173,14 @@ impl KernelPool {
         };
         let obj: &(dyn Fn(usize) + Sync) = &f;
         let raw = obj as *const (dyn Fn(usize) + Sync);
-        // Erase the borrow's lifetime; the completion barrier (and, on the
-        // unwind path, `UnwindGuard`) keeps the pointee alive for as long
-        // as workers can dereference it.
+        // SAFETY: this only erases the borrow's lifetime; the completion
+        // barrier (and, on the unwind path, `UnwindGuard`) keeps the
+        // pointee alive for as long as workers can dereference it.
         let job = unsafe {
             std::mem::transmute::<*const (dyn Fn(usize) + Sync + '_), Job>(raw)
         };
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.inner.state);
             st.epoch = st.epoch.wrapping_add(1);
             st.job = Some(SharedJob(job));
             st.parts = parts;
@@ -190,7 +197,7 @@ impl KernelPool {
         // Participate: claim parts exactly like a worker.
         loop {
             let part = {
-                let mut st = self.inner.state.lock().unwrap();
+                let mut st = lock_unpoisoned(&self.inner.state);
                 if st.next_part >= st.parts {
                     break;
                 }
@@ -199,16 +206,16 @@ impl KernelPool {
                 p
             };
             f(part);
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.inner.state);
             st.completed += 1;
             if st.completed == st.parts {
                 self.inner.done_cv.notify_all();
             }
         }
         // Completion barrier: wait out parts claimed by workers.
-        let mut st = self.inner.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.inner.state);
         while st.completed < st.parts {
-            st = self.inner.done_cv.wait(st).unwrap();
+            st = wait_unpoisoned(&self.inner.done_cv, st);
         }
         let panicked = st.panicked;
         st.panicked = false;
@@ -228,11 +235,11 @@ struct UnwindGuard<'a>(&'a Inner);
 
 impl Drop for UnwindGuard<'_> {
     fn drop(&mut self) {
-        let mut st = self.0.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.0.state);
         // No new claims for this job.
         st.next_part = st.parts;
         while st.active_workers > 0 {
-            st = self.0.done_cv.wait(st).unwrap();
+            st = wait_unpoisoned(&self.0.done_cv, st);
         }
         st.job = None;
     }
@@ -241,7 +248,7 @@ impl Drop for UnwindGuard<'_> {
 impl Drop for KernelPool {
     fn drop(&mut self) {
         {
-            let mut st = self.inner.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&self.inner.state);
             st.shutdown = true;
             self.inner.work_cv.notify_all();
         }
@@ -256,7 +263,7 @@ fn worker_loop(inner: &Inner) {
     loop {
         // Park until a job from an unseen epoch is published.
         let (job, epoch) = {
-            let mut st = inner.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&inner.state);
             loop {
                 if st.shutdown {
                     return;
@@ -266,7 +273,7 @@ fn worker_loop(inner: &Inner) {
                         break (sj.0, st.epoch);
                     }
                 }
-                st = inner.work_cv.wait(st).unwrap();
+                st = wait_unpoisoned(&inner.work_cv, st);
             }
         };
         seen = epoch;
@@ -274,7 +281,7 @@ fn worker_loop(inner: &Inner) {
         // replaces it — then our claims no longer apply).
         loop {
             let part = {
-                let mut st = inner.state.lock().unwrap();
+                let mut st = lock_unpoisoned(&inner.state);
                 if st.epoch != epoch || st.next_part >= st.parts {
                     break;
                 }
@@ -285,14 +292,14 @@ fn worker_loop(inner: &Inner) {
                 st.active_workers += 1;
                 p
             };
-            // SAFETY: the part was claimed from the job of `epoch`; the
-            // submitter blocks (via the completion barrier or its unwind
-            // guard) until `active_workers` drops, so the closure outlives
-            // this call.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // SAFETY: the part was claimed from the job of `epoch`;
+                // the submitter blocks (via the completion barrier or its
+                // unwind guard) until `active_workers` drops, so the
+                // closure outlives this call.
                 unsafe { (&*job)(part) }
             }));
-            let mut st = inner.state.lock().unwrap();
+            let mut st = lock_unpoisoned(&inner.state);
             st.active_workers -= 1;
             if outcome.is_err() {
                 st.panicked = true;
@@ -340,14 +347,17 @@ mod tests {
 
     #[test]
     fn reuse_across_many_jobs() {
+        // Interpreter-speed dispatches are expensive under Miri; a handful
+        // of rounds already exercises the park/wake reuse path.
+        let rounds = if cfg!(miri) { 10 } else { 200 };
         let pool = KernelPool::with_workers(2);
         let total = AtomicUsize::new(0);
-        for _ in 0..200 {
+        for _ in 0..rounds {
             pool.run(8, |i| {
                 total.fetch_add(i + 1, Ordering::Relaxed);
             });
         }
-        assert_eq!(total.load(Ordering::Relaxed), 200 * (1 + 2 + 3 + 4 + 5 + 6 + 7 + 8));
+        assert_eq!(total.load(Ordering::Relaxed), rounds * (1 + 2 + 3 + 4 + 5 + 6 + 7 + 8));
     }
 
     #[test]
@@ -369,6 +379,8 @@ mod tests {
         {
             let ptr = SendPtr(buf.as_mut_ptr());
             pool.run(parts, |t| {
+                // SAFETY: each part derives its own disjoint chunk from
+                // `t`, and `buf` outlives the blocking `run` call.
                 let s = unsafe { std::slice::from_raw_parts_mut(ptr.get().add(t * chunk), chunk) };
                 for (k, x) in s.iter_mut().enumerate() {
                     *x = t * chunk + k;
@@ -384,10 +396,11 @@ mod tests {
     fn concurrent_submitters_all_complete() {
         let pool = std::sync::Arc::new(KernelPool::with_workers(2));
         let mut joins = Vec::new();
+        let rounds = if cfg!(miri) { 5 } else { 50 };
         for t in 0..4u64 {
             let p = std::sync::Arc::clone(&pool);
             joins.push(std::thread::spawn(move || {
-                for _ in 0..50 {
+                for _ in 0..rounds {
                     let sum = AtomicUsize::new(0);
                     p.run(6, |i| {
                         sum.fetch_add(i, Ordering::Relaxed);

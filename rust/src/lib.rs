@@ -44,34 +44,68 @@
 //! assert!(l1inf_norm(&x) <= 1.0 + 1e-9);
 //! ```
 
+// Every `unsafe` operation inside an `unsafe fn` must sit in an explicit
+// `unsafe {}` block with its own `// SAFETY:` justification — the
+// fn-level `unsafe` is a contract with the caller, not a blanket license
+// for the body. Enforced here and audited by `bilevel audit` (see
+// [`analysis`]).
+#![deny(unsafe_op_in_unsafe_fn)]
+
+// Every module is individually pinned to `deny(clippy::all)` so a lint
+// regression is caught even when a developer runs clippy on one module
+// path; the `clippy-deny` rule of `bilevel audit` keeps this list
+// complete as modules are added.
+#[deny(clippy::all)]
+pub mod analysis;
+#[deny(clippy::all)]
 pub mod bench;
+#[deny(clippy::all)]
 pub mod cli;
+#[deny(clippy::all)]
 pub mod config;
+#[deny(clippy::all)]
 pub mod coordinator;
+#[deny(clippy::all)]
 pub mod data;
+#[deny(clippy::all)]
 pub mod experiments;
 #[deny(clippy::all)]
 pub mod fault;
+#[deny(clippy::all)]
 pub mod kernels;
+#[deny(clippy::all)]
 pub mod metrics;
+#[deny(clippy::all)]
 pub mod model;
 #[deny(clippy::all)]
 pub mod net;
+#[deny(clippy::all)]
 pub mod norms;
 #[deny(clippy::all)]
 pub mod persist;
+#[deny(clippy::all)]
 pub mod projection;
+#[deny(clippy::all)]
 pub mod proptest;
+#[deny(clippy::all)]
 pub mod report;
+#[deny(clippy::all)]
 pub mod rng;
+#[deny(clippy::all)]
 pub mod runtime;
+#[deny(clippy::all)]
 pub mod scalar;
 #[deny(clippy::all)]
 pub mod serve;
+#[deny(clippy::all)]
 pub mod sparse;
+#[deny(clippy::all)]
+pub mod sync;
+#[deny(clippy::all)]
 pub mod tensor;
 
 /// Convenience re-exports covering the most common entry points.
+#[deny(clippy::all)]
 pub mod prelude {
     pub use crate::kernels::Workspace;
     pub use crate::norms::{l11_norm, l12_norm, l1inf_norm, linf1_norm, frobenius_norm};

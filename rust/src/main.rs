@@ -8,6 +8,7 @@ use std::time::Instant;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Result};
+use bilevel_sparse::analysis;
 use bilevel_sparse::cli::{Args, USAGE};
 use bilevel_sparse::config::{
     DatasetKind, HttpConfig, ProjectionBackend, RunConfig, ServeConfig, TomlDoc, TrainConfig,
@@ -47,6 +48,7 @@ fn main() -> ExitCode {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "chaos" => cmd_chaos(&args),
+        "audit" => cmd_audit(&args),
         "help" | "" => {
             println!("{USAGE}");
             Ok(())
@@ -1092,6 +1094,21 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     );
     println!("note       : header-only dump; `bilevel import` verifies the checksum");
     Ok(())
+}
+
+/// `bilevel audit` — run the repo-aware static-analysis pass and exit
+/// nonzero on any finding. The same rules gate `cargo test` through
+/// `rust/tests/audit_integration.rs`; the CLI form exists for pre-push
+/// hooks and the blocking CI step.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = PathBuf::from(args.str_or("root", "."));
+    let report = analysis::audit_repo(&root)?;
+    print!("{}", analysis::render(&report));
+    if report.is_clean() {
+        Ok(())
+    } else {
+        Err(anyhow!("audit failed with {} finding(s)", report.findings.len()))
+    }
 }
 
 fn cmd_artifacts(args: &Args) -> Result<()> {

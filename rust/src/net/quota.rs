@@ -14,6 +14,8 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
+use crate::sync::lock_unpoisoned;
+
 /// Evict idle buckets once the map outgrows this (bounds memory against
 /// client-id churn/spoofing).
 const MAX_TRACKED: usize = 4096;
@@ -46,7 +48,7 @@ impl QuotaGate {
     /// accrues (never zero).
     pub fn admit(&self, key: &str) -> Result<(), Duration> {
         let now = Instant::now();
-        let mut buckets = self.buckets.lock().unwrap();
+        let mut buckets = lock_unpoisoned(&self.buckets);
         if buckets.len() >= MAX_TRACKED && !buckets.contains_key(key) {
             buckets.retain(|_, b| now.duration_since(b.last) < STALE_AFTER);
             // A spoofed-`X-Client-Id` flood keeps every bucket fresh, so
@@ -80,7 +82,7 @@ impl QuotaGate {
 
     /// Clients currently tracked (tests / stats).
     pub fn tracked(&self) -> usize {
-        self.buckets.lock().unwrap().len()
+        lock_unpoisoned(&self.buckets).len()
     }
 }
 
@@ -133,6 +135,25 @@ mod tests {
     #[should_panic(expected = "positive")]
     fn zero_rate_is_a_bug() {
         let _ = QuotaGate::new(0.0, 1.0);
+    }
+
+    #[test]
+    fn poisoned_lock_still_admits() {
+        // Regression for the `lock_unpoisoned` migration: a panic while
+        // holding the buckets lock (here forced directly; in production a
+        // panicking request thread) must not wedge admission — pre-fix
+        // every later `admit` panicked on the poisoned mutex and the serve
+        // path answered nothing.
+        let gate = QuotaGate::new(1000.0, 2.0);
+        assert!(gate.admit("a").is_ok());
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = gate.buckets.lock().unwrap();
+            panic!("poison the buckets lock");
+        }));
+        assert!(unwound.is_err());
+        assert!(gate.buckets.lock().is_err(), "lock must actually be poisoned");
+        assert!(gate.admit("a").is_ok(), "admit must answer on a poisoned lock");
+        assert_eq!(gate.tracked(), 1, "bucket state must survive the poisoning");
     }
 
     #[test]

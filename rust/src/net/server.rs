@@ -43,6 +43,7 @@ use crate::config::HttpConfig;
 use crate::fault::{self, FaultSite};
 use crate::metrics::Counter;
 use crate::serve::Engine;
+use crate::sync::lock_unpoisoned;
 
 use super::http::{self, HttpError, HttpLimits};
 use super::quota::QuotaGate;
@@ -259,7 +260,7 @@ impl Server {
             let _ = h.join();
         }
         loop {
-            let drained: Vec<_> = std::mem::take(&mut *self.shared.handlers.lock().unwrap());
+            let drained: Vec<_> = std::mem::take(&mut *lock_unpoisoned(&self.shared.handlers));
             if drained.is_empty() {
                 break;
             }
@@ -287,7 +288,7 @@ fn begin_drain(shared: &Shared) {
     let _ = TcpStream::connect(shared.addr);
     // Read-half shutdown: blocked reads return EOF; in-flight response
     // writes are untouched.
-    for conn in shared.conns.lock().unwrap().values() {
+    for conn in lock_unpoisoned(&shared.conns).values() {
         let _ = conn.shutdown(Shutdown::Read);
     }
 }
@@ -325,7 +326,7 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
         reap_finished(shared);
         let id = shared.next_conn.fetch_add(1, Ordering::Relaxed);
         if let Ok(clone) = stream.try_clone() {
-            shared.conns.lock().unwrap().insert(id, clone);
+            lock_unpoisoned(&shared.conns).insert(id, clone);
         }
         shared.active.fetch_add(1, Ordering::SeqCst);
         shared.counters.accepted.inc();
@@ -333,16 +334,16 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
         let spawned = std::thread::Builder::new().name(format!("http-conn-{id}")).spawn(
             move || {
                 handle_conn(&conn_shared, stream, peer);
-                conn_shared.conns.lock().unwrap().remove(&id);
+                lock_unpoisoned(&conn_shared.conns).remove(&id);
                 conn_shared.active.fetch_sub(1, Ordering::SeqCst);
             },
         );
         match spawned {
-            Ok(h) => shared.handlers.lock().unwrap().push(h),
+            Ok(h) => lock_unpoisoned(&shared.handlers).push(h),
             Err(_) => {
                 // Spawn failure: undo the bookkeeping; the stream (moved
                 // into the dead closure) is already gone.
-                shared.conns.lock().unwrap().remove(&id);
+                lock_unpoisoned(&shared.conns).remove(&id);
                 shared.active.fetch_sub(1, Ordering::SeqCst);
             }
         }
@@ -352,7 +353,7 @@ fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>) {
 /// Join handler threads that already finished (keeps the handle list from
 /// growing unboundedly under connection churn).
 fn reap_finished(shared: &Shared) {
-    let mut handlers = shared.handlers.lock().unwrap();
+    let mut handlers = lock_unpoisoned(&shared.handlers);
     let mut i = 0;
     while i < handlers.len() {
         if handlers[i].is_finished() {

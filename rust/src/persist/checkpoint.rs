@@ -703,6 +703,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real-filesystem test; interpreter-speed I/O adds no UB coverage")]
     fn save_load_and_read_header() {
         let dir = std::env::temp_dir().join(format!("bilevel-ckpt-test-{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();

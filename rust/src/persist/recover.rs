@@ -141,6 +141,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real-filesystem test; relies on tmp dirs and mtimes")]
     fn empty_directory_recovers_nothing() {
         let dir = tmp_dir("empty");
         let out = recover_latest(&dir).unwrap();
@@ -152,6 +153,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real-filesystem test; relies on tmp dirs and mtimes")]
     fn picks_the_newest_valid_checkpoint() {
         let dir = tmp_dir("newest");
         for (i, seed) in [(1u32, 10u64), (2, 11), (3, 12)] {
@@ -167,6 +169,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real-filesystem test; relies on tmp dirs and mtimes")]
     fn falls_back_past_corruption_and_quarantines() {
         let dir = tmp_dir("fallback");
         let good = sample_checkpoint(20);
@@ -198,6 +201,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore = "real-filesystem test; relies on tmp dirs and mtimes")]
     fn all_corrupt_yields_none_and_quarantines_everything() {
         let dir = tmp_dir("allbad");
         for i in 1..=2 {

@@ -13,10 +13,18 @@
 //! Failures here mean *execution* failures the supervisor caught (a
 //! worker panic inside an encode job) — admission rejections like
 //! overload or invalid dims never touch the breaker.
+//!
+//! Memory ordering: deliberately none to audit. All shared state lives
+//! behind the single `gates` mutex — state transitions read-modify-write a
+//! whole `Gate`, which a lone atomic cannot express without races between
+//! the failure counter and the trip decision, so this module uses no
+//! atomics at all.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
+
+use crate::sync::lock_unpoisoned;
 
 /// Public view of one gate's state.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -66,7 +74,7 @@ impl CircuitBreaker {
     /// (including the single half-open probe); `Err(retry_after)` refuses
     /// it with the suggested backoff.
     pub fn admit(&self, model: u64) -> Result<(), Duration> {
-        let mut gates = self.gates.lock().unwrap();
+        let mut gates = lock_unpoisoned(&self.gates);
         let gate = gates.entry(model).or_insert(Gate::Closed { failures: 0 });
         match *gate {
             Gate::Closed { .. } => Ok(()),
@@ -86,14 +94,14 @@ impl CircuitBreaker {
     /// Record a successful encode execution: closes the gate and resets
     /// the failure count.
     pub fn record_success(&self, model: u64) {
-        let mut gates = self.gates.lock().unwrap();
+        let mut gates = lock_unpoisoned(&self.gates);
         gates.insert(model, Gate::Closed { failures: 0 });
     }
 
     /// Record an execution failure: counts toward the trip threshold, and
     /// re-opens immediately from half-open.
     pub fn record_failure(&self, model: u64) {
-        let mut gates = self.gates.lock().unwrap();
+        let mut gates = lock_unpoisoned(&self.gates);
         let gate = gates.entry(model).or_insert(Gate::Closed { failures: 0 });
         *gate = match *gate {
             Gate::Closed { failures } => {
@@ -111,7 +119,7 @@ impl CircuitBreaker {
 
     /// Current state of `model`'s gate (`Closed` if never seen).
     pub fn state(&self, model: u64) -> BreakerState {
-        match self.gates.lock().unwrap().get(&model) {
+        match lock_unpoisoned(&self.gates).get(&model) {
             None | Some(Gate::Closed { .. }) => BreakerState::Closed,
             Some(Gate::Open { .. }) => BreakerState::Open,
             Some(Gate::HalfOpen) => BreakerState::HalfOpen,
@@ -120,12 +128,12 @@ impl CircuitBreaker {
 
     /// Drop the gate for an unregistered model.
     pub fn forget(&self, model: u64) {
-        self.gates.lock().unwrap().remove(&model);
+        lock_unpoisoned(&self.gates).remove(&model);
     }
 
     /// Models whose gate is not closed, for health reporting.
     pub fn impaired(&self) -> Vec<(u64, BreakerState)> {
-        let gates = self.gates.lock().unwrap();
+        let gates = lock_unpoisoned(&self.gates);
         let mut out: Vec<(u64, BreakerState)> = gates
             .iter()
             .filter_map(|(&model, gate)| match gate {
@@ -188,6 +196,24 @@ mod tests {
         b.record_success(9);
         assert_eq!(b.state(9), BreakerState::Closed, "probe success closes");
         assert!(b.admit(9).is_ok());
+    }
+
+    #[test]
+    fn poisoned_lock_keeps_breaker_answering() {
+        // Regression for the `lock_unpoisoned` migration: a worker panic
+        // while holding the gates lock must not turn every subsequent
+        // admission check into a poison panic.
+        let b = CircuitBreaker::new(2, Duration::from_secs(60));
+        b.record_failure(7);
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = b.gates.lock().unwrap();
+            panic!("poison the gates lock");
+        }));
+        assert!(unwound.is_err());
+        assert!(b.gates.lock().is_err(), "lock must actually be poisoned");
+        assert!(b.admit(7).is_ok(), "admit must answer on a poisoned lock");
+        b.record_failure(7);
+        assert_eq!(b.state(7), BreakerState::Open, "state machine still works");
     }
 
     #[test]

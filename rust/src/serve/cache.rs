@@ -20,6 +20,7 @@ use std::sync::{Arc, Mutex};
 use crate::projection::l1::L1Algorithm;
 use crate::projection::ProjectionKind;
 use crate::scalar::Scalar;
+use crate::sync::lock_unpoisoned;
 use crate::tensor::Matrix;
 
 use super::request::Dtype;
@@ -193,7 +194,7 @@ impl ThresholdCache {
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock_unpoisoned(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -206,7 +207,7 @@ impl ThresholdCache {
         if !self.enabled() {
             return None;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         inner.map.get_mut(key).map(|e| {
@@ -222,7 +223,7 @@ impl ThresholdCache {
             return;
         }
         let thresholds = Arc::new(thresholds);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if inner.map.len() >= self.capacity && !inner.map.contains_key(&key) {

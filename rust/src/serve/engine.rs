@@ -32,6 +32,7 @@ use std::time::{Duration, Instant};
 use crate::config::ServeConfig;
 use crate::persist::Checkpoint;
 use crate::sparse::CompactEncoder;
+use crate::sync::lock_unpoisoned;
 use crate::tensor::Matrix;
 
 use super::breaker::CircuitBreaker;
@@ -422,7 +423,7 @@ impl Engine {
         for (model, state) in self.breaker.impaired() {
             reasons.push(format!("model {model} circuit {}", state.name()));
         }
-        if let Some(at) = *self.last_restart.lock().unwrap() {
+        if let Some(at) = *lock_unpoisoned(&self.last_restart) {
             let ago = at.elapsed();
             if ago < RESTART_DEGRADED_WINDOW {
                 reasons.push(format!("worker restarted {:.1}s ago", ago.as_secs_f64()));
@@ -516,7 +517,7 @@ fn supervised_worker(
             WorkerExit::Drained => return,
             WorkerExit::Panicked => {
                 shard.counters.worker_restarts.inc();
-                *last_restart.lock().unwrap() = Some(Instant::now());
+                *lock_unpoisoned(&last_restart) = Some(Instant::now());
             }
         }
     }

@@ -37,6 +37,7 @@ use crate::net::http::{self, HttpError, HttpLimits, Response};
 use crate::net::wire;
 use crate::projection::ProjectionKind;
 use crate::rng::{Rng, Xoshiro256pp};
+use crate::sync::lock_unpoisoned;
 use crate::tensor::Matrix;
 
 use super::engine::Engine;
@@ -306,7 +307,7 @@ pub fn run_loadgen(engine: &Engine, cfg: &LoadgenConfig) -> LoadReport {
                         }
                     }
                 }
-                aggregate.lock().unwrap().absorb(&local);
+                lock_unpoisoned(&aggregate).absorb(&local);
             });
         }
     });
@@ -423,7 +424,7 @@ pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, St
                 let mut conn = match NetConn::connect(addr) {
                     Ok(c) => c,
                     Err(e) => {
-                        connect_errors.lock().unwrap().push(e);
+                        lock_unpoisoned(&connect_errors).push(e);
                         return;
                     }
                 };
@@ -506,7 +507,7 @@ pub fn run_loadgen_net(addr: &str, cfg: &LoadgenConfig) -> Result<LoadReport, St
                         }
                     }
                 }
-                aggregate.lock().unwrap().absorb(&local);
+                lock_unpoisoned(&aggregate).absorb(&local);
             });
         }
     });

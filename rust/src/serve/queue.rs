@@ -12,6 +12,8 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
+use crate::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
+
 /// Push failure, handing the item back to the caller.
 #[derive(Debug)]
 pub enum PushError<T> {
@@ -56,7 +58,7 @@ impl<T> JobQueue<T> {
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().items.len()
+        lock_unpoisoned(&self.state).items.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -64,17 +66,17 @@ impl<T> JobQueue<T> {
     }
 
     pub fn is_closed(&self) -> bool {
-        self.state.lock().unwrap().closed
+        lock_unpoisoned(&self.state).closed
     }
 
     /// Number of successful pushes so far (see [`JobQueue::await_push`]).
     pub fn push_count(&self) -> u64 {
-        self.state.lock().unwrap().pushes
+        lock_unpoisoned(&self.state).pushes
     }
 
     /// Non-blocking bounded push; returns the queue depth after the push.
     pub fn try_push(&self, item: T) -> Result<usize, PushError<T>> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         if s.closed {
             return Err(PushError::Closed(item));
         }
@@ -95,14 +97,14 @@ impl<T> JobQueue<T> {
     /// Stop accepting work and wake every waiter. Items already queued are
     /// still handed out by `pop_wait` (graceful drain).
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.state).closed = true;
         self.signal.notify_all();
     }
 
     /// Block until an item is available (`Some`) or the queue is closed and
     /// fully drained (`None`).
     pub fn pop_wait(&self) -> Option<T> {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         loop {
             if let Some(item) = s.items.pop_front() {
                 return Some(item);
@@ -110,20 +112,20 @@ impl<T> JobQueue<T> {
             if s.closed {
                 return None;
             }
-            s = self.signal.wait(s).unwrap();
+            s = wait_unpoisoned(&self.signal, s);
         }
     }
 
     /// Block until a push lands after the `seen` counter value, the queue
     /// closes, or `deadline` passes. Returns the current push count.
     pub fn await_push(&self, seen: u64, deadline: Instant) -> u64 {
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         while s.pushes == seen && !s.closed {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let (guard, _timeout) = self.signal.wait_timeout(s, deadline - now).unwrap();
+            let (guard, _timeout) = wait_timeout_unpoisoned(&self.signal, s, deadline - now);
             s = guard;
         }
         s.pushes
@@ -136,7 +138,7 @@ impl<T> JobQueue<T> {
         if max == 0 {
             return out;
         }
-        let mut s = self.state.lock().unwrap();
+        let mut s = lock_unpoisoned(&self.state);
         let mut i = 0;
         while i < s.items.len() && out.len() < max {
             if pred(&s.items[i]) {

@@ -1,0 +1,114 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! `Mutex::lock().unwrap()` turns one panicking thread into a process-wide
+//! panic cascade: the first panic while holding the guard poisons the
+//! lock, and every later `unwrap` — in serve workers, the HTTP accept
+//! loop, the quota gate — then panics too, so a single bad request can
+//! take down every subsequent one. All non-test code in this crate goes
+//! through [`lock_unpoisoned`] (and the condvar variants below) instead;
+//! the `lock-unwrap` rule of `bilevel audit` (see [`crate::analysis`])
+//! enforces it.
+//!
+//! Recovering a poisoned guard is sound here because every mutex-guarded
+//! structure in this crate keeps *operational* state (queues, token
+//! buckets, breaker gates, telemetry maps) whose invariants hold after
+//! each statement — a panic mid-critical-section can at worst lose one
+//! in-flight update, never leave a torn aggregate that later code would
+//! misinterpret. New lock sites must keep that property (or wrap their
+//! state in an explicit validity flag) before using these helpers.
+
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock `m`, recovering the guard if a previous holder panicked.
+///
+/// Equivalent to `m.lock().unwrap()` except that a poisoned lock yields
+/// the inner guard instead of propagating the old panic to this thread.
+#[inline]
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`Condvar::wait`] that recovers a poisoned re-acquired guard.
+#[inline]
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// [`Condvar::wait_timeout`] that recovers a poisoned re-acquired guard.
+#[inline]
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur)
+        .unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+    use std::time::Duration;
+
+    fn poison<T: Send + 'static>(m: &Arc<Mutex<T>>) {
+        let m2 = Arc::clone(m);
+        let joined = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("deliberate poison");
+        })
+        .join();
+        assert!(joined.is_err(), "poisoning thread must have panicked");
+        assert!(m.is_poisoned(), "lock must be poisoned after the panic");
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_the_guard() {
+        let m = Arc::new(Mutex::new(7u32));
+        poison(&m);
+        let mut g = lock_unpoisoned(&m);
+        assert_eq!(*g, 7, "state written before the panic is intact");
+        *g = 8;
+        drop(g);
+        assert_eq!(*lock_unpoisoned(&m), 8, "lock stays usable afterwards");
+    }
+
+    #[test]
+    fn condvar_waits_recover_on_a_poisoned_mutex() {
+        // Poison the waited-on mutex first, then prove both wait variants
+        // still hand back a usable guard and observe writes made by the
+        // waking thread.
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        {
+            let p = Arc::clone(&pair);
+            let joined = std::thread::spawn(move || {
+                let _guard = p.0.lock().unwrap();
+                panic!("deliberate poison");
+            })
+            .join();
+            assert!(joined.is_err());
+            assert!(pair.0.is_poisoned());
+        }
+        let waker = {
+            let p = Arc::clone(&pair);
+            std::thread::spawn(move || {
+                *lock_unpoisoned(&p.0) = true;
+                p.1.notify_all();
+            })
+        };
+        let (m, cv) = &*pair;
+        let mut g = lock_unpoisoned(m);
+        while !*g {
+            g = wait_unpoisoned(cv, g);
+        }
+        assert!(*g);
+        drop(g);
+        waker.join().unwrap();
+        // The timeout variant recovers too (flag already set: returns at
+        // once regardless of whether the deadline fired).
+        let g = lock_unpoisoned(m);
+        let (g, _timeout) = wait_timeout_unpoisoned(cv, g, Duration::from_millis(5));
+        assert!(*g);
+    }
+}

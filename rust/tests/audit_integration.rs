@@ -1,0 +1,163 @@
+//! The `bilevel audit` rules, enforced by plain `cargo test`.
+//!
+//! Two layers: the repository itself must audit clean (the same check the
+//! CLI subcommand and the CI step run), and minimal fixtures pin each
+//! rule's behaviour — exactly one finding per seeded violation, zero on a
+//! clean fixture, spans anchored to the right line, and no firing on rule
+//! tokens that only appear inside strings or comments (every fixture
+//! below holds its violation in a string literal precisely so this file
+//! audits clean).
+
+use std::path::Path;
+
+use bilevel_sparse::analysis::rules::{
+    check_registration, check_source, RULE_ALLOWLIST, RULE_BANNED, RULE_CLIPPY, RULE_LOCK,
+    RULE_REGISTERED, RULE_SAFETY, UNSAFE_ALLOWLIST,
+};
+use bilevel_sparse::analysis::{audit_repo, render};
+
+#[test]
+fn repository_audits_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let report = audit_repo(root).expect("audit must be able to read the repo");
+    assert!(
+        report.files_scanned > 30,
+        "suspiciously few files scanned ({}); wrong root?",
+        report.files_scanned
+    );
+    assert!(report.is_clean(), "repository must audit clean:\n{}", render(&report));
+}
+
+#[test]
+fn uncommented_unsafe_in_an_allowlisted_file_is_one_finding() {
+    let src = "pub fn f(x: &[f64]) -> f64 {\n    unsafe { *x.get_unchecked(0) }\n}\n";
+    let findings = check_source(UNSAFE_ALLOWLIST[0], src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RULE_SAFETY);
+    assert_eq!(findings[0].line, 2, "span must anchor on the unsafe line");
+}
+
+#[test]
+fn safety_comment_immediately_above_satisfies_the_rule() {
+    let src = concat!(
+        "pub fn f(x: &[f64]) -> f64 {\n",
+        "    // SAFETY: caller guarantees non-empty.\n",
+        "    unsafe { *x.get_unchecked(0) }\n",
+        "}\n",
+    );
+    let findings = check_source(UNSAFE_ALLOWLIST[0], src);
+    assert!(findings.is_empty(), "commented site must pass: {findings:?}");
+}
+
+#[test]
+fn unsafe_outside_the_allowlist_is_one_finding() {
+    let src = concat!(
+        "pub fn f() {\n",
+        "    // SAFETY: fixture.\n",
+        "    unsafe { std::hint::unreachable_unchecked() }\n",
+        "}\n",
+    );
+    let findings = check_source("rust/src/tensor.rs", src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RULE_ALLOWLIST);
+    assert_eq!(findings[0].line, 3);
+}
+
+#[test]
+fn lock_unwrap_in_src_is_one_finding_anchored_at_the_lock_call() {
+    // The unwrap sits on the next line: the span must point at `.lock()`.
+    let src = "pub fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock()\n        .unwrap()\n}\n";
+    let findings = check_source("rust/src/serve/engine.rs", src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RULE_LOCK);
+    assert_eq!(findings[0].line, 2, "span must anchor where .lock() is called");
+}
+
+#[test]
+fn lock_unwrap_in_test_code_and_outside_src_is_allowed() {
+    let src = concat!(
+        "pub fn ok() {}\n\n",
+        "#[cfg(test)]\n",
+        "mod tests {\n",
+        "    #[test]\n",
+        "    fn t() {\n",
+        "        let m = std::sync::Mutex::new(1u8);\n",
+        "        assert_eq!(*m.lock().unwrap(), 1);\n",
+        "    }\n",
+        "}\n",
+    );
+    let in_tests = check_source("rust/src/serve/engine.rs", src);
+    assert!(in_tests.is_empty(), "{in_tests:?}");
+    let bare = "pub fn f(m: &std::sync::Mutex<u8>) -> u8 {\n    *m.lock().unwrap()\n}\n";
+    let outside = check_source("rust/tests/some_suite.rs", bare);
+    assert!(outside.is_empty(), "{outside:?}");
+}
+
+#[test]
+fn banned_macro_in_src_is_one_finding() {
+    let src = "pub fn f() {\n    todo!(\"later\")\n}\n";
+    let findings = check_source("rust/src/report.rs", src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RULE_BANNED);
+    assert_eq!(findings[0].line, 2);
+}
+
+#[test]
+fn missing_clippy_deny_on_a_module_header_is_one_finding() {
+    let src = "#[deny(clippy::all)]\npub mod good;\npub mod bad;\n";
+    let findings = check_source("rust/src/lib.rs", src);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RULE_CLIPPY);
+    assert_eq!(findings[0].line, 3, "span must anchor on the unpinned module line");
+}
+
+#[test]
+fn rule_tokens_inside_strings_and_comments_never_fire() {
+    // Every rule token below sits in a comment or a string literal; the
+    // lexer must blank them all before the rules scan the code channel.
+    let src = concat!(
+        "// this comment says unsafe and todo! and .lock().unwrap()\n",
+        "pub fn f() -> String {\n",
+        "    let s = \"unsafe { nope } .lock().unwrap() todo!()\";\n",
+        "    /* unsafe block comment */\n",
+        "    let r = r#\"raw unsafe .lock().unwrap()\"#;\n",
+        "    format!(\"{s}{r}\")\n",
+        "}\n",
+    );
+    let findings = check_source("rust/src/report.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn clean_fixture_yields_zero_findings() {
+    let src = concat!(
+        "pub fn f(m: &std::sync::Mutex<u8>) -> u8 {\n",
+        "    *crate::sync::lock_unpoisoned(m)\n",
+        "}\n",
+    );
+    let findings = check_source("rust/src/serve/engine.rs", src);
+    assert!(findings.is_empty(), "{findings:?}");
+}
+
+#[test]
+fn unregistered_suite_is_flagged_and_registered_one_is_not() {
+    let cargo = concat!(
+        "[package]\nname = \"x\"\nautotests = false\nautobenches = false\n\n",
+        "[[test]]\nname = \"registered\"\npath = \"rust/tests/registered.rs\"\n",
+    );
+    let tests = ["registered.rs".to_string(), "forgotten.rs".to_string()];
+    let findings = check_registration(cargo, &tests, &[]);
+    assert_eq!(findings.len(), 1, "{findings:?}");
+    assert_eq!(findings[0].rule, RULE_REGISTERED);
+    assert_eq!(findings[0].path, "rust/tests/forgotten.rs");
+}
+
+#[test]
+fn auto_discovery_left_on_is_flagged() {
+    let cargo = "[package]\nname = \"x\"\n";
+    let findings = check_registration(cargo, &[], &[]);
+    let msgs: Vec<&str> = findings.iter().map(|f| f.message.as_str()).collect();
+    assert_eq!(findings.len(), 2, "{findings:?}");
+    assert!(msgs.iter().any(|m| m.contains("autotests")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("autobenches")), "{msgs:?}");
+}

@@ -7,6 +7,10 @@
 //! running test can pollute the counter; the single `#[test]` keeps the
 //! harness quiet while the measurement runs.
 
+// Integration tests are separate crates, so the crate-wide lint from
+// lib.rs must be restated here for the allocator below.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -14,21 +18,32 @@ struct CountingAlloc;
 
 static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
 
+// SAFETY: a pure pass-through to the system allocator — identical layout
+// contract, identical returned pointers; the atomic counter is the only
+// addition and has no effect on allocation behaviour.
 unsafe impl GlobalAlloc for CountingAlloc {
+    // SAFETY: forwarded verbatim; the caller's layout contract transfers.
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        System.alloc(layout)
+        // SAFETY: same layout, same contract as this call received.
+        unsafe { System.alloc(layout) }
     }
+    // SAFETY: forwarded verbatim; the caller's layout contract transfers.
     unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(layout)
+        // SAFETY: same layout, same contract as this call received.
+        unsafe { System.alloc_zeroed(layout) }
     }
+    // SAFETY: forwarded verbatim; the caller's layout contract transfers.
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
         ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
-        System.realloc(ptr, layout, new_size)
+        // SAFETY: same pointer/layout/size, same contract as received.
+        unsafe { System.realloc(ptr, layout, new_size) }
     }
+    // SAFETY: forwarded verbatim; the caller's layout contract transfers.
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout)
+        // SAFETY: same pointer and layout, same contract as received.
+        unsafe { System.dealloc(ptr, layout) }
     }
 }
 
