@@ -1,0 +1,21 @@
+//! `cargo bench --bench projection_family` — the projection-family suite
+//! (same engine as `bilevel bench projection-family`): every flat
+//! [`ProjectionKind`] over f32/f64 at representative shapes, plus the
+//! multilevel tree's depth-vs-threads speedup curve. Writes
+//! `BENCH_projection_family.json` in the working directory (repo root
+//! under cargo).
+//!
+//! Set `BILEVEL_BENCH_QUICK=1` for a shortened sweep.
+//!
+//! [`ProjectionKind`]: bilevel_sparse::projection::ProjectionKind
+
+use bilevel_sparse::bench::projection_family;
+
+fn main() {
+    let quick = std::env::var("BILEVEL_BENCH_QUICK").is_ok();
+    let report = projection_family::run(quick);
+    println!("{}", report.markdown());
+    std::fs::write("BENCH_projection_family.json", report.to_json())
+        .expect("writing BENCH_projection_family.json");
+    println!("wrote BENCH_projection_family.json");
+}

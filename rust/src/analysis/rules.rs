@@ -9,8 +9,9 @@
 //!   `# Safety` sections count).
 //! * **unsafe-allowlist** — `unsafe` may only appear in the files of
 //!   [`UNSAFE_ALLOWLIST`]: the SIMD kernels, the dispatch cast shims, the
-//!   parking pool, the parallel column splitter, and the counting
-//!   allocator used by the zero-alloc test.
+//!   parking pool, the parallel column splitters (bi-level and the
+//!   multilevel tree), and the counting allocator used by the zero-alloc
+//!   test.
 //! * **lock-unwrap** — non-test code under `rust/src/` must not call
 //!   `.lock().unwrap()`; it must use the poison-recovering helpers in
 //!   [`crate::sync`] so one panicking thread cannot cascade into
@@ -46,14 +47,17 @@ pub const RULE_CLIPPY: &str = "clippy-deny";
 /// Files (repo-relative, unix separators) allowed to contain `unsafe`
 /// code. Everything here is either a SIMD kernel reached only behind a
 /// runtime CPU-feature check, a TypeId-guarded cast shim, the parking
-/// pool's scoped-borrow machinery, the parallel splitter's disjoint-chunk
-/// slicing, or the counting global allocator of the zero-alloc test.
+/// pool's scoped-borrow machinery, a disjoint-chunk column splitter (the
+/// bi-level parallel path and the multilevel tree's pooled subtree stages
+/// share the same SendPtr idiom), or the counting global allocator of the
+/// zero-alloc test.
 pub const UNSAFE_ALLOWLIST: &[&str] = &[
     "rust/src/kernels/avx2.rs",
     "rust/src/kernels/dispatch.rs",
     "rust/src/kernels/neon.rs",
     "rust/src/kernels/pool.rs",
     "rust/src/projection/bilevel/parallel.rs",
+    "rust/src/projection/multilevel/mod.rs",
     "rust/tests/kernels_alloc.rs",
 ];
 

@@ -11,6 +11,7 @@
 //! their (name, shape) keys by construction.
 
 use crate::bench::kernels::KernelBenchReport;
+use crate::bench::projection_family::FamilyBenchReport;
 use crate::bench::sparse::SparseBenchReport;
 use crate::net::wire::Json;
 
@@ -186,10 +187,60 @@ pub fn compare_sparse(
     Ok(CompareReport { suite: "sparse", tolerance, min_ms, rows, skipped_fresh_only: skipped })
 }
 
+/// Compare a fresh projection-family bench run against a committed
+/// `BENCH_projection_family.json`. Entries match on `(name, rows, cols)`;
+/// the gated quantity is `ms` (the family rows are absolute medians — no
+/// baseline column).
+pub fn compare_projection_family(
+    committed_json: &str,
+    fresh: &FamilyBenchReport,
+    tolerance: f64,
+    min_ms: f64,
+) -> Result<CompareReport, String> {
+    let entries = committed_entries(committed_json)?;
+    let mut rows = Vec::new();
+    let mut skipped = 0usize;
+    for f in &fresh.entries {
+        let hit = entries.iter().find(|e| {
+            e.get("name").and_then(|v| v.as_str()) == Some(f.name.as_str())
+                && e.get("rows").and_then(|v| v.as_usize()) == Some(f.rows)
+                && e.get("cols").and_then(|v| v.as_usize()) == Some(f.cols)
+        });
+        let Some(hit) = hit else {
+            skipped += 1;
+            continue;
+        };
+        let committed_ms = hit
+            .get("ms")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("committed entry {} has no ms", f.name))?;
+        rows.push(CompareRow {
+            name: f.name.clone(),
+            shape: format!("{}x{}", f.rows, f.cols),
+            committed_ms,
+            fresh_ms: f.ms,
+            regressed: gate(committed_ms, f.ms, tolerance, min_ms),
+        });
+    }
+    if rows.is_empty() {
+        return Err(
+            "no comparable projection-family rows between fresh run and committed snapshot".into(),
+        );
+    }
+    Ok(CompareReport {
+        suite: "projection-family",
+        tolerance,
+        min_ms,
+        rows,
+        skipped_fresh_only: skipped,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::bench::kernels::KernelBenchEntry;
+    use crate::bench::projection_family::FamilyBenchEntry;
     use crate::bench::machine_info;
     use crate::bench::sparse::SparseBenchEntry;
     use crate::projection::bilevel::ParallelPolicy;
@@ -280,6 +331,49 @@ mod tests {
         let fresh = kernel_report(vec![kentry("bp1inf/seq", 128, 0.05)]);
         assert!(compare_kernels("{\"quick\": true}", &fresh, 2.0, 0.02).is_err());
         assert!(compare_kernels("not json", &fresh, 2.0, 0.02).is_err());
+    }
+
+    #[test]
+    fn projection_family_compare_gates_on_ms() {
+        let committed = r#"{
+          "entries": [
+            {"name": "project/l21/f64", "rows": 256, "cols": 256, "ms": 0.4},
+            {"name": "multilevel/d3/t4", "rows": 256, "cols": 256, "ms": 0.2},
+            {"name": "project/linf1-newton/f32", "rows": 256, "cols": 256, "ms": 0.01}
+          ]
+        }"#;
+        let entry = |name: &str, ms: f64| FamilyBenchEntry {
+            name: name.into(),
+            rows: 256,
+            cols: 256,
+            ms,
+        };
+        let fresh = FamilyBenchReport {
+            quick: true,
+            machine: machine_info(),
+            entries: vec![
+                entry("project/l21/f64", 0.5),
+                entry("multilevel/d3/t4", 0.9),
+                // Committed 0.01 ms < min gate 0.02 — noise-exempt even 20x slower.
+                entry("project/linf1-newton/f32", 0.2),
+                // No committed counterpart — skipped, not failed.
+                entry("multilevel/d4/t8", 0.3),
+            ],
+        };
+        let rep = compare_projection_family(committed, &fresh, 2.0, 0.02).unwrap();
+        assert_eq!(rep.suite, "projection-family");
+        assert_eq!(rep.rows.len(), 3);
+        assert_eq!(rep.skipped_fresh_only, 1);
+        let regs = rep.regressions();
+        assert_eq!(regs.len(), 1, "{}", rep.markdown());
+        assert_eq!(regs[0].name, "multilevel/d3/t4");
+
+        let none = FamilyBenchReport {
+            quick: true,
+            machine: machine_info(),
+            entries: vec![entry("multilevel/d9/t9", 0.1)],
+        };
+        assert!(compare_projection_family(committed, &none, 2.0, 0.02).is_err());
     }
 
     #[test]

@@ -5,6 +5,7 @@
 
 pub mod compare;
 pub mod kernels;
+pub mod projection_family;
 pub mod sparse;
 
 use std::time::{Duration, Instant};

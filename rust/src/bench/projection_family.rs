@@ -1,0 +1,238 @@
+//! Projection-family benchmarks — `bilevel bench projection-family` and
+//! `cargo bench --bench projection_family`.
+//!
+//! Times every flat [`ProjectionKind`] over f32/f64 at representative
+//! shapes, plus the multilevel projection tree's depth-vs-threads speedup
+//! curve (the sequel paper's scaling claim: per-subtree work on the
+//! persistent kernel pool). Results render as a markdown table and
+//! serialize to `BENCH_projection_family.json` (repo root), which
+//! `bilevel bench compare` gates against — see EXPERIMENTS.md §Projection
+//! family for how to regenerate.
+
+use crate::bench::{black_box, machine_info, time_fn, BenchConfig, MachineInfo};
+use crate::projection::bilevel::ParallelPolicy;
+use crate::projection::l1::L1Algorithm;
+use crate::projection::multilevel::{project_multilevel_with, tree_norm, MultilevelSpec};
+use crate::projection::ProjectionKind;
+use crate::rng::Xoshiro256pp;
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// One timed row. Unlike the kernel suite there is no baseline column:
+/// the family rows are absolute medians, compared across PRs by
+/// `bench compare` rather than against an in-process scalar twin.
+#[derive(Clone, Debug)]
+pub struct FamilyBenchEntry {
+    /// `project/<kind>/<dtype>` for flat kinds,
+    /// `multilevel/d<depth>/t<threads>` for the tree curve.
+    pub name: String,
+    pub rows: usize,
+    pub cols: usize,
+    /// Median wall time, ms.
+    pub ms: f64,
+}
+
+/// Full report of one `bench projection-family` run.
+#[derive(Clone, Debug)]
+pub struct FamilyBenchReport {
+    pub quick: bool,
+    /// What produced these numbers (CPU, arch/OS, dispatched ISA, threads).
+    pub machine: MachineInfo,
+    pub entries: Vec<FamilyBenchEntry>,
+}
+
+impl FamilyBenchReport {
+    /// Hand-rolled JSON (no serde offline). Stable key order, fixed
+    /// notation — diff-friendly for the perf trajectory.
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"quick\": {},\n", self.quick));
+        s.push_str(&format!("  \"machine\": {},\n", self.machine.to_json()));
+        s.push_str("  \"entries\": [\n");
+        for (i, e) in self.entries.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"rows\": {}, \"cols\": {}, \"ms\": {:.6}}}{}\n",
+                e.name,
+                e.rows,
+                e.cols,
+                e.ms,
+                if i + 1 < self.entries.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Terminal rendering: the §Projection family markdown table.
+    pub fn markdown(&self) -> String {
+        let rows: Vec<Vec<String>> = self
+            .entries
+            .iter()
+            .map(|e| {
+                vec![e.name.clone(), format!("{}x{}", e.rows, e.cols), format!("{:.3}", e.ms)]
+            })
+            .collect();
+        let mut s = crate::report::markdown_table(&["bench", "shape", "ms"], &rows);
+        s.push_str(&format!(
+            "\nmachine: {} ({}/{}, {} threads), kernel isa: {}\n",
+            self.machine.cpu_model,
+            self.machine.arch,
+            self.machine.os,
+            self.machine.hardware_threads,
+            self.machine.isa
+        ));
+        s
+    }
+}
+
+/// Time one flat kind at one shape for scalar type `T`. Radius = half the
+/// matched norm so every kind does real shrinking work (the identity
+/// baseline has no ball and is skipped by [`run`]).
+fn flat_entry<T: Scalar>(
+    cfg: &BenchConfig,
+    kind: ProjectionKind,
+    dtype: &str,
+    rows: usize,
+    cols: usize,
+) -> FamilyBenchEntry {
+    let mut rng = Xoshiro256pp::seed_from_u64((rows * 31 + cols) as u64);
+    let y = Matrix::<T>::randn(rows, cols, &mut rng);
+    let eta = kind
+        .matched_norm(&y)
+        .map(|n| n * T::from_f64(0.5))
+        .unwrap_or(T::ONE);
+    let stats = time_fn(cfg, || black_box(kind.apply_with(&y, eta, L1Algorithm::Condat)));
+    FamilyBenchEntry {
+        name: format!("project/{}/{dtype}", kind.name()),
+        rows,
+        cols,
+        ms: stats.median * 1e3,
+    }
+}
+
+/// The tree specs of the depth-vs-threads curve, root→leaf, one per depth
+/// 2..=4. Depth 2 `l1/linf` is exactly the paper's bi-level projection, so
+/// the `t1` row of that spec doubles as the sequential reference the
+/// speedups are read against.
+pub const CURVE_SPECS: &[&str] = &["l1/linf", "l1/l2:8/linf", "l1/l1:4/l2:8/linf"];
+
+/// Thread counts probed per tree spec.
+pub const CURVE_THREADS: &[usize] = &[1, 2, 4, 8];
+
+/// Measure the multilevel depth-vs-threads curve at one shape. The pool is
+/// forced on (`min_elems: 0`) so each row is a genuine split at that
+/// thread count, not the sequential fallback.
+pub fn multilevel_curve(cfg: &BenchConfig, rows: usize, cols: usize) -> Vec<FamilyBenchEntry> {
+    let mut rng = Xoshiro256pp::seed_from_u64(0xC0DE + rows as u64);
+    let y = Matrix::<f64>::randn(rows, cols, &mut rng);
+    let mut entries = Vec::new();
+    for spec_s in CURVE_SPECS {
+        let spec = MultilevelSpec::parse(spec_s).expect("curve spec parses");
+        let eta = tree_norm(&y, &spec) * 0.5;
+        for &threads in CURVE_THREADS {
+            let policy = ParallelPolicy { threads, min_elems: 0 };
+            let stats = time_fn(cfg, || {
+                black_box(project_multilevel_with(&y, eta, &spec, L1Algorithm::Condat, policy))
+            });
+            entries.push(FamilyBenchEntry {
+                name: format!("multilevel/d{}/t{}", spec.depth(), threads),
+                rows,
+                cols,
+                ms: stats.median * 1e3,
+            });
+        }
+    }
+    entries
+}
+
+/// Run the full projection-family suite. `quick` shrinks shapes and timing
+/// budgets for CI-sized runs; quick shapes are a strict subset of the full
+/// shapes so `bench compare` always finds overlapping rows against the
+/// committed full-mode snapshot.
+pub fn run(quick: bool) -> FamilyBenchReport {
+    let cfg = if quick { BenchConfig::quick() } else { BenchConfig::default() };
+    let shapes: &[(usize, usize)] =
+        if quick { &[(256, 256)] } else { &[(256, 256), (512, 512)] };
+
+    let mut entries = Vec::new();
+    for &(rows, cols) in shapes {
+        for &kind in ProjectionKind::all() {
+            entries.push(flat_entry::<f32>(&cfg, kind, "f32", rows, cols));
+            entries.push(flat_entry::<f64>(&cfg, kind, "f64", rows, cols));
+        }
+        entries.extend(multilevel_curve(&cfg, rows, cols));
+    }
+
+    FamilyBenchReport { quick, machine: machine_info(), entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> BenchConfig {
+        BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 1,
+            target_time: std::time::Duration::from_millis(1),
+        }
+    }
+
+    #[test]
+    fn report_serializes_to_valid_shape() {
+        let report = FamilyBenchReport {
+            quick: true,
+            machine: crate::bench::machine_info(),
+            entries: vec![FamilyBenchEntry {
+                name: "project/l21/f64".into(),
+                rows: 8,
+                cols: 8,
+                ms: 0.25,
+            }],
+        };
+        let json = report.to_json();
+        assert!(json.contains("\"name\": \"project/l21/f64\""));
+        assert!(json.contains("\"ms\": 0.250000"));
+        assert!(json.contains("\"machine\": {\"cpu_model\""));
+        assert!(json.trim_end().ends_with('}'));
+        let md = report.markdown();
+        assert!(md.contains("project/l21/f64"));
+        assert!(md.contains("8x8"));
+        assert!(md.contains(crate::kernels::active_isa().name()));
+    }
+
+    #[test]
+    fn flat_entries_cover_every_kind_and_dtype() {
+        let cfg = tiny_cfg();
+        for &kind in ProjectionKind::all() {
+            let e32 = flat_entry::<f32>(&cfg, kind, "f32", 6, 5);
+            let e64 = flat_entry::<f64>(&cfg, kind, "f64", 6, 5);
+            assert_eq!(e32.name, format!("project/{}/f32", kind.name()));
+            assert_eq!(e64.name, format!("project/{}/f64", kind.name()));
+            assert!(e32.ms >= 0.0 && e64.ms >= 0.0);
+        }
+    }
+
+    #[test]
+    fn multilevel_curve_emits_depth_by_thread_grid() {
+        let cfg = tiny_cfg();
+        let entries = multilevel_curve(&cfg, 6, 8);
+        assert_eq!(entries.len(), CURVE_SPECS.len() * CURVE_THREADS.len());
+        assert!(entries.iter().any(|e| e.name == "multilevel/d2/t1"));
+        assert!(entries.iter().any(|e| e.name == "multilevel/d4/t8"));
+        assert!(entries.iter().all(|e| e.rows == 6 && e.cols == 8));
+    }
+
+    #[test]
+    fn quick_shapes_are_a_subset_of_full_shapes() {
+        // The compare gate matches (name, rows, cols); a quick shape
+        // missing from the full/committed set would silently gate nothing.
+        let quick: &[(usize, usize)] = &[(256, 256)];
+        let full: &[(usize, usize)] = &[(256, 256), (512, 512)];
+        for s in quick {
+            assert!(full.contains(s));
+        }
+    }
+}

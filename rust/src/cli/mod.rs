@@ -90,6 +90,11 @@ USAGE:
 COMMANDS:
   project      project a random matrix, print norms/sparsity/timing
                --rows N --cols M --eta E --method <name> [--seed S] [--algo condat]
+               [--threads N] [--config file.toml] reads defaults from the
+               file's [projection] section; --method multilevel takes a
+               root->leaf tree spec --levels \"l1/l2:8/linf\" (a level is
+               <norm>[:group] with norm l1|l2|linf; the last level is the
+               leaf) and projects the whole tree bottom-up
   train        train the sparse SAE end to end (needs `make artifacts`)
                --dataset synth64|synth16|hif2|tiny --projection <name> --eta E
                [--backend native|pallas] [--epochs1 N] [--epochs2 N] [--lr F]
@@ -98,7 +103,7 @@ COMMANDS:
                [--resume model.ckpt] [--export model.ckpt] [--export-dense]
                (a resumed run continues the interrupted trajectory exactly)
   experiment   regenerate a paper table/figure (fig1..fig9, table1..table4,
-               sparse, all)
+               sparse, family, all)
                bilevel experiment fig1 [--quick] [--seeds 1,2,3]
   artifacts    list the AOT artifacts in the manifest [--dir artifacts]
   bench        run the in-process benchmark suites; `bench kernels`
@@ -110,11 +115,17 @@ COMMANDS:
                encode across sparsity levels (f32/f64), verifies bitwise
                agreement, and records BENCH_sparse.json
                bilevel bench sparse [--quick] [--out BENCH_sparse.json]
+               `bench projection-family` times every flat projection kind
+               (f32/f64) plus the multilevel tree's depth-vs-threads
+               speedup curve and records BENCH_projection_family.json
+               bilevel bench projection-family [--quick]
+               [--out BENCH_projection_family.json]
                `bench compare` is the perf-regression gate: a fresh quick
                run diffed against the committed snapshots; exits nonzero
                when any overlapping row regresses beyond the tolerance
                bilevel bench compare [--tolerance 2.0] [--min-ms 0.02]
                [--kernels BENCH_kernels.json] [--sparse BENCH_sparse.json]
+               [--projection-family BENCH_projection_family.json]
                env: BILEVEL_FORCE_SCALAR=1 pins the portable kernel path
                (no AVX2/NEON dispatch); BILEVEL_MIN_ELEMS=N overrides the
                pool-vs-sequential crossover threshold
@@ -191,7 +202,14 @@ COMMANDS:
 
 PROJECTION METHODS:
   bilevel-l1inf (Alg.1) | bilevel-l11 (Alg.2) | bilevel-l12 (Alg.3)
-  l1inf-ssn (Chu et al.) | l1inf-newton (Chau et al.) | l1inf-quattoni | none
+  l1inf-ssn (Chu et al.) | l1inf-newton (Chau et al.) | l1inf-quattoni
+  l21 (row-wise l2 onto an l1 budget) | linf1-newton (per-column dual
+  Newton, Chau-Wohlberg-Rodriguez) | none (identity baseline)
+  multilevel (--levels tree spec; depth-2 l1/linf == bilevel-l1inf
+  bit-for-bit)
+  note: the bare alias \"newton\" is deprecated — it still resolves to
+  l1inf-newton (the exact l1,inf Newton), NOT linf1-newton; spell out
+  the full name to disambiguate
 ";
 
 #[cfg(test)]

@@ -9,7 +9,7 @@ pub mod schema;
 pub mod toml;
 
 pub use schema::{
-    DatasetKind, HttpConfig, PersistConfig, ProjectionBackend, RunConfig, ServeConfig,
-    TrainConfig,
+    DatasetKind, HttpConfig, PersistConfig, ProjectionBackend, ProjectionConfig,
+    ProjectionMethod, RunConfig, ServeConfig, TrainConfig,
 };
 pub use toml::{parse, TomlDoc, TomlValue};

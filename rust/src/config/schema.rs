@@ -5,6 +5,7 @@ use std::time::Duration;
 
 use super::toml::TomlDoc;
 use crate::projection::l1::L1Algorithm;
+use crate::projection::multilevel::MultilevelSpec;
 use crate::projection::ProjectionKind;
 
 /// Which dataset substrate a run uses.
@@ -229,6 +230,98 @@ impl PersistConfig {
     pub fn validate(&self) -> Result<(), String> {
         if self.dir.is_empty() {
             return Err("persist.dir must not be empty".into());
+        }
+        Ok(())
+    }
+}
+
+/// What the standalone `project` path applies: a flat [`ProjectionKind`]
+/// or a [`MultilevelSpec`] projection tree.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProjectionMethod {
+    Kind(ProjectionKind),
+    Multilevel(MultilevelSpec),
+}
+
+impl ProjectionMethod {
+    /// Resolve a method name plus an optional tree spec. `"multilevel"`
+    /// requires `levels`; any other name must be a [`ProjectionKind`]
+    /// (`levels`, if also given, is rejected to avoid silent ambiguity).
+    pub fn parse(method: &str, levels: Option<&str>) -> Result<Self, String> {
+        if method.eq_ignore_ascii_case("multilevel") {
+            let spec = levels.ok_or(
+                "projection method \"multilevel\" needs a tree spec \
+                 (projection.levels / --levels), e.g. \"l1/l2:8/linf\"",
+            )?;
+            return Ok(Self::Multilevel(MultilevelSpec::parse(spec)?));
+        }
+        if levels.is_some() {
+            return Err(format!(
+                "projection.levels only applies to method \"multilevel\", not {method:?}"
+            ));
+        }
+        ProjectionKind::parse(method)
+            .map(Self::Kind)
+            .ok_or_else(|| format!("unknown projection method {method:?}"))
+    }
+
+    /// Human-readable identifier (CSV headers, CLI echo).
+    pub fn label(&self) -> String {
+        match self {
+            Self::Kind(k) => k.name().to_string(),
+            Self::Multilevel(spec) => format!("multilevel({})", spec.format()),
+        }
+    }
+}
+
+/// Standalone projection operator configuration (`[projection]` TOML
+/// section): what `bilevel project --config` applies and the defaults the
+/// projection-family experiments run with.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProjectionConfig {
+    pub method: ProjectionMethod,
+    /// Projection radius η.
+    pub eta: f64,
+    /// Inner ℓ1 solver for the bi-level / ℓ2,1 / multilevel methods.
+    pub algo: L1Algorithm,
+    /// Parallel split cap for the multilevel tree (0 ⇒ hardware threads).
+    pub threads: usize,
+}
+
+impl Default for ProjectionConfig {
+    fn default() -> Self {
+        Self {
+            method: ProjectionMethod::Kind(ProjectionKind::BilevelL1Inf),
+            eta: 1.0,
+            algo: L1Algorithm::Condat,
+            threads: 0,
+        }
+    }
+}
+
+impl ProjectionConfig {
+    /// Build from a parsed TOML doc (`[projection]` section), defaults
+    /// elsewhere. Keys: `method`, `levels` (multilevel tree spec string),
+    /// `eta`, `algo`, `threads`.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Self, String> {
+        let d = Self::default();
+        let method_s = doc.str_or("projection.method", "bilevel-l1inf");
+        let levels = doc.get("projection.levels").and_then(|v| v.as_str());
+        let algo = L1Algorithm::parse(doc.str_or("projection.algo", d.algo.name()))
+            .ok_or("projection.algo: unknown algorithm")?;
+        let cfg = Self {
+            method: ProjectionMethod::parse(method_s, levels)?,
+            eta: doc.f64_or("projection.eta", d.eta),
+            algo,
+            threads: doc.usize_or("projection.threads", d.threads),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.eta.is_finite() || self.eta < 0.0 {
+            return Err("projection.eta must be finite and non-negative".into());
         }
         Ok(())
     }
@@ -461,6 +554,7 @@ pub struct RunConfig {
     pub train: TrainConfig,
     pub serve: ServeConfig,
     pub persist: PersistConfig,
+    pub projection: ProjectionConfig,
     pub artifacts_dir: String,
     pub seeds: Vec<u64>,
 }
@@ -471,6 +565,7 @@ impl Default for RunConfig {
             train: TrainConfig::default(),
             serve: ServeConfig::default(),
             persist: PersistConfig::default(),
+            projection: ProjectionConfig::default(),
             artifacts_dir: "artifacts".into(),
             seeds: vec![42, 43, 44, 45],
         }
@@ -493,6 +588,7 @@ impl RunConfig {
             train: TrainConfig::from_doc(doc)?,
             serve: ServeConfig::from_doc(doc)?,
             persist: PersistConfig::from_doc(doc)?,
+            projection: ProjectionConfig::from_doc(doc)?,
             artifacts_dir: doc.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
             seeds,
         })
@@ -639,6 +735,50 @@ mod tests {
         let doc = parse("[persist]\ncheckpoint_every = 3").unwrap();
         assert_eq!(RunConfig::from_doc(&doc).unwrap().persist.checkpoint_every, 3);
         assert_eq!(RunConfig::default().persist, PersistConfig::default());
+    }
+
+    #[test]
+    fn projection_section_parses_flat_and_multilevel() {
+        ProjectionConfig::default().validate().unwrap();
+        let doc = parse("[projection]\nmethod = \"l21\"\neta = 0.75\nalgo = \"michelot\"")
+            .unwrap();
+        let cfg = ProjectionConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.method, ProjectionMethod::Kind(ProjectionKind::L21));
+        assert_eq!(cfg.eta, 0.75);
+        assert_eq!(cfg.algo, L1Algorithm::Michelot);
+
+        let doc = parse(
+            "[projection]\nmethod = \"multilevel\"\nlevels = \"l1/l2:8/linf\"\nthreads = 3",
+        )
+        .unwrap();
+        let cfg = ProjectionConfig::from_doc(&doc).unwrap();
+        match &cfg.method {
+            ProjectionMethod::Multilevel(spec) => assert_eq!(spec.format(), "l1/l2:8/linf"),
+            other => panic!("expected multilevel, got {other:?}"),
+        }
+        assert_eq!(cfg.threads, 3);
+        assert_eq!(cfg.method.label(), "multilevel(l1/l2:8/linf)");
+
+        // RunConfig carries the section; an empty doc falls back to defaults.
+        let doc = parse("[projection]\nmethod = \"linf1-newton\"").unwrap();
+        let run = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(run.projection.method, ProjectionMethod::Kind(ProjectionKind::Linf1Newton));
+        assert_eq!(RunConfig::default().projection, ProjectionConfig::default());
+    }
+
+    #[test]
+    fn projection_section_invalid_values_rejected() {
+        for bad in [
+            "[projection]\nmethod = \"bogus\"",
+            "[projection]\nmethod = \"multilevel\"",           // missing levels
+            "[projection]\nmethod = \"multilevel\"\nlevels = \"l1\"", // depth 1
+            "[projection]\nmethod = \"l21\"\nlevels = \"l1/linf\"",   // levels without multilevel
+            "[projection]\neta = -2.0",
+            "[projection]\nalgo = \"bogus\"",
+        ] {
+            let doc = parse(bad).unwrap();
+            assert!(ProjectionConfig::from_doc(&doc).is_err(), "accepted {bad:?}");
+        }
     }
 
     #[test]

@@ -1,0 +1,166 @@
+//! §Projection family (repo-grown) — one feasibility/identity row per
+//! projection operator the crate ships, plus a multilevel tree row.
+//!
+//! For every flat [`ProjectionKind`] the runner projects the same random
+//! matrix at `η = 0.4·‖Y‖` in the kind's own matched norm and reports:
+//! feasibility (`‖P(Y)‖ ≤ η`), the identity sum `‖Y−P‖+‖P‖` against
+//! `‖Y‖`, and the gap. The identity is exact for the ℓ1,∞ family, ℓ1,1
+//! and ℓ2,1 (their projections shrink along the norm); for ℓ1,2 and ℓ∞,1
+//! only the triangle inequality `sum ≥ total` is guaranteed, so those
+//! rows report the (nonnegative) excess instead of asserting a zero gap.
+//!
+//! The identity baseline (`ProjectionKind::None`) has **no** matched norm
+//! — [`ProjectionKind::matched_norm`] returns `Option::None` — and the
+//! report path must render that as an `n/a` row rather than panic; this
+//! runner is the regression test for that contract.
+
+use anyhow::Result;
+
+use super::ExpContext;
+use crate::norms::frobenius_norm;
+use crate::projection::l1::L1Algorithm;
+use crate::projection::multilevel::{project_multilevel, tree_norm, MultilevelSpec};
+use crate::projection::ProjectionKind;
+use crate::report::{markdown_table, CsvWriter};
+use crate::rng::Xoshiro256pp;
+use crate::tensor::Matrix;
+
+/// The kinds whose matched-norm identity `‖Y−P‖+‖P‖ = ‖Y‖` is exact.
+fn identity_is_exact(kind: ProjectionKind) -> bool {
+    matches!(
+        kind,
+        ProjectionKind::BilevelL1Inf
+            | ProjectionKind::BilevelL11
+            | ProjectionKind::ExactL1InfQuattoni
+            | ProjectionKind::ExactL1InfNewton
+            | ProjectionKind::ExactL1InfSsn
+            | ProjectionKind::L21
+    )
+}
+
+pub fn family(ctx: &ExpContext) -> Result<()> {
+    let (n, m) = if ctx.quick { (40, 30) } else { (200, 300) };
+    let mut rng = Xoshiro256pp::seed_from_u64(0xFA);
+    let y = Matrix::<f64>::randn(n, m, &mut rng);
+
+    let mut csv = CsvWriter::create(
+        "family_projection.csv",
+        &["kind", "eta", "norm_before", "norm_after", "resid_norm", "sum", "gap", "feasible"],
+    )?;
+    let mut rows = Vec::new();
+
+    // Every flat kind plus the identity baseline — the baseline exercises
+    // the matched_norm == None report path end to end.
+    let mut kinds = ProjectionKind::all().to_vec();
+    kinds.push(ProjectionKind::None);
+    for kind in kinds {
+        match kind.matched_norm(&y) {
+            Some(total) => {
+                let eta = 0.4 * total;
+                let x = kind.apply_with(&y, eta, L1Algorithm::Condat);
+                let after = kind.matched_norm(&x).expect("same kind, same Some-ness");
+                let resid = kind.matched_norm(&y.sub(&x)).expect("same kind, same Some-ness");
+                let sum = after + resid;
+                let gap = sum - total;
+                let feasible = after <= eta * (1.0 + 1e-9) + 1e-12;
+                assert!(feasible, "{}: ‖P(Y)‖ = {after} > η = {eta}", kind.name());
+                // Triangle inequality holds for every kind; exactness only
+                // for the norms the projection shrinks along.
+                assert!(gap >= -1e-8, "{}: sum below total", kind.name());
+                if identity_is_exact(kind) {
+                    assert!(
+                        gap.abs() <= 1e-8 * total.max(1.0),
+                        "{}: identity gap {gap:.3e}",
+                        kind.name()
+                    );
+                }
+                csv.row(&[
+                    kind.name().into(),
+                    format!("{eta:.4}"),
+                    format!("{total:.6}"),
+                    format!("{after:.6}"),
+                    format!("{resid:.6}"),
+                    format!("{sum:.6}"),
+                    format!("{gap:.3e}"),
+                    format!("{feasible}"),
+                ])?;
+                rows.push(vec![
+                    kind.name().to_string(),
+                    format!("{eta:.2}"),
+                    format!("{after:.4}"),
+                    format!("{:.2e}", gap.abs()),
+                    if identity_is_exact(kind) { "exact".into() } else { "triangle".into() },
+                ]);
+            }
+            Option::None => {
+                // The radius-free baseline: P(Y) = Y, no ball, no norm.
+                let x = kind.apply_with(&y, 1.0, L1Algorithm::Condat);
+                assert_eq!(x.max_abs_diff(&y), 0.0, "baseline must be the identity");
+                csv.row(&[
+                    kind.name().into(),
+                    "n/a".into(),
+                    "n/a".into(),
+                    "n/a".into(),
+                    "n/a".into(),
+                    "n/a".into(),
+                    "n/a".into(),
+                    "true".into(),
+                ])?;
+                rows.push(vec![
+                    kind.name().to_string(),
+                    "n/a".into(),
+                    format!("{:.4}", frobenius_norm(&x)),
+                    "n/a".into(),
+                    "identity".into(),
+                ]);
+            }
+        }
+    }
+
+    // One multilevel tree row: depth 3, projected onto 40% of its own
+    // tree norm, feasibility in the tree norm.
+    let spec = MultilevelSpec::parse("l1/l2:8/linf").expect("spec parses");
+    let total = tree_norm(&y, &spec);
+    let eta = 0.4 * total;
+    let x = project_multilevel(&y, eta, &spec);
+    let after = tree_norm(&x, &spec);
+    assert!(after <= eta * (1.0 + 1e-9) + 1e-12, "multilevel: {after} > {eta}");
+    csv.row(&[
+        format!("multilevel({})", spec.format()),
+        format!("{eta:.4}"),
+        format!("{total:.6}"),
+        format!("{after:.6}"),
+        "n/a".into(),
+        "n/a".into(),
+        "n/a".into(),
+        "true".into(),
+    ])?;
+    rows.push(vec![
+        format!("multilevel({})", spec.format()),
+        format!("{eta:.2}"),
+        format!("{after:.4}"),
+        "n/a".into(),
+        "tree".into(),
+    ]);
+
+    println!("{}", markdown_table(&["kind", "eta", "‖P(Y)‖", "|gap|", "identity"], &rows));
+    println!("family: every kind feasible in its matched norm; baseline row rendered as n/a");
+    println!("wrote {}", csv.path.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_identity_set_is_a_subset_of_all_kinds() {
+        let exact: Vec<_> =
+            ProjectionKind::all().iter().copied().filter(|&k| identity_is_exact(k)).collect();
+        assert!(exact.contains(&ProjectionKind::BilevelL1Inf));
+        assert!(exact.contains(&ProjectionKind::L21));
+        assert!(!identity_is_exact(ProjectionKind::BilevelL12));
+        assert!(!identity_is_exact(ProjectionKind::Linf1Newton));
+        assert!(!identity_is_exact(ProjectionKind::None));
+    }
+}

@@ -19,7 +19,9 @@
 //! | table4 | HIF2-sim best-radius accuracy table             |
 //! | fig9   | first-layer weight sparsity pattern             |
 //! | sparse | dense vs compacted sparse encode (repo-grown)   |
+//! | family | projection-family feasibility/identity (repo-grown) |
 
+mod family;
 mod identity;
 mod sae_sweep;
 mod sparse_infer;
@@ -63,12 +65,12 @@ impl Default for ExpContext {
     }
 }
 
-/// All experiment ids in run order. `sparse` is repo-grown (dense vs
-/// compacted encode — EXPERIMENTS.md §Sparse inference), the rest map to
-/// paper artifacts.
-pub const ALL: [&str; 14] = [
+/// All experiment ids in run order. `sparse` and `family` are repo-grown
+/// (EXPERIMENTS.md §Sparse inference / §Projection family), the rest map
+/// to paper artifacts.
+pub const ALL: [&str; 15] = [
     "fig1", "fig2", "fig3", "fig4", "table1", "fig5", "fig6", "fig7", "table2", "table3",
-    "fig8", "table4", "fig9", "sparse",
+    "fig8", "table4", "fig9", "sparse", "family",
 ];
 
 /// Run one experiment by id.
@@ -88,6 +90,7 @@ pub fn run(id: &str, ctx: &ExpContext) -> Result<()> {
         "table4" => sae_sweep::table4(ctx),
         "fig9" => weights::fig9(ctx),
         "sparse" => sparse_infer::sparse(ctx),
+        "family" => family::family(ctx),
         "all" => {
             for id in ALL {
                 println!("\n================ {id} ================");

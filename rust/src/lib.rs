@@ -108,13 +108,21 @@ pub mod tensor;
 #[deny(clippy::all)]
 pub mod prelude {
     pub use crate::kernels::Workspace;
-    pub use crate::norms::{l11_norm, l12_norm, l1inf_norm, linf1_norm, frobenius_norm};
+    pub use crate::norms::{
+        l11_norm, l12_norm, l1inf_norm, l21_norm, linf1_norm, frobenius_norm,
+    };
     pub use crate::persist::{Checkpoint, ModelBundle, PersistError};
     pub use crate::projection::bilevel::{
         bilevel_l11, bilevel_l12, bilevel_l1inf, bilevel_l1inf_into,
     };
     pub use crate::projection::l1::{project_l1, L1Algorithm};
     pub use crate::projection::l1inf::{project_l1inf, L1InfAlgorithm};
+    pub use crate::projection::l21::{project_l21, project_l21_into};
+    pub use crate::projection::linf1::{project_linf1, project_linf1_into};
+    pub use crate::projection::multilevel::{
+        project_multilevel, project_multilevel_into, tree_norm, MultilevelSpec,
+        MultilevelWorkspace,
+    };
     pub use crate::rng::{Rng, SplitMix64, Xoshiro256pp};
     pub use crate::scalar::Scalar;
     pub use crate::serve::{Engine, ProjectionRequest, ProjectionResponse};

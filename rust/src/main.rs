@@ -11,7 +11,8 @@ use anyhow::{anyhow, Result};
 use bilevel_sparse::analysis;
 use bilevel_sparse::cli::{Args, USAGE};
 use bilevel_sparse::config::{
-    DatasetKind, HttpConfig, ProjectionBackend, RunConfig, ServeConfig, TomlDoc, TrainConfig,
+    DatasetKind, HttpConfig, ProjectionBackend, ProjectionConfig, ProjectionMethod, RunConfig,
+    ServeConfig, TomlDoc, TrainConfig,
 };
 use bilevel_sparse::coordinator::{run_seeds, run_seeds_with, RunOptions, SaeTrainer};
 use bilevel_sparse::experiments::{self, ExpContext};
@@ -19,6 +20,8 @@ use bilevel_sparse::fault::{self, FaultPlan, FaultSite};
 use bilevel_sparse::net::Server;
 use bilevel_sparse::norms::{column_sparsity, l1inf_norm};
 use bilevel_sparse::persist::{read_header, recover_latest, Checkpoint};
+use bilevel_sparse::projection::bilevel::ParallelPolicy;
+use bilevel_sparse::projection::multilevel::{project_multilevel_with, tree_norm};
 use bilevel_sparse::projection::{l1::L1Algorithm, ProjectionKind};
 use bilevel_sparse::rng::Xoshiro256pp;
 use bilevel_sparse::runtime::Runtime;
@@ -65,33 +68,80 @@ fn main() -> ExitCode {
 }
 
 fn cmd_project(args: &Args) -> Result<()> {
+    // A `--config` file's `[projection]` section seeds the defaults;
+    // individual flags override (same idiom as `train_configs`).
+    let proj_cfg = match args.opt("config") {
+        Some(path) => RunConfig::from_file(path).map_err(|e| anyhow!(e))?.projection,
+        None => ProjectionConfig::default(),
+    };
     let rows = args.usize_or("rows", 1000).map_err(|e| anyhow!(e))?;
     let cols = args.usize_or("cols", 1000).map_err(|e| anyhow!(e))?;
-    let eta = args.f64_or("eta", 1.0).map_err(|e| anyhow!(e))?;
+    let eta = args.f64_or("eta", proj_cfg.eta).map_err(|e| anyhow!(e))?;
     let seed = args.usize_or("seed", 42).map_err(|e| anyhow!(e))? as u64;
-    let method = ProjectionKind::parse(&args.str_or("method", "bilevel-l1inf"))
-        .ok_or_else(|| anyhow!("unknown --method"))?;
-    let algo = L1Algorithm::parse(&args.str_or("algo", "condat"))
+    let algo = L1Algorithm::parse(&args.str_or("algo", proj_cfg.algo.name()))
         .ok_or_else(|| anyhow!("unknown --algo"))?;
+    let threads = args.usize_or("threads", proj_cfg.threads).map_err(|e| anyhow!(e))?;
+
+    let default_method = match &proj_cfg.method {
+        ProjectionMethod::Kind(k) => k.name().to_string(),
+        ProjectionMethod::Multilevel(_) => "multilevel".to_string(),
+    };
+    let method_s = args.str_or("method", &default_method);
+    let method = if method_s.eq_ignore_ascii_case("multilevel") {
+        let levels = match args.opt("levels") {
+            Some(spec) => spec.to_string(),
+            None => match &proj_cfg.method {
+                ProjectionMethod::Multilevel(spec) => spec.format(),
+                ProjectionMethod::Kind(_) => {
+                    return Err(anyhow!(
+                        "--method multilevel needs --levels (root→leaf, e.g. \"l1/l2:8/linf\")"
+                    ))
+                }
+            },
+        };
+        ProjectionMethod::parse("multilevel", Some(&levels)).map_err(|e| anyhow!(e))?
+    } else {
+        ProjectionMethod::parse(&method_s, None).map_err(|e| anyhow!(e))?
+    };
 
     let mut rng = Xoshiro256pp::seed_from_u64(seed);
     let y = Matrix::<f64>::randn(rows, cols, &mut rng);
     let before = l1inf_norm(&y);
     let t0 = Instant::now();
-    let x = method.apply_with(&y, eta, algo);
+    let x = match &method {
+        ProjectionMethod::Kind(kind) => kind.apply_with(&y, eta, algo),
+        ProjectionMethod::Multilevel(spec) => {
+            let policy = ParallelPolicy { threads, ..ParallelPolicy::from_env_or_default() };
+            project_multilevel_with(&y, eta, spec, algo, policy)
+        }
+    };
     let dt = t0.elapsed();
+    // The method's own ball norm: `None` only for the radius-free
+    // identity baseline (`ProjectionKind::None`), which has no ball.
+    let matched = |m: &Matrix<f64>| -> Option<f64> {
+        match &method {
+            ProjectionMethod::Kind(kind) => kind.matched_norm(m),
+            ProjectionMethod::Multilevel(spec) => Some(tree_norm(m, spec)),
+        }
+    };
     println!("matrix         : {rows} x {cols} (seed {seed})");
-    println!("method         : {} (inner l1: {})", method.name(), algo.name());
+    println!("method         : {} (inner l1: {})", method.label(), algo.name());
     println!("eta            : {eta}");
     println!("||Y||_1inf     : {before:.6}");
     println!("||P(Y)||_1inf  : {:.6}", l1inf_norm(&x));
-    println!("matched norm   : {:.6} -> {:.6}", method.matched_norm(&y), method.matched_norm(&x));
-    let resid = y.sub(&x);
-    println!(
-        "identity check : ||Y-P||+||P|| = {:.6} vs ||Y|| = {:.6}",
-        method.matched_norm(&resid) + method.matched_norm(&x),
-        method.matched_norm(&y)
-    );
+    match (matched(&y), matched(&x)) {
+        (Some(ny), Some(nx)) => {
+            println!("matched norm   : {ny:.6} -> {nx:.6}");
+            let resid = y.sub(&x);
+            let nr = matched(&resid).unwrap_or(0.0);
+            println!(
+                "identity check : ||Y-P||+||P|| = {:.6} vs ||Y|| = {:.6}",
+                nr + nx,
+                ny
+            );
+        }
+        _ => println!("matched norm   : n/a (identity baseline projects onto no ball)"),
+    }
     println!("column sparsity: {:.2} %", column_sparsity(&x, 1e-12) * 100.0);
     println!("time           : {:.3} ms", dt.as_secs_f64() * 1e3);
     Ok(())
@@ -216,7 +266,9 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         .positional
         .first()
         .ok_or_else(|| {
-            anyhow!("usage: bilevel experiment <id> (fig1..fig9, table1..table4, sparse, all)")
+            anyhow!(
+                "usage: bilevel experiment <id> (fig1..fig9, table1..table4, sparse, family, all)"
+            )
         })?;
     let seeds = args.u64_list_or("seeds", &[42, 43, 44, 45]).map_err(|e| anyhow!(e))?;
     let ctx = ExpContext::new(
@@ -740,16 +792,33 @@ fn cmd_bench(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "projection-family" => {
+            println!(
+                "bilevel bench projection-family — flat projection kinds x dtypes x shapes \
+                 + multilevel depth-vs-threads curve{}",
+                if quick { " (quick)" } else { "" }
+            );
+            println!("kernel isa: {}", bilevel_sparse::kernels::active_isa().name());
+            let report = bilevel_sparse::bench::projection_family::run(quick);
+            println!("{}", report.markdown());
+            let out = args.str_or("out", "BENCH_projection_family.json");
+            std::fs::write(&out, report.to_json()).map_err(|e| anyhow!("{out}: {e}"))?;
+            println!("wrote {out}");
+            Ok(())
+        }
         "compare" => {
             // Perf-regression gate: fresh quick runs vs the committed
             // BENCH_*.json snapshots, matched on overlapping (name, shape)
             // keys. Regressed = committed_ms >= min_ms AND
             // fresh_ms > tolerance × committed_ms.
-            use bilevel_sparse::bench::compare::{compare_kernels, compare_sparse};
+            use bilevel_sparse::bench::compare::{
+                compare_kernels, compare_projection_family, compare_sparse,
+            };
             let tolerance = args.f64_or("tolerance", 2.0).map_err(|e| anyhow!(e))?;
             let min_ms = args.f64_or("min-ms", 0.02).map_err(|e| anyhow!(e))?;
             let kernels_path = args.str_or("kernels", "BENCH_kernels.json");
             let sparse_path = args.str_or("sparse", "BENCH_sparse.json");
+            let family_path = args.str_or("projection-family", "BENCH_projection_family.json");
             println!(
                 "bilevel bench compare — fresh quick run vs committed snapshots \
                  (tolerance {tolerance}x, min {min_ms} ms)"
@@ -771,8 +840,16 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 .map_err(|e| anyhow!("sparse compare: {e}"))?;
             println!("{}", sparse_report.markdown());
 
+            let committed_family = std::fs::read_to_string(&family_path)
+                .map_err(|e| anyhow!("{family_path}: {e}"))?;
+            let fresh_family = bilevel_sparse::bench::projection_family::run(true);
+            let family_report =
+                compare_projection_family(&committed_family, &fresh_family, tolerance, min_ms)
+                    .map_err(|e| anyhow!("projection-family compare: {e}"))?;
+            println!("{}", family_report.markdown());
+
             let mut regressions: Vec<String> = Vec::new();
-            for rep in [&kernels_report, &sparse_report] {
+            for rep in [&kernels_report, &sparse_report, &family_report] {
                 for row in rep.regressions() {
                     regressions.push(format!(
                         "{} {}: {:.4} ms committed -> {:.4} ms fresh ({:.2}x)",
@@ -794,7 +871,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 Err(anyhow!("{} bench row(s) regressed beyond {tolerance}x", regressions.len()))
             }
         }
-        other => Err(anyhow!("unknown bench target {other:?} (try: kernels, sparse, compare)")),
+        other => Err(anyhow!(
+            "unknown bench target {other:?} (try: kernels, sparse, projection-family, compare)"
+        )),
     }
 }
 

@@ -36,6 +36,20 @@ pub fn l12_norm<T: Scalar>(y: &Matrix<T>) -> T {
     y.columns().map(vec_ops::l2).sum()
 }
 
+/// `‖Y‖₂,₁ = Σ_i ‖Y_{i,:}‖₂` — sum of *row* ℓ2 norms (the group-lasso
+/// norm over rows, matched to the ℓ2,1-ball projection). Row sums of
+/// squares are accumulated column-by-column so the column-major storage
+/// is walked contiguously.
+pub fn l21_norm<T: Scalar>(y: &Matrix<T>) -> T {
+    let mut sumsq = vec![T::ZERO; y.rows()];
+    for col in y.columns() {
+        for (acc, &v) in sumsq.iter_mut().zip(col.iter()) {
+            *acc = *acc + v * v;
+        }
+    }
+    sumsq.into_iter().map(|s| s.sqrt()).sum()
+}
+
 /// Frobenius norm `‖Y‖₂,₂`.
 pub fn frobenius_norm<T: Scalar>(y: &Matrix<T>) -> T {
     y.as_slice().iter().map(|&x| x * x).sum::<T>().sqrt()
@@ -97,6 +111,14 @@ mod tests {
         let y = sample();
         assert_eq!(l11_norm(&y), 10.0);
         assert_eq!(l12_norm(&y), 5.0f64.sqrt() + 0.0 + 5.0);
+    }
+
+    #[test]
+    fn l21_is_sum_of_row_l2_norms() {
+        // rows: [1, 0, 3], [-2, 0, 4]
+        let y = sample();
+        assert!((l21_norm(&y) - (10.0f64.sqrt() + 20.0f64.sqrt())).abs() < 1e-12);
+        assert_eq!(l21_norm(&Matrix::<f64>::zeros(0, 0)), 0.0);
     }
 
     #[test]

@@ -66,7 +66,7 @@ impl ParallelPolicy {
         policy
     }
 
-    fn effective_threads(&self, work_items: usize) -> usize {
+    pub(crate) fn effective_threads(&self, work_items: usize) -> usize {
         let hw = if self.threads > 0 {
             self.threads
         } else {

@@ -1,0 +1,152 @@
+//! Projection onto the ℓ2,1 ball `{X : Σ_i ‖X_{i,:}‖₂ ≤ η}` — the
+//! group-lasso ball over *rows* (features), the structured-sparsity
+//! scenario of `proj_l21ball` in the reference implementations.
+//!
+//! Exact in two stages, like the paper's bi-level operators: project the
+//! row ℓ2-norm vector onto the ℓ1 ball (any of the [`crate::projection::l1`]
+//! solvers), then rescale each row to its projected norm. The identity
+//! `‖Y − X‖₂,₁ + ‖X‖₂,₁ = ‖Y‖₂,₁` holds because each row moves radially.
+//! Row norms are accumulated column-by-column so the column-major storage
+//! is walked contiguously.
+
+use crate::kernels::{self, Workspace};
+use crate::projection::l1::{self, L1Algorithm};
+use crate::scalar::Scalar;
+use crate::tensor::{vec_ops, Matrix};
+
+/// Workspace-based `P²,¹_η(Y)` — zero allocations at steady state.
+/// `ws.thresholds` holds the projected row norms; `ws.norms` is consumed
+/// as scratch (row norms, then per-row scale factors).
+pub fn project_l21_into<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    algo: L1Algorithm,
+    ws: &mut Workspace<T>,
+    out: &mut Matrix<T>,
+) {
+    assert!(eta >= T::ZERO, "l21 projection: radius must be non-negative");
+    let (n, m) = (y.rows(), y.cols());
+    out.resize_reuse(n, m);
+    if y.is_empty() {
+        return;
+    }
+    if eta <= T::ZERO {
+        out.as_mut_slice().fill(T::ZERO);
+        return;
+    }
+    // Row ℓ2 norms (sums of squares first, column-major friendly).
+    ws.norms.clear();
+    ws.norms.resize(n, T::ZERO);
+    for j in 0..m {
+        for (acc, &v) in ws.norms.iter_mut().zip(y.col(j).iter()) {
+            *acc = *acc + v * v;
+        }
+    }
+    for v in ws.norms.iter_mut() {
+        *v = v.sqrt();
+    }
+    if kernels::sum_abs(&ws.norms) <= eta {
+        out.as_mut_slice().copy_from_slice(y.as_slice());
+        ws.thresholds.clear();
+        ws.thresholds.extend_from_slice(&ws.norms);
+        return;
+    }
+    // Inner ℓ1 projection of the (non-negative) row-norm vector.
+    ws.thresholds.clear();
+    ws.thresholds.extend_from_slice(&ws.norms);
+    l1::project_l1_nonneg_inplace_with(&mut ws.thresholds, eta, algo, &mut ws.condat);
+    // Per-row radial scale p_i/v_i, written destructively over the norms
+    // (soft-thresholding guarantees p_i ≤ v_i; zero rows stay at scale 1).
+    for (s, &p) in ws.norms.iter_mut().zip(ws.thresholds.iter()) {
+        *s = if *s > T::ZERO { p / *s } else { T::ONE };
+    }
+    for j in 0..m {
+        let dst = out.col_mut(j);
+        for ((d, &v), &s) in dst.iter_mut().zip(y.col(j).iter()).zip(ws.norms.iter()) {
+            *d = v * s;
+        }
+    }
+}
+
+/// `P²,¹_η(Y)`: allocate-and-return convenience wrapper around
+/// [`project_l21_into`].
+pub fn project_l21<T: Scalar>(y: &Matrix<T>, eta: T) -> Matrix<T> {
+    project_l21_with(y, eta, L1Algorithm::Condat)
+}
+
+/// [`project_l21`] with an explicit inner ℓ1 solver.
+pub fn project_l21_with<T: Scalar>(y: &Matrix<T>, eta: T, algo: L1Algorithm) -> Matrix<T> {
+    let mut ws = Workspace::new();
+    let mut out = Matrix::zeros(0, 0);
+    project_l21_into(y, eta, algo, &mut ws, &mut out);
+    out
+}
+
+/// Scalar reference: row norms via [`Matrix::row`] copies and the
+/// sort-based ℓ1 solver. Golden oracle for the workspace path.
+pub fn project_l21_ref<T: Scalar>(y: &Matrix<T>, eta: T) -> Matrix<T> {
+    assert!(eta >= T::ZERO);
+    let n = y.rows();
+    if y.is_empty() {
+        return y.clone();
+    }
+    if eta <= T::ZERO {
+        return Matrix::zeros(n, y.cols());
+    }
+    let norms: Vec<T> = (0..n).map(|i| vec_ops::l2(&y.row(i))).collect();
+    if norms.iter().copied().sum::<T>() <= eta {
+        return y.clone();
+    }
+    let proj = l1::project_l1(&norms, eta, L1Algorithm::Sort);
+    let mut out = y.clone();
+    for j in 0..y.cols() {
+        for (i, x) in out.col_mut(j).iter_mut().enumerate() {
+            if norms[i] > T::ZERO {
+                *x = *x * (proj[i] / norms[i]);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::l21_norm;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn feasible_matches_reference_and_identity_holds() {
+        let mut rng = Xoshiro256pp::seed_from_u64(81);
+        for &(n, m) in &[(1usize, 1usize), (9, 17), (40, 12), (30, 30)] {
+            let y = Matrix::<f64>::randn(n, m, &mut rng);
+            let eta = 0.35 * l21_norm(&y);
+            let x = project_l21(&y, eta);
+            assert!(l21_norm(&x) <= eta * (1.0 + 1e-10), "{n}x{m}");
+            let r = project_l21_ref(&y, eta);
+            assert!(x.max_abs_diff(&r) < 1e-10, "{n}x{m}");
+            // Radial moves make the bi-level identity exact.
+            let gap = (l21_norm(&y.sub(&x)) + l21_norm(&x) - l21_norm(&y)).abs();
+            assert!(gap < 1e-9, "{n}x{m}: identity gap {gap}");
+        }
+    }
+
+    #[test]
+    fn inside_ball_is_identity_and_inner_solvers_agree() {
+        let mut rng = Xoshiro256pp::seed_from_u64(82);
+        let y = Matrix::<f64>::randn(10, 8, &mut rng);
+        assert_eq!(project_l21(&y, l21_norm(&y) * 1.001), y);
+        let base = project_l21_with(&y, 1.3, L1Algorithm::Condat);
+        for algo in L1Algorithm::all() {
+            let x = project_l21_with(&y, 1.3, *algo);
+            assert!(base.max_abs_diff(&x) < 1e-9, "inner {}", algo.name());
+        }
+    }
+
+    #[test]
+    fn zero_radius_projects_to_zero() {
+        let mut rng = Xoshiro256pp::seed_from_u64(83);
+        let y = Matrix::<f64>::randn(5, 7, &mut rng);
+        assert!(project_l21(&y, 0.0).as_slice().iter().all(|&v| v == 0.0));
+    }
+}

@@ -10,13 +10,22 @@
 //!   Quattoni et al. 2009 (sort + breakpoint merge, O(nm log nm)), Chau et
 //!   al. 2019 (Newton root search), Chu et al. 2020 (semismooth Newton, the
 //!   paper's main comparator), plus a slow bisection golden reference.
+//! * [`l21`], [`linf1`] — the rest of the mixed-norm ball family: the
+//!   row-group-lasso ℓ2,1 ball and the dual ℓ∞,1 ball (per-column Newton
+//!   root search, Chau–Wohlberg–Rodriguez 2019).
+//! * [`multilevel`] — recursive projection trees generalizing the bi-level
+//!   operators to arbitrary depth (sequel paper, arXiv 2405.02086); the
+//!   depth-2 `l1/linf` tree is bit-identical to [`bilevel`].
 
 pub mod bilevel;
 pub mod grouped;
 pub mod l1;
 pub mod l1inf;
 pub mod l2;
+pub mod l21;
 pub mod linf;
+pub mod linf1;
+pub mod multilevel;
 
 use crate::scalar::Scalar;
 use crate::tensor::Matrix;
@@ -48,6 +57,12 @@ pub enum ProjectionKind {
     ExactL1InfNewton,
     /// Exact ℓ1,∞, Chu et al. 2020 semismooth Newton.
     ExactL1InfSsn,
+    /// ℓ2,1 ball (row-wise ℓ2 norms onto an ℓ1 budget — group lasso over
+    /// rows).
+    L21,
+    /// ℓ∞,1 ball via per-column Newton root search on the dual
+    /// (Chau–Wohlberg–Rodriguez 2019, arXiv 1806.10041).
+    Linf1Newton,
     /// No projection (baseline rows of Tables II–IV).
     None,
 }
@@ -59,8 +74,14 @@ impl ProjectionKind {
             "bilevel-l11" | "bilevel_l11" | "bp11" => Some(Self::BilevelL11),
             "bilevel-l12" | "bilevel_l12" | "bp12" => Some(Self::BilevelL12),
             "l1inf-quattoni" | "quattoni" => Some(Self::ExactL1InfQuattoni),
+            // Bare "newton" predates the ℓ∞,1 Newton kind and stays an
+            // alias of the exact ℓ1,∞ solver for compatibility (deprecated
+            // — see the CLI help); the two Newton methods are unambiguous
+            // under their "l1inf-newton" / "linf1-newton" names.
             "l1inf-newton" | "chau" | "newton" => Some(Self::ExactL1InfNewton),
             "l1inf" | "l1inf-ssn" | "chu" | "ssn" => Some(Self::ExactL1InfSsn),
+            "l21" | "l2,1" | "l21-ball" => Some(Self::L21),
+            "linf1-newton" | "linf1" | "linf,1" => Some(Self::Linf1Newton),
             "none" | "baseline" => Some(Self::None),
             _ => None,
         }
@@ -74,6 +95,8 @@ impl ProjectionKind {
             Self::ExactL1InfQuattoni => "l1inf-quattoni",
             Self::ExactL1InfNewton => "l1inf-newton",
             Self::ExactL1InfSsn => "l1inf-ssn",
+            Self::L21 => "l21",
+            Self::Linf1Newton => "linf1-newton",
             Self::None => "none",
         }
     }
@@ -115,19 +138,25 @@ impl ProjectionKind {
                 l1inf::project_l1inf(y, eta, l1inf::L1InfAlgorithm::Newton)
             }
             Self::ExactL1InfSsn => l1inf::project_l1inf(y, eta, l1inf::L1InfAlgorithm::Ssn),
+            Self::L21 => l21::project_l21_with(y, eta, algo),
+            Self::Linf1Newton => linf1::project_linf1(y, eta),
             Self::None => y.clone(),
         }
     }
 
-    /// The norm matched to this projection (for identity experiments).
-    pub fn matched_norm<T: Scalar>(&self, y: &Matrix<T>) -> T {
+    /// The norm matched to this projection (for identity experiments),
+    /// evaluated at `y`. `None` — the radius-free identity baseline —
+    /// projects onto no ball and therefore has no matched norm.
+    pub fn matched_norm<T: Scalar>(&self, y: &Matrix<T>) -> Option<T> {
         use crate::norms::*;
         match self {
             Self::BilevelL1Inf | Self::ExactL1InfQuattoni | Self::ExactL1InfNewton
-            | Self::ExactL1InfSsn => l1inf_norm(y),
-            Self::BilevelL11 => l11_norm(y),
-            Self::BilevelL12 => l12_norm(y),
-            Self::None => frobenius_norm(y),
+            | Self::ExactL1InfSsn => Some(l1inf_norm(y)),
+            Self::BilevelL11 => Some(l11_norm(y)),
+            Self::BilevelL12 => Some(l12_norm(y)),
+            Self::L21 => Some(l21_norm(y)),
+            Self::Linf1Newton => Some(linf1_norm(y)),
+            Self::None => Option::None,
         }
     }
 
@@ -139,6 +168,8 @@ impl ProjectionKind {
             Self::ExactL1InfQuattoni,
             Self::ExactL1InfNewton,
             Self::ExactL1InfSsn,
+            Self::L21,
+            Self::Linf1Newton,
         ]
     }
 }
@@ -150,12 +181,30 @@ mod tests {
     use crate::rng::Xoshiro256pp;
 
     #[test]
-    fn parse_roundtrip() {
+    fn parse_roundtrip_is_exhaustive_over_all_kinds() {
+        // `all()` lists every real projection; `None` round-trips too.
+        // Names must be mutually unique so future kinds can't shadow each
+        // other the way a bare "newton" alias would have.
+        let mut seen = std::collections::HashSet::new();
         for kind in ProjectionKind::all() {
             assert_eq!(ProjectionKind::parse(kind.name()), Some(*kind));
+            assert!(seen.insert(kind.name()), "duplicate name {}", kind.name());
         }
+        assert_eq!(ProjectionKind::parse("none"), Some(ProjectionKind::None));
+        assert_eq!(ProjectionKind::parse(ProjectionKind::None.name()), Some(ProjectionKind::None));
         assert_eq!(ProjectionKind::parse("nope"), None);
         assert_eq!(ProjectionKind::parse("baseline"), Some(ProjectionKind::None));
+    }
+
+    #[test]
+    fn newton_aliases_stay_unambiguous() {
+        // The deprecated bare alias keeps meaning the exact ℓ1,∞ solver;
+        // both Newton methods stay reachable under their full names.
+        assert_eq!(ProjectionKind::parse("newton"), Some(ProjectionKind::ExactL1InfNewton));
+        assert_eq!(ProjectionKind::parse("l1inf-newton"), Some(ProjectionKind::ExactL1InfNewton));
+        assert_eq!(ProjectionKind::parse("linf1-newton"), Some(ProjectionKind::Linf1Newton));
+        assert_eq!(ProjectionKind::parse("linf1"), Some(ProjectionKind::Linf1Newton));
+        assert_eq!(ProjectionKind::parse("l21"), Some(ProjectionKind::L21));
     }
 
     #[test]
@@ -173,6 +222,19 @@ mod tests {
                     l1inf_norm(&x)
                 );
             }
+            // Every real kind projects into its own matched-norm ball.
+            let after = kind.matched_norm(&x).expect("all() kinds have a matched norm");
+            assert!(after <= eta + 1e-8, "{}: matched norm {after} > {eta}", kind.name());
+        }
+    }
+
+    #[test]
+    fn matched_norm_is_none_only_for_the_identity_baseline() {
+        let mut rng = Xoshiro256pp::seed_from_u64(126);
+        let y = crate::tensor::Matrix::<f64>::randn(6, 4, &mut rng);
+        assert_eq!(ProjectionKind::None.matched_norm(&y), Option::None);
+        for kind in ProjectionKind::all() {
+            assert!(kind.matched_norm(&y).is_some(), "{}", kind.name());
         }
     }
 
@@ -209,6 +271,10 @@ mod tests {
             Some(bilevel::BilevelVariant::L12)
         );
         assert_eq!(ProjectionKind::ExactL1InfSsn.bilevel_variant(), None);
+        // The new flat kinds are not bi-level: the serve threshold cache
+        // must bypass them, never replay them.
+        assert_eq!(ProjectionKind::L21.bilevel_variant(), None);
+        assert_eq!(ProjectionKind::Linf1Newton.bilevel_variant(), None);
         assert_eq!(ProjectionKind::None.bilevel_variant(), None);
     }
 

@@ -1,0 +1,573 @@
+//! Multi-level projection trees — the recursive generalization of the
+//! paper's bi-level operators (sequel paper: "Multi-level projection with
+//! exponential parallel speedup", arXiv 2405.02086).
+//!
+//! A [`MultilevelSpec`] is a root-to-leaf list of levels, each carrying a
+//! norm (ℓ1 / ℓ2 / ℓ∞) and, for intermediate levels, a fanout that groups
+//! the level below into contiguous blocks. Leaves are the matrix columns
+//! (their norm is taken over the column's entries); the root is a single
+//! node whose ball radius is the projection radius η. The tree norm is the
+//! nested composition, e.g. `l1/linf` is exactly the paper's
+//! `‖Y‖₁,∞ = Σ_j ‖y_j‖∞` and `linf/l1` its dual `‖Y‖∞,₁`.
+//!
+//! Projection runs in three passes, mirroring Algorithm 1 level by level:
+//!
+//! 1. **Upward** — aggregate each column by the leaf norm (dispatched onto
+//!    the persistent [`crate::kernels::pool`] over column chunks), then
+//!    fold intermediate levels bottom-up (short vectors, sequential).
+//! 2. **Downward** — the root projects its children's aggregate vector
+//!    onto the level-0 norm ball of radius η; each resulting child radius
+//!    recursively constrains its own children, down to a per-column
+//!    target radius.
+//! 3. **Leaf apply** — every column is projected onto the leaf-norm ball
+//!    of its target radius (pool-parallel over column chunks, through the
+//!    same shared kernels as the bi-level path).
+//!
+//! The depth-2 `l1/linf` tree runs the *identical* kernel sequence as
+//! [`crate::projection::bilevel::bilevel_l1inf_into`] (per-column `colmax`,
+//! one inner non-negative ℓ1 projection, one fused `clip_groups_into`), so
+//! its output is bit-identical to `bilevel_l1inf` — pinned by the tests
+//! here and the `projection_family_conformance` proptest.
+
+use crate::kernels::pool::{self, SendPtr};
+use crate::kernels::{self, CondatScratch};
+use crate::projection::bilevel::ParallelPolicy;
+use crate::projection::l1::{self, L1Algorithm};
+use crate::projection::l2;
+use crate::projection::linf1::newton_l1_threshold;
+use crate::scalar::Scalar;
+use crate::tensor::Matrix;
+
+/// The norm attached to one level of the tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum LevelNorm {
+    L1,
+    L2,
+    LInf,
+}
+
+impl LevelNorm {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "l1" => Some(Self::L1),
+            "l2" => Some(Self::L2),
+            "linf" | "inf" => Some(Self::LInf),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::L1 => "l1",
+            Self::L2 => "l2",
+            Self::LInf => "linf",
+        }
+    }
+}
+
+/// One level of a [`MultilevelSpec`]: its norm and, for intermediate
+/// levels, how many nodes of the level below each node groups.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Level {
+    pub norm: LevelNorm,
+    /// Children per node. `None` on the root (it owns the whole level
+    /// below) and on the leaf level (columns own their entries).
+    pub fanout: Option<usize>,
+}
+
+/// A root-to-leaf projection-tree specification, parsed from strings like
+/// `"l1/linf"` (the paper's bi-level ℓ1,∞) or `"l1/l2:8/linf"` (a depth-3
+/// tree whose middle ℓ2 nodes each group 8 columns).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct MultilevelSpec {
+    pub levels: Vec<Level>,
+}
+
+impl MultilevelSpec {
+    /// Parse `norm[:fanout]/.../norm`. Depth must be ≥ 2; fanout is
+    /// required on intermediate levels and rejected on the root and leaf
+    /// levels (their groupings are implied).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let segs: Vec<&str> = s.split('/').collect();
+        if segs.len() < 2 {
+            return Err(format!(
+                "multilevel spec {s:?} has depth {}, need at least 2 (e.g. \"l1/linf\")",
+                segs.len()
+            ));
+        }
+        let last = segs.len() - 1;
+        let mut levels = Vec::with_capacity(segs.len());
+        for (i, seg) in segs.iter().enumerate() {
+            let (name, fanout) = match seg.split_once(':') {
+                Some((name, f)) => {
+                    let f: usize = f
+                        .parse()
+                        .ok()
+                        .filter(|&f| f >= 1)
+                        .ok_or_else(|| format!("level {seg:?}: fanout must be a positive integer"))?;
+                    (name, Some(f))
+                }
+                None => (*seg, None),
+            };
+            let norm = LevelNorm::parse(name)
+                .ok_or_else(|| format!("level {seg:?}: unknown norm {name:?} (l1|l2|linf)"))?;
+            if fanout.is_some() && (i == 0 || i == last) {
+                return Err(format!(
+                    "level {seg:?}: fanout is only valid on intermediate levels \
+                     (the root spans the whole level below, leaves span their column)"
+                ));
+            }
+            if fanout.is_none() && i != 0 && i != last {
+                return Err(format!(
+                    "level {seg:?}: intermediate levels need an explicit fanout, e.g. \"{name}:8\""
+                ));
+            }
+            levels.push(Level { norm, fanout });
+        }
+        Ok(Self { levels })
+    }
+
+    /// The canonical string form; `parse(format())` round-trips.
+    pub fn format(&self) -> String {
+        self.levels
+            .iter()
+            .map(|l| match l.fanout {
+                Some(f) => format!("{}:{f}", l.norm.name()),
+                None => l.norm.name().to_string(),
+            })
+            .collect::<Vec<_>>()
+            .join("/")
+    }
+
+    pub fn depth(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// The paper's bi-level ℓ1,∞ tree, `"l1/linf"`.
+    pub fn bilevel_l1inf() -> Self {
+        Self {
+            levels: vec![
+                Level { norm: LevelNorm::L1, fanout: None },
+                Level { norm: LevelNorm::LInf, fanout: None },
+            ],
+        }
+    }
+
+    /// Node counts per level for an `m`-column matrix: `counts[depth-1]
+    /// = m` (leaves are columns), each intermediate level has
+    /// `ceil(below / fanout)` nodes, the root is a single node.
+    pub fn counts(&self, m: usize) -> Vec<usize> {
+        let d = self.levels.len();
+        let mut counts = vec![1usize; d];
+        counts[d - 1] = m;
+        for i in (1..d - 1).rev() {
+            let f = self.levels[i].fanout.unwrap_or(counts[i + 1]).max(1);
+            counts[i] = counts[i + 1].div_ceil(f);
+        }
+        counts
+    }
+}
+
+/// Reusable per-level buffers: `agg[i]` holds the upward aggregates of
+/// level `i`, `radii[i]` the downward target radii (index 0 is unused —
+/// the root's radius is η). Zero heap allocations at steady state.
+pub struct MultilevelWorkspace<T: Scalar> {
+    agg: Vec<Vec<T>>,
+    radii: Vec<Vec<T>>,
+    condat: CondatScratch<T>,
+}
+
+impl<T: Scalar> MultilevelWorkspace<T> {
+    pub fn new() -> Self {
+        Self { agg: Vec::new(), radii: Vec::new(), condat: CondatScratch::new() }
+    }
+
+    fn prepare(&mut self, depth: usize) {
+        if self.agg.len() < depth {
+            self.agg.resize_with(depth, Vec::new);
+            self.radii.resize_with(depth, Vec::new);
+        }
+    }
+}
+
+impl<T: Scalar> Default for MultilevelWorkspace<T> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A level norm applied to a plain vector (aggregates are non-negative,
+/// so ℓ1 degenerates to `sum_abs`).
+fn vec_norm<T: Scalar>(norm: LevelNorm, xs: &[T]) -> T {
+    match norm {
+        LevelNorm::L1 => kernels::sum_abs(xs),
+        LevelNorm::L2 => kernels::l2_norm(xs),
+        LevelNorm::LInf => kernels::colmax(xs),
+    }
+}
+
+/// Project a non-negative aggregate vector onto the `norm`-ball of radius
+/// `r`, in place.
+fn project_vec_ball<T: Scalar>(
+    norm: LevelNorm,
+    v: &mut [T],
+    r: T,
+    algo: L1Algorithm,
+    scratch: &mut CondatScratch<T>,
+) {
+    match norm {
+        LevelNorm::L1 => l1::project_l1_nonneg_inplace_with(v, r, algo, scratch),
+        LevelNorm::L2 => l2::project_l2_inplace(v, r),
+        LevelNorm::LInf => kernels::clip_inplace(v, r),
+    }
+}
+
+/// Leaf apply over columns `[j0, j1)`: project each column of `src` onto
+/// the leaf-norm ball of its target radius, writing into `dst` (which
+/// covers exactly those columns). Shared by the sequential path and each
+/// pool part, so chunked and whole-matrix runs are bit-identical.
+fn apply_leaf_range<T: Scalar>(
+    leaf: LevelNorm,
+    src: &[T],
+    n: usize,
+    j0: usize,
+    j1: usize,
+    radii: &[T],
+    agg: &[T],
+    dst: &mut [T],
+) {
+    match leaf {
+        LevelNorm::LInf => kernels::clip_groups_into(
+            &src[j0 * n..j1 * n],
+            n.max(1),
+            &radii[j0..j1],
+            &agg[j0..j1],
+            dst,
+        ),
+        LevelNorm::L1 => {
+            for j in j0..j1 {
+                let col = &src[j * n..(j + 1) * n];
+                let d = &mut dst[(j - j0) * n..(j - j0 + 1) * n];
+                d.copy_from_slice(col);
+                let (w, a) = (radii[j], agg[j]);
+                if a <= w {
+                    continue;
+                }
+                if w <= T::ZERO {
+                    d.fill(T::ZERO);
+                } else {
+                    kernels::soft_threshold_inplace(d, newton_l1_threshold(col, w));
+                }
+            }
+        }
+        LevelNorm::L2 => {
+            for j in j0..j1 {
+                let d = &mut dst[(j - j0) * n..(j - j0 + 1) * n];
+                d.copy_from_slice(&src[j * n..(j + 1) * n]);
+                let (w, a) = (radii[j], agg[j]);
+                if a > w {
+                    let scale = if a > T::ZERO { w / a } else { T::ZERO };
+                    kernels::scale_inplace(d, scale);
+                }
+            }
+        }
+    }
+}
+
+/// The tree norm `‖Y‖_spec` — the upward pass alone, without projecting.
+/// `tree_norm(y, "l1/linf") == l1inf_norm(y)` and
+/// `tree_norm(y, "linf/l1") == linf1_norm(y)`.
+pub fn tree_norm<T: Scalar>(y: &Matrix<T>, spec: &MultilevelSpec) -> T {
+    let d = spec.levels.len();
+    assert!(d >= 2, "multilevel spec must have depth >= 2");
+    if y.is_empty() {
+        return T::ZERO;
+    }
+    let mut cur: Vec<T> =
+        y.columns().map(|c| vec_norm(spec.levels[d - 1].norm, c)).collect();
+    for i in (1..d - 1).rev() {
+        let f = spec.levels[i].fanout.unwrap_or(cur.len()).max(1);
+        cur = cur.chunks(f).map(|c| vec_norm(spec.levels[i].norm, c)).collect();
+    }
+    vec_norm(spec.levels[0].norm, &cur)
+}
+
+/// Workspace-based multi-level projection — zero heap allocations at
+/// steady state. Leaf stages (column aggregation, leaf apply) run on the
+/// kernel pool when the matrix clears `policy.min_elems`; internal levels
+/// are short vectors and stay sequential.
+pub fn project_multilevel_into<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    spec: &MultilevelSpec,
+    algo: L1Algorithm,
+    policy: ParallelPolicy,
+    ws: &mut MultilevelWorkspace<T>,
+    out: &mut Matrix<T>,
+) {
+    assert!(eta >= T::ZERO, "multilevel projection: radius must be non-negative");
+    let d = spec.levels.len();
+    assert!(d >= 2, "multilevel spec must have depth >= 2");
+    let (n, m) = (y.rows(), y.cols());
+    out.resize_reuse(n, m);
+    if y.is_empty() {
+        return;
+    }
+    let counts = spec.counts(m);
+    ws.prepare(d);
+    let parallel = n * m >= policy.min_elems && m >= 2;
+    let parts = if parallel { policy.effective_threads(m) } else { 1 };
+    let chunk = m.div_ceil(parts);
+    let leaf = spec.levels[d - 1].norm;
+
+    // ---- upward pass: per-column leaf aggregates --------------------
+    {
+        let agg = &mut ws.agg[d - 1];
+        agg.clear();
+        if parallel {
+            agg.resize(m, T::ZERO);
+            let agg_ptr = SendPtr(agg.as_mut_ptr());
+            pool::global().run(parts, |t| {
+                let j0 = t * chunk;
+                if j0 >= m {
+                    return;
+                }
+                let j1 = (j0 + chunk).min(m);
+                let base = agg_ptr.get();
+                // SAFETY: parts derive disjoint [j0, j1) ranges of the
+                // aggregate buffer from `t`, and `agg` outlives the
+                // blocking `run` call.
+                let dst = unsafe { std::slice::from_raw_parts_mut(base.add(j0), j1 - j0) };
+                for (dj, o) in dst.iter_mut().enumerate() {
+                    *o = vec_norm(leaf, y.col(j0 + dj));
+                }
+            });
+        } else {
+            agg.extend(y.columns().map(|c| vec_norm(leaf, c)));
+        }
+    }
+
+    // Intermediate aggregates, bottom-up (short vectors, sequential).
+    for i in (1..d - 1).rev() {
+        let f = spec.levels[i].fanout.unwrap_or(counts[i + 1]).max(1);
+        let norm = spec.levels[i].norm;
+        let (upper, lower) = ws.agg.split_at_mut(i + 1);
+        let dst = &mut upper[i];
+        dst.clear();
+        dst.extend(lower[0].chunks(f).map(|c| vec_norm(norm, c)));
+    }
+
+    // ---- downward pass: target radii --------------------------------
+    {
+        let radii = &mut ws.radii[1];
+        radii.clear();
+        radii.extend_from_slice(&ws.agg[1]);
+        project_vec_ball(spec.levels[0].norm, radii, eta, algo, &mut ws.condat);
+    }
+    for i in 1..d - 1 {
+        let f = spec.levels[i].fanout.unwrap_or(counts[i + 1]).max(1);
+        let norm = spec.levels[i].norm;
+        let (upper, lower) = ws.radii.split_at_mut(i + 1);
+        let parent = &upper[i];
+        let child = &mut lower[0];
+        child.clear();
+        child.extend_from_slice(&ws.agg[i + 1]);
+        for (g, block) in child.chunks_mut(f).enumerate() {
+            project_vec_ball(norm, block, parent[g], algo, &mut ws.condat);
+        }
+    }
+
+    // ---- leaf apply --------------------------------------------------
+    let radii = &ws.radii[d - 1];
+    let agg = &ws.agg[d - 1];
+    if parallel {
+        let src = y.as_slice();
+        let dst_ptr = SendPtr(out.as_mut_slice().as_mut_ptr());
+        pool::global().run(parts, |t| {
+            let j0 = t * chunk;
+            if j0 >= m {
+                return;
+            }
+            let j1 = (j0 + chunk).min(m);
+            // SAFETY: parts derive disjoint [j0*n, j1*n) element ranges
+            // of the output from `t`, and `out` outlives the blocking
+            // `run` call.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(dst_ptr.get().add(j0 * n), (j1 - j0) * n)
+            };
+            apply_leaf_range(leaf, src, n, j0, j1, radii, agg, dst);
+        });
+    } else {
+        apply_leaf_range(leaf, y.as_slice(), n, 0, m, radii, agg, out.as_mut_slice());
+    }
+}
+
+/// [`project_multilevel_into`] with a fresh workspace and output.
+pub fn project_multilevel_with<T: Scalar>(
+    y: &Matrix<T>,
+    eta: T,
+    spec: &MultilevelSpec,
+    algo: L1Algorithm,
+    policy: ParallelPolicy,
+) -> Matrix<T> {
+    let mut ws = MultilevelWorkspace::new();
+    let mut out = Matrix::zeros(0, 0);
+    project_multilevel_into(y, eta, spec, algo, policy, &mut ws, &mut out);
+    out
+}
+
+/// Multi-level projection with the default inner solver and threading
+/// policy.
+pub fn project_multilevel<T: Scalar>(y: &Matrix<T>, eta: T, spec: &MultilevelSpec) -> Matrix<T> {
+    project_multilevel_with(y, eta, spec, L1Algorithm::Condat, ParallelPolicy::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::norms::{l1inf_norm, linf1_norm};
+    use crate::projection::bilevel::{bilevel_l1inf_with, bilevel_l12_with};
+    use crate::rng::Xoshiro256pp;
+
+    const SEQ: ParallelPolicy = ParallelPolicy { threads: 1, min_elems: usize::MAX };
+    const POOL: ParallelPolicy = ParallelPolicy { threads: 7, min_elems: 0 };
+
+    #[test]
+    fn parse_and_format_round_trip() {
+        for s in ["l1/linf", "linf/l1", "l1/l2:8/linf", "l2/l1:3/l1:5/linf"] {
+            let spec = MultilevelSpec::parse(s).unwrap();
+            assert_eq!(spec.format(), s);
+            assert_eq!(MultilevelSpec::parse(&spec.format()).unwrap(), spec);
+        }
+        assert_eq!(MultilevelSpec::parse("l1/linf").unwrap(), MultilevelSpec::bilevel_l1inf());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for s in [
+            "l1",          // depth 1
+            "",            // empty
+            "l1/l3",       // unknown norm
+            "l1:4/linf",   // fanout on root
+            "l1/linf:2",   // fanout on leaf
+            "l1/l2/linf",  // intermediate without fanout
+            "l1/l2:0/linf", // zero fanout
+            "l1/l2:x/linf", // non-numeric fanout
+        ] {
+            assert!(MultilevelSpec::parse(s).is_err(), "{s:?} should be rejected");
+        }
+    }
+
+    #[test]
+    fn counts_cover_all_columns() {
+        let spec = MultilevelSpec::parse("l1/l2:8/linf").unwrap();
+        assert_eq!(spec.counts(20), vec![1, 3, 20]);
+        assert_eq!(spec.counts(16), vec![1, 2, 16]);
+        let bi = MultilevelSpec::bilevel_l1inf();
+        assert_eq!(bi.counts(7), vec![1, 7]);
+    }
+
+    #[test]
+    fn tree_norm_matches_flat_norms() {
+        let mut rng = Xoshiro256pp::seed_from_u64(71);
+        let y = Matrix::<f64>::randn(13, 9, &mut rng);
+        let l1linf = MultilevelSpec::parse("l1/linf").unwrap();
+        assert!((tree_norm(&y, &l1linf) - l1inf_norm(&y)).abs() < 1e-12);
+        let linfl1 = MultilevelSpec::parse("linf/l1").unwrap();
+        assert!((tree_norm(&y, &linfl1) - linf1_norm(&y)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn depth2_bit_identical_to_bilevel_sequential_and_pool() {
+        let (n, m) = if cfg!(miri) { (12, 31) } else { (64, 150) };
+        let mut rng = Xoshiro256pp::seed_from_u64(72);
+        let spec = MultilevelSpec::bilevel_l1inf();
+        for &eta in &[0.5, 3.0, 50.0] {
+            let y = Matrix::<f64>::randn(n, m, &mut rng);
+            let reference = bilevel_l1inf_with(&y, eta, L1Algorithm::Condat);
+            for policy in [SEQ, POOL] {
+                let x = project_multilevel_with(&y, eta, &spec, L1Algorithm::Condat, policy);
+                for (a, b) in reference.x.as_slice().iter().zip(x.as_slice()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "eta={eta}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depth2_l1_l2_matches_bilevel_l12() {
+        let mut rng = Xoshiro256pp::seed_from_u64(73);
+        let y = Matrix::<f64>::randn(20, 14, &mut rng);
+        let spec = MultilevelSpec::parse("l1/l2").unwrap();
+        let x = project_multilevel_with(&y, 2.0, &spec, L1Algorithm::Condat, SEQ);
+        let reference = bilevel_l12_with(&y, 2.0, L1Algorithm::Condat);
+        assert!(x.max_abs_diff(&reference.x) < 1e-10);
+    }
+
+    #[test]
+    fn deep_trees_are_feasible_and_idempotent() {
+        let (n, m) = if cfg!(miri) { (8, 24) } else { (32, 96) };
+        let mut rng = Xoshiro256pp::seed_from_u64(74);
+        for s in ["l1/l2:4/linf", "linf/l1:6/l1", "l2/linf:5/l2", "l1/l1:3/l2:4/linf"] {
+            let spec = MultilevelSpec::parse(s).unwrap();
+            let y = Matrix::<f64>::randn(n, m, &mut rng);
+            let full = tree_norm(&y, &spec);
+            let eta = 0.3 * full;
+            for policy in [SEQ, POOL] {
+                let x = project_multilevel_with(&y, eta, &spec, L1Algorithm::Condat, policy);
+                let after = tree_norm(&x, &spec);
+                assert!(after <= eta * (1.0 + 1e-9) + 1e-12, "{s}: {after} > {eta}");
+                // Idempotence: a feasible point is (numerically) fixed.
+                let xx = project_multilevel_with(&x, eta, &spec, L1Algorithm::Condat, policy);
+                assert!(x.max_abs_diff(&xx) < 1e-8, "{s} not idempotent");
+            }
+            // Inside the ball: identity.
+            let id = project_multilevel_with(&y, full * 1.01, &spec, L1Algorithm::Condat, SEQ);
+            assert!(id.max_abs_diff(&y) == 0.0, "{s} inside-ball must be identity");
+        }
+    }
+
+    #[test]
+    fn zero_radius_and_empty_matrix() {
+        let mut rng = Xoshiro256pp::seed_from_u64(75);
+        let spec = MultilevelSpec::parse("l1/l2:4/linf").unwrap();
+        let y = Matrix::<f64>::randn(6, 10, &mut rng);
+        let x = project_multilevel(&y, 0.0, &spec);
+        assert!(x.as_slice().iter().all(|&v| v == 0.0));
+        let e = Matrix::<f64>::zeros(0, 0);
+        assert_eq!(project_multilevel(&e, 1.0, &spec).len(), 0);
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        let mut rng = Xoshiro256pp::seed_from_u64(76);
+        let spec = MultilevelSpec::parse("l1/l2:4/linf").unwrap();
+        let mut ws = MultilevelWorkspace::new();
+        let mut out = Matrix::zeros(0, 0);
+        let (n, m) = if cfg!(miri) { (8, 20) } else { (24, 64) };
+        for _ in 0..3 {
+            let y = Matrix::<f64>::randn(n, m, &mut rng);
+            project_multilevel_into(&y, 1.5, &spec, L1Algorithm::Condat, POOL, &mut ws, &mut out);
+            assert_eq!(out, project_multilevel_with(&y, 1.5, &spec, L1Algorithm::Condat, SEQ));
+        }
+    }
+
+    #[test]
+    fn ragged_chunking_covers_tail_columns() {
+        // m = 97 with 5 parts exercises the tail chunk on both pool stages.
+        let mut rng = Xoshiro256pp::seed_from_u64(77);
+        let y = Matrix::<f64>::randn(16, 97, &mut rng);
+        let spec = MultilevelSpec::parse("l1/l2:9/linf").unwrap();
+        let par = project_multilevel_with(
+            &y,
+            2.0,
+            &spec,
+            L1Algorithm::Condat,
+            ParallelPolicy { threads: 5, min_elems: 0 },
+        );
+        let seq = project_multilevel_with(&y, 2.0, &spec, L1Algorithm::Condat, SEQ);
+        for (a, b) in seq.as_slice().iter().zip(par.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

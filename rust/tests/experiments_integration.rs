@@ -159,6 +159,29 @@ fn sparse_experiment_reports_bitwise_dense_compact_agreement() {
 }
 
 #[test]
+fn family_experiment_covers_every_kind_and_renders_the_baseline_as_na() {
+    let _g = lock();
+    let c = ctx();
+    run("family", &c).unwrap();
+    let (header, rows) = read_csv(&results_file("family_projection.csv")).unwrap();
+    let feas_col = header.iter().position(|h| h == "feasible").unwrap();
+    let eta_col = header.iter().position(|h| h == "eta").unwrap();
+    for r in &rows {
+        assert_eq!(r[feas_col], "true", "kind {} infeasible", r[0]);
+    }
+    // Every flat kind appears, plus the tree row.
+    for kind in bilevel_sparse::projection::ProjectionKind::all() {
+        assert!(rows.iter().any(|r| r[0] == kind.name()), "missing {}", kind.name());
+    }
+    assert!(rows.iter().any(|r| r[0].starts_with("multilevel(")), "missing multilevel row");
+    // The identity baseline has no matched norm: its row must render as
+    // n/a (the matched_norm == None report-path regression check), not
+    // crash the runner.
+    let baseline = rows.iter().find(|r| r[0] == "none").expect("baseline row present");
+    assert_eq!(baseline[eta_col], "n/a");
+}
+
+#[test]
 fn unknown_id_is_error() {
     let _g = lock();
     assert!(run("fig99", &ctx()).is_err());
